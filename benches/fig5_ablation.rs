@@ -1,0 +1,100 @@
+//! Figure 5 (§4.1): ablation of the method components across density —
+//! ComPEFT (tuned α) vs STC (mean-magnitude scale) vs Pruned (no
+//! quantization) vs the original checkpoint, on the synthetic-MMLU
+//! benchmark, for every density k ∈ {5,10,20,30,50}%.
+//!
+//! Run: `cargo bench --bench fig5_ablation`
+
+use compeft::baselines::{pruned, stc::stc_compress};
+use compeft::bench_support as bs;
+use compeft::coordinator::registry::ExpertMethod;
+use compeft::tensor::{ParamSet, Tensor};
+use compeft::util::bench::Bench;
+
+fn from_flat(like: &ParamSet, flat: &[f32]) -> ParamSet {
+    like.unflatten_like(flat).unwrap()
+}
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = bs::require_artifacts();
+    let mut bench = Bench::new("fig5");
+    let scales: Vec<String> = std::env::var("COMPEFT_SCALES")
+        .unwrap_or_else(|_| "s,m,l".into())
+        .split(',')
+        .map(|s| s.to_string())
+        .collect();
+    let tasks = ["alpaca", "flan-v2", "chip2"];
+
+    let test = bs::load_eval(&artifacts, "heldout_bench")?.truncate(640);
+    let val = bs::load_eval(&artifacts, "heldout_bench_val")?.truncate(320);
+
+    for scale in &scales {
+        if !artifacts.join("models").join(scale).join("base.npz").exists() {
+            continue;
+        }
+        let (_rt, bundle) = bs::load_bundle(&artifacts, scale)?;
+        for density in bs::DENSITIES {
+            let mut acc = [0.0f64; 4]; // compeft, stc, pruned, original
+            let mut n = 0.0;
+            for task in tasks {
+                let expert =
+                    match bs::load_expert(&artifacts, scale, task, "lora", None) {
+                        Ok(e) => e,
+                        Err(_) => continue,
+                    };
+                let flat = expert.tv.flatten();
+
+                // ComPEFT: tuned α at this density (validation argmax).
+                let grid = bs::sweep_cached(
+                    &bundle,
+                    &expert,
+                    &val,
+                    &format!("t1_{scale}_{task}"),
+                )?;
+                let best_alpha = grid
+                    .iter()
+                    .filter(|p| (p.density - density).abs() < 1e-9)
+                    .max_by(|a, b| a.val_acc.partial_cmp(&b.val_acc).unwrap())
+                    .map(|p| p.alpha)
+                    .unwrap_or(1.0);
+                let ctv = bs::compress_tv(&expert.tv, density, best_alpha);
+                acc[0] += bs::eval_tv(&bundle, ExpertMethod::Lora, &ctv, &test)?;
+
+                // STC: mean-magnitude scale, no tuning.
+                let stc_dense = stc_compress(&flat, density).to_dense();
+                acc[1] += bs::eval_tv(
+                    &bundle,
+                    ExpertMethod::Lora,
+                    &from_flat(&expert.tv, &stc_dense),
+                    &test,
+                )?;
+
+                // Pruned: values kept, no quantization.
+                let pr = pruned(&flat, density).to_dense();
+                acc[2] += bs::eval_tv(
+                    &bundle,
+                    ExpertMethod::Lora,
+                    &from_flat(&expert.tv, &pr),
+                    &test,
+                )?;
+
+                // Original.
+                acc[3] += bs::eval_tv(&bundle, ExpertMethod::Lora, &expert.tv, &test)?;
+                n += 1.0;
+            }
+            if n > 0.0 {
+                bench.row(
+                    &format!("{scale}/k{:02.0}", density * 100.0),
+                    &[
+                        ("compeft", acc[0] / n * 100.0),
+                        ("stc", acc[1] / n * 100.0),
+                        ("pruned", acc[2] / n * 100.0),
+                        ("original", acc[3] / n * 100.0),
+                    ],
+                );
+            }
+        }
+    }
+    let _ = Tensor::zeros(vec![1]);
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! Figure 6 (§4.2): validation accuracy vs scaling value α for every
+//! density level, per scale — showing the inverse α–k relationship and
+//! the flattening of the curve at larger scales (why α = 1 suffices for
+//! big models).
+//!
+//! Run: `cargo bench --bench fig6_alpha`
+
+use compeft::bench_support as bs;
+use compeft::util::bench::Bench;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = bs::require_artifacts();
+    let mut bench = Bench::new("fig6");
+    let scales: Vec<String> = std::env::var("COMPEFT_SCALES")
+        .unwrap_or_else(|_| "s,m,l".into())
+        .split(',')
+        .map(|s| s.to_string())
+        .collect();
+    let tasks = ["alpaca", "flan-v2", "chip2"];
+    let val = bs::load_eval(&artifacts, "heldout_bench_val")?.truncate(320);
+
+    for scale in &scales {
+        if !artifacts.join("models").join(scale).join("base.npz").exists() {
+            continue;
+        }
+        let (_rt, bundle) = bs::load_bundle(&artifacts, scale)?;
+        // Average the grid across tasks, then emit one row per (k, α).
+        let mut grid_sum =
+            vec![0.0f64; bs::DENSITIES.len() * bs::ALPHAS.len()];
+        let mut n_tasks = 0.0;
+        for task in tasks {
+            let expert = match bs::load_expert(&artifacts, scale, task, "lora", None) {
+                Ok(e) => e,
+                Err(_) => continue,
+            };
+            let grid =
+                bs::sweep_cached(&bundle, &expert, &val, &format!("t1_{scale}_{task}"))?;
+            for (i, p) in grid.iter().enumerate() {
+                grid_sum[i] += p.val_acc;
+            }
+            n_tasks += 1.0;
+        }
+        if n_tasks == 0.0 {
+            continue;
+        }
+        let mut idx = 0;
+        let mut per_k_spread = Vec::new();
+        for &k in &bs::DENSITIES {
+            let mut best = (0.0f64, 0.0f64); // (acc, alpha)
+            let mut lo = f64::INFINITY;
+            for &alpha in &bs::ALPHAS {
+                let acc = grid_sum[idx] / n_tasks * 100.0;
+                bench.row(
+                    &format!("{scale}/k{:02.0}/a{alpha}", k * 100.0),
+                    &[("val_acc", acc)],
+                );
+                if acc > best.0 {
+                    best = (acc, alpha);
+                }
+                lo = lo.min(acc);
+                idx += 1;
+            }
+            per_k_spread.push((k, best.1, best.0 - lo));
+            bench.row(
+                &format!("{scale}/k{:02.0}/BEST", k * 100.0),
+                &[("best_alpha", best.1), ("best_acc", best.0), ("spread", best.0 - lo)],
+            );
+        }
+        // Paper observation 2: optimal α decreases as k grows.
+        println!(
+            "scale {scale}: best α per k = {:?}",
+            per_k_spread.iter().map(|r| (r.0, r.1)).collect::<Vec<_>>()
+        );
+    }
+    Ok(())
+}

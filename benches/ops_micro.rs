@@ -1,0 +1,93 @@
+//! Micro-benchmarks for the §2.2 operational claims: Golomb coding
+//! throughput, XOR+POPCNT distance, AND-based ternary dot product vs a
+//! dense f32 baseline, and end-to-end Algorithm 1 compression speed.
+//!
+//! Run: `cargo bench --bench ops_micro`
+
+use compeft::compeft::bitmask::MaskPair;
+use compeft::compeft::compress::{compress_vector, CompressConfig};
+use compeft::compeft::{golomb, ternary::TernaryVector};
+use compeft::util::bench::{black_box, Bench};
+use compeft::util::rng::Pcg;
+
+fn random_tv(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg::seed(seed);
+    (0..n).map(|_| rng.normal() as f32 * 0.01).collect()
+}
+
+fn main() {
+    let mut b = Bench::new("ops_micro");
+    let d = 1 << 22; // 4M params ≈ a real LoRA module
+    let tau = random_tv(d, 7);
+    let bytes_dense = (d * 4) as u64;
+
+    // Algorithm 1 end to end (the compressor's hot path).
+    let cfg = CompressConfig { density: 0.05, alpha: 1.0, ..Default::default() };
+    b.run_throughput("compress_4M_k5", bytes_dense, || {
+        black_box(compress_vector(&tau, &cfg));
+    });
+
+    let tern = compress_vector(&tau, &cfg);
+
+    // Golomb encode / decode.
+    let encoded = golomb::encode(&tern);
+    b.run_throughput("golomb_encode_4M_k5", bytes_dense, || {
+        black_box(golomb::encode(&tern));
+    });
+    b.run_throughput("golomb_decode_4M_k5", bytes_dense, || {
+        black_box(golomb::decode(&encoded).unwrap());
+    });
+    b.row(
+        "golomb_size",
+        &[
+            ("dense_mb", bytes_dense as f64 / 1e6),
+            ("encoded_mb", encoded.len() as f64 / 1e6),
+            ("ratio_vs_fp16", (d * 2) as f64 / encoded.len() as f64),
+        ],
+    );
+
+    // Mask-pair ops vs dense reference (paper: "two machine instructions
+    // per 64 parameters").
+    let tern2 = compress_vector(&random_tv(d, 8), &cfg);
+    let (ma, mb) = (MaskPair::from_ternary(&tern), MaskPair::from_ternary(&tern2));
+    b.run_throughput("mask_xor_popcnt_distance_4M", bytes_dense, || {
+        black_box(ma.ternary_l1_distance(&mb).unwrap());
+    });
+    b.run_throughput("mask_and_dot_4M", bytes_dense, || {
+        black_box(ma.dot(&mb).unwrap());
+    });
+
+    // Dense f32 dot product baseline over the same logical vectors.
+    let da = tern.to_dense();
+    let db = tern2.to_dense();
+    b.run_throughput("dense_f32_dot_4M", bytes_dense * 2, || {
+        let mut acc = 0.0f64;
+        for (x, y) in da.iter().zip(&db) {
+            acc += (*x as f64) * (*y as f64);
+        }
+        black_box(acc);
+    });
+
+    // Decompress (sparse add into dense) — the serving decode path.
+    b.run_throughput("decompress_add_into_4M", bytes_dense, || {
+        let mut buf = vec![0.0f32; d];
+        tern.add_into(&mut buf, 1.0);
+        black_box(buf);
+    });
+
+    // Mask round-trips (wire conversions).
+    b.run_throughput("mask_from_ternary_4M", bytes_dense, || {
+        black_box(MaskPair::from_ternary(&tern));
+    });
+    let as_bytes = ma.to_bytes();
+    b.run_throughput("mask_decode_4M", as_bytes.len() as u64, || {
+        black_box(MaskPair::from_bytes(&as_bytes).unwrap());
+    });
+
+    // Sanity cross-check while we are here: fast ops equal references.
+    let fast = ma.dot(&mb).unwrap();
+    let slow: f64 =
+        da.iter().zip(&db).map(|(x, y)| (*x as f64) * (*y as f64)).sum();
+    assert!((fast - slow).abs() <= 1e-6 * (1.0 + slow.abs()) + 1e-6);
+    let _ = TernaryVector::empty(0);
+}

@@ -1,0 +1,156 @@
+//! Table 1 + Table 2 + Figure 2: original vs ComPEFT accuracy on the
+//! synthetic-MMLU benchmark across the µT scale ladder, with storage
+//! sizes (Golomb-coded) and compression factors.
+//!
+//! Protocol mirrors §3.1: per expert, sweep (k, α) on the *validation*
+//! split of the benchmark, pick the best point, report accuracy on the
+//! *test* split plus the Golomb-coded size. Figure 2's two series
+//! (MMLU improvement over base, compression factor) are emitted at the
+//! end. Table 2 (the paper's LLaMA2-70B check) is the same protocol on
+//! our largest scale restricted to 5 tasks.
+//!
+//! Run: `cargo bench --bench table1_scale`
+
+use compeft::bench_support as bs;
+use compeft::compeft::entropy::human_bytes;
+use compeft::coordinator::registry::ExpertMethod;
+use compeft::util::bench::Bench;
+
+const INSTRUCT: [&str; 8] = [
+    "self-instruct",
+    "longform",
+    "chip2",
+    "hh-rlhf",
+    "unnatural",
+    "guanaco",
+    "alpaca",
+    "flan-v2",
+];
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = bs::require_artifacts();
+    let mut bench = Bench::new("table1");
+    let scales: Vec<String> = std::env::var("COMPEFT_SCALES")
+        .unwrap_or_else(|_| "xs,s,m,l".into())
+        .split(',')
+        .map(|s| s.to_string())
+        .collect();
+
+    let test = bs::load_eval(&artifacts, "heldout_bench")?;
+    let val = bs::load_eval(&artifacts, "heldout_bench_val")?.truncate(320);
+
+    let mut fig2 = Vec::new();
+    for scale in &scales {
+        if !artifacts.join("models").join(scale).join("base.npz").exists() {
+            eprintln!("scale {scale}: artifacts missing, skipping");
+            continue;
+        }
+        let (_rt, bundle) = bs::load_bundle(&artifacts, scale)?;
+        // Base model zero-shot reference (the paper's per-size base).
+        let base_acc = compeft::eval::evaluate(
+            &bundle,
+            compeft::runtime::AdapterKind::Base,
+            bs::EVAL_BATCH,
+            None,
+            None,
+            &test,
+        )?;
+        bench.row(&format!("{scale}/base"), &[("mmlu_acc", base_acc * 100.0)]);
+
+        let mut sum_orig = 0.0;
+        let mut sum_comp = 0.0;
+        let mut sum_ratio = 0.0;
+        let mut n = 0.0;
+        for task in INSTRUCT {
+            let expert =
+                match bs::load_expert(&artifacts, scale, task, "lora", None) {
+                    Ok(e) => e,
+                    Err(_) => continue,
+                };
+            let orig_acc = bs::eval_tv(&bundle, ExpertMethod::Lora, &expert.tv, &test)?;
+            let grid =
+                bs::sweep_cached(&bundle, &expert, &val, &format!("t1_{scale}_{task}"))?;
+            let best = bs::best_point(&grid);
+            let ctv = bs::compress_tv(&expert.tv, best.density, best.alpha);
+            let comp_acc = bs::eval_tv(&bundle, ExpertMethod::Lora, &ctv, &test)?;
+            let orig_bytes = expert.tv.bytes_fp16();
+            let comp_bytes = bs::compeft_bytes(&expert.tv, best.density, best.alpha);
+            let ratio = orig_bytes as f64 / comp_bytes as f64;
+            bench.row(
+                &format!("{scale}/{task}"),
+                &[
+                    ("orig_acc", orig_acc * 100.0),
+                    ("compeft_acc", comp_acc * 100.0),
+                    ("orig_kb", orig_bytes as f64 / 1e3),
+                    ("compeft_kb", comp_bytes as f64 / 1e3),
+                    ("ratio", ratio),
+                    ("best_k", best.density),
+                    ("best_alpha", best.alpha),
+                ],
+            );
+            sum_orig += orig_acc;
+            sum_comp += comp_acc;
+            sum_ratio += ratio;
+            n += 1.0;
+        }
+        if n > 0.0 {
+            let avg_orig = sum_orig / n * 100.0;
+            let avg_comp = sum_comp / n * 100.0;
+            bench.row(
+                &format!("{scale}/AVERAGE"),
+                &[
+                    ("orig_acc", avg_orig),
+                    ("compeft_acc", avg_comp),
+                    ("increase", avg_comp - avg_orig),
+                    ("mean_ratio", sum_ratio / n),
+                ],
+            );
+            fig2.push((scale.clone(), avg_comp - base_acc * 100.0, sum_ratio / n));
+        }
+    }
+
+    println!("\n== Figure 2 series (improvement over base, compression factor) ==");
+    for (scale, improve, ratio) in &fig2 {
+        bench.row(
+            &format!("fig2/{scale}"),
+            &[("improvement_over_base", *improve), ("compression_x", *ratio)],
+        );
+    }
+
+    // Table 2 analog: largest available scale, first 5 tasks — the grid
+    // cache makes this a cheap re-slice of the same protocol.
+    if let Some(scale) = scales.iter().rev().find(|s| {
+        artifacts.join("models").join(s.as_str()).join("base.npz").exists()
+    }) {
+        println!("\n== Table 2 analog (scale {scale}, 5 tasks) ==");
+        let (_rt, bundle) = bs::load_bundle(&artifacts, scale)?;
+        for task in &INSTRUCT[..5] {
+            if let Ok(expert) = bs::load_expert(&artifacts, scale, task, "lora", None) {
+                let orig = bs::eval_tv(&bundle, ExpertMethod::Lora, &expert.tv, &test)?;
+                let grid = bs::sweep_cached(
+                    &bundle,
+                    &expert,
+                    &val,
+                    &format!("t1_{scale}_{task}"),
+                )?;
+                let best = bs::best_point(&grid);
+                let ctv = bs::compress_tv(&expert.tv, best.density, best.alpha);
+                let comp = bs::eval_tv(&bundle, ExpertMethod::Lora, &ctv, &test)?;
+                bench.row(
+                    &format!("table2/{task}"),
+                    &[
+                        ("orig_acc", orig * 100.0),
+                        ("compeft_acc", comp * 100.0),
+                        ("delta", (comp - orig) * 100.0),
+                    ],
+                );
+            }
+        }
+        let sample = bs::load_expert(&artifacts, scale, "alpaca", "lora", None)?;
+        println!(
+            "expert fp16 size at scale {scale}: {}",
+            human_bytes(sample.tv.bytes_fp16())
+        );
+    }
+    Ok(())
+}

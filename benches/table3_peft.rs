@@ -1,0 +1,74 @@
+//! Table 3: compressing (IA)³ and LoRA modules on smaller bases —
+//! own-task test accuracy (and sizes) over the 7 GLUE-analog tasks,
+//! original vs ComPEFT, across scales xs/s/m (T5-Base / T5-Large /
+//! T0-3B analogs).
+//!
+//! Run: `cargo bench --bench table3_peft`
+
+use compeft::bench_support as bs;
+use compeft::util::bench::Bench;
+
+const GLUE: [&str; 7] = ["mnli", "rte", "qnli", "wnli", "sst2", "mrpc", "qqp"];
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = bs::require_artifacts();
+    let mut bench = Bench::new("table3");
+
+    for scale in ["xs", "s", "m"] {
+        if !artifacts.join("models").join(scale).join("base.npz").exists() {
+            continue;
+        }
+        let (_rt, bundle) = bs::load_bundle(&artifacts, scale)?;
+        for method in ["ia3", "lora"] {
+            let mut rows = Vec::new();
+            for task in GLUE {
+                let expert =
+                    match bs::load_expert(&artifacts, scale, task, method, None) {
+                        Ok(e) => e,
+                        Err(_) => continue,
+                    };
+                let test = bs::load_eval(&artifacts, &format!("glue_{task}"))?;
+                let val = bs::load_eval(&artifacts, &format!("glue_{task}_val"))?.truncate(160);
+                let orig = bs::eval_tv(&bundle, expert.method, &expert.tv, &test)?;
+                let grid = bs::sweep_cached(
+                    &bundle,
+                    &expert,
+                    &val,
+                    &format!("t3_{scale}_{task}_{method}"),
+                )?;
+                let best = bs::best_point(&grid);
+                let ctv = bs::compress_tv(&expert.tv, best.density, best.alpha);
+                let comp = bs::eval_tv(&bundle, expert.method, &ctv, &test)?;
+                let orig_b = expert.tv.bytes_fp16();
+                let comp_b = bs::compeft_bytes(&expert.tv, best.density, best.alpha);
+                bench.row(
+                    &format!("{scale}/{method}/{task}"),
+                    &[
+                        ("orig_acc", orig * 100.0),
+                        ("compeft_acc", comp * 100.0),
+                        ("orig_kb", orig_b as f64 / 1e3),
+                        ("compeft_kb", comp_b as f64 / 1e3),
+                        ("ratio", orig_b as f64 / comp_b as f64),
+                    ],
+                );
+                rows.push((orig, comp, orig_b as f64 / comp_b as f64));
+            }
+            if !rows.is_empty() {
+                let n = rows.len() as f64;
+                let (so, sc, sr) = rows.iter().fold((0.0, 0.0, 0.0), |a, r| {
+                    (a.0 + r.0, a.1 + r.1, a.2 + r.2)
+                });
+                bench.row(
+                    &format!("{scale}/{method}/AVERAGE"),
+                    &[
+                        ("orig_acc", so / n * 100.0),
+                        ("compeft_acc", sc / n * 100.0),
+                        ("improvement", (sc - so) / n * 100.0),
+                        ("mean_ratio", sr / n),
+                    ],
+                );
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! Table 4: ComPEFT on *fully fine-tuned* residuals — the GLUE-analog
+//! tasks fine-tuned with full-model training, compressed and evaluated
+//! on their own test sets (BERT/RoBERTa/T5 analogs → µT xs/s).
+//!
+//! Run: `cargo bench --bench table4_fullft`
+
+use compeft::bench_support as bs;
+use compeft::util::bench::Bench;
+
+const GLUE: [&str; 7] = ["mnli", "rte", "qnli", "wnli", "sst2", "mrpc", "qqp"];
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = bs::require_artifacts();
+    let mut bench = Bench::new("table4");
+
+    for scale in ["xs", "s"] {
+        if !artifacts.join("models").join(scale).join("base.npz").exists() {
+            continue;
+        }
+        let (_rt, bundle) = bs::load_bundle(&artifacts, scale)?;
+        let mut sums = (0.0, 0.0, 0.0, 0usize);
+        for task in GLUE {
+            let expert = match bs::load_expert(&artifacts, scale, task, "full", None) {
+                Ok(e) => e,
+                Err(_) => continue,
+            };
+            let test = bs::load_eval(&artifacts, &format!("glue_{task}"))?;
+            let val = bs::load_eval(&artifacts, &format!("glue_{task}_val"))?.truncate(160);
+            let orig = bs::eval_tv(&bundle, expert.method, &expert.tv, &test)?;
+            let grid = bs::sweep_cached(
+                &bundle,
+                &expert,
+                &val,
+                &format!("t4_{scale}_{task}_full"),
+            )?;
+            let best = bs::best_point(&grid);
+            let ctv = bs::compress_tv(&expert.tv, best.density, best.alpha);
+            let comp = bs::eval_tv(&bundle, expert.method, &ctv, &test)?;
+            let orig_b = expert.tv.bytes_fp16();
+            let comp_b = bs::compeft_bytes(&expert.tv, best.density, best.alpha);
+            bench.row(
+                &format!("{scale}/full/{task}"),
+                &[
+                    ("orig_acc", orig * 100.0),
+                    ("compeft_acc", comp * 100.0),
+                    ("orig_mb", orig_b as f64 / 1e6),
+                    ("compeft_mb", comp_b as f64 / 1e6),
+                    ("ratio", orig_b as f64 / comp_b as f64),
+                ],
+            );
+            sums = (
+                sums.0 + orig,
+                sums.1 + comp,
+                sums.2 + orig_b as f64 / comp_b as f64,
+                sums.3 + 1,
+            );
+        }
+        if sums.3 > 0 {
+            let n = sums.3 as f64;
+            bench.row(
+                &format!("{scale}/full/AVERAGE"),
+                &[
+                    ("orig_acc", sums.0 / n * 100.0),
+                    ("compeft_acc", sums.1 / n * 100.0),
+                    ("improvement", (sums.1 - sums.0) / n * 100.0),
+                    ("mean_ratio", sums.2 / n),
+                ],
+            );
+        }
+    }
+    Ok(())
+}

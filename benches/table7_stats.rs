@@ -1,0 +1,59 @@
+//! Table 7 (Appendix B.4/B.5): task-vector statistics — mean, std, max,
+//! min per scale and task, verifying the near-zero-mean / small-σ
+//! structure ComPEFT exploits and that σ shrinks as scale grows.
+//!
+//! Run: `cargo bench --bench table7_stats`
+
+use compeft::bench_support as bs;
+use compeft::util::bench::Bench;
+use compeft::util::stats;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = bs::require_artifacts();
+    let mut bench = Bench::new("table7");
+
+    let mut sigma_by_scale: Vec<(String, f64)> = Vec::new();
+    for scale in ["xs", "s", "m", "l"] {
+        let mut sigmas = Vec::new();
+        for task in ["chip2", "longform"] {
+            let expert = match bs::load_expert(&artifacts, scale, task, "lora", None) {
+                Ok(e) => e,
+                Err(_) => continue,
+            };
+            let flat = expert.tv.flatten();
+            let mean = stats::mean_f32(&flat);
+            let sigma = stats::std_f32(&flat);
+            let max = flat.iter().cloned().fold(f32::MIN, f32::max) as f64;
+            let min = flat.iter().cloned().fold(f32::MAX, f32::min) as f64;
+            bench.row(
+                &format!("{scale}/{task}"),
+                &[
+                    ("tv_mean", mean),
+                    ("tv_std", sigma),
+                    ("tv_max", max),
+                    ("tv_min", min),
+                    ("mean_over_std", if sigma > 0.0 { mean / sigma } else { 0.0 }),
+                ],
+            );
+            sigmas.push(sigma);
+        }
+        if !sigmas.is_empty() {
+            sigma_by_scale.push((scale.to_string(), stats::mean(&sigmas)));
+        }
+    }
+
+    // The paper's observation: σ varies strongly with model size, which
+    // is why α·σ (not a fixed constant) is the right scale.
+    println!("\nσ by scale: {sigma_by_scale:?}");
+    if sigma_by_scale.len() >= 2 {
+        let first = sigma_by_scale.first().unwrap().1;
+        let last = sigma_by_scale.last().unwrap().1;
+        println!(
+            "σ({}) / σ({}) = {:.2}",
+            sigma_by_scale.first().unwrap().0,
+            sigma_by_scale.last().unwrap().0,
+            first / last
+        );
+    }
+    Ok(())
+}

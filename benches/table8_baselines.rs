@@ -1,0 +1,154 @@
+//! Table 8 (Appendix C.1): ComPEFT vs STC vs BitDelta (No Training) vs
+//! DAREx-q on the synthetic-MMLU benchmark + encoded sizes, using the
+//! same storage accounting as the paper (Golomb for ComPEFT/STC,
+//! bitmask for BitDelta, COO for DAREx).
+//!
+//! Run: `cargo bench --bench table8_baselines`
+
+use compeft::baselines::bitdelta::{bitdelta_bytes, bitdelta_compress};
+use compeft::baselines::darex::{dare_compress, DareConfig};
+use compeft::baselines::stc::stc_compress;
+use compeft::bench_support as bs;
+use compeft::compeft::golomb;
+use compeft::coordinator::registry::ExpertMethod;
+use compeft::tensor::ParamSet;
+use compeft::util::bench::Bench;
+use compeft::util::rng::Pcg;
+
+fn from_flat(like: &ParamSet, flat: &[f32]) -> ParamSet {
+    like.unflatten_like(flat).unwrap()
+}
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = bs::require_artifacts();
+    let mut bench = Bench::new("table8");
+    let scale = std::env::var("COMPEFT_SCALE").unwrap_or_else(|_| "m".into());
+    let tasks = ["alpaca", "chip2", "longform", "guanaco", "self-instruct"];
+
+    if !artifacts.join("models").join(&scale).join("base.npz").exists() {
+        eprintln!("scale {scale} missing");
+        return Ok(());
+    }
+    let (_rt, bundle) = bs::load_bundle(&artifacts, &scale)?;
+    let test = bs::load_eval(&artifacts, "heldout_bench")?.truncate(640);
+    let val = bs::load_eval(&artifacts, "heldout_bench_val")?.truncate(320);
+
+    let mut sums = vec![0.0f64; 7];
+    let mut sizes = vec![0.0f64; 7];
+    let mut n = 0.0;
+    for task in tasks {
+        let expert = match bs::load_expert(&artifacts, &scale, task, "lora", None) {
+            Ok(e) => e,
+            Err(_) => continue,
+        };
+        let flat = expert.tv.flatten();
+        let d = flat.len();
+
+        // Original.
+        let orig = bs::eval_tv(&bundle, ExpertMethod::Lora, &expert.tv, &test)?;
+
+        // ComPEFT (validation-tuned k, α).
+        let grid =
+            bs::sweep_cached(&bundle, &expert, &val, &format!("t1_{scale}_{task}"))?;
+        let best = bs::best_point(&grid);
+        let ctv = bs::compress_tv(&expert.tv, best.density, best.alpha);
+        let compeft = bs::eval_tv(&bundle, ExpertMethod::Lora, &ctv, &test)?;
+        let compeft_b = bs::compeft_bytes(&expert.tv, best.density, best.alpha);
+
+        // STC at the same density.
+        let stc_t = stc_compress(&flat, best.density);
+        let stc_acc = bs::eval_tv(
+            &bundle,
+            ExpertMethod::Lora,
+            &from_flat(&expert.tv, &stc_t.to_dense()),
+            &test,
+        )?;
+        let stc_b = golomb::encode(&stc_t).len() as u64;
+
+        // BitDelta (No Training).
+        let bd = bitdelta_compress(&flat);
+        let bd_acc = bs::eval_tv(
+            &bundle,
+            ExpertMethod::Lora,
+            &from_flat(&expert.tv, &bd.to_dense()),
+            &test,
+        )?;
+        let bd_b = bitdelta_bytes(d);
+
+        // DAREx p=0.95 and p=0.99 (unbiased 1/q rescale).
+        let mut rng = Pcg::seed(17);
+        let mut dare_res = Vec::new();
+        for p in [0.95, 0.99] {
+            let s = dare_compress(
+                &flat,
+                &DareConfig { drop_p: p, q_scale: None },
+                &mut rng,
+            );
+            let acc = bs::eval_tv(
+                &bundle,
+                ExpertMethod::Lora,
+                &from_flat(&expert.tv, &s.to_dense()),
+                &test,
+            )?;
+            dare_res.push((acc, s.coo_bytes()));
+        }
+
+        bench.row(
+            &format!("{scale}/{task}"),
+            &[
+                ("original", orig * 100.0),
+                ("compeft", compeft * 100.0),
+                ("stc", stc_acc * 100.0),
+                ("bitdelta_nt", bd_acc * 100.0),
+                ("darex_p95", dare_res[0].0 * 100.0),
+                ("darex_p99", dare_res[1].0 * 100.0),
+            ],
+        );
+        let row_sizes = [
+            expert.tv.bytes_fp16() as f64,
+            compeft_b as f64,
+            stc_b as f64,
+            bd_b as f64,
+            dare_res[0].1 as f64,
+            dare_res[1].1 as f64,
+        ];
+        let accs = [
+            orig,
+            compeft,
+            stc_acc,
+            bd_acc,
+            dare_res[0].0,
+            dare_res[1].0,
+        ];
+        for i in 0..6 {
+            sums[i] += accs[i];
+            sizes[i] += row_sizes[i];
+        }
+        n += 1.0;
+    }
+    if n > 0.0 {
+        bench.row(
+            &format!("{scale}/AVERAGE"),
+            &[
+                ("original", sums[0] / n * 100.0),
+                ("compeft", sums[1] / n * 100.0),
+                ("stc", sums[2] / n * 100.0),
+                ("bitdelta_nt", sums[3] / n * 100.0),
+                ("darex_p95", sums[4] / n * 100.0),
+                ("darex_p99", sums[5] / n * 100.0),
+            ],
+        );
+        bench.row(
+            &format!("{scale}/SIZE_KB"),
+            &[
+                ("original", sizes[0] / n / 1e3),
+                ("compeft", sizes[1] / n / 1e3),
+                ("stc", sizes[2] / n / 1e3),
+                ("bitdelta_nt", sizes[3] / n / 1e3),
+                ("darex_p95", sizes[4] / n / 1e3),
+                ("darex_p99", sizes[5] / n / 1e3),
+            ],
+        );
+    }
+    Ok(())
+}

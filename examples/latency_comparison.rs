@@ -1,0 +1,79 @@
+//! Table-5-style latency demo: time the download (simulated internet)
+//! and host→device (simulated PCIe) hops for an original vs ComPEFT
+//! expert checkpoint, plus the host-side Golomb decode, end to end.
+//!
+//! Requires `make artifacts`. Run:
+//!   cargo run --release --example latency_comparison [scale]
+
+use anyhow::Result;
+use compeft::bench_support as bs;
+use compeft::compeft::compress::CompressConfig;
+use compeft::compeft::entropy::human_bytes;
+use compeft::coordinator::loader::ExpertLoader;
+use compeft::coordinator::registry::{ExpertMethod, Registry};
+use compeft::coordinator::transport::{LinkSpec, SimLink};
+
+fn main() -> Result<()> {
+    let scale = std::env::args().nth(1).unwrap_or_else(|| "m".into());
+    let artifacts = bs::require_artifacts();
+    let npz = artifacts.join("experts").join(&scale).join("alpaca.lora.npz");
+    anyhow::ensure!(npz.exists(), "run `make artifacts` first");
+
+    let expert = bs::load_expert(&artifacts, &scale, "alpaca", "lora", None)?;
+    let mut reg = Registry::new();
+    reg.register_original("orig", "alpaca", &scale, ExpertMethod::Lora, &npz)?;
+    for (id, k) in [("k05", 0.05), ("k20", 0.2), ("k50", 0.5)] {
+        reg.register_compeft(
+            id,
+            "alpaca",
+            &scale,
+            ExpertMethod::Lora,
+            &npz,
+            &CompressConfig { density: k, alpha: 1.0, ..Default::default() },
+        )?;
+    }
+
+    println!(
+        "expert: {} LoRA task vector, {} params ({} at fp16)\n",
+        scale,
+        expert.tv.total_elements(),
+        human_bytes(expert.tv.bytes_fp16())
+    );
+    println!(
+        "{:<10} {:>10} {:>14} {:>14} {:>12} {:>10}",
+        "format", "size", "internet", "cpu→gpu", "decode", "speedup"
+    );
+    let mut base_total = None;
+    for id in ["orig", "k50", "k20", "k05"] {
+        let rec = reg.get(id).unwrap().clone();
+        let loader = ExpertLoader::new(
+            SimLink::new("net", LinkSpec::internet()),
+            SimLink::new("pcie", LinkSpec::pcie()),
+        );
+        let (bytes, fetch) = loader.fetch_encoded(&rec)?;
+        let (_tv, decode) = loader.decode(&rec, &bytes, &bundle_template(&expert))?;
+        let upload = loader.upload_cost(&rec);
+        let total = fetch + decode + upload;
+        let speedup = base_total
+            .map(|b: std::time::Duration| b.as_secs_f64() / total.as_secs_f64())
+            .unwrap_or(1.0);
+        if base_total.is_none() {
+            base_total = Some(total);
+        }
+        println!(
+            "{:<10} {:>10} {:>12.2}ms {:>12.3}ms {:>10.2}ms {:>9.1}x",
+            id,
+            human_bytes(rec.encoded_bytes),
+            fetch.as_secs_f64() * 1e3,
+            upload.as_secs_f64() * 1e3,
+            decode.as_secs_f64() * 1e3,
+            speedup
+        );
+    }
+    println!("\n(internet: 800 MB/s + 40 ms RTT; pcie: 12 GB/s + 10 µs — DESIGN.md §3.5)");
+    Ok(())
+}
+
+fn bundle_template(expert: &bs::Expert) -> compeft::tensor::ParamSet {
+    expert.tv.clone()
+}

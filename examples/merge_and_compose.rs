@@ -1,0 +1,111 @@
+//! Merging & composition demo: build a multitask model from the GLUE
+//! experts with Task Arithmetic and TIES (original vs ComPEFT inputs),
+//! then adapt to an unseen compositional task with LoraHub-style
+//! gradient-free composition of compressed experts.
+//!
+//! Requires `make artifacts`. Run:
+//!   cargo run --release --example merge_and_compose [scale]
+
+use anyhow::Result;
+use compeft::bench_support as bs;
+use compeft::coordinator::registry::ExpertMethod;
+use compeft::eval::fewshot_loss;
+use compeft::merging::es::EsConfig;
+use compeft::merging::lorahub::learn_composition;
+use compeft::merging::{task_arithmetic, ties::ties_merge, ties::TiesConfig};
+use compeft::runtime::AdapterKind;
+use compeft::tensor::ParamSet;
+use compeft::util::rng::Pcg;
+
+const GLUE: [&str; 7] = ["mnli", "rte", "qnli", "wnli", "sst2", "mrpc", "qqp"];
+
+fn main() -> Result<()> {
+    let scale = std::env::args().nth(1).unwrap_or_else(|| "s".into());
+    let artifacts = bs::require_artifacts();
+    let (_rt, bundle) = bs::load_bundle(&artifacts, &scale)?;
+
+    // ---- Part 1: merge the 7 GLUE experts into one multitask model.
+    let experts: Vec<_> = GLUE
+        .iter()
+        .filter_map(|t| bs::load_expert(&artifacts, &scale, t, "lora", None).ok())
+        .collect();
+    anyhow::ensure!(experts.len() == 7, "need all 7 GLUE experts (make artifacts)");
+    let tvs: Vec<ParamSet> = experts.iter().map(|e| e.tv.clone()).collect();
+    let ctvs: Vec<ParamSet> =
+        experts.iter().map(|e| bs::compress_tv(&e.tv, 0.2, 1.0)).collect();
+
+    let tests: Vec<_> = GLUE
+        .iter()
+        .map(|t| bs::load_eval(&artifacts, &format!("glue_{t}")))
+        .collect::<Result<_>>()?;
+    let eval_avg = |tv: &ParamSet| -> Result<f64> {
+        let mut s = 0.0;
+        for set in &tests {
+            s += bs::eval_tv(&bundle, ExpertMethod::Lora, tv, set)?;
+        }
+        Ok(s / tests.len() as f64)
+    };
+
+    println!("== merging 7 GLUE-analog experts (scale {scale}) ==");
+    for (name, merged) in [
+        ("task-arithmetic (orig)", task_arithmetic(&tvs, 0.3)?),
+        ("task-arithmetic (ComPEFT)", task_arithmetic(&ctvs, 0.3)?),
+        ("TIES (orig)", ties_merge(&tvs, &TiesConfig::default())?),
+        ("TIES (ComPEFT)", ties_merge(&ctvs, &TiesConfig::default())?),
+    ] {
+        println!("  {name:28} avg accuracy {:.3}", eval_avg(&merged)?);
+    }
+
+    // ---- Part 2: LoraHub composition for an unseen compositional task.
+    let mut pool = Vec::new();
+    for i in 0..12 {
+        if let Ok(e) =
+            bs::load_expert(&artifacts, &scale, &format!("pre{i:02}"), "lora", None)
+        {
+            pool.push(bs::compress_tv(&e.tv, 0.2, 1.0)); // compressed pool
+        }
+    }
+    if pool.is_empty() {
+        println!("(no pretrain-rule pool at scale {scale}; skipping LoraHub demo)");
+        return Ok(());
+    }
+    let task = "bbh00";
+    let test = bs::load_eval(&artifacts, &format!("bbh_{task}"))?;
+    let fewshot = bs::load_eval(&artifacts, &format!("bbh_{task}_fewshot"))?;
+    let zs = compeft::eval::evaluate(
+        &bundle,
+        AdapterKind::Base,
+        bs::EVAL_BATCH,
+        None,
+        None,
+        &test,
+    )?;
+    println!("\n== LoraHub composition on unseen task {task} ==");
+    println!("  zero-shot: {zs:.3}");
+
+    let mut rng = Pcg::seed(11);
+    let result = learn_composition(
+        &pool,
+        &EsConfig { budget: 80, restarts: 2, l1: 0.05, ..Default::default() },
+        &mut rng,
+        |tv| {
+            let mut adapter = bundle.lora_init.clone();
+            adapter.add_assign(tv).unwrap();
+            fewshot_loss(&bundle, AdapterKind::Lora, bs::EVAL_BATCH, &adapter, &fewshot)
+                .unwrap_or(f64::INFINITY)
+        },
+    )?;
+    let acc = bs::eval_tv(&bundle, ExpertMethod::Lora, &result.composed, &test)?;
+    println!(
+        "  LoraHub over {} ComPEFT experts: {:.3} (few-shot loss {:.3}, {} evals)",
+        pool.len(),
+        acc,
+        result.best_loss,
+        result.evals
+    );
+    println!(
+        "  learned weights: {:?}",
+        result.weights.iter().map(|w| (w * 100.0).round() / 100.0).collect::<Vec<_>>()
+    );
+    Ok(())
+}

@@ -1,0 +1,87 @@
+//! Quickstart: compress a task vector with ComPEFT, inspect the sizes,
+//! round-trip both wire encodings, and use the fast bit-level ops.
+//!
+//! Works without artifacts (synthesizes a realistic task vector).
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use compeft::compeft::bitmask::MaskPair;
+use compeft::compeft::compress::{
+    compress_vector, decompress_vector, CompressConfig,
+};
+use compeft::compeft::entropy::{
+    compeft_entropy_bits, entropy_compression_ratio, human_bytes,
+};
+use compeft::compeft::golomb;
+use compeft::util::rng::Pcg;
+
+fn main() -> anyhow::Result<()> {
+    // A LoRA-sized task vector: near-zero-mean gaussian with heavy tail
+    // (the structure the paper's Table 7 reports).
+    let d = 1 << 21; // 2M params
+    let mut rng = Pcg::seed(42);
+    let tau: Vec<f32> = (0..d)
+        .map(|_| {
+            let v = rng.normal_ms(0.0, 7e-4) as f32;
+            if rng.next_f32() < 0.01 { v * 20.0 } else { v }
+        })
+        .collect();
+    println!("task vector: {} params = {} at fp16", d, human_bytes(d as u64 * 2));
+
+    // Algorithm 1: keep top-5% magnitudes as signs, scale by α·σ.
+    let cfg = CompressConfig { density: 0.05, alpha: 1.0, ..Default::default() };
+    let tern = compress_vector(&tau, &cfg);
+    println!(
+        "compressed: {} nonzeros (density {:.1}%), shared scale {:+.2e}",
+        tern.nnz(),
+        tern.density() * 100.0,
+        tern.scale
+    );
+
+    // Wire encoding 1: Golomb (storage-optimal).
+    let bytes = golomb::encode(&tern);
+    println!(
+        "golomb coded: {} ({:.1}x smaller than fp16; entropy bound {} → ratio {:.1}x)",
+        human_bytes(bytes.len() as u64),
+        (d as f64 * 2.0) / bytes.len() as f64,
+        human_bytes((compeft_entropy_bits(d, 0.05) / 8.0) as u64),
+        entropy_compression_ratio(d, 0.05),
+    );
+    let decoded = golomb::decode(&bytes)?;
+    assert_eq!(decoded, tern);
+
+    // Wire encoding 2: two binary masks (compute-optimal).
+    let masks = MaskPair::from_ternary(&tern);
+    println!(
+        "mask pair: {} (2 bits/param), XOR+POPCNT distance & AND-dot ready",
+        human_bytes(masks.wire_bytes())
+    );
+
+    // Fast ops on compressed experts: similarity without decompression.
+    let tern2 = compress_vector(
+        &tau.iter().map(|v| v * 0.5 + 1e-4).collect::<Vec<_>>(),
+        &cfg,
+    );
+    let masks2 = MaskPair::from_ternary(&tern2);
+    println!(
+        "sign cosine to a perturbed expert: {:.3} (dot {:+.3e}, l1 dist {})",
+        masks.sign_cosine(&masks2)?,
+        masks.dot(&masks2)?,
+        masks.ternary_l1_distance(&masks2)?
+    );
+
+    // Reconstruction: how close is τ̃ to τ on the kept coordinates?
+    let dense = decompress_vector(&tern);
+    let kept: Vec<usize> = (0..d).filter(|&i| dense[i] != 0.0).collect();
+    let sign_match = kept
+        .iter()
+        .filter(|&&i| dense[i].signum() == tau[i].signum())
+        .count();
+    println!(
+        "reconstruction: {}/{} kept coordinates have the original sign",
+        sign_match,
+        kept.len()
+    );
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,181 @@
+//! END-TO-END DRIVER (recorded in EXPERIMENTS.md): serve a pool of
+//! fine-tuned experts through the full three-layer stack —
+//!
+//!   Zipf request trace → router/batcher (Rust) → tiered cache with
+//!   simulated internet/PCIe links → Golomb decode → PJRT execution of
+//!   the AOT-lowered µT forward (JAX/Pallas lowered at build time) →
+//!   rank-classified answers.
+//!
+//! Runs the SAME trace twice — original fp16 experts vs ComPEFT
+//! `.cpeft` experts — and reports throughput, latency percentiles, swap
+//! counts, cache hit-rates, and bytes moved, demonstrating the paper's
+//! serving claim end to end with real accuracy preserved.
+//!
+//! Requires `make artifacts`. Run:
+//!   cargo run --release --example serve_experts [scale] [n_requests]
+
+use anyhow::{Context, Result};
+use compeft::bench_support as bs;
+use compeft::compeft::compress::{CompressConfig, Granularity};
+use compeft::compeft::entropy::human_bytes;
+use compeft::coordinator::batcher::BatchPolicy;
+use compeft::coordinator::registry::scan_expert_npz;
+use compeft::coordinator::{
+    Coordinator, CoordinatorConfig, ExpertMethod, LinkSpec, Registry,
+};
+use compeft::eval::EvalSet;
+use compeft::util::rng::{Pcg, Zipf};
+use std::time::{Duration, Instant};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let scale = args.first().cloned().unwrap_or_else(|| "s".into());
+    let n_req: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(400);
+    let artifacts = bs::require_artifacts();
+
+    // Expert pool: every instruct-task LoRA expert of this scale.
+    let found = scan_expert_npz(&artifacts, &scale)?;
+    let pool: Vec<(String, std::path::PathBuf)> = found
+        .iter()
+        .filter(|(task, m, _)| {
+            *m == ExpertMethod::Lora
+                && artifacts.join("eval").join(format!("task_{task}.npz")).exists()
+        })
+        .map(|(task, _, path)| (task.clone(), path.clone()))
+        .collect();
+    anyhow::ensure!(!pool.is_empty(), "no experts for scale {scale}; run `make artifacts`");
+    println!("scale {scale}: serving {} experts, {} requests\n", pool.len(), n_req);
+
+    let mut summary = Vec::new();
+    for format in ["original", "compeft"] {
+        let mut registry = Registry::new();
+        let mut ids = Vec::new();
+        for (task, path) in &pool {
+            let id = format!("{task}.lora");
+            if format == "compeft" {
+                registry.register_compeft(
+                    &id,
+                    task,
+                    &scale,
+                    ExpertMethod::Lora,
+                    path,
+                    &CompressConfig {
+                        density: 0.2,
+                        alpha: 1.0,
+                        granularity: Granularity::Global,
+                    },
+                )?;
+            } else {
+                registry.register_original(&id, task, &scale, ExpertMethod::Lora, path)?;
+            }
+            ids.push((id, task.clone()));
+        }
+        let expert_bytes = registry.get(&ids[0].0).unwrap().encoded_bytes;
+
+        // GPU tier sized for ~2 original experts: ComPEFT fits the whole
+        // pool, originals thrash — the paper's §1 scenario.
+        let orig_bytes = {
+            let mut r = Registry::new();
+            r.register_original("x", "x", &scale, ExpertMethod::Lora, &pool[0].1)?;
+            r.get("x").unwrap().encoded_bytes
+        };
+        let mut cfg = CoordinatorConfig::new(artifacts.clone(), &scale);
+        cfg.gpu_capacity_bytes = orig_bytes * 2 + orig_bytes / 2;
+        cfg.policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) };
+        cfg.net = LinkSpec::internet();
+        cfg.pcie = LinkSpec::pcie();
+        let coord = Coordinator::start(cfg, registry)?;
+
+        // Identical Zipf trace for both formats.
+        let mut rng = Pcg::seed(7);
+        let zipf = Zipf::new(ids.len(), 1.1);
+        let sets: Vec<EvalSet> = ids
+            .iter()
+            .map(|(_, t)| bs::load_eval(&artifacts, &format!("task_{t}")))
+            .collect::<Result<_>>()?;
+
+        let t0 = Instant::now();
+        let mut pending = Vec::with_capacity(n_req);
+        for _ in 0..n_req {
+            let e = zipf.sample(&mut rng);
+            let set = &sets[e];
+            let i = rng.range(0, set.n);
+            pending.push((
+                coord.submit(
+                    &ids[e].0,
+                    set.tokens[i * set.seq..(i + 1) * set.seq].to_vec(),
+                    set.n_classes[i] as usize,
+                ),
+                set.labels[i],
+            ));
+        }
+        let mut correct = 0usize;
+        for (rx, label) in pending {
+            let p = rx.recv().context("reply")?;
+            if p.class as i64 == label {
+                correct += 1;
+            }
+        }
+        let wall = t0.elapsed();
+        let m = coord.metrics();
+        let report = coord.shutdown()?;
+
+        println!("=== {format} (expert = {}) ===", human_bytes(expert_bytes));
+        println!(
+            "  accuracy {:.3}   throughput {:.1} req/s   wall {:.2?}",
+            correct as f64 / n_req as f64,
+            n_req as f64 / wall.as_secs_f64(),
+            wall
+        );
+        println!(
+            "  latency mean {:.2}ms  p50 {:.2}ms  p95 {:.2}ms  p99 {:.2}ms",
+            m.total_mean_us / 1e3,
+            m.total_p50_us / 1e3,
+            m.total_p95_us / 1e3,
+            m.total_p99_us / 1e3
+        );
+        println!(
+            "  swaps {} / {} batches (gpu hit-rate {:.2}), swap mean {:.2}ms",
+            m.swaps,
+            m.batches,
+            report.gpu.hit_rate(),
+            m.swap_mean_us / 1e3
+        );
+        println!(
+            "  bytes moved: net {}  pcie {}  gpu residents {}\n",
+            human_bytes(report.net_bytes),
+            human_bytes(report.pcie_bytes),
+            report.gpu.entries
+        );
+        summary.push((
+            format,
+            n_req as f64 / wall.as_secs_f64(),
+            m.total_p95_us / 1e3,
+            report.net_bytes,
+            correct as f64 / n_req as f64,
+        ));
+    }
+
+    if summary.len() == 2 {
+        let (o, c) = (&summary[0], &summary[1]);
+        println!("=== ComPEFT vs original ===");
+        println!(
+            "  throughput {:.1} → {:.1} req/s ({:.2}x)   p95 {:.1} → {:.1} ms ({:.2}x)",
+            o.1,
+            c.1,
+            c.1 / o.1,
+            o.2,
+            c.2,
+            o.2 / c.2
+        );
+        println!(
+            "  network bytes {} → {} ({:.1}x less)   accuracy {:.3} → {:.3}",
+            human_bytes(o.3),
+            human_bytes(c.3),
+            o.3 as f64 / c.3 as f64,
+            o.4,
+            c.4
+        );
+    }
+    Ok(())
+}

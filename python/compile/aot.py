@@ -1,0 +1,180 @@
+"""AOT lowering: JAX → HLO **text** artifacts for the Rust runtime.
+
+HLO text (NOT ``lowered.serialize()``) is the interchange format: the
+image's xla_extension 0.5.1 rejects jax≥0.5 serialized protos (64-bit
+instruction ids); the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Per scale we export:
+
+  forward_b{B}.hlo.txt        logits(params…, tokens[B,S]) — base model
+  forward_lora_b{B}.hlo.txt   logits(params…, lora…, tokens[B,S])
+  forward_ia3_b{B}.hlo.txt    logits(params…, ia3…, tokens[B,S])
+
+plus the standalone L1 kernel artifacts:
+
+  kernels/ternarize.hlo.txt       Pallas topk_ternary elementwise pass
+  kernels/ternary_apply.hlo.txt   Pallas mask-pair matmul
+
+Input order for every executable is ``sorted(param_names)`` then any
+adapter names (sorted) then ``tokens`` — recorded in each scale's
+``meta.json`` by train.py and relied on by ``rust/src/runtime``.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import config as C
+from . import model as M
+
+EVAL_BATCH = 64
+SERVE_BATCH = 8
+BATCHES = (SERVE_BATCH, EVAL_BATCH)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (xla-example recipe)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _write(path: str, text: str) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"[aot] wrote {path} ({len(text)} chars)", flush=True)
+
+
+def _spec(arr) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(arr.shape, arr.dtype)
+
+
+def export_forward(scale: str, kind: str, batch: int) -> None:
+    """Lower one forward variant to HLO text. `kind` in {base,lora,ia3}."""
+    cfg = C.SCALES[scale]
+    suffix = "" if kind == "base" else f"_{kind}"
+    out = os.path.join(C.model_dir(scale), f"forward{suffix}_b{batch}.hlo.txt")
+    if os.path.exists(out):
+        return
+
+    base = M.init_base_params(cfg)
+    base_order = M.export_order(base)
+    tokens = jnp.zeros((batch, C.SEQ_LEN), jnp.int32)
+
+    if kind == "base":
+
+        def fn(*args):
+            p = dict(zip(base_order, args[: len(base_order)]))
+            return (M.forward(cfg, p, args[-1]),)
+
+        specs = [_spec(base[k]) for k in base_order] + [_spec(tokens)]
+    elif kind == "lora":
+        lora = M.init_lora_params(cfg)
+        lora_order = M.export_order(lora)
+
+        def fn(*args):
+            p = dict(zip(base_order, args[: len(base_order)]))
+            la = dict(
+                zip(lora_order, args[len(base_order) : len(base_order) + len(lora_order)])
+            )
+            return (M.forward(cfg, p, args[-1], lora=la),)
+
+        specs = (
+            [_spec(base[k]) for k in base_order]
+            + [_spec(lora[k]) for k in lora_order]
+            + [_spec(tokens)]
+        )
+    elif kind == "ia3":
+        ia3 = M.init_ia3_params(cfg)
+        ia3_order = M.export_order(ia3)
+
+        def fn(*args):
+            p = dict(zip(base_order, args[: len(base_order)]))
+            a = dict(
+                zip(ia3_order, args[len(base_order) : len(base_order) + len(ia3_order)])
+            )
+            return (M.forward(cfg, p, args[-1], ia3=a),)
+
+        specs = (
+            [_spec(base[k]) for k in base_order]
+            + [_spec(ia3[k]) for k in ia3_order]
+            + [_spec(tokens)]
+        )
+    else:
+        raise ValueError(kind)
+
+    lowered = jax.jit(fn).lower(*specs)
+    _write(out, to_hlo_text(lowered))
+
+
+def export_kernels() -> None:
+    """Standalone L1 kernel artifacts (loaded by runtime tests/benches)."""
+    from .kernels.ternary_apply import ternary_matmul
+    from .kernels.topk_ternary import ternarize
+
+    kd = C.kernels_dir()
+
+    out = os.path.join(kd, "ternarize.hlo.txt")
+    if not os.path.exists(out):
+        n = 1 << 16
+
+        def fn(tau, thr, scale):
+            return (ternarize(tau, thr, scale),)
+
+        lowered = jax.jit(fn).lower(
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((), jnp.float32),
+            jax.ShapeDtypeStruct((), jnp.float32),
+        )
+        _write(out, to_hlo_text(lowered))
+
+    out = os.path.join(kd, "ternary_apply.hlo.txt")
+    if not os.path.exists(out):
+        m, k, n = 32, 256, 256
+
+        def fn(x, pos, neg, scale):
+            return (ternary_matmul(x, pos, neg, scale),)
+
+        lowered = jax.jit(fn).lower(
+            jax.ShapeDtypeStruct((m, k), jnp.float32),
+            jax.ShapeDtypeStruct((k, n), jnp.float32),
+            jax.ShapeDtypeStruct((k, n), jnp.float32),
+            jax.ShapeDtypeStruct((), jnp.float32),
+        )
+        _write(out, to_hlo_text(lowered))
+
+
+def export_all(scales) -> None:
+    export_kernels()
+    for scale in scales:
+        for batch in BATCHES:
+            export_forward(scale, "base", batch)
+            export_forward(scale, "lora", batch)
+            export_forward(scale, "ia3", batch)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scales", default=",".join(C.SCALE_ORDER))
+    ap.add_argument("--skip-train", action="store_true",
+                    help="only lower HLO (assume experts already built)")
+    args = ap.parse_args()
+    scales = [s for s in args.scales.split(",") if s]
+
+    if not args.skip_train:
+        from . import train
+
+        train.build_all(scales)
+    export_all(scales)
+    print("[aot] all artifacts ready", flush=True)
+
+
+if __name__ == "__main__":
+    main()

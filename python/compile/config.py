@@ -1,0 +1,132 @@
+"""Global configuration for the µT model family and the artifact layout.
+
+The µT ("micro-transformer") family substitutes for the paper's
+LLaMA/T5/T0 bases (DESIGN.md §3): four decoder-only scales spanning
+~100x in parameter count, trained on synthetic instruction-style tasks.
+Everything downstream (Rust coordinator, benches) reads the artifact
+paths defined here.
+"""
+
+import os
+from dataclasses import dataclass
+
+# ---------------------------------------------------------------------------
+# Vocabulary layout (fixed across all scales).
+# ---------------------------------------------------------------------------
+VOCAB = 256
+PAD, BOS, QUERY, SEP = 0, 1, 2, 3
+ANSWER_BASE = 10          # answer tokens: 10 .. 10+MAX_CLASSES-1
+MAX_CLASSES = 8
+DATA_LO, DATA_HI = 32, 96    # data tokens (64-value alphabet)
+INSTR_LO, INSTR_HI = 200, 256  # instruction (task-id) tokens
+
+SEQ_LEN = 18   # [BOS, instr, 14 data tokens, QUERY, answer]
+N_DATA = SEQ_LEN - 4
+ANSWER_POS = SEQ_LEN - 1     # answer token position
+QUERY_POS = SEQ_LEN - 2      # logits at this position predict the answer
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """One µT scale."""
+
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    lora_rank: int = 8
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+SCALES = {
+    "xs": ModelConfig("xs", d_model=32, n_layers=2, n_heads=2, d_ff=128, lora_rank=4),
+    "s": ModelConfig("s", d_model=64, n_layers=3, n_heads=4, d_ff=256, lora_rank=8),
+    "m": ModelConfig("m", d_model=128, n_layers=4, n_heads=4, d_ff=512, lora_rank=8),
+    "l": ModelConfig("l", d_model=160, n_layers=5, n_heads=8, d_ff=640, lora_rank=16),
+}
+
+SCALE_ORDER = ["xs", "s", "m", "l"]
+
+# ---------------------------------------------------------------------------
+# Training presets. `full` is the default for `make artifacts`; `ci` keeps
+# pytest fast. Override with COMPEFT_TRAIN_PRESET=ci.
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class TrainPreset:
+    pretrain_steps: int           # default; see PRETRAIN_STEPS per scale
+    finetune_steps: int
+    batch_size: int
+    eval_examples: int        # per eval set
+    fewshot_examples: int     # for LoraHub few-shot objectives
+    lr_pretrain: float = 3e-3
+    lr_lora: float = 2e-3
+    lr_ia3: float = 5e-3
+    lr_full: float = 5e-4
+    pretrain_batch: int = 64
+
+
+PRESETS = {
+    "full": TrainPreset(
+        pretrain_steps=1800,
+        finetune_steps=150,
+        batch_size=32,
+        eval_examples=400,
+        fewshot_examples=32,
+        lr_pretrain=2e-3,
+    ),
+    "ci": TrainPreset(
+        pretrain_steps=60,
+        finetune_steps=20,
+        batch_size=16,
+        eval_examples=40,
+        fewshot_examples=8,
+    ),
+}
+
+
+# Larger scales learn more per example; fewer steps keeps the single-core
+# build bounded while preserving the zero-shot-quality-vs-scale trend.
+PRETRAIN_STEPS = {"xs": 2400, "s": 1800, "m": 1400, "l": 1100}
+
+
+def preset() -> TrainPreset:
+    return PRESETS[os.environ.get("COMPEFT_TRAIN_PRESET", "full")]
+
+
+def pretrain_steps(scale: str) -> int:
+    if os.environ.get("COMPEFT_TRAIN_PRESET", "full") == "ci":
+        return preset().pretrain_steps
+    return PRETRAIN_STEPS.get(scale, preset().pretrain_steps)
+
+
+# ---------------------------------------------------------------------------
+# Artifact layout.
+# ---------------------------------------------------------------------------
+
+def artifacts_dir() -> str:
+    return os.environ.get(
+        "COMPEFT_ARTIFACTS",
+        os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"),
+    )
+
+
+def model_dir(scale: str) -> str:
+    return os.path.join(artifacts_dir(), "models", scale)
+
+
+def experts_dir(scale: str) -> str:
+    return os.path.join(artifacts_dir(), "experts", scale)
+
+
+def eval_dir() -> str:
+    return os.path.join(artifacts_dir(), "eval")
+
+
+def kernels_dir() -> str:
+    return os.path.join(artifacts_dir(), "kernels")

@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness references: every kernel must match its
+oracle (up to float tolerance) under the hypothesis sweeps in
+``python/tests/test_kernels.py``. They also serve as the executable
+specification of Algorithm 1 that the Rust implementation is
+cross-checked against (``python/tests/test_cross_semantics.py`` writes
+cases consumed by Rust integration tests).
+"""
+
+import jax.numpy as jnp
+
+
+def ref_ternarize(tau, threshold, scale):
+    """Elementwise ternarization: ``scale * sign(tau) * (|tau| >= threshold)``.
+
+    This is the inner loop of Algorithm 1 once the top-k threshold is
+    known. Zero entries stay zero (sign(0) == 0).
+    """
+    keep = (jnp.abs(tau) >= threshold).astype(tau.dtype)
+    return scale * jnp.sign(tau) * keep
+
+
+def ref_topk_threshold(tau, density):
+    """Magnitude threshold that keeps ~ceil(density * n) entries.
+
+    Quantile-based — ties at the threshold may keep slightly more than
+    ceil(k*n) entries, matching the kernel contract (exact tie-breaking
+    is done on the Rust side where compression must be exact).
+    """
+    mags = jnp.abs(tau).reshape(-1)
+    n = mags.shape[0]
+    keep = jnp.clip(jnp.ceil(density * n).astype(jnp.int32), 1, n)
+    sorted_mags = jnp.sort(mags)  # ascending
+    return sorted_mags[n - keep]
+
+
+def ref_compress(tau, density, alpha):
+    """Full Algorithm 1 in jnp: returns the dense ternary approximation
+    ``alpha * std(tau) * sign(tau) * topk_mask``."""
+    sigma = jnp.std(tau)
+    thr = ref_topk_threshold(tau, density)
+    return ref_ternarize(tau, thr, alpha * sigma)
+
+
+def ref_ternary_matmul(x, pos, neg, scale):
+    """Adapter application via two binary masks (paper §2.2):
+
+        y = x @ (scale * (pos - neg))
+
+    where ``pos``/``neg`` are the {0,1} float masks of the +1/-1 ternary
+    weights. This is the oracle for the ``ternary_apply`` kernel used on
+    the compressed serving path.
+    """
+    return (x @ (pos - neg)) * scale

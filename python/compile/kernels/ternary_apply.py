@@ -1,0 +1,80 @@
+"""Pallas kernel: ternary adapter application via two binary masks.
+
+Computes ``y = x @ (scale * (pos - neg))`` where ``pos``/``neg`` are the
+{0,1} float masks of a ComPEFT-compressed weight delta (paper §2.2,
+"Efficient Computation ... via Two Binary Vectors"). This is the
+compressed serving path's matmul: the coordinator can apply an expert
+straight from its mask-pair form without materializing a dense delta.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper
+suggests CUDA kernels over warp-level bit operations; the TPU-shaped
+equivalent is an MXU systolic-array matmul over mask tiles. We tile
+(M, K, N) into MXU-native 128x128 blocks; each grid step loads one x
+tile and one mask-pair tile into VMEM, computes ``x @ (p - n)`` on the
+MXU, and accumulates into the output tile. The mask subtraction fuses
+into the tile load (VPU), so the MXU sees a plain f32 (or bf16) matmul.
+VMEM per step: 4 tiles * 64 KB = 256 KB.
+
+``interpret=True`` is mandatory on the CPU image (Mosaic custom-calls
+cannot execute on the CPU PJRT plugin).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 128  # MXU-native tile edge
+
+
+def _kernel(x_ref, p_ref, n_ref, s_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w = p_ref[...] - n_ref[...]  # VPU fuse: ternary digits from masks
+    o_ref[...] += s_ref[0, 0] * (x_ref[...] @ w)  # MXU tile matmul
+
+
+def ternary_matmul_tiled(x, pos, neg, scale):
+    """Tiled kernel over shapes already padded to multiples of TILE."""
+    m, k = x.shape
+    k2, n = pos.shape
+    assert k == k2 and pos.shape == neg.shape
+    assert m % TILE == 0 and k % TILE == 0 and n % TILE == 0, (m, k, n)
+    grid = (m // TILE, n // TILE, k // TILE)
+    sc = jnp.asarray(scale, jnp.float32).reshape(1, 1)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE, TILE), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((TILE, TILE), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((TILE, TILE), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE, TILE), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, pos, neg, sc)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def ternary_matmul(x, pos, neg, scale):
+    """``scale * (x @ (pos - neg))`` for arbitrary shapes (pads to TILE).
+
+    Zero-padding is inert: padded x rows produce discarded output rows,
+    padded K entries contribute 0 to every dot product, padded N columns
+    are sliced away.
+    """
+    m, k = x.shape
+    _, n = pos.shape
+    pm = (-m) % TILE
+    pk = (-k) % TILE
+    pn = (-n) % TILE
+    xp = jnp.pad(x, ((0, pm), (0, pk)))
+    pp = jnp.pad(pos, ((0, pk), (0, pn)))
+    np_ = jnp.pad(neg, ((0, pk), (0, pn)))
+    out = ternary_matmul_tiled(xp, pp, np_, scale)
+    return out[:m, :n]

@@ -1,0 +1,86 @@
+"""Pallas kernel: fused ternarization (the elementwise hot loop of
+Algorithm 1).
+
+Given a task-vector block, a magnitude threshold, and the shared scale
+``s = alpha * sigma(tau)``, emit ``s * sign(tau) * (|tau| >= thr)``.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper leaves
+ternary kernels to future CUDA/Triton work (§A). On TPU the natural
+mapping is a VPU-elementwise pass tiled in (8, 128) lanes: each grid
+step streams one (BLOCK_ROWS, 128) tile HBM→VMEM, applies the
+sign/threshold/scale fusion in registers, and streams it back. The
+threshold and scale ride along in SMEM-like (1,1) blocks. VMEM
+footprint per step: 2 tiles * BLOCK_ROWS*128*4B = 256 KB at
+BLOCK_ROWS=256 — well inside the ~16 MB VMEM budget, leaving room for
+double buffering (see EXPERIMENTS.md §Perf).
+
+The kernel MUST run with ``interpret=True`` on this CPU image: real TPU
+lowering emits a Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+BLOCK_ROWS = 256  # (256, 128) f32 tile = 128 KB in VMEM
+
+
+def _kernel(tau_ref, thr_ref, scale_ref, out_ref):
+    tau = tau_ref[...]
+    thr = thr_ref[0, 0]
+    scale = scale_ref[0, 0]
+    keep = (jnp.abs(tau) >= thr).astype(tau.dtype)
+    out_ref[...] = scale * jnp.sign(tau) * keep
+
+
+def ternarize_2d(tau2d, threshold, scale):
+    """Ternarize a (rows, LANES) array; rows must divide BLOCK_ROWS grid.
+
+    Internal entry point — use :func:`ternarize` for arbitrary shapes.
+    """
+    rows, lanes = tau2d.shape
+    assert lanes == LANES and rows % BLOCK_ROWS == 0, (rows, lanes)
+    grid = (rows // BLOCK_ROWS,)
+    thr = jnp.asarray(threshold, jnp.float32).reshape(1, 1)
+    sc = jnp.asarray(scale, jnp.float32).reshape(1, 1)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(tau2d.shape, tau2d.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(tau2d, thr, sc)
+
+
+def ternarize(tau, threshold, scale):
+    """Ternarize an arbitrary-shape f32 array via the Pallas kernel.
+
+    Pads the flattened input to a (n_tiles*BLOCK_ROWS, LANES) panel,
+    runs the tiled kernel, and strips the padding. Padding values are 0
+    and ternarize(0) == 0, so the pad region is inert.
+    """
+    flat = tau.reshape(-1)
+    n = flat.shape[0]
+    tile = BLOCK_ROWS * LANES
+    padded = ((n + tile - 1) // tile) * tile
+    flat = jnp.pad(flat, (0, padded - n))
+    out = ternarize_2d(flat.reshape(-1, LANES), threshold, scale)
+    return out.reshape(-1)[:n].reshape(tau.shape)
+
+
+def compress_pallas(tau, density, alpha):
+    """Algorithm 1 with the Pallas kernel as the ternarization step:
+    threshold/σ are computed with jnp reductions (they are global
+    reductions, not tile-local work), the elementwise pass is the
+    kernel. Lowered into the AOT ``compress.hlo.txt`` artifact."""
+    from .ref import ref_topk_threshold
+
+    sigma = jnp.std(tau)
+    thr = ref_topk_threshold(tau, density)
+    return ternarize(tau, thr, alpha * sigma)

@@ -1,0 +1,226 @@
+"""L2: the µT decoder-only transformer family with PEFT adapters.
+
+Pure-functional JAX: parameters are flat ``dict[str, jnp.ndarray]`` with
+canonical dotted names; the AOT exporter fixes the executable input
+order as ``sorted(names)`` so the Rust runtime can marshal positionally.
+
+Adapters:
+  * LoRA  (Hu et al., 2021)   — low-rank deltas on wq/wv
+  * (IA)3 (Liu et al., 2022)  — learned rescaling of k, v, and FFN
+  * full fine-tuning          — all base parameters trainable
+  * the Figure 3 PEFT zoo     — see :mod:`compile.peft_zoo`
+
+The compressed serving path variant of :func:`forward` applies the LoRA
+delta from ComPEFT mask pairs via the L1 Pallas kernel
+(:mod:`compile.kernels.ternary_apply`), so the whole three-layer stack
+lowers into one HLO module.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import config as C
+from .config import ModelConfig
+from .kernels.ternary_apply import ternary_matmul
+
+# ---------------------------------------------------------------------------
+# Parameter initialization
+# ---------------------------------------------------------------------------
+
+
+def init_base_params(cfg: ModelConfig, seed: int = 0) -> dict:
+    """Initialize base-model parameters (scaled normals)."""
+    rng = np.random.default_rng(seed)
+    p = {}
+
+    def norm(shape, scale):
+        return jnp.asarray(rng.normal(0, scale, size=shape).astype(np.float32))
+
+    d, ff = cfg.d_model, cfg.d_ff
+    p["embed"] = norm((C.VOCAB, d), 0.02)
+    p["pos"] = norm((C.SEQ_LEN, d), 0.02)
+    for i in range(cfg.n_layers):
+        pre = f"layers.{i}"
+        p[f"{pre}.ln1"] = jnp.ones((d,), jnp.float32)
+        p[f"{pre}.ln2"] = jnp.ones((d,), jnp.float32)
+        for w in ["wq", "wk", "wv", "wo"]:
+            p[f"{pre}.attn.{w}"] = norm((d, d), d**-0.5)
+        p[f"{pre}.mlp.w1"] = norm((d, ff), d**-0.5)
+        p[f"{pre}.mlp.w2"] = norm((ff, d), ff**-0.5)
+    p["ln_f"] = jnp.ones((d,), jnp.float32)
+    return p
+
+
+def init_lora_params(cfg: ModelConfig, seed: int = 0, rank: int | None = None) -> dict:
+    """LoRA A (gaussian) / B (zero) for wq and wv of every layer.
+
+    B = 0 makes the initial delta exactly zero, so the LoRA task vector
+    is θ_ft − θ_init over these tensors.
+    """
+    rng = np.random.default_rng(seed + 7)
+    p = {}
+    d = cfg.d_model
+    r = rank or cfg.lora_rank
+    for i in range(cfg.n_layers):
+        for w in ["wq", "wv"]:
+            pre = f"layers.{i}.attn.{w}"
+            p[f"{pre}.lora_a"] = jnp.asarray(
+                rng.normal(0, r**-0.5, size=(d, r)).astype(np.float32)
+            )
+            p[f"{pre}.lora_b"] = jnp.zeros((r, d), jnp.float32)
+    return p
+
+
+def init_ia3_params(cfg: ModelConfig) -> dict:
+    """(IA)3 rescaling vectors, initialized to 1 (identity)."""
+    p = {}
+    for i in range(cfg.n_layers):
+        pre = f"layers.{i}.ia3"
+        p[f"{pre}.k"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p[f"{pre}.v"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p[f"{pre}.ff"] = jnp.ones((cfg.d_ff,), jnp.float32)
+    return p
+
+
+def param_count(params: dict) -> int:
+    return int(sum(int(np.prod(v.shape)) for v in params.values()))
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+
+def _rmsnorm(x, w):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6) * w
+
+
+def _attention(cfg: ModelConfig, q, k, v):
+    b, s, d = q.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+
+    def split(t):
+        return t.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+
+    qh, kh, vh = split(q), split(k), split(v)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", qh, kh) / jnp.sqrt(float(hd))
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(mask[None, None], scores, -1e9)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vh)
+    return out.transpose(0, 2, 1, 3).reshape(b, s, d)
+
+
+LORA_SCALE = 2.0  # alpha/r with alpha = 2r
+
+
+def forward(
+    cfg: ModelConfig,
+    base: dict,
+    tokens,
+    lora: dict | None = None,
+    ia3: dict | None = None,
+    lora_ternary: dict | None = None,
+):
+    """Logits over the vocab at the QUERY position: [B, VOCAB].
+
+    ``lora_ternary`` carries a ComPEFT-compressed LoRA delta as mask
+    pairs: ``{tensor_name: (pos_mask, neg_mask, scale)}`` applied with
+    the Pallas ternary-matmul kernel on top of the base projection.
+    """
+    x = base["embed"][tokens] + base["pos"][None, : tokens.shape[1]]
+
+    def proj(h, name):
+        w = base[name]
+        y = h @ w
+        if lora is not None and f"{name}.lora_a" in lora:
+            a, bm = lora[f"{name}.lora_a"], lora[f"{name}.lora_b"]
+            y = y + LORA_SCALE * ((h @ a) @ bm)
+        if lora_ternary is not None and name in lora_ternary:
+            pos, neg, scale = lora_ternary[name]
+            b_, s_, d_ = h.shape
+            flat = h.reshape(b_ * s_, d_)
+            y = y + ternary_matmul(flat, pos, neg, scale).reshape(y.shape)
+        return y
+
+    for i in range(cfg.n_layers):
+        pre = f"layers.{i}"
+        hn = _rmsnorm(x, base[f"{pre}.ln1"])
+        q = proj(hn, f"{pre}.attn.wq")
+        k = hn @ base[f"{pre}.attn.wk"]
+        v = proj(hn, f"{pre}.attn.wv")
+        if ia3 is not None:
+            k = k * ia3[f"{pre}.ia3.k"]
+            v = v * ia3[f"{pre}.ia3.v"]
+        att = _attention(cfg, q, k, v)
+        x = x + att @ base[f"{pre}.attn.wo"]
+
+        hn = _rmsnorm(x, base[f"{pre}.ln2"])
+        hmid = jax.nn.gelu(hn @ base[f"{pre}.mlp.w1"])
+        if ia3 is not None:
+            hmid = hmid * ia3[f"{pre}.ia3.ff"]
+        x = x + hmid @ base[f"{pre}.mlp.w2"]
+
+    x = _rmsnorm(x, base["ln_f"])
+    logits = x @ base["embed"].T  # tied unembedding
+    return logits[:, C.QUERY_POS, :]
+
+
+# ---------------------------------------------------------------------------
+# Loss / accuracy
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(cfg, base, tokens, answer_tokens, lora=None, ia3=None):
+    """Cross-entropy of the answer token at the QUERY position."""
+    logits = forward(cfg, base, tokens, lora=lora, ia3=ia3)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, answer_tokens[:, None], axis=1))
+
+
+def rank_accuracy(logits, labels, n_classes) -> float:
+    """Rank classification over the answer-token candidates (paper
+    B.1): prediction = argmax over the C candidate answer tokens."""
+    cands = logits[:, C.ANSWER_BASE : C.ANSWER_BASE + n_classes]
+    return float(jnp.mean(jnp.argmax(cands, axis=-1) == labels))
+
+
+# ---------------------------------------------------------------------------
+# Adam (optax is unavailable offline)
+# ---------------------------------------------------------------------------
+
+
+def adam_init(params: dict) -> dict:
+    return {
+        "m": {k: jnp.zeros_like(v) for k, v in params.items()},
+        "v": {k: jnp.zeros_like(v) for k, v in params.items()},
+        "t": jnp.zeros((), jnp.int32),
+    }
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = {k: b1 * state["m"][k] + (1 - b1) * grads[k] for k in params}
+    v = {k: b2 * state["v"][k] + (1 - b2) * grads[k] ** 2 for k in params}
+    tf = t.astype(jnp.float32)
+    new = {}
+    for k in params:
+        mh = m[k] / (1 - b1**tf)
+        vh = v[k] / (1 - b2**tf)
+        new[k] = params[k] - lr * mh / (jnp.sqrt(vh) + eps)
+    return new, {"m": m, "v": v, "t": t}
+
+
+# ---------------------------------------------------------------------------
+# Canonical export order
+# ---------------------------------------------------------------------------
+
+
+def export_order(params: dict) -> list[str]:
+    """The positional input order used by every AOT executable."""
+    return sorted(params.keys())
+
+
+def params_to_list(params: dict) -> list:
+    return [params[k] for k in export_order(params)]

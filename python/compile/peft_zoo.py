@@ -1,0 +1,306 @@
+"""The Figure-3 PEFT method zoo.
+
+Ten parameter-efficient fine-tuning methods trained on µT for the
+storage-vs-performance Pareto study (paper §3.5 / Figure 3):
+
+  full, LoRA, (IA)3, LayerNorm, BitFit, Adapters (Houlsby),
+  Compacter (Kronecker-factorized adapters), Prompt Tuning,
+  Prefix Tuning, Intrinsic-SAID.
+
+Each method is expressed as an *adapter hook* on a shared zoo forward
+pass so accuracies are comparable. Sizes are the exact fp16 bytes of
+each method's trainable parameters; ComLoRA / Com(IA)3 points are added
+by the Rust bench from the compressed expert artifacts.
+
+Build-time only (results → artifacts/figure3.json).
+"""
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import config as C
+from . import model as M
+from . import tasks as T
+
+N_PROMPT = 8      # prompt-tuning virtual tokens
+N_PREFIX = 4      # prefix-tuning kv positions per layer
+ADAPTER_BOTTLENECK = 8
+COMPACTER_N = 4   # kronecker factor edge
+SAID_DIM = 64     # intrinsic dimensionality
+
+
+# ---------------------------------------------------------------------------
+# Adapter initialization per method
+# ---------------------------------------------------------------------------
+
+
+def init_zoo_params(method: str, cfg, base: dict, seed: int = 0):
+    """Returns (trainable_params, consts) for a zoo method."""
+    rng = np.random.default_rng(seed + 31)
+    d, ff, L = cfg.d_model, cfg.d_ff, cfg.n_layers
+
+    def norm(shape, scale):
+        return jnp.asarray(rng.normal(0, scale, size=shape).astype(np.float32))
+
+    if method == "full":
+        return dict(base), {}
+    if method == "lora":
+        return M.init_lora_params(cfg, seed=seed), {}
+    if method == "ia3":
+        return M.init_ia3_params(cfg), {}
+    if method == "layernorm":
+        keys = [k for k in base if ".ln1" in k or ".ln2" in k or k == "ln_f"]
+        return {k: base[k] for k in keys}, {}
+    if method == "bitfit":
+        p = {}
+        for i in range(L):
+            p[f"layers.{i}.bias.attn"] = jnp.zeros((d,), jnp.float32)
+            p[f"layers.{i}.bias.mlp"] = jnp.zeros((d,), jnp.float32)
+        p["bias.final"] = jnp.zeros((d,), jnp.float32)
+        return p, {}
+    if method == "adapter":
+        b = ADAPTER_BOTTLENECK
+        p = {}
+        for i in range(L):
+            p[f"layers.{i}.adpt.down"] = norm((d, b), d**-0.5)
+            p[f"layers.{i}.adpt.up"] = jnp.zeros((b, d), jnp.float32)
+        return p, {}
+    if method == "compacter":
+        # weight = kron(s, w): s is n x n shared-shape factor per layer,
+        # w is (d/n) x (b/n)… we use kron(s [n,n], w [d/n, b]) -> (d, n*b)
+        # then slice to (d, b); up analogous. Tiny parameter count.
+        n = COMPACTER_N
+        b = ADAPTER_BOTTLENECK
+        p = {}
+        for i in range(L):
+            p[f"layers.{i}.cpt.s_down"] = norm((n, n), 0.5)
+            p[f"layers.{i}.cpt.w_down"] = norm((d // n, b), d**-0.5)
+            p[f"layers.{i}.cpt.s_up"] = jnp.zeros((n, n), jnp.float32)
+            p[f"layers.{i}.cpt.w_up"] = norm((b // min(b, n), d // n), b**-0.5)
+        return p, {}
+    if method == "prompt":
+        return {"prompt": norm((N_PROMPT, d), 0.02)}, {}
+    if method == "prefix":
+        p = {}
+        for i in range(L):
+            p[f"layers.{i}.prefix.k"] = norm((N_PREFIX, d), 0.02)
+            p[f"layers.{i}.prefix.v"] = norm((N_PREFIX, d), 0.02)
+        return p, {}
+    if method == "said":
+        # Fixed random unit directions, one per parameter tensor chunk;
+        # trainable z scales them (Aghajanyan et al., 2020).
+        names = M.export_order(base)
+        dirs = {}
+        for k in names:
+            v = rng.normal(size=base[k].shape).astype(np.float32)
+            v /= np.linalg.norm(v.reshape(-1)) + 1e-8
+            dirs[k] = jnp.asarray(v)
+        # SAID_DIM scalars spread round-robin across tensors.
+        assign = {k: i % SAID_DIM for i, k in enumerate(names)}
+        return {"z": jnp.zeros((SAID_DIM,), jnp.float32)}, {
+            "dirs": dirs,
+            "assign": assign,
+        }
+    raise ValueError(f"unknown zoo method {method!r}")
+
+
+ZOO_METHODS = [
+    "full",
+    "lora",
+    "ia3",
+    "layernorm",
+    "bitfit",
+    "adapter",
+    "compacter",
+    "prompt",
+    "prefix",
+    "said",
+]
+
+
+# ---------------------------------------------------------------------------
+# Shared zoo forward
+# ---------------------------------------------------------------------------
+
+
+def zoo_forward(cfg, base, tokens, method, p, consts):
+    """Forward pass with the method's adapter hook applied."""
+    if method == "full":
+        return M.forward(cfg, p, tokens)
+    if method == "lora":
+        return M.forward(cfg, base, tokens, lora=p)
+    if method == "ia3":
+        return M.forward(cfg, base, tokens, ia3=p)
+    if method in ("layernorm", "said"):
+        merged = dict(base)
+        if method == "layernorm":
+            merged.update(p)
+        else:
+            dirs, assign = consts["dirs"], consts["assign"]
+            for k in merged:
+                merged[k] = merged[k] + p["z"][assign[k]] * dirs[k]
+        return M.forward(cfg, merged, tokens)
+
+    # Methods needing a custom block walk.
+    x = base["embed"][tokens] + base["pos"][None, : tokens.shape[1]]
+    query_pos = C.QUERY_POS
+    if method == "prompt":
+        b = x.shape[0]
+        prm = jnp.broadcast_to(p["prompt"][None], (b,) + p["prompt"].shape)
+        x = jnp.concatenate([prm, x], axis=1)
+        query_pos = C.QUERY_POS + N_PROMPT
+
+    for i in range(cfg.n_layers):
+        pre = f"layers.{i}"
+        hn = M._rmsnorm(x, base[f"{pre}.ln1"])
+        q = hn @ base[f"{pre}.attn.wq"]
+        k = hn @ base[f"{pre}.attn.wk"]
+        v = hn @ base[f"{pre}.attn.wv"]
+        if method == "prefix":
+            att = _prefix_attention(
+                cfg, q, k, v, p[f"{pre}.prefix.k"], p[f"{pre}.prefix.v"]
+            )
+        else:
+            att = M._attention(cfg, q, k, v)
+        x = x + att @ base[f"{pre}.attn.wo"]
+        if method == "bitfit":
+            x = x + p[f"{pre}.bias.attn"]
+
+        hn = M._rmsnorm(x, base[f"{pre}.ln2"])
+        hmid = jax.nn.gelu(hn @ base[f"{pre}.mlp.w1"])
+        x = x + hmid @ base[f"{pre}.mlp.w2"]
+        if method == "bitfit":
+            x = x + p[f"{pre}.bias.mlp"]
+        if method == "adapter":
+            x = x + jax.nn.gelu(hn @ p[f"{pre}.adpt.down"]) @ p[f"{pre}.adpt.up"]
+        if method == "compacter":
+            down = jnp.kron(p[f"{pre}.cpt.s_down"], p[f"{pre}.cpt.w_down"])[
+                : cfg.d_model, :ADAPTER_BOTTLENECK
+            ]
+            up = jnp.kron(p[f"{pre}.cpt.s_up"], p[f"{pre}.cpt.w_up"])[
+                :ADAPTER_BOTTLENECK, : cfg.d_model
+            ]
+            x = x + jax.nn.gelu(hn @ down) @ up
+
+    if method == "bitfit":
+        x = x + p["bias.final"]
+    x = M._rmsnorm(x, base["ln_f"])
+    logits = x @ base["embed"].T
+    return logits[:, query_pos, :]
+
+
+def _prefix_attention(cfg, q, k, v, pk, pv):
+    """Attention with learnable kv prefix (visible to every position)."""
+    b, s, d = q.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    npfx = pk.shape[0]
+
+    def split(t):
+        return t.reshape(t.shape[0], t.shape[1], h, hd).transpose(0, 2, 1, 3)
+
+    kfull = jnp.concatenate([jnp.broadcast_to(pk[None], (b, npfx, d)), k], axis=1)
+    vfull = jnp.concatenate([jnp.broadcast_to(pv[None], (b, npfx, d)), v], axis=1)
+    qh, kh, vh = split(q), split(kfull), split(vfull)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", qh, kh) / jnp.sqrt(float(hd))
+    causal = jnp.tril(jnp.ones((s, s), bool))
+    mask = jnp.concatenate([jnp.ones((s, npfx), bool), causal], axis=1)
+    scores = jnp.where(mask[None, None], scores, -1e9)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vh)
+    return out.transpose(0, 2, 1, 3).reshape(b, s, d)
+
+
+# ---------------------------------------------------------------------------
+# Training + Figure 3 build
+# ---------------------------------------------------------------------------
+
+ZOO_SCALE = "s"
+ZOO_TASKS = 4     # first N instruct tasks
+ZOO_LRS = {
+    "full": 5e-4,
+    "lora": 2e-3,
+    "ia3": 5e-3,
+    "layernorm": 5e-3,
+    "bitfit": 5e-3,
+    "adapter": 2e-3,
+    "compacter": 2e-3,
+    "prompt": 5e-3,
+    "prefix": 2e-3,
+    "said": 1e-1,
+}
+
+
+def train_zoo_method(cfg, base, task, method, steps, batch, seed=0):
+    p, consts = init_zoo_params(method, cfg, base, seed)
+    rng = np.random.default_rng(seed + 41)
+
+    @jax.jit
+    def step(p, opt, tokens, answers):
+        def loss(q):
+            logits = zoo_forward(cfg, base, tokens, method, q, consts)
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            return -jnp.mean(jnp.take_along_axis(logp, answers[:, None], 1))
+
+        lval, grads = jax.value_and_grad(loss)(p)
+        p, opt = M.adam_update(p, grads, opt, ZOO_LRS[method])
+        return p, opt, lval
+
+    opt = M.adam_init(p)
+    for _ in range(steps):
+        tokens, labels = task.generate(rng, batch)
+        p, opt, _ = step(p, opt, jnp.asarray(tokens),
+                         jnp.asarray(C.ANSWER_BASE + labels))
+    return p, consts
+
+
+def eval_zoo(cfg, base, task, method, p, consts, n, seed=1234) -> float:
+    rng = np.random.default_rng(seed)
+    tokens, labels = task.generate(rng, n)
+    logits = zoo_forward(cfg, base, jnp.asarray(tokens), method, p, consts)
+    return M.rank_accuracy(logits, jnp.asarray(labels), task.n_classes)
+
+
+def method_bytes_fp16(p: dict) -> int:
+    return int(sum(int(np.prod(v.shape)) for v in p.values()) * 2)
+
+
+def build_figure3(scales) -> None:
+    from .train import pretrain
+
+    if ZOO_SCALE not in scales:
+        return
+    out_path = os.path.join(C.artifacts_dir(), "figure3.json")
+    if os.path.exists(out_path):
+        return
+    pre = C.preset()
+    cfg = C.SCALES[ZOO_SCALE]
+    base = pretrain(ZOO_SCALE)
+    tasks = T.instruct_tasks()[:ZOO_TASKS]
+    results = {}
+    for method in ZOO_METHODS:
+        t0 = time.time()
+        accs = []
+        size = None
+        for task in tasks:
+            p, consts = init_zoo_params(method, cfg, base, 0)
+            size = method_bytes_fp16(p)
+            p, consts = train_zoo_method(
+                cfg, base, task, method, pre.finetune_steps, pre.batch_size
+            )
+            accs.append(eval_zoo(cfg, base, task, method, p, consts,
+                                 pre.eval_examples))
+        results[method] = {
+            "acc_mean": float(np.mean(accs)),
+            "acc_per_task": [float(a) for a in accs],
+            "bytes_fp16": size,
+            "train_seconds": round(time.time() - t0, 1),
+        }
+        print(f"[zoo] {method}: acc {np.mean(accs):.3f} "
+              f"size {size}B ({time.time()-t0:.0f}s)", flush=True)
+    with open(out_path, "w") as f:
+        json.dump({"scale": ZOO_SCALE, "methods": results}, f, indent=1)

@@ -1,0 +1,268 @@
+"""Synthetic instruction-style task suite.
+
+Substitutes for the paper's datasets (DESIGN.md §3): each *task* is a
+fixed rule instance from one of eight rule families, identified by a
+dedicated instruction token. Sequences look like
+
+    [BOS, instr, d_1 .. d_14, QUERY, answer]
+
+and the model is scored by rank classification of the answer token at
+the QUERY position — mirroring the paper's T5/T0 evaluation protocol.
+
+Benchmarks built from the suite:
+  * ``pretrain``      — many rule instances (multitask instruction training)
+  * ``heldout_bench`` — unseen examples of a held-out subset of pretrain
+                        rules: the "synthetic-MMLU" used for Table 1/2
+  * ``instruct_tasks``— 8 *new* rules (new instruction tokens): the
+                        QLoRA-style fine-tuning datasets
+  * ``glue_tasks``    — 7 rules mirroring GLUE's category mix (Table 3/4/6)
+  * ``bbh_tasks``     — 12 compositional rules over unseen instruction
+                        pairs (Figure 4's BBH analog)
+"""
+
+from dataclasses import dataclass, field
+from typing import Callable
+
+import numpy as np
+
+from . import config as C
+
+
+@dataclass
+class Task:
+    """A fixed rule instance with its own instruction token."""
+
+    name: str
+    family: str
+    instr_token: int
+    n_classes: int
+    rule: dict = field(default_factory=dict)
+
+    def generate(self, rng: np.random.Generator, n: int):
+        """Return (tokens[n, SEQ_LEN] int32, labels[n] int32)."""
+        data = rng.integers(C.DATA_LO, C.DATA_HI, size=(n, C.N_DATA))
+        labels = _apply_family(self.family, self.rule, data)
+        perm = self.rule.get("answer_perm")
+        if perm is not None:
+            labels = np.asarray(perm)[labels]
+        tokens = np.zeros((n, C.SEQ_LEN), dtype=np.int32)
+        tokens[:, 0] = C.BOS
+        tokens[:, 1] = self.instr_token
+        tokens[:, 2 : 2 + C.N_DATA] = data
+        tokens[:, C.QUERY_POS] = C.QUERY
+        tokens[:, C.ANSWER_POS] = C.ANSWER_BASE + labels
+        return tokens, labels.astype(np.int32)
+
+
+def _bucket(vals: np.ndarray, c: int) -> np.ndarray:
+    """Bucket data-token values into c classes of equal width."""
+    span = (C.DATA_HI - C.DATA_LO + c - 1) // c
+    return (vals - C.DATA_LO) // span
+
+
+def _apply_family(family: str, rule: dict, data: np.ndarray) -> np.ndarray:
+    """Compute integer labels in [0, n_classes) for a batch of data rows.
+
+    All families are functions of at most two data positions — the kind
+    of retrieval/compare structure small attention models learn quickly,
+    so fine-tuning converges within a few hundred steps on one CPU core.
+    """
+    if family == "anchor":
+        return _bucket(data[:, rule["pos"]], rule["classes"]).astype(np.int64)
+    if family == "above":
+        return (data[:, rule["pos"]] >= rule["threshold"]).astype(np.int64)
+    if family == "order":
+        return (data[:, rule["i"]] < data[:, rule["j"]]).astype(np.int64)
+    if family == "eqbucket":
+        b = 4
+        return (
+            _bucket(data[:, rule["i"]], b) == _bucket(data[:, rule["j"]], b)
+        ).astype(np.int64)
+    if family == "pairsum":
+        c = rule["classes"]
+        s = data[:, rule["i"]] + data[:, rule["j"]] - 2 * C.DATA_LO
+        span = (2 * (C.DATA_HI - C.DATA_LO - 1)) // c + 1
+        return (s // span).astype(np.int64)
+    if family == "diff":
+        c = rule["classes"]
+        d = np.abs(data[:, rule["i"]].astype(np.int64) - data[:, rule["j"]])
+        span = (C.DATA_HI - C.DATA_LO - 1) // c + 1
+        return np.minimum(d // span, c - 1).astype(np.int64)
+    if family == "xorbucket":
+        bi = _bucket(data[:, rule["i"]], 2)
+        bj = _bucket(data[:, rule["j"]], 2)
+        return (bi ^ bj).astype(np.int64)
+    if family == "firstlast":
+        return (data[:, 0] < data[:, -1]).astype(np.int64)
+    if family == "compose_and":
+        # BBH analog: conjunction of two binary sub-rules.
+        a = _apply_family(rule["fam_a"], rule["rule_a"], data)
+        b = _apply_family(rule["fam_b"], rule["rule_b"], data)
+        return (a & b).astype(np.int64)
+    if family == "compose_xor":
+        a = _apply_family(rule["fam_a"], rule["rule_a"], data)
+        b = _apply_family(rule["fam_b"], rule["rule_b"], data)
+        return (a ^ b).astype(np.int64)
+    raise ValueError(f"unknown family {family!r}")
+
+
+FAMILIES = [
+    "anchor",
+    "above",
+    "order",
+    "eqbucket",
+    "pairsum",
+    "diff",
+    "xorbucket",
+    "firstlast",
+]
+
+_BINARY_FAMILIES = ["above", "order", "eqbucket", "xorbucket", "firstlast"]
+
+
+def _make_rule(family: str, rng: np.random.Generator) -> tuple[dict, int]:
+    """Sample rule parameters; returns (rule, n_classes)."""
+    if family == "anchor":
+        c = int(rng.choice([3, 4]))
+        return {"pos": int(rng.integers(0, C.N_DATA)), "classes": c}, c
+    if family == "above":
+        return {
+            "pos": int(rng.integers(0, C.N_DATA)),
+            "threshold": int(rng.integers(C.DATA_LO + 30, C.DATA_HI - 30)),
+        }, 2
+    if family in ("order", "eqbucket", "xorbucket"):
+        i, j = rng.choice(C.N_DATA, size=2, replace=False)
+        return {"i": int(i), "j": int(j)}, 2
+    if family in ("pairsum", "diff"):
+        i, j = rng.choice(C.N_DATA, size=2, replace=False)
+        c = int(rng.choice([2, 3]))
+        return {"i": int(i), "j": int(j), "classes": c}, c
+    if family == "firstlast":
+        return {}, 2
+    raise ValueError(family)
+
+
+def _task(name: str, family: str, instr: int, rng: np.random.Generator) -> Task:
+    rule, n_classes = _make_rule(family, rng)
+    # A fixed random permutation of answer tokens per task prevents the
+    # model from exploiting global label frequencies.
+    rule["answer_perm"] = [int(x) for x in rng.permutation(n_classes)]
+    return Task(name, family, instr, n_classes, rule)
+
+
+# ---------------------------------------------------------------------------
+# Suite construction — deterministic from a seed.
+# ---------------------------------------------------------------------------
+
+N_PRETRAIN_RULES = 8
+N_HELDOUT_BENCH = 8  # benchmark rules, drawn from the *pretrain* rules
+
+
+def pretrain_tasks(seed: int = 0) -> list[Task]:
+    """Multitask instruction-training suite (instruction tokens 200..)."""
+    rng = np.random.default_rng(seed + 1000)
+    tasks = []
+    for i in range(N_PRETRAIN_RULES):
+        fam = FAMILIES[i % len(FAMILIES)]
+        tasks.append(_task(f"pre{i:02d}", fam, C.INSTR_LO + i, rng))
+    return tasks
+
+
+def heldout_bench_tasks(seed: int = 0) -> list[Task]:
+    """The synthetic-MMLU: last N rules of the pretrain suite. They ARE
+    trained on (like MMLU's knowledge is in pretraining) but their eval
+    examples are fresh; fine-tuning on *other* tasks can degrade them."""
+    return pretrain_tasks(seed)[-N_HELDOUT_BENCH:]
+
+
+INSTRUCT_NAMES = [
+    "self-instruct",
+    "longform",
+    "chip2",
+    "hh-rlhf",
+    "unnatural",
+    "guanaco",
+    "alpaca",
+    "flan-v2",
+]
+
+
+def instruct_tasks(seed: int = 0) -> list[Task]:
+    """8 new rules with NEW instruction tokens — the QLoRA-style
+    fine-tuning datasets of Table 1 (names mirror the paper's)."""
+    rng = np.random.default_rng(seed + 2000)
+    tasks = []
+    for i, name in enumerate(INSTRUCT_NAMES):
+        fam = FAMILIES[(i * 3 + 1) % len(FAMILIES)]
+        tasks.append(_task(name, fam, C.INSTR_LO + N_PRETRAIN_RULES + i, rng))
+    return tasks
+
+
+GLUE_NAMES = ["mnli", "rte", "qnli", "wnli", "sst2", "mrpc", "qqp"]
+_GLUE_FAMILIES = [
+    "order",      # mnli  (NLI-like pairwise comparison)
+    "eqbucket",   # rte
+    "order",      # qnli
+    "xorbucket",  # wnli  (hard/noisy — mirrors WNLI's difficulty)
+    "above",      # sst2  (single-evidence polarity)
+    "eqbucket",   # mrpc  (paraphrase-like equality)
+    "diff",       # qqp
+]
+
+
+def glue_tasks(seed: int = 0) -> list[Task]:
+    """7 tasks mirroring GLUE's category mix (Table 3/4/6)."""
+    rng = np.random.default_rng(seed + 3000)
+    base = C.INSTR_LO + N_PRETRAIN_RULES + len(INSTRUCT_NAMES)
+    return [
+        _task(name, fam, base + i, rng)
+        for i, (name, fam) in enumerate(zip(GLUE_NAMES, _GLUE_FAMILIES))
+    ]
+
+
+N_BBH = 12
+
+
+def bbh_tasks(seed: int = 0) -> list[Task]:
+    """Compositional generalization suite (Figure 4): each task composes
+    two binary sub-rules with AND/XOR under an *unseen* instruction
+    token. Solvable by composing pretrain-era skills, matching BBH's
+    role in LoraHub."""
+    rng = np.random.default_rng(seed + 4000)
+    base = C.INSTR_LO + N_PRETRAIN_RULES + len(INSTRUCT_NAMES) + len(GLUE_NAMES)
+    tasks = []
+    for i in range(N_BBH):
+        fam_a = _BINARY_FAMILIES[int(rng.integers(len(_BINARY_FAMILIES)))]
+        fam_b = _BINARY_FAMILIES[int(rng.integers(len(_BINARY_FAMILIES)))]
+        rule_a, _ = _make_rule(fam_a, rng)
+        rule_b, _ = _make_rule(fam_b, rng)
+        comp = "compose_and" if i % 2 == 0 else "compose_xor"
+        rule = {
+            "fam_a": fam_a,
+            "rule_a": rule_a,
+            "fam_b": fam_b,
+            "rule_b": rule_b,
+            "answer_perm": [int(x) for x in rng.permutation(2)],
+        }
+        tasks.append(Task(f"bbh{i:02d}", comp, base + i, 2, rule))
+    return tasks
+
+
+def generate_mixture(
+    tasks: list[Task], rng: np.random.Generator, n: int
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Sample a mixed batch across tasks. Returns (tokens, labels, task_idx)."""
+    per = np.array_split(np.arange(n), len(tasks))
+    toks, labs, tids = [], [], []
+    for t, idxs in zip(tasks, per):
+        if len(idxs) == 0:
+            continue
+        x, y = t.generate(rng, len(idxs))
+        toks.append(x)
+        labs.append(y)
+        tids.append(np.full(len(idxs), tasks.index(t), dtype=np.int32))
+    tokens = np.concatenate(toks)
+    labels = np.concatenate(labs)
+    tid = np.concatenate(tids)
+    order = rng.permutation(len(tokens))
+    return tokens[order], labels[order], tid[order]

@@ -1,0 +1,336 @@
+"""Build-time training: pretrain the µT family, fine-tune experts.
+
+Runs ONCE under ``make artifacts`` (idempotent — existing outputs are
+skipped) and never on the request path. Produces, per scale:
+
+  artifacts/models/{scale}/base.npz        pretrained base parameters
+  artifacts/models/{scale}/lora_init.npz   shared LoRA init (A random, B=0)
+  artifacts/models/{scale}/meta.json       config + canonical input order
+  artifacts/experts/{scale}/{task}.{method}[.r{rank}].npz
+                                           task vector θ_ft − θ_init
+  artifacts/experts/{scale}/{task}.{method}[.r{rank}].meta.json
+  artifacts/eval/*.npz                     eval sets (tokens/labels/classes)
+  artifacts/figure3.json                   PEFT-zoo accuracies (Figure 3)
+
+CLI: ``python -m compile.train [--scales xs,s,m,l] [--stage all]``.
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import config as C
+from . import model as M
+from . import tasks as T
+
+
+def _log(msg: str) -> None:
+    print(f"[train {time.strftime('%H:%M:%S')}] {msg}", flush=True)
+
+
+def _save_npz(path: str, params: dict) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    np.savez(path, **{k: np.asarray(v) for k, v in params.items()})
+    # np.savez appends .npz if missing; we always pass the full name.
+
+
+def _load_npz(path: str) -> dict:
+    with np.load(path) as z:
+        return {k: jnp.asarray(z[k]) for k in z.files}
+
+
+# ---------------------------------------------------------------------------
+# Pretraining
+# ---------------------------------------------------------------------------
+
+
+def pretrain(scale: str, seed: int = 0) -> dict:
+    cfg = C.SCALES[scale]
+    pre = C.preset()
+    out = os.path.join(C.model_dir(scale), "base.npz")
+    if os.path.exists(out):
+        return _load_npz(out)
+
+    steps = C.pretrain_steps(scale)
+    _log(f"pretraining µT-{scale} ({cfg.n_layers}L d{cfg.d_model}) "
+         f"for {steps} steps")
+    params = M.init_base_params(cfg, seed=seed)
+    suite = T.pretrain_tasks()
+    rng = np.random.default_rng(seed + 100)
+    opt = M.adam_init(params)
+
+    @jax.jit
+    def step(params, opt, tokens, answers):
+        loss, grads = jax.value_and_grad(
+            lambda p: M.loss_fn(cfg, p, tokens, answers)
+        )(params)
+        params, opt = M.adam_update(params, grads, opt, pre.lr_pretrain)
+        return params, opt, loss
+
+    for i in range(steps):
+        tokens, labels, _ = T.generate_mixture(suite, rng, pre.pretrain_batch)
+        answers = C.ANSWER_BASE + labels
+        params, opt, loss = step(
+            params, opt, jnp.asarray(tokens), jnp.asarray(answers)
+        )
+        if i % 200 == 0 or i == steps - 1:
+            _log(f"  µT-{scale} step {i}: loss {float(loss):.4f}")
+
+    _save_npz(out, params)
+    meta = {
+        "scale": scale,
+        "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers,
+        "n_heads": cfg.n_heads,
+        "d_ff": cfg.d_ff,
+        "lora_rank": cfg.lora_rank,
+        "vocab": C.VOCAB,
+        "seq_len": C.SEQ_LEN,
+        "n_params": M.param_count(params),
+        "base_order": M.export_order(params),
+        "lora_order": M.export_order(M.init_lora_params(cfg)),
+        "ia3_order": M.export_order(M.init_ia3_params(cfg)),
+    }
+    with open(os.path.join(C.model_dir(scale), "meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Fine-tuning
+# ---------------------------------------------------------------------------
+
+
+def _finetune_adapter(cfg, base, task, adapters, kind, lr, steps, batch, seed):
+    """Train `adapters` (lora or ia3 dict) on `task`; returns θ_ft."""
+    rng = np.random.default_rng(seed)
+
+    @jax.jit
+    def step(ad, opt, tokens, answers):
+        def loss(a):
+            kw = {kind: a}
+            return M.loss_fn(cfg, base, tokens, answers, **kw)
+
+        lval, grads = jax.value_and_grad(loss)(ad)
+        ad, opt = M.adam_update(ad, grads, opt, lr)
+        return ad, opt, lval
+
+    opt = M.adam_init(adapters)
+    for _ in range(steps):
+        tokens, labels = task.generate(rng, batch)
+        ad_ans = C.ANSWER_BASE + labels
+        adapters, opt, _ = step(
+            adapters, opt, jnp.asarray(tokens), jnp.asarray(ad_ans)
+        )
+    return adapters
+
+
+def _finetune_full(cfg, base, task, lr, steps, batch, seed):
+    rng = np.random.default_rng(seed)
+
+    @jax.jit
+    def step(p, opt, tokens, answers):
+        lval, grads = jax.value_and_grad(
+            lambda q: M.loss_fn(cfg, q, tokens, answers)
+        )(p)
+        p, opt = M.adam_update(p, grads, opt, lr)
+        return p, opt, lval
+
+    params = dict(base)
+    opt = M.adam_init(params)
+    for _ in range(steps):
+        tokens, labels = task.generate(rng, batch)
+        params, opt, _ = step(
+            params, opt, jnp.asarray(tokens),
+            jnp.asarray(C.ANSWER_BASE + labels),
+        )
+    return params
+
+
+def eval_task_accuracy(cfg, base, task, n, seed=1234, lora=None, ia3=None):
+    rng = np.random.default_rng(seed)
+    tokens, labels = task.generate(rng, n)
+    logits = M.forward(cfg, base, jnp.asarray(tokens), lora=lora, ia3=ia3)
+    return M.rank_accuracy(logits, jnp.asarray(labels), task.n_classes)
+
+
+def finetune_expert(scale: str, task: T.Task, method: str, seed: int = 0,
+                    rank: int | None = None) -> None:
+    """Fine-tune one expert and save its task vector."""
+    cfg = C.SCALES[scale]
+    pre = C.preset()
+    suffix = f".r{rank}" if rank else ""
+    stem = os.path.join(C.experts_dir(scale), f"{task.name}.{method}{suffix}")
+    if os.path.exists(stem + ".npz"):
+        return
+    base = pretrain(scale)
+
+    t0 = time.time()
+    if method == "lora":
+        init = M.init_lora_params(cfg, rank=rank)
+        ft = _finetune_adapter(cfg, base, task, dict(init), "lora",
+                               pre.lr_lora, pre.finetune_steps,
+                               pre.batch_size, seed + 11)
+        tv = {k: ft[k] - init[k] for k in ft}
+        acc = eval_task_accuracy(cfg, base, task, pre.eval_examples, lora=ft)
+    elif method == "ia3":
+        init = M.init_ia3_params(cfg)
+        ft = _finetune_adapter(cfg, base, task, dict(init), "ia3",
+                               pre.lr_ia3, pre.finetune_steps,
+                               pre.batch_size, seed + 13)
+        tv = {k: ft[k] - init[k] for k in ft}
+        acc = eval_task_accuracy(cfg, base, task, pre.eval_examples, ia3=ft)
+    elif method == "full":
+        ft = _finetune_full(cfg, base, task, pre.lr_full,
+                            pre.finetune_steps, pre.batch_size, seed + 17)
+        tv = {k: ft[k] - base[k] for k in ft}
+        acc = eval_task_accuracy(cfg, ft, task, pre.eval_examples)
+    else:
+        raise ValueError(f"unknown method {method!r}")
+
+    _save_npz(stem + ".npz", tv)
+    flat = np.concatenate([np.asarray(v).reshape(-1) for v in tv.values()])
+    meta = {
+        "task": task.name,
+        "method": method,
+        "scale": scale,
+        "rank": rank or (cfg.lora_rank if method == "lora" else None),
+        "n_classes": task.n_classes,
+        "own_task_acc": acc,
+        "n_params": int(flat.size),
+        "tv_mean": float(flat.mean()),
+        "tv_std": float(flat.std()),
+        "tv_max": float(flat.max()),
+        "tv_min": float(flat.min()),
+        "train_seconds": round(time.time() - t0, 2),
+    }
+    with open(stem + ".meta.json", "w") as f:
+        json.dump(meta, f, indent=1)
+    _log(f"  expert {scale}/{task.name}.{method}{suffix}: "
+         f"own-task acc {acc:.3f} ({meta['train_seconds']}s)")
+
+
+# ---------------------------------------------------------------------------
+# Shared inits + eval sets
+# ---------------------------------------------------------------------------
+
+
+def save_inits(scale: str) -> None:
+    cfg = C.SCALES[scale]
+    lp = os.path.join(C.model_dir(scale), "lora_init.npz")
+    if not os.path.exists(lp):
+        _save_npz(lp, M.init_lora_params(cfg))
+    ip = os.path.join(C.model_dir(scale), "ia3_init.npz")
+    if not os.path.exists(ip):
+        _save_npz(ip, M.init_ia3_params(cfg))
+    for rank in EXTRA_LORA_RANKS:
+        rp = os.path.join(C.model_dir(scale), f"lora_init.r{rank}.npz")
+        if not os.path.exists(rp):
+            _save_npz(rp, M.init_lora_params(cfg, rank=rank))
+
+
+def _save_eval_set(name: str, tasks: list, n_per_task: int, seed: int) -> None:
+    path = os.path.join(C.eval_dir(), f"{name}.npz")
+    if os.path.exists(path):
+        return
+    rng = np.random.default_rng(seed)
+    toks, labs, ncls = [], [], []
+    for t in tasks:
+        x, y = t.generate(rng, n_per_task)
+        toks.append(x)
+        labs.append(y)
+        ncls.append(np.full(n_per_task, t.n_classes, dtype=np.int64))
+    os.makedirs(C.eval_dir(), exist_ok=True)
+    np.savez(
+        path,
+        tokens=np.concatenate(toks).astype(np.int32),
+        labels=np.concatenate(labs).astype(np.int64),
+        n_classes=np.concatenate(ncls),
+    )
+    _log(f"  eval set {name}: {sum(len(t) for t in toks)} examples")
+
+
+def save_eval_sets() -> None:
+    pre = C.preset()
+    n = pre.eval_examples
+    _save_eval_set("heldout_bench", T.heldout_bench_tasks(), n // 2, 501)
+    for t in T.instruct_tasks():
+        _save_eval_set(f"task_{t.name}", [t], n, 502)
+    for t in T.glue_tasks():
+        _save_eval_set(f"glue_{t.name}", [t], n, 503)
+        _save_eval_set(f"glue_{t.name}_val", [t], n // 2, 504)
+    for t in T.bbh_tasks():
+        _save_eval_set(f"bbh_{t.name}", [t], n, 505)
+        _save_eval_set(f"bbh_{t.name}_fewshot", [t], pre.fewshot_examples, 506)
+    _save_eval_set("heldout_bench_val", T.heldout_bench_tasks(), n // 4, 507)
+
+
+# ---------------------------------------------------------------------------
+# Orchestration
+# ---------------------------------------------------------------------------
+
+EXTRA_LORA_RANKS = [4, 2]  # Table 10 analog (ranks r, r/2, r/4 via cfg.rank)
+
+# Which scales get which experts (keeps single-core build time sane).
+INSTRUCT_SCALES = ["xs", "s", "m", "l"]   # Table 1 / Figure 2
+GLUE_SCALES = ["xs", "s", "m"]            # Table 3 (T5-Base/Large, T0-3B analog)
+FULLFT_SCALES = ["xs", "s"]               # Table 4
+BBH_SCALE = "s"                           # Figure 4
+RANK_SCALE = "m"                          # Table 10
+
+
+def build_all(scales: list[str]) -> None:
+    save_eval_sets()
+    for scale in scales:
+        pretrain(scale)
+        save_inits(scale)
+
+    for scale in [s for s in INSTRUCT_SCALES if s in scales]:
+        for task in T.instruct_tasks():
+            finetune_expert(scale, task, "lora")
+    # (IA)3 points for Figure 3 on the zoo tasks.
+    for task in T.instruct_tasks()[:4]:
+        finetune_expert("s", task, "ia3")
+
+    for scale in [s for s in GLUE_SCALES if s in scales]:
+        for task in T.glue_tasks():
+            finetune_expert(scale, task, "lora")
+            finetune_expert(scale, task, "ia3")
+
+    for scale in [s for s in FULLFT_SCALES if s in scales]:
+        for task in T.glue_tasks():
+            finetune_expert(scale, task, "full")
+
+    if BBH_SCALE in scales:
+        # LoraHub expert pool: experts for all pretrain-era rules.
+        for task in T.pretrain_tasks()[: 12]:
+            finetune_expert(BBH_SCALE, task, "lora")
+
+    if RANK_SCALE in scales:
+        for task in T.instruct_tasks()[:5]:
+            for rank in EXTRA_LORA_RANKS:
+                finetune_expert(RANK_SCALE, task, "lora", rank=rank)
+
+    # Figure 3 PEFT zoo (trained in-python; sizes+accs recorded to JSON).
+    from . import peft_zoo
+
+    peft_zoo.build_figure3(scales)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scales", default=",".join(C.SCALE_ORDER))
+    args = ap.parse_args()
+    scales = [s for s in args.scales.split(",") if s]
+    t0 = time.time()
+    build_all(scales)
+    _log(f"artifacts complete in {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

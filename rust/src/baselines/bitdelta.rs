@@ -1,0 +1,83 @@
+//! BitDelta (Liu et al., 2024), "No Training" variant — Appendix C.1
+//! comparator.
+//!
+//! BitDelta keeps *every* parameter's sign (density 1, values ±α) with
+//! the scale set to the mean absolute value of the task vector. Unlike
+//! STC there is no sparsification step, so the encoded form is a single
+//! dense bitmask: 1 bit/param + scalar.
+
+use crate::compeft::ternary::TernaryVector;
+
+/// Compress `tau` with BitDelta (No Training).
+pub fn bitdelta_compress(tau: &[f32]) -> TernaryVector {
+    if tau.is_empty() {
+        return TernaryVector::empty(0);
+    }
+    let mean_abs =
+        tau.iter().map(|x| x.abs() as f64).sum::<f64>() / tau.len() as f64;
+    let mut plus = Vec::new();
+    let mut minus = Vec::new();
+    for (i, &v) in tau.iter().enumerate() {
+        // Zero entries get sign +1 by convention (sgn(0) treated as +):
+        // BitDelta has no zero state — every weight is ±α.
+        if v >= 0.0 {
+            plus.push(i as u32);
+        } else {
+            minus.push(i as u32);
+        }
+    }
+    TernaryVector { len: tau.len(), scale: mean_abs as f32, plus, minus }
+}
+
+/// BitDelta wire size: one dense bitmask (1 bit/param) + 16-bit scalar.
+/// (Paper Appendix C.1 stores BitDelta with a bitmask.)
+pub fn bitdelta_bytes(d: usize) -> u64 {
+    (d as u64 + 16).div_ceil(8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn density_is_one() {
+        let tau = [0.5f32, -0.25, 0.0, 2.0];
+        let t = bitdelta_compress(&tau);
+        assert_eq!(t.nnz(), 4);
+        assert!((t.density() - 1.0).abs() < 1e-12);
+        assert_eq!(t.plus, vec![0, 2, 3]);
+        assert_eq!(t.minus, vec![1]);
+    }
+
+    #[test]
+    fn scale_is_mean_abs() {
+        let tau = [1.0f32, -3.0, 0.0, 4.0];
+        let t = bitdelta_compress(&tau);
+        assert!((t.scale - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        // 70B params → ~8.75 GB at 1 bit/param... scaled: 1M → 125 KB.
+        assert_eq!(bitdelta_bytes(1_000_000), 125_002);
+    }
+
+    #[test]
+    fn reconstruction_error_vs_stc() {
+        // On a sparse-heavy task vector, STC (which zeroes small entries)
+        // should reconstruct better in L2 than BitDelta's all-±α.
+        use crate::util::{prop, rng::Pcg};
+        let mut rng = Pcg::seed(8);
+        let tau = prop::task_vector_like(&mut rng, 10_000);
+        let bd = bitdelta_compress(&tau);
+        let stc = crate::baselines::stc::stc_compress(&tau, 0.2);
+        let l2 = |t: &TernaryVector| -> f64 {
+            t.to_dense()
+                .iter()
+                .zip(&tau)
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+        };
+        assert!(l2(&stc) < l2(&bd), "stc={} bitdelta={}", l2(&stc), l2(&bd));
+    }
+}

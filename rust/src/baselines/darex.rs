@@ -1,0 +1,96 @@
+//! DARE / DAREx-q (Yu et al., 2023; Deng et al., 2024) — Appendix C.1
+//! comparator.
+//!
+//! DARE drops each task-vector entry independently with probability `p`
+//! and rescales survivors by `1/q` (q = 1−p) to keep the update
+//! unbiased in expectation. DAREx-q additionally tunes the inverse
+//! scaling `1/q_v` per layer on labelled data; we expose `q_scale` so
+//! the bench harness can sweep it per part, and default to the unbiased
+//! `1/q`.
+
+use crate::baselines::sparse_float::SparseFloat;
+use crate::util::rng::Pcg;
+
+/// Configuration for a DARE compression pass.
+#[derive(Clone, Copy, Debug)]
+pub struct DareConfig {
+    /// Drop probability p (paper uses 0.95 and 0.99).
+    pub drop_p: f64,
+    /// Multiplier applied to surviving entries. `None` → unbiased 1/q.
+    pub q_scale: Option<f64>,
+}
+
+impl Default for DareConfig {
+    fn default() -> Self {
+        DareConfig { drop_p: 0.95, q_scale: None }
+    }
+}
+
+/// Compress `tau` with DARE(x): random drop + rescale.
+pub fn dare_compress(tau: &[f32], cfg: &DareConfig, rng: &mut Pcg) -> SparseFloat {
+    assert!((0.0..1.0).contains(&cfg.drop_p), "drop_p in [0,1)");
+    let q = 1.0 - cfg.drop_p;
+    let scale = cfg.q_scale.unwrap_or(1.0 / q) as f32;
+    let mut idx = Vec::new();
+    let mut val = Vec::new();
+    for (i, &v) in tau.iter().enumerate() {
+        if v != 0.0 && rng.next_f64() >= cfg.drop_p {
+            idx.push(i as u32);
+            val.push(v * scale);
+        }
+    }
+    SparseFloat { len: tau.len(), idx, val }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn drop_rate_matches_p() {
+        let mut rng = Pcg::seed(12);
+        let tau = vec![1.0f32; 100_000];
+        let s = dare_compress(&tau, &DareConfig { drop_p: 0.95, q_scale: None }, &mut rng);
+        let kept = s.nnz() as f64 / tau.len() as f64;
+        assert!((kept - 0.05).abs() < 0.005, "kept={kept}");
+    }
+
+    #[test]
+    fn unbiased_in_expectation() {
+        let mut rng = Pcg::seed(99);
+        let tau = prop::task_vector_like(&mut rng, 200_000);
+        let sum_orig: f64 = tau.iter().map(|&x| x as f64).sum();
+        let s = dare_compress(&tau, &DareConfig::default(), &mut rng);
+        let sum_dare: f64 = s.val.iter().map(|&x| x as f64).sum();
+        let sigma = crate::util::stats::std_f32(&tau);
+        // E[sum] preserved; tolerance ~ several std errors of the estimator.
+        let tol = 6.0 * sigma * (tau.len() as f64).sqrt() / (0.05f64).sqrt();
+        assert!(
+            (sum_orig - sum_dare).abs() < tol.max(1e-3),
+            "orig={sum_orig} dare={sum_dare} tol={tol}"
+        );
+    }
+
+    #[test]
+    fn custom_q_scale_applies() {
+        let mut rng = Pcg::seed(1);
+        let tau = vec![2.0f32; 1000];
+        let s = dare_compress(
+            &tau,
+            &DareConfig { drop_p: 0.5, q_scale: Some(3.0) },
+            &mut rng,
+        );
+        for &v in &s.val {
+            assert!((v - 6.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let tau = prop::task_vector_like(&mut Pcg::seed(5), 5000);
+        let a = dare_compress(&tau, &DareConfig::default(), &mut Pcg::seed(7));
+        let b = dare_compress(&tau, &DareConfig::default(), &mut Pcg::seed(7));
+        assert_eq!(a, b);
+    }
+}

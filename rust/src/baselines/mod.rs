@@ -1,0 +1,45 @@
+//! Comparator methods from the paper's ablation (§4.1) and extended
+//! baseline study (Appendix C.1):
+//!
+//! | Method    | Sparsify      | Quantize             | Scale                  |
+//! |-----------|---------------|----------------------|------------------------|
+//! | ComPEFT   | top-k by |τ|  | ternary              | α·σ(τ), α tuned        |
+//! | STC       | top-k by |τ|  | ternary              | mean |τ| of kept       |
+//! | Pruned    | top-k by |τ|  | none (keeps values)  | 1                      |
+//! | BitDelta  | none (k = 1)  | binary sign          | mean |τ| (no training) |
+//! | DAREx-q   | random drop p | none (keeps values)  | 1/q per-layer rescale  |
+//!
+//! All functions are training-free, mirroring the paper's setting
+//! ("BitDelta (Training)" learns α by SGD and is reported in the paper
+//! as not directly comparable; we implement the No-Training variant).
+
+pub mod bitdelta;
+pub mod darex;
+pub mod sparse_float;
+pub mod stc;
+
+pub use sparse_float::SparseFloat;
+
+use crate::compeft::sparsify::prune_to_topk;
+
+/// The `Pruned` ablation (§4.1): top-k sparsification only — original
+/// magnitudes kept, no ternarization, no scaling.
+pub fn pruned(tau: &[f32], density: f64) -> SparseFloat {
+    SparseFloat::from_dense(&prune_to_topk(tau, density))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pruned_keeps_values_and_density() {
+        let tau = [0.1f32, -5.0, 0.2, 3.0, 0.0, -1.0, 0.4, 2.0];
+        let p = pruned(&tau, 0.5);
+        assert_eq!(p.nnz(), 4);
+        let d = p.to_dense();
+        assert_eq!(d[1], -5.0);
+        assert_eq!(d[3], 3.0);
+        assert_eq!(d[0], 0.0);
+    }
+}

@@ -1,0 +1,76 @@
+//! Sparse float (COO) vectors for baselines that keep original values
+//! (`Pruned`, DAREx). Storage accounting follows the paper's Appendix
+//! C.1, which stores DAREx checkpoints as `coo_sparse` matrices: one
+//! 32-bit index plus one 16-bit value per nonzero.
+
+/// COO sparse float vector.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseFloat {
+    pub len: usize,
+    /// Sorted nonzero indices.
+    pub idx: Vec<u32>,
+    /// Values at those indices.
+    pub val: Vec<f32>,
+}
+
+impl SparseFloat {
+    pub fn from_dense(dense: &[f32]) -> SparseFloat {
+        let mut idx = Vec::new();
+        let mut val = Vec::new();
+        for (i, &v) in dense.iter().enumerate() {
+            if v != 0.0 {
+                idx.push(i as u32);
+                val.push(v);
+            }
+        }
+        SparseFloat { len: dense.len(), idx, val }
+    }
+
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.len];
+        for (&i, &v) in self.idx.iter().zip(&self.val) {
+            out[i as usize] = v;
+        }
+        out
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.idx.len()
+    }
+
+    /// Storage bytes in the paper's COO accounting: 32-bit index +
+    /// 16-bit (fp16) value per nonzero.
+    pub fn coo_bytes(&self) -> u64 {
+        (self.nnz() as u64 * (32 + 16)).div_ceil(8)
+    }
+
+    /// Accumulate `weight · v` into a dense buffer.
+    pub fn add_into(&self, out: &mut [f32], weight: f32) {
+        assert_eq!(out.len(), self.len);
+        for (&i, &v) in self.idx.iter().zip(&self.val) {
+            out[i as usize] += weight * v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dense = vec![0.0, 1.5, 0.0, -2.0, 0.0];
+        let s = SparseFloat::from_dense(&dense);
+        assert_eq!(s.nnz(), 2);
+        assert_eq!(s.to_dense(), dense);
+        assert_eq!(s.coo_bytes(), 12);
+    }
+
+    #[test]
+    fn add_into_weights() {
+        let s = SparseFloat::from_dense(&[0.0, 2.0, 0.0]);
+        let mut buf = vec![1.0f32; 3];
+        s.add_into(&mut buf, 0.5);
+        assert_eq!(buf, vec![1.0, 2.0, 1.0]);
+    }
+}

@@ -1,0 +1,77 @@
+//! Sparse Ternary Compression (Sattler et al., 2019) — the closest
+//! prior method and the paper's main ablation comparator (§4.1).
+//!
+//! STC sparsifies to the top-k magnitudes like ComPEFT, but quantizes
+//! with the *mean magnitude of the kept entries* rather than a tuned
+//! α·σ. The paper shows this fixed scale is what costs STC its accuracy
+//! at small model scales (Figure 5).
+
+use crate::compeft::sparsify::topk_by_magnitude;
+use crate::compeft::ternary::TernaryVector;
+
+/// Compress `tau` with STC at density `k`.
+pub fn stc_compress(tau: &[f32], density: f64) -> TernaryVector {
+    if tau.is_empty() {
+        return TernaryVector::empty(0);
+    }
+    let split = topk_by_magnitude(tau, density);
+    let kept = split.plus.iter().chain(&split.minus);
+    let mut sum = 0.0f64;
+    let mut n = 0usize;
+    for &i in kept {
+        sum += tau[i as usize].abs() as f64;
+        n += 1;
+    }
+    let scale = if n == 0 { 0.0 } else { (sum / n as f64) as f32 };
+    TernaryVector { len: tau.len(), scale, plus: split.plus, minus: split.minus }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compeft::compress::{compress_vector, CompressConfig};
+    use crate::util::prop;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn scale_is_mean_kept_magnitude() {
+        let tau = [1.0f32, -3.0, 0.1, 0.2];
+        let t = stc_compress(&tau, 0.5); // keeps 1.0 and -3.0
+        assert!((t.scale - 2.0).abs() < 1e-6);
+        assert_eq!(t.plus, vec![0]);
+        assert_eq!(t.minus, vec![1]);
+    }
+
+    #[test]
+    fn same_support_as_compeft() {
+        // STC and ComPEFT share the sparsification step; only the scale
+        // differs (Figure 5's comparison is apples-to-apples on support).
+        let mut rng = Pcg::seed(17);
+        let tau = prop::task_vector_like(&mut rng, 2000);
+        let s = stc_compress(&tau, 0.1);
+        let c = compress_vector(
+            &tau,
+            &CompressConfig { density: 0.1, alpha: 1.0, ..Default::default() },
+        );
+        assert_eq!(s.plus, c.plus);
+        assert_eq!(s.minus, c.minus);
+        assert_ne!(s.scale, c.scale);
+    }
+
+    #[test]
+    fn stc_scale_exceeds_sigma_at_low_density() {
+        // Mean of top-5% magnitudes is far above σ for gaussian-ish τ —
+        // exactly why a tuned α is needed to match it.
+        let mut rng = Pcg::seed(3);
+        let tau: Vec<f32> = (0..10_000).map(|_| rng.normal() as f32).collect();
+        let s = stc_compress(&tau, 0.05);
+        let sigma = crate::util::stats::std_f32(&tau) as f32;
+        assert!(s.scale > 1.5 * sigma, "scale={} sigma={sigma}", s.scale);
+    }
+
+    #[test]
+    fn empty_input() {
+        let t = stc_compress(&[], 0.5);
+        assert_eq!(t.len, 0);
+    }
+}

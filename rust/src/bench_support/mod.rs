@@ -1,0 +1,263 @@
+//! Shared plumbing for the paper-reproduction benches (`benches/*.rs`).
+//!
+//! Each bench regenerates one table/figure (DESIGN.md §5). The common
+//! work — loading expert task vectors, running the (k, α) validation
+//! sweep of §3.1, applying compressed task vectors, entropy-based size
+//! accounting — lives here so benches stay declarative and the logic is
+//! unit-testable.
+
+use crate::compeft::compress::{
+    compress_params, decompress_params, CompressConfig, Granularity,
+};
+use crate::compeft::format::{to_bytes, Encoding};
+use crate::coordinator::registry::ExpertMethod;
+use crate::eval::{evaluate, EvalSet};
+use crate::runtime::{AdapterKind, ModelBundle, Runtime, };
+use crate::tensor::ParamSet;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// The paper's hyper-parameter grid (§3.1).
+pub const DENSITIES: [f64; 5] = [0.05, 0.10, 0.20, 0.30, 0.50];
+pub const ALPHAS: [f64; 9] = [0.5, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 8.0, 10.0];
+
+/// Evaluation batch exported by aot.py.
+pub const EVAL_BATCH: usize = 64;
+
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("COMPEFT_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| {
+            Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+        })
+}
+
+/// Abort politely when `make artifacts` has not run.
+pub fn require_artifacts() -> PathBuf {
+    let dir = artifacts_dir();
+    if !dir.join("models").exists() {
+        eprintln!(
+            "bench requires artifacts — run `make artifacts` first (dir: {})",
+            dir.display()
+        );
+        std::process::exit(0);
+    }
+    dir
+}
+
+/// A loaded expert task vector + its metadata.
+#[derive(Clone, Debug)]
+pub struct Expert {
+    pub task: String,
+    pub method: ExpertMethod,
+    pub scale: String,
+    pub tv: ParamSet,
+    pub own_task_acc: f64,
+    pub path: PathBuf,
+}
+
+/// Load `{task}.{method}[.r{rank}].npz` + meta.
+pub fn load_expert(
+    artifacts: &Path,
+    scale: &str,
+    task: &str,
+    method: &str,
+    rank: Option<usize>,
+) -> Result<Expert> {
+    // NOTE: filenames contain dots ("alpaca.lora.npz"), so build them
+    // textually — Path::with_extension would clobber ".lora".
+    let suffix = rank.map(|r| format!(".r{r}")).unwrap_or_default();
+    let dir = artifacts.join("experts").join(scale);
+    let stem = format!("{task}.{method}{suffix}");
+    let npz_path = dir.join(format!("{stem}.npz"));
+    let tv = ParamSet::load_npz(&npz_path)
+        .with_context(|| format!("expert {}", npz_path.display()))?;
+    let meta_path = dir.join(format!("{stem}.meta.json"));
+    let own = std::fs::read_to_string(&meta_path)
+        .ok()
+        .and_then(|s| Json::parse(&s).ok())
+        .and_then(|j| j.get("own_task_acc").and_then(|v| v.as_f64()))
+        .unwrap_or(f64::NAN);
+    Ok(Expert {
+        task: task.to_string(),
+        method: ExpertMethod::parse(method).context("method")?,
+        scale: scale.to_string(),
+        tv,
+        own_task_acc: own,
+        path: npz_path,
+    })
+}
+
+/// Map an expert method to its runtime kind + adapter init.
+pub fn kind_and_init<'a>(
+    bundle: &'a ModelBundle,
+    method: ExpertMethod,
+) -> (AdapterKind, &'a ParamSet) {
+    match method {
+        ExpertMethod::Lora => (AdapterKind::Lora, &bundle.lora_init),
+        ExpertMethod::Ia3 => (AdapterKind::Ia3, &bundle.ia3_init),
+        ExpertMethod::Full => (AdapterKind::Base, &bundle.base),
+    }
+}
+
+/// Evaluate an expert given its (possibly compressed) task vector.
+pub fn eval_tv(
+    bundle: &ModelBundle,
+    method: ExpertMethod,
+    tv: &ParamSet,
+    set: &EvalSet,
+) -> Result<f64> {
+    let (kind, init) = kind_and_init(bundle, method);
+    match method {
+        ExpertMethod::Full => {
+            let mut params = bundle.base.clone();
+            params.add_assign(tv)?;
+            evaluate(bundle, kind, EVAL_BATCH, None, Some(&params), set)
+        }
+        _ => {
+            let mut adapter = init.clone();
+            adapter.add_assign(tv)?;
+            evaluate(bundle, kind, EVAL_BATCH, Some(&adapter), None, set)
+        }
+    }
+}
+
+/// Reconstructed dense task vector after ComPEFT at (k, α).
+pub fn compress_tv(tv: &ParamSet, density: f64, alpha: f64) -> ParamSet {
+    let cfg = CompressConfig { density, alpha, granularity: Granularity::Global };
+    let c = compress_params(tv, &cfg);
+    decompress_params(&c, tv).expect("structure preserved")
+}
+
+/// Golomb-coded size in bytes of ComPEFT at (k, α) for this tv.
+pub fn compeft_bytes(tv: &ParamSet, density: f64, alpha: f64) -> u64 {
+    let cfg = CompressConfig { density, alpha, granularity: Granularity::Global };
+    let c = compress_params(tv, &cfg);
+    to_bytes(&c, Encoding::Golomb).len() as u64
+}
+
+/// One grid point of the validation sweep.
+#[derive(Clone, Copy, Debug)]
+pub struct SweepPoint {
+    pub density: f64,
+    pub alpha: f64,
+    pub val_acc: f64,
+}
+
+/// §3.1 hyper-parameter selection: evaluate every (k, α) on the
+/// validation set. The caller picks argmax (Table 1) or slices the grid
+/// (Figures 5/6).
+pub fn sweep(
+    bundle: &ModelBundle,
+    expert: &Expert,
+    val: &EvalSet,
+    densities: &[f64],
+    alphas: &[f64],
+) -> Result<Vec<SweepPoint>> {
+    let mut out = Vec::with_capacity(densities.len() * alphas.len());
+    for &density in densities {
+        for &alpha in alphas {
+            let ctv = compress_tv(&expert.tv, density, alpha);
+            let val_acc = eval_tv(bundle, expert.method, &ctv, val)?;
+            out.push(SweepPoint { density, alpha, val_acc });
+        }
+    }
+    Ok(out)
+}
+
+/// Best grid point by validation accuracy (ties → smaller density).
+pub fn best_point(points: &[SweepPoint]) -> SweepPoint {
+    *points
+        .iter()
+        .max_by(|a, b| {
+            (a.val_acc, -a.density)
+                .partial_cmp(&(b.val_acc, -b.density))
+                .unwrap()
+        })
+        .expect("non-empty sweep")
+}
+
+/// Load bundle + eval sets for a scale.
+pub fn load_bundle(artifacts: &Path, scale: &str) -> Result<(Runtime, ModelBundle)> {
+    let rt = Runtime::cpu()?;
+    let bundle = ModelBundle::load(&rt, artifacts, scale)?;
+    Ok((rt, bundle))
+}
+
+pub fn load_eval(artifacts: &Path, name: &str) -> Result<EvalSet> {
+    EvalSet::load(&artifacts.join("eval").join(format!("{name}.npz")))
+}
+
+/// Persist/load sweep results so repeated benches skip recomputation.
+pub fn sweep_cached(
+    bundle: &ModelBundle,
+    expert: &Expert,
+    val: &EvalSet,
+    cache_tag: &str,
+) -> Result<Vec<SweepPoint>> {
+    let dir = Path::new("target/bench/sweeps");
+    std::fs::create_dir_all(dir).ok();
+    let path = dir.join(format!("{cache_tag}.json"));
+    if let Ok(text) = std::fs::read_to_string(&path) {
+        if let Ok(Json::Arr(rows)) = Json::parse(&text) {
+            let pts: Vec<SweepPoint> = rows
+                .iter()
+                .filter_map(|r| {
+                    Some(SweepPoint {
+                        density: r.get("k")?.as_f64()?,
+                        alpha: r.get("alpha")?.as_f64()?,
+                        val_acc: r.get("val_acc")?.as_f64()?,
+                    })
+                })
+                .collect();
+            if pts.len() == DENSITIES.len() * ALPHAS.len() {
+                return Ok(pts);
+            }
+        }
+    }
+    let pts = sweep(bundle, expert, val, &DENSITIES, &ALPHAS)?;
+    let rows: Vec<Json> = pts
+        .iter()
+        .map(|p| {
+            let mut j = Json::obj();
+            j.set("k", Json::num(p.density))
+                .set("alpha", Json::num(p.alpha))
+                .set("val_acc", Json::num(p.val_acc));
+            j
+        })
+        .collect();
+    std::fs::write(&path, Json::Arr(rows).to_string()).ok();
+    Ok(pts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn best_point_prefers_accuracy_then_sparsity() {
+        let pts = vec![
+            SweepPoint { density: 0.5, alpha: 1.0, val_acc: 0.8 },
+            SweepPoint { density: 0.05, alpha: 2.0, val_acc: 0.9 },
+            SweepPoint { density: 0.2, alpha: 1.0, val_acc: 0.9 },
+        ];
+        let b = best_point(&pts);
+        assert_eq!(b.alpha, 2.0);
+        assert_eq!(b.density, 0.05); // tie on acc → sparser wins
+    }
+
+    #[test]
+    fn compress_tv_preserves_structure() {
+        use crate::tensor::Tensor;
+        use crate::util::{prop, rng::Pcg};
+        let mut rng = Pcg::seed(1);
+        let mut tv = ParamSet::new();
+        tv.insert("x", Tensor::new(vec![100], prop::task_vector_like(&mut rng, 100)));
+        let c = compress_tv(&tv, 0.2, 1.0);
+        assert_eq!(c.names(), tv.names());
+        assert_eq!(c.get("x").unwrap().shape, vec![100]);
+        let bytes = compeft_bytes(&tv, 0.2, 1.0);
+        assert!(bytes > 0 && bytes < tv.bytes_fp16());
+    }
+}

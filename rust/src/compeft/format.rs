@@ -1,0 +1,301 @@
+//! `.cpeft` — the on-disk / on-wire container for compressed experts.
+//!
+//! One file holds a whole [`CompressedParamSet`]: a header, the tensor
+//! layout table, and one payload record per part, each encoded as either
+//! Golomb (storage-optimal) or bitmask (compute-optimal) per §2.2. A
+//! CRC32 over everything after the header guards against truncated
+//! transfers — important because the serving path streams these over
+//! simulated links.
+//!
+//! ```text
+//! magic "CPFT" | version u16 | flags u16 | granularity u8 | encoding u8
+//! n_layout u32 | [ name, shape ]*            (layout table)
+//! n_parts u32  | [ name, payload_len u64, payload ]*
+//! crc32 u32                                   (over layout+parts)
+//! ```
+
+use crate::compeft::bitmask::MaskPair;
+use crate::compeft::compress::{CompressedParamSet, Granularity};
+use crate::compeft::golomb;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::Write as _;
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"CPFT";
+const VERSION: u16 = 1;
+
+/// Wire encoding for payload records.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Encoding {
+    /// Golomb/Rice gap coding — smallest (default for storage/transfer).
+    Golomb,
+    /// Two binary masks — larger but enables bitwise compute on load.
+    Bitmask,
+}
+
+impl Encoding {
+    fn tag(self) -> u8 {
+        match self {
+            Encoding::Golomb => 0,
+            Encoding::Bitmask => 1,
+        }
+    }
+
+    fn from_tag(t: u8) -> Result<Encoding> {
+        Ok(match t {
+            0 => Encoding::Golomb,
+            1 => Encoding::Bitmask,
+            other => bail!("unknown encoding tag {other}"),
+        })
+    }
+}
+
+// -- CRC32 (IEEE 802.3, reflected) -----------------------------------------
+
+fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut j = 0;
+        while j < 8 {
+            c = if c & 1 != 0 { 0xEDB88320 ^ (c >> 1) } else { c >> 1 };
+            j += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+/// CRC32 of a byte slice (IEEE polynomial).
+pub fn crc32(data: &[u8]) -> u32 {
+    let table = crc32_table();
+    let mut c = 0xFFFFFFFFu32;
+    for &b in data {
+        c = table[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFFFFFF
+}
+
+// -- serialization ----------------------------------------------------------
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn get_str(bytes: &[u8], pos: &mut usize) -> Result<String> {
+    let n = get_u32(bytes, pos)? as usize;
+    if *pos + n > bytes.len() {
+        bail!("truncated string");
+    }
+    let s = std::str::from_utf8(&bytes[*pos..*pos + n])?.to_string();
+    *pos += n;
+    Ok(s)
+}
+
+fn get_u32(bytes: &[u8], pos: &mut usize) -> Result<u32> {
+    if *pos + 4 > bytes.len() {
+        bail!("truncated u32");
+    }
+    let v = u32::from_le_bytes(bytes[*pos..*pos + 4].try_into()?);
+    *pos += 4;
+    Ok(v)
+}
+
+fn get_u64(bytes: &[u8], pos: &mut usize) -> Result<u64> {
+    if *pos + 8 > bytes.len() {
+        bail!("truncated u64");
+    }
+    let v = u64::from_le_bytes(bytes[*pos..*pos + 8].try_into()?);
+    *pos += 8;
+    Ok(v)
+}
+
+/// Serialize a compressed expert to `.cpeft` bytes.
+pub fn to_bytes(c: &CompressedParamSet, enc: Encoding) -> Vec<u8> {
+    let mut body = Vec::new();
+    // Layout table.
+    body.extend_from_slice(&(c.layout.len() as u32).to_le_bytes());
+    for (name, shape, offset) in &c.layout {
+        put_str(&mut body, name);
+        body.extend_from_slice(&(shape.len() as u32).to_le_bytes());
+        for &d in shape {
+            body.extend_from_slice(&(d as u64).to_le_bytes());
+        }
+        body.extend_from_slice(&(*offset as u64).to_le_bytes());
+    }
+    // Parts.
+    body.extend_from_slice(&(c.parts.len() as u32).to_le_bytes());
+    for (name, tern) in &c.parts {
+        put_str(&mut body, name);
+        let payload = match enc {
+            Encoding::Golomb => golomb::encode(tern),
+            Encoding::Bitmask => MaskPair::from_ternary(tern).to_bytes(),
+        };
+        body.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        body.extend_from_slice(&payload);
+    }
+
+    let mut out = Vec::with_capacity(body.len() + 16);
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&0u16.to_le_bytes()); // flags
+    out.push(match c.granularity {
+        Granularity::Global => 0,
+        Granularity::PerTensor => 1,
+    });
+    out.push(enc.tag());
+    out.extend_from_slice(&body);
+    out.extend_from_slice(&crc32(&body).to_le_bytes());
+    out
+}
+
+/// Parse `.cpeft` bytes.
+pub fn from_bytes(bytes: &[u8]) -> Result<(CompressedParamSet, Encoding)> {
+    if bytes.len() < 14 || &bytes[..4] != MAGIC {
+        bail!("not a .cpeft file");
+    }
+    let version = u16::from_le_bytes(bytes[4..6].try_into()?);
+    if version != VERSION {
+        bail!("unsupported .cpeft version {version}");
+    }
+    let granularity = match bytes[8] {
+        0 => Granularity::Global,
+        1 => Granularity::PerTensor,
+        g => bail!("unknown granularity {g}"),
+    };
+    let enc = Encoding::from_tag(bytes[9])?;
+
+    let body = &bytes[10..bytes.len() - 4];
+    let stored_crc = u32::from_le_bytes(bytes[bytes.len() - 4..].try_into()?);
+    let actual = crc32(body);
+    if stored_crc != actual {
+        bail!("crc mismatch: stored {stored_crc:#x}, computed {actual:#x}");
+    }
+
+    let mut pos = 0usize;
+    let n_layout = get_u32(body, &mut pos)? as usize;
+    let mut layout = Vec::with_capacity(n_layout);
+    for _ in 0..n_layout {
+        let name = get_str(body, &mut pos)?;
+        let ndim = get_u32(body, &mut pos)? as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(get_u64(body, &mut pos)? as usize);
+        }
+        let offset = get_u64(body, &mut pos)? as usize;
+        layout.push((name, shape, offset));
+    }
+
+    let n_parts = get_u32(body, &mut pos)? as usize;
+    let mut parts = BTreeMap::new();
+    for _ in 0..n_parts {
+        let name = get_str(body, &mut pos)?;
+        let plen = get_u64(body, &mut pos)? as usize;
+        if pos + plen > body.len() {
+            bail!("truncated payload for part {name:?}");
+        }
+        let payload = &body[pos..pos + plen];
+        pos += plen;
+        let tern = match enc {
+            Encoding::Golomb => golomb::decode(payload)
+                .with_context(|| format!("part {name:?}"))?,
+            Encoding::Bitmask => MaskPair::from_bytes(payload)
+                .with_context(|| format!("part {name:?}"))?
+                .to_ternary(),
+        };
+        parts.insert(name, tern);
+    }
+
+    Ok((CompressedParamSet { granularity, layout, parts }, enc))
+}
+
+/// Write a compressed expert to disk.
+pub fn save(path: &Path, c: &CompressedParamSet, enc: Encoding) -> Result<u64> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let bytes = to_bytes(c, enc);
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    f.write_all(&bytes)?;
+    Ok(bytes.len() as u64)
+}
+
+/// Read a compressed expert from disk.
+pub fn load(path: &Path) -> Result<(CompressedParamSet, Encoding)> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("read {}", path.display()))?;
+    from_bytes(&bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compeft::compress::{compress_params, CompressConfig};
+    use crate::tensor::{ParamSet, Tensor};
+    use crate::util::prop;
+    use crate::util::rng::Pcg;
+
+    fn sample_compressed(granularity: Granularity) -> CompressedParamSet {
+        let mut rng = Pcg::seed(21);
+        let mut p = ParamSet::new();
+        p.insert("layer.0.w", Tensor::new(vec![16, 8], prop::task_vector_like(&mut rng, 128)));
+        p.insert("layer.1.w", Tensor::new(vec![64], prop::task_vector_like(&mut rng, 64)));
+        compress_params(&p, &CompressConfig { density: 0.2, alpha: 1.5, granularity })
+    }
+
+    #[test]
+    fn crc32_known_value() {
+        // CRC32("123456789") = 0xCBF43926 (standard check value).
+        assert_eq!(crc32(b"123456789"), 0xCBF43926);
+    }
+
+    #[test]
+    fn roundtrip_both_encodings_and_granularities() {
+        for g in [Granularity::Global, Granularity::PerTensor] {
+            for enc in [Encoding::Golomb, Encoding::Bitmask] {
+                let c = sample_compressed(g);
+                let bytes = to_bytes(&c, enc);
+                let (back, benc) = from_bytes(&bytes).unwrap();
+                assert_eq!(benc, enc);
+                assert_eq!(back, c, "granularity {g:?} encoding {enc:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn golomb_encoding_smaller_than_bitmask_at_low_density() {
+        let c = sample_compressed(Granularity::Global);
+        let g = to_bytes(&c, Encoding::Golomb).len();
+        let b = to_bytes(&c, Encoding::Bitmask).len();
+        assert!(g < b, "golomb {g} vs bitmask {b}");
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let c = sample_compressed(Granularity::Global);
+        let mut bytes = to_bytes(&c, Encoding::Golomb);
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        assert!(from_bytes(&bytes).is_err());
+        assert!(from_bytes(&bytes[..10]).is_err());
+        assert!(from_bytes(b"JUNKJUNKJUNKJUNK").is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("compeft_format_test");
+        let path = dir.join("e.cpeft");
+        let c = sample_compressed(Granularity::PerTensor);
+        let n = save(&path, &c, Encoding::Golomb).unwrap();
+        assert!(n > 0);
+        let (back, enc) = load(&path).unwrap();
+        assert_eq!(enc, Encoding::Golomb);
+        assert_eq!(back, c);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,23 @@
+//! The ComPEFT compression algorithm and its wire formats.
+//!
+//! * [`compress`] — Algorithm 1 (sparsify → ternary-quantize with α·σ)
+//! * [`ternary`] — the sparse ternary vector representation
+//! * [`sparsify`] — top-k-by-magnitude selection
+//! * [`golomb`] — storage-optimal Golomb/Rice gap coding (§2.2)
+//! * [`bitmask`] — compute-optimal two-binary-mask form (§2.2)
+//! * [`entropy`] — storage accounting (entropy bounds, ratios)
+//! * [`format`] — the `.cpeft` on-disk / on-wire container
+
+pub mod bitmask;
+pub mod compress;
+pub mod entropy;
+pub mod format;
+pub mod golomb;
+pub mod sparsify;
+pub mod ternary;
+
+pub use compress::{
+    compress_params, compress_vector, decompress_params, decompress_vector,
+    CompressConfig, CompressedParamSet, Granularity,
+};
+pub use ternary::TernaryVector;

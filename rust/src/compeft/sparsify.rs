@@ -1,0 +1,203 @@
+//! Step 1 of ComPEFT (Algorithm 1): magnitude-based top-k sparsification.
+//!
+//! Given a task vector `τ` and a density `k` (fraction in (0,1]), keep
+//! the signs of the top-⌈k·d⌉ entries by |τ| and zero the rest. We find
+//! the k-th largest magnitude with an in-place quickselect (O(d)
+//! expected) instead of a full sort — the dominant cost of compression
+//! at the 10⁷-parameter scale.
+
+/// Indices of the top-k-by-magnitude entries, split by sign.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TopKSplit {
+    /// Sorted indices of kept entries with τ > 0.
+    pub plus: Vec<u32>,
+    /// Sorted indices of kept entries with τ < 0.
+    pub minus: Vec<u32>,
+    /// The magnitude threshold actually used (kept iff |τ| >= threshold,
+    /// with ties broken toward keeping exactly ⌈k·d⌉ entries).
+    pub threshold: f32,
+}
+
+/// Number of entries to keep for a density `k` over `d` elements.
+pub fn keep_count(d: usize, k: f64) -> usize {
+    assert!(k > 0.0 && k <= 1.0, "density must be in (0,1], got {k}");
+    ((d as f64 * k).ceil() as usize).min(d)
+}
+
+/// Quickselect the `n`-th largest magnitude (0-based).
+///
+/// Perf (§Perf L3 iteration 1): |x| viewed as IEEE-754 bits is a
+/// monotone u32 key (sign bit cleared ⇒ integer order == float order),
+/// so we select on u32 — no `partial_cmp` closure, branch-free
+/// comparisons, ~2.4x faster end-to-end Algorithm 1 on 4M params.
+fn select_nth_largest_mag(tau: &[f32], n: usize) -> f32 {
+    let mut keys: Vec<u32> = tau.iter().map(|x| x.to_bits() & 0x7FFF_FFFF).collect();
+    let idx = keys.len() - 1 - n;
+    let (_, pivot, _) = keys.select_nth_unstable(idx);
+    f32::from_bits(*pivot)
+}
+
+/// Apply top-k sparsification to `tau`; returns kept indices split by
+/// sign. Zero entries are never kept (a zero carries no direction).
+pub fn topk_by_magnitude(tau: &[f32], k: f64) -> TopKSplit {
+    let d = tau.len();
+    if d == 0 {
+        return TopKSplit { plus: Vec::new(), minus: Vec::new(), threshold: 0.0 };
+    }
+    let keep = keep_count(d, k);
+
+    let threshold = select_nth_largest_mag(tau, keep - 1);
+
+    // First pass: strictly-above-threshold entries are always kept.
+    let mut plus = Vec::with_capacity(keep / 2 + 1);
+    let mut minus = Vec::with_capacity(keep / 2 + 1);
+    let mut kept = 0usize;
+    let mut ties: Vec<u32> = Vec::new();
+    for (i, &v) in tau.iter().enumerate() {
+        let a = v.abs();
+        if a > threshold {
+            if v > 0.0 {
+                plus.push(i as u32);
+            } else {
+                minus.push(i as u32);
+            }
+            kept += 1;
+        } else if a == threshold && a > 0.0 {
+            ties.push(i as u32);
+        }
+    }
+    // Fill remaining budget with tie entries in index order (deterministic).
+    for &i in ties.iter().take(keep.saturating_sub(kept)) {
+        if tau[i as usize] > 0.0 {
+            plus.push(i);
+        } else {
+            minus.push(i);
+        }
+    }
+    plus.sort_unstable();
+    minus.sort_unstable();
+    TopKSplit { plus, minus, threshold }
+}
+
+/// Dense mask variant used by the `Pruned` ablation baseline (§4.1):
+/// keep the *original values* of the top-k entries, zero the rest.
+pub fn prune_to_topk(tau: &[f32], k: f64) -> Vec<f32> {
+    let split = topk_by_magnitude(tau, k);
+    let mut out = vec![0.0f32; tau.len()];
+    for &i in &split.plus {
+        out[i as usize] = tau[i as usize];
+    }
+    for &i in &split.minus {
+        out[i as usize] = tau[i as usize];
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn keeps_exact_count() {
+        let tau = [0.1, -5.0, 0.2, 3.0, -0.05, 1.0, -2.0, 0.6];
+        let s = topk_by_magnitude(&tau, 0.5); // keep 4
+        assert_eq!(s.plus.len() + s.minus.len(), 4);
+        assert_eq!(s.plus, vec![3, 5]);
+        assert_eq!(s.minus, vec![1, 6]);
+    }
+
+    #[test]
+    fn keep_count_rounds_up() {
+        assert_eq!(keep_count(100, 0.05), 5);
+        assert_eq!(keep_count(10, 0.05), 1); // ceil(0.5)
+        assert_eq!(keep_count(7, 1.0), 7);
+    }
+
+    #[test]
+    fn ties_are_deterministic_and_exact() {
+        let tau = [1.0f32; 10];
+        let s = topk_by_magnitude(&tau, 0.3); // keep 3 of 10 equal values
+        assert_eq!(s.plus.len(), 3);
+        assert_eq!(s.plus, vec![0, 1, 2]); // lowest indices win
+    }
+
+    #[test]
+    fn zeros_never_kept() {
+        let tau = [0.0f32, 0.0, 1.0, 0.0];
+        let s = topk_by_magnitude(&tau, 1.0);
+        assert_eq!(s.plus, vec![2]);
+        assert!(s.minus.is_empty());
+    }
+
+    #[test]
+    fn prune_preserves_values() {
+        let tau = [0.1, -5.0, 0.2, 3.0];
+        let p = prune_to_topk(&tau, 0.5);
+        assert_eq!(p, vec![0.0, -5.0, 0.0, 3.0]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let s = topk_by_magnitude(&[], 0.5);
+        assert!(s.plus.is_empty() && s.minus.is_empty());
+    }
+
+    #[test]
+    fn prop_matches_full_sort_reference() {
+        prop::check(
+            "topk matches sort reference",
+            60,
+            |rng: &mut Pcg| {
+                let n = prop::sizes(rng).max(1).min(5000);
+                let k = [0.05, 0.1, 0.2, 0.5, 1.0][rng.range(0, 5)];
+                (prop::task_vector_like(rng, n), k)
+            },
+            |(tau, k)| {
+                let s = topk_by_magnitude(tau, *k);
+                let keep = keep_count(tau.len(), *k);
+                let nonzero = tau.iter().filter(|x| **x != 0.0).count();
+                let expect = keep.min(nonzero);
+                if s.plus.len() + s.minus.len() != expect {
+                    return Err(format!(
+                        "kept {} expected {expect}",
+                        s.plus.len() + s.minus.len()
+                    ));
+                }
+                // Every kept magnitude >= every dropped magnitude.
+                let mut kept_set = vec![false; tau.len()];
+                for &i in s.plus.iter().chain(&s.minus) {
+                    kept_set[i as usize] = true;
+                }
+                let min_kept = s
+                    .plus
+                    .iter()
+                    .chain(&s.minus)
+                    .map(|&i| tau[i as usize].abs())
+                    .fold(f32::INFINITY, f32::min);
+                let max_dropped = tau
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, _)| !kept_set[*i])
+                    .map(|(_, v)| v.abs())
+                    .fold(0.0f32, f32::max);
+                if expect > 0 && min_kept < max_dropped {
+                    return Err(format!("min kept {min_kept} < max dropped {max_dropped}"));
+                }
+                // Signs are consistent.
+                for &i in &s.plus {
+                    if tau[i as usize] <= 0.0 {
+                        return Err(format!("plus index {i} has non-positive value"));
+                    }
+                }
+                for &i in &s.minus {
+                    if tau[i as usize] >= 0.0 {
+                        return Err(format!("minus index {i} has non-negative value"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,234 @@
+//! The sparse ternary task-vector representation produced by ComPEFT.
+//!
+//! After Algorithm 1, a task vector `τ ∈ R^d` becomes
+//! `τ̃ = s · γ̃` with `s = α·σ(τ)` a single f32 scalar and
+//! `γ̃ ∈ {−1, 0, +1}^d` sparse. We store the nonzero coordinates as two
+//! sorted index lists (positive and negative), which converts losslessly
+//! to both wire encodings: Golomb gap coding (optimal storage, §2.2) and
+//! the two-binary-mask form (fast compute, §2.2).
+
+use anyhow::{bail, Result};
+
+/// Sparse ternary vector: `value[i] = scale * (+1 | -1 | 0)`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TernaryVector {
+    /// Logical length `d`.
+    pub len: usize,
+    /// The shared magnitude `s = α · σ(τ)`.
+    pub scale: f32,
+    /// Sorted indices with value `+scale`.
+    pub plus: Vec<u32>,
+    /// Sorted indices with value `-scale`.
+    pub minus: Vec<u32>,
+}
+
+impl TernaryVector {
+    pub fn empty(len: usize) -> TernaryVector {
+        TernaryVector { len, scale: 0.0, plus: Vec::new(), minus: Vec::new() }
+    }
+
+    /// Number of nonzero entries.
+    pub fn nnz(&self) -> usize {
+        self.plus.len() + self.minus.len()
+    }
+
+    /// Density k = nnz / d (the paper's `k`, as a fraction).
+    pub fn density(&self) -> f64 {
+        if self.len == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / self.len as f64
+        }
+    }
+
+    /// Validate invariants: sorted, unique, in-range, disjoint sign sets.
+    pub fn validate(&self) -> Result<()> {
+        for (name, v) in [("plus", &self.plus), ("minus", &self.minus)] {
+            for w in v.windows(2) {
+                if w[0] >= w[1] {
+                    bail!("{name} indices not strictly sorted at {}", w[0]);
+                }
+            }
+            if let Some(&last) = v.last() {
+                if last as usize >= self.len {
+                    bail!("{name} index {last} out of range {}", self.len);
+                }
+            }
+        }
+        // Disjointness check via merge walk.
+        let (mut i, mut j) = (0, 0);
+        while i < self.plus.len() && j < self.minus.len() {
+            match self.plus[i].cmp(&self.minus[j]) {
+                std::cmp::Ordering::Less => i += 1,
+                std::cmp::Ordering::Greater => j += 1,
+                std::cmp::Ordering::Equal => {
+                    bail!("index {} is in both plus and minus", self.plus[i])
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Materialize the dense f32 vector `s · γ̃`.
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.len];
+        for &i in &self.plus {
+            out[i as usize] = self.scale;
+        }
+        for &i in &self.minus {
+            out[i as usize] = -self.scale;
+        }
+        out
+    }
+
+    /// Add `s · γ̃` into an existing buffer (decompress-free apply).
+    pub fn add_into(&self, out: &mut [f32], weight: f32) {
+        assert_eq!(out.len(), self.len);
+        let s = self.scale * weight;
+        for &i in &self.plus {
+            out[i as usize] += s;
+        }
+        for &i in &self.minus {
+            out[i as usize] -= s;
+        }
+    }
+
+    /// All nonzero (index, sign) pairs in index order. Sign is ±1.
+    pub fn iter_nonzero(&self) -> impl Iterator<Item = (u32, i8)> + '_ {
+        MergeIter { plus: &self.plus, minus: &self.minus, i: 0, j: 0 }
+    }
+
+    /// Build from a dense slice: every entry with |x| > 0 contributes its
+    /// sign; `scale` is given. (The compression path proper lives in
+    /// [`crate::compeft::compress`]; this is the general constructor used
+    /// by tests and codecs.)
+    pub fn from_dense_signs(values: &[f32], scale: f32) -> TernaryVector {
+        let mut plus = Vec::new();
+        let mut minus = Vec::new();
+        for (i, &v) in values.iter().enumerate() {
+            if v > 0.0 {
+                plus.push(i as u32);
+            } else if v < 0.0 {
+                minus.push(i as u32);
+            }
+        }
+        TernaryVector { len: values.len(), scale, plus, minus }
+    }
+
+    /// Exact dot product with a dense vector: `Σ_i τ̃_i · x_i`.
+    pub fn dot_dense(&self, x: &[f32]) -> f64 {
+        assert_eq!(x.len(), self.len);
+        let mut acc = 0.0f64;
+        for &i in &self.plus {
+            acc += x[i as usize] as f64;
+        }
+        for &i in &self.minus {
+            acc -= x[i as usize] as f64;
+        }
+        acc * self.scale as f64
+    }
+}
+
+struct MergeIter<'a> {
+    plus: &'a [u32],
+    minus: &'a [u32],
+    i: usize,
+    j: usize,
+}
+
+impl<'a> Iterator for MergeIter<'a> {
+    type Item = (u32, i8);
+
+    fn next(&mut self) -> Option<(u32, i8)> {
+        let p = self.plus.get(self.i).copied();
+        let m = self.minus.get(self.j).copied();
+        match (p, m) {
+            (None, None) => None,
+            (Some(a), None) => {
+                self.i += 1;
+                Some((a, 1))
+            }
+            (None, Some(b)) => {
+                self.j += 1;
+                Some((b, -1))
+            }
+            (Some(a), Some(b)) => {
+                if a < b {
+                    self.i += 1;
+                    Some((a, 1))
+                } else {
+                    self.j += 1;
+                    Some((b, -1))
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> TernaryVector {
+        TernaryVector { len: 10, scale: 0.5, plus: vec![0, 3, 7], minus: vec![2, 9] }
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let t = sample();
+        t.validate().unwrap();
+        let d = t.to_dense();
+        assert_eq!(d, vec![0.5, 0.0, -0.5, 0.5, 0.0, 0.0, 0.0, 0.5, 0.0, -0.5]);
+        let back = TernaryVector::from_dense_signs(&d, t.scale);
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn nnz_density() {
+        let t = sample();
+        assert_eq!(t.nnz(), 5);
+        assert!((t.density() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn validate_catches_violations() {
+        let mut t = sample();
+        t.plus = vec![3, 0];
+        assert!(t.validate().is_err());
+
+        let mut t = sample();
+        t.minus = vec![3];
+        assert!(t.validate().is_err(), "overlap with plus");
+
+        let mut t = sample();
+        t.plus = vec![10];
+        assert!(t.validate().is_err(), "out of range");
+    }
+
+    #[test]
+    fn merge_iter_in_order() {
+        let t = sample();
+        let pairs: Vec<_> = t.iter_nonzero().collect();
+        assert_eq!(pairs, vec![(0, 1), (2, -1), (3, 1), (7, 1), (9, -1)]);
+    }
+
+    #[test]
+    fn add_into_and_dot() {
+        let t = sample();
+        let mut buf = vec![1.0f32; 10];
+        t.add_into(&mut buf, 2.0);
+        assert_eq!(buf[0], 2.0);
+        assert_eq!(buf[2], 0.0);
+        let x: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        // dot = 0.5 * (0 + 3 + 7 - 2 - 9) = -0.5
+        assert!((t.dot_dense(&x) + 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_vector() {
+        let t = TernaryVector::empty(4);
+        t.validate().unwrap();
+        assert_eq!(t.to_dense(), vec![0.0; 4]);
+        assert_eq!(t.nnz(), 0);
+    }
+}

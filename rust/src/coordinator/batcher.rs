@@ -1,0 +1,246 @@
+//! Dynamic per-expert batching.
+//!
+//! Requests for the same expert are queued together and released as a
+//! batch when either the batch-size target is reached or the oldest
+//! request has waited past the deadline — the standard continuous-
+//! batching trade-off (throughput vs tail latency) that multi-expert
+//! serving systems make per adapter (S-LoRA, vLLM). The engine drains
+//! one expert at a time, which maximizes reuse of the currently
+//! resident expert between swaps.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// One queued request (payload is opaque to the batcher).
+pub struct Pending<T> {
+    pub payload: T,
+    pub enqueued: Instant,
+}
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Release a batch at this many requests.
+    pub max_batch: usize,
+    /// ... or when the oldest request has waited this long.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) }
+    }
+}
+
+struct Queues<T> {
+    by_expert: HashMap<String, VecDeque<Pending<T>>>,
+    closed: bool,
+}
+
+/// Thread-safe batcher.
+pub struct Batcher<T> {
+    policy: BatchPolicy,
+    queues: Mutex<Queues<T>>,
+    cv: Condvar,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(policy: BatchPolicy) -> Batcher<T> {
+        Batcher {
+            policy,
+            queues: Mutex::new(Queues { by_expert: HashMap::new(), closed: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Enqueue a request for an expert.
+    pub fn push(&self, expert: &str, payload: T) {
+        let mut q = self.queues.lock().unwrap();
+        q.by_expert
+            .entry(expert.to_string())
+            .or_default()
+            .push_back(Pending { payload, enqueued: Instant::now() });
+        self.cv.notify_all();
+    }
+
+    /// Signal shutdown: wakes waiters; remaining queued work is still
+    /// drained by subsequent `next_batch` calls until empty.
+    pub fn close(&self) {
+        self.queues.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    pub fn queued(&self) -> usize {
+        let q = self.queues.lock().unwrap();
+        q.by_expert.values().map(|v| v.len()).sum()
+    }
+
+    /// Pick the next batch: prefer the expert whose head-of-line
+    /// request is most overdue; if none is overdue yet, prefer
+    /// `prefer_resident` (the expert currently loaded — free to serve),
+    /// then the fullest queue once it hits `max_batch`.
+    ///
+    /// Blocks until work is ready or (closed && empty) → None.
+    pub fn next_batch(&self, prefer_resident: Option<&str>) -> Option<(String, Vec<Pending<T>>)> {
+        let mut guard = self.queues.lock().unwrap();
+        loop {
+            if let Some(key) = self.pick(&guard, prefer_resident) {
+                let queue = guard.by_expert.get_mut(&key).unwrap();
+                let take = queue.len().min(self.policy.max_batch);
+                let batch: Vec<Pending<T>> = queue.drain(..take).collect();
+                if queue.is_empty() {
+                    guard.by_expert.remove(&key);
+                }
+                return Some((key, batch));
+            }
+            if guard.closed {
+                if guard.by_expert.is_empty() {
+                    return None;
+                }
+                // Closed but work remains: flush immediately.
+                let key = guard.by_expert.keys().next().unwrap().clone();
+                let queue = guard.by_expert.get_mut(&key).unwrap();
+                let take = queue.len().min(self.policy.max_batch);
+                let batch: Vec<Pending<T>> = queue.drain(..take).collect();
+                if queue.is_empty() {
+                    guard.by_expert.remove(&key);
+                }
+                return Some((key, batch));
+            }
+            let (g, _) = self
+                .cv
+                .wait_timeout(guard, self.policy.max_wait.max(Duration::from_micros(200)))
+                .unwrap();
+            guard = g;
+        }
+    }
+
+    fn pick(&self, q: &Queues<T>, prefer_resident: Option<&str>) -> Option<String> {
+        let now = Instant::now();
+        // 1. full batches for the resident expert (no swap, no wait).
+        if let Some(res) = prefer_resident {
+            if let Some(queue) = q.by_expert.get(res) {
+                if queue.len() >= self.policy.max_batch {
+                    return Some(res.to_string());
+                }
+            }
+        }
+        // 2. any full batch.
+        for (k, queue) in &q.by_expert {
+            if queue.len() >= self.policy.max_batch {
+                return Some(k.clone());
+            }
+        }
+        // 3. most-overdue head-of-line request.
+        let mut best: Option<(String, Duration)> = None;
+        for (k, queue) in &q.by_expert {
+            if let Some(head) = queue.front() {
+                let age = now.duration_since(head.enqueued);
+                if age >= self.policy.max_wait
+                    && best.as_ref().map_or(true, |(_, b)| age > *b)
+                {
+                    best = Some((k.clone(), age));
+                }
+            }
+        }
+        if let Some((k, _)) = best {
+            return Some(k);
+        }
+        // 4. resident expert with any work (free to serve, still batches
+        //    whatever is there once its head ages past max_wait — but if
+        //    nothing else is pending we can serve it immediately).
+        if q.by_expert.len() == 1 {
+            if let Some(res) = prefer_resident {
+                if q.by_expert.contains_key(res) {
+                    return Some(res.to_string());
+                }
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn full_batch_releases_immediately() {
+        let b: Batcher<u32> = Batcher::new(BatchPolicy {
+            max_batch: 3,
+            max_wait: Duration::from_secs(10),
+        });
+        for i in 0..3 {
+            b.push("e1", i);
+        }
+        let (k, batch) = b.next_batch(None).unwrap();
+        assert_eq!(k, "e1");
+        assert_eq!(batch.len(), 3);
+        assert_eq!(b.queued(), 0);
+    }
+
+    #[test]
+    fn deadline_releases_partial_batch() {
+        let b: Batcher<u32> = Batcher::new(BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(5),
+        });
+        b.push("e1", 1);
+        let t0 = Instant::now();
+        let (_, batch) = b.next_batch(None).unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(t0.elapsed() >= Duration::from_millis(4));
+    }
+
+    #[test]
+    fn resident_expert_preferred_for_full_batches() {
+        let b: Batcher<u32> = Batcher::new(BatchPolicy {
+            max_batch: 2,
+            max_wait: Duration::from_secs(1),
+        });
+        b.push("cold", 1);
+        b.push("cold", 2);
+        b.push("hot", 3);
+        b.push("hot", 4);
+        let (k, _) = b.next_batch(Some("hot")).unwrap();
+        assert_eq!(k, "hot");
+    }
+
+    #[test]
+    fn close_drains_and_terminates() {
+        let b: Arc<Batcher<u32>> = Arc::new(Batcher::new(BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_secs(10),
+        }));
+        b.push("e", 1);
+        b.close();
+        let (_, batch) = b.next_batch(None).unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(b.next_batch(None).is_none());
+    }
+
+    #[test]
+    fn cross_thread_flow() {
+        let b: Arc<Batcher<u32>> = Arc::new(Batcher::new(BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(2),
+        }));
+        let producer = {
+            let b = Arc::clone(&b);
+            std::thread::spawn(move || {
+                for i in 0..40 {
+                    b.push(if i % 2 == 0 { "a" } else { "b" }, i);
+                }
+                b.close();
+            })
+        };
+        let mut seen = 0;
+        while let Some((_, batch)) = b.next_batch(None) {
+            seen += batch.len();
+        }
+        producer.join().unwrap();
+        assert_eq!(seen, 40);
+    }
+}

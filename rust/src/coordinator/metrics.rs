@@ -1,0 +1,149 @@
+//! Serving metrics: latency breakdowns, throughput, swap accounting.
+//!
+//! The hot path records into lock-guarded log-histograms (bucket
+//! increment only); snapshots are taken off the request path by benches
+//! and the CLI's `serve` summary.
+
+use crate::util::json::Json;
+use crate::util::stats::LogHistogram;
+use std::sync::Mutex;
+use std::time::Duration;
+
+#[derive(Default)]
+struct Inner {
+    requests: u64,
+    batches: u64,
+    swaps: u64,
+    batch_fill: u64, // sum of batch sizes, for mean fill
+    queue: LogHistogram,
+    swap: LogHistogram,
+    exec: LogHistogram,
+    total: LogHistogram,
+}
+
+/// Thread-safe metrics sink.
+#[derive(Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+/// Per-request latency breakdown.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RequestTiming {
+    pub queue: Duration,
+    pub swap: Duration,
+    pub exec: Duration,
+    pub total: Duration,
+    pub swapped: bool,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn record_request(&self, t: &RequestTiming) {
+        let mut g = self.inner.lock().unwrap();
+        g.requests += 1;
+        if t.swapped {
+            // swap counted per batch elsewhere; histogram per request
+        }
+        g.queue.record_us(t.queue.as_secs_f64() * 1e6);
+        g.swap.record_us(t.swap.as_secs_f64() * 1e6);
+        g.exec.record_us(t.exec.as_secs_f64() * 1e6);
+        g.total.record_us(t.total.as_secs_f64() * 1e6);
+    }
+
+    pub fn record_batch(&self, size: usize, swapped: bool) {
+        let mut g = self.inner.lock().unwrap();
+        g.batches += 1;
+        g.batch_fill += size as u64;
+        if swapped {
+            g.swaps += 1;
+        }
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let g = self.inner.lock().unwrap();
+        MetricsSnapshot {
+            requests: g.requests,
+            batches: g.batches,
+            swaps: g.swaps,
+            mean_batch_fill: if g.batches == 0 {
+                0.0
+            } else {
+                g.batch_fill as f64 / g.batches as f64
+            },
+            queue_p50_us: g.queue.quantile_us(0.5),
+            total_p50_us: g.total.quantile_us(0.5),
+            total_p95_us: g.total.quantile_us(0.95),
+            total_p99_us: g.total.quantile_us(0.99),
+            total_mean_us: g.total.mean_us(),
+            swap_mean_us: g.swap.mean_us(),
+            exec_mean_us: g.exec.mean_us(),
+        }
+    }
+}
+
+/// Off-path snapshot of the counters.
+#[derive(Clone, Copy, Debug)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub batches: u64,
+    pub swaps: u64,
+    pub mean_batch_fill: f64,
+    pub queue_p50_us: f64,
+    pub total_p50_us: f64,
+    pub total_p95_us: f64,
+    pub total_p99_us: f64,
+    pub total_mean_us: f64,
+    pub swap_mean_us: f64,
+    pub exec_mean_us: f64,
+}
+
+impl MetricsSnapshot {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("requests", Json::num(self.requests as f64))
+            .set("batches", Json::num(self.batches as f64))
+            .set("swaps", Json::num(self.swaps as f64))
+            .set("mean_batch_fill", Json::num(self.mean_batch_fill))
+            .set("total_p50_us", Json::num(self.total_p50_us))
+            .set("total_p95_us", Json::num(self.total_p95_us))
+            .set("total_p99_us", Json::num(self.total_p99_us))
+            .set("total_mean_us", Json::num(self.total_mean_us))
+            .set("swap_mean_us", Json::num(self.swap_mean_us))
+            .set("exec_mean_us", Json::num(self.exec_mean_us));
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = Metrics::new();
+        for i in 1..=100u64 {
+            m.record_request(&RequestTiming {
+                queue: Duration::from_micros(10),
+                swap: Duration::from_micros(if i % 10 == 0 { 5000 } else { 0 }),
+                exec: Duration::from_micros(200),
+                total: Duration::from_micros(250 + i),
+                swapped: i % 10 == 0,
+            });
+        }
+        m.record_batch(8, true);
+        m.record_batch(4, false);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 100);
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.swaps, 1);
+        assert!((s.mean_batch_fill - 6.0).abs() < 1e-9);
+        assert!(s.total_p95_us >= s.total_p50_us);
+        assert!(s.total_mean_us > 250.0);
+        let j = s.to_json().to_string();
+        assert!(j.contains("\"requests\":100"));
+    }
+}

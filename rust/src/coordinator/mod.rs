@@ -1,0 +1,22 @@
+//! L3: the serving coordinator — the paper's communication story as a
+//! running system.
+//!
+//! * [`registry`] — expert catalog (formats, encoded sizes)
+//! * [`transport`] — simulated internet/disk/PCIe links over real bytes
+//! * [`cache`] — byte-budgeted LRU tiers (GPU / CPU)
+//! * [`loader`] — fetch → decode → materialize pipeline
+//! * [`batcher`] — per-expert dynamic batching
+//! * [`server`] — the engine thread + public [`server::Coordinator`] API
+//! * [`metrics`] — latency histograms, swap/throughput counters
+
+pub mod batcher;
+pub mod cache;
+pub mod loader;
+pub mod metrics;
+pub mod registry;
+pub mod server;
+pub mod transport;
+
+pub use registry::{ExpertFormat, ExpertMethod, ExpertRecord, Registry};
+pub use server::{Coordinator, CoordinatorConfig, EngineReport, Prediction};
+pub use transport::{LinkSpec, SimLink};

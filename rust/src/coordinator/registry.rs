@@ -1,0 +1,234 @@
+//! Expert catalog: which experts exist, in which formats, at what
+//! encoded sizes. Built by scanning the artifact tree (or registered
+//! programmatically by benches).
+
+use crate::compeft::compress::{compress_params, CompressConfig};
+use crate::compeft::format::{self, Encoding};
+use crate::tensor::ParamSet;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// How an expert checkpoint is stored on "disk"/remote.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExpertFormat {
+    /// Dense task vector at 16-bit accounting (the paper's baseline).
+    OriginalFp16,
+    /// ComPEFT `.cpeft` (Golomb-coded).
+    Compeft,
+}
+
+/// Adapter family of the expert.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExpertMethod {
+    Lora,
+    Ia3,
+    Full,
+}
+
+impl ExpertMethod {
+    pub fn parse(s: &str) -> Option<ExpertMethod> {
+        match s {
+            "lora" => Some(ExpertMethod::Lora),
+            "ia3" => Some(ExpertMethod::Ia3),
+            "full" => Some(ExpertMethod::Full),
+            _ => None,
+        }
+    }
+}
+
+/// One registered expert.
+#[derive(Clone, Debug)]
+pub struct ExpertRecord {
+    pub id: String,
+    pub task: String,
+    pub scale: String,
+    pub method: ExpertMethod,
+    pub format: ExpertFormat,
+    /// Path of the stored checkpoint (npz task vector or .cpeft).
+    pub path: PathBuf,
+    /// Bytes that move when this expert is fetched.
+    pub encoded_bytes: u64,
+    /// Dense parameter count of the task vector.
+    pub n_params: usize,
+}
+
+/// The expert catalog.
+#[derive(Default, Debug)]
+pub struct Registry {
+    experts: BTreeMap<String, ExpertRecord>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    pub fn insert(&mut self, rec: ExpertRecord) {
+        self.experts.insert(rec.id.clone(), rec);
+    }
+
+    pub fn get(&self, id: &str) -> Option<&ExpertRecord> {
+        self.experts.get(id)
+    }
+
+    pub fn ids(&self) -> Vec<String> {
+        self.experts.keys().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.experts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.experts.is_empty()
+    }
+
+    /// Register the original (fp16-accounted) form of a task-vector npz.
+    pub fn register_original(
+        &mut self,
+        id: &str,
+        task: &str,
+        scale: &str,
+        method: ExpertMethod,
+        npz_path: &Path,
+    ) -> Result<&ExpertRecord> {
+        let tv = ParamSet::load_npz(npz_path)
+            .with_context(|| format!("load {}", npz_path.display()))?;
+        let rec = ExpertRecord {
+            id: id.to_string(),
+            task: task.to_string(),
+            scale: scale.to_string(),
+            method,
+            format: ExpertFormat::OriginalFp16,
+            path: npz_path.to_path_buf(),
+            encoded_bytes: tv.bytes_fp16(),
+            n_params: tv.total_elements(),
+        };
+        self.insert(rec);
+        Ok(self.get(id).unwrap())
+    }
+
+    /// Compress a task-vector npz with ComPEFT, write the `.cpeft` next
+    /// to it, and register the compressed form.
+    pub fn register_compeft(
+        &mut self,
+        id: &str,
+        task: &str,
+        scale: &str,
+        method: ExpertMethod,
+        npz_path: &Path,
+        cfg: &CompressConfig,
+    ) -> Result<&ExpertRecord> {
+        let tv = ParamSet::load_npz(npz_path)?;
+        let compressed = compress_params(&tv, cfg);
+        let out = npz_path.with_extension("cpeft");
+        let bytes = format::save(&out, &compressed, Encoding::Golomb)?;
+        let rec = ExpertRecord {
+            id: id.to_string(),
+            task: task.to_string(),
+            scale: scale.to_string(),
+            method,
+            format: ExpertFormat::Compeft,
+            path: out,
+            encoded_bytes: bytes,
+            n_params: tv.total_elements(),
+        };
+        self.insert(rec);
+        Ok(self.get(id).unwrap())
+    }
+}
+
+/// Scan `artifacts/experts/{scale}` for `{task}.{method}.npz` task
+/// vectors; returns (task, method, path) triples.
+pub fn scan_expert_npz(artifacts: &Path, scale: &str) -> Result<Vec<(String, ExpertMethod, PathBuf)>> {
+    let dir = artifacts.join("experts").join(scale);
+    let mut out = Vec::new();
+    if !dir.exists() {
+        return Ok(out);
+    }
+    for entry in std::fs::read_dir(&dir)? {
+        let path = entry?.path();
+        let name = match path.file_name().and_then(|n| n.to_str()) {
+            Some(n) => n,
+            None => continue,
+        };
+        if !name.ends_with(".npz") {
+            continue;
+        }
+        let stem = name.trim_end_matches(".npz");
+        let parts: Vec<&str> = stem.split('.').collect();
+        if parts.len() < 2 {
+            continue;
+        }
+        // {task}.{method}[.r{rank}]
+        if let Some(m) = ExpertMethod::parse(parts[1]) {
+            if parts.len() == 2 {
+                out.push((parts[0].to_string(), m, path.clone()));
+            }
+        }
+    }
+    out.sort_by(|a, b| a.0.cmp(&b.0));
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+    use crate::util::prop;
+    use crate::util::rng::Pcg;
+
+    fn tv_npz(dir: &Path, name: &str) -> PathBuf {
+        let mut rng = Pcg::seed(33);
+        let mut p = ParamSet::new();
+        p.insert("w", Tensor::new(vec![512], prop::task_vector_like(&mut rng, 512)));
+        let path = dir.join(name);
+        p.save_npz(&path).unwrap();
+        path
+    }
+
+    #[test]
+    fn register_both_formats() {
+        let dir = std::env::temp_dir().join("compeft_registry_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let npz = tv_npz(&dir, "taskA.lora.npz");
+        let mut reg = Registry::new();
+        reg.register_original("a/orig", "taskA", "s", ExpertMethod::Lora, &npz).unwrap();
+        reg.register_compeft(
+            "a/comp",
+            "taskA",
+            "s",
+            ExpertMethod::Lora,
+            &npz,
+            &CompressConfig { density: 0.1, ..Default::default() },
+        )
+        .unwrap();
+        let orig = reg.get("a/orig").unwrap();
+        let comp = reg.get("a/comp").unwrap();
+        assert_eq!(orig.encoded_bytes, 1024); // 512 * 2 bytes
+        assert!(
+            comp.encoded_bytes < orig.encoded_bytes / 4,
+            "compressed {} vs orig {}",
+            comp.encoded_bytes,
+            orig.encoded_bytes
+        );
+        assert!(comp.path.exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn scan_parses_names() {
+        let dir = std::env::temp_dir().join("compeft_scan_test/experts/s");
+        std::fs::create_dir_all(&dir).unwrap();
+        tv_npz(&dir, "alpha.lora.npz");
+        tv_npz(&dir, "beta.ia3.npz");
+        tv_npz(&dir, "gamma.lora.r4.npz"); // rank variant: skipped by scan
+        let root = std::env::temp_dir().join("compeft_scan_test");
+        let found = scan_expert_npz(&root, "s").unwrap();
+        assert_eq!(found.len(), 2);
+        assert_eq!(found[0].0, "alpha");
+        assert_eq!(found[1].1, ExpertMethod::Ia3);
+        std::fs::remove_dir_all(&root).ok();
+    }
+}

@@ -1,0 +1,382 @@
+//! The serving engine: request loop, expert residency, batched
+//! execution through the PJRT runtime.
+//!
+//! Architecture (single accelerator, matching the paper's serving
+//! story): client threads submit requests tagged with an expert id; the
+//! [`Batcher`] groups them per expert; one **engine thread** owns the
+//! [`ModelBundle`] (device buffers are not `Send`) and drains batches,
+//! swapping experts through the tiered cache + simulated links when the
+//! target expert is not GPU-resident.
+
+use crate::coordinator::batcher::{BatchPolicy, Batcher, Pending};
+use crate::coordinator::cache::{LruTier, TierStats};
+use crate::coordinator::loader::ExpertLoader;
+use crate::coordinator::metrics::{Metrics, MetricsSnapshot, RequestTiming};
+use crate::coordinator::registry::{ExpertMethod, ExpertRecord, Registry};
+use crate::coordinator::transport::{LinkSpec, SimLink};
+use crate::eval::ANSWER_BASE;
+use crate::runtime::{AdapterKind, ModelBundle, Runtime};
+
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Serving batch size must match an exported executable batch.
+pub const SERVE_BATCH: usize = 8;
+
+/// Coordinator configuration.
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    pub artifacts: PathBuf,
+    pub scale: String,
+    pub policy: BatchPolicy,
+    /// Byte budget of the accelerator tier (decoded adapter bytes).
+    pub gpu_capacity_bytes: u64,
+    /// Byte budget of the host tier (encoded checkpoint bytes).
+    pub cpu_capacity_bytes: u64,
+    pub net: LinkSpec,
+    pub pcie: LinkSpec,
+    /// Wall-clock compression for simulated links (1.0 = real time).
+    pub time_scale: f64,
+}
+
+impl CoordinatorConfig {
+    pub fn new(artifacts: PathBuf, scale: &str) -> CoordinatorConfig {
+        CoordinatorConfig {
+            artifacts,
+            scale: scale.to_string(),
+            policy: BatchPolicy::default(),
+            gpu_capacity_bytes: 2 << 20,
+            cpu_capacity_bytes: 64 << 20,
+            net: LinkSpec::internet(),
+            pcie: LinkSpec::pcie(),
+            time_scale: 1.0,
+        }
+    }
+}
+
+/// A single inference request (one example).
+struct ClientRequest {
+    tokens: Vec<i32>,
+    n_classes: usize,
+    resp: mpsc::Sender<Prediction>,
+}
+
+/// Response: predicted class + latency breakdown.
+#[derive(Clone, Copy, Debug)]
+pub struct Prediction {
+    pub class: usize,
+    pub timing: RequestTiming,
+}
+
+/// Final engine accounting returned at shutdown.
+#[derive(Clone, Debug)]
+pub struct EngineReport {
+    pub gpu: TierStats,
+    pub cpu: TierStats,
+    pub net_bytes: u64,
+    pub pcie_bytes: u64,
+    pub batches: u64,
+}
+
+/// Public handle: submit requests, read metrics, shut down.
+pub struct Coordinator {
+    batcher: Arc<Batcher<ClientRequest>>,
+    metrics: Arc<Metrics>,
+    /// Kept for external byte accounting while the engine runs.
+    pub net: SimLink,
+    pub pcie: SimLink,
+    engine: Option<std::thread::JoinHandle<Result<EngineReport>>>,
+}
+
+impl Coordinator {
+    /// Start the engine. Blocks until the model bundle is loaded and
+    /// executables for the serve batch are compiled.
+    pub fn start(cfg: CoordinatorConfig, registry: Registry) -> Result<Coordinator> {
+        let batcher = Arc::new(Batcher::new(cfg.policy));
+        let metrics = Arc::new(Metrics::new());
+        let net = SimLink::new("net", cfg.net).with_time_scale(cfg.time_scale);
+        let pcie = SimLink::new("pcie", cfg.pcie).with_time_scale(cfg.time_scale);
+
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let engine = {
+            let batcher = Arc::clone(&batcher);
+            let metrics = Arc::clone(&metrics);
+            let net = net.clone();
+            let pcie = pcie.clone();
+            std::thread::Builder::new()
+                .name("compeft-engine".into())
+                .spawn(move || {
+                    engine_main(cfg, registry, batcher, metrics, net, pcie, ready_tx)
+                })?
+        };
+        match ready_rx.recv() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => return Err(e),
+            Err(_) => {
+                let err = engine
+                    .join()
+                    .map_err(|_| anyhow::anyhow!("engine panicked"))?
+                    .err()
+                    .unwrap_or_else(|| anyhow::anyhow!("engine exited during startup"));
+                return Err(err);
+            }
+        }
+        Ok(Coordinator { batcher, metrics, net, pcie, engine: Some(engine) })
+    }
+
+    /// Submit one request; returns the response receiver.
+    pub fn submit(
+        &self,
+        expert: &str,
+        tokens: Vec<i32>,
+        n_classes: usize,
+    ) -> mpsc::Receiver<Prediction> {
+        let (tx, rx) = mpsc::channel();
+        self.batcher.push(expert, ClientRequest { tokens, n_classes, resp: tx });
+        rx
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    pub fn queued(&self) -> usize {
+        self.batcher.queued()
+    }
+
+    /// Drain remaining work and stop the engine.
+    pub fn shutdown(mut self) -> Result<EngineReport> {
+        self.batcher.close();
+        let handle = self.engine.take().expect("engine running");
+        handle.join().map_err(|_| anyhow::anyhow!("engine panicked"))?
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        if let Some(h) = self.engine.take() {
+            self.batcher.close();
+            let _ = h.join();
+        }
+    }
+}
+
+/// GPU-resident expert: decoded adapter + uploaded device buffers.
+struct Resident {
+    kind: AdapterKind,
+    adapter_bufs: Vec<xla::PjRtBuffer>,
+    /// For full-FT experts: full replacement parameter buffers.
+    full_bufs: Option<Vec<xla::PjRtBuffer>>,
+    dense_bytes: u64,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn engine_main(
+    cfg: CoordinatorConfig,
+    registry: Registry,
+    batcher: Arc<Batcher<ClientRequest>>,
+    metrics: Arc<Metrics>,
+    net: SimLink,
+    pcie: SimLink,
+    ready_tx: mpsc::Sender<Result<()>>,
+) -> Result<EngineReport> {
+    // --- startup: load model, precompile serve executables ---
+    let setup = (|| -> Result<(Runtime, ModelBundle)> {
+        let rt = Runtime::cpu()?;
+        let bundle = ModelBundle::load(&rt, &cfg.artifacts, &cfg.scale)?;
+        bundle.executable(AdapterKind::Base, SERVE_BATCH)?;
+        bundle.executable(AdapterKind::Lora, SERVE_BATCH)?;
+        bundle.executable(AdapterKind::Ia3, SERVE_BATCH)?;
+        Ok((rt, bundle))
+    })();
+    let (_rt, bundle) = match setup {
+        Ok(x) => {
+            let _ = ready_tx.send(Ok(()));
+            x
+        }
+        Err(e) => {
+            let _ = ready_tx.send(Err(e));
+            return Err(anyhow::anyhow!("engine startup failed"));
+        }
+    };
+
+    let loader = ExpertLoader::new(net.clone(), pcie.clone());
+    let mut gpu: LruTier<Resident> = LruTier::new("gpu", cfg.gpu_capacity_bytes);
+    let mut cpu: LruTier<Vec<u8>> = LruTier::new("cpu", cfg.cpu_capacity_bytes);
+    let mut resident_hint: Option<String> = None;
+    let seq = bundle.meta.seq_len;
+
+    // --- request loop ---
+    while let Some((expert_id, batch)) = batcher.next_batch(resident_hint.as_deref()) {
+        let rec = match registry.get(&expert_id) {
+            Some(r) => r.clone(),
+            None => {
+                // Unknown expert: drop requests (metrics still count them).
+                for p in batch {
+                    drop(p.payload.resp);
+                }
+                continue;
+            }
+        };
+
+        // Ensure residency.
+        let t_swap = Instant::now();
+        let mut swapped = false;
+        let mut sim_swap = Duration::ZERO;
+        if gpu.get(&expert_id).is_none() {
+            swapped = true;
+            match load_expert(&bundle, &loader, &rec, &mut cpu) {
+                Ok((resident, sim)) => {
+                    sim_swap = sim;
+                    gpu.insert(&expert_id, resident, rec.encoded_bytes.max(1));
+                }
+                Err(e) => {
+                    eprintln!("[engine] load {expert_id} failed: {e:#}");
+                    for p in batch {
+                        drop(p.payload.resp);
+                    }
+                    continue;
+                }
+            }
+        }
+        let swap_wall = t_swap.elapsed();
+        let swap_total = sim_swap.max(swap_wall);
+        resident_hint = Some(expert_id.clone());
+        let resident = gpu.get(&expert_id).expect("just inserted");
+
+        // Execute in SERVE_BATCH chunks.
+        metrics.record_batch(batch.len(), swapped);
+        let t_exec = Instant::now();
+        let mut chunk_tokens = vec![0i32; SERVE_BATCH * seq];
+        let mut responses: Vec<(usize, &Pending<ClientRequest>)> = Vec::new();
+        let mut classes: Vec<usize> = Vec::with_capacity(batch.len());
+        let mut exec_err = false;
+        let mut i = 0;
+        while i < batch.len() {
+            let take = (batch.len() - i).min(SERVE_BATCH);
+            for (j, p) in batch[i..i + take].iter().enumerate() {
+                chunk_tokens[j * seq..(j + 1) * seq].copy_from_slice(&p.payload.tokens);
+            }
+            for v in chunk_tokens[take * seq..].iter_mut() {
+                *v = 0;
+            }
+            let logits = bundle.run_batch(
+                resident.kind,
+                SERVE_BATCH,
+                &resident.adapter_bufs,
+                resident.full_bufs.as_deref(),
+                &chunk_tokens,
+            );
+            match logits {
+                Ok(l) => {
+                    for (j, p) in batch[i..i + take].iter().enumerate() {
+                        let row = &l[j * bundle.meta.vocab..(j + 1) * bundle.meta.vocab];
+                        let c = p.payload.n_classes;
+                        let mut best = 0usize;
+                        let mut best_v = f32::NEG_INFINITY;
+                        for (k, &v) in
+                            row[ANSWER_BASE..ANSWER_BASE + c].iter().enumerate()
+                        {
+                            if v > best_v {
+                                best_v = v;
+                                best = k;
+                            }
+                        }
+                        classes.push(best);
+                        responses.push((classes.len() - 1, p));
+                    }
+                }
+                Err(e) => {
+                    eprintln!("[engine] exec failed: {e:#}");
+                    exec_err = true;
+                    break;
+                }
+            }
+            i += take;
+        }
+        let exec = t_exec.elapsed();
+        if exec_err {
+            continue;
+        }
+
+        let now = Instant::now();
+        for (ci, p) in responses {
+            let timing = RequestTiming {
+                queue: p.enqueued.elapsed().saturating_sub(swap_wall + exec),
+                swap: swap_total,
+                exec,
+                total: now.duration_since(p.enqueued) + (swap_total - swap_wall),
+                swapped,
+            };
+            metrics.record_request(&timing);
+            let _ = p.payload.resp.send(Prediction { class: classes[ci], timing });
+        }
+    }
+
+    Ok(EngineReport {
+        gpu: gpu.stats(),
+        cpu: cpu.stats(),
+        net_bytes: net.bytes_moved(),
+        pcie_bytes: pcie.bytes_moved(),
+        batches: metrics.snapshot().batches,
+    })
+}
+
+/// Pull an expert to the GPU tier; returns (resident, simulated time).
+fn load_expert(
+    bundle: &ModelBundle,
+    loader: &ExpertLoader,
+    rec: &ExpertRecord,
+    cpu: &mut LruTier<Vec<u8>>,
+) -> Result<(Resident, Duration)> {
+    let mut sim = Duration::ZERO;
+    // Host tier: encoded bytes.
+    let encoded: Vec<u8> = match cpu.get(&rec.id) {
+        Some(b) => b.clone(),
+        None => {
+            let (bytes, fetch) = loader.fetch_encoded(rec)?;
+            sim += fetch;
+            cpu.insert(&rec.id, bytes.clone(), rec.encoded_bytes.max(1));
+            bytes
+        }
+    };
+    // Decode against the matching template.
+    let (kind, template) = match rec.method {
+        ExpertMethod::Lora => (AdapterKind::Lora, &bundle.lora_init),
+        ExpertMethod::Ia3 => (AdapterKind::Ia3, &bundle.ia3_init),
+        ExpertMethod::Full => (AdapterKind::Base, &bundle.base),
+    };
+    let (tv, decode) = loader.decode(rec, &encoded, template)?;
+    sim += decode;
+    // Host → device (encoded bytes move; decode-on-device model, §2.2).
+    sim += loader.upload_cost(rec);
+
+    let resident = match rec.method {
+        ExpertMethod::Full => {
+            let mut params = bundle.base.clone();
+            params.add_assign(&tv).context("apply full tv")?;
+            let bufs = bundle.upload_full_params(&params)?;
+            Resident {
+                kind,
+                adapter_bufs: Vec::new(),
+                full_bufs: Some(bufs),
+                dense_bytes: params.bytes_fp16(),
+            }
+        }
+        _ => {
+            let adapter = loader.materialize(rec.method, template, &tv)?;
+            let bufs = bundle.upload_adapter(kind, &adapter)?;
+            Resident {
+                kind,
+                adapter_bufs: bufs,
+                full_bufs: None,
+                dense_bytes: adapter.bytes_fp16(),
+            }
+        }
+    };
+    let _ = resident.dense_bytes;
+    Ok((resident, sim))
+}

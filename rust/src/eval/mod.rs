@@ -1,0 +1,183 @@
+//! Rank-classification evaluation through the PJRT runtime.
+//!
+//! Mirrors the paper's T5/T0/MMLU protocol (Appendix B.1): the model's
+//! logits at the QUERY position are restricted to the candidate answer
+//! tokens and the top-ranked candidate is compared to the label. All
+//! accuracy numbers in the benches flow through this module — the
+//! request path is Rust + PJRT, never Python.
+
+use crate::runtime::{AdapterKind, ModelBundle};
+use crate::tensor::ParamSet;
+use crate::util::npz;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// First answer-token id (matches python/compile/config.py ANSWER_BASE).
+pub const ANSWER_BASE: usize = 10;
+
+/// A loaded evaluation set.
+#[derive(Clone, Debug)]
+pub struct EvalSet {
+    pub name: String,
+    /// Flattened [n, seq] token matrix.
+    pub tokens: Vec<i32>,
+    pub labels: Vec<i64>,
+    /// Number of answer candidates per example.
+    pub n_classes: Vec<i64>,
+    pub n: usize,
+    pub seq: usize,
+}
+
+impl EvalSet {
+    pub fn load(path: &Path) -> Result<EvalSet> {
+        let arrays = npz::read_npz(path)?;
+        let tok = arrays.get("tokens").context("eval set missing tokens")?;
+        let labels = arrays.get("labels").context("missing labels")?.to_i64()?;
+        let n_classes = arrays.get("n_classes").context("missing n_classes")?.to_i64()?;
+        let n = tok.shape[0];
+        let seq = tok.shape[1];
+        let tokens: Vec<i32> = tok.to_i64()?.iter().map(|&v| v as i32).collect();
+        anyhow::ensure!(labels.len() == n && n_classes.len() == n, "ragged eval set");
+        let name = path
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_default();
+        Ok(EvalSet { name, tokens, labels, n_classes, n, seq })
+    }
+
+    /// Take the first `k` examples (for quick validation splits).
+    pub fn truncate(mut self, k: usize) -> EvalSet {
+        let k = k.min(self.n);
+        self.tokens.truncate(k * self.seq);
+        self.labels.truncate(k);
+        self.n_classes.truncate(k);
+        self.n = k;
+        self
+    }
+}
+
+/// Rank-classification accuracy from raw logits `[n, vocab]`.
+pub fn rank_accuracy_from_logits(
+    logits: &[f32],
+    vocab: usize,
+    labels: &[i64],
+    n_classes: &[i64],
+) -> f64 {
+    let n = labels.len();
+    assert_eq!(logits.len(), n * vocab);
+    let mut correct = 0usize;
+    for i in 0..n {
+        let row = &logits[i * vocab..(i + 1) * vocab];
+        let c = n_classes[i] as usize;
+        let mut best = 0usize;
+        let mut best_v = f32::NEG_INFINITY;
+        for (j, &v) in row[ANSWER_BASE..ANSWER_BASE + c].iter().enumerate() {
+            if v > best_v {
+                best_v = v;
+                best = j;
+            }
+        }
+        if best as i64 == labels[i] {
+            correct += 1;
+        }
+    }
+    correct as f64 / n as f64
+}
+
+/// Mean cross-entropy of the correct answer token (LoraHub's few-shot
+/// objective). Lower is better.
+pub fn answer_cross_entropy(
+    logits: &[f32],
+    vocab: usize,
+    labels: &[i64],
+) -> f64 {
+    let n = labels.len();
+    assert_eq!(logits.len(), n * vocab);
+    let mut total = 0.0f64;
+    for i in 0..n {
+        let row = &logits[i * vocab..(i + 1) * vocab];
+        let maxv = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+        let lse: f64 =
+            maxv + row.iter().map(|&v| ((v as f64) - maxv).exp()).sum::<f64>().ln();
+        let target = ANSWER_BASE + labels[i] as usize;
+        total += lse - row[target] as f64;
+    }
+    total / n as f64
+}
+
+/// Evaluate a model variant on an eval set. `adapter` rides on top of
+/// the resident base; `full_params` replaces the base entirely.
+pub fn evaluate(
+    bundle: &ModelBundle,
+    kind: AdapterKind,
+    batch: usize,
+    adapter: Option<&ParamSet>,
+    full_params: Option<&ParamSet>,
+    set: &EvalSet,
+) -> Result<f64> {
+    anyhow::ensure!(set.seq == bundle.meta.seq_len, "seq mismatch");
+    let logits = bundle.logits(kind, batch, adapter, full_params, &set.tokens)?;
+    Ok(rank_accuracy_from_logits(
+        &logits,
+        bundle.meta.vocab,
+        &set.labels,
+        &set.n_classes,
+    ))
+}
+
+/// Few-shot loss of a candidate adapter on a small support set.
+pub fn fewshot_loss(
+    bundle: &ModelBundle,
+    kind: AdapterKind,
+    batch: usize,
+    adapter: &ParamSet,
+    set: &EvalSet,
+) -> Result<f64> {
+    let logits = bundle.logits(kind, batch, Some(adapter), None, &set.tokens)?;
+    let answer_labels: Vec<i64> = set.labels.clone();
+    Ok(answer_cross_entropy(&logits, bundle.meta.vocab, &answer_labels))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank_accuracy_counts_correct_rows() {
+        let vocab = 20;
+        // Two examples, 2 classes. Candidates at tokens 10, 11.
+        let mut logits = vec![0.0f32; 2 * vocab];
+        logits[10] = 1.0; // example 0 predicts class 0
+        logits[vocab + 11] = 2.0; // example 1 predicts class 1
+        let acc = rank_accuracy_from_logits(&logits, vocab, &[0, 0], &[2, 2]);
+        assert!((acc - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cross_entropy_prefers_confident_correct() {
+        let vocab = 16;
+        let mut good = vec![0.0f32; vocab];
+        good[10] = 10.0;
+        let mut bad = vec![0.0f32; vocab];
+        bad[11] = 10.0;
+        let ce_good = answer_cross_entropy(&good, vocab, &[0]);
+        let ce_bad = answer_cross_entropy(&bad, vocab, &[0]);
+        assert!(ce_good < 0.01);
+        assert!(ce_bad > 5.0);
+    }
+
+    #[test]
+    fn eval_set_truncate() {
+        let set = EvalSet {
+            name: "t".into(),
+            tokens: vec![0; 10 * 4],
+            labels: vec![0; 10],
+            n_classes: vec![2; 10],
+            n: 10,
+            seq: 4,
+        };
+        let t = set.truncate(3);
+        assert_eq!(t.n, 3);
+        assert_eq!(t.tokens.len(), 12);
+    }
+}

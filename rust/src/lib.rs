@@ -1,0 +1,15 @@
+//! ComPEFT — compression for communicating parameter-efficient updates.
+//!
+//! Reproduction of Yadav et al., "ComPEFT: Compression for Communicating
+//! Parameter Efficient Updates via Sparsification and Quantization"
+//! (2023) as a three-layer Rust + JAX + Pallas system. See DESIGN.md.
+
+pub mod baselines;
+pub mod bench_support;
+pub mod compeft;
+pub mod coordinator;
+pub mod eval;
+pub mod merging;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,315 @@
+//! `compeft` — CLI for the ComPEFT reproduction.
+//!
+//! Subcommands:
+//!   compress   compress a task-vector .npz into a .cpeft
+//!   inspect    print stats of a .cpeft / task-vector .npz
+//!   eval       evaluate an expert (original or compressed) via PJRT
+//!   serve      run the serving coordinator on a synthetic trace
+//!
+//! `compeft <subcommand> --help` lists flags.
+
+use anyhow::{bail, Context, Result};
+use compeft::compeft::compress::{compress_params, CompressConfig, Granularity};
+use compeft::compeft::entropy::human_bytes;
+use compeft::compeft::format::{self, Encoding};
+use compeft::coordinator::batcher::BatchPolicy;
+use compeft::coordinator::{
+    Coordinator, CoordinatorConfig, ExpertMethod, LinkSpec, Registry,
+};
+use compeft::tensor::ParamSet;
+use compeft::util::cli::ArgSpec;
+use compeft::util::rng::{Pcg, Zipf};
+use compeft::{bench_support as bs, eval as ev};
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match argv.first().map(|s| s.as_str()) {
+        Some("compress") => run(cmd_compress(&argv[1..])),
+        Some("inspect") => run(cmd_inspect(&argv[1..])),
+        Some("eval") => run(cmd_eval(&argv[1..])),
+        Some("serve") => run(cmd_serve(&argv[1..])),
+        _ => {
+            eprintln!(
+                "usage: compeft <compress|inspect|eval|serve> [flags]\n\
+                 see DESIGN.md for the experiment-to-bench map"
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(r: Result<()>) -> i32 {
+    match r {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("{e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_compress(argv: &[String]) -> Result<()> {
+    let spec = ArgSpec::new("compress", "compress a task-vector .npz into .cpeft")
+        .required("input", "task vector .npz")
+        .flag("output", "", "output path (default: input with .cpeft)")
+        .flag("k", "0.2", "density (fraction of entries kept)")
+        .flag("alpha", "1.0", "scaling value α")
+        .flag("encoding", "golomb", "golomb | bitmask")
+        .boolean("per-tensor", "compress each tensor independently");
+    let a = spec.parse(argv)?;
+    let input = PathBuf::from(a.get("input"));
+    let tv = ParamSet::load_npz(&input)?;
+    let cfg = CompressConfig {
+        density: a.get_f64("k")?,
+        alpha: a.get_f64("alpha")?,
+        granularity: if a.get_bool("per-tensor") {
+            Granularity::PerTensor
+        } else {
+            Granularity::Global
+        },
+    };
+    let enc = match a.get("encoding") {
+        "golomb" => Encoding::Golomb,
+        "bitmask" => Encoding::Bitmask,
+        other => bail!("unknown encoding {other}"),
+    };
+    let out = if a.get("output").is_empty() {
+        input.with_extension("cpeft")
+    } else {
+        PathBuf::from(a.get("output"))
+    };
+    let compressed = compress_params(&tv, &cfg);
+    let bytes = format::save(&out, &compressed, enc)?;
+    let orig = tv.bytes_fp16();
+    println!(
+        "compressed {} ({} params, {} fp16) -> {} ({}, {:.1}x, density {:.1}%)",
+        input.display(),
+        tv.total_elements(),
+        human_bytes(orig),
+        out.display(),
+        human_bytes(bytes),
+        orig as f64 / bytes as f64,
+        compressed.density() * 100.0,
+    );
+    Ok(())
+}
+
+fn cmd_inspect(argv: &[String]) -> Result<()> {
+    let spec = ArgSpec::new("inspect", "print stats of a .cpeft or task-vector .npz")
+        .required("input", "path to .cpeft or .npz");
+    let a = spec.parse(argv)?;
+    let path = PathBuf::from(a.get("input"));
+    match path.extension().and_then(|e| e.to_str()) {
+        Some("cpeft") => {
+            let (c, enc) = format::load(&path)?;
+            println!(
+                "{}: encoding {:?}, {} parts, {} params, nnz {} (density {:.2}%)",
+                path.display(),
+                enc,
+                c.parts.len(),
+                c.total_elements(),
+                c.nnz(),
+                c.density() * 100.0
+            );
+            for (name, t) in &c.parts {
+                println!(
+                    "  part {:12} len {:>9} nnz {:>8} scale {:+.6}",
+                    if name.is_empty() { "<global>" } else { name },
+                    t.len,
+                    t.nnz(),
+                    t.scale
+                );
+            }
+        }
+        _ => {
+            let tv = ParamSet::load_npz(&path)?;
+            let flat = tv.flatten();
+            let sigma = compeft::util::stats::std_f32(&flat);
+            let mean = compeft::util::stats::mean_f32(&flat);
+            let max = flat.iter().cloned().fold(f32::MIN, f32::max);
+            let min = flat.iter().cloned().fold(f32::MAX, f32::min);
+            println!(
+                "{}: {} tensors, {} params ({} fp16)",
+                path.display(),
+                tv.len(),
+                tv.total_elements(),
+                human_bytes(tv.bytes_fp16())
+            );
+            println!("  mean {mean:+.3e}  std {sigma:.3e}  max {max:+.4}  min {min:+.4}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_eval(argv: &[String]) -> Result<()> {
+    let spec = ArgSpec::new("eval", "evaluate an expert via the PJRT runtime")
+        .flag("scale", "s", "model scale (xs|s|m|l)")
+        .required("task", "task name, e.g. alpaca")
+        .flag("method", "lora", "lora | ia3 | full")
+        .flag("set", "", "eval set name (default: task_{task} or glue_{task})")
+        .flag("k", "", "density; if set, evaluate the ComPEFT-compressed expert")
+        .flag("alpha", "1.0", "scaling value α");
+    let a = spec.parse(argv)?;
+    let artifacts = bs::require_artifacts();
+    let scale = a.get("scale");
+    let (_rt, bundle) = bs::load_bundle(&artifacts, scale)?;
+    let expert = bs::load_expert(&artifacts, scale, a.get("task"), a.get("method"), None)?;
+
+    let set_name = if a.get("set").is_empty() {
+        let t = a.get("task");
+        let cand = format!("task_{t}");
+        if artifacts.join("eval").join(format!("{cand}.npz")).exists() {
+            cand
+        } else {
+            format!("glue_{t}")
+        }
+    } else {
+        a.get("set").to_string()
+    };
+    let set = bs::load_eval(&artifacts, &set_name)?;
+
+    let (tv, label) = if a.get("k").is_empty() {
+        (expert.tv.clone(), "original".to_string())
+    } else {
+        let k = a.get_f64("k")?;
+        let alpha = a.get_f64("alpha")?;
+        (
+            bs::compress_tv(&expert.tv, k, alpha),
+            format!("ComPEFT(k={k}, α={alpha})"),
+        )
+    };
+    let t0 = Instant::now();
+    let acc = bs::eval_tv(&bundle, expert.method, &tv, &set)?;
+    println!(
+        "{label} {}/{} on {set_name}: accuracy {:.4} ({} examples, {:.2?})",
+        scale,
+        expert.task,
+        acc,
+        set.n,
+        t0.elapsed()
+    );
+    Ok(())
+}
+
+fn cmd_serve(argv: &[String]) -> Result<()> {
+    let spec = ArgSpec::new("serve", "run the coordinator on a synthetic trace")
+        .flag("scale", "s", "model scale")
+        .flag("format", "compeft", "expert checkpoint format: compeft | original")
+        .flag("requests", "200", "number of requests to replay")
+        .flag("gpu-mb", "1", "GPU tier capacity in MB")
+        .flag("zipf", "1.1", "request skew exponent")
+        .flag("k", "0.2", "ComPEFT density")
+        .flag("alpha", "1.0", "ComPEFT α")
+        .flag("time-scale", "1.0", "simulated-link wall-clock factor")
+        .flag("seed", "0", "trace seed");
+    let a = spec.parse(argv)?;
+    let artifacts = bs::require_artifacts();
+    let scale = a.get("scale");
+
+    // Build the registry from the instruct experts of this scale.
+    let mut registry = Registry::new();
+    let found = compeft::coordinator::registry::scan_expert_npz(&artifacts, scale)?;
+    if found.is_empty() {
+        bail!("no experts found for scale {scale} — run `make artifacts`");
+    }
+    let compressed = a.get("format") == "compeft";
+    let cfg = CompressConfig {
+        density: a.get_f64("k")?,
+        alpha: a.get_f64("alpha")?,
+        granularity: Granularity::Global,
+    };
+    let mut ids = Vec::new();
+    for (task, method, path) in &found {
+        if *method != ExpertMethod::Lora {
+            continue;
+        }
+        // Only tasks with eval sets (instruct tasks).
+        if !artifacts.join("eval").join(format!("task_{task}.npz")).exists() {
+            continue;
+        }
+        let id = format!("{task}.lora");
+        if compressed {
+            registry.register_compeft(&id, task, scale, *method, path, &cfg)?;
+        } else {
+            registry.register_original(&id, task, scale, *method, path)?;
+        }
+        ids.push((id, task.clone()));
+    }
+    println!("registered {} experts ({})", ids.len(), a.get("format"));
+
+    let mut ccfg = CoordinatorConfig::new(artifacts.clone(), scale);
+    ccfg.gpu_capacity_bytes = (a.get_f64("gpu-mb")? * 1e6) as u64;
+    ccfg.policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) };
+    ccfg.net = LinkSpec::internet();
+    ccfg.pcie = LinkSpec::pcie();
+    ccfg.time_scale = a.get_f64("time-scale")?;
+    let coord = Coordinator::start(ccfg, registry)?;
+
+    // Replay a Zipf-skewed trace; tokens come from each task's eval set.
+    let n_req = a.get_usize("requests")?;
+    let mut rng = Pcg::seed(a.get_u64("seed")?);
+    let zipf = Zipf::new(ids.len(), a.get_f64("zipf")?);
+    let sets: Vec<ev::EvalSet> = ids
+        .iter()
+        .map(|(_, task)| bs::load_eval(&artifacts, &format!("task_{task}")))
+        .collect::<Result<_>>()?;
+
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(n_req);
+    let mut correct_labels = Vec::with_capacity(n_req);
+    for _ in 0..n_req {
+        let e = zipf.sample(&mut rng);
+        let set = &sets[e];
+        let i = rng.range(0, set.n);
+        let tokens = set.tokens[i * set.seq..(i + 1) * set.seq].to_vec();
+        correct_labels.push(set.labels[i]);
+        pending.push(coord.submit(&ids[e].0, tokens, set.n_classes[i] as usize));
+    }
+    let mut correct = 0usize;
+    for (rx, label) in pending.into_iter().zip(&correct_labels) {
+        let p = rx.recv().context("coordinator reply")?;
+        if p.class as i64 == *label {
+            correct += 1;
+        }
+    }
+    let wall = t0.elapsed();
+    let m = coord.metrics();
+    let report = coord.shutdown()?;
+
+    println!("--- serve summary ({}) ---", a.get("format"));
+    println!(
+        "requests {}  accuracy {:.3}  wall {:.2?}  throughput {:.1} req/s",
+        n_req,
+        correct as f64 / n_req as f64,
+        wall,
+        n_req as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "latency: mean {:.2}ms  p50 {:.2}ms  p95 {:.2}ms  p99 {:.2}ms",
+        m.total_mean_us / 1e3,
+        m.total_p50_us / 1e3,
+        m.total_p95_us / 1e3,
+        m.total_p99_us / 1e3
+    );
+    println!(
+        "batches {}  mean fill {:.2}  swaps {}  swap mean {:.2}ms  exec mean {:.2}ms",
+        m.batches, m.mean_batch_fill, m.swaps, m.swap_mean_us / 1e3, m.exec_mean_us / 1e3
+    );
+    println!(
+        "gpu tier: {}/{} used, {} entries, hit-rate {:.2}, evictions {}",
+        human_bytes(report.gpu.used_bytes),
+        human_bytes(report.gpu.capacity_bytes),
+        report.gpu.entries,
+        report.gpu.hit_rate(),
+        report.gpu.evictions
+    );
+    println!(
+        "bytes moved: net {}  pcie {}",
+        human_bytes(report.net_bytes),
+        human_bytes(report.pcie_bytes)
+    );
+    Ok(())
+}

@@ -1,0 +1,184 @@
+//! Gradient-free optimizer for LoraHub-style composition weights.
+//!
+//! LoraHub uses the "Shiwa" meta-optimizer from Nevergrad; the
+//! offline environment has no Nevergrad, so we implement the core
+//! ingredient it selects at this problem size: a (1+1) evolution
+//! strategy with the 1/5th-success-rule step adaptation, plus random
+//! restarts. Minimizes `f(w) + l1 · ‖w‖₁` over a box, matching
+//! LoraHub's L1-regularized few-shot loss.
+
+use crate::util::rng::Pcg;
+
+/// Optimizer configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct EsConfig {
+    /// Total evaluation budget across restarts.
+    pub budget: usize,
+    /// Number of random restarts (best result wins).
+    pub restarts: usize,
+    /// Initial step size.
+    pub sigma0: f64,
+    /// Box constraint: weights clamped to [lo, hi] (LoraHub uses [-1.5, 1.5]).
+    pub lo: f64,
+    pub hi: f64,
+    /// L1 regularization strength (LoraHub uses 0.05).
+    pub l1: f64,
+}
+
+impl Default for EsConfig {
+    fn default() -> Self {
+        EsConfig { budget: 300, restarts: 3, sigma0: 0.3, lo: -1.5, hi: 1.5, l1: 0.05 }
+    }
+}
+
+/// Result of an optimization run.
+#[derive(Clone, Debug)]
+pub struct EsResult {
+    pub best: Vec<f64>,
+    /// Best *raw* objective value (without the L1 term).
+    pub best_value: f64,
+    pub evals: usize,
+}
+
+/// Minimize `f` over `dim` weights with a (1+1)-ES.
+///
+/// `f` is the raw objective (e.g. few-shot loss); the L1 penalty is
+/// added internally for selection but reported values are raw.
+pub fn minimize<F: FnMut(&[f64]) -> f64>(
+    dim: usize,
+    init: Option<&[f64]>,
+    cfg: &EsConfig,
+    rng: &mut Pcg,
+    mut f: F,
+) -> EsResult {
+    assert!(dim > 0);
+    let per_restart = (cfg.budget / cfg.restarts.max(1)).max(2);
+    let mut best: Option<(Vec<f64>, f64, f64)> = None; // (w, raw, penalized)
+    let mut evals = 0usize;
+
+    for restart in 0..cfg.restarts.max(1) {
+        // First restart starts from `init` (or zeros); later ones random.
+        let mut x: Vec<f64> = match (restart, init) {
+            (0, Some(w)) => w.to_vec(),
+            (0, None) => vec![0.0; dim],
+            _ => (0..dim)
+                .map(|_| cfg.lo + (cfg.hi - cfg.lo) * rng.next_f64())
+                .collect(),
+        };
+        for v in &mut x {
+            *v = v.clamp(cfg.lo, cfg.hi);
+        }
+        let raw = f(&x);
+        evals += 1;
+        let mut fx = raw + cfg.l1 * l1norm(&x);
+        if best.as_ref().map_or(true, |(_, _, b)| fx < *b) {
+            best = Some((x.clone(), raw, fx));
+        }
+
+        let mut sigma = cfg.sigma0;
+        let mut successes = 0usize;
+        let mut trials = 0usize;
+        for _ in 0..per_restart.saturating_sub(1) {
+            let cand: Vec<f64> = x
+                .iter()
+                .map(|&v| (v + sigma * rng.normal()).clamp(cfg.lo, cfg.hi))
+                .collect();
+            let raw = f(&cand);
+            evals += 1;
+            let fc = raw + cfg.l1 * l1norm(&cand);
+            trials += 1;
+            if fc <= fx {
+                x = cand;
+                fx = fc;
+                successes += 1;
+                if best.as_ref().map_or(true, |(_, _, b)| fc < *b) {
+                    best = Some((x.clone(), raw, fc));
+                }
+            }
+            // 1/5th success rule, applied every 10 trials.
+            if trials >= 10 {
+                let rate = successes as f64 / trials as f64;
+                sigma *= if rate > 0.2 { 1.5 } else { 0.6 };
+                sigma = sigma.clamp(1e-4, (cfg.hi - cfg.lo) / 2.0);
+                successes = 0;
+                trials = 0;
+            }
+        }
+    }
+
+    let (best, best_value, _) = best.unwrap();
+    EsResult { best, best_value, evals }
+}
+
+fn l1norm(x: &[f64]) -> f64 {
+    x.iter().map(|v| v.abs()).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finds_sphere_minimum() {
+        let mut rng = Pcg::seed(42);
+        let target = [0.7, -0.3, 0.1];
+        let r = minimize(
+            3,
+            None,
+            &EsConfig { budget: 1500, l1: 0.0, ..Default::default() },
+            &mut rng,
+            |w| {
+                w.iter().zip(&target).map(|(a, b)| (a - b) * (a - b)).sum::<f64>()
+            },
+        );
+        assert!(r.best_value < 0.01, "value={}", r.best_value);
+        for (a, b) in r.best.iter().zip(&target) {
+            assert!((a - b).abs() < 0.15, "{:?}", r.best);
+        }
+    }
+
+    #[test]
+    fn respects_box_constraints() {
+        let mut rng = Pcg::seed(7);
+        let cfg = EsConfig { budget: 200, lo: -0.5, hi: 0.5, ..Default::default() };
+        let r = minimize(4, None, &cfg, &mut rng, |w| -w.iter().sum::<f64>());
+        for v in &r.best {
+            assert!((-0.5..=0.5).contains(v));
+        }
+        // maximizing Σw → should push toward hi
+        assert!(r.best.iter().sum::<f64>() > 1.0, "{:?}", r.best);
+    }
+
+    #[test]
+    fn l1_drives_sparsity() {
+        // Flat objective: only the L1 term matters; weights stay ~0.
+        let mut rng = Pcg::seed(3);
+        let cfg = EsConfig { budget: 400, l1: 1.0, ..Default::default() };
+        let r = minimize(5, Some(&[1.0, 1.0, 1.0, 1.0, 1.0]), &cfg, &mut rng, |_| 0.0);
+        assert!(l1norm(&r.best) < 2.0, "{:?}", r.best);
+    }
+
+    #[test]
+    fn respects_budget() {
+        let mut rng = Pcg::seed(1);
+        let mut count = 0usize;
+        let cfg = EsConfig { budget: 100, restarts: 2, ..Default::default() };
+        minimize(2, None, &cfg, &mut rng, |_| {
+            count += 1;
+            0.0
+        });
+        assert!(count <= 102, "count={count}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let run = || {
+            let mut rng = Pcg::seed(55);
+            minimize(3, None, &EsConfig::default(), &mut rng, |w| {
+                w.iter().map(|v| v * v).sum()
+            })
+            .best
+        };
+        assert_eq!(run(), run());
+    }
+}

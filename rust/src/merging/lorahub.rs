@@ -1,0 +1,121 @@
+//! LoraHub-style dynamic LoRA composition (Huang et al., 2023; paper
+//! §3.6).
+//!
+//! Given N expert LoRA modules {Lᵢ = (Aᵢ, Bᵢ)} and a few-shot unseen
+//! task, LoraHub learns scalar weights wᵢ and composes
+//!
+//! ```text
+//! L_m = (Σᵢ wᵢ Aᵢ)(Σᵢ wᵢ Bᵢ)          (paper Eq. 1)
+//! ```
+//!
+//! Because our model applies LoRA as `x ↦ x·A·B`, summing the A and B
+//! ParamSets with weights wᵢ *is* Eq. 1 — composition happens on the
+//! parameters, and the runtime multiplies the composed matrices. The
+//! weights are learned with the gradient-free (1+1)-ES in
+//! [`crate::merging::es`] from a few-shot objective supplied by the
+//! caller (the Figure 4 bench plugs in the runtime's few-shot loss).
+
+use crate::merging::es::{self, EsConfig, EsResult};
+use crate::merging::weighted_sum;
+use crate::tensor::ParamSet;
+use crate::util::rng::Pcg;
+use anyhow::Result;
+
+/// Compose expert LoRA ParamSets with fixed weights (paper Eq. 1).
+pub fn compose(experts: &[ParamSet], weights: &[f64]) -> Result<ParamSet> {
+    weighted_sum(experts, weights)
+}
+
+/// Outcome of a LoraHub adaptation run.
+#[derive(Clone, Debug)]
+pub struct LoraHubResult {
+    pub weights: Vec<f64>,
+    pub composed: ParamSet,
+    /// Best few-shot objective value seen (lower is better).
+    pub best_loss: f64,
+    pub evals: usize,
+}
+
+/// Learn composition weights for an unseen task.
+///
+/// `loss(composed)` evaluates the few-shot objective of a candidate
+/// composed module (e.g. cross-entropy of the adapted model on the
+/// task's few-shot examples, computed through the PJRT runtime).
+pub fn learn_composition<F>(
+    experts: &[ParamSet],
+    cfg: &EsConfig,
+    rng: &mut Pcg,
+    mut loss: F,
+) -> Result<LoraHubResult>
+where
+    F: FnMut(&ParamSet) -> f64,
+{
+    anyhow::ensure!(!experts.is_empty(), "no experts to compose");
+    let n = experts.len();
+    // LoraHub initializes all weights to 0 (base model) and perturbs.
+    let r: EsResult = es::minimize(n, Some(&vec![0.0; n]), cfg, rng, |w| {
+        match compose(experts, w) {
+            Ok(c) => loss(&c),
+            Err(_) => f64::INFINITY,
+        }
+    });
+    let composed = compose(experts, &r.best)?;
+    Ok(LoraHubResult {
+        weights: r.best,
+        composed,
+        best_loss: r.best_value,
+        evals: r.evals,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    fn expert(a: &[f32], b: &[f32]) -> ParamSet {
+        let mut p = ParamSet::new();
+        p.insert("l0.lora_a", Tensor::new(vec![2, 1], a.to_vec()));
+        p.insert("l0.lora_b", Tensor::new(vec![1, 2], b.to_vec()));
+        p
+    }
+
+    #[test]
+    fn compose_is_weighted_sum_of_factors() {
+        let e1 = expert(&[1.0, 0.0], &[1.0, 0.0]);
+        let e2 = expert(&[0.0, 1.0], &[0.0, 1.0]);
+        let c = compose(&[e1, e2], &[0.5, 2.0]).unwrap();
+        assert_eq!(c.get("l0.lora_a").unwrap().data, vec![0.5, 2.0]);
+        assert_eq!(c.get("l0.lora_b").unwrap().data, vec![0.5, 2.0]);
+    }
+
+    #[test]
+    fn learns_to_pick_matching_expert() {
+        // Loss prefers a composition equal to e1's parameters: the
+        // optimizer should find w ≈ (1, 0).
+        let e1 = expert(&[1.0, 2.0], &[3.0, 4.0]);
+        let e2 = expert(&[-5.0, 1.0], &[0.0, -2.0]);
+        let target = e1.flatten();
+        let mut rng = Pcg::seed(11);
+        let cfg = EsConfig { budget: 800, l1: 0.01, ..Default::default() };
+        let r = learn_composition(&[e1.clone(), e2], &cfg, &mut rng, |c| {
+            c.flatten()
+                .iter()
+                .zip(&target)
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum()
+        })
+        .unwrap();
+        assert!(r.best_loss < 0.5, "loss={}", r.best_loss);
+        assert!((r.weights[0] - 1.0).abs() < 0.3, "{:?}", r.weights);
+        assert!(r.weights[1].abs() < 0.3, "{:?}", r.weights);
+    }
+
+    #[test]
+    fn empty_experts_error() {
+        let mut rng = Pcg::seed(1);
+        assert!(
+            learn_composition(&[], &EsConfig::default(), &mut rng, |_| 0.0).is_err()
+        );
+    }
+}

@@ -1,0 +1,80 @@
+//! Model merging and composition methods (paper §3.6, §3.7).
+//!
+//! * [`average`] — weight averaging (Choshen et al., 2022)
+//! * [`task_arithmetic`] — scaled task-vector addition (Ilharco et al., 2023)
+//! * [`ties`] — TIES-Merging: trim / elect-sign / disjoint-merge
+//!   (Yadav et al., 2023)
+//! * [`lorahub`] — dynamic LoRA composition with gradient-free weight
+//!   learning (Huang et al., 2023), powered by [`es`], our (1+1)-ES
+//!   stand-in for the Shiwa optimizer.
+//!
+//! All methods take task vectors (not full checkpoints); the merged
+//! model is `base + merged_tv`. The Table 6 / Figure 4 benches call
+//! these with both original and ComPEFT-decompressed task vectors.
+
+pub mod es;
+pub mod lorahub;
+pub mod ties;
+
+use crate::tensor::ParamSet;
+use anyhow::{bail, Result};
+
+/// Weighted sum of task vectors: `Σ_i w_i · tv_i`.
+pub fn weighted_sum(tvs: &[ParamSet], weights: &[f64]) -> Result<ParamSet> {
+    if tvs.is_empty() {
+        bail!("no task vectors to merge");
+    }
+    if tvs.len() != weights.len() {
+        bail!("{} task vectors but {} weights", tvs.len(), weights.len());
+    }
+    let mut out = tvs[0].clone();
+    for t in out.names().to_vec() {
+        out.get_mut(&t).unwrap().scale(weights[0] as f32);
+    }
+    for (tv, &w) in tvs.iter().zip(weights).skip(1) {
+        out.add_scaled(tv, w as f32)?;
+    }
+    Ok(out)
+}
+
+/// Simple averaging: merged tv = mean of task vectors.
+pub fn average(tvs: &[ParamSet]) -> Result<ParamSet> {
+    let w = 1.0 / tvs.len() as f64;
+    weighted_sum(tvs, &vec![w; tvs.len()])
+}
+
+/// Task Arithmetic: merged tv = λ · Σ task vectors. The paper tunes λ
+/// on validation; Table 6 benches sweep it.
+pub fn task_arithmetic(tvs: &[ParamSet], lambda: f64) -> Result<ParamSet> {
+    weighted_sum(tvs, &vec![lambda; tvs.len()])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    fn tv(vals: &[f32]) -> ParamSet {
+        let mut p = ParamSet::new();
+        p.insert("w", Tensor::new(vec![vals.len()], vals.to_vec()));
+        p
+    }
+
+    #[test]
+    fn average_is_mean() {
+        let m = average(&[tv(&[1.0, 2.0]), tv(&[3.0, 6.0])]).unwrap();
+        assert_eq!(m.get("w").unwrap().data, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn task_arithmetic_scales_sum() {
+        let m = task_arithmetic(&[tv(&[1.0, 0.0]), tv(&[1.0, 2.0])], 0.5).unwrap();
+        assert_eq!(m.get("w").unwrap().data, vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn mismatched_weights_error() {
+        assert!(weighted_sum(&[tv(&[1.0])], &[1.0, 2.0]).is_err());
+        assert!(weighted_sum(&[], &[]).is_err());
+    }
+}

@@ -1,0 +1,129 @@
+//! TIES-Merging (Yadav et al., 2023): TrIm, Elect Sign, and disjoint
+//! mErge. The paper's Table 6 merges 7 GLUE-task experts with TIES on
+//! both original and ComPEFT checkpoints.
+//!
+//! 1. **Trim** each task vector to its top-k entries by magnitude
+//!    (keeping values).
+//! 2. **Elect** a sign per parameter: the sign of the summed trimmed
+//!    values across tasks (mass-weighted majority).
+//! 3. **Disjoint merge**: average only the contributions whose sign
+//!    agrees with the elected sign.
+//! 4. Scale the merged vector by λ.
+
+use crate::compeft::sparsify::prune_to_topk;
+use crate::tensor::ParamSet;
+use anyhow::{bail, Result};
+
+/// Configuration for a TIES merge.
+#[derive(Clone, Copy, Debug)]
+pub struct TiesConfig {
+    /// Fraction of entries kept in the trim step (TIES paper uses 0.2).
+    pub density: f64,
+    /// Final scale λ applied to the merged task vector.
+    pub lambda: f64,
+}
+
+impl Default for TiesConfig {
+    fn default() -> Self {
+        TiesConfig { density: 0.2, lambda: 1.0 }
+    }
+}
+
+/// Merge task vectors with TIES over their flattened global view.
+pub fn ties_merge(tvs: &[ParamSet], cfg: &TiesConfig) -> Result<ParamSet> {
+    if tvs.is_empty() {
+        bail!("no task vectors to merge");
+    }
+    let names: Vec<String> = tvs[0].names().to_vec();
+    for tv in tvs {
+        if tv.names() != names {
+            bail!("task vectors have differing parameter sets");
+        }
+    }
+
+    // Step 1: trim per task (flatten → top-k keep values).
+    let trimmed: Vec<Vec<f32>> =
+        tvs.iter().map(|tv| prune_to_topk(&tv.flatten(), cfg.density)).collect();
+    let d = trimmed[0].len();
+
+    // Step 2: elect sign from total mass.
+    let mut elected = vec![0.0f32; d];
+    for t in &trimmed {
+        for (e, &v) in elected.iter_mut().zip(t) {
+            *e += v;
+        }
+    }
+
+    // Step 3: disjoint mean of sign-agreeing contributions.
+    let mut merged = vec![0.0f32; d];
+    let mut counts = vec![0u32; d];
+    for t in &trimmed {
+        for i in 0..d {
+            let v = t[i];
+            if v != 0.0 && v.signum() == elected[i].signum() {
+                merged[i] += v;
+                counts[i] += 1;
+            }
+        }
+    }
+    for i in 0..d {
+        if counts[i] > 0 {
+            merged[i] = merged[i] / counts[i] as f32 * cfg.lambda as f32;
+        }
+    }
+
+    tvs[0].unflatten_like(&merged)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    fn tv(vals: &[f32]) -> ParamSet {
+        let mut p = ParamSet::new();
+        p.insert("w", Tensor::new(vec![vals.len()], vals.to_vec()));
+        p
+    }
+
+    #[test]
+    fn sign_conflicts_resolved_by_mass() {
+        // Param 0: +3 vs -1 → elected +, merged keeps only +3.
+        // Param 1: agreeing -2, -4 → mean -3.
+        let a = tv(&[3.0, -2.0]);
+        let b = tv(&[-1.0, -4.0]);
+        let m = ties_merge(&[a, b], &TiesConfig { density: 1.0, lambda: 1.0 }).unwrap();
+        assert_eq!(m.get("w").unwrap().data, vec![3.0, -3.0]);
+    }
+
+    #[test]
+    fn trim_removes_small_entries_before_election() {
+        // With density 0.5, each tv keeps its single largest entry.
+        let a = tv(&[10.0, 0.1]);
+        let b = tv(&[0.1, -8.0]);
+        let m = ties_merge(&[a, b], &TiesConfig { density: 0.5, lambda: 1.0 }).unwrap();
+        assert_eq!(m.get("w").unwrap().data, vec![10.0, -8.0]);
+    }
+
+    #[test]
+    fn lambda_scales_output() {
+        let a = tv(&[2.0]);
+        let m1 = ties_merge(&[a.clone()], &TiesConfig { density: 1.0, lambda: 1.0 }).unwrap();
+        let m2 = ties_merge(&[a], &TiesConfig { density: 1.0, lambda: 0.5 }).unwrap();
+        assert_eq!(m2.get("w").unwrap().data[0], m1.get("w").unwrap().data[0] * 0.5);
+    }
+
+    #[test]
+    fn single_task_is_identityish() {
+        let a = tv(&[1.0, -2.0, 3.0]);
+        let m = ties_merge(&[a.clone()], &TiesConfig { density: 1.0, lambda: 1.0 }).unwrap();
+        assert_eq!(m.get("w").unwrap().data, a.get("w").unwrap().data);
+    }
+
+    #[test]
+    fn mismatched_params_error() {
+        let mut b = ParamSet::new();
+        b.insert("other", Tensor::new(vec![1], vec![1.0]));
+        assert!(ties_merge(&[tv(&[1.0]), b], &TiesConfig::default()).is_err());
+    }
+}

@@ -1,0 +1,260 @@
+//! A loaded µT model: metadata, parameters, device buffers, and the
+//! compiled forward executables for each adapter kind and batch size.
+
+use crate::runtime::client::{Executable, Runtime};
+use crate::tensor::ParamSet;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+/// Which forward variant an execution uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum AdapterKind {
+    Base,
+    Lora,
+    Ia3,
+}
+
+impl AdapterKind {
+    fn artifact_stem(self) -> &'static str {
+        match self {
+            AdapterKind::Base => "forward",
+            AdapterKind::Lora => "forward_lora",
+            AdapterKind::Ia3 => "forward_ia3",
+        }
+    }
+}
+
+/// Batch sizes exported by aot.py (see server::SERVE_BATCH).
+#[allow(dead_code)]
+pub const SERVE_BATCH: usize = 8;
+#[allow(dead_code)]
+pub const EVAL_BATCH: usize = 64;
+
+/// Parsed `meta.json` for one scale.
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub scale: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_params: usize,
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub lora_rank: usize,
+    pub base_order: Vec<String>,
+    pub lora_order: Vec<String>,
+    pub ia3_order: Vec<String>,
+}
+
+impl ModelMeta {
+    pub fn load(path: &Path) -> Result<ModelMeta> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let j = Json::parse(&text)?;
+        let get_num = |k: &str| -> Result<usize> {
+            Ok(j.get(k)
+                .and_then(|v| v.as_f64())
+                .with_context(|| format!("meta missing {k}"))? as usize)
+        };
+        let get_list = |k: &str| -> Result<Vec<String>> {
+            match j.get(k) {
+                Some(Json::Arr(xs)) => Ok(xs
+                    .iter()
+                    .filter_map(|x| x.as_str().map(|s| s.to_string()))
+                    .collect()),
+                _ => bail!("meta missing list {k}"),
+            }
+        };
+        Ok(ModelMeta {
+            scale: j
+                .get("scale")
+                .and_then(|v| v.as_str())
+                .unwrap_or_default()
+                .to_string(),
+            d_model: get_num("d_model")?,
+            n_layers: get_num("n_layers")?,
+            n_params: get_num("n_params")?,
+            vocab: get_num("vocab")?,
+            seq_len: get_num("seq_len")?,
+            lora_rank: get_num("lora_rank")?,
+            base_order: get_list("base_order")?,
+            lora_order: get_list("lora_order")?,
+            ia3_order: get_list("ia3_order")?,
+        })
+    }
+}
+
+/// A fully loaded model scale.
+pub struct ModelBundle {
+    pub meta: ModelMeta,
+    pub base: ParamSet,
+    pub lora_init: ParamSet,
+    pub ia3_init: ParamSet,
+    rt: Runtime,
+    dir: PathBuf,
+    /// Base parameters resident on device, in `meta.base_order`.
+    base_buffers: Vec<xla::PjRtBuffer>,
+    /// Lazily compiled executables keyed by (kind, batch).
+    exes: Mutex<HashMap<(AdapterKind, usize), Arc<Executable>>>,
+}
+
+impl ModelBundle {
+    /// Load a scale from `artifacts/models/{scale}`.
+    pub fn load(rt: &Runtime, artifacts: &Path, scale: &str) -> Result<ModelBundle> {
+        let dir = artifacts.join("models").join(scale);
+        let meta = ModelMeta::load(&dir.join("meta.json"))?;
+        let base = ParamSet::load_npz(&dir.join("base.npz"))?;
+        let lora_init = ParamSet::load_npz(&dir.join("lora_init.npz"))?;
+        let ia3_init = ParamSet::load_npz(&dir.join("ia3_init.npz"))?;
+
+        let mut base_buffers = Vec::with_capacity(meta.base_order.len());
+        for name in &meta.base_order {
+            let t = base
+                .get(name)
+                .with_context(|| format!("base param {name:?} missing"))?;
+            base_buffers.push(rt.upload_f32(t)?);
+        }
+        Ok(ModelBundle {
+            meta,
+            base,
+            lora_init,
+            ia3_init,
+            rt: rt.clone(),
+            dir,
+            base_buffers,
+            exes: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+
+    /// Get (compiling on first use) the executable for a variant.
+    pub fn executable(&self, kind: AdapterKind, batch: usize) -> Result<Arc<Executable>> {
+        let mut exes = self.exes.lock().unwrap();
+        if let Some(e) = exes.get(&(kind, batch)) {
+            return Ok(Arc::clone(e));
+        }
+        let path = self.dir.join(format!("{}_b{batch}.hlo.txt", kind.artifact_stem()));
+        let exe = Arc::new(self.rt.load_hlo_text(&path)?);
+        exes.insert((kind, batch), Arc::clone(&exe));
+        Ok(exe)
+    }
+
+    fn adapter_order(&self, kind: AdapterKind) -> &[String] {
+        match kind {
+            AdapterKind::Base => &[],
+            AdapterKind::Lora => &self.meta.lora_order,
+            AdapterKind::Ia3 => &self.meta.ia3_order,
+        }
+    }
+
+    /// Upload adapter parameters in canonical order.
+    pub fn upload_adapter(
+        &self,
+        kind: AdapterKind,
+        adapter: &ParamSet,
+    ) -> Result<Vec<xla::PjRtBuffer>> {
+        let mut bufs = Vec::new();
+        for name in self.adapter_order(kind) {
+            let t = adapter
+                .get(name)
+                .with_context(|| format!("adapter param {name:?} missing"))?;
+            bufs.push(self.rt.upload_f32(t)?);
+        }
+        Ok(bufs)
+    }
+
+    /// Upload a full replacement parameter set (full-FT experts).
+    pub fn upload_full_params(&self, params: &ParamSet) -> Result<Vec<xla::PjRtBuffer>> {
+        let mut bufs = Vec::with_capacity(self.meta.base_order.len());
+        for name in &self.meta.base_order {
+            let t = params
+                .get(name)
+                .with_context(|| format!("param {name:?} missing"))?;
+            bufs.push(self.rt.upload_f32(t)?);
+        }
+        Ok(bufs)
+    }
+
+    /// Run one already-padded batch. `adapter_bufs` must match `kind`;
+    /// `full_bufs` (if given) replaces the resident base parameters.
+    pub fn run_batch(
+        &self,
+        kind: AdapterKind,
+        batch: usize,
+        adapter_bufs: &[xla::PjRtBuffer],
+        full_bufs: Option<&[xla::PjRtBuffer]>,
+        tokens: &[i32],
+    ) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            tokens.len() == batch * self.meta.seq_len,
+            "tokens {} != batch {batch} * seq {}",
+            tokens.len(),
+            self.meta.seq_len
+        );
+        let tok_buf = self.rt.upload_tokens(tokens, batch, self.meta.seq_len)?;
+        let exe = self.executable(kind, batch)?;
+        let base: &[xla::PjRtBuffer] = match full_bufs {
+            Some(b) => b,
+            None => &self.base_buffers,
+        };
+        let mut args: Vec<&xla::PjRtBuffer> =
+            Vec::with_capacity(base.len() + adapter_bufs.len() + 1);
+        args.extend(base.iter());
+        args.extend(adapter_bufs.iter());
+        args.push(&tok_buf);
+        let (out, dims) = exe.run_buffers(&args)?;
+        anyhow::ensure!(
+            dims == vec![batch, self.meta.vocab],
+            "unexpected logits shape {dims:?}"
+        );
+        Ok(out)
+    }
+
+    /// Compute logits for arbitrarily many examples, chunking and
+    /// padding to `batch`. Returns `[n, vocab]` row-major.
+    pub fn logits(
+        &self,
+        kind: AdapterKind,
+        batch: usize,
+        adapter: Option<&ParamSet>,
+        full_params: Option<&ParamSet>,
+        tokens: &[i32],
+    ) -> Result<Vec<f32>> {
+        let s = self.meta.seq_len;
+        anyhow::ensure!(tokens.len() % s == 0, "token stream not a multiple of seq");
+        let n = tokens.len() / s;
+        let adapter_bufs = match adapter {
+            Some(a) => self.upload_adapter(kind, a)?,
+            None => match kind {
+                AdapterKind::Base => Vec::new(),
+                AdapterKind::Lora => self.upload_adapter(kind, &self.lora_init)?,
+                AdapterKind::Ia3 => self.upload_adapter(kind, &self.ia3_init)?,
+            },
+        };
+        let full_bufs = match full_params {
+            Some(p) => Some(self.upload_full_params(p)?),
+            None => None,
+        };
+
+        let mut out = Vec::with_capacity(n * self.meta.vocab);
+        let mut chunk = vec![0i32; batch * s];
+        let mut i = 0;
+        while i < n {
+            let take = (n - i).min(batch);
+            chunk[..take * s].copy_from_slice(&tokens[i * s..(i + take) * s]);
+            for v in chunk[take * s..].iter_mut() {
+                *v = 0; // pad rows with PAD tokens
+            }
+            let logits =
+                self.run_batch(kind, batch, &adapter_bufs, full_bufs.as_deref(), &chunk)?;
+            out.extend_from_slice(&logits[..take * self.meta.vocab]);
+            i += take;
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,170 @@
+//! Thin wrapper over the `xla` crate's PJRT CPU client.
+
+use crate::tensor::Tensor;
+use anyhow::{Context, Result};
+use std::path::Path;
+use std::sync::Arc;
+
+/// Shared PJRT client. Cheap to clone (Arc inside the xla crate's
+/// PjRtClient as well; we add our own Arc for clarity of ownership).
+#[derive(Clone)]
+pub struct Runtime {
+    client: Arc<xla::PjRtClient>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT runtime.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Runtime { client: Arc::new(client) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO **text** artifact and compile it.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", path.display()))?;
+        Ok(Executable { exe, name: path.display().to_string() })
+    }
+
+    /// Upload an f32 tensor to a device buffer (kept resident).
+    pub fn upload_f32(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(&t.data, &t.shape, None)?)
+    }
+
+    /// Upload an i32 token batch [b, s].
+    pub fn upload_tokens(&self, tokens: &[i32], b: usize, s: usize) -> Result<xla::PjRtBuffer> {
+        anyhow::ensure!(tokens.len() == b * s, "token count mismatch");
+        Ok(self.client.buffer_from_host_buffer(tokens, &[b, s], None)?)
+    }
+
+    /// Upload a scalar f32.
+    pub fn upload_scalar(&self, v: f32) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(&[v], &[], None)?)
+    }
+}
+
+/// One compiled HLO module.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+impl Executable {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute with device-resident buffers; returns the flattened f32
+    /// output of the first (single) tuple element plus its shape.
+    pub fn run_buffers(&self, args: &[&xla::PjRtBuffer]) -> Result<(Vec<f32>, Vec<usize>)> {
+        let outs = self
+            .exe
+            .execute_b(args)
+            .with_context(|| format!("execute {}", self.name))?;
+        let lit = outs[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True → 1-tuple.
+        let out = lit.to_tuple1()?;
+        let shape = out.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        Ok((out.to_vec::<f32>()?, dims))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts() -> std::path::PathBuf {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    /// End-to-end smoke: the Pallas ternarize kernel artifact executes
+    /// through PJRT and matches the Rust-side semantics.
+    #[test]
+    fn pallas_ternarize_artifact_runs() -> Result<()> {
+        let path = artifacts().join("kernels/ternarize.hlo.txt");
+        if !path.exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return Ok(());
+        }
+        let rt = Runtime::cpu()?;
+        let exe = rt.load_hlo_text(&path)?;
+
+        let n = 1 << 16;
+        let mut rng = crate::util::rng::Pcg::seed(5);
+        let tau: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let t = crate::tensor::Tensor::new(vec![n], tau.clone());
+        let buf = rt.upload_f32(&t)?;
+        let thr = rt.upload_scalar(0.8)?;
+        let scale = rt.upload_scalar(2.5)?;
+        let (out, dims) = exe.run_buffers(&[&buf, &thr, &scale])?;
+        assert_eq!(dims, vec![n]);
+        for (i, (&o, &x)) in out.iter().zip(&tau).enumerate() {
+            let expect = if x.abs() >= 0.8 { 2.5 * x.signum() } else { 0.0 };
+            assert!((o - expect).abs() < 1e-6, "elem {i}: {o} vs {expect}");
+        }
+        Ok(())
+    }
+
+    /// The ternary_apply kernel artifact matches the bitmask dot-product
+    /// semantics used by the coordinator.
+    #[test]
+    fn pallas_ternary_apply_artifact_runs() -> Result<()> {
+        let path = artifacts().join("kernels/ternary_apply.hlo.txt");
+        if !path.exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return Ok(());
+        }
+        let rt = Runtime::cpu()?;
+        let exe = rt.load_hlo_text(&path)?;
+
+        let (m, k, n) = (32usize, 256usize, 256usize);
+        let mut rng = crate::util::rng::Pcg::seed(9);
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let mut pos = vec![0.0f32; k * n];
+        let mut neg = vec![0.0f32; k * n];
+        for i in 0..k * n {
+            let r = rng.next_f32();
+            if r < 0.05 {
+                pos[i] = 1.0;
+            } else if r < 0.10 {
+                neg[i] = 1.0;
+            }
+        }
+        let scale = 0.125f32;
+        let bx = rt.upload_f32(&Tensor::new(vec![m, k], x.clone()))?;
+        let bp = rt.upload_f32(&Tensor::new(vec![k, n], pos.clone()))?;
+        let bn = rt.upload_f32(&Tensor::new(vec![k, n], neg.clone()))?;
+        let bs = rt.upload_scalar(scale)?;
+        let (out, dims) = exe.run_buffers(&[&bx, &bp, &bn, &bs])?;
+        assert_eq!(dims, vec![m, n]);
+        // Reference matmul.
+        for row in [0usize, 7, 31] {
+            for col in [0usize, 100, 255] {
+                let mut acc = 0.0f64;
+                for kk in 0..k {
+                    acc += x[row * k + kk] as f64
+                        * (pos[kk * n + col] - neg[kk * n + col]) as f64;
+                }
+                let expect = acc as f32 * scale;
+                let got = out[row * n + col];
+                assert!(
+                    (got - expect).abs() < 1e-3 + 1e-3 * expect.abs(),
+                    "({row},{col}): {got} vs {expect}"
+                );
+            }
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,15 @@
+//! PJRT runtime: load AOT-lowered HLO text artifacts and execute them.
+//!
+//! This is the only place the Rust side touches XLA. Python lowers the
+//! µT forward passes once (`python/compile/aot.py`); here we compile
+//! them on the PJRT CPU client and serve executions on the request
+//! path. Base-model parameters are uploaded to device buffers once per
+//! model and reused across requests (`execute_b`), so a request only
+//! transfers its tokens and, when an expert is swapped in, the adapter
+//! tensors.
+
+mod bundle;
+mod client;
+
+pub use bundle::{AdapterKind, ModelBundle, ModelMeta};
+pub use client::{Executable, Runtime};

@@ -1,0 +1,284 @@
+//! Dense tensors and named parameter sets.
+//!
+//! Task vectors, adapter weights, and model parameters all move through
+//! the coordinator as [`ParamSet`]s: an ordered map from parameter name
+//! (e.g. `"layers.0.attn.wq.lora_a"`) to a dense f32 [`Tensor`]. Order
+//! matters because the AOT-lowered executables take parameters
+//! positionally; `ParamSet` iterates in insertion order, which the
+//! Python side fixes canonically (sorted names).
+
+use crate::util::npz::{self, NpyArray};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// A dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} does not match {} elements",
+            data.len()
+        );
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Elementwise a += b.
+    pub fn add_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape, "shape mismatch in add_assign");
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// Elementwise a += s * b.
+    pub fn add_scaled(&mut self, other: &Tensor, s: f32) {
+        assert_eq!(self.shape, other.shape, "shape mismatch in add_scaled");
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += s * b;
+        }
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for a in &mut self.data {
+            *a *= s;
+        }
+    }
+
+    /// L2 norm.
+    pub fn norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+}
+
+/// Ordered, named collection of tensors.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ParamSet {
+    names: Vec<String>,
+    tensors: BTreeMap<String, Tensor>,
+}
+
+impl ParamSet {
+    pub fn new() -> ParamSet {
+        ParamSet::default()
+    }
+
+    pub fn insert(&mut self, name: &str, t: Tensor) {
+        if !self.tensors.contains_key(name) {
+            self.names.push(name.to_string());
+        }
+        self.tensors.insert(name.to_string(), t);
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.tensors.get(name)
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Option<&mut Tensor> {
+        self.tensors.get_mut(name)
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &Tensor)> {
+        self.names.iter().map(move |n| (n.as_str(), &self.tensors[n]))
+    }
+
+    /// Total number of scalar parameters.
+    pub fn total_elements(&self) -> usize {
+        self.tensors.values().map(|t| t.len()).sum()
+    }
+
+    /// Total size in bytes at 16-bit precision — the paper's baseline
+    /// for "original checkpoint" storage (§2.2: 16·d bits).
+    pub fn bytes_fp16(&self) -> u64 {
+        self.total_elements() as u64 * 2
+    }
+
+    /// Flatten all tensors (in name order) into one vector. This is the
+    /// `τ ∈ R^d` view used by Algorithm 1 when compressing globally.
+    pub fn flatten(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.total_elements());
+        for (_, t) in self.iter() {
+            out.extend_from_slice(&t.data);
+        }
+        out
+    }
+
+    /// Inverse of [`flatten`]: reshape a flat vector back into this
+    /// set's structure.
+    pub fn unflatten_like(&self, flat: &[f32]) -> Result<ParamSet> {
+        if flat.len() != self.total_elements() {
+            bail!("flat length {} != total elements {}", flat.len(), self.total_elements());
+        }
+        let mut out = ParamSet::new();
+        let mut off = 0;
+        for (name, t) in self.iter() {
+            let n = t.len();
+            out.insert(name, Tensor::new(t.shape.clone(), flat[off..off + n].to_vec()));
+            off += n;
+        }
+        Ok(out)
+    }
+
+    /// self += other (matching names; missing names are an error).
+    pub fn add_assign(&mut self, other: &ParamSet) -> Result<()> {
+        for (name, t) in other.iter() {
+            match self.tensors.get_mut(name) {
+                Some(mine) => mine.add_assign(t),
+                None => bail!("parameter {name:?} missing in target"),
+            }
+        }
+        Ok(())
+    }
+
+    /// self += s * other.
+    pub fn add_scaled(&mut self, other: &ParamSet, s: f32) -> Result<()> {
+        for (name, t) in other.iter() {
+            match self.tensors.get_mut(name) {
+                Some(mine) => mine.add_scaled(t, s),
+                None => bail!("parameter {name:?} missing in target"),
+            }
+        }
+        Ok(())
+    }
+
+    /// Difference `self - other` as a new set (task vector τ = θ_ft − θ_init).
+    pub fn sub(&self, other: &ParamSet) -> Result<ParamSet> {
+        let mut out = ParamSet::new();
+        for (name, t) in self.iter() {
+            let o = other
+                .get(name)
+                .with_context(|| format!("parameter {name:?} missing in init"))?;
+            if o.shape != t.shape {
+                bail!("shape mismatch for {name:?}: {:?} vs {:?}", t.shape, o.shape);
+            }
+            let data = t.data.iter().zip(&o.data).map(|(a, b)| a - b).collect();
+            out.insert(name, Tensor::new(t.shape.clone(), data));
+        }
+        Ok(out)
+    }
+
+    /// Load from an `.npz` file, inserting in sorted-name order (the
+    /// canonical order fixed by the Python exporter).
+    pub fn load_npz(path: &Path) -> Result<ParamSet> {
+        let arrays = npz::read_npz(path)?;
+        let mut out = ParamSet::new();
+        for (name, arr) in arrays {
+            let data = arr.to_f32().with_context(|| format!("tensor {name:?}"))?;
+            out.insert(&name, Tensor::new(arr.shape.clone(), data));
+        }
+        Ok(out)
+    }
+
+    /// Save to an `.npz` file.
+    pub fn save_npz(&self, path: &Path) -> Result<()> {
+        let mut arrays = BTreeMap::new();
+        for (name, t) in self.iter() {
+            arrays
+                .insert(name.to_string(), NpyArray::from_f32(t.shape.clone(), &t.data));
+        }
+        npz::write_npz(path, &arrays)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ParamSet {
+        let mut p = ParamSet::new();
+        p.insert("a", Tensor::new(vec![2, 2], vec![1., 2., 3., 4.]));
+        p.insert("b", Tensor::new(vec![3], vec![-1., 0., 1.]));
+        p
+    }
+
+    #[test]
+    fn flatten_unflatten_roundtrip() {
+        let p = sample();
+        let flat = p.flatten();
+        assert_eq!(flat.len(), 7);
+        let back = p.unflatten_like(&flat).unwrap();
+        assert_eq!(back, p);
+    }
+
+    #[test]
+    fn unflatten_wrong_len_errors() {
+        let p = sample();
+        assert!(p.unflatten_like(&[0.0; 6]).is_err());
+    }
+
+    #[test]
+    fn sub_gives_task_vector() {
+        let ft = sample();
+        let mut init = sample();
+        init.get_mut("a").unwrap().data = vec![0.5, 2., 3., 4.];
+        let tv = ft.sub(&init).unwrap();
+        assert_eq!(tv.get("a").unwrap().data, vec![0.5, 0., 0., 0.]);
+        assert_eq!(tv.get("b").unwrap().data, vec![0., 0., 0.]);
+    }
+
+    #[test]
+    fn add_scaled_applies() {
+        let mut base = sample();
+        let delta = sample();
+        base.add_scaled(&delta, 0.5).unwrap();
+        assert_eq!(base.get("a").unwrap().data, vec![1.5, 3., 4.5, 6.]);
+    }
+
+    #[test]
+    fn bytes_fp16_accounting() {
+        let p = sample();
+        assert_eq!(p.bytes_fp16(), 14);
+    }
+
+    #[test]
+    fn npz_roundtrip() {
+        let dir = std::env::temp_dir().join("compeft_tensor_test");
+        let path = dir.join("p.npz");
+        let p = sample();
+        p.save_npz(&path).unwrap();
+        let back = ParamSet::load_npz(&path).unwrap();
+        assert_eq!(back.get("a").unwrap().data, p.get("a").unwrap().data);
+        assert_eq!(back.get("b").unwrap().shape, vec![3]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn tensor_mismatch_panics() {
+        let r = std::panic::catch_unwind(|| {
+            Tensor::new(vec![2, 2], vec![1.0]);
+        });
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,188 @@
+//! Hand-rolled micro/macro benchmark harness (criterion is unavailable
+//! offline).
+//!
+//! Each `benches/*.rs` target uses [`Bench`] to run warmups, timed
+//! iterations, and emit a fixed-format row:
+//!
+//! ```text
+//! bench golomb_decode/1M      mean=4.213ms  std=0.104ms  iters=30  thrpt=237.4 MB/s
+//! ```
+//!
+//! plus an optional machine-readable JSONL file under `target/bench/`.
+
+use crate::util::json::Json;
+use crate::util::stats;
+use std::io::Write as _;
+use std::time::{Duration, Instant};
+
+/// Configuration for one benchmark group.
+pub struct Bench {
+    group: String,
+    warmup_iters: usize,
+    measure_iters: usize,
+    jsonl: Option<std::fs::File>,
+}
+
+/// One measured result.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub mean: Duration,
+    pub std: Duration,
+    pub iters: usize,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Bench {
+        let iters = std::env::var("COMPEFT_BENCH_ITERS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(20);
+        let jsonl = std::fs::create_dir_all("target/bench").ok().and_then(|_| {
+            std::fs::OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(format!("target/bench/{group}.jsonl"))
+                .ok()
+        });
+        Bench { group: group.to_string(), warmup_iters: 3, measure_iters: iters, jsonl }
+    }
+
+    pub fn iters(mut self, n: usize) -> Self {
+        self.measure_iters = n;
+        self
+    }
+
+    pub fn warmup(mut self, n: usize) -> Self {
+        self.warmup_iters = n;
+        self
+    }
+
+    /// Time `f` and report. Returns the measurement for programmatic use.
+    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> Measurement {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.measure_iters);
+        for _ in 0..self.measure_iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        self.report(name, &samples, None)
+    }
+
+    /// Time `f` which processes `bytes` per iteration; reports throughput.
+    pub fn run_throughput<F: FnMut()>(
+        &mut self,
+        name: &str,
+        bytes: u64,
+        mut f: F,
+    ) -> Measurement {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.measure_iters);
+        for _ in 0..self.measure_iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        self.report(name, &samples, Some(bytes))
+    }
+
+    fn report(&mut self, name: &str, samples: &[f64], bytes: Option<u64>) -> Measurement {
+        let mean = stats::mean(samples);
+        let sd = stats::std(samples);
+        let m = Measurement {
+            name: format!("{}/{}", self.group, name),
+            mean: Duration::from_secs_f64(mean),
+            std: Duration::from_secs_f64(sd),
+            iters: samples.len(),
+        };
+        let thrpt = bytes.map(|b| b as f64 / mean / 1e6);
+        match thrpt {
+            Some(t) => println!(
+                "bench {:<44} mean={:>10}  std={:>10}  iters={:<3} thrpt={t:.1} MB/s",
+                m.name,
+                fmt_dur(m.mean),
+                fmt_dur(m.std),
+                m.iters
+            ),
+            None => println!(
+                "bench {:<44} mean={:>10}  std={:>10}  iters={}",
+                m.name,
+                fmt_dur(m.mean),
+                fmt_dur(m.std),
+                m.iters
+            ),
+        }
+        if let Some(file) = &mut self.jsonl {
+            let mut j = Json::obj();
+            j.set("name", Json::str(&m.name))
+                .set("mean_s", Json::num(mean))
+                .set("std_s", Json::num(sd))
+                .set("iters", Json::num(samples.len() as f64));
+            if let Some(t) = thrpt {
+                j.set("mb_per_s", Json::num(t));
+            }
+            let _ = writeln!(file, "{}", j.to_string());
+        }
+        m
+    }
+
+    /// Print a free-form result row (for accuracy-style "benches" that
+    /// reproduce paper tables rather than time code).
+    pub fn row(&mut self, label: &str, fields: &[(&str, f64)]) {
+        let mut line = format!("row   {}/{label:<38}", self.group);
+        let mut j = Json::obj();
+        j.set("name", Json::str(&format!("{}/{label}", self.group)));
+        for (k, v) in fields {
+            line.push_str(&format!(" {k}={v:.4}"));
+            j.set(k, Json::num(*v));
+        }
+        println!("{line}");
+        if let Some(file) = &mut self.jsonl {
+            let _ = writeln!(file, "{}", j.to_string());
+        }
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3}µs", s * 1e6)
+    } else {
+        format!("{:.1}ns", s * 1e9)
+    }
+}
+
+/// Prevent the optimizer from eliding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_produces_sane_measurement() {
+        let mut b = Bench::new("selftest").iters(5).warmup(1);
+        let m = b.run("sleep60us", || std::thread::sleep(Duration::from_micros(60)));
+        assert!(m.mean >= Duration::from_micros(55), "mean={:?}", m.mean);
+        assert_eq!(m.iters, 5);
+    }
+
+    #[test]
+    fn fmt_dur_scales() {
+        assert_eq!(fmt_dur(Duration::from_secs(2)), "2.000s");
+        assert_eq!(fmt_dur(Duration::from_millis(5)), "5.000ms");
+        assert_eq!(fmt_dur(Duration::from_micros(7)), "7.000µs");
+    }
+}

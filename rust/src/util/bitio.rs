@@ -1,0 +1,207 @@
+//! Bit-granular I/O used by the Golomb/Rice entropy coder.
+//!
+//! Bits are written MSB-first within each byte so encoded streams are
+//! byte-order independent and easy to inspect in hex dumps.
+
+/// Append-only bit writer backed by a `Vec<u8>`.
+#[derive(Default, Debug)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    /// Number of valid bits in the last byte (0 means last byte is full
+    /// or buffer is empty).
+    partial: u32,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(bytes: usize) -> Self {
+        BitWriter { buf: Vec::with_capacity(bytes), partial: 0 }
+    }
+
+    /// Total number of bits written so far.
+    pub fn bit_len(&self) -> u64 {
+        if self.partial == 0 {
+            self.buf.len() as u64 * 8
+        } else {
+            (self.buf.len() as u64 - 1) * 8 + self.partial as u64
+        }
+    }
+
+    /// Write a single bit.
+    #[inline]
+    pub fn put_bit(&mut self, bit: bool) {
+        if self.partial == 0 {
+            self.buf.push(0);
+        }
+        if bit {
+            let idx = self.buf.len() - 1;
+            self.buf[idx] |= 1 << (7 - self.partial);
+        }
+        self.partial = (self.partial + 1) % 8;
+    }
+
+    /// Write the lowest `n` bits of `v`, MSB first. `n <= 64`.
+    #[inline]
+    pub fn put_bits(&mut self, v: u64, n: u32) {
+        debug_assert!(n <= 64);
+        for i in (0..n).rev() {
+            self.put_bit((v >> i) & 1 == 1);
+        }
+    }
+
+    /// Write `n` consecutive one-bits followed by a zero (unary code).
+    #[inline]
+    pub fn put_unary(&mut self, n: u64) {
+        for _ in 0..n {
+            self.put_bit(true);
+        }
+        self.put_bit(false);
+    }
+
+    /// Finish and return the byte buffer (zero-padded in the last byte).
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.buf
+    }
+}
+
+/// Bit reader over a byte slice, MSB-first (matches [`BitWriter`]).
+#[derive(Debug)]
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    pos: u64, // bit position
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        BitReader { buf, pos: 0 }
+    }
+
+    pub fn bits_remaining(&self) -> u64 {
+        self.buf.len() as u64 * 8 - self.pos
+    }
+
+    pub fn bit_pos(&self) -> u64 {
+        self.pos
+    }
+
+    /// Read one bit; `None` at end of stream.
+    #[inline]
+    pub fn get_bit(&mut self) -> Option<bool> {
+        let byte = (self.pos / 8) as usize;
+        if byte >= self.buf.len() {
+            return None;
+        }
+        let off = 7 - (self.pos % 8) as u32;
+        self.pos += 1;
+        Some((self.buf[byte] >> off) & 1 == 1)
+    }
+
+    /// Read `n` bits MSB-first into the low bits of a u64.
+    #[inline]
+    pub fn get_bits(&mut self, n: u32) -> Option<u64> {
+        debug_assert!(n <= 64);
+        if self.bits_remaining() < n as u64 {
+            return None;
+        }
+        let mut v = 0u64;
+        for _ in 0..n {
+            v = (v << 1) | self.get_bit()? as u64;
+        }
+        Some(v)
+    }
+
+    /// Read a unary code: count of one-bits before the terminating zero.
+    #[inline]
+    pub fn get_unary(&mut self) -> Option<u64> {
+        let mut n = 0u64;
+        loop {
+            match self.get_bit()? {
+                true => n += 1,
+                false => return Some(n),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn single_bits_roundtrip() {
+        let mut w = BitWriter::new();
+        let pattern = [true, false, true, true, false, false, true, false, true];
+        for &b in &pattern {
+            w.put_bit(b);
+        }
+        assert_eq!(w.bit_len(), 9);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        for &b in &pattern {
+            assert_eq!(r.get_bit(), Some(b));
+        }
+    }
+
+    #[test]
+    fn bits_roundtrip_random_widths() {
+        let mut rng = Pcg::seed(42);
+        let mut vals = Vec::new();
+        let mut w = BitWriter::new();
+        for _ in 0..500 {
+            let n = rng.range(1, 65) as u32;
+            let v = rng.next_u64() & (if n == 64 { u64::MAX } else { (1 << n) - 1 });
+            w.put_bits(v, n);
+            vals.push((v, n));
+        }
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        for (v, n) in vals {
+            assert_eq!(r.get_bits(n), Some(v), "width {n}");
+        }
+    }
+
+    #[test]
+    fn unary_roundtrip() {
+        let mut w = BitWriter::new();
+        for n in [0u64, 1, 2, 7, 8, 31, 100] {
+            w.put_unary(n);
+        }
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        for n in [0u64, 1, 2, 7, 8, 31, 100] {
+            assert_eq!(r.get_unary(), Some(n));
+        }
+    }
+
+    #[test]
+    fn eof_returns_none() {
+        let mut w = BitWriter::new();
+        w.put_bits(0b101, 3);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.get_bits(3), Some(0b101));
+        // Remaining padding bits (5) are readable zeros; beyond that: None.
+        assert_eq!(r.get_bits(5), Some(0));
+        assert_eq!(r.get_bit(), None);
+        assert_eq!(r.get_bits(1), None);
+        assert_eq!(r.get_unary(), None);
+    }
+
+    #[test]
+    fn bit_len_accounting() {
+        let mut w = BitWriter::new();
+        assert_eq!(w.bit_len(), 0);
+        w.put_bits(0, 8);
+        assert_eq!(w.bit_len(), 8);
+        w.put_bit(true);
+        assert_eq!(w.bit_len(), 9);
+    }
+}

@@ -1,0 +1,240 @@
+//! Declarative command-line flag parsing (clap is unavailable offline).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, defaults,
+//! required flags, and generated `--help` text. Each binary/subcommand
+//! builds an [`ArgSpec`] and calls [`ArgSpec::parse`].
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+struct FlagDef {
+    name: &'static str,
+    help: &'static str,
+    default: Option<String>,
+    required: bool,
+    is_bool: bool,
+}
+
+/// Specification of the flags a command accepts.
+#[derive(Clone, Debug, Default)]
+pub struct ArgSpec {
+    command: &'static str,
+    about: &'static str,
+    flags: Vec<FlagDef>,
+}
+
+/// Parsed argument values.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl ArgSpec {
+    pub fn new(command: &'static str, about: &'static str) -> Self {
+        ArgSpec { command, about, flags: Vec::new() }
+    }
+
+    /// Optional flag with a default value.
+    pub fn flag(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.flags.push(FlagDef {
+            name,
+            help,
+            default: Some(default.to_string()),
+            required: false,
+            is_bool: false,
+        });
+        self
+    }
+
+    /// Required flag (no default).
+    pub fn required(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagDef { name, help, default: None, required: true, is_bool: false });
+        self
+    }
+
+    /// Boolean flag (presence = true).
+    pub fn boolean(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagDef {
+            name,
+            help,
+            default: Some("false".to_string()),
+            required: false,
+            is_bool: true,
+        });
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\nFlags:\n", self.command, self.about);
+        for f in &self.flags {
+            let kind = if f.is_bool {
+                String::new()
+            } else if let Some(d) = &f.default {
+                format!(" <value> (default: {d})")
+            } else {
+                " <value> (required)".to_string()
+            };
+            s.push_str(&format!("  --{}{}\n      {}\n", f.name, kind, f.help));
+        }
+        s
+    }
+
+    /// Parse raw argv (not including the program/subcommand names).
+    pub fn parse(&self, argv: &[String]) -> Result<Args> {
+        let mut values = BTreeMap::new();
+        for f in &self.flags {
+            if let Some(d) = &f.default {
+                values.insert(f.name.to_string(), d.clone());
+            }
+        }
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if tok == "--help" || tok == "-h" {
+                bail!("{}", self.help_text());
+            }
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let def = self
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("unknown flag --{name}\n\n{}", self.help_text())
+                    })?;
+                let value = if def.is_bool {
+                    match inline {
+                        Some(v) => v,
+                        None => "true".to_string(),
+                    }
+                } else {
+                    match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            if i >= argv.len() {
+                                bail!("flag --{name} expects a value");
+                            }
+                            argv[i].clone()
+                        }
+                    }
+                };
+                values.insert(name, value);
+            } else {
+                positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        for f in &self.flags {
+            if f.required && !values.contains_key(f.name) {
+                bail!("missing required flag --{}\n\n{}", f.name, self.help_text());
+            }
+        }
+        Ok(Args { values, positional })
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("flag {name} not declared in spec"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize> {
+        let v = self.get(name);
+        v.parse().map_err(|_| anyhow::anyhow!("--{name}: expected integer, got {v:?}"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64> {
+        let v = self.get(name);
+        v.parse().map_err(|_| anyhow::anyhow!("--{name}: expected integer, got {v:?}"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64> {
+        let v = self.get(name);
+        v.parse().map_err(|_| anyhow::anyhow!("--{name}: expected number, got {v:?}"))
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        matches!(self.get(name), "true" | "1" | "yes")
+    }
+
+    /// Comma-separated list helper.
+    pub fn get_list(&self, name: &str) -> Vec<String> {
+        let v = self.get(name);
+        if v.is_empty() {
+            Vec::new()
+        } else {
+            v.split(',').map(|s| s.trim().to_string()).collect()
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    fn spec() -> ArgSpec {
+        ArgSpec::new("test", "test command")
+            .flag("k", "20", "density percent")
+            .flag("alpha", "1.0", "scaling")
+            .required("input", "input path")
+            .boolean("verbose", "chatty")
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let a = spec().parse(&argv(&["--input", "x.npz"])).unwrap();
+        assert_eq!(a.get("k"), "20");
+        assert_eq!(a.get_f64("alpha").unwrap(), 1.0);
+        assert_eq!(a.get("input"), "x.npz");
+        assert!(!a.get_bool("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax_and_bool() {
+        let a = spec()
+            .parse(&argv(&["--input=y.npz", "--k=5", "--verbose"]))
+            .unwrap();
+        assert_eq!(a.get_usize("k").unwrap(), 5);
+        assert!(a.get_bool("verbose"));
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(spec().parse(&argv(&["--k", "5"])).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_errors() {
+        assert!(spec().parse(&argv(&["--input", "x", "--bogus", "1"])).is_err());
+    }
+
+    #[test]
+    fn positional_collected() {
+        let a = spec().parse(&argv(&["--input", "x", "pos1", "pos2"])).unwrap();
+        assert_eq!(a.positional(), &["pos1".to_string(), "pos2".to_string()]);
+    }
+
+    #[test]
+    fn list_parsing() {
+        let s = ArgSpec::new("t", "t").flag("tasks", "a,b,c", "tasks");
+        let a = s.parse(&[]).unwrap();
+        assert_eq!(a.get_list("tasks"), vec!["a", "b", "c"]);
+    }
+}

@@ -1,0 +1,14 @@
+//! Foundation substrates implemented in-repo because the offline crate
+//! set is limited to `xla` + `anyhow` + `zip` (see DESIGN.md §8):
+//! deterministic RNG, bit I/O, stats, npy/npz interchange, a worker
+//! pool, CLI parsing, JSON, a property-test driver, and a bench harness.
+
+pub mod bench;
+pub mod bitio;
+pub mod cli;
+pub mod json;
+pub mod npz;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,356 @@
+//! Minimal `.npy` / `.npz` reader–writer.
+//!
+//! The build-time Python side (training, AOT) exchanges tensors with the
+//! Rust coordinator through NumPy's container formats: `.npy` (one
+//! array) inside `.npz` (a zip archive). We implement the subset we
+//! need — little-endian `f4`, `f8`, `i4`, `i8`, `u1` C-order arrays,
+//! npy format version 1.0 — and write archives with `Stored`
+//! compression so loads are a straight memcpy.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Seek, Write};
+use std::path::Path;
+
+/// Element type of an array.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    F64,
+    I32,
+    I64,
+    U8,
+}
+
+impl DType {
+    pub fn descr(self) -> &'static str {
+        match self {
+            DType::F32 => "<f4",
+            DType::F64 => "<f8",
+            DType::I32 => "<i4",
+            DType::I64 => "<i8",
+            DType::U8 => "|u1",
+        }
+    }
+
+    pub fn size(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::F64 | DType::I64 => 8,
+            DType::U8 => 1,
+        }
+    }
+
+    fn from_descr(d: &str) -> Result<DType> {
+        Ok(match d {
+            "<f4" => DType::F32,
+            "<f8" => DType::F64,
+            "<i4" => DType::I32,
+            "<i8" => DType::I64,
+            "|u1" | "<u1" => DType::U8,
+            other => bail!("unsupported npy dtype descr {other:?}"),
+        })
+    }
+}
+
+/// An n-dimensional array: shape + raw little-endian bytes.
+#[derive(Clone, Debug)]
+pub struct NpyArray {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+impl NpyArray {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn from_f32(shape: Vec<usize>, values: &[f32]) -> NpyArray {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        NpyArray { dtype: DType::F32, shape, data }
+    }
+
+    pub fn from_i64(shape: Vec<usize>, values: &[i64]) -> NpyArray {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        let mut data = Vec::with_capacity(values.len() * 8);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        NpyArray { dtype: DType::I64, shape, data }
+    }
+
+    pub fn to_f32(&self) -> Result<Vec<f32>> {
+        match self.dtype {
+            DType::F32 => Ok(self
+                .data
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect()),
+            DType::F64 => Ok(self
+                .data
+                .chunks_exact(8)
+                .map(|c| {
+                    f64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]])
+                        as f32
+                })
+                .collect()),
+            _ => bail!("array dtype {:?} is not float", self.dtype),
+        }
+    }
+
+    pub fn to_i64(&self) -> Result<Vec<i64>> {
+        match self.dtype {
+            DType::I64 => Ok(self
+                .data
+                .chunks_exact(8)
+                .map(|c| {
+                    i64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]])
+                })
+                .collect()),
+            DType::I32 => Ok(self
+                .data
+                .chunks_exact(4)
+                .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]) as i64)
+                .collect()),
+            DType::U8 => Ok(self.data.iter().map(|&b| b as i64).collect()),
+            _ => bail!("array dtype {:?} is not integer", self.dtype),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// npy (single array)
+// ---------------------------------------------------------------------------
+
+const NPY_MAGIC: &[u8; 6] = b"\x93NUMPY";
+
+/// Serialize one array to npy v1.0 bytes.
+pub fn write_npy_bytes(arr: &NpyArray) -> Vec<u8> {
+    let shape_str = match arr.shape.len() {
+        0 => "()".to_string(),
+        1 => format!("({},)", arr.shape[0]),
+        _ => format!(
+            "({})",
+            arr.shape.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(", ")
+        ),
+    };
+    let header = format!(
+        "{{'descr': '{}', 'fortran_order': False, 'shape': {}, }}",
+        arr.dtype.descr(),
+        shape_str
+    );
+    // Pad so that data begins at a multiple of 64 bytes (numpy convention).
+    let unpadded = NPY_MAGIC.len() + 2 + 2 + header.len() + 1; // +1 newline
+    let pad = (64 - unpadded % 64) % 64;
+    let hlen = (header.len() + pad + 1) as u16;
+
+    let mut out = Vec::with_capacity(unpadded + pad + arr.data.len());
+    out.extend_from_slice(NPY_MAGIC);
+    out.extend_from_slice(&[1u8, 0u8]); // version 1.0
+    out.extend_from_slice(&hlen.to_le_bytes());
+    out.extend_from_slice(header.as_bytes());
+    out.extend(std::iter::repeat(b' ').take(pad));
+    out.push(b'\n');
+    out.extend_from_slice(&arr.data);
+    out
+}
+
+/// Parse npy v1.0/2.0 bytes into an array.
+pub fn read_npy_bytes(bytes: &[u8]) -> Result<NpyArray> {
+    if bytes.len() < 10 || &bytes[..6] != NPY_MAGIC {
+        bail!("not an npy file (bad magic)");
+    }
+    let major = bytes[6];
+    let (hlen, header_start) = match major {
+        1 => (u16::from_le_bytes([bytes[8], bytes[9]]) as usize, 10usize),
+        2 | 3 => {
+            if bytes.len() < 12 {
+                bail!("truncated npy v2 header");
+            }
+            (
+                u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]) as usize,
+                12usize,
+            )
+        }
+        v => bail!("unsupported npy major version {v}"),
+    };
+    let header_end = header_start + hlen;
+    if bytes.len() < header_end {
+        bail!("truncated npy header");
+    }
+    let header = std::str::from_utf8(&bytes[header_start..header_end])
+        .context("npy header not utf-8")?;
+
+    let descr = extract_quoted(header, "descr")?;
+    let dtype = DType::from_descr(&descr)?;
+    if header.contains("'fortran_order': True") {
+        bail!("fortran-order npy arrays are not supported");
+    }
+    let shape = parse_shape(header)?;
+
+    let n: usize = shape.iter().product();
+    let need = n * dtype.size();
+    let data = &bytes[header_end..];
+    if data.len() < need {
+        bail!("npy data truncated: need {need} bytes, have {}", data.len());
+    }
+    Ok(NpyArray { dtype, shape, data: data[..need].to_vec() })
+}
+
+fn extract_quoted(header: &str, key: &str) -> Result<String> {
+    let pat = format!("'{key}':");
+    let at = header.find(&pat).ok_or_else(|| anyhow!("npy header missing {key}"))?;
+    let rest = &header[at + pat.len()..];
+    let q1 = rest.find('\'').ok_or_else(|| anyhow!("bad {key} value"))?;
+    let rest = &rest[q1 + 1..];
+    let q2 = rest.find('\'').ok_or_else(|| anyhow!("bad {key} value"))?;
+    Ok(rest[..q2].to_string())
+}
+
+fn parse_shape(header: &str) -> Result<Vec<usize>> {
+    let at = header.find("'shape':").ok_or_else(|| anyhow!("npy header missing shape"))?;
+    let rest = &header[at..];
+    let open = rest.find('(').ok_or_else(|| anyhow!("bad shape"))?;
+    let close = rest.find(')').ok_or_else(|| anyhow!("bad shape"))?;
+    let inner = &rest[open + 1..close];
+    let mut shape = Vec::new();
+    for part in inner.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        shape.push(part.parse::<usize>().with_context(|| format!("bad dim {part:?}"))?);
+    }
+    Ok(shape)
+}
+
+// ---------------------------------------------------------------------------
+// npz (zip of npy)
+// ---------------------------------------------------------------------------
+
+/// Read all arrays in an `.npz` archive, keyed by entry name without the
+/// `.npy` suffix.
+pub fn read_npz(path: &Path) -> Result<BTreeMap<String, NpyArray>> {
+    let file = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    read_npz_from(file).with_context(|| format!("parse {}", path.display()))
+}
+
+/// Read arrays from any seekable zip stream.
+pub fn read_npz_from<R: Read + Seek>(reader: R) -> Result<BTreeMap<String, NpyArray>> {
+    let mut zip = zip::ZipArchive::new(reader).context("open zip")?;
+    let mut out = BTreeMap::new();
+    for i in 0..zip.len() {
+        let mut entry = zip.by_index(i).context("zip entry")?;
+        let name = entry.name().trim_end_matches(".npy").to_string();
+        let mut bytes = Vec::with_capacity(entry.size() as usize);
+        entry.read_to_end(&mut bytes)?;
+        let arr =
+            read_npy_bytes(&bytes).with_context(|| format!("entry {name:?}"))?;
+        out.insert(name, arr);
+    }
+    Ok(out)
+}
+
+/// Write arrays to an `.npz` archive (stored, uncompressed entries).
+pub fn write_npz(path: &Path, arrays: &BTreeMap<String, NpyArray>) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let file = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    let mut zip = zip::ZipWriter::new(file);
+    let opts = zip::write::FileOptions::default()
+        .compression_method(zip::CompressionMethod::Stored);
+    for (name, arr) in arrays {
+        zip.start_file(format!("{name}.npy"), opts)?;
+        zip.write_all(&write_npy_bytes(arr))?;
+    }
+    zip.finish()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn npy_roundtrip_f32() {
+        let arr = NpyArray::from_f32(vec![2, 3], &[1.0, -2.5, 3.25, 0.0, 7.5, -0.125]);
+        let bytes = write_npy_bytes(&arr);
+        let back = read_npy_bytes(&bytes).unwrap();
+        assert_eq!(back.dtype, DType::F32);
+        assert_eq!(back.shape, vec![2, 3]);
+        assert_eq!(back.to_f32().unwrap(), arr.to_f32().unwrap());
+    }
+
+    #[test]
+    fn npy_roundtrip_scalar_and_1d() {
+        let s = NpyArray::from_f32(vec![], &[42.0]);
+        let back = read_npy_bytes(&write_npy_bytes(&s)).unwrap();
+        assert_eq!(back.shape, Vec::<usize>::new());
+        assert_eq!(back.to_f32().unwrap(), vec![42.0]);
+
+        let v = NpyArray::from_i64(vec![4], &[1, -2, 3, 9_000_000_000]);
+        let back = read_npy_bytes(&write_npy_bytes(&v)).unwrap();
+        assert_eq!(back.shape, vec![4]);
+        assert_eq!(back.to_i64().unwrap(), vec![1, -2, 3, 9_000_000_000]);
+    }
+
+    #[test]
+    fn npy_data_alignment_is_64() {
+        let arr = NpyArray::from_f32(vec![1], &[1.0]);
+        let bytes = write_npy_bytes(&arr);
+        assert_eq!((bytes.len() - 4) % 64, 0, "header must pad to 64B");
+    }
+
+    #[test]
+    fn npz_roundtrip_via_memory() {
+        let mut arrays = BTreeMap::new();
+        arrays.insert("w".to_string(), NpyArray::from_f32(vec![2, 2], &[1., 2., 3., 4.]));
+        arrays.insert("ids".to_string(), NpyArray::from_i64(vec![3], &[7, 8, 9]));
+
+        let mut buf = Vec::new();
+        {
+            let mut zipw = zip::ZipWriter::new(Cursor::new(&mut buf));
+            let opts = zip::write::FileOptions::default()
+                .compression_method(zip::CompressionMethod::Stored);
+            for (name, arr) in &arrays {
+                zipw.start_file(format!("{name}.npy"), opts).unwrap();
+                zipw.write_all(&write_npy_bytes(arr)).unwrap();
+            }
+            zipw.finish().unwrap();
+        }
+        let back = read_npz_from(Cursor::new(&buf)).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back["w"].to_f32().unwrap(), vec![1., 2., 3., 4.]);
+        assert_eq!(back["ids"].to_i64().unwrap(), vec![7, 8, 9]);
+    }
+
+    #[test]
+    fn npz_roundtrip_via_files() {
+        let dir = std::env::temp_dir().join("compeft_npz_test");
+        let path = dir.join("t.npz");
+        let mut arrays = BTreeMap::new();
+        arrays.insert(
+            "a/b".to_string(),
+            NpyArray::from_f32(vec![3], &[0.5, -0.5, 2.0]),
+        );
+        write_npz(&path, &arrays).unwrap();
+        let back = read_npz(&path).unwrap();
+        assert_eq!(back["a/b"].to_f32().unwrap(), vec![0.5, -0.5, 2.0]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(read_npy_bytes(b"not an npy").is_err());
+        assert!(read_npy_bytes(b"").is_err());
+    }
+}

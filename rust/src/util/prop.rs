@@ -1,0 +1,98 @@
+//! Minimal property-based testing driver (proptest is unavailable
+//! offline).
+//!
+//! [`check`] runs a property over `cases` randomly generated inputs and
+//! panics with the *seed and case index* of the first failure so the
+//! case can be replayed deterministically:
+//!
+//! ```text
+//! property failed: golomb roundtrip (seed=7, case=83): ...
+//! ```
+//!
+//! There is no shrinking; generators are encouraged to bias toward small
+//! and boundary inputs instead (see [`sizes`]).
+
+use crate::util::rng::Pcg;
+
+/// Run `prop` on `cases` generated inputs. `gen` receives a per-case RNG.
+pub fn check<T, G, P>(name: &str, cases: usize, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Pcg) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+    T: std::fmt::Debug,
+{
+    let seed = std::env::var("COMPEFT_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE_u64);
+    for case in 0..cases {
+        let mut rng = Pcg::new(seed, case as u64 + 1);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed: {name} (seed={seed}, case={case}): {msg}\ninput: {input:?}"
+            );
+        }
+    }
+}
+
+/// A size ladder biased toward boundaries: empty, singleton, tiny,
+/// non-power-of-two, and a few larger sizes. Useful for vector lengths.
+pub fn sizes(rng: &mut Pcg) -> usize {
+    const LADDER: [usize; 10] = [0, 1, 2, 3, 7, 8, 63, 64, 1000, 4097];
+    if rng.next_f32() < 0.7 {
+        LADDER[rng.range(0, LADDER.len())]
+    } else {
+        rng.range(0, 20_000)
+    }
+}
+
+/// Generate a task-vector-like f32 buffer: mostly near-zero gaussian
+/// values with occasional large-magnitude entries, matching the
+/// statistics reported in the paper's Table 7.
+pub fn task_vector_like(rng: &mut Pcg, n: usize) -> Vec<f32> {
+    let sigma = 10f64.powf(rng.next_f64() * 4.0 - 4.0); // 1e-4 .. 1e0
+    (0..n)
+        .map(|_| {
+            let v = rng.normal_ms(0.0, sigma);
+            if rng.next_f32() < 0.01 {
+                (v * 30.0) as f32 // heavy-tail outliers
+            } else {
+                v as f32
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_for_true_property() {
+        check("reverse twice is identity", 50, |rng| {
+            let n = sizes(rng).min(100);
+            (0..n).map(|_| rng.next_u32()).collect::<Vec<_>>()
+        }, |xs| {
+            let mut ys = xs.clone();
+            ys.reverse();
+            ys.reverse();
+            if ys == *xs { Ok(()) } else { Err("mismatch".into()) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn check_panics_for_false_property() {
+        check("always fails", 5, |rng| rng.next_u32(), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn task_vector_like_has_near_zero_mean() {
+        let mut rng = Pcg::seed(1);
+        let v = task_vector_like(&mut rng, 50_000);
+        let mean: f64 = v.iter().map(|&x| x as f64).sum::<f64>() / v.len() as f64;
+        let sigma = crate::util::stats::std_f32(&v);
+        assert!(mean.abs() < 5.0 * sigma / (v.len() as f64).sqrt() + 1e-6);
+    }
+}

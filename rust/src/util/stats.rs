@@ -1,0 +1,240 @@
+//! Descriptive statistics used throughout the library: task-vector
+//! statistics (paper Table 7), latency summaries (paper Table 5), and
+//! the bench harness (mean ± std rows).
+
+/// Mean of a slice (0 for empty input).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Mean of f32 data computed in f64.
+pub fn mean_f32(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().map(|&x| x as f64).sum::<f64>() / xs.len() as f64
+}
+
+/// Population std of f32 data computed in f64. This is the `σ(τ)` used
+/// by ComPEFT's quantization step (Algorithm 1).
+pub fn std_f32(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let m = mean_f32(xs);
+    let var = xs.iter().map(|&x| (x as f64 - m) * (x as f64 - m)).sum::<f64>()
+        / xs.len() as f64;
+    var.sqrt()
+}
+
+/// Quantile by linear interpolation on a *sorted* slice, q in [0,1].
+pub fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let q = q.clamp(0.0, 1.0);
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let w = pos - lo as f64;
+        sorted[lo] * (1.0 - w) + sorted[hi] * w
+    }
+}
+
+/// Summary of a sample: n, mean, std, min, p50, p95, p99, max.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        assert!(!xs.is_empty(), "Summary::of(empty)");
+        let mut s = xs.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n: xs.len(),
+            mean: mean(xs),
+            std: std(xs),
+            min: s[0],
+            p50: quantile_sorted(&s, 0.50),
+            p95: quantile_sorted(&s, 0.95),
+            p99: quantile_sorted(&s, 0.99),
+            max: *s.last().unwrap(),
+        }
+    }
+}
+
+/// Streaming latency histogram with logarithmic buckets from 1µs to
+/// ~100s. Used by the coordinator's metrics so the hot path only does a
+/// bucket increment (no allocation, no sort).
+#[derive(Clone, Debug)]
+pub struct LogHistogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum_us: f64,
+    max_us: f64,
+}
+
+const HIST_BUCKETS: usize = 160; // 8 buckets per decade over 1e0..1e8 µs
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        LogHistogram { counts: vec![0; HIST_BUCKETS], total: 0, sum_us: 0.0, max_us: 0.0 }
+    }
+
+    fn bucket(us: f64) -> usize {
+        if us <= 1.0 {
+            return 0;
+        }
+        let b = (us.log10() * 20.0) as usize; // 20 buckets/decade
+        b.min(HIST_BUCKETS - 1)
+    }
+
+    pub fn record_us(&mut self, us: f64) {
+        self.counts[Self::bucket(us)] += 1;
+        self.total += 1;
+        self.sum_us += us;
+        if us > self.max_us {
+            self.max_us = us;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum_us / self.total as f64
+        }
+    }
+
+    pub fn max_us(&self) -> f64 {
+        self.max_us
+    }
+
+    /// Approximate quantile (bucket upper edge).
+    pub fn quantile_us(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target.max(1) {
+                return 10f64.powf((i + 1) as f64 / 20.0);
+            }
+        }
+        self.max_us
+    }
+
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum_us += other.sum_us;
+        self.max_us = self.max_us.max(other.max_us);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_basics() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std(&xs) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn std_f32_matches_f64_path() {
+        let xs: Vec<f32> = (0..100).map(|i| (i as f32) * 0.1 - 5.0).collect();
+        let xs64: Vec<f64> = xs.iter().map(|&x| x as f64).collect();
+        assert!((std_f32(&xs) - std(&xs64)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn quantiles_interpolate() {
+        let s: Vec<f64> = (0..=100).map(|i| i as f64).collect();
+        assert!((quantile_sorted(&s, 0.5) - 50.0).abs() < 1e-9);
+        assert!((quantile_sorted(&s, 0.95) - 95.0).abs() < 1e-9);
+        assert!((quantile_sorted(&s, 0.0) - 0.0).abs() < 1e-9);
+        assert!((quantile_sorted(&s, 1.0) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_consistent() {
+        let xs: Vec<f64> = (1..=1000).map(|i| i as f64).collect();
+        let s = Summary::of(&xs);
+        assert_eq!(s.n, 1000);
+        assert!((s.mean - 500.5).abs() < 1e-9);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 1000.0);
+        assert!((s.p50 - 500.5).abs() < 1.0);
+    }
+
+    #[test]
+    fn histogram_quantiles_roughly_correct() {
+        let mut h = LogHistogram::new();
+        for i in 1..=10_000u64 {
+            h.record_us(i as f64); // uniform 1µs..10ms
+        }
+        let p50 = h.quantile_us(0.5);
+        assert!(p50 > 3_000.0 && p50 < 8_000.0, "p50={p50}");
+        assert_eq!(h.count(), 10_000);
+        assert!((h.mean_us() - 5000.5).abs() < 1.0);
+    }
+
+    #[test]
+    fn histogram_merge() {
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        a.record_us(10.0);
+        b.record_us(1000.0);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert!(a.max_us() >= 1000.0);
+    }
+
+    #[test]
+    fn empty_inputs_are_safe() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(std(&[]), 0.0);
+        assert_eq!(std_f32(&[]), 0.0);
+        let h = LogHistogram::new();
+        assert_eq!(h.quantile_us(0.5), 0.0);
+    }
+}

@@ -1,0 +1,190 @@
+//! Integration tests over the built artifacts: the three layers
+//! composed — PJRT runtime executing AOT-lowered HLO, expert
+//! compression, and the serving coordinator. All tests skip cleanly if
+//! `make artifacts` has not been run (unit tests cover everything that
+//! does not need artifacts).
+
+use compeft::bench_support as bs;
+use compeft::compeft::compress::{CompressConfig, Granularity};
+use compeft::coordinator::batcher::BatchPolicy;
+use compeft::coordinator::registry::{scan_expert_npz, ExpertMethod, Registry};
+use compeft::coordinator::{Coordinator, CoordinatorConfig, LinkSpec};
+use compeft::runtime::AdapterKind;
+use std::path::PathBuf;
+use std::time::Duration;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = bs::artifacts_dir();
+    if dir.join("models/xs/base.npz").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping integration test: run `make artifacts`");
+        None
+    }
+}
+
+/// The base model executes through PJRT and is meaningfully better than
+/// chance on the held-out benchmark (it was trained on those rules).
+#[test]
+fn base_model_beats_chance_via_runtime() -> anyhow::Result<()> {
+    let Some(dir) = artifacts() else { return Ok(()) };
+    let (_rt, bundle) = bs::load_bundle(&dir, "xs")?;
+    // Full benchmark: the set is concatenated per task, so a truncated
+    // prefix would cover only the first (and possibly hardest) task.
+    let set = bs::load_eval(&dir, "heldout_bench")?;
+    let acc = compeft::eval::evaluate(
+        &bundle,
+        AdapterKind::Base,
+        bs::EVAL_BATCH,
+        None,
+        None,
+        &set,
+    )?;
+    // Mixed 2-4-way tasks: chance ≈ 0.45; trained base must clear it.
+    assert!(acc > 0.55, "base acc {acc}");
+    Ok(())
+}
+
+/// ComPEFT at k=0.2, α=1 keeps an expert within a few points of its
+/// uncompressed accuracy on its own task (Table 1/3 shape).
+#[test]
+fn compressed_expert_close_to_original() -> anyhow::Result<()> {
+    let Some(dir) = artifacts() else { return Ok(()) };
+    let (_rt, bundle) = bs::load_bundle(&dir, "s")?;
+    let expert = match bs::load_expert(&dir, "s", "alpaca", "lora", None) {
+        Ok(e) => e,
+        Err(_) => return Ok(()), // experts still building
+    };
+    let set = bs::load_eval(&dir, "task_alpaca")?;
+    let orig = bs::eval_tv(&bundle, ExpertMethod::Lora, &expert.tv, &set)?;
+    let ctv = bs::compress_tv(&expert.tv, 0.2, 1.0);
+    let comp = bs::eval_tv(&bundle, ExpertMethod::Lora, &ctv, &set)?;
+    assert!(
+        comp >= orig - 0.10,
+        "compressed {comp} fell more than 10 points below original {orig}"
+    );
+    Ok(())
+}
+
+/// The python-side LoRA adapter math and the Rust runtime agree: the
+/// adapter whose meta.json records own_task_acc reproduces ±5 points
+/// through the PJRT path.
+#[test]
+fn runtime_matches_training_side_accuracy() -> anyhow::Result<()> {
+    let Some(dir) = artifacts() else { return Ok(()) };
+    let expert = match bs::load_expert(&dir, "s", "self-instruct", "lora", None) {
+        Ok(e) => e,
+        Err(_) => return Ok(()),
+    };
+    if expert.own_task_acc.is_nan() {
+        return Ok(());
+    }
+    let (_rt, bundle) = bs::load_bundle(&dir, "s")?;
+    let set = bs::load_eval(&dir, "task_self-instruct")?;
+    let acc = bs::eval_tv(&bundle, ExpertMethod::Lora, &expert.tv, &set)?;
+    assert!(
+        (acc - expert.own_task_acc).abs() < 0.06,
+        "runtime {acc} vs python {}",
+        expert.own_task_acc
+    );
+    Ok(())
+}
+
+/// Full serving path: coordinator swaps two ComPEFT experts under a
+/// tiny GPU budget and answers correctly-routed requests.
+#[test]
+fn coordinator_serves_compressed_experts() -> anyhow::Result<()> {
+    let Some(dir) = artifacts() else { return Ok(()) };
+    let found = scan_expert_npz(&dir, "s")?;
+    let lora: Vec<_> = found
+        .iter()
+        .filter(|(t, m, _)| {
+            *m == ExpertMethod::Lora
+                && dir.join("eval").join(format!("task_{t}.npz")).exists()
+        })
+        .take(2)
+        .collect();
+    if lora.len() < 2 {
+        return Ok(());
+    }
+
+    let mut registry = Registry::new();
+    let cfg = CompressConfig { density: 0.2, alpha: 1.0, granularity: Granularity::Global };
+    for (task, m, path) in &lora {
+        registry.register_compeft(&format!("{task}"), task, "s", *m, path, &cfg)?;
+    }
+
+    let mut ccfg = CoordinatorConfig::new(dir.clone(), "s");
+    ccfg.gpu_capacity_bytes = registry.get(&lora[0].0).unwrap().encoded_bytes + 8;
+    ccfg.policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) };
+    ccfg.net = LinkSpec::internet();
+    ccfg.pcie = LinkSpec::pcie();
+    ccfg.time_scale = 0.0; // pure model, no sleeping in tests
+    let coord = Coordinator::start(ccfg, registry)?;
+
+    let mut pending = Vec::new();
+    for (task, _, _) in &lora {
+        let set = bs::load_eval(&dir, &format!("task_{task}"))?;
+        for i in 0..6 {
+            let tokens = set.tokens[i * set.seq..(i + 1) * set.seq].to_vec();
+            pending.push(coord.submit(task, tokens, set.n_classes[i] as usize));
+        }
+    }
+    for rx in pending {
+        let p = rx.recv()?;
+        assert!(p.timing.total > Duration::ZERO);
+    }
+    let m = coord.metrics();
+    assert_eq!(m.requests, 12);
+    let report = coord.shutdown()?;
+    // Both experts cannot fit: at least one swap beyond the first two loads.
+    assert!(report.gpu.evictions >= 1, "expected evictions, got {:?}", report.gpu);
+    assert!(report.net_bytes > 0);
+    Ok(())
+}
+
+/// The standalone Pallas kernel artifacts execute and agree with the
+/// Rust compressor's ternarization semantics (L1 ↔ L3 agreement).
+#[test]
+fn pallas_and_rust_agree_on_ternarization() -> anyhow::Result<()> {
+    let Some(dir) = artifacts() else { return Ok(()) };
+    let path = dir.join("kernels/ternarize.hlo.txt");
+    if !path.exists() {
+        return Ok(());
+    }
+    let rt = compeft::runtime::Runtime::cpu()?;
+    let exe = rt.load_hlo_text(&path)?;
+
+    let n = 1 << 16;
+    let mut rng = compeft::util::rng::Pcg::seed(77);
+    let tau: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.01).collect();
+
+    // Rust side: Algorithm 1 at k=0.1, α=2.
+    let cfg = CompressConfig { density: 0.1, alpha: 2.0, granularity: Granularity::Global };
+    let tern = compeft::compeft::compress_vector(&tau, &cfg);
+    let rust_dense = tern.to_dense();
+
+    // Pallas side: same threshold & scale through the kernel artifact.
+    let thr = tern
+        .iter_nonzero()
+        .map(|(i, _)| tau[i as usize].abs())
+        .fold(f32::INFINITY, f32::min);
+    let t = compeft::tensor::Tensor::new(vec![n], tau.clone());
+    let buf = rt.upload_f32(&t)?;
+    let (out, _) = exe.run_buffers(&[
+        &buf,
+        &rt.upload_scalar(thr)?,
+        &rt.upload_scalar(tern.scale)?,
+    ])?;
+
+    let mut mismatches = 0;
+    for i in 0..n {
+        if (out[i] - rust_dense[i]).abs() > 1e-6 {
+            mismatches += 1;
+        }
+    }
+    // Ties at the threshold may differ (rust breaks ties by index);
+    // allow a whisker of disagreement.
+    assert!(mismatches <= 2, "{mismatches} mismatches");
+    Ok(())
+}
