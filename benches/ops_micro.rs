@@ -6,8 +6,10 @@
 
 use compeft::compeft::bitmask::MaskPair;
 use compeft::compeft::compress::{compress_vector, CompressConfig};
+use compeft::compeft::engine::par_compress_vector;
 use compeft::compeft::{golomb, ternary::TernaryVector};
 use compeft::util::bench::{black_box, Bench};
+use compeft::util::pool::ThreadPool;
 use compeft::util::rng::Pcg;
 
 fn random_tv(n: usize, seed: u64) -> Vec<f32> {
@@ -23,11 +25,47 @@ fn main() {
 
     // Algorithm 1 end to end (the compressor's hot path).
     let cfg = CompressConfig { density: 0.05, alpha: 1.0, ..Default::default() };
-    b.run_throughput("compress_4M_k5", bytes_dense, || {
+    let serial = b.run_throughput("compress_4M_k5", bytes_dense, || {
         black_box(compress_vector(&tau, &cfg));
     });
 
     let tern = compress_vector(&tau, &cfg);
+
+    // Parallel chunked engine: worker-count scaling on the same 4M τ.
+    // Output is bit-identical to the serial path (asserted below); the
+    // interesting number is the speedup at 8 workers.
+    let mut par_means = Vec::new();
+    for workers in [1usize, 2, 4, 8] {
+        let pool = ThreadPool::new(workers);
+        let m = b.run_throughput(
+            &format!("par_compress_4M_k5_w{workers}"),
+            bytes_dense,
+            || {
+                black_box(par_compress_vector(&tau, &cfg, &pool));
+            },
+        );
+        par_means.push((workers, m.mean.as_secs_f64()));
+        let par_tern = par_compress_vector(&tau, &cfg, &pool);
+        assert_eq!(par_tern.plus, tern.plus, "parallel engine diverged (w={workers})");
+        assert_eq!(par_tern.minus, tern.minus);
+        assert_eq!(par_tern.scale.to_bits(), tern.scale.to_bits());
+    }
+    let serial_mean = serial.mean.as_secs_f64();
+    let labels: Vec<String> =
+        par_means.iter().map(|&(w, _)| format!("w{w}")).collect();
+    let speedups: Vec<(&str, f64)> = labels
+        .iter()
+        .zip(&par_means)
+        .map(|(label, &(_, mean))| (label.as_str(), serial_mean / mean))
+        .collect();
+    b.row("par_compress_speedup_vs_serial", &speedups);
+
+    // Parallel Golomb encode of the plus/minus streams.
+    let pool8 = ThreadPool::new(8);
+    b.run_throughput("golomb_encode_par_4M_k5_w8", bytes_dense, || {
+        black_box(golomb::encode_par(&tern, &pool8, 1 << 15));
+    });
+    assert_eq!(golomb::encode_par(&tern, &pool8, 1 << 15), golomb::encode(&tern));
 
     // Golomb encode / decode.
     let encoded = golomb::encode(&tern);

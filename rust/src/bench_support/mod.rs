@@ -9,8 +9,10 @@
 use crate::compeft::compress::{
     compress_params, decompress_params, CompressConfig, Granularity,
 };
-use crate::compeft::format::{to_bytes, Encoding};
+use crate::compeft::engine::par_compress_paramset;
+use crate::compeft::format::{to_bytes, to_bytes_par, Encoding};
 use crate::coordinator::registry::ExpertMethod;
+use crate::util::pool::ThreadPool;
 use crate::eval::{evaluate, EvalSet};
 use crate::runtime::{AdapterKind, ModelBundle, Runtime, };
 use crate::tensor::ParamSet;
@@ -130,11 +132,39 @@ pub fn compress_tv(tv: &ParamSet, density: f64, alpha: f64) -> ParamSet {
     decompress_params(&c, tv).expect("structure preserved")
 }
 
+/// [`compress_tv`] on the parallel engine — bit-identical result, for
+/// callers that already hold a pool (the artifact benches can swap it
+/// in for [`compress_tv`] wherever sweep compression time matters).
+pub fn compress_tv_par(
+    tv: &ParamSet,
+    density: f64,
+    alpha: f64,
+    pool: &ThreadPool,
+) -> ParamSet {
+    let cfg = CompressConfig { density, alpha, granularity: Granularity::Global };
+    let c = par_compress_paramset(tv, &cfg, pool);
+    decompress_params(&c, tv).expect("structure preserved")
+}
+
 /// Golomb-coded size in bytes of ComPEFT at (k, α) for this tv.
 pub fn compeft_bytes(tv: &ParamSet, density: f64, alpha: f64) -> u64 {
     let cfg = CompressConfig { density, alpha, granularity: Granularity::Global };
     let c = compress_params(tv, &cfg);
     to_bytes(&c, Encoding::Golomb).len() as u64
+}
+
+/// [`compeft_bytes`] with both compression and Golomb encoding on the
+/// pool — byte-identical container, same drop-in contract as
+/// [`compress_tv_par`].
+pub fn compeft_bytes_par(
+    tv: &ParamSet,
+    density: f64,
+    alpha: f64,
+    pool: &ThreadPool,
+) -> u64 {
+    let cfg = CompressConfig { density, alpha, granularity: Granularity::Global };
+    let c = par_compress_paramset(tv, &cfg, pool);
+    to_bytes_par(&c, Encoding::Golomb, pool).len() as u64
 }
 
 /// One grid point of the validation sweep.
@@ -259,5 +289,28 @@ mod tests {
         assert_eq!(c.get("x").unwrap().shape, vec![100]);
         let bytes = compeft_bytes(&tv, 0.2, 1.0);
         assert!(bytes > 0 && bytes < tv.bytes_fp16());
+    }
+
+    #[test]
+    fn parallel_helpers_match_serial() {
+        use crate::tensor::Tensor;
+        use crate::util::{prop, rng::Pcg};
+        let mut rng = Pcg::seed(2);
+        let mut tv = ParamSet::new();
+        tv.insert("a", Tensor::new(vec![4000], prop::task_vector_like(&mut rng, 4000)));
+        tv.insert("b", Tensor::new(vec![600], prop::task_vector_like(&mut rng, 600)));
+        for workers in [1usize, 4] {
+            let pool = ThreadPool::new(workers);
+            assert_eq!(
+                compress_tv(&tv, 0.1, 2.0),
+                compress_tv_par(&tv, 0.1, 2.0, &pool),
+                "workers={workers}"
+            );
+            assert_eq!(
+                compeft_bytes(&tv, 0.1, 2.0),
+                compeft_bytes_par(&tv, 0.1, 2.0, &pool),
+                "workers={workers}"
+            );
+        }
     }
 }

@@ -43,6 +43,42 @@ impl MaskPair {
         MaskPair { len: t.len, scale: t.scale, plus, minus }
     }
 
+    /// Parallel [`MaskPair::from_ternary`]: identical output.
+    ///
+    /// Word ranges are independent — a chunk owning words `[ws, we)`
+    /// packs exactly the indices in `[64·ws, 64·we)`, found by binary
+    /// search in the sorted plus/minus lists — so per-chunk word blocks
+    /// concatenated in order equal the serial masks.
+    pub fn from_ternary_par(
+        t: &TernaryVector,
+        pool: &crate::util::pool::ThreadPool,
+        chunk_words: usize,
+    ) -> MaskPair {
+        let w = words(t.len);
+        let ranges = crate::util::pool::chunk_ranges(w, chunk_words);
+        let blocks: Vec<(Vec<u64>, Vec<u64>)> = pool.scoped_map(ranges, |(ws, we)| {
+            let lo = ws as u64 * 64;
+            let hi_excl = we as u64 * 64;
+            let pack = |sorted: &[u32]| {
+                let start = sorted.partition_point(|&i| (i as u64) < lo);
+                let end = sorted.partition_point(|&i| (i as u64) < hi_excl);
+                let mut words_block = vec![0u64; we - ws];
+                for &i in &sorted[start..end] {
+                    words_block[i as usize / 64 - ws] |= 1u64 << (i % 64);
+                }
+                words_block
+            };
+            (pack(&t.plus), pack(&t.minus))
+        });
+        let mut plus = Vec::with_capacity(w);
+        let mut minus = Vec::with_capacity(w);
+        for (p, m) in blocks {
+            plus.extend_from_slice(&p);
+            minus.extend_from_slice(&m);
+        }
+        MaskPair { len: t.len, scale: t.scale, plus, minus }
+    }
+
     pub fn to_ternary(&self) -> TernaryVector {
         let mut plus = Vec::new();
         let mut minus = Vec::new();
@@ -226,6 +262,61 @@ mod tests {
         assert!(MaskPair::from_bytes(&bytes).is_err());
         let bytes = m.to_bytes();
         assert!(MaskPair::from_bytes(&bytes[..bytes.len() - 1]).is_err());
+    }
+
+    use crate::compeft::golomb::tests::random_index_sets;
+
+    #[test]
+    fn prop_mask_roundtrip_random_index_sets() {
+        prop::check(
+            "mask encode→decode on raw index sets",
+            60,
+            |rng: &mut Pcg| {
+                let n = prop::sizes(rng).min(10_000);
+                random_index_sets(rng, n)
+            },
+            |t| {
+                let m = MaskPair::from_ternary(t);
+                if m.nnz() != t.nnz() {
+                    return Err(format!("nnz {} vs {}", m.nnz(), t.nnz()));
+                }
+                if m.to_ternary() != *t {
+                    return Err("mask → ternary mismatch".into());
+                }
+                let back = MaskPair::from_bytes(&m.to_bytes())
+                    .map_err(|e| e.to_string())?;
+                if back != m {
+                    return Err("byte roundtrip mismatch".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn from_ternary_par_matches_serial() {
+        use crate::util::pool::ThreadPool;
+        let mut rng = Pcg::seed(13);
+        let cases = vec![
+            TernaryVector::empty(0),
+            TernaryVector::empty(129),
+            random_index_sets(&mut rng, 64),
+            random_index_sets(&mut rng, 4097),
+            random_index_sets(&mut rng, 100_000),
+        ];
+        for workers in [1usize, 2, 8] {
+            let pool = ThreadPool::new(workers);
+            for chunk_words in [1usize, 9, 1024] {
+                for (i, t) in cases.iter().enumerate() {
+                    let serial = MaskPair::from_ternary(t);
+                    let par = MaskPair::from_ternary_par(t, &pool, chunk_words);
+                    assert_eq!(
+                        serial, par,
+                        "case {i} workers {workers} chunk_words {chunk_words}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -15,7 +15,7 @@
 use crate::compeft::sparsify::topk_by_magnitude;
 use crate::compeft::ternary::TernaryVector;
 use crate::tensor::ParamSet;
-use crate::util::stats::std_f32;
+use crate::util::stats::blocked_std_f32;
 use anyhow::Result;
 use std::collections::BTreeMap;
 
@@ -49,11 +49,17 @@ impl Default for CompressConfig {
 }
 
 /// Compress a flat task vector per Algorithm 1.
+///
+/// σ(τ) is computed with the blocked Welford fold
+/// ([`crate::util::stats::blocked_moments`]) so that the parallel engine
+/// ([`crate::compeft::engine`]) reproduces this serial path bit for bit:
+/// the merge tree is defined by a fixed block size, not by who computes
+/// the blocks.
 pub fn compress_vector(tau: &[f32], cfg: &CompressConfig) -> TernaryVector {
     if tau.is_empty() {
         return TernaryVector::empty(0);
     }
-    let sigma = std_f32(tau);
+    let sigma = blocked_std_f32(tau);
     let split = topk_by_magnitude(tau, cfg.density);
     TernaryVector {
         len: tau.len(),
@@ -158,6 +164,7 @@ mod tests {
     use crate::tensor::Tensor;
     use crate::util::prop;
     use crate::util::rng::Pcg;
+    use crate::util::stats::std_f32;
 
     #[test]
     fn algorithm1_small_example() {
@@ -216,6 +223,56 @@ mod tests {
         );
         assert!((t4.scale - 4.0 * t1.scale).abs() < 1e-6);
         assert_eq!(t1.plus, t4.plus);
+    }
+
+    #[test]
+    fn prop_reconstruction_is_alpha_sigma_sign() {
+        // τ̃_i = α·σ(τ)·sgn(τ_i) on kept entries, exactly 0 elsewhere —
+        // the full Algorithm 1 contract, checked coordinate by
+        // coordinate against the independently computed σ.
+        prop::check(
+            "decompress matches α·σ·sgn",
+            30,
+            |rng: &mut Pcg| {
+                let n = prop::sizes(rng).max(1).min(5000);
+                let k = [0.05, 0.2, 0.5, 1.0][rng.range(0, 4)];
+                let alpha = [0.5, 1.0, 4.0][rng.range(0, 3)];
+                (prop::task_vector_like(rng, n), k, alpha)
+            },
+            |(tau, k, alpha)| {
+                let cfg = CompressConfig {
+                    density: *k,
+                    alpha: *alpha,
+                    ..Default::default()
+                };
+                let t = compress_vector(tau, &cfg);
+                t.validate().map_err(|e| e.to_string())?;
+                let sigma = std_f32(tau);
+                let expect_mag = (*alpha * sigma) as f32;
+                if (t.scale - expect_mag).abs() > 1e-5 * (1.0 + expect_mag.abs()) {
+                    return Err(format!("scale {} vs α·σ {}", t.scale, expect_mag));
+                }
+                let dense = decompress_vector(&t);
+                let mut kept = vec![false; tau.len()];
+                for &i in t.plus.iter().chain(&t.minus) {
+                    kept[i as usize] = true;
+                }
+                for i in 0..tau.len() {
+                    let want = if kept[i] {
+                        t.scale * tau[i].signum()
+                    } else {
+                        0.0
+                    };
+                    if dense[i] != want {
+                        return Err(format!(
+                            "coord {i}: reconstructed {} want {want}",
+                            dense[i]
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 
     fn sample_params(rng: &mut Pcg) -> ParamSet {

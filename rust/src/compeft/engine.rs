@@ -1,0 +1,289 @@
+//! Parallel chunked compression engine.
+//!
+//! Algorithm 1 over a 200M–65B-parameter task vector is dominated by
+//! three linear passes: σ(τ), the top-⌈k·d⌉ magnitude selection, and the
+//! kept-index emission. This module runs all three as chunked passes on
+//! a [`ThreadPool`]:
+//!
+//! 1. **σ(τ)** — per-[`crate::util::stats::MOMENT_BLOCK`] Welford
+//!    moments on the pool, merged in block order
+//!    ([`crate::util::stats::par_blocked_moments`]).
+//! 2. **Global top-k** — per-chunk histograms over the u32 magnitude
+//!    keys feed an exact single-bucket quickselect refine
+//!    ([`crate::compeft::sparsify::par_topk_by_magnitude`]).
+//! 3. **Emission** — per-chunk scans concatenated in chunk order, so
+//!    the plus/minus index lists come out sorted without a sort.
+//!
+//! Outputs are **bit-identical** to the serial
+//! [`compress_vector`]/[`compress_params`] path at every worker count
+//! and chunk size: the threshold is an exact order statistic (a value,
+//! not a partition artifact), emission reuses the serial float
+//! comparisons (NaN/±0/tie semantics included), and the σ merge tree is
+//! fixed by block size rather than by worker assignment. The
+//! equivalence is asserted across pool sizes and chunk sizes in this
+//! module's tests and re-checked end-to-end in `tests/integration.rs`.
+//!
+//! [`Granularity::PerTensor`] parallelises across tensors instead (one
+//! serial compression per tensor on the pool) — never both levels at
+//! once, which keeps [`ThreadPool::scoped_map`] free of nested waits.
+
+use crate::compeft::compress::{
+    compress_vector, CompressConfig, CompressedParamSet, Granularity,
+};
+use crate::compeft::sparsify::par_topk_by_magnitude;
+use crate::compeft::ternary::TernaryVector;
+use crate::tensor::ParamSet;
+use crate::util::pool::ThreadPool;
+use crate::util::stats::par_blocked_std_f32;
+use std::collections::BTreeMap;
+
+/// Default work-division chunk: 64K elements ≈ 256 KB of f32 per task —
+/// small enough to load-balance a 4M-element τ across 8 workers ~8× per
+/// pass, large enough that per-task overhead (one boxed closure + one
+/// channel send) is noise.
+pub const DEFAULT_CHUNK: usize = 1 << 16;
+
+/// Tuning knobs for the parallel engine. Only affects how work is
+/// divided, never what is computed.
+#[derive(Clone, Copy, Debug)]
+pub struct EngineConfig {
+    /// Elements per parallel task in the top-k and emission passes.
+    pub chunk: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig { chunk: DEFAULT_CHUNK }
+    }
+}
+
+/// Parallel [`compress_vector`]: bit-identical output, chunked across
+/// `pool` with the default chunk size.
+pub fn par_compress_vector(
+    tau: &[f32],
+    cfg: &CompressConfig,
+    pool: &ThreadPool,
+) -> TernaryVector {
+    par_compress_vector_cfg(tau, cfg, pool, &EngineConfig::default())
+}
+
+/// Parallel [`compress_vector`] with explicit engine tuning.
+pub fn par_compress_vector_cfg(
+    tau: &[f32],
+    cfg: &CompressConfig,
+    pool: &ThreadPool,
+    engine: &EngineConfig,
+) -> TernaryVector {
+    if tau.is_empty() {
+        return TernaryVector::empty(0);
+    }
+    let sigma = par_blocked_std_f32(tau, pool);
+    let split = par_topk_by_magnitude(tau, cfg.density, pool, engine.chunk);
+    TernaryVector {
+        len: tau.len(),
+        scale: (cfg.alpha * sigma) as f32,
+        plus: split.plus,
+        minus: split.minus,
+    }
+}
+
+/// Parallel [`compress_params`](crate::compeft::compress::compress_params):
+/// bit-identical output.
+///
+/// * [`Granularity::Global`] flattens once, then runs the chunked
+///   engine over the single global τ.
+/// * [`Granularity::PerTensor`] compresses tensors concurrently, one
+///   serial [`compress_vector`] per tensor.
+pub fn par_compress_paramset(
+    tv: &ParamSet,
+    cfg: &CompressConfig,
+    pool: &ThreadPool,
+) -> CompressedParamSet {
+    par_compress_paramset_cfg(tv, cfg, pool, &EngineConfig::default())
+}
+
+/// Parallel paramset compression with explicit engine tuning.
+pub fn par_compress_paramset_cfg(
+    tv: &ParamSet,
+    cfg: &CompressConfig,
+    pool: &ThreadPool,
+    engine: &EngineConfig,
+) -> CompressedParamSet {
+    let mut layout = Vec::new();
+    let mut off = 0usize;
+    for (name, t) in tv.iter() {
+        layout.push((name.to_string(), t.shape.clone(), off));
+        off += t.len();
+    }
+    let mut parts = BTreeMap::new();
+    match cfg.granularity {
+        Granularity::Global => {
+            let flat = tv.flatten();
+            parts.insert(
+                String::new(),
+                par_compress_vector_cfg(&flat, cfg, pool, engine),
+            );
+        }
+        Granularity::PerTensor => {
+            let items: Vec<(&str, &crate::tensor::Tensor)> = tv.iter().collect();
+            let compressed = pool.scoped_map(items, |(name, t)| {
+                (name.to_string(), compress_vector(&t.data, cfg))
+            });
+            for (name, tern) in compressed {
+                parts.insert(name, tern);
+            }
+        }
+    }
+    CompressedParamSet { granularity: cfg.granularity, layout, parts }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compeft::compress::compress_params;
+    use crate::tensor::Tensor;
+    use crate::util::prop;
+    use crate::util::rng::Pcg;
+
+    pub(crate) fn assert_ternary_bit_identical(
+        a: &TernaryVector,
+        b: &TernaryVector,
+        tag: &str,
+    ) {
+        assert_eq!(a.len, b.len, "{tag}: len");
+        assert_eq!(
+            a.scale.to_bits(),
+            b.scale.to_bits(),
+            "{tag}: scale {} vs {}",
+            a.scale,
+            b.scale
+        );
+        assert_eq!(a.plus, b.plus, "{tag}: plus");
+        assert_eq!(a.minus, b.minus, "{tag}: minus");
+    }
+
+    fn assert_compressed_bit_identical(
+        a: &CompressedParamSet,
+        b: &CompressedParamSet,
+        tag: &str,
+    ) {
+        assert_eq!(a.granularity, b.granularity, "{tag}");
+        assert_eq!(a.layout, b.layout, "{tag}: layout");
+        let names_a: Vec<&String> = a.parts.keys().collect();
+        let names_b: Vec<&String> = b.parts.keys().collect();
+        assert_eq!(names_a, names_b, "{tag}: part names");
+        for (name, ta) in &a.parts {
+            assert_ternary_bit_identical(ta, &b.parts[name], &format!("{tag}/{name}"));
+        }
+    }
+
+    #[test]
+    fn vector_engine_matches_serial_across_pools_and_chunks() {
+        let mut rng = Pcg::seed(101);
+        let tau = prop::task_vector_like(&mut rng, 200_000);
+        let cfg = CompressConfig { density: 0.05, alpha: 2.0, ..Default::default() };
+        let serial = compress_vector(&tau, &cfg);
+        for workers in [1usize, 2, 8] {
+            let pool = ThreadPool::new(workers);
+            for chunk in [512usize, 1 << 14, 1 << 16, 1 << 22] {
+                let par = par_compress_vector_cfg(
+                    &tau,
+                    &cfg,
+                    &pool,
+                    &EngineConfig { chunk },
+                );
+                assert_ternary_bit_identical(
+                    &serial,
+                    &par,
+                    &format!("workers={workers} chunk={chunk}"),
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn vector_engine_edge_cases() {
+        let pool = ThreadPool::new(4);
+        let engine = EngineConfig { chunk: 1000 };
+        let mut rng = Pcg::seed(7);
+        let mut nan_tau = prop::task_vector_like(&mut rng, 3000);
+        nan_tau[100] = f32::NAN;
+        nan_tau[2999] = f32::NAN;
+        let cases: Vec<(&str, Vec<f32>, f64)> = vec![
+            ("empty", Vec::new(), 0.5),
+            ("singleton", vec![-0.25], 1.0),
+            ("all_zero", vec![0.0; 1024], 0.3),
+            ("signed_zero", vec![0.0, -0.0, 1.0, -1.0], 0.5),
+            ("all_equal", vec![2.5; 4097], 0.2),
+            ("density_one", prop::task_vector_like(&mut rng, 5000), 1.0),
+            ("tiny_k_keep_one", prop::task_vector_like(&mut rng, 4096), 1e-9),
+            ("nan_entries", nan_tau, 0.1),
+        ];
+        for (name, tau, k) in &cases {
+            let cfg = CompressConfig { density: *k, alpha: 1.0, ..Default::default() };
+            let serial = compress_vector(tau, &cfg);
+            let par = par_compress_vector_cfg(tau, &cfg, &pool, &engine);
+            assert_ternary_bit_identical(&serial, &par, name);
+        }
+        // Spot-check the contracts behind two of the edge cases.
+        let keep_one = compress_vector(
+            &prop::task_vector_like(&mut rng, 4096),
+            &CompressConfig { density: 1e-9, ..Default::default() },
+        );
+        assert_eq!(keep_one.nnz(), 1, "⌈k·d⌉ = 1 keeps exactly one entry");
+        let dense_all = compress_vector(
+            &[1.0f32, -2.0, 3.0, -4.0],
+            &CompressConfig { density: 1.0, ..Default::default() },
+        );
+        assert_eq!(dense_all.nnz(), 4, "k = 1.0 keeps every nonzero");
+    }
+
+    fn sample_paramset(rng: &mut Pcg, tensors: usize) -> ParamSet {
+        let mut p = ParamSet::new();
+        for i in 0..tensors {
+            let n = 1000 + i * 997;
+            p.insert(
+                &format!("layer.{i}.w"),
+                Tensor::new(vec![n], prop::task_vector_like(rng, n)),
+            );
+        }
+        p
+    }
+
+    #[test]
+    fn paramset_engine_matches_serial_both_granularities() {
+        let mut rng = Pcg::seed(55);
+        for tensors in [0usize, 1, 7] {
+            let tv = sample_paramset(&mut rng, tensors);
+            for granularity in [Granularity::Global, Granularity::PerTensor] {
+                let cfg = CompressConfig { density: 0.2, alpha: 1.0, granularity };
+                let serial = compress_params(&tv, &cfg);
+                for workers in [1usize, 2, 8] {
+                    let pool = ThreadPool::new(workers);
+                    let par = par_compress_paramset(&tv, &cfg, &pool);
+                    assert_compressed_bit_identical(
+                        &serial,
+                        &par,
+                        &format!("{granularity:?} tensors={tensors} workers={workers}"),
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_and_single_tensor_paramsets() {
+        let pool = ThreadPool::new(2);
+        let cfg = CompressConfig::default();
+        let empty = ParamSet::new();
+        let c = par_compress_paramset(&empty, &cfg, &pool);
+        assert_eq!(c.total_elements(), 0);
+        assert_compressed_bit_identical(&compress_params(&empty, &cfg), &c, "empty");
+
+        let mut rng = Pcg::seed(3);
+        let single = sample_paramset(&mut rng, 1);
+        let c = par_compress_paramset(&single, &cfg, &pool);
+        assert_compressed_bit_identical(&compress_params(&single, &cfg), &c, "single");
+        assert_eq!(c.layout.len(), 1);
+    }
+}

@@ -114,8 +114,20 @@ fn get_u64(bytes: &[u8], pos: &mut usize) -> Result<u64> {
     Ok(v)
 }
 
-/// Serialize a compressed expert to `.cpeft` bytes.
-pub fn to_bytes(c: &CompressedParamSet, enc: Encoding) -> Vec<u8> {
+/// Serial payload encoding of one part.
+fn encode_payload(tern: &crate::compeft::ternary::TernaryVector, enc: Encoding) -> Vec<u8> {
+    match enc {
+        Encoding::Golomb => golomb::encode(tern),
+        Encoding::Bitmask => MaskPair::from_ternary(tern).to_bytes(),
+    }
+}
+
+/// Assemble the `.cpeft` container around already-encoded payloads
+/// (one per part, in `c.parts` iteration order). The single source of
+/// truth for the header/layout/CRC wire format — both the serial and
+/// parallel writers go through here.
+fn assemble(c: &CompressedParamSet, enc: Encoding, payloads: &[Vec<u8>]) -> Vec<u8> {
+    debug_assert_eq!(c.parts.len(), payloads.len());
     let mut body = Vec::new();
     // Layout table.
     body.extend_from_slice(&(c.layout.len() as u32).to_le_bytes());
@@ -129,14 +141,10 @@ pub fn to_bytes(c: &CompressedParamSet, enc: Encoding) -> Vec<u8> {
     }
     // Parts.
     body.extend_from_slice(&(c.parts.len() as u32).to_le_bytes());
-    for (name, tern) in &c.parts {
+    for (name, payload) in c.parts.keys().zip(payloads) {
         put_str(&mut body, name);
-        let payload = match enc {
-            Encoding::Golomb => golomb::encode(tern),
-            Encoding::Bitmask => MaskPair::from_ternary(tern).to_bytes(),
-        };
         body.extend_from_slice(&(payload.len() as u64).to_le_bytes());
-        body.extend_from_slice(&payload);
+        body.extend_from_slice(payload);
     }
 
     let mut out = Vec::with_capacity(body.len() + 16);
@@ -151,6 +159,48 @@ pub fn to_bytes(c: &CompressedParamSet, enc: Encoding) -> Vec<u8> {
     out.extend_from_slice(&body);
     out.extend_from_slice(&crc32(&body).to_le_bytes());
     out
+}
+
+/// Serialize a compressed expert to `.cpeft` bytes.
+pub fn to_bytes(c: &CompressedParamSet, enc: Encoding) -> Vec<u8> {
+    let payloads: Vec<Vec<u8>> =
+        c.parts.values().map(|tern| encode_payload(tern, enc)).collect();
+    assemble(c, enc, &payloads)
+}
+
+/// Parallel [`to_bytes`]: byte-identical output.
+///
+/// Multi-part sets ([`Granularity::PerTensor`]) encode their payloads
+/// concurrently, one part per pool task; a single-part (global) set
+/// instead parallelises *inside* the payload encoder
+/// ([`golomb::encode_par`] / [`MaskPair::from_ternary_par`]). Exactly
+/// one level runs on the pool either way, so no pool task ever waits on
+/// the pool. Assembly then walks the same `BTreeMap` order as the
+/// serial writer.
+pub fn to_bytes_par(
+    c: &CompressedParamSet,
+    enc: Encoding,
+    pool: &crate::util::pool::ThreadPool,
+) -> Vec<u8> {
+    // Chunk sizes for single-part payload encoding: nonzeros per golomb
+    // task, words per bitmask task. Work division only — never changes
+    // the bytes.
+    const GOLOMB_CHUNK_NNZ: usize = 1 << 15;
+    const BITMASK_CHUNK_WORDS: usize = 1 << 13;
+
+    let terns: Vec<&crate::compeft::ternary::TernaryVector> = c.parts.values().collect();
+    let payloads: Vec<Vec<u8>> = if terns.len() == 1 {
+        let tern = terns[0];
+        vec![match enc {
+            Encoding::Golomb => golomb::encode_par(tern, pool, GOLOMB_CHUNK_NNZ),
+            Encoding::Bitmask => {
+                MaskPair::from_ternary_par(tern, pool, BITMASK_CHUNK_WORDS).to_bytes()
+            }
+        }]
+    } else {
+        pool.scoped_map(terns, |tern| encode_payload(tern, enc))
+    };
+    assemble(c, enc, &payloads)
 }
 
 /// Parse `.cpeft` bytes.
@@ -264,6 +314,34 @@ mod tests {
                 assert_eq!(benc, enc);
                 assert_eq!(back, c, "granularity {g:?} encoding {enc:?}");
             }
+        }
+    }
+
+    #[test]
+    fn parallel_container_is_byte_identical() {
+        use crate::util::pool::ThreadPool;
+        for workers in [1usize, 2, 8] {
+            let pool = ThreadPool::new(workers);
+            for g in [Granularity::Global, Granularity::PerTensor] {
+                for enc in [Encoding::Golomb, Encoding::Bitmask] {
+                    let c = sample_compressed(g);
+                    let serial = to_bytes(&c, enc);
+                    let par = to_bytes_par(&c, enc, &pool);
+                    assert_eq!(serial, par, "workers {workers} {g:?} {enc:?}");
+                }
+            }
+            // Empty per-tensor set exercises the zero-part path.
+            let empty = compress_params(
+                &ParamSet::new(),
+                &CompressConfig {
+                    granularity: Granularity::PerTensor,
+                    ..Default::default()
+                },
+            );
+            assert_eq!(
+                to_bytes(&empty, Encoding::Golomb),
+                to_bytes_par(&empty, Encoding::Golomb, &pool)
+            );
         }
     }
 

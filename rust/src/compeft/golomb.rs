@@ -16,6 +16,7 @@
 
 use crate::compeft::ternary::TernaryVector;
 use crate::util::bitio::{BitReader, BitWriter};
+use crate::util::pool::{chunk_ranges, ThreadPool};
 use anyhow::{bail, Context, Result};
 
 /// Golden ratio φ.
@@ -50,30 +51,79 @@ pub fn avg_bits_per_position(p: f64) -> f64 {
 
 const MAGIC: u32 = 0x43504754; // "CPGT"
 
+/// Rice parameter for this vector's density (clamped to the wire
+/// format's 30-bit remainder limit).
+fn stream_rice_parameter(t: &TernaryVector) -> u32 {
+    let p = if t.len == 0 { 0.0 } else { t.nnz() as f64 / t.len as f64 };
+    rice_parameter(p).min(30)
+}
+
+/// Start a stream: writer with the self-describing header in place.
+fn stream_header(t: &TernaryVector, b: u32) -> BitWriter {
+    let mut w = BitWriter::with_capacity(25 + (t.nnz() * (b as usize + 3)) / 8);
+    w.put_bits(MAGIC as u64, 32);
+    w.put_bits(t.len as u64, 64);
+    w.put_bits(t.nnz() as u64, 64);
+    w.put_bits(b as u64, 8);
+    w.put_bits(t.scale.to_bits() as u64, 32);
+    w
+}
+
+/// Rice-encode a run of (index, sign) entries whose predecessor nonzero
+/// sat at index `prev` (−1 at stream start). Both the serial and the
+/// per-chunk parallel encoders funnel through this one loop, so the
+/// gap/sign wire format lives in exactly one place.
+fn encode_entries<I: IntoIterator<Item = (u32, i8)>>(
+    w: &mut BitWriter,
+    entries: I,
+    mut prev: i64,
+    b: u32,
+) {
+    for (idx, sign) in entries {
+        let gap = (idx as i64 - prev - 1) as u64; // zeros between nonzeros
+        w.put_unary(gap >> b);
+        w.put_bits(gap & ((1u64 << b) - 1), b);
+        w.put_bit(sign > 0);
+        prev = idx as i64;
+    }
+}
+
 /// Encode a ternary vector to a Golomb-coded byte stream.
 ///
 /// Layout: magic u32 | len u64 | nnz u64 | b u8 | scale f32 |
 /// then per nonzero (in index order): Rice(gap) ++ sign bit.
 pub fn encode(t: &TernaryVector) -> Vec<u8> {
-    let nnz = t.nnz() as u64;
-    let p = if t.len == 0 { 0.0 } else { nnz as f64 / t.len as f64 };
-    let b = rice_parameter(p).min(30);
+    let b = stream_rice_parameter(t);
+    let mut w = stream_header(t, b);
+    encode_entries(&mut w, t.iter_nonzero(), -1, b);
+    w.into_bytes()
+}
 
-    let mut w = BitWriter::with_capacity(25 + (t.nnz() * (b as usize + 3)) / 8);
-    w.put_bits(MAGIC as u64, 32);
-    w.put_bits(t.len as u64, 64);
-    w.put_bits(nnz, 64);
-    w.put_bits(b as u64, 8);
-    w.put_bits(t.scale.to_bits() as u64, 32);
+/// Parallel [`encode`]: byte-identical output.
+///
+/// The gap stream looks sequential (each gap depends on the previous
+/// nonzero), but the *indices* are all known up front, so the stream
+/// splits cleanly: a worker encoding nonzeros `[s, e)` seeds its first
+/// gap from nonzero `s−1`'s index. Per-range substreams are then
+/// bit-concatenated in range order ([`BitWriter::append`]), which
+/// reproduces the serial writer's bytes exactly.
+///
+/// `chunk_nnz` is the number of nonzeros per parallel task; it divides
+/// work only and never changes the output.
+pub fn encode_par(t: &TernaryVector, pool: &ThreadPool, chunk_nnz: usize) -> Vec<u8> {
+    let b = stream_rice_parameter(t);
+    let mut w = stream_header(t, b);
 
-    let mut prev: i64 = -1;
-    for (idx, sign) in t.iter_nonzero() {
-        let gap = (idx as i64 - prev - 1) as u64; // zeros between nonzeros
-        let q = gap >> b;
-        w.put_unary(q);
-        w.put_bits(gap & ((1u64 << b) - 1).max(0), b);
-        w.put_bit(sign > 0);
-        prev = idx as i64;
+    let merged: Vec<(u32, i8)> = t.iter_nonzero().collect();
+    let ranges = chunk_ranges(merged.len(), chunk_nnz);
+    let pieces: Vec<BitWriter> = pool.scoped_map(ranges, |(s, e)| {
+        let mut piece = BitWriter::new();
+        let prev: i64 = if s == 0 { -1 } else { merged[s - 1].0 as i64 };
+        encode_entries(&mut piece, merged[s..e].iter().copied(), prev, b);
+        piece
+    });
+    for piece in &pieces {
+        w.append(piece);
     }
     w.into_bytes()
 }
@@ -134,7 +184,7 @@ pub fn encoded_size_bytes(t: &TernaryVector) -> u64 {
 }
 
 #[cfg(test)]
-mod tests {
+pub(crate) mod tests {
     use super::*;
     use crate::compeft::compress::{compress_vector, CompressConfig};
     use crate::util::prop;
@@ -214,6 +264,86 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    /// Random ternary vector built directly from index sets (not via the
+    /// compressor): sample nnz distinct indices, split them by a coin
+    /// flip into plus/minus.
+    pub(crate) fn random_index_sets(rng: &mut Pcg, len: usize) -> TernaryVector {
+        let nnz = if len == 0 { 0 } else { rng.range(0, len + 1) };
+        let mut idx = rng.sample_indices(len, nnz);
+        idx.sort_unstable();
+        let mut plus = Vec::new();
+        let mut minus = Vec::new();
+        for i in idx {
+            if rng.next_f32() < 0.5 {
+                plus.push(i as u32);
+            } else {
+                minus.push(i as u32);
+            }
+        }
+        let scale = (rng.next_f64() * 4.0 - 2.0) as f32;
+        TernaryVector { len, scale, plus, minus }
+    }
+
+    #[test]
+    fn prop_roundtrip_random_index_sets() {
+        prop::check(
+            "golomb roundtrip on raw index sets",
+            60,
+            |rng: &mut Pcg| {
+                let n = prop::sizes(rng).min(10_000);
+                random_index_sets(rng, n)
+            },
+            |t| {
+                t.validate().map_err(|e| e.to_string())?;
+                let bytes = encode(t);
+                if bytes.len() as u64 != encoded_size_bytes(t) {
+                    return Err("size prediction mismatch".into());
+                }
+                let back = decode(&bytes).map_err(|e| e.to_string())?;
+                if back != *t {
+                    return Err(format!(
+                        "roundtrip mismatch: {} vs {} nonzeros",
+                        back.nnz(),
+                        t.nnz()
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn encode_par_is_byte_identical_to_serial() {
+        use crate::util::pool::ThreadPool;
+        let mut rng = Pcg::seed(31);
+        let mut cases = vec![
+            TernaryVector::empty(0),
+            TernaryVector::empty(5000),
+            TernaryVector { len: 1, scale: 1.0, plus: vec![0], minus: vec![] },
+        ];
+        for len in [100usize, 4097, 50_000] {
+            cases.push(random_index_sets(&mut rng, len));
+            let tau = prop::task_vector_like(&mut rng, len);
+            cases.push(compress_vector(
+                &tau,
+                &CompressConfig { density: 0.05, ..Default::default() },
+            ));
+        }
+        for workers in [1usize, 2, 8] {
+            let pool = ThreadPool::new(workers);
+            for chunk_nnz in [1usize, 7, 256, 1 << 20] {
+                for (i, t) in cases.iter().enumerate() {
+                    let serial = encode(t);
+                    let par = encode_par(t, &pool, chunk_nnz);
+                    assert_eq!(
+                        serial, par,
+                        "case {i} workers {workers} chunk_nnz {chunk_nnz}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

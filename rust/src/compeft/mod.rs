@@ -1,8 +1,9 @@
 //! The ComPEFT compression algorithm and its wire formats.
 //!
 //! * [`compress`] — Algorithm 1 (sparsify → ternary-quantize with α·σ)
+//! * [`engine`] — parallel chunked engine (bit-identical to serial)
 //! * [`ternary`] — the sparse ternary vector representation
-//! * [`sparsify`] — top-k-by-magnitude selection
+//! * [`sparsify`] — top-k-by-magnitude selection (serial + parallel)
 //! * [`golomb`] — storage-optimal Golomb/Rice gap coding (§2.2)
 //! * [`bitmask`] — compute-optimal two-binary-mask form (§2.2)
 //! * [`entropy`] — storage accounting (entropy bounds, ratios)
@@ -10,6 +11,7 @@
 
 pub mod bitmask;
 pub mod compress;
+pub mod engine;
 pub mod entropy;
 pub mod format;
 pub mod golomb;
@@ -20,4 +22,5 @@ pub use compress::{
     compress_params, compress_vector, decompress_params, decompress_vector,
     CompressConfig, CompressedParamSet, Granularity,
 };
+pub use engine::{par_compress_paramset, par_compress_vector, EngineConfig};
 pub use ternary::TernaryVector;

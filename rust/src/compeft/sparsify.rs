@@ -6,6 +6,8 @@
 //! expected) instead of a full sort — the dominant cost of compression
 //! at the 10⁷-parameter scale.
 
+use crate::util::pool::{chunk_ranges, ThreadPool};
+
 /// Indices of the top-k-by-magnitude entries, split by sign.
 #[derive(Clone, Debug, PartialEq)]
 pub struct TopKSplit {
@@ -21,7 +23,41 @@ pub struct TopKSplit {
 /// Number of entries to keep for a density `k` over `d` elements.
 pub fn keep_count(d: usize, k: f64) -> usize {
     assert!(k > 0.0 && k <= 1.0, "density must be in (0,1], got {k}");
+    assert!(
+        d <= u32::MAX as usize,
+        "task vector length {d} exceeds the u32 index space of TernaryVector; \
+         compress per-tensor (Granularity::PerTensor) or shard the vector"
+    );
     ((d as f64 * k).ceil() as usize).min(d)
+}
+
+/// Scan `tau[s..e)`, pushing above-threshold indices by sign and
+/// exact-threshold candidates (`ties`) in index order. The one keep/tie
+/// predicate — NaN, signed-zero, and tie semantics — shared by the
+/// serial and parallel paths, so the bit-identical contract cannot be
+/// broken by editing one and not the other.
+fn scan_range(
+    tau: &[f32],
+    s: usize,
+    e: usize,
+    threshold: f32,
+    plus: &mut Vec<u32>,
+    minus: &mut Vec<u32>,
+    ties: &mut Vec<u32>,
+) {
+    for (off, &v) in tau[s..e].iter().enumerate() {
+        let i = (s + off) as u32;
+        let a = v.abs();
+        if a > threshold {
+            if v > 0.0 {
+                plus.push(i);
+            } else {
+                minus.push(i);
+            }
+        } else if a == threshold && a > 0.0 {
+            ties.push(i);
+        }
+    }
 }
 
 /// Quickselect the `n`-th largest magnitude (0-based).
@@ -51,21 +87,9 @@ pub fn topk_by_magnitude(tau: &[f32], k: f64) -> TopKSplit {
     // First pass: strictly-above-threshold entries are always kept.
     let mut plus = Vec::with_capacity(keep / 2 + 1);
     let mut minus = Vec::with_capacity(keep / 2 + 1);
-    let mut kept = 0usize;
     let mut ties: Vec<u32> = Vec::new();
-    for (i, &v) in tau.iter().enumerate() {
-        let a = v.abs();
-        if a > threshold {
-            if v > 0.0 {
-                plus.push(i as u32);
-            } else {
-                minus.push(i as u32);
-            }
-            kept += 1;
-        } else if a == threshold && a > 0.0 {
-            ties.push(i as u32);
-        }
-    }
+    scan_range(tau, 0, d, threshold, &mut plus, &mut minus, &mut ties);
+    let kept = plus.len() + minus.len();
     // Fill remaining budget with tie entries in index order (deterministic).
     for &i in ties.iter().take(keep.saturating_sub(kept)) {
         if tau[i as usize] > 0.0 {
@@ -77,6 +101,162 @@ pub fn topk_by_magnitude(tau: &[f32], k: f64) -> TopKSplit {
     plus.sort_unstable();
     minus.sort_unstable();
     TopKSplit { plus, minus, threshold }
+}
+
+// ---------------------------------------------------------------------------
+// Parallel two-pass top-k (the engine's hot path)
+// ---------------------------------------------------------------------------
+
+/// Buckets for the histogram pre-pass: top 12 bits of the 31-bit
+/// magnitude key. 4096 buckets keep per-chunk histograms at 32 KB while
+/// narrowing the exact-threshold refine to a small candidate set.
+const BUCKET_BITS: u32 = 12;
+const N_BUCKETS: usize = 1 << BUCKET_BITS;
+
+#[inline]
+fn mag_key(x: f32) -> u32 {
+    x.to_bits() & 0x7FFF_FFFF
+}
+
+#[inline]
+fn bucket_of(key: u32) -> usize {
+    (key >> (31 - BUCKET_BITS)) as usize
+}
+
+/// Merge two sorted, disjoint index lists into one sorted list.
+fn merge_sorted(a: Vec<u32>, b: Vec<u32>) -> Vec<u32> {
+    if b.is_empty() {
+        return a;
+    }
+    if a.is_empty() {
+        return b;
+    }
+    let mut out = Vec::with_capacity(a.len() + b.len());
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() && j < b.len() {
+        if a[i] < b[j] {
+            out.push(a[i]);
+            i += 1;
+        } else {
+            out.push(b[j]);
+            j += 1;
+        }
+    }
+    out.extend_from_slice(&a[i..]);
+    out.extend_from_slice(&b[j..]);
+    out
+}
+
+/// Parallel [`topk_by_magnitude`]: bit-identical output, computed as a
+/// two-pass chunked selection on `pool`.
+///
+/// Pass 1 histograms magnitude keys per chunk into [`N_BUCKETS`] buckets
+/// and locates the bucket containing the ⌈k·d⌉-th largest key; an exact
+/// quickselect over only that bucket's keys recovers the *same
+/// threshold value* the serial quickselect finds. Pass 2 re-scans the
+/// chunks with the serial path's float comparisons (so NaN/±0/tie
+/// semantics match exactly) and concatenates per-chunk results in chunk
+/// order, which keeps the index lists sorted without a sort.
+///
+/// `chunk` only divides work; it does not affect the output (the
+/// threshold is a value, not a partition artifact).
+pub fn par_topk_by_magnitude(
+    tau: &[f32],
+    k: f64,
+    pool: &ThreadPool,
+    chunk: usize,
+) -> TopKSplit {
+    let d = tau.len();
+    if d == 0 {
+        return TopKSplit { plus: Vec::new(), minus: Vec::new(), threshold: 0.0 };
+    }
+    let keep = keep_count(d, k);
+    let ranges = chunk_ranges(d, chunk);
+
+    // Pass 1a: per-chunk bucket histograms over the u32 magnitude keys.
+    // Histograms are 32 KB each and all live until the merge, so this
+    // pass uses coarser ranges — a few per worker — keeping transient
+    // memory at O(workers · 32 KB) regardless of how small the caller's
+    // emission chunk is. Chunking never affects the counts.
+    let hist_chunk = chunk.max(d.div_ceil(pool.worker_count().max(1) * 4).max(1));
+    let hist_ranges = chunk_ranges(d, hist_chunk);
+    let hists: Vec<Vec<u64>> = pool.scoped_map(hist_ranges, |(s, e)| {
+        let mut h = vec![0u64; N_BUCKETS];
+        for &v in &tau[s..e] {
+            h[bucket_of(mag_key(v))] += 1;
+        }
+        h
+    });
+    let mut total = vec![0u64; N_BUCKETS];
+    for h in &hists {
+        for (t, c) in total.iter_mut().zip(h) {
+            *t += *c;
+        }
+    }
+
+    // Locate the bucket holding the keep-th largest key.
+    let mut acc = 0u64;
+    let mut target = 0usize;
+    for b in (0..N_BUCKETS).rev() {
+        acc += total[b];
+        if acc >= keep as u64 {
+            target = b;
+            break;
+        }
+    }
+    let above = acc - total[target];
+    let rank_in_bucket = keep as u64 - above; // 1-based from the top
+
+    // Pass 1b: gather the target bucket's keys and select exactly.
+    let mut in_bucket: Vec<u32> = pool
+        .scoped_map(ranges.clone(), |(s, e)| {
+            tau[s..e]
+                .iter()
+                .map(|v| mag_key(*v))
+                .filter(|key| bucket_of(*key) == target)
+                .collect::<Vec<u32>>()
+        })
+        .concat();
+    debug_assert!(rank_in_bucket >= 1 && rank_in_bucket <= in_bucket.len() as u64);
+    let idx = in_bucket.len() - rank_in_bucket as usize;
+    let (_, kth, _) = in_bucket.select_nth_unstable(idx);
+    let threshold = f32::from_bits(*kth);
+
+    // Pass 2: emit per chunk through the shared serial predicate.
+    let parts: Vec<(Vec<u32>, Vec<u32>, Vec<u32>)> =
+        pool.scoped_map(ranges, |(s, e)| {
+            let mut plus = Vec::new();
+            let mut minus = Vec::new();
+            let mut ties = Vec::new();
+            scan_range(tau, s, e, threshold, &mut plus, &mut minus, &mut ties);
+            (plus, minus, ties)
+        });
+
+    // Chunk-order concatenation of per-chunk ascending runs is globally
+    // ascending: no sort needed.
+    let mut plus = Vec::with_capacity(keep / 2 + 1);
+    let mut minus = Vec::with_capacity(keep / 2 + 1);
+    let mut ties = Vec::new();
+    for (p, m, t) in parts {
+        plus.extend_from_slice(&p);
+        minus.extend_from_slice(&m);
+        ties.extend_from_slice(&t);
+    }
+    let kept = plus.len() + minus.len();
+    let mut tie_plus = Vec::new();
+    let mut tie_minus = Vec::new();
+    for &i in ties.iter().take(keep.saturating_sub(kept)) {
+        if tau[i as usize] > 0.0 {
+            tie_plus.push(i);
+        } else {
+            tie_minus.push(i);
+        }
+    }
+    TopKSplit {
+        plus: merge_sorted(plus, tie_plus),
+        minus: merge_sorted(minus, tie_minus),
+        threshold,
+    }
 }
 
 /// Dense mask variant used by the `Pruned` ablation baseline (§4.1):
@@ -142,6 +322,114 @@ mod tests {
     fn empty_input() {
         let s = topk_by_magnitude(&[], 0.5);
         assert!(s.plus.is_empty() && s.minus.is_empty());
+    }
+
+    /// Bitwise equality of two splits, safe under NaN thresholds (f32
+    /// `==` would report NaN != NaN even for identical outputs).
+    fn assert_split_bit_identical(a: &TopKSplit, b: &TopKSplit, tag: &str) {
+        assert_eq!(a.plus, b.plus, "{tag}: plus");
+        assert_eq!(a.minus, b.minus, "{tag}: minus");
+        assert_eq!(
+            a.threshold.to_bits(),
+            b.threshold.to_bits(),
+            "{tag}: threshold {} vs {}",
+            a.threshold,
+            b.threshold
+        );
+    }
+
+    #[test]
+    fn parallel_matches_serial_across_pools_and_chunks() {
+        let mut rng = Pcg::seed(41);
+        let cases: Vec<(Vec<f32>, f64)> = vec![
+            (prop::task_vector_like(&mut rng, 50_000), 0.05),
+            (prop::task_vector_like(&mut rng, 10_001), 0.2),
+            (prop::task_vector_like(&mut rng, 777), 1.0),
+            (prop::task_vector_like(&mut rng, 64), 0.001), // keep = 1
+            (vec![0.5f32], 0.5),
+        ];
+        for workers in [1usize, 2, 8] {
+            let pool = ThreadPool::new(workers);
+            for chunk in [100usize, 1 << 12, 1 << 20] {
+                for (i, (tau, k)) in cases.iter().enumerate() {
+                    let serial = topk_by_magnitude(tau, *k);
+                    let par = par_topk_by_magnitude(tau, *k, &pool, chunk);
+                    assert_split_bit_identical(
+                        &serial,
+                        &par,
+                        &format!("case {i} workers {workers} chunk {chunk}"),
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial_on_pathological_inputs() {
+        let pool = ThreadPool::new(4);
+        // All-equal magnitudes: every entry lands in one bucket and ties
+        // resolve by index.
+        let all_equal = vec![-1.0f32; 10_000];
+        // Signed zeros and exact zeros are never kept.
+        let zeros: Vec<f32> = (0..5000)
+            .map(|i| match i % 3 {
+                0 => 0.0,
+                1 => -0.0,
+                _ => (i as f32) * 1e-3,
+            })
+            .collect();
+        // NaN entries occupy the top of the key space; the serial path's
+        // float comparisons drop them, and the parallel path must agree.
+        let mut with_nan: Vec<f32> = (0..4096).map(|i| (i as f32).cos()).collect();
+        for i in (0..with_nan.len()).step_by(17) {
+            with_nan[i] = f32::NAN;
+        }
+        let mut all_nan = vec![f32::NAN; 512];
+        all_nan[0] = -0.0;
+        for (name, tau) in [
+            ("all_equal", &all_equal),
+            ("zeros", &zeros),
+            ("with_nan", &with_nan),
+            ("all_nan", &all_nan),
+        ] {
+            for k in [0.05, 0.5, 1.0] {
+                let serial = topk_by_magnitude(tau, k);
+                let par = par_topk_by_magnitude(tau, k, &pool, 701);
+                assert_split_bit_identical(&serial, &par, &format!("{name} k={k}"));
+            }
+        }
+        // Empty input.
+        let par = par_topk_by_magnitude(&[], 0.5, &pool, 64);
+        assert!(par.plus.is_empty() && par.minus.is_empty());
+    }
+
+    #[test]
+    fn prop_parallel_equivalence_random() {
+        let pool = ThreadPool::new(3);
+        prop::check(
+            "par_topk == topk",
+            40,
+            |rng: &mut Pcg| {
+                let n = prop::sizes(rng).min(20_000);
+                let k = [0.01, 0.05, 0.2, 0.5, 1.0][rng.range(0, 5)];
+                let chunk = [64, 997, 4096, 1 << 16][rng.range(0, 4)];
+                (prop::task_vector_like(rng, n.max(1)), k, chunk)
+            },
+            |(tau, k, chunk)| {
+                let serial = topk_by_magnitude(tau, *k);
+                let par = par_topk_by_magnitude(tau, *k, &pool, *chunk);
+                if serial.plus != par.plus || serial.minus != par.minus {
+                    return Err("index sets differ".into());
+                }
+                if serial.threshold.to_bits() != par.threshold.to_bits() {
+                    return Err(format!(
+                        "thresholds differ: {} vs {}",
+                        serial.threshold, par.threshold
+                    ));
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

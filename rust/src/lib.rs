@@ -2,7 +2,8 @@
 //!
 //! Reproduction of Yadav et al., "ComPEFT: Compression for Communicating
 //! Parameter Efficient Updates via Sparsification and Quantization"
-//! (2023) as a three-layer Rust + JAX + Pallas system. See DESIGN.md.
+//! (2023) as a three-layer Rust + JAX + Pallas system. See README.md for
+//! the build/test/bench quickstart and the layer map.
 
 pub mod baselines;
 pub mod bench_support;

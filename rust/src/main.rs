@@ -33,7 +33,7 @@ fn main() {
         _ => {
             eprintln!(
                 "usage: compeft <compress|inspect|eval|serve> [flags]\n\
-                 see DESIGN.md for the experiment-to-bench map"
+                 see README.md for the experiment-to-bench map"
             );
             2
         }

@@ -61,6 +61,35 @@ impl BitWriter {
         self.put_bit(false);
     }
 
+    /// Append every bit of `other`, as if its `put_*` calls had been
+    /// replayed on `self`. Byte-aligned appends are a memcpy; unaligned
+    /// appends merge with two shifts per byte (O(bytes), not O(bits)) —
+    /// cheap enough that parallel encoders can build per-chunk
+    /// substreams and still emit a byte stream identical to the serial
+    /// writer's without the merge eating the speedup.
+    pub fn append(&mut self, other: &BitWriter) {
+        let bits = other.bit_len();
+        let full_bytes = (bits / 8) as usize;
+        let rem = (bits % 8) as u32;
+        if self.partial == 0 {
+            self.buf.extend_from_slice(&other.buf[..full_bytes]);
+        } else {
+            // Last byte of self holds `partial` valid MSBs; each full
+            // byte of `other` fills its low bits and spills the rest
+            // into a fresh byte. `partial` is unchanged by whole bytes.
+            let shift = self.partial;
+            for &byte in &other.buf[..full_bytes] {
+                let idx = self.buf.len() - 1;
+                self.buf[idx] |= byte >> shift;
+                self.buf.push(byte << (8 - shift));
+            }
+        }
+        if rem > 0 {
+            let last = other.buf[full_bytes];
+            self.put_bits((last >> (8 - rem)) as u64, rem);
+        }
+    }
+
     /// Finish and return the byte buffer (zero-padded in the last byte).
     pub fn into_bytes(self) -> Vec<u8> {
         self.buf
@@ -193,6 +222,39 @@ mod tests {
         assert_eq!(r.get_bit(), None);
         assert_eq!(r.get_bits(1), None);
         assert_eq!(r.get_unary(), None);
+    }
+
+    #[test]
+    fn append_equals_replaying_the_bits() {
+        // Write one reference stream; also write it as two halves split
+        // at every possible bit position and append — all must agree.
+        let mut rng = Pcg::seed(9);
+        let bits: Vec<bool> = (0..75).map(|_| rng.next_u32() & 1 == 1).collect();
+        let mut reference = BitWriter::new();
+        for &b in &bits {
+            reference.put_bit(b);
+        }
+        let ref_bytes = reference.as_bytes().to_vec();
+        for split in 0..=bits.len() {
+            let mut a = BitWriter::new();
+            for &b in &bits[..split] {
+                a.put_bit(b);
+            }
+            let mut b_writer = BitWriter::new();
+            for &b in &bits[split..] {
+                b_writer.put_bit(b);
+            }
+            a.append(&b_writer);
+            assert_eq!(a.bit_len(), bits.len() as u64, "split {split}");
+            assert_eq!(a.as_bytes(), &ref_bytes[..], "split {split}");
+        }
+        // Appending an empty writer is a no-op.
+        let mut a = BitWriter::new();
+        a.put_bits(0b1011, 4);
+        let before = a.as_bytes().to_vec();
+        a.append(&BitWriter::new());
+        assert_eq!(a.as_bytes(), &before[..]);
+        assert_eq!(a.bit_len(), 4);
     }
 
     #[test]

@@ -46,37 +46,91 @@ impl ThreadPool {
 
     /// Submit a job for execution.
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.submit(Box::new(f));
+    }
+
+    /// Submit an already-boxed job (no second allocation).
+    fn submit(&self, job: Job) {
         self.tx
             .as_ref()
             .expect("pool shut down")
-            .send(Box::new(f))
+            .send(job)
             .expect("workers alive");
     }
 
     /// Run `f` over each item of `items` on the pool and collect results
-    /// in input order. Blocks until all are done.
+    /// in input order. Blocks until all are done. (The `'static` special
+    /// case of [`ThreadPool::scoped_map`].)
     pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
     where
         T: Send + 'static,
         R: Send + 'static,
         F: Fn(T) -> R + Send + Sync + 'static,
     {
-        let f = Arc::new(f);
-        let (rtx, rrx) = mpsc::channel::<(usize, R)>();
+        self.scoped_map(items, f)
+    }
+
+    /// Like [`ThreadPool::map`], but the items and the closure may
+    /// borrow from the caller's stack. Blocks until every submitted job
+    /// has completed, which is what makes the lifetime extension sound:
+    /// no job can outlive this call.
+    ///
+    /// A panicking closure is caught on the worker (keeping the pool
+    /// healthy and the job accounting intact) and re-raised on the
+    /// caller after *all* jobs have finished — so even on panic, no job
+    /// that borrows the caller's stack survives this call.
+    ///
+    /// Contract: `scoped_map` must not be called from inside a job
+    /// running on the same pool (the outer job would block a worker
+    /// while waiting for inner jobs that need workers — deadlock at
+    /// full occupancy). The compression engine parallelises exactly one
+    /// level (chunks *or* tensors *or* parts, never nested).
+    pub fn scoped_map<'env, T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'env,
+        R: Send + 'env,
+        F: Fn(T) -> R + Sync + 'env,
+    {
         let n = items.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        type JobResult<R> = std::thread::Result<R>; // Ok(R) | Err(panic payload)
+        let (rtx, rrx) = mpsc::channel::<(usize, JobResult<R>)>();
+        let f_ref: &(dyn Fn(T) -> R + Sync) = &f;
         for (i, item) in items.into_iter().enumerate() {
-            let f = Arc::clone(&f);
             let rtx = rtx.clone();
-            self.execute(move || {
-                let r = f(item);
-                let _ = rtx.send((i, r));
+            let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                let result = std::panic::catch_unwind(
+                    std::panic::AssertUnwindSafe(|| f_ref(item)),
+                );
+                let _ = rtx.send((i, result));
             });
+            // SAFETY: the job is a fat Box<dyn FnOnce> whose non-'static
+            // captures borrow from `f` and 'env, both of which outlive
+            // this call. Every job sends exactly once — catch_unwind
+            // converts a panicking closure into a sent Err, so workers
+            // never unwind and queued jobs always run — and the loop
+            // below receives all `n` results (then re-raises any panic)
+            // before this function returns. Hence no job, running or
+            // queued, can outlive the borrowed frame. Box<dyn Trait + '_>
+            // and Box<dyn Trait + 'static> have identical layout.
+            let job: Box<dyn FnOnce() + Send + 'static> =
+                unsafe { std::mem::transmute(job) };
+            self.submit(job);
         }
         drop(rtx);
         let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        let mut panic_payload = None;
         for _ in 0..n {
-            let (i, r) = rrx.recv().expect("worker result");
-            out[i] = Some(r);
+            let (i, r) = rrx.recv().expect("scoped_map worker died");
+            match r {
+                Ok(v) => out[i] = Some(v),
+                Err(payload) => panic_payload = Some(payload),
+            }
+        }
+        if let Some(payload) = panic_payload {
+            std::panic::resume_unwind(payload);
         }
         out.into_iter().map(|o| o.unwrap()).collect()
     }
@@ -84,6 +138,20 @@ impl ThreadPool {
     pub fn worker_count(&self) -> usize {
         self.workers.len()
     }
+}
+
+/// Split `[0, len)` into `[start, end)` ranges of at most `chunk`
+/// elements, in order. The engine's parallel passes map over these.
+pub fn chunk_ranges(len: usize, chunk: usize) -> Vec<(usize, usize)> {
+    let chunk = chunk.max(1);
+    let mut out = Vec::with_capacity(len.div_ceil(chunk));
+    let mut start = 0;
+    while start < len {
+        let end = (start + chunk).min(len);
+        out.push((start, end));
+        start = end;
+    }
+    out
 }
 
 impl Drop for ThreadPool {
@@ -126,5 +194,57 @@ mod tests {
         let pool = ThreadPool::new(1);
         let out = pool.map(vec![1, 2, 3], |x| x + 1);
         assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn scoped_map_borrows_stack_data() {
+        let data: Vec<u64> = (0..10_000).collect();
+        for workers in [1, 2, 8] {
+            let pool = ThreadPool::new(workers);
+            let ranges = chunk_ranges(data.len(), 997);
+            let sums = pool.scoped_map(ranges.clone(), |(s, e)| {
+                data[s..e].iter().sum::<u64>()
+            });
+            assert_eq!(sums.len(), ranges.len());
+            let total: u64 = sums.iter().sum();
+            assert_eq!(total, data.iter().sum::<u64>(), "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn scoped_map_preserves_order_and_handles_empty() {
+        let pool = ThreadPool::new(4);
+        let squares = pool.scoped_map((0..100u32).collect(), |x| x * x);
+        assert_eq!(squares, (0..100u32).map(|x| x * x).collect::<Vec<_>>());
+        let empty: Vec<u32> = pool.scoped_map(Vec::<u32>::new(), |x| x);
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn scoped_map_propagates_panics_after_draining() {
+        let pool = ThreadPool::new(2);
+        let data = vec![1u32, 2, 3, 4, 5];
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.scoped_map(data.clone(), |x| {
+                if x == 3 {
+                    panic!("boom on {x}");
+                }
+                x * 2
+            })
+        }));
+        assert!(caught.is_err(), "panic must propagate to the caller");
+        // The pool survives a panicking job and keeps serving.
+        let ok = pool.scoped_map(data, |x| x + 1);
+        assert_eq!(ok, vec![2, 3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn chunk_ranges_cover_exactly() {
+        assert_eq!(chunk_ranges(0, 10), Vec::<(usize, usize)>::new());
+        assert_eq!(chunk_ranges(5, 10), vec![(0, 5)]);
+        assert_eq!(chunk_ranges(10, 5), vec![(0, 5), (5, 10)]);
+        assert_eq!(chunk_ranges(11, 5), vec![(0, 5), (5, 10), (10, 11)]);
+        // chunk = 0 is clamped rather than looping forever
+        assert_eq!(chunk_ranges(3, 0), vec![(0, 1), (1, 2), (2, 3)]);
     }
 }

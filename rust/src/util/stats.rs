@@ -27,6 +27,98 @@ pub fn mean_f32(xs: &[f32]) -> f64 {
     xs.iter().map(|&x| x as f64).sum::<f64>() / xs.len() as f64
 }
 
+/// Running first/second moments (Welford), mergeable via the parallel
+/// update of Chan, Golub & LeVeque (1983).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Moments {
+    pub n: u64,
+    pub mean: f64,
+    /// Sum of squared deviations from the mean (`M2` in Welford's
+    /// notation); population variance is `m2 / n`.
+    pub m2: f64,
+}
+
+impl Moments {
+    /// Welford accumulation over one contiguous block.
+    pub fn of(xs: &[f32]) -> Moments {
+        let mut n = 0u64;
+        let mut mean = 0.0f64;
+        let mut m2 = 0.0f64;
+        for &x in xs {
+            n += 1;
+            let x = x as f64;
+            let d = x - mean;
+            mean += d / n as f64;
+            m2 += d * (x - mean);
+        }
+        Moments { n, mean, m2 }
+    }
+
+    /// Combine two disjoint blocks' moments. Not bit-associative (float
+    /// rounding), so callers that need determinism must merge in a fixed
+    /// order — see [`blocked_moments`].
+    pub fn merge(self, other: Moments) -> Moments {
+        if self.n == 0 {
+            return other;
+        }
+        if other.n == 0 {
+            return self;
+        }
+        let n = self.n + other.n;
+        let d = other.mean - self.mean;
+        let mean = self.mean + d * (other.n as f64 / n as f64);
+        let m2 = self.m2
+            + other.m2
+            + d * d * (self.n as f64 * other.n as f64 / n as f64);
+        Moments { n, mean, m2 }
+    }
+
+    /// Population standard deviation.
+    pub fn std(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            (self.m2 / self.n as f64).max(0.0).sqrt()
+        }
+    }
+}
+
+/// Fixed block size for the chunked `σ(τ)` computation. The block size
+/// (not the pool's work division) defines the floating-point merge tree,
+/// so serial and parallel paths agree bit-for-bit at any worker count
+/// and any engine chunk size.
+pub const MOMENT_BLOCK: usize = 1 << 16;
+
+/// Per-[`MOMENT_BLOCK`] Welford moments folded left-to-right. This is
+/// the canonical merge order; [`par_blocked_moments`] reproduces it
+/// exactly.
+pub fn blocked_moments(xs: &[f32]) -> Moments {
+    let mut acc = Moments::default();
+    for block in xs.chunks(MOMENT_BLOCK) {
+        acc = acc.merge(Moments::of(block));
+    }
+    acc
+}
+
+/// `σ(τ)` via [`blocked_moments`] — the engine's deterministic σ.
+pub fn blocked_std_f32(xs: &[f32]) -> f64 {
+    blocked_moments(xs).std()
+}
+
+/// Parallel [`blocked_moments`]: per-block Welford on the pool, merged
+/// left-to-right on the caller thread. Bit-identical to the serial fold
+/// because the block decomposition and merge order are fixed.
+pub fn par_blocked_moments(xs: &[f32], pool: &crate::util::pool::ThreadPool) -> Moments {
+    let blocks: Vec<&[f32]> = xs.chunks(MOMENT_BLOCK.max(1)).collect();
+    let partials = pool.scoped_map(blocks, Moments::of);
+    partials.into_iter().fold(Moments::default(), Moments::merge)
+}
+
+/// Parallel [`blocked_std_f32`].
+pub fn par_blocked_std_f32(xs: &[f32], pool: &crate::util::pool::ThreadPool) -> f64 {
+    par_blocked_moments(xs, pool).std()
+}
+
 /// Population std of f32 data computed in f64. This is the `σ(τ)` used
 /// by ComPEFT's quantization step (Algorithm 1).
 pub fn std_f32(xs: &[f32]) -> f64 {
@@ -177,6 +269,47 @@ mod tests {
         let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
         assert!((mean(&xs) - 5.0).abs() < 1e-12);
         assert!((std(&xs) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn moments_match_two_pass_std() {
+        let xs: Vec<f32> = (0..10_000).map(|i| ((i * 37) % 101) as f32 - 50.0).collect();
+        let m = Moments::of(&xs);
+        assert_eq!(m.n, xs.len() as u64);
+        assert!((m.std() - std_f32(&xs)).abs() < 1e-9);
+        let b = blocked_moments(&xs);
+        assert!((b.std() - std_f32(&xs)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn moments_merge_equals_whole() {
+        let xs: Vec<f32> = (0..1000).map(|i| (i as f32).sin()).collect();
+        let (a, b) = xs.split_at(317);
+        let merged = Moments::of(a).merge(Moments::of(b));
+        let whole = Moments::of(&xs);
+        assert_eq!(merged.n, whole.n);
+        assert!((merged.mean - whole.mean).abs() < 1e-12);
+        assert!((merged.std() - whole.std()).abs() < 1e-12);
+        // Identity element on both sides.
+        assert_eq!(Moments::default().merge(whole), whole);
+        assert_eq!(whole.merge(Moments::default()), whole);
+    }
+
+    #[test]
+    fn par_blocked_std_bit_identical_to_serial() {
+        use crate::util::pool::ThreadPool;
+        use crate::util::rng::Pcg;
+        let mut rng = Pcg::seed(20);
+        // Spans several MOMENT_BLOCKs plus a ragged tail.
+        let n = 3 * MOMENT_BLOCK + 12_345;
+        let xs: Vec<f32> = (0..n).map(|_| rng.normal_ms(0.0, 0.01) as f32).collect();
+        let serial = blocked_std_f32(&xs);
+        for workers in [1, 2, 8] {
+            let pool = ThreadPool::new(workers);
+            let par = par_blocked_std_f32(&xs, &pool);
+            assert_eq!(serial.to_bits(), par.to_bits(), "workers={workers}");
+        }
+        assert_eq!(blocked_std_f32(&[]), 0.0);
     }
 
     #[test]

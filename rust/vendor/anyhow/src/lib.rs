@@ -1,0 +1,272 @@
+//! Offline subset of the `anyhow` API.
+//!
+//! The build container has no crate registry, so this in-repo crate
+//! provides the slice of `anyhow` the workspace actually uses:
+//! [`Error`], [`Result`], the [`Context`] extension trait for `Result`
+//! and `Option`, and the `anyhow!` / `bail!` / `ensure!` macros.
+//!
+//! Semantics mirror upstream where it matters to callers:
+//! * `{}` displays the outermost message; `{:#}` displays the whole
+//!   context chain as `outer: inner: root`.
+//! * `?` converts any `std::error::Error + Send + Sync + 'static`.
+//! * `Error` deliberately does NOT implement `std::error::Error`, so the
+//!   blanket `From` impl stays coherent (same trick as upstream).
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A context-chained error value.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Create an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: context.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// The messages in the chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        let mut stack = Vec::new();
+        let mut cur = Some(self);
+        while let Some(e) = cur {
+            stack.push(e.msg.as_str());
+            cur = e.source.as_deref();
+        }
+        stack.into_iter()
+    }
+
+    /// The innermost message in the chain.
+    pub fn root_cause(&self) -> &str {
+        let mut cur = self;
+        while let Some(s) = cur.source.as_deref() {
+            cur = s;
+        }
+        &cur.msg
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if f.alternate() {
+            let mut cur = self.source.as_deref();
+            while let Some(e) = cur {
+                write!(f, ": {}", e.msg)?;
+                cur = e.source.as_deref();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if let Some(mut cur) = self.source.as_deref() {
+            write!(f, "\n\nCaused by:")?;
+            loop {
+                write!(f, "\n    {}", cur.msg)?;
+                match cur.source.as_deref() {
+                    Some(next) => cur = next,
+                    None => break,
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        // Flatten the std source chain into our representation.
+        let mut msgs = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        let mut out: Option<Error> = None;
+        for msg in msgs.into_iter().rev() {
+            out = Some(Error { msg, source: out.map(Box::new) });
+        }
+        out.expect("at least one message")
+    }
+}
+
+mod ext {
+    /// Unifies "things convertible into [`crate::Error`]" across std
+    /// errors and `Error` itself without breaking coherence.
+    pub trait IntoError {
+        fn into_error(self) -> crate::Error;
+    }
+
+    impl<E: std::error::Error + Send + Sync + 'static> IntoError for E {
+        fn into_error(self) -> crate::Error {
+            crate::Error::from(self)
+        }
+    }
+
+    impl IntoError for crate::Error {
+        fn into_error(self) -> crate::Error {
+            self
+        }
+    }
+}
+
+/// Extension trait adding `.context(...)` / `.with_context(...)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(
+        self,
+        context: C,
+    ) -> Result<T, Error>;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: ext::IntoError> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(
+        self,
+        context: C,
+    ) -> Result<T, Error> {
+        match self {
+            Ok(v) => Ok(v),
+            Err(e) => Err(e.into_error().context(context)),
+        }
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        match self {
+            Ok(v) => Ok(v),
+            Err(e) => Err(e.into_error().context(f())),
+        }
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(
+        self,
+        context: C,
+    ) -> Result<T, Error> {
+        match self {
+            Some(v) => Ok(v),
+            None => Err(Error::msg(context)),
+        }
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        match self {
+            Some(v) => Ok(v),
+            None => Err(Error::msg(f())),
+        }
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn display_plain_and_alternate() {
+        let e: Error = io_err().into();
+        let e = e.context("reading config");
+        assert_eq!(format!("{e}"), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: gone");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<u32> {
+            let n: u32 = "12".parse()?;
+            Ok(n)
+        }
+        assert_eq!(inner().unwrap(), 12);
+        fn bad() -> Result<u32> {
+            let n: u32 = "nope".parse()?;
+            Ok(n)
+        }
+        assert!(bad().is_err());
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer");
+        assert_eq!(e.root_cause(), "gone");
+
+        let o: Option<u8> = None;
+        let e = o.with_context(|| format!("missing {}", 7)).unwrap_err();
+        assert_eq!(e.to_string(), "missing 7");
+    }
+
+    #[test]
+    fn context_chains_on_anyhow_results() {
+        fn inner() -> Result<()> {
+            bail!("root failure {}", 1);
+        }
+        let e = inner().context("mid").context("top").unwrap_err();
+        let chain: Vec<&str> = e.chain().collect();
+        assert_eq!(chain, vec!["top", "mid", "root failure 1"]);
+    }
+
+    #[test]
+    fn ensure_and_bail() {
+        fn check(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            Ok(x)
+        }
+        assert_eq!(check(3).unwrap(), 3);
+        assert!(check(-1).is_err());
+    }
+}

@@ -1,0 +1,161 @@
+//! Stub of the `xla-rs` PJRT API surface used by `runtime/`.
+//!
+//! The container has no XLA/PJRT native toolchain, so this crate keeps
+//! the runtime layer *compiling* while reporting the backend as
+//! unavailable at construction time: [`PjRtClient::cpu`] returns an
+//! error, and everything downstream of it is unreachable. All
+//! PJRT-dependent tests and benches already skip when `make artifacts`
+//! has not produced HLO artifacts, so the stub never fails a test — it
+//! only gates the execution paths cleanly.
+//!
+//! Swapping in a real `xla` crate (same names, same signatures) re-lights
+//! the PJRT path without touching `runtime/` or `coordinator/`.
+
+use std::fmt;
+
+/// Error raised by every fallible entry point of the stub.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl Error {
+    fn unavailable(what: &str) -> Error {
+        Error(format!(
+            "{what}: XLA/PJRT backend is unavailable in this build \
+             (rust/vendor/xla is a stub; install the PJRT toolchain and \
+             swap in the real xla crate to execute HLO artifacts)"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types transferable to device buffers.
+pub trait NativeType: Copy + Send + Sync + 'static {}
+
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u8 {}
+
+/// PJRT client handle. The stub cannot construct one.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("PjRtClient::compile"))
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(Error::unavailable("PjRtClient::buffer_from_host_buffer"))
+    }
+}
+
+/// Parsed HLO module.
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation built from an HLO module.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// A compiled, loadable executable.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+/// A device-resident buffer.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// A host-side literal value.
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Err(Error::unavailable("Literal::to_tuple1"))
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Err(Error::unavailable("Literal::array_shape"))
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(Error::unavailable("Literal::to_vec"))
+    }
+}
+
+/// Shape of an array literal.
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_client_reports_unavailable() {
+        let err = PjRtClient::cpu().err().expect("stub must not construct");
+        let msg = err.to_string();
+        assert!(msg.contains("unavailable"), "{msg}");
+    }
+}

@@ -1,0 +1,490 @@
+//! Offline subset of the `zip` crate: stored (uncompressed) ZIP
+//! archives only.
+//!
+//! The workspace exchanges tensors with NumPy through `.npz` files —
+//! ZIP containers whose entries are written with `ZIP_STORED` (both by
+//! our writer and by `np.savez`). The build container has no crate
+//! registry, so this in-repo crate implements exactly the API surface
+//! `util::npz` uses: [`ZipArchive`] (read), [`ZipWriter`] (write), and
+//! [`write::FileOptions`] with [`CompressionMethod::Stored`].
+//!
+//! Reader notes: entry metadata (sizes, CRC) comes from the central
+//! directory, so archives that use data descriptors or zip64 *extra
+//! fields* (NumPy writes one) still parse; deflated entries and true
+//! zip64 sizes are rejected with a clear error.
+
+use std::fmt;
+use std::io::{self, Cursor, Read, Seek, SeekFrom, Write};
+
+/// Error type for archive operations.
+#[derive(Debug)]
+pub struct ZipError(String);
+
+impl ZipError {
+    fn new(msg: impl Into<String>) -> ZipError {
+        ZipError(msg.into())
+    }
+}
+
+impl fmt::Display for ZipError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "zip: {}", self.0)
+    }
+}
+
+impl std::error::Error for ZipError {}
+
+impl From<io::Error> for ZipError {
+    fn from(e: io::Error) -> ZipError {
+        ZipError(format!("io: {e}"))
+    }
+}
+
+type ZipResult<T> = Result<T, ZipError>;
+
+/// Compression method of an entry. Only `Stored` is supported.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum CompressionMethod {
+    #[default]
+    Stored,
+}
+
+/// Writer-side options, mirroring `zip::write::FileOptions`.
+pub mod write {
+    use super::CompressionMethod;
+
+    /// Per-entry options. `Copy` so one value can configure many entries.
+    #[derive(Clone, Copy, Debug, Default)]
+    pub struct FileOptions {
+        pub(crate) method: CompressionMethod,
+    }
+
+    impl FileOptions {
+        pub fn compression_method(mut self, method: CompressionMethod) -> FileOptions {
+            self.method = method;
+            self
+        }
+    }
+}
+
+// -- CRC32 (IEEE, reflected) ------------------------------------------------
+
+fn crc32(data: &[u8]) -> u32 {
+    let mut table = [0u32; 256];
+    for (i, slot) in table.iter_mut().enumerate() {
+        let mut c = i as u32;
+        for _ in 0..8 {
+            c = if c & 1 != 0 { 0xEDB88320 ^ (c >> 1) } else { c >> 1 };
+        }
+        *slot = c;
+    }
+    let mut c = 0xFFFFFFFFu32;
+    for &b in data {
+        c = table[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFFFFFF
+}
+
+// -- reading ----------------------------------------------------------------
+
+const LOCAL_SIG: u32 = 0x04034b50;
+const CENTRAL_SIG: u32 = 0x02014b50;
+const EOCD_SIG: u32 = 0x06054b50;
+
+#[derive(Clone, Debug)]
+struct EntryMeta {
+    name: String,
+    method: u16,
+    crc: u32,
+    comp_size: u64,
+    uncomp_size: u64,
+    local_offset: u64,
+}
+
+/// Read-only view of a ZIP archive.
+pub struct ZipArchive<R> {
+    reader: R,
+    entries: Vec<EntryMeta>,
+}
+
+fn rd_u16(b: &[u8], at: usize) -> u16 {
+    u16::from_le_bytes([b[at], b[at + 1]])
+}
+
+fn rd_u32(b: &[u8], at: usize) -> u32 {
+    u32::from_le_bytes([b[at], b[at + 1], b[at + 2], b[at + 3]])
+}
+
+impl<R: Read + Seek> ZipArchive<R> {
+    /// Parse the central directory of an archive.
+    pub fn new(mut reader: R) -> ZipResult<ZipArchive<R>> {
+        let len = reader.seek(SeekFrom::End(0))?;
+        // EOCD is 22 bytes + up to 65535 bytes of trailing comment.
+        let tail_len = len.min(22 + 65535);
+        reader.seek(SeekFrom::Start(len - tail_len))?;
+        let mut tail = vec![0u8; tail_len as usize];
+        reader.read_exact(&mut tail)?;
+        let eocd_at = (0..tail.len().saturating_sub(21))
+            .rev()
+            .find(|&i| rd_u32(&tail, i) == EOCD_SIG)
+            .ok_or_else(|| ZipError::new("end-of-central-directory not found"))?;
+        let eocd = &tail[eocd_at..];
+        let n_entries = rd_u16(eocd, 10) as usize;
+        let cd_size = rd_u32(eocd, 12) as u64;
+        let cd_offset = rd_u32(eocd, 16) as u64;
+        if cd_offset == 0xFFFFFFFF || n_entries == 0xFFFF {
+            return Err(ZipError::new("zip64 archives are not supported"));
+        }
+
+        reader.seek(SeekFrom::Start(cd_offset))?;
+        let mut cd = vec![0u8; cd_size as usize];
+        reader.read_exact(&mut cd)?;
+
+        let mut entries = Vec::with_capacity(n_entries);
+        let mut pos = 0usize;
+        for _ in 0..n_entries {
+            if pos + 46 > cd.len() || rd_u32(&cd, pos) != CENTRAL_SIG {
+                return Err(ZipError::new("bad central directory entry"));
+            }
+            let method = rd_u16(&cd, pos + 10);
+            let crc = rd_u32(&cd, pos + 16);
+            let comp_size = rd_u32(&cd, pos + 20) as u64;
+            let uncomp_size = rd_u32(&cd, pos + 24) as u64;
+            let name_len = rd_u16(&cd, pos + 28) as usize;
+            let extra_len = rd_u16(&cd, pos + 30) as usize;
+            let comment_len = rd_u16(&cd, pos + 32) as usize;
+            let local_offset = rd_u32(&cd, pos + 42) as u64;
+            if comp_size == 0xFFFFFFFF || uncomp_size == 0xFFFFFFFF {
+                return Err(ZipError::new("zip64 entry sizes are not supported"));
+            }
+            if pos + 46 + name_len > cd.len() {
+                return Err(ZipError::new("truncated central directory name"));
+            }
+            let name = String::from_utf8_lossy(&cd[pos + 46..pos + 46 + name_len])
+                .into_owned();
+            entries.push(EntryMeta {
+                name,
+                method,
+                crc,
+                comp_size,
+                uncomp_size,
+                local_offset,
+            });
+            pos += 46 + name_len + extra_len + comment_len;
+        }
+        Ok(ZipArchive { reader, entries })
+    }
+
+    /// Number of entries.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Read the `i`-th entry (central-directory order) into memory.
+    pub fn by_index(&mut self, i: usize) -> ZipResult<ZipFile> {
+        let meta = self
+            .entries
+            .get(i)
+            .cloned()
+            .ok_or_else(|| ZipError::new(format!("entry index {i} out of range")))?;
+        if meta.method != 0 {
+            return Err(ZipError::new(format!(
+                "entry {:?} uses compression method {} (only stored is supported)",
+                meta.name, meta.method
+            )));
+        }
+        // Local header: 30 fixed bytes, then name + extra, then data. Use
+        // the *local* name/extra lengths (NumPy adds a zip64 extra field
+        // here that is absent from the central directory).
+        self.reader.seek(SeekFrom::Start(meta.local_offset))?;
+        let mut lh = [0u8; 30];
+        self.reader.read_exact(&mut lh)?;
+        if rd_u32(&lh, 0) != LOCAL_SIG {
+            return Err(ZipError::new(format!("bad local header for {:?}", meta.name)));
+        }
+        let name_len = rd_u16(&lh, 26) as u64;
+        let extra_len = rd_u16(&lh, 28) as u64;
+        self.reader.seek(SeekFrom::Current((name_len + extra_len) as i64))?;
+        let mut data = vec![0u8; meta.comp_size as usize];
+        self.reader.read_exact(&mut data)?;
+        if crc32(&data) != meta.crc {
+            return Err(ZipError::new(format!("crc mismatch in entry {:?}", meta.name)));
+        }
+        Ok(ZipFile {
+            name: meta.name,
+            size: meta.uncomp_size,
+            data: Cursor::new(data),
+        })
+    }
+}
+
+/// One archive entry, fully buffered in memory.
+pub struct ZipFile {
+    name: String,
+    size: u64,
+    data: Cursor<Vec<u8>>,
+}
+
+impl ZipFile {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Uncompressed size in bytes.
+    pub fn size(&self) -> u64 {
+        self.size
+    }
+}
+
+impl Read for ZipFile {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        self.data.read(buf)
+    }
+}
+
+// -- writing ----------------------------------------------------------------
+
+struct DirRecord {
+    name: String,
+    crc: u32,
+    size: u64,
+    offset: u64,
+}
+
+/// Streaming ZIP writer (stored entries only).
+pub struct ZipWriter<W: Write> {
+    inner: W,
+    offset: u64,
+    current: Option<(String, Vec<u8>)>,
+    records: Vec<DirRecord>,
+}
+
+impl<W: Write> ZipWriter<W> {
+    pub fn new(inner: W) -> ZipWriter<W> {
+        ZipWriter { inner, offset: 0, current: None, records: Vec::new() }
+    }
+
+    /// Begin a new entry; subsequent [`Write`] calls append to it.
+    pub fn start_file<S: Into<String>>(
+        &mut self,
+        name: S,
+        _options: write::FileOptions,
+    ) -> ZipResult<()> {
+        self.flush_entry()?;
+        self.current = Some((name.into(), Vec::new()));
+        Ok(())
+    }
+
+    fn put(&mut self, bytes: &[u8]) -> ZipResult<()> {
+        self.inner.write_all(bytes)?;
+        self.offset += bytes.len() as u64;
+        Ok(())
+    }
+
+    fn flush_entry(&mut self) -> ZipResult<()> {
+        let Some((name, data)) = self.current.take() else {
+            return Ok(());
+        };
+        if data.len() as u64 > 0xFFFFFFFE || name.len() > 0xFFFF {
+            return Err(ZipError::new("entry too large for non-zip64 archive"));
+        }
+        let crc = crc32(&data);
+        let offset = self.offset;
+        let mut header = Vec::with_capacity(30 + name.len());
+        header.extend_from_slice(&LOCAL_SIG.to_le_bytes());
+        header.extend_from_slice(&20u16.to_le_bytes()); // version needed
+        header.extend_from_slice(&0u16.to_le_bytes()); // flags
+        header.extend_from_slice(&0u16.to_le_bytes()); // method: stored
+        header.extend_from_slice(&0u16.to_le_bytes()); // mtime
+        header.extend_from_slice(&0u16.to_le_bytes()); // mdate
+        header.extend_from_slice(&crc.to_le_bytes());
+        header.extend_from_slice(&(data.len() as u32).to_le_bytes()); // comp
+        header.extend_from_slice(&(data.len() as u32).to_le_bytes()); // uncomp
+        header.extend_from_slice(&(name.len() as u16).to_le_bytes());
+        header.extend_from_slice(&0u16.to_le_bytes()); // extra len
+        header.extend_from_slice(name.as_bytes());
+        self.put(&header)?;
+        self.put(&data)?;
+        self.records.push(DirRecord { name, crc, size: data.len() as u64, offset });
+        Ok(())
+    }
+
+    /// Flush the last entry, write the central directory, and return the
+    /// underlying writer.
+    pub fn finish(mut self) -> ZipResult<W> {
+        self.flush_entry()?;
+        let cd_start = self.offset;
+        let records = std::mem::take(&mut self.records);
+        for rec in &records {
+            if rec.offset > 0xFFFFFFFE {
+                return Err(ZipError::new("archive too large for non-zip64"));
+            }
+            let mut h = Vec::with_capacity(46 + rec.name.len());
+            h.extend_from_slice(&CENTRAL_SIG.to_le_bytes());
+            h.extend_from_slice(&20u16.to_le_bytes()); // version made by
+            h.extend_from_slice(&20u16.to_le_bytes()); // version needed
+            h.extend_from_slice(&0u16.to_le_bytes()); // flags
+            h.extend_from_slice(&0u16.to_le_bytes()); // method
+            h.extend_from_slice(&0u16.to_le_bytes()); // mtime
+            h.extend_from_slice(&0u16.to_le_bytes()); // mdate
+            h.extend_from_slice(&rec.crc.to_le_bytes());
+            h.extend_from_slice(&(rec.size as u32).to_le_bytes());
+            h.extend_from_slice(&(rec.size as u32).to_le_bytes());
+            h.extend_from_slice(&(rec.name.len() as u16).to_le_bytes());
+            h.extend_from_slice(&0u16.to_le_bytes()); // extra
+            h.extend_from_slice(&0u16.to_le_bytes()); // comment
+            h.extend_from_slice(&0u16.to_le_bytes()); // disk
+            h.extend_from_slice(&0u16.to_le_bytes()); // internal attrs
+            h.extend_from_slice(&0u32.to_le_bytes()); // external attrs
+            h.extend_from_slice(&(rec.offset as u32).to_le_bytes());
+            h.extend_from_slice(rec.name.as_bytes());
+            self.put(&h)?;
+        }
+        let cd_size = self.offset - cd_start;
+        let mut eocd = Vec::with_capacity(22);
+        eocd.extend_from_slice(&EOCD_SIG.to_le_bytes());
+        eocd.extend_from_slice(&0u16.to_le_bytes()); // disk
+        eocd.extend_from_slice(&0u16.to_le_bytes()); // cd disk
+        eocd.extend_from_slice(&(records.len() as u16).to_le_bytes());
+        eocd.extend_from_slice(&(records.len() as u16).to_le_bytes());
+        eocd.extend_from_slice(&(cd_size as u32).to_le_bytes());
+        eocd.extend_from_slice(&(cd_start as u32).to_le_bytes());
+        eocd.extend_from_slice(&0u16.to_le_bytes()); // comment len
+        self.put(&eocd)?;
+        self.inner.flush()?;
+        Ok(self.inner)
+    }
+}
+
+impl<W: Write> Write for ZipWriter<W> {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match &mut self.current {
+            Some((_, data)) => {
+                data.extend_from_slice(buf);
+                Ok(buf.len())
+            }
+            None => Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                "no entry open; call start_file first",
+            )),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_archive(entries: &[(&str, &[u8])]) -> Vec<u8> {
+        let mut w = ZipWriter::new(Cursor::new(Vec::new()));
+        let opts = write::FileOptions::default()
+            .compression_method(CompressionMethod::Stored);
+        for (name, data) in entries {
+            w.start_file(*name, opts).unwrap();
+            w.write_all(data).unwrap();
+        }
+        w.finish().unwrap().into_inner()
+    }
+
+    #[test]
+    fn roundtrip_multiple_entries() {
+        let bytes =
+            write_archive(&[("a.bin", b"hello"), ("dir/b.bin", &[0u8, 1, 2, 255])]);
+        let mut ar = ZipArchive::new(Cursor::new(bytes)).unwrap();
+        assert_eq!(ar.len(), 2);
+        let mut f = ar.by_index(0).unwrap();
+        assert_eq!(f.name(), "a.bin");
+        assert_eq!(f.size(), 5);
+        let mut buf = Vec::new();
+        f.read_to_end(&mut buf).unwrap();
+        assert_eq!(buf, b"hello");
+        let mut f = ar.by_index(1).unwrap();
+        assert_eq!(f.name(), "dir/b.bin");
+        let mut buf = Vec::new();
+        f.read_to_end(&mut buf).unwrap();
+        assert_eq!(buf, vec![0u8, 1, 2, 255]);
+    }
+
+    #[test]
+    fn empty_archive_roundtrip() {
+        let bytes = write_archive(&[]);
+        let ar = ZipArchive::new(Cursor::new(bytes)).unwrap();
+        assert!(ar.is_empty());
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let mut bytes = write_archive(&[("x", b"payload")]);
+        // Flip a data byte: CRC check must fail.
+        let at = bytes.iter().position(|&b| b == b'p').unwrap();
+        bytes[at] ^= 0xFF;
+        let mut ar = ZipArchive::new(Cursor::new(bytes)).unwrap();
+        assert!(ar.by_index(0).is_err());
+        assert!(ZipArchive::new(Cursor::new(b"garbage".to_vec())).is_err());
+    }
+
+    /// Bytes of `np.savez(buf, w=..., ids=...)` produced by NumPy 1.x —
+    /// guards compatibility with the Python side's exporter (NumPy adds
+    /// a zip64 extra field to local headers, which we must skip).
+    const NUMPY_NPZ: &[u8] = &[
+        80, 75, 3, 4, 20, 0, 0, 0, 0, 0, 0, 0, 33, 0, 78, 251,
+        32, 117, 144, 0, 0, 0, 144, 0, 0, 0, 5, 0, 20, 0, 119, 46,
+        110, 112, 121, 1, 0, 16, 0, 144, 0, 0, 0, 0, 0, 0, 0, 144,
+        0, 0, 0, 0, 0, 0, 0, 147, 78, 85, 77, 80, 89, 1, 0, 118,
+        0, 123, 39, 100, 101, 115, 99, 114, 39, 58, 32, 39, 60, 102, 52, 39,
+        44, 32, 39, 102, 111, 114, 116, 114, 97, 110, 95, 111, 114, 100, 101, 114,
+        39, 58, 32, 70, 97, 108, 115, 101, 44, 32, 39, 115, 104, 97, 112, 101,
+        39, 58, 32, 40, 50, 44, 32, 50, 41, 44, 32, 125, 32, 32, 32, 32,
+        32, 32, 32, 32, 32, 32, 32, 32, 32, 32, 32, 32, 32, 32, 32, 32,
+        32, 32, 32, 32, 32, 32, 32, 32, 32, 32, 32, 32, 32, 32, 32, 32,
+        32, 32, 32, 32, 32, 32, 32, 32, 32, 32, 32, 32, 32, 32, 32, 32,
+        32, 32, 32, 32, 32, 32, 10, 0, 0, 128, 63, 0, 0, 0, 64, 0,
+        0, 64, 64, 0, 0, 128, 64, 80, 75, 3, 4, 20, 0, 0, 0, 0,
+        0, 0, 0, 33, 0, 8, 101, 27, 91, 152, 0, 0, 0, 152, 0, 0,
+        0, 7, 0, 20, 0, 105, 100, 115, 46, 110, 112, 121, 1, 0, 16, 0,
+        152, 0, 0, 0, 0, 0, 0, 0, 152, 0, 0, 0, 0, 0, 0, 0,
+        147, 78, 85, 77, 80, 89, 1, 0, 118, 0, 123, 39, 100, 101, 115, 99,
+        114, 39, 58, 32, 39, 60, 105, 56, 39, 44, 32, 39, 102, 111, 114, 116,
+        114, 97, 110, 95, 111, 114, 100, 101, 114, 39, 58, 32, 70, 97, 108, 115,
+        101, 44, 32, 39, 115, 104, 97, 112, 101, 39, 58, 32, 40, 51, 44, 41,
+        44, 32, 125, 32, 32, 32, 32, 32, 32, 32, 32, 32, 32, 32, 32, 32,
+        32, 32, 32, 32, 32, 32, 32, 32, 32, 32, 32, 32, 32, 32, 32, 32,
+        32, 32, 32, 32, 32, 32, 32, 32, 32, 32, 32, 32, 32, 32, 32, 32,
+        32, 32, 32, 32, 32, 32, 32, 32, 32, 32, 32, 32, 32, 32, 32, 10,
+        7, 0, 0, 0, 0, 0, 0, 0, 8, 0, 0, 0, 0, 0, 0, 0,
+        9, 0, 0, 0, 0, 0, 0, 0, 80, 75, 1, 2, 20, 3, 20, 0,
+        0, 0, 0, 0, 0, 0, 33, 0, 78, 251, 32, 117, 144, 0, 0, 0,
+        144, 0, 0, 0, 5, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0,
+        128, 1, 0, 0, 0, 0, 119, 46, 110, 112, 121, 80, 75, 1, 2, 20,
+        3, 20, 0, 0, 0, 0, 0, 0, 0, 33, 0, 8, 101, 27, 91, 152,
+        0, 0, 0, 152, 0, 0, 0, 7, 0, 0, 0, 0, 0, 0, 0, 0,
+        0, 0, 0, 128, 1, 199, 0, 0, 0, 105, 100, 115, 46, 110, 112, 121,
+        80, 75, 5, 6, 0, 0, 0, 0, 2, 0, 2, 0, 104, 0, 0, 0,
+        152, 1, 0, 0, 0, 0,
+    ];
+
+    #[test]
+    fn reads_numpy_written_npz() {
+        let mut ar = ZipArchive::new(Cursor::new(NUMPY_NPZ.to_vec())).unwrap();
+        assert_eq!(ar.len(), 2);
+        let mut names = Vec::new();
+        for i in 0..ar.len() {
+            let mut f = ar.by_index(i).unwrap();
+            names.push(f.name().to_string());
+            let mut buf = Vec::new();
+            f.read_to_end(&mut buf).unwrap();
+            assert_eq!(buf.len() as u64, f.size());
+            assert_eq!(&buf[..6], b"\x93NUMPY");
+        }
+        names.sort();
+        assert_eq!(names, vec!["ids.npy".to_string(), "w.npy".to_string()]);
+    }
+}

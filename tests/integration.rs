@@ -1,15 +1,27 @@
-//! Integration tests over the built artifacts: the three layers
-//! composed — PJRT runtime executing AOT-lowered HLO, expert
-//! compression, and the serving coordinator. All tests skip cleanly if
-//! `make artifacts` has not been run (unit tests cover everything that
-//! does not need artifacts).
+//! Integration tests in two tiers.
+//!
+//! **Synthetic-fixture tests** (always run): a deterministic in-memory
+//! `ParamSet` built from `util::rng::Pcg` exercises the compression
+//! engine (serial + parallel), the `.cpeft` container, and the expert
+//! registry end to end — no artifacts required.
+//!
+//! **Artifact tests** (skip cleanly without `make artifacts`): the three
+//! layers composed — PJRT runtime executing AOT-lowered HLO, expert
+//! compression, and the serving coordinator.
 
 use compeft::bench_support as bs;
-use compeft::compeft::compress::{CompressConfig, Granularity};
+use compeft::compeft::compress::{
+    compress_params, decompress_params, CompressConfig, Granularity,
+};
+use compeft::compeft::engine::par_compress_paramset;
+use compeft::compeft::format::{self, to_bytes, to_bytes_par, Encoding};
 use compeft::coordinator::batcher::BatchPolicy;
 use compeft::coordinator::registry::{scan_expert_npz, ExpertMethod, Registry};
 use compeft::coordinator::{Coordinator, CoordinatorConfig, LinkSpec};
 use compeft::runtime::AdapterKind;
+use compeft::tensor::{ParamSet, Tensor};
+use compeft::util::pool::ThreadPool;
+use compeft::util::rng::Pcg;
 use std::path::PathBuf;
 use std::time::Duration;
 
@@ -22,6 +34,149 @@ fn artifacts() -> Option<PathBuf> {
         None
     }
 }
+
+// ---------------------------------------------------------------------------
+// Synthetic fixture (no artifacts)
+// ---------------------------------------------------------------------------
+
+/// A LoRA-shaped synthetic expert task vector: a few tensors of mixed
+/// sizes with heavy-tailed near-zero values (Table 7 statistics).
+fn synthetic_tv(seed: u64, scale_elems: usize) -> ParamSet {
+    let mut rng = Pcg::seed(seed);
+    let mut tv = ParamSet::new();
+    for (i, n) in [scale_elems, scale_elems / 2, 257, scale_elems / 4]
+        .into_iter()
+        .enumerate()
+    {
+        let data: Vec<f32> = (0..n)
+            .map(|_| {
+                let v = rng.normal_ms(0.0, 7e-4) as f32;
+                if rng.next_f32() < 0.01 { v * 20.0 } else { v }
+            })
+            .collect();
+        tv.insert(&format!("layers.{i}.attn.lora_a"), Tensor::new(vec![n], data));
+    }
+    tv
+}
+
+fn fresh_dir(name: &str) -> PathBuf {
+    // Suffix with the pid so concurrent `cargo test` runs don't collide.
+    let dir = std::env::temp_dir()
+        .join(format!("compeft_it_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Compression → container → decompression, serial and parallel, over
+/// both granularities and both wire encodings — the full L2 pipeline an
+/// expert checkpoint travels, on the synthetic fixture.
+#[test]
+fn synthetic_compress_container_roundtrip() -> anyhow::Result<()> {
+    let dir = fresh_dir("roundtrip");
+    let tv = synthetic_tv(11, 20_000);
+    let pool = ThreadPool::new(4);
+    for granularity in [Granularity::Global, Granularity::PerTensor] {
+        for enc in [Encoding::Golomb, Encoding::Bitmask] {
+            let cfg = CompressConfig { density: 0.1, alpha: 1.0, granularity };
+            let serial = compress_params(&tv, &cfg);
+            let par = par_compress_paramset(&tv, &cfg, &pool);
+
+            // Parallel engine must be bit-identical to serial, which the
+            // byte encodings make directly observable.
+            let bytes = to_bytes(&serial, enc);
+            assert_eq!(bytes, to_bytes(&par, enc), "{granularity:?}/{enc:?}");
+            assert_eq!(bytes, to_bytes_par(&par, enc, &pool), "{granularity:?}/{enc:?} par");
+
+            // Disk roundtrip through the .cpeft container.
+            let path = dir.join(format!("e_{granularity:?}_{enc:?}.cpeft"));
+            let written = format::save(&path, &serial, enc)?;
+            assert!(written > 0);
+            let (back, benc) = format::load(&path)?;
+            assert_eq!(benc, enc);
+            assert_eq!(back, serial);
+
+            // Reconstruction: kept coordinates carry α·σ·sgn(τ).
+            let dense = decompress_params(&back, &tv)?;
+            assert_eq!(dense.names(), tv.names());
+            for (name, t) in dense.iter() {
+                let orig = tv.get(name).unwrap();
+                assert_eq!(t.shape, orig.shape);
+                for (rec, o) in t.data.iter().zip(&orig.data) {
+                    if *rec != 0.0 {
+                        assert_eq!(rec.signum(), o.signum(), "{name}");
+                    }
+                }
+            }
+            let k = back.density();
+            assert!((k - 0.1).abs() < 0.02, "density {k}");
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+    Ok(())
+}
+
+/// Registry flow without artifacts: save the synthetic expert as npz,
+/// register original + ComPEFT forms, and check the encoded-size story
+/// (the paper's storage claim) end to end through real files.
+#[test]
+fn synthetic_registry_and_sizes() -> anyhow::Result<()> {
+    let dir = fresh_dir("registry");
+    let tv = synthetic_tv(23, 8_192);
+    let npz = dir.join("synth.lora.npz");
+    tv.save_npz(&npz)?;
+
+    let mut reg = Registry::new();
+    reg.register_original("synth/orig", "synth", "s", ExpertMethod::Lora, &npz)?;
+    for (id, k) in [("synth/k05", 0.05), ("synth/k20", 0.2)] {
+        reg.register_compeft(
+            id,
+            "synth",
+            "s",
+            ExpertMethod::Lora,
+            &npz,
+            &CompressConfig { density: k, alpha: 1.0, granularity: Granularity::Global },
+        )?;
+    }
+    let orig = reg.get("synth/orig").unwrap().encoded_bytes;
+    let k05 = reg.get("synth/k05").unwrap().encoded_bytes;
+    let k20 = reg.get("synth/k20").unwrap().encoded_bytes;
+    assert_eq!(orig, tv.bytes_fp16());
+    assert!(k05 < k20 && k20 < orig, "sizes {k05} < {k20} < {orig}");
+    // Paper §2.2: at k=0.05 the Golomb-coded update is >20x below fp16.
+    assert!(orig as f64 / k05 as f64 > 20.0, "ratio {}", orig as f64 / k05 as f64);
+
+    // The registered .cpeft decodes back to the compressor's output.
+    let rec = reg.get("synth/k20").unwrap();
+    let (loaded, enc) = format::load(&rec.path)?;
+    assert_eq!(enc, Encoding::Golomb);
+    let expect = compress_params(
+        &tv,
+        &CompressConfig { density: 0.2, alpha: 1.0, granularity: Granularity::Global },
+    );
+    assert_eq!(loaded, expect);
+
+    std::fs::remove_dir_all(&dir).ok();
+    Ok(())
+}
+
+/// npz interchange on the synthetic fixture: what the Python exporter
+/// writes is what the Rust side reads (and vice versa).
+#[test]
+fn synthetic_npz_interchange() -> anyhow::Result<()> {
+    let dir = fresh_dir("npz");
+    let tv = synthetic_tv(5, 1024);
+    let path = dir.join("tv.npz");
+    tv.save_npz(&path)?;
+    let back = ParamSet::load_npz(&path)?;
+    assert_eq!(back, tv);
+    std::fs::remove_dir_all(&dir).ok();
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Artifact-gated tests (skip without `make artifacts`)
+// ---------------------------------------------------------------------------
 
 /// The base model executes through PJRT and is meaningfully better than
 /// chance on the held-out benchmark (it was trained on those rules).
