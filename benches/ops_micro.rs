@@ -72,9 +72,38 @@ fn main() {
     b.run_throughput("golomb_encode_4M_k5", bytes_dense, || {
         black_box(golomb::encode(&tern));
     });
-    b.run_throughput("golomb_decode_4M_k5", bytes_dense, || {
+    let serial_decode = b.run_throughput("golomb_decode_4M_k5", bytes_dense, || {
         black_box(golomb::decode(&encoded).unwrap());
     });
+
+    // Parallel framed decode: worker-count scaling on the same payload
+    // through the v2 frame table (the serving-path swap-in decode).
+    // Bit-identical to the serial decoder (asserted below).
+    let table = golomb::frame_table(&tern, compeft::compeft::format::FRAME_NNZ);
+    let mut dec_means = Vec::new();
+    for workers in [1usize, 2, 4, 8] {
+        let pool = ThreadPool::new(workers);
+        let m = b.run_throughput(
+            &format!("par_decode_4M_k5_w{workers}"),
+            bytes_dense,
+            || {
+                black_box(golomb::decode_par(&encoded, &table, &pool).unwrap());
+            },
+        );
+        dec_means.push((workers, m.mean.as_secs_f64()));
+        let par_tern = golomb::decode_par(&encoded, &table, &pool).unwrap();
+        assert_eq!(par_tern, tern, "parallel decode diverged (w={workers})");
+    }
+    let serial_dec_mean = serial_decode.mean.as_secs_f64();
+    let dec_labels: Vec<String> =
+        dec_means.iter().map(|&(w, _)| format!("w{w}")).collect();
+    let dec_speedups: Vec<(&str, f64)> = dec_labels
+        .iter()
+        .zip(&dec_means)
+        .map(|(label, &(_, mean))| (label.as_str(), serial_dec_mean / mean))
+        .collect();
+    b.row("par_decode_speedup_vs_serial", &dec_speedups);
+
     b.row(
         "golomb_size",
         &[
@@ -121,6 +150,13 @@ fn main() {
     b.run_throughput("mask_decode_4M", as_bytes.len() as u64, || {
         black_box(MaskPair::from_bytes(&as_bytes).unwrap());
     });
+    b.run_throughput("mask_to_ternary_4M", bytes_dense, || {
+        black_box(ma.to_ternary());
+    });
+    b.run_throughput("mask_to_ternary_par_4M_w8", bytes_dense, || {
+        black_box(ma.to_ternary_par(&pool8, 1 << 13));
+    });
+    assert_eq!(ma.to_ternary_par(&pool8, 1 << 13), ma.to_ternary());
 
     // Sanity cross-check while we are here: fast ops equal references.
     let fast = ma.dot(&mb).unwrap();

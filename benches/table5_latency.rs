@@ -13,8 +13,11 @@ use compeft::compeft::entropy::human_bytes;
 use compeft::coordinator::loader::ExpertLoader;
 use compeft::coordinator::registry::{ExpertMethod, Registry};
 use compeft::coordinator::transport::{LinkSpec, SimLink};
+use compeft::tensor::ParamSet;
 use compeft::util::bench::Bench;
+use compeft::util::pool::ThreadPool;
 use compeft::util::stats;
+use std::sync::Arc;
 
 const REPS: usize = 10;
 
@@ -22,6 +25,7 @@ fn main() -> anyhow::Result<()> {
     let artifacts = bs::require_artifacts();
     let mut bench = Bench::new("table5");
 
+    let mut largest_npz = None;
     for scale in ["xs", "s", "m", "l"] {
         let npz = artifacts
             .join("experts")
@@ -75,6 +79,53 @@ fn main() -> anyhow::Result<()> {
             human_bytes(c),
             o as f64 / c as f64
         );
+        largest_npz = Some((scale, npz));
+    }
+
+    // Decode worker scaling: the host-side half of a swap-in (v2 frame
+    // decode + dense materialization) on the largest expert present,
+    // serial vs the pooled loader at growing worker counts. Transfer
+    // time is excluded (time_scale 0) — this isolates exactly the part
+    // PR 2 parallelized.
+    if let Some((scale, npz)) = largest_npz {
+        let template = ParamSet::load_npz(&npz)?;
+        let mut reg = Registry::new();
+        reg.register_compeft(
+            "dec",
+            "alpaca",
+            scale,
+            ExpertMethod::Lora,
+            &npz,
+            &CompressConfig { density: 0.1, alpha: 1.0, ..Default::default() },
+        )?;
+        let rec = reg.get("dec").unwrap().clone();
+        let mk_links = || {
+            ExpertLoader::new(
+                SimLink::new("net", LinkSpec::internet()).with_time_scale(0.0),
+                SimLink::new("pcie", LinkSpec::pcie()).with_time_scale(0.0),
+            )
+        };
+        let (bytes, _) = mk_links().fetch_encoded(&rec)?;
+        let time_decode = |loader: &ExpertLoader| -> anyhow::Result<f64> {
+            let mut ms = Vec::with_capacity(REPS);
+            for _ in 0..REPS {
+                let (_, decode) = loader.decode(&rec, &bytes, &template)?;
+                ms.push(decode.as_secs_f64() * 1e3);
+            }
+            Ok(stats::mean(&ms))
+        };
+        let serial_ms = time_decode(&mk_links())?;
+        let mut fields: Vec<(String, f64)> =
+            vec![("serial_ms".to_string(), serial_ms)];
+        for workers in [1usize, 2, 4, 8] {
+            let loader = mk_links().with_pool(Arc::new(ThreadPool::new(workers)));
+            let ms = time_decode(&loader)?;
+            fields.push((format!("w{workers}_ms"), ms));
+            fields.push((format!("w{workers}_speedup"), serial_ms / ms));
+        }
+        let fields_ref: Vec<(&str, f64)> =
+            fields.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+        bench.row(&format!("{scale}/decode_worker_scaling"), &fields_ref);
     }
 
     // Paper-scale extrapolation: apply the same link model to LLaMA-sized

@@ -1,14 +1,15 @@
 //! Parallel chunked compression engine demo: compress a synthetic
 //! 4M-parameter task vector serially and on thread pools of growing
 //! size, verify the outputs are bit-identical, and show the wall-clock
-//! scaling of Algorithm 1 plus the parallel Golomb encode.
+//! scaling of Algorithm 1, the parallel Golomb encode, and the
+//! frame-table decode path the serving engine runs on expert swap-in.
 //!
 //! Works without artifacts. Run:
 //!   cargo run --release --example parallel_compress [d]
 
-use compeft::compeft::compress::{compress_params, CompressConfig};
-use compeft::compeft::engine::par_compress_paramset;
-use compeft::compeft::format::{to_bytes, to_bytes_par, Encoding};
+use compeft::compeft::compress::{compress_params, decompress_params, CompressConfig};
+use compeft::compeft::engine::{par_compress_paramset, par_decompress_params};
+use compeft::compeft::format::{from_bytes, from_bytes_par, to_bytes, to_bytes_par, Encoding};
 use compeft::compeft::golomb;
 use compeft::compeft::Granularity;
 use compeft::tensor::{ParamSet, Tensor};
@@ -94,6 +95,29 @@ fn main() -> anyhow::Result<()> {
     let global = &serial.parts[""];
     let decoded = golomb::decode(&golomb::encode_par(global, &pool, 1 << 15))?;
     assert_eq!(&decoded, global);
+
+    // The decode mirror (serving swap-in): v2 frame-table container
+    // parse + dense materialization, serial vs parallel.
+    let t0 = Instant::now();
+    let (c_serial, _) = from_bytes(&bytes)?;
+    let tv_serial = decompress_params(&c_serial, &tv)?;
+    let dec_serial = t0.elapsed();
+    println!("\n{:<26} {:>10.2?}", "serial decode+material.", dec_serial);
+    for workers in [1usize, 2, 4, 8] {
+        let pool = ThreadPool::new(workers);
+        let t0 = Instant::now();
+        let (c_par, _) = from_bytes_par(&bytes, &pool)?;
+        let tv_par = par_decompress_params(&c_par, &tv, &pool)?;
+        let elapsed = t0.elapsed();
+        assert_eq!(tv_par, tv_serial, "parallel decode diverged at {workers} workers");
+        println!(
+            "{:<26} {:>10.2?}  ({:.2}x, bit-identical)",
+            format!("parallel decode w={workers}"),
+            elapsed,
+            dec_serial.as_secs_f64() / elapsed.as_secs_f64()
+        );
+    }
+
     println!("\nparallel_compress OK");
     Ok(())
 }

@@ -79,22 +79,56 @@ impl MaskPair {
         MaskPair { len: t.len, scale: t.scale, plus, minus }
     }
 
+    /// Extract the indices set in `words[ws..we]` (global word offset
+    /// `ws`) into `out` — the single scan loop both `to_ternary` and
+    /// `to_ternary_par` run, so their index order is identical by
+    /// construction.
+    fn unpack_words(words: &[u64], ws: usize, we: usize, out: &mut Vec<u32>) {
+        for (w, &word) in words[ws..we].iter().enumerate() {
+            let mut bits = word;
+            while bits != 0 {
+                let b = bits.trailing_zeros();
+                out.push(((ws + w) * 64) as u32 + b);
+                bits &= bits - 1;
+            }
+        }
+    }
+
     pub fn to_ternary(&self) -> TernaryVector {
         let mut plus = Vec::new();
         let mut minus = Vec::new();
-        for (w, (&p, &m)) in self.plus.iter().zip(&self.minus).enumerate() {
-            let mut bits = p;
-            while bits != 0 {
-                let b = bits.trailing_zeros();
-                plus.push((w * 64) as u32 + b);
-                bits &= bits - 1;
-            }
-            let mut bits = m;
-            while bits != 0 {
-                let b = bits.trailing_zeros();
-                minus.push((w * 64) as u32 + b);
-                bits &= bits - 1;
-            }
+        let w = self.plus.len();
+        Self::unpack_words(&self.plus, 0, w, &mut plus);
+        Self::unpack_words(&self.minus, 0, w, &mut minus);
+        TernaryVector { len: self.len, scale: self.scale, plus, minus }
+    }
+
+    /// Parallel [`MaskPair::to_ternary`]: identical output.
+    ///
+    /// Word ranges partition the index space in order — the indices
+    /// packed in words `[ws, we)` are exactly `[64·ws, 64·we)` — so
+    /// per-range index lists concatenated in range order equal the
+    /// serial scan. `chunk_words` divides work only and never changes
+    /// the output.
+    pub fn to_ternary_par(
+        &self,
+        pool: &crate::util::pool::ThreadPool,
+        chunk_words: usize,
+    ) -> TernaryVector {
+        let w = self.plus.len();
+        let ranges = crate::util::pool::chunk_ranges(w, chunk_words);
+        let blocks: Vec<(Vec<u32>, Vec<u32>)> = pool.scoped_map(ranges, |(ws, we)| {
+            let mut plus = Vec::new();
+            let mut minus = Vec::new();
+            Self::unpack_words(&self.plus, ws, we, &mut plus);
+            Self::unpack_words(&self.minus, ws, we, &mut minus);
+            (plus, minus)
+        });
+        let mut plus = Vec::new();
+        let mut minus = Vec::new();
+        for (p, m) in blocks {
+            plus.extend_from_slice(&p);
+            minus.extend_from_slice(&m);
         }
         TernaryVector { len: self.len, scale: self.scale, plus, minus }
     }
@@ -314,6 +348,34 @@ mod tests {
                         serial, par,
                         "case {i} workers {workers} chunk_words {chunk_words}"
                     );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn to_ternary_par_matches_serial() {
+        use crate::util::pool::ThreadPool;
+        let mut rng = Pcg::seed(29);
+        let cases = vec![
+            TernaryVector::empty(0),
+            TernaryVector::empty(129),
+            random_index_sets(&mut rng, 64),
+            random_index_sets(&mut rng, 4097),
+            random_index_sets(&mut rng, 100_000),
+        ];
+        for workers in [1usize, 2, 8] {
+            let pool = ThreadPool::new(workers);
+            for chunk_words in [1usize, 9, 1024] {
+                for (i, t) in cases.iter().enumerate() {
+                    let m = MaskPair::from_ternary(t);
+                    let serial = m.to_ternary();
+                    let par = m.to_ternary_par(&pool, chunk_words);
+                    assert_eq!(
+                        serial, par,
+                        "case {i} workers {workers} chunk_words {chunk_words}"
+                    );
+                    assert_eq!(&par, t, "case {i} roundtrip");
                 }
             }
         }

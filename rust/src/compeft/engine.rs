@@ -26,15 +26,27 @@
 //! [`Granularity::PerTensor`] parallelises across tensors instead (one
 //! serial compression per tensor on the pool) — never both levels at
 //! once, which keeps [`ThreadPool::scoped_map`] free of nested waits.
+//!
+//! **Decode mirror (PR 2).** The serving path runs the same three-pass
+//! story in reverse on every GPU-tier miss: wire decode
+//! ([`crate::compeft::format::from_bytes_par`] over v2 payload frames),
+//! dense materialization ([`par_decompress_params`] — chunked
+//! [`TernaryVector::fill_dense_range`] scatters into per-tensor
+//! buffers), and adapter application ([`par_add_assign`]). Each is
+//! bit-identical to its serial counterpart at any worker count and
+//! chunk size, for the same reason the encode side is: chunks partition
+//! the index space in order, each chunk runs the serial loop, and
+//! per-element float ops happen exactly once in the same order.
 
 use crate::compeft::compress::{
     compress_vector, CompressConfig, CompressedParamSet, Granularity,
 };
 use crate::compeft::sparsify::par_topk_by_magnitude;
 use crate::compeft::ternary::TernaryVector;
-use crate::tensor::ParamSet;
+use crate::tensor::{ParamSet, Tensor};
 use crate::util::pool::ThreadPool;
 use crate::util::stats::par_blocked_std_f32;
+use anyhow::{bail, Result};
 use std::collections::BTreeMap;
 
 /// Default work-division chunk: 64K elements ≈ 256 KB of f32 per task —
@@ -137,11 +149,162 @@ pub fn par_compress_paramset_cfg(
     CompressedParamSet { granularity: cfg.granularity, layout, parts }
 }
 
+/// Parallel
+/// [`decompress_params`](crate::compeft::compress::decompress_params):
+/// bit-identical output, default chunk size.
+pub fn par_decompress_params(
+    c: &CompressedParamSet,
+    like: &ParamSet,
+    pool: &ThreadPool,
+) -> Result<ParamSet> {
+    par_decompress_params_cfg(c, like, pool, &EngineConfig::default())
+}
+
+/// Parallel decompression with explicit engine tuning.
+///
+/// Materializes one dense buffer per tensor of `like` and scatters
+/// `±scale` into it chunk by chunk
+/// ([`TernaryVector::fill_dense_range`]), skipping the serial path's
+/// intermediate flat vector. [`Granularity::Global`] indexes the single
+/// part with each tensor's global offset; `PerTensor` indexes each
+/// tensor's own part from zero. One pool pass over all (tensor × chunk)
+/// tasks — never nested.
+pub fn par_decompress_params_cfg(
+    c: &CompressedParamSet,
+    like: &ParamSet,
+    pool: &ThreadPool,
+    engine: &EngineConfig,
+) -> Result<ParamSet> {
+    // One output buffer per tensor of `like`, tied to the ternary part
+    // it scatters from and the tensor's offset within that part.
+    struct DecodeBuf<'a> {
+        name: String,
+        shape: Vec<usize>,
+        data: Vec<f32>,
+        tern: &'a TernaryVector,
+        offset: usize,
+    }
+
+    let chunk = engine.chunk.max(1);
+    let mut bufs: Vec<DecodeBuf<'_>> = Vec::with_capacity(like.len());
+    match c.granularity {
+        Granularity::Global => {
+            let tern = c
+                .parts
+                .get("")
+                .ok_or_else(|| anyhow::anyhow!("missing global part"))?;
+            if tern.len != like.total_elements() {
+                bail!(
+                    "flat length {} != total elements {}",
+                    tern.len,
+                    like.total_elements()
+                );
+            }
+            let mut off = 0usize;
+            for (name, t) in like.iter() {
+                bufs.push(DecodeBuf {
+                    name: name.to_string(),
+                    shape: t.shape.clone(),
+                    data: vec![0.0; t.len()],
+                    tern,
+                    offset: off,
+                });
+                off += t.len();
+            }
+        }
+        Granularity::PerTensor => {
+            for (name, t) in like.iter() {
+                let tern = c
+                    .parts
+                    .get(name)
+                    .ok_or_else(|| anyhow::anyhow!("missing part {name:?}"))?;
+                if tern.len != t.len() {
+                    bail!(
+                        "part {name:?}: ternary length {} != tensor length {}",
+                        tern.len,
+                        t.len()
+                    );
+                }
+                bufs.push(DecodeBuf {
+                    name: name.to_string(),
+                    shape: t.shape.clone(),
+                    data: vec![0.0; t.len()],
+                    tern,
+                    offset: 0,
+                });
+            }
+        }
+    }
+
+    let mut tasks: Vec<(&TernaryVector, usize, &mut [f32])> = Vec::new();
+    for b in bufs.iter_mut() {
+        let mut s = 0usize;
+        for piece in b.data.chunks_mut(chunk) {
+            tasks.push((b.tern, b.offset + s, piece));
+            s += piece.len();
+        }
+    }
+    pool.scoped_map(tasks, |(tern, start, dst)| tern.fill_dense_range(start, dst));
+
+    let mut out = ParamSet::new();
+    for b in bufs {
+        out.insert(&b.name, Tensor::new(b.shape, b.data));
+    }
+    Ok(out)
+}
+
+/// Parallel [`ParamSet::add_assign`]: bit-identical result.
+///
+/// The serving materialization step (`adapter = init + τ̃`, or
+/// `params = base + τ̃` for full-FT experts) is a pure element-wise add;
+/// chunked across the pool every element is still added exactly once,
+/// so the result equals the serial loop's bit for bit. Error behavior
+/// is strictly cleaner than serial: a delta name missing from `dst`
+/// fails *before* anything is mutated (the serial loop may have applied
+/// earlier tensors already); a shape mismatch panics like
+/// [`Tensor::add_assign`] does.
+pub fn par_add_assign(
+    dst: &mut ParamSet,
+    delta: &ParamSet,
+    pool: &ThreadPool,
+) -> Result<()> {
+    par_add_assign_cfg(dst, delta, pool, &EngineConfig::default())
+}
+
+/// Parallel add-assign with explicit engine tuning.
+pub fn par_add_assign_cfg(
+    dst: &mut ParamSet,
+    delta: &ParamSet,
+    pool: &ThreadPool,
+    engine: &EngineConfig,
+) -> Result<()> {
+    for (name, _) in delta.iter() {
+        if dst.get(name).is_none() {
+            bail!("parameter {name:?} missing in target");
+        }
+    }
+    let chunk = engine.chunk.max(1);
+    let mut tasks: Vec<(&mut [f32], &[f32])> = Vec::new();
+    for (name, mine) in dst.iter_mut() {
+        if let Some(d) = delta.get(name) {
+            assert_eq!(mine.shape, d.shape, "shape mismatch in add_assign");
+            for (dc, sc) in mine.data.chunks_mut(chunk).zip(d.data.chunks(chunk)) {
+                tasks.push((dc, sc));
+            }
+        }
+    }
+    pool.scoped_map(tasks, |(d, s)| {
+        for (a, b) in d.iter_mut().zip(s) {
+            *a += *b;
+        }
+    });
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::compeft::compress::compress_params;
-    use crate::tensor::Tensor;
     use crate::util::prop;
     use crate::util::rng::Pcg;
 
@@ -269,6 +432,108 @@ mod tests {
                 }
             }
         }
+    }
+
+    fn assert_paramset_bit_identical(a: &ParamSet, b: &ParamSet, tag: &str) {
+        assert_eq!(a.names(), b.names(), "{tag}: names");
+        for (name, ta) in a.iter() {
+            let tb = b.get(name).unwrap();
+            assert_eq!(ta.shape, tb.shape, "{tag}/{name}: shape");
+            let bits_a: Vec<u32> = ta.data.iter().map(|x| x.to_bits()).collect();
+            let bits_b: Vec<u32> = tb.data.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(bits_a, bits_b, "{tag}/{name}: values");
+        }
+    }
+
+    #[test]
+    fn par_decompress_matches_serial_across_pools_and_chunks() {
+        use crate::compeft::compress::decompress_params;
+        let mut rng = Pcg::seed(77);
+        for tensors in [0usize, 1, 4] {
+            let tv = sample_paramset(&mut rng, tensors);
+            for granularity in [Granularity::Global, Granularity::PerTensor] {
+                let cfg = CompressConfig { density: 0.15, alpha: 2.0, granularity };
+                let c = compress_params(&tv, &cfg);
+                let serial = decompress_params(&c, &tv).unwrap();
+                for workers in [1usize, 2, 8] {
+                    let pool = ThreadPool::new(workers);
+                    for chunk in [1usize, 113, 1 << 16] {
+                        let par = par_decompress_params_cfg(
+                            &c,
+                            &tv,
+                            &pool,
+                            &EngineConfig { chunk },
+                        )
+                        .unwrap();
+                        assert_paramset_bit_identical(
+                            &serial,
+                            &par,
+                            &format!(
+                                "{granularity:?} tensors={tensors} \
+                                 workers={workers} chunk={chunk}"
+                            ),
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn par_decompress_error_paths_match_serial() {
+        let mut rng = Pcg::seed(81);
+        let tv = sample_paramset(&mut rng, 2);
+        let pool = ThreadPool::new(2);
+        // Missing per-tensor part.
+        let cfg = CompressConfig {
+            density: 0.2,
+            alpha: 1.0,
+            granularity: Granularity::PerTensor,
+        };
+        let mut c = compress_params(&tv, &cfg);
+        c.parts.remove("layer.0.w");
+        assert!(par_decompress_params(&c, &tv, &pool).is_err());
+        // Global length mismatch.
+        let cfg = CompressConfig { granularity: Granularity::Global, ..cfg };
+        let c = compress_params(&tv, &cfg);
+        let smaller = sample_paramset(&mut Pcg::seed(82), 1);
+        assert!(par_decompress_params(&c, &smaller, &pool).is_err());
+    }
+
+    #[test]
+    fn par_add_assign_matches_serial() {
+        let mut rng = Pcg::seed(91);
+        for tensors in [0usize, 1, 5] {
+            let base = sample_paramset(&mut rng, tensors);
+            let delta = sample_paramset(&mut Pcg::seed(400 + tensors as u64), tensors);
+            let mut serial = base.clone();
+            serial.add_assign(&delta).unwrap();
+            for workers in [1usize, 2, 8] {
+                let pool = ThreadPool::new(workers);
+                for chunk in [1usize, 97, 1 << 16] {
+                    let mut par = base.clone();
+                    par_add_assign_cfg(&mut par, &delta, &pool, &EngineConfig { chunk })
+                        .unwrap();
+                    assert_paramset_bit_identical(
+                        &serial,
+                        &par,
+                        &format!("tensors={tensors} workers={workers} chunk={chunk}"),
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn par_add_assign_missing_name_fails_before_mutating() {
+        let mut rng = Pcg::seed(95);
+        let mut dst = sample_paramset(&mut rng, 2);
+        let snapshot = dst.clone();
+        let mut delta = sample_paramset(&mut Pcg::seed(96), 2);
+        delta.insert("not.in.dst", Tensor::new(vec![3], vec![1.0, 2.0, 3.0]));
+        let pool = ThreadPool::new(2);
+        assert!(par_add_assign(&mut dst, &delta, &pool).is_err());
+        assert_eq!(dst, snapshot, "failed add must not partially apply");
     }
 
     #[test]

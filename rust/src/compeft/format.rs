@@ -3,27 +3,58 @@
 //! One file holds a whole [`CompressedParamSet`]: a header, the tensor
 //! layout table, and one payload record per part, each encoded as either
 //! Golomb (storage-optimal) or bitmask (compute-optimal) per §2.2. A
-//! CRC32 over everything after the header guards against truncated
-//! transfers — important because the serving path streams these over
-//! simulated links.
+//! CRC32 over everything after the header guards against truncated or
+//! trailing-garbage transfers — important because the serving path
+//! streams these over simulated links. Readers reject any bytes left
+//! over after the last part: a CRC-consistent writer that appends junk
+//! is a bug, not a format feature.
+//!
+//! **Format v2** (current writer) frames every payload for parallel
+//! decode: Golomb payloads carry a per-chunk offset/first-index table
+//! ([`golomb::FrameTable`], fixed-nnz chunks), bitmask payloads a word
+//! chunk size (word ranges are self-describing). Framing is pure
+//! metadata — payload bytes are identical to v1, and the ternary
+//! semantics are unchanged. [`from_bytes`] auto-dispatches on the
+//! version field, so v1 files remain readable; [`from_bytes_par`]
+//! decodes v2 payload frames (and v2/v1 multi-part files) concurrently
+//! on a [`ThreadPool`](crate::util::pool::ThreadPool) with output
+//! identical to the serial reader.
 //!
 //! ```text
-//! magic "CPFT" | version u16 | flags u16 | granularity u8 | encoding u8
-//! n_layout u32 | [ name, shape ]*            (layout table)
-//! n_parts u32  | [ name, payload_len u64, payload ]*
+//! magic "CPFT" | version u16 (1|2) | flags u16 | granularity u8 | encoding u8
+//! n_layout u32 | [ name, ndim u32, dims u64*, offset u64 ]*
+//! n_parts u32  | [ name, FRAMES?, payload_len u64, payload ]*
 //! crc32 u32                                   (over layout+parts)
+//!
+//! FRAMES (v2 only):
+//!   chunk u32    — nonzeros per Golomb frame / words per bitmask chunk
+//!   n_frames u32 — 0 for bitmask payloads
+//!   [ bit_offset u64, prev_index u32 ]*n_frames
 //! ```
 
 use crate::compeft::bitmask::MaskPair;
 use crate::compeft::compress::{CompressedParamSet, Granularity};
-use crate::compeft::golomb;
+use crate::compeft::golomb::{self, FrameTable};
+use crate::compeft::ternary::TernaryVector;
+use crate::util::pool::ThreadPool;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::io::Write as _;
 use std::path::Path;
 
 const MAGIC: &[u8; 4] = b"CPFT";
-const VERSION: u16 = 1;
+/// Current writer version (chunk-framed payloads).
+const VERSION: u16 = 2;
+/// Legacy unframed container (still readable).
+const VERSION_V1: u16 = 1;
+
+/// Nonzeros per Golomb frame in freshly written v2 containers. 8K
+/// nonzeros ≈ 7 KB of payload at k=0.05 — a 4M-element expert (~210K
+/// nonzeros) yields ~26 frames, enough to load-balance 8 workers ~3×
+/// over, while the 12-byte frame entry stays < 0.2% overhead.
+pub const FRAME_NNZ: usize = 1 << 13;
+/// Words per bitmask decode chunk recorded in v2 containers.
+pub const FRAME_WORDS: usize = 1 << 13;
 
 /// Wire encoding for payload records.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -115,19 +146,46 @@ fn get_u64(bytes: &[u8], pos: &mut usize) -> Result<u64> {
 }
 
 /// Serial payload encoding of one part.
-fn encode_payload(tern: &crate::compeft::ternary::TernaryVector, enc: Encoding) -> Vec<u8> {
+fn encode_payload(tern: &TernaryVector, enc: Encoding) -> Vec<u8> {
     match enc {
         Encoding::Golomb => golomb::encode(tern),
         Encoding::Bitmask => MaskPair::from_ternary(tern).to_bytes(),
     }
 }
 
+/// Frame metadata stored alongside one part in a v2 container. For
+/// bitmask payloads the table carries only the word chunk size (the
+/// `chunk_nnz` field holds *words*; ranges are self-describing).
+///
+/// The Golomb table is an extra O(nnz) bit-cost walk on top of the
+/// encode itself — a deliberate trade: keeping [`golomb::frame_table`]
+/// the single source of truth for offsets (writers *and* readers
+/// recompute it) is what lets every read path verify the stored table
+/// exactly. If writer throughput ever matters more, the table could be
+/// sampled from `BitWriter::bit_len` inside the encode loop instead.
+fn part_frames(tern: &TernaryVector, enc: Encoding) -> FrameTable {
+    match enc {
+        Encoding::Golomb => golomb::frame_table(tern, FRAME_NNZ),
+        Encoding::Bitmask => {
+            FrameTable { chunk_nnz: FRAME_WORDS as u32, frames: Vec::new() }
+        }
+    }
+}
+
 /// Assemble the `.cpeft` container around already-encoded payloads
 /// (one per part, in `c.parts` iteration order). The single source of
-/// truth for the header/layout/CRC wire format — both the serial and
-/// parallel writers go through here.
-fn assemble(c: &CompressedParamSet, enc: Encoding, payloads: &[Vec<u8>]) -> Vec<u8> {
+/// truth for the header/layout/CRC wire format — the serial and
+/// parallel writers of both versions go through here. `frames` must
+/// hold one table per part when `version >= 2` and is ignored for v1.
+fn assemble(
+    c: &CompressedParamSet,
+    enc: Encoding,
+    payloads: &[Vec<u8>],
+    version: u16,
+    frames: &[FrameTable],
+) -> Vec<u8> {
     debug_assert_eq!(c.parts.len(), payloads.len());
+    debug_assert!(version == VERSION_V1 || frames.len() == payloads.len());
     let mut body = Vec::new();
     // Layout table.
     body.extend_from_slice(&(c.layout.len() as u32).to_le_bytes());
@@ -141,15 +199,24 @@ fn assemble(c: &CompressedParamSet, enc: Encoding, payloads: &[Vec<u8>]) -> Vec<
     }
     // Parts.
     body.extend_from_slice(&(c.parts.len() as u32).to_le_bytes());
-    for (name, payload) in c.parts.keys().zip(payloads) {
+    for (i, (name, payload)) in c.parts.keys().zip(payloads).enumerate() {
         put_str(&mut body, name);
+        if version >= 2 {
+            let ft = &frames[i];
+            body.extend_from_slice(&ft.chunk_nnz.to_le_bytes());
+            body.extend_from_slice(&(ft.frames.len() as u32).to_le_bytes());
+            for &(off, prev) in &ft.frames {
+                body.extend_from_slice(&off.to_le_bytes());
+                body.extend_from_slice(&prev.to_le_bytes());
+            }
+        }
         body.extend_from_slice(&(payload.len() as u64).to_le_bytes());
         body.extend_from_slice(payload);
     }
 
     let mut out = Vec::with_capacity(body.len() + 16);
     out.extend_from_slice(MAGIC);
-    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&version.to_le_bytes());
     out.extend_from_slice(&0u16.to_le_bytes()); // flags
     out.push(match c.granularity {
         Granularity::Global => 0,
@@ -161,26 +228,37 @@ fn assemble(c: &CompressedParamSet, enc: Encoding, payloads: &[Vec<u8>]) -> Vec<
     out
 }
 
-/// Serialize a compressed expert to `.cpeft` bytes.
+/// Serialize a compressed expert to `.cpeft` bytes (format v2).
 pub fn to_bytes(c: &CompressedParamSet, enc: Encoding) -> Vec<u8> {
     let payloads: Vec<Vec<u8>> =
         c.parts.values().map(|tern| encode_payload(tern, enc)).collect();
-    assemble(c, enc, &payloads)
+    let frames: Vec<FrameTable> =
+        c.parts.values().map(|tern| part_frames(tern, enc)).collect();
+    assemble(c, enc, &payloads, VERSION, &frames)
+}
+
+/// Serialize to the legacy unframed v1 layout. Kept for cross-version
+/// tests and for producing containers older readers accept; new code
+/// should write v2 ([`to_bytes`]).
+pub fn to_bytes_v1(c: &CompressedParamSet, enc: Encoding) -> Vec<u8> {
+    let payloads: Vec<Vec<u8>> =
+        c.parts.values().map(|tern| encode_payload(tern, enc)).collect();
+    assemble(c, enc, &payloads, VERSION_V1, &[])
 }
 
 /// Parallel [`to_bytes`]: byte-identical output.
 ///
 /// Multi-part sets ([`Granularity::PerTensor`]) encode their payloads
-/// concurrently, one part per pool task; a single-part (global) set
-/// instead parallelises *inside* the payload encoder
-/// ([`golomb::encode_par`] / [`MaskPair::from_ternary_par`]). Exactly
-/// one level runs on the pool either way, so no pool task ever waits on
-/// the pool. Assembly then walks the same `BTreeMap` order as the
-/// serial writer.
+/// (and frame tables) concurrently, one part per pool task; a
+/// single-part (global) set instead parallelises *inside* the payload
+/// encoder ([`golomb::encode_par`] / [`MaskPair::from_ternary_par`]).
+/// Exactly one level runs on the pool either way, so no pool task ever
+/// waits on the pool. Assembly then walks the same `BTreeMap` order as
+/// the serial writer.
 pub fn to_bytes_par(
     c: &CompressedParamSet,
     enc: Encoding,
-    pool: &crate::util::pool::ThreadPool,
+    pool: &ThreadPool,
 ) -> Vec<u8> {
     // Chunk sizes for single-part payload encoding: nonzeros per golomb
     // task, words per bitmask task. Work division only — never changes
@@ -188,28 +266,60 @@ pub fn to_bytes_par(
     const GOLOMB_CHUNK_NNZ: usize = 1 << 15;
     const BITMASK_CHUNK_WORDS: usize = 1 << 13;
 
-    let terns: Vec<&crate::compeft::ternary::TernaryVector> = c.parts.values().collect();
-    let payloads: Vec<Vec<u8>> = if terns.len() == 1 {
+    let terns: Vec<&TernaryVector> = c.parts.values().collect();
+    let encoded: Vec<(Vec<u8>, FrameTable)> = if terns.len() == 1 {
         let tern = terns[0];
-        vec![match enc {
+        let payload = match enc {
             Encoding::Golomb => golomb::encode_par(tern, pool, GOLOMB_CHUNK_NNZ),
             Encoding::Bitmask => {
                 MaskPair::from_ternary_par(tern, pool, BITMASK_CHUNK_WORDS).to_bytes()
             }
-        }]
+        };
+        vec![(payload, part_frames(tern, enc))]
     } else {
-        pool.scoped_map(terns, |tern| encode_payload(tern, enc))
+        pool.scoped_map(terns, |tern| {
+            (encode_payload(tern, enc), part_frames(tern, enc))
+        })
     };
-    assemble(c, enc, &payloads)
+    let mut payloads = Vec::with_capacity(encoded.len());
+    let mut frames = Vec::with_capacity(encoded.len());
+    for (p, f) in encoded {
+        payloads.push(p);
+        frames.push(f);
+    }
+    assemble(c, enc, &payloads, VERSION, &frames)
 }
 
-/// Parse `.cpeft` bytes.
+/// Parse `.cpeft` bytes (v1 or v2, dispatched on the version field).
 pub fn from_bytes(bytes: &[u8]) -> Result<(CompressedParamSet, Encoding)> {
+    from_bytes_impl(bytes, None)
+}
+
+/// Parallel [`from_bytes`]: identical result, payloads decoded on
+/// `pool`.
+///
+/// The mirror of [`to_bytes_par`]: multi-part containers decode their
+/// parts concurrently (one serial decode per pool task); a single-part
+/// container parallelises *inside* the payload via the v2 frame table
+/// ([`golomb::decode_par`]) or bitmask word ranges
+/// ([`MaskPair::to_ternary_par`]). A single-part v1 Golomb container
+/// has no frame table and falls back to serial payload decode.
+pub fn from_bytes_par(
+    bytes: &[u8],
+    pool: &ThreadPool,
+) -> Result<(CompressedParamSet, Encoding)> {
+    from_bytes_impl(bytes, Some(pool))
+}
+
+fn from_bytes_impl(
+    bytes: &[u8],
+    pool: Option<&ThreadPool>,
+) -> Result<(CompressedParamSet, Encoding)> {
     if bytes.len() < 14 || &bytes[..4] != MAGIC {
         bail!("not a .cpeft file");
     }
     let version = u16::from_le_bytes(bytes[4..6].try_into()?);
-    if version != VERSION {
+    if version != VERSION_V1 && version != VERSION {
         bail!("unsupported .cpeft version {version}");
     }
     let granularity = match bytes[8] {
@@ -240,24 +350,97 @@ pub fn from_bytes(bytes: &[u8]) -> Result<(CompressedParamSet, Encoding)> {
         layout.push((name, shape, offset));
     }
 
+    // Collect raw part records first so payload decode can fan out.
     let n_parts = get_u32(body, &mut pos)? as usize;
-    let mut parts = BTreeMap::new();
+    let mut raw: Vec<(String, Option<FrameTable>, &[u8])> = Vec::with_capacity(n_parts);
     for _ in 0..n_parts {
         let name = get_str(body, &mut pos)?;
+        let frames = if version >= 2 {
+            let chunk = get_u32(body, &mut pos)?;
+            let n_frames = get_u32(body, &mut pos)? as usize;
+            if n_frames.saturating_mul(12) > body.len() - pos {
+                bail!("truncated frame table for part {name:?}");
+            }
+            let mut entries = Vec::with_capacity(n_frames);
+            for _ in 0..n_frames {
+                let off = get_u64(body, &mut pos)?;
+                let prev = get_u32(body, &mut pos)?;
+                entries.push((off, prev));
+            }
+            Some(FrameTable { chunk_nnz: chunk, frames: entries })
+        } else {
+            None
+        };
         let plen = get_u64(body, &mut pos)? as usize;
-        if pos + plen > body.len() {
+        if plen > body.len() - pos {
             bail!("truncated payload for part {name:?}");
         }
         let payload = &body[pos..pos + plen];
         pos += plen;
-        let tern = match enc {
-            Encoding::Golomb => golomb::decode(payload)
-                .with_context(|| format!("part {name:?}"))?,
-            Encoding::Bitmask => MaskPair::from_bytes(payload)
-                .with_context(|| format!("part {name:?}"))?
-                .to_ternary(),
-        };
-        parts.insert(name, tern);
+        raw.push((name, frames, payload));
+    }
+    // A CRC-consistent writer that appends junk after the last part is
+    // corrupt, not tolerated: every body byte must be accounted for.
+    if pos != body.len() {
+        bail!(
+            "{} trailing garbage bytes after the last part",
+            body.len() - pos
+        );
+    }
+
+    let serial_decode = |payload: &[u8]| -> Result<TernaryVector> {
+        match enc {
+            Encoding::Golomb => golomb::decode(payload),
+            Encoding::Bitmask => Ok(MaskPair::from_bytes(payload)?.to_ternary()),
+        }
+    };
+    let decoded: Vec<Result<TernaryVector>> = match pool {
+        None => raw.iter().map(|(_, _, payload)| serial_decode(payload)).collect(),
+        Some(pool) if raw.len() == 1 => {
+            let (_, frames, payload) = &raw[0];
+            vec![match (enc, frames) {
+                (Encoding::Golomb, Some(ft)) => golomb::decode_par(payload, ft, pool),
+                (Encoding::Golomb, None) => golomb::decode(payload),
+                (Encoding::Bitmask, ft) => {
+                    let chunk = ft
+                        .as_ref()
+                        .map(|t| t.chunk_nnz as usize)
+                        .filter(|&c| c > 0)
+                        .unwrap_or(FRAME_WORDS);
+                    MaskPair::from_bytes(payload).map(|m| m.to_ternary_par(pool, chunk))
+                }
+            }]
+        }
+        Some(pool) => {
+            let payloads: Vec<&[u8]> = raw.iter().map(|(_, _, p)| *p).collect();
+            pool.scoped_map(payloads, &serial_decode)
+        }
+    };
+
+    let mut parts = BTreeMap::new();
+    for ((name, frames, _), tern) in raw.iter().zip(decoded) {
+        let tern = tern.with_context(|| format!("part {name:?}"))?;
+        // v2 golomb parts must carry a table that matches the payload —
+        // enforced on *every* read path (the honest table is a pure
+        // function of the decoded vector and the stored chunk size, so
+        // recomputing it validates every offset and predecessor index),
+        // meaning a lying but CRC-consistent table fails identically
+        // whether the file is opened serially or in parallel.
+        if matches!(enc, Encoding::Golomb) {
+            if let Some(ft) = frames {
+                let chunk = ft.chunk_nnz as usize;
+                if chunk == 0 || *ft != golomb::frame_table(&tern, chunk) {
+                    bail!(
+                        "part {name:?}: frame table ({} frames, chunk {}) \
+                         inconsistent with payload ({} nonzeros)",
+                        ft.frames.len(),
+                        ft.chunk_nnz,
+                        tern.nnz()
+                    );
+                }
+            }
+        }
+        parts.insert(name.clone(), tern);
     }
 
     Ok((CompressedParamSet { granularity, layout, parts }, enc))
@@ -343,6 +526,153 @@ mod tests {
                 to_bytes_par(&empty, Encoding::Golomb, &pool)
             );
         }
+    }
+
+    /// Rebuild a container around a mutated body, recomputing the CRC so
+    /// the corruption is CRC-consistent (a buggy writer, not line noise).
+    fn reassemble(header: &[u8], body: Vec<u8>) -> Vec<u8> {
+        let mut out = header[..10].to_vec();
+        out.extend_from_slice(&body);
+        out.extend_from_slice(&crc32(&body).to_le_bytes());
+        out
+    }
+
+    #[test]
+    fn v1_containers_remain_readable() {
+        for g in [Granularity::Global, Granularity::PerTensor] {
+            for enc in [Encoding::Golomb, Encoding::Bitmask] {
+                let c = sample_compressed(g);
+                let v1 = to_bytes_v1(&c, enc);
+                assert_eq!(u16::from_le_bytes(v1[4..6].try_into().unwrap()), 1);
+                let v2 = to_bytes(&c, enc);
+                assert_eq!(u16::from_le_bytes(v2[4..6].try_into().unwrap()), 2);
+                // Different wire bytes, same parsed result.
+                assert_ne!(v1, v2);
+                let (from_v1, e1) = from_bytes(&v1).unwrap();
+                let (from_v2, e2) = from_bytes(&v2).unwrap();
+                assert_eq!(e1, enc);
+                assert_eq!(e2, enc);
+                assert_eq!(from_v1, c, "{g:?} {enc:?} v1");
+                assert_eq!(from_v2, c, "{g:?} {enc:?} v2");
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_version_rejected() {
+        let c = sample_compressed(Granularity::Global);
+        let mut bytes = to_bytes(&c, Encoding::Golomb);
+        bytes[4] = 3; // version 3 does not exist
+        let err = from_bytes(&bytes).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+    }
+
+    #[test]
+    fn parallel_decode_matches_serial_across_versions() {
+        use crate::util::pool::ThreadPool;
+        for workers in [1usize, 2, 8] {
+            let pool = ThreadPool::new(workers);
+            for g in [Granularity::Global, Granularity::PerTensor] {
+                for enc in [Encoding::Golomb, Encoding::Bitmask] {
+                    let c = sample_compressed(g);
+                    for bytes in [to_bytes(&c, enc), to_bytes_v1(&c, enc)] {
+                        let (serial, se) = from_bytes(&bytes).unwrap();
+                        let (par, pe) = from_bytes_par(&bytes, &pool).unwrap();
+                        assert_eq!(se, pe);
+                        assert_eq!(serial, par, "workers {workers} {g:?} {enc:?}");
+                        assert_eq!(serial, c);
+                    }
+                }
+            }
+            // Empty container through both readers.
+            let empty = compress_params(
+                &ParamSet::new(),
+                &CompressConfig {
+                    granularity: Granularity::PerTensor,
+                    ..Default::default()
+                },
+            );
+            let bytes = to_bytes(&empty, Encoding::Golomb);
+            assert_eq!(
+                from_bytes(&bytes).unwrap().0,
+                from_bytes_par(&bytes, &pool).unwrap().0
+            );
+        }
+    }
+
+    #[test]
+    fn trailing_garbage_rejected_even_when_crc_consistent() {
+        use crate::util::pool::ThreadPool;
+        let c = sample_compressed(Granularity::Global);
+        for bytes in [to_bytes(&c, Encoding::Golomb), to_bytes_v1(&c, Encoding::Golomb)]
+        {
+            let mut body = bytes[10..bytes.len() - 4].to_vec();
+            body.extend_from_slice(b"JUNK");
+            let evil = reassemble(&bytes, body);
+            let err = from_bytes(&evil).unwrap_err().to_string();
+            assert!(err.contains("trailing"), "{err}");
+            let pool = ThreadPool::new(2);
+            assert!(from_bytes_par(&evil, &pool).is_err());
+        }
+    }
+
+    #[test]
+    fn crc_consistent_truncation_rejected() {
+        let c = sample_compressed(Granularity::PerTensor);
+        let bytes = to_bytes(&c, Encoding::Golomb);
+        let body = &bytes[10..bytes.len() - 4];
+        // Cut the body at several depths (inside the layout, the frame
+        // tables, and the payloads), always with a recomputed CRC: every
+        // cut must fail structurally, never parse short.
+        for keep in [1usize, 8, 40, body.len() / 2, body.len() - 5, body.len() - 1] {
+            let cut = reassemble(&bytes, body[..keep].to_vec());
+            assert!(from_bytes(&cut).is_err(), "cut at {keep} accepted");
+        }
+    }
+
+    #[test]
+    fn lying_frame_table_rejected_on_both_read_paths() {
+        use crate::util::pool::ThreadPool;
+        let c = sample_compressed(Granularity::Global);
+        let bytes = to_bytes(&c, Encoding::Golomb);
+        let body = bytes[10..bytes.len() - 4].to_vec();
+        // Walk the body with the parser's own helpers to the frame-table
+        // chunk field of part 0 (right after the part name), then zero it.
+        let mut pos = 0usize;
+        let n_layout = get_u32(&body, &mut pos).unwrap() as usize;
+        for _ in 0..n_layout {
+            let _ = get_str(&body, &mut pos).unwrap();
+            let ndim = get_u32(&body, &mut pos).unwrap() as usize;
+            for _ in 0..=ndim {
+                let _ = get_u64(&body, &mut pos).unwrap(); // dims + offset
+            }
+        }
+        let _n_parts = get_u32(&body, &mut pos).unwrap();
+        let _name = get_str(&body, &mut pos).unwrap();
+        let at = pos;
+        assert_eq!(
+            u32::from_le_bytes(body[at..at + 4].try_into().unwrap()),
+            FRAME_NNZ as u32
+        );
+        let pool = ThreadPool::new(2);
+        let mut evil_body = body.clone();
+        evil_body[at..at + 4].copy_from_slice(&0u32.to_le_bytes());
+        let evil = reassemble(&bytes, evil_body);
+        assert!(from_bytes(&evil).is_err(), "serial reader accepted chunk=0");
+        assert!(from_bytes_par(&evil, &pool).is_err(), "parallel reader accepted");
+
+        // A plausible-but-wrong bit offset (count still correct) must
+        // fail on both read paths too, not just the parallel one.
+        let off_at = at + 8; // chunk u32 | n_frames u32 | bit_offset u64
+        let stored = u64::from_le_bytes(body[off_at..off_at + 8].try_into().unwrap());
+        let mut evil_body = body.clone();
+        evil_body[off_at..off_at + 8].copy_from_slice(&(stored + 8).to_le_bytes());
+        let evil = reassemble(&bytes, evil_body);
+        assert!(from_bytes(&evil).is_err(), "serial reader accepted a lying offset");
+        assert!(
+            from_bytes_par(&evil, &pool).is_err(),
+            "parallel reader accepted a lying offset"
+        );
     }
 
     #[test]

@@ -51,6 +51,63 @@ pub fn avg_bits_per_position(p: f64) -> f64 {
 
 const MAGIC: u32 = 0x43504754; // "CPGT"
 
+/// Bits in the self-describing stream header:
+/// magic u32 | len u64 | nnz u64 | b u8 | scale f32.
+const HEADER_BITS: u64 = 32 + 64 + 64 + 8 + 32;
+
+/// Sentinel in a [`FrameTable`] for "no preceding nonzero" (stream
+/// start, logical prev = −1).
+pub const NO_PREV: u32 = u32::MAX;
+
+/// Frame index over one Golomb payload (`.cpeft` v2): entry `f` locates
+/// nonzero number `f · chunk_nnz` in the bit stream, so a decoder can
+/// start mid-payload without replaying the gaps before it. The table is
+/// tiny (12 bytes per frame; the container default is 8K nonzeros per
+/// frame) and never changes the payload bytes — framing is pure
+/// metadata.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FrameTable {
+    /// Nonzeros per frame (fixed; the last frame may be short).
+    pub chunk_nnz: u32,
+    /// Per frame: (absolute bit offset of the frame's first codeword,
+    /// index of the nonzero preceding the frame — [`NO_PREV`] at stream
+    /// start).
+    pub frames: Vec<(u64, u32)>,
+}
+
+impl FrameTable {
+    /// Number of frames.
+    pub fn len(&self) -> usize {
+        self.frames.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.frames.is_empty()
+    }
+}
+
+/// Compute the frame table for `t` without encoding it: the same
+/// per-entry bit-cost walk as [`encoded_size_bytes`], sampling the
+/// running offset at every `chunk_nnz`-th nonzero. Both `to_bytes` and
+/// `to_bytes_par` call this, so the stored table always describes the
+/// payload exactly.
+pub fn frame_table(t: &TernaryVector, chunk_nnz: usize) -> FrameTable {
+    let chunk_nnz = chunk_nnz.clamp(1, u32::MAX as usize);
+    let b = stream_rice_parameter(t) as u64;
+    let mut frames = Vec::with_capacity(t.nnz().div_ceil(chunk_nnz));
+    let mut bits = HEADER_BITS;
+    let mut prev: i64 = -1;
+    for (i, (idx, _)) in t.iter_nonzero().enumerate() {
+        if i % chunk_nnz == 0 {
+            frames.push((bits, if prev < 0 { NO_PREV } else { prev as u32 }));
+        }
+        let gap = (idx as i64 - prev - 1) as u64;
+        bits += (gap >> b) + 1 + b + 1; // unary + remainder + sign
+        prev = idx as i64;
+    }
+    FrameTable { chunk_nnz: chunk_nnz as u32, frames }
+}
+
 /// Rice parameter for this vector's density (clamped to the wire
 /// format's 30-bit remainder limit).
 fn stream_rice_parameter(t: &TernaryVector) -> u32 {
@@ -128,9 +185,15 @@ pub fn encode_par(t: &TernaryVector, pool: &ThreadPool, chunk_nnz: usize) -> Vec
     w.into_bytes()
 }
 
-/// Decode a Golomb-coded byte stream back to a ternary vector.
-pub fn decode(bytes: &[u8]) -> Result<TernaryVector> {
-    let mut r = BitReader::new(bytes);
+/// Parsed stream header fields.
+struct StreamHeader {
+    len: usize,
+    nnz: usize,
+    b: u32,
+    scale: f32,
+}
+
+fn parse_header(r: &mut BitReader) -> Result<StreamHeader> {
     let magic = r.get_bits(32).context("truncated header")? as u32;
     if magic != MAGIC {
         bail!("bad golomb magic {magic:#x}");
@@ -145,11 +208,24 @@ pub fn decode(bytes: &[u8]) -> Result<TernaryVector> {
     if nnz > len {
         bail!("nnz {nnz} exceeds len {len}");
     }
+    Ok(StreamHeader { len, nnz, b, scale })
+}
 
-    let mut plus = Vec::with_capacity(nnz / 2 + 1);
-    let mut minus = Vec::with_capacity(nnz / 2 + 1);
-    let mut prev: i64 = -1;
-    for _ in 0..nnz {
+/// Rice-decode `count` (gap, sign) entries whose predecessor nonzero sat
+/// at index `prev` (−1 at stream start), appending indices to
+/// `plus`/`minus`. Returns the index of the last decoded nonzero. Both
+/// the serial and the per-frame parallel decoders funnel through this
+/// one loop — the exact mirror of [`encode_entries`].
+fn decode_entries(
+    r: &mut BitReader,
+    count: usize,
+    mut prev: i64,
+    b: u32,
+    len: usize,
+    plus: &mut Vec<u32>,
+    minus: &mut Vec<u32>,
+) -> Result<i64> {
+    for _ in 0..count {
         let q = r.get_unary().context("truncated unary gap")?;
         let rem = r.get_bits(b).context("truncated remainder")?;
         let gap = (q << b) | rem;
@@ -165,7 +241,100 @@ pub fn decode(bytes: &[u8]) -> Result<TernaryVector> {
         }
         prev = idx;
     }
-    Ok(TernaryVector { len, scale, plus, minus })
+    Ok(prev)
+}
+
+/// Decode a Golomb-coded byte stream back to a ternary vector.
+pub fn decode(bytes: &[u8]) -> Result<TernaryVector> {
+    let mut r = BitReader::new(bytes);
+    let h = parse_header(&mut r)?;
+    let mut plus = Vec::with_capacity(h.nnz / 2 + 1);
+    let mut minus = Vec::with_capacity(h.nnz / 2 + 1);
+    decode_entries(&mut r, h.nnz, -1, h.b, h.len, &mut plus, &mut minus)?;
+    Ok(TernaryVector { len: h.len, scale: h.scale, plus, minus })
+}
+
+/// Parallel [`decode`]: bit-identical output at any worker count.
+///
+/// The gap stream is sequential (each gap is relative to the previous
+/// nonzero), so decode cannot split blindly — but a [`FrameTable`]
+/// records, for every `chunk_nnz`-th nonzero, the bit offset of its
+/// codeword and the index of its predecessor. Each frame then decodes
+/// independently with the exact serial loop ([`decode_entries`]), and
+/// per-frame index lists concatenated in frame order reproduce the
+/// serial decoder's output exactly (frames partition the nonzeros in
+/// index order).
+///
+/// Frame-table consistency is verified: frame count must match
+/// `⌈nnz / chunk_nnz⌉`, and every frame's declared predecessor must
+/// equal the last index decoded by the previous frame — a lying table
+/// (CRC-consistent but wrong) fails loudly instead of decoding garbage.
+pub fn decode_par(
+    bytes: &[u8],
+    table: &FrameTable,
+    pool: &ThreadPool,
+) -> Result<TernaryVector> {
+    let mut r = BitReader::new(bytes);
+    let h = parse_header(&mut r)?;
+    let chunk = table.chunk_nnz as usize;
+    if chunk == 0 {
+        bail!("frame table chunk_nnz is zero");
+    }
+    let expect = h.nnz.div_ceil(chunk);
+    if table.frames.len() != expect {
+        bail!(
+            "frame table has {} frames, expected {expect} for nnz {}",
+            table.frames.len(),
+            h.nnz
+        );
+    }
+    if h.nnz == 0 {
+        return Ok(TernaryVector {
+            len: h.len,
+            scale: h.scale,
+            plus: Vec::new(),
+            minus: Vec::new(),
+        });
+    }
+
+    let items: Vec<(usize, u64, u32)> = table
+        .frames
+        .iter()
+        .enumerate()
+        .map(|(f, &(off, prev))| (f, off, prev))
+        .collect();
+    let pieces: Vec<Result<(Vec<u32>, Vec<u32>, i64)>> =
+        pool.scoped_map(items, |(f, off, prev_raw)| {
+            let count = chunk.min(h.nnz - f * chunk);
+            let mut fr = BitReader::new(bytes);
+            fr.seek(off)
+                .ok_or_else(|| anyhow::anyhow!("bit offset {off} beyond payload"))?;
+            let prev: i64 = if prev_raw == NO_PREV { -1 } else { prev_raw as i64 };
+            let mut plus = Vec::with_capacity(count / 2 + 1);
+            let mut minus = Vec::with_capacity(count / 2 + 1);
+            let last =
+                decode_entries(&mut fr, count, prev, h.b, h.len, &mut plus, &mut minus)?;
+            Ok((plus, minus, last))
+        });
+
+    let mut plus = Vec::with_capacity(h.nnz / 2 + 1);
+    let mut minus = Vec::with_capacity(h.nnz / 2 + 1);
+    let mut prev_last: i64 = -1;
+    for (f, piece) in pieces.into_iter().enumerate() {
+        let (p, m, last) = piece.with_context(|| format!("frame {f}"))?;
+        let declared: i64 =
+            if table.frames[f].1 == NO_PREV { -1 } else { table.frames[f].1 as i64 };
+        if declared != prev_last {
+            bail!(
+                "frame {f}: declared prev index {declared} does not continue the \
+                 previous frame (last decoded index {prev_last})"
+            );
+        }
+        prev_last = last;
+        plus.extend_from_slice(&p);
+        minus.extend_from_slice(&m);
+    }
+    Ok(TernaryVector { len: h.len, scale: h.scale, plus, minus })
 }
 
 /// Exact encoded size in bytes for a ternary vector without encoding it.
@@ -173,7 +342,7 @@ pub fn encoded_size_bytes(t: &TernaryVector) -> u64 {
     let nnz = t.nnz() as u64;
     let p = if t.len == 0 { 0.0 } else { nnz as f64 / t.len as f64 };
     let b = rice_parameter(p).min(30) as u64;
-    let mut bits = 32 + 64 + 64 + 8 + 32; // header
+    let mut bits = HEADER_BITS;
     let mut prev: i64 = -1;
     for (idx, _) in t.iter_nonzero() {
         let gap = (idx as i64 - prev - 1) as u64;
@@ -344,6 +513,110 @@ pub(crate) mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn decode_par_is_bit_identical_to_serial() {
+        use crate::util::pool::ThreadPool;
+        let mut rng = Pcg::seed(47);
+        let mut cases = vec![
+            TernaryVector::empty(0),
+            TernaryVector::empty(5000),
+            TernaryVector { len: 1, scale: 1.0, plus: vec![0], minus: vec![] },
+        ];
+        for len in [100usize, 4097, 50_000] {
+            cases.push(random_index_sets(&mut rng, len));
+            let tau = prop::task_vector_like(&mut rng, len);
+            cases.push(compress_vector(
+                &tau,
+                &CompressConfig { density: 0.05, ..Default::default() },
+            ));
+        }
+        for workers in [1usize, 2, 8] {
+            let pool = ThreadPool::new(workers);
+            for chunk_nnz in [1usize, 7, 256, 1 << 20] {
+                for (i, t) in cases.iter().enumerate() {
+                    let bytes = encode(t);
+                    let table = frame_table(t, chunk_nnz);
+                    let serial = decode(&bytes).unwrap();
+                    let par = decode_par(&bytes, &table, &pool).unwrap();
+                    assert_eq!(serial.len, par.len, "case {i}");
+                    assert_eq!(serial.scale.to_bits(), par.scale.to_bits(), "case {i}");
+                    assert_eq!(
+                        serial.plus, par.plus,
+                        "case {i} workers {workers} chunk_nnz {chunk_nnz}"
+                    );
+                    assert_eq!(serial.minus, par.minus, "case {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_decode_par_roundtrip() {
+        use crate::util::pool::ThreadPool;
+        let pool = ThreadPool::new(4);
+        prop::check(
+            "framed parallel decode roundtrip",
+            50,
+            |rng: &mut Pcg| {
+                let n = prop::sizes(rng).min(10_000);
+                let chunk = [1usize, 13, 300, 1 << 15][rng.range(0, 4)];
+                (random_index_sets(rng, n), chunk)
+            },
+            |(t, chunk)| {
+                let bytes = encode(t);
+                let table = frame_table(t, *chunk);
+                if table.frames.len() != t.nnz().div_ceil((*chunk).max(1)) {
+                    return Err("frame count mismatch".into());
+                }
+                // Offsets strictly increase (each frame holds ≥1 codeword).
+                for w in table.frames.windows(2) {
+                    if w[0].0 >= w[1].0 {
+                        return Err("frame offsets not increasing".into());
+                    }
+                }
+                let back = decode_par(&bytes, &table, &pool).map_err(|e| e.to_string())?;
+                if back != *t {
+                    return Err("parallel roundtrip mismatch".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn decode_par_rejects_corrupt_tables() {
+        use crate::util::pool::ThreadPool;
+        let pool = ThreadPool::new(2);
+        let t = TernaryVector {
+            len: 500,
+            scale: 1.0,
+            plus: vec![3, 20, 90, 200, 333],
+            minus: vec![7, 50, 450],
+        };
+        let bytes = encode(&t);
+        let good = frame_table(&t, 3);
+        assert_eq!(decode_par(&bytes, &good, &pool).unwrap(), t);
+
+        // Wrong frame count.
+        let mut bad = good.clone();
+        bad.frames.pop();
+        assert!(decode_par(&bytes, &bad, &pool).is_err());
+
+        // Offset beyond the payload.
+        let mut bad = good.clone();
+        bad.frames[1].0 = bytes.len() as u64 * 8 + 1;
+        assert!(decode_par(&bytes, &bad, &pool).is_err());
+
+        // Lying predecessor index: breaks the continuity check.
+        let mut bad = good.clone();
+        bad.frames[1].1 = 499;
+        assert!(decode_par(&bytes, &bad, &pool).is_err());
+
+        // Zero chunk size.
+        let bad = FrameTable { chunk_nnz: 0, frames: good.frames.clone() };
+        assert!(decode_par(&bytes, &bad, &pool).is_err());
     }
 
     #[test]

@@ -1,13 +1,16 @@
 //! The ComPEFT compression algorithm and its wire formats.
 //!
 //! * [`compress`] — Algorithm 1 (sparsify → ternary-quantize with α·σ)
-//! * [`engine`] — parallel chunked engine (bit-identical to serial)
+//! * [`engine`] — parallel chunked engine, encode *and* decode sides
+//!   (bit-identical to serial)
 //! * [`ternary`] — the sparse ternary vector representation
 //! * [`sparsify`] — top-k-by-magnitude selection (serial + parallel)
-//! * [`golomb`] — storage-optimal Golomb/Rice gap coding (§2.2)
+//! * [`golomb`] — storage-optimal Golomb/Rice gap coding (§2.2), with
+//!   v2 frame tables for parallel decode
 //! * [`bitmask`] — compute-optimal two-binary-mask form (§2.2)
 //! * [`entropy`] — storage accounting (entropy bounds, ratios)
-//! * [`format`] — the `.cpeft` on-disk / on-wire container
+//! * [`format`] — the `.cpeft` on-disk / on-wire container (v2:
+//!   chunk-framed payloads; v1 remains readable)
 
 pub mod bitmask;
 pub mod compress;
@@ -22,5 +25,8 @@ pub use compress::{
     compress_params, compress_vector, decompress_params, decompress_vector,
     CompressConfig, CompressedParamSet, Granularity,
 };
-pub use engine::{par_compress_paramset, par_compress_vector, EngineConfig};
+pub use engine::{
+    par_add_assign, par_compress_paramset, par_compress_vector,
+    par_decompress_params, EngineConfig,
+};
 pub use ternary::TernaryVector;

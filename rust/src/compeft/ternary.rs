@@ -81,6 +81,25 @@ impl TernaryVector {
         out
     }
 
+    /// Write the dense values of coordinates `[start, start + out.len())`
+    /// into `out` (which must be zeroed by the caller): `+scale` at plus
+    /// indices, `-scale` at minus indices, untouched elsewhere. Writes
+    /// plus before minus, exactly like [`TernaryVector::to_dense`], so
+    /// chunked parallel materialization reproduces the serial buffer bit
+    /// for bit. The relevant index subranges are found by binary search
+    /// (the lists are sorted), so a chunk costs O(log nnz + nnz_in_range).
+    pub fn fill_dense_range(&self, start: usize, out: &mut [f32]) {
+        let lo = start as u64;
+        let hi = (start + out.len()) as u64;
+        for (signed, list) in [(self.scale, &self.plus), (-self.scale, &self.minus)] {
+            let s = list.partition_point(|&i| (i as u64) < lo);
+            let e = list.partition_point(|&i| (i as u64) < hi);
+            for &i in &list[s..e] {
+                out[i as usize - start] = signed;
+            }
+        }
+    }
+
     /// Add `s · γ̃` into an existing buffer (decompress-free apply).
     pub fn add_into(&self, out: &mut [f32], weight: f32) {
         assert_eq!(out.len(), self.len);
@@ -222,6 +241,27 @@ mod tests {
         let x: Vec<f32> = (0..10).map(|i| i as f32).collect();
         // dot = 0.5 * (0 + 3 + 7 - 2 - 9) = -0.5
         assert!((t.dot_dense(&x) + 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fill_dense_range_matches_to_dense_at_every_split() {
+        let t = sample();
+        let dense = t.to_dense();
+        for chunk in 1..=t.len {
+            let mut out = vec![0.0f32; t.len];
+            let mut start = 0;
+            for piece in out.chunks_mut(chunk) {
+                t.fill_dense_range(start, piece);
+                start += piece.len();
+            }
+            assert_eq!(out, dense, "chunk {chunk}");
+        }
+        // Empty range and tail range.
+        let mut none: [f32; 0] = [];
+        t.fill_dense_range(5, &mut none);
+        let mut tail = vec![0.0f32; 1];
+        t.fill_dense_range(9, &mut tail);
+        assert_eq!(tail, vec![-0.5]);
     }
 
     #[test]

@@ -40,6 +40,11 @@ pub struct CoordinatorConfig {
     pub pcie: LinkSpec,
     /// Wall-clock compression for simulated links (1.0 = real time).
     pub time_scale: f64,
+    /// Workers in the engine-owned decode pool (`.cpeft` frame decode,
+    /// dense materialization, adapter add). Outputs are bit-identical at
+    /// any count; this only tunes swap-in latency. Defaults to the
+    /// machine's available parallelism.
+    pub decode_workers: usize,
 }
 
 impl CoordinatorConfig {
@@ -53,6 +58,9 @@ impl CoordinatorConfig {
             net: LinkSpec::internet(),
             pcie: LinkSpec::pcie(),
             time_scale: 1.0,
+            decode_workers: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
         }
     }
 }
@@ -85,6 +93,9 @@ pub struct EngineReport {
 pub struct Coordinator {
     batcher: Arc<Batcher<ClientRequest>>,
     metrics: Arc<Metrics>,
+    /// Sequence length every request's token vector must match
+    /// (fixed by the loaded model bundle).
+    seq_len: usize,
     /// Kept for external byte accounting while the engine runs.
     pub net: SimLink,
     pub pcie: SimLink,
@@ -100,7 +111,7 @@ impl Coordinator {
         let net = SimLink::new("net", cfg.net).with_time_scale(cfg.time_scale);
         let pcie = SimLink::new("pcie", cfg.pcie).with_time_scale(cfg.time_scale);
 
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<usize>>();
         let engine = {
             let batcher = Arc::clone(&batcher);
             let metrics = Arc::clone(&metrics);
@@ -112,8 +123,8 @@ impl Coordinator {
                     engine_main(cfg, registry, batcher, metrics, net, pcie, ready_tx)
                 })?
         };
-        match ready_rx.recv() {
-            Ok(Ok(())) => {}
+        let seq_len = match ready_rx.recv() {
+            Ok(Ok(seq)) => seq,
             Ok(Err(e)) => return Err(e),
             Err(_) => {
                 let err = engine
@@ -123,11 +134,23 @@ impl Coordinator {
                     .unwrap_or_else(|| anyhow::anyhow!("engine exited during startup"));
                 return Err(err);
             }
-        }
-        Ok(Coordinator { batcher, metrics, net, pcie, engine: Some(engine) })
+        };
+        Ok(Coordinator { batcher, metrics, seq_len, net, pcie, engine: Some(engine) })
+    }
+
+    /// Sequence length the loaded model expects per request.
+    pub fn seq_len(&self) -> usize {
+        self.seq_len
     }
 
     /// Submit one request; returns the response receiver.
+    ///
+    /// A token vector whose length does not match [`Coordinator::seq_len`]
+    /// is rejected here, before it reaches the engine thread: the
+    /// returned receiver's sender is already dropped, so `recv()` fails
+    /// with a disconnect error. (Previously such a request panicked the
+    /// engine's batch packing and took the coordinator down for every
+    /// client.)
     pub fn submit(
         &self,
         expert: &str,
@@ -135,6 +158,10 @@ impl Coordinator {
         n_classes: usize,
     ) -> mpsc::Receiver<Prediction> {
         let (tx, rx) = mpsc::channel();
+        if tokens.len() != self.seq_len {
+            // Dropping `tx` makes the receiver report the rejection.
+            return rx;
+        }
         self.batcher.push(expert, ClientRequest { tokens, n_classes, resp: tx });
         rx
     }
@@ -181,7 +208,7 @@ fn engine_main(
     metrics: Arc<Metrics>,
     net: SimLink,
     pcie: SimLink,
-    ready_tx: mpsc::Sender<Result<()>>,
+    ready_tx: mpsc::Sender<Result<usize>>,
 ) -> Result<EngineReport> {
     // --- startup: load model, precompile serve executables ---
     let setup = (|| -> Result<(Runtime, ModelBundle)> {
@@ -194,7 +221,7 @@ fn engine_main(
     })();
     let (_rt, bundle) = match setup {
         Ok(x) => {
-            let _ = ready_tx.send(Ok(()));
+            let _ = ready_tx.send(Ok(x.1.meta.seq_len));
             x
         }
         Err(e) => {
@@ -203,7 +230,11 @@ fn engine_main(
         }
     };
 
-    let loader = ExpertLoader::new(net.clone(), pcie.clone());
+    // Decode pool: parallel .cpeft frame decode + materialization on
+    // GPU-tier misses. Owned by the engine thread; results are
+    // bit-identical at any worker count.
+    let pool = Arc::new(crate::util::pool::ThreadPool::new(cfg.decode_workers.max(1)));
+    let loader = ExpertLoader::new(net.clone(), pcie.clone()).with_pool(pool);
     let mut gpu: LruTier<Resident> = LruTier::new("gpu", cfg.gpu_capacity_bytes);
     let mut cpu: LruTier<Vec<u8>> = LruTier::new("cpu", cfg.cpu_capacity_bytes);
     let mut resident_hint: Option<String> = None;
@@ -231,7 +262,14 @@ fn engine_main(
             match load_expert(&bundle, &loader, &rec, &mut cpu) {
                 Ok((resident, sim)) => {
                     sim_swap = sim;
-                    gpu.insert(&expert_id, resident, rec.encoded_bytes.max(1));
+                    // The GPU tier budgets *decoded* adapter bytes
+                    // (`gpu_capacity_bytes` docs): charge what actually
+                    // sits in device memory, not the 8–50x smaller
+                    // encoded form — charging encoded bytes admitted
+                    // ~26 "residents" into a 2 MiB budget that holds
+                    // one dense adapter.
+                    let charge = resident.dense_bytes.max(1);
+                    gpu.insert(&expert_id, resident, charge);
                 }
                 Err(e) => {
                     eprintln!("[engine] load {expert_id} failed: {e:#}");
@@ -258,7 +296,7 @@ fn engine_main(
         while i < batch.len() {
             let take = (batch.len() - i).min(SERVE_BATCH);
             for (j, p) in batch[i..i + take].iter().enumerate() {
-                chunk_tokens[j * seq..(j + 1) * seq].copy_from_slice(&p.payload.tokens);
+                pack_row(&mut chunk_tokens[j * seq..(j + 1) * seq], &p.payload.tokens);
             }
             for v in chunk_tokens[take * seq..].iter_mut() {
                 *v = 0;
@@ -325,6 +363,20 @@ fn engine_main(
     })
 }
 
+/// Copy one request's tokens into a `seq_len`-sized row of the batch
+/// buffer, truncating or zero-padding a mis-sized vector instead of
+/// panicking. [`Coordinator::submit`] rejects mis-sized requests before
+/// they reach the engine, so this is defense in depth: the engine
+/// thread serves every client and must not be killable by one request's
+/// shape (the old `copy_from_slice` panicked on any length mismatch).
+fn pack_row(dst: &mut [i32], tokens: &[i32]) {
+    let n = tokens.len().min(dst.len());
+    dst[..n].copy_from_slice(&tokens[..n]);
+    for v in dst[n..].iter_mut() {
+        *v = 0;
+    }
+}
+
 /// Pull an expert to the GPU tier; returns (resident, simulated time).
 fn load_expert(
     bundle: &ModelBundle,
@@ -356,8 +408,9 @@ fn load_expert(
 
     let resident = match rec.method {
         ExpertMethod::Full => {
-            let mut params = bundle.base.clone();
-            params.add_assign(&tv).context("apply full tv")?;
+            let params = loader
+                .materialize(rec.method, &bundle.base, &tv)
+                .context("apply full tv")?;
             let bufs = bundle.upload_full_params(&params)?;
             Resident {
                 kind,
@@ -377,6 +430,75 @@ fn load_expert(
             }
         }
     };
-    let _ = resident.dense_bytes;
     Ok((resident, sim))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compeft::compress::{compress_vector, CompressConfig};
+    use crate::compeft::golomb;
+    use crate::coordinator::cache::LruTier;
+    use crate::util::prop;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn pack_row_pads_truncates_and_copies_exact() {
+        let mut row = [9i32; 6];
+        pack_row(&mut row, &[1, 2, 3]);
+        assert_eq!(row, [1, 2, 3, 0, 0, 0], "short request zero-pads");
+        let mut row = [9i32; 4];
+        pack_row(&mut row, &[1, 2, 3, 4, 5, 6, 7]);
+        assert_eq!(row, [1, 2, 3, 4], "long request truncates");
+        let mut row = [9i32; 3];
+        pack_row(&mut row, &[5, 6, 7]);
+        assert_eq!(row, [5, 6, 7]);
+        let mut empty: [i32; 0] = [];
+        pack_row(&mut empty, &[1, 2]);
+    }
+
+    /// Regression for the residency-accounting bug: the GPU tier budget
+    /// is documented as *decoded* adapter bytes, but residents were
+    /// charged at their `encoded_bytes` — so the default 2 MiB budget
+    /// "held" dozens of experts whose dense device buffers were each
+    /// about the size of the whole budget.
+    #[test]
+    fn gpu_tier_budgets_dense_adapter_bytes() {
+        let cfg = CoordinatorConfig::new(PathBuf::from("/nonexistent"), "s");
+        let d = 1usize << 20; // a 1M-param LoRA adapter
+        let mut rng = Pcg::seed(17);
+        let tau = prop::task_vector_like(&mut rng, d);
+        let tern = compress_vector(
+            &tau,
+            &CompressConfig { density: 0.05, alpha: 1.0, ..Default::default() },
+        );
+        let dense_bytes = d as u64 * 2; // fp16 device accounting
+        let encoded_bytes = golomb::encoded_size_bytes(&tern);
+        assert!(encoded_bytes * 8 < dense_bytes, "fixture must be compressible");
+
+        // Dense charging (what the engine does now): the default 2 MiB
+        // accelerator budget holds exactly one adapter of this size.
+        let mut gpu: LruTier<()> = LruTier::new("gpu", cfg.gpu_capacity_bytes);
+        for i in 0..4 {
+            gpu.insert(&format!("e{i}"), (), dense_bytes.max(1));
+        }
+        assert_eq!(gpu.len(), 1, "dense charging: ~1 resident at 2 MiB");
+        assert_eq!(gpu.stats().evictions, 3);
+
+        // Encoded charging (the bug): dozens of phantom residents whose
+        // actual device footprint overflows the budget many times over.
+        let mut wrong: LruTier<()> = LruTier::new("gpu", cfg.gpu_capacity_bytes);
+        for i in 0..64 {
+            wrong.insert(&format!("e{i}"), (), encoded_bytes.max(1));
+        }
+        assert!(
+            wrong.len() >= 8,
+            "encoded charging admitted only {} residents — fixture too large?",
+            wrong.len()
+        );
+        assert!(
+            wrong.len() as u64 * dense_bytes > cfg.gpu_capacity_bytes * 8,
+            "the phantom residents' dense footprint must dwarf the budget"
+        );
+    }
 }

@@ -47,7 +47,12 @@ impl LinkSpec {
 }
 
 struct LinkState {
+    /// Wall-clock instant the link drains in the *scaled* domain —
+    /// governs how long callers actually sleep.
     busy_until: Option<Instant>,
+    /// Simulated instant (seconds since `origin`, unscaled) the link
+    /// drains — governs the simulated queueing reported to metrics.
+    sim_free_at: f64,
     bytes_moved: u64,
     transfers: u64,
 }
@@ -60,6 +65,8 @@ pub struct SimLink {
     /// Multiplier on simulated time actually slept (1.0 = real time;
     /// benches may compress time, metrics always report simulated time).
     time_scale: f64,
+    /// Epoch anchoring the simulated clock.
+    origin: Instant,
     state: Arc<Mutex<LinkState>>,
 }
 
@@ -69,8 +76,10 @@ impl SimLink {
             name,
             spec,
             time_scale: 1.0,
+            origin: Instant::now(),
             state: Arc::new(Mutex::new(LinkState {
                 busy_until: None,
+                sim_free_at: 0.0,
                 bytes_moved: 0,
                 transfers: 0,
             })),
@@ -78,37 +87,55 @@ impl SimLink {
     }
 
     /// Compress wall-clock sleeps by `scale` (metrics stay in simulated
-    /// time). `scale = 0.0` disables sleeping entirely (pure model).
+    /// time). `scale = 0.0` disables sleeping entirely (pure model);
+    /// simulated queueing is still tracked from unscaled service times,
+    /// so contended transfers report bounded, physically meaningful
+    /// queue waits at every scale.
     pub fn with_time_scale(mut self, scale: f64) -> SimLink {
-        self.time_scale = scale;
+        self.time_scale = scale.max(0.0);
         self
     }
 
     /// Transfer `bytes`; blocks for the simulated duration (scaled) and
     /// returns the *simulated* transfer time including queueing.
+    ///
+    /// Two clocks are kept deliberately separate. The **wall** queue
+    /// (`busy_until`) lives in the scaled domain and only decides how
+    /// long to sleep. The **simulated** queue (`sim_free_at`) is
+    /// computed from *unscaled* service times: each transfer arrives at
+    /// `sim_now` (wall time since the link's epoch mapped through the
+    /// scale; at `scale = 0` wall time counts 1:1 as simulated idle
+    /// time) and pushes the free-horizon out by its unscaled service
+    /// time. Deriving simulated queueing by rescaling wall waits — the
+    /// old implementation — divides `Instant` jitter by the scale,
+    /// which at `scale = 0` amplified nanoseconds of noise into ~1e12×
+    /// phantom queueing under contention.
     pub fn transfer(&self, bytes: u64) -> Duration {
         let now = Instant::now();
         let service = self.spec.duration_for(bytes);
-        let (queue_wait, _done) = {
+        let scale = self.time_scale;
+        let (wall_wait, queue_sim) = {
             let mut st = self.state.lock().unwrap();
+            // Wall queue position (scaled domain).
             let start = match st.busy_until {
                 Some(b) if b > now => b,
                 _ => now,
             };
-            let done = start + service.mul_f64(self.time_scale.max(1e-12));
-            st.busy_until = Some(done);
+            st.busy_until = Some(start + service.mul_f64(scale));
+            // Simulated queue position (unscaled service times).
+            let elapsed = now.duration_since(self.origin).as_secs_f64();
+            let sim_now = if scale > 0.0 { elapsed / scale } else { elapsed };
+            let queue_sim = (st.sim_free_at - sim_now).max(0.0);
+            st.sim_free_at = sim_now + queue_sim + service.as_secs_f64();
             st.bytes_moved += bytes;
             st.transfers += 1;
-            (start.saturating_duration_since(now), done)
+            (start.saturating_duration_since(now), queue_sim)
         };
-        let sleep = queue_wait + service.mul_f64(self.time_scale);
+        let sleep = wall_wait + service.mul_f64(scale);
         if !sleep.is_zero() {
             std::thread::sleep(sleep);
         }
-        // Simulated time: queueing (rescaled back) + service.
-        Duration::from_secs_f64(
-            queue_wait.as_secs_f64() / self.time_scale.max(1e-12),
-        ) + service
+        Duration::from_secs_f64(queue_sim) + service
     }
 
     pub fn bytes_moved(&self) -> u64 {
@@ -158,6 +185,62 @@ mod tests {
         let wall = t0.elapsed();
         assert!(sim >= Duration::from_secs_f64(1.0));
         assert!(wall < Duration::from_millis(300), "wall={wall:?}");
+    }
+
+    #[test]
+    fn contended_zero_scale_reports_bounded_queueing() {
+        // time_scale = 0 is the pure model used by tests and benches:
+        // no sleeping, but simulated queueing must still come out as
+        // roughly the sum of the unscaled service times ahead — not the
+        // ~1e12× explosion the old wall-rescaling produced.
+        const THREADS: usize = 4;
+        let service = Duration::from_millis(100); // latency-dominated
+        let link = Arc::new(
+            SimLink::new("t", LinkSpec { bandwidth: 1e9, latency: service })
+                .with_time_scale(0.0),
+        );
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..THREADS)
+            .map(|_| {
+                let l = Arc::clone(&link);
+                std::thread::spawn(move || l.transfer(1000))
+            })
+            .collect();
+        let sims: Vec<Duration> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        let wall = t0.elapsed();
+
+        // No sleeping at scale 0: the whole burst is near-instant.
+        assert!(wall < Duration::from_millis(250), "wall={wall:?}");
+        let max = sims.iter().max().unwrap();
+        let min = sims.iter().min().unwrap();
+        // Every transfer pays at least its own service time...
+        assert!(*min >= service, "min={min:?}");
+        // ...and the most-queued one pays at most the whole burst (plus
+        // scheduling slack), far from the old pathological blow-up.
+        let burst = service * THREADS as u32;
+        assert!(
+            *max <= burst + Duration::from_millis(150),
+            "max={max:?} vs burst bound {burst:?}"
+        );
+        // Queueing was actually observed: the burst contended.
+        assert!(*max > *min, "expected unequal queue positions, all={sims:?}");
+        assert_eq!(link.transfers(), THREADS as u64);
+    }
+
+    #[test]
+    fn spaced_transfers_at_zero_scale_do_not_queue() {
+        let link = SimLink::new(
+            "t",
+            LinkSpec { bandwidth: 1e9, latency: Duration::from_millis(5) },
+        )
+        .with_time_scale(0.0);
+        let a = link.transfer(1000);
+        // Real wall time passes; the simulated link has long drained.
+        std::thread::sleep(Duration::from_millis(20));
+        let b = link.transfer(1000);
+        let service = link.spec.duration_for(1000);
+        assert_eq!(a, service);
+        assert_eq!(b, service, "idle link must report pure service time");
     }
 
     #[test]

@@ -114,6 +114,13 @@ impl ParamSet {
         self.names.iter().map(move |n| (n.as_str(), &self.tensors[n]))
     }
 
+    /// Mutable iteration in name-sorted order (the underlying map's
+    /// order, *not* insertion order — fine for by-name updates like the
+    /// parallel add-assign, which look tensors up per name anyway).
+    pub fn iter_mut(&mut self) -> impl Iterator<Item = (&str, &mut Tensor)> {
+        self.tensors.iter_mut().map(|(n, t)| (n.as_str(), t))
+    }
+
     /// Total number of scalar parameters.
     pub fn total_elements(&self) -> usize {
         self.tensors.values().map(|t| t.len()).sum()

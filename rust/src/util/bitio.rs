@@ -120,6 +120,18 @@ impl<'a> BitReader<'a> {
         self.pos
     }
 
+    /// Jump to an absolute bit position. Positions up to (and including)
+    /// the end of the buffer are valid — reads from there return `None`.
+    /// Parallel decoders seek each worker to a frame boundary recorded
+    /// by the encoder, then read forward as usual.
+    pub fn seek(&mut self, bit: u64) -> Option<()> {
+        if bit > self.buf.len() as u64 * 8 {
+            return None;
+        }
+        self.pos = bit;
+        Some(())
+    }
+
     /// Read one bit; `None` at end of stream.
     #[inline]
     pub fn get_bit(&mut self) -> Option<bool> {
@@ -255,6 +267,23 @@ mod tests {
         a.append(&BitWriter::new());
         assert_eq!(a.as_bytes(), &before[..]);
         assert_eq!(a.bit_len(), 4);
+    }
+
+    #[test]
+    fn seek_repositions_reads() {
+        let mut w = BitWriter::new();
+        w.put_bits(0b1010_1100_0111, 12);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.get_bits(4), Some(0b1010));
+        r.seek(8).unwrap();
+        assert_eq!(r.get_bits(4), Some(0b0111));
+        r.seek(0).unwrap();
+        assert_eq!(r.get_bits(12), Some(0b1010_1100_0111));
+        // Seeking to the exact end is valid; reads then return None.
+        r.seek(16).unwrap();
+        assert_eq!(r.get_bit(), None);
+        assert!(r.seek(17).is_none());
     }
 
     #[test]

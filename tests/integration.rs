@@ -13,7 +13,7 @@ use compeft::bench_support as bs;
 use compeft::compeft::compress::{
     compress_params, decompress_params, CompressConfig, Granularity,
 };
-use compeft::compeft::engine::par_compress_paramset;
+use compeft::compeft::engine::{par_compress_paramset, par_decompress_params};
 use compeft::compeft::format::{self, to_bytes, to_bytes_par, Encoding};
 use compeft::coordinator::batcher::BatchPolicy;
 use compeft::coordinator::registry::{scan_expert_npz, ExpertMethod, Registry};
@@ -113,6 +113,36 @@ fn synthetic_compress_container_roundtrip() -> anyhow::Result<()> {
         }
     }
     std::fs::remove_dir_all(&dir).ok();
+    Ok(())
+}
+
+/// The PR 2 serving decode path on the synthetic fixture: v2 containers
+/// decode identically through the serial and the frame-parallel
+/// readers, v1 containers stay readable through both, and the parallel
+/// dense materialization matches the serial one — the full wire →
+/// adapter pipeline an expert travels on a GPU-tier miss.
+#[test]
+fn synthetic_v2_parallel_decode_and_v1_compat() -> anyhow::Result<()> {
+    let tv = synthetic_tv(31, 30_000);
+    let pool = ThreadPool::new(4);
+    for granularity in [Granularity::Global, Granularity::PerTensor] {
+        for enc in [Encoding::Golomb, Encoding::Bitmask] {
+            let cfg = CompressConfig { density: 0.1, alpha: 1.0, granularity };
+            let c = compress_params(&tv, &cfg);
+            let v2 = to_bytes(&c, enc);
+            let v1 = format::to_bytes_v1(&c, enc);
+            assert_ne!(v1, v2, "framing must change the wire bytes");
+            for bytes in [&v2, &v1] {
+                let (serial, _) = format::from_bytes(bytes)?;
+                let (par, _) = format::from_bytes_par(bytes, &pool)?;
+                assert_eq!(serial, c, "{granularity:?}/{enc:?}");
+                assert_eq!(par, c, "{granularity:?}/{enc:?} par");
+            }
+            let dense_serial = decompress_params(&c, &tv)?;
+            let dense_par = par_decompress_params(&c, &tv, &pool)?;
+            assert_eq!(dense_serial, dense_par, "{granularity:?}/{enc:?} dense");
+        }
+    }
     Ok(())
 }
 
@@ -270,7 +300,10 @@ fn coordinator_serves_compressed_experts() -> anyhow::Result<()> {
     }
 
     let mut ccfg = CoordinatorConfig::new(dir.clone(), "s");
-    ccfg.gpu_capacity_bytes = registry.get(&lora[0].0).unwrap().encoded_bytes + 8;
+    // The GPU tier budgets *decoded* adapter bytes: room for one dense
+    // adapter (n_params at fp16) plus slack, so the second expert must
+    // evict the first.
+    ccfg.gpu_capacity_bytes = registry.get(&lora[0].0).unwrap().n_params as u64 * 2 + 8;
     ccfg.policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) };
     ccfg.net = LinkSpec::internet();
     ccfg.pcie = LinkSpec::pcie();
@@ -295,6 +328,52 @@ fn coordinator_serves_compressed_experts() -> anyhow::Result<()> {
     // Both experts cannot fit: at least one swap beyond the first two loads.
     assert!(report.gpu.evictions >= 1, "expected evictions, got {:?}", report.gpu);
     assert!(report.net_bytes > 0);
+    Ok(())
+}
+
+/// A request whose token vector does not match the model's sequence
+/// length must not kill the engine thread (it used to panic the
+/// `copy_from_slice` batch packing, taking the coordinator down for
+/// every client): it is rejected at submit with a dropped sender, and
+/// well-formed requests keep being served afterwards.
+#[test]
+fn malformed_request_cannot_take_engine_down() -> anyhow::Result<()> {
+    let Some(dir) = artifacts() else { return Ok(()) };
+    let found = scan_expert_npz(&dir, "s")?;
+    let lora: Vec<_> = found
+        .iter()
+        .filter(|(t, m, _)| {
+            *m == ExpertMethod::Lora
+                && dir.join("eval").join(format!("task_{t}.npz")).exists()
+        })
+        .take(1)
+        .collect();
+    let Some((task, m, path)) = lora.first() else { return Ok(()) };
+
+    let mut registry = Registry::new();
+    let cfg = CompressConfig { density: 0.2, alpha: 1.0, granularity: Granularity::Global };
+    registry.register_compeft(task, task, "s", *m, path, &cfg)?;
+    let mut ccfg = CoordinatorConfig::new(dir.clone(), "s");
+    ccfg.policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) };
+    ccfg.time_scale = 0.0;
+    let coord = Coordinator::start(ccfg, registry)?;
+    let seq = coord.seq_len();
+    assert!(seq > 0);
+
+    // Mis-sized token vectors: rejected before the engine sees them.
+    let bad_empty = coord.submit(task, Vec::new(), 2);
+    let bad_long = coord.submit(task, vec![1; seq + 3], 2);
+    assert!(bad_empty.recv().is_err(), "empty request must be rejected");
+    assert!(bad_long.recv().is_err(), "oversized request must be rejected");
+
+    // The engine is alive and still serves well-formed requests.
+    let set = bs::load_eval(&dir, &format!("task_{task}"))?;
+    assert_eq!(set.seq, seq, "eval set and bundle agree on seq_len");
+    let ok = coord.submit(task, set.tokens[..seq].to_vec(), set.n_classes[0] as usize);
+    let p = ok.recv()?;
+    assert!(p.timing.total > Duration::ZERO);
+    let report = coord.shutdown()?;
+    assert!(report.batches >= 1);
     Ok(())
 }
 
