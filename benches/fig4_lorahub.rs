@@ -6,22 +6,116 @@
 //! over the few-shot cross-entropy computed through the PJRT runtime —
 //! Python is nowhere in this loop.
 //!
-//! Run: `cargo bench --bench fig4_lorahub`
+//! Also reports the **dense-vs-ternary-domain composition comparison**
+//! (`--quick`, artifact-free): the same ES run over a synthetic expert
+//! pool, composing candidates densely vs ternary-domain
+//! (`lorahub::compose_ternary`) — identical learned weights by
+//! construction, with time and measured peak-memory rows.
+//!
+//! Run: `cargo bench --bench fig4_lorahub`             (full, artifacts)
+//!      `cargo bench --bench fig4_lorahub -- --quick`  (engine rows only)
 
 use compeft::bench_support as bs;
+use compeft::compeft::compress::{
+    compress_params, decompress_params, CompressConfig, Granularity,
+};
 use compeft::coordinator::registry::ExpertMethod;
 use compeft::eval::fewshot_loss;
 use compeft::merging::es::EsConfig;
-use compeft::merging::lorahub::learn_composition;
+use compeft::merging::lorahub::{learn_composition, learn_composition_ternary};
 use compeft::runtime::AdapterKind;
-use compeft::tensor::ParamSet;
-use compeft::util::bench::Bench;
+use compeft::tensor::{ParamSet, Tensor};
+use compeft::util::bench::{measure_peak, Bench, PeakAlloc};
+use compeft::util::prop;
 use compeft::util::rng::Pcg;
 use compeft::util::stats;
 
+#[global_allocator]
+static ALLOC: PeakAlloc = PeakAlloc;
+
+/// Dense-vs-ternary LoraHub adaptation on a synthetic pool: the ES
+/// trajectory is identical (compositions are bit-identical), so the
+/// rows compare pure engine cost.
+fn composition_comparison(bench: &mut Bench, quick: bool) -> anyhow::Result<()> {
+    let d: usize = if quick { 1 << 16 } else { 1 << 20 };
+    let n_experts = 8usize;
+    let budget = if quick { 40 } else { 120 };
+    println!(
+        "fig4 composition comparison: {n_experts} experts x {d} params, \
+         ES budget {budget}"
+    );
+
+    let mut rng = Pcg::seed(404);
+    let cfg = CompressConfig {
+        density: 0.2,
+        alpha: 1.0,
+        granularity: Granularity::Global,
+    };
+    let mut template = ParamSet::new();
+    template.insert("l0.lora_a", Tensor::zeros(vec![d]));
+    let comps: Vec<_> = (0..n_experts)
+        .map(|_| {
+            let mut p = ParamSet::new();
+            p.insert(
+                "l0.lora_a",
+                Tensor::new(vec![d], prop::task_vector_like(&mut rng, d)),
+            );
+            compress_params(&p, &cfg)
+        })
+        .collect();
+    let refs: Vec<&_> = comps.iter().collect();
+    let dense_pool: Vec<ParamSet> = comps
+        .iter()
+        .map(|c| decompress_params(c, &template).unwrap())
+        .collect();
+
+    // Few-shot stand-in objective: distance to the first expert.
+    let target = dense_pool[0].flatten();
+    let loss = |c: &ParamSet| -> f64 {
+        c.flatten()
+            .iter()
+            .zip(&target)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum()
+    };
+    let es = EsConfig { budget, restarts: 2, ..Default::default() };
+
+    let mut rng_a = Pcg::seed(7);
+    let (dense, dense_s, dense_peak) =
+        measure_peak(|| learn_composition(&dense_pool, &es, &mut rng_a, loss));
+    let dense = dense?;
+
+    let mut rng_b = Pcg::seed(7);
+    let (tern, tern_s, tern_peak) =
+        measure_peak(|| learn_composition_ternary(&refs, &es, &mut rng_b, loss));
+    let tern = tern?;
+
+    assert_eq!(dense.weights, tern.weights, "ES trajectories must match");
+    assert_eq!(dense.composed, tern.composed);
+
+    bench.row(
+        "engine/lorahub_adapt",
+        &[
+            ("dense_ms", dense_s * 1e3),
+            ("ternary_ms", tern_s * 1e3),
+            ("evals", dense.evals as f64),
+            ("dense_peak_mb", dense_peak as f64 / 1e6),
+            ("ternary_peak_mb", tern_peak as f64 / 1e6),
+            // The dense-pool working set the ternary path never pays.
+            ("dense_pool_mb", (n_experts * d * 4) as f64 / 1e6),
+        ],
+    );
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
-    let artifacts = bs::require_artifacts();
+    let quick = std::env::args().any(|a| a == "--quick");
     let mut bench = Bench::new("fig4");
+    composition_comparison(&mut bench, quick)?;
+    if quick {
+        return Ok(());
+    }
+    let artifacts = bs::require_artifacts();
     let scale = std::env::var("COMPEFT_SCALE").unwrap_or_else(|_| "s".into());
     let seeds: u64 = std::env::var("COMPEFT_SEEDS")
         .ok()

@@ -3,21 +3,131 @@
 //! ComPEFT+TIES over the 7 GLUE-analog experts; merged model evaluated
 //! on all 7 tasks (average accuracy).
 //!
-//! Run: `cargo bench --bench table6_merging`
+//! Also reports the **dense-vs-ternary-domain engine comparison**: for
+//! each merge method, the wall time and measured peak heap bytes of
+//! (a) decompress-every-expert-then-merge (the reference) against
+//! (b) `merging::ternary` serial and (c) `engine::par_merge` on a
+//! pool — with the outputs cross-checked for equality on every run.
+//! These rows need no artifacts and run in CI via `--quick`.
+//!
+//! Run: `cargo bench --bench table6_merging`            (full, artifacts)
+//!      `cargo bench --bench table6_merging -- --quick` (engine rows only)
 
 use compeft::bench_support as bs;
+use compeft::compeft::compress::{
+    compress_params, decompress_params, CompressConfig, CompressedParamSet,
+    Granularity,
+};
+use compeft::compeft::engine::par_merge;
 use compeft::coordinator::registry::ExpertMethod;
-use compeft::merging::{average, task_arithmetic, ties::ties_merge, ties::TiesConfig};
-use compeft::tensor::ParamSet;
-use compeft::util::bench::Bench;
+use compeft::merging::ternary::merge_ternary;
+use compeft::merging::{
+    average, merge_dense, task_arithmetic, ties::ties_merge, ties::TiesConfig,
+    MergeMethod,
+};
+use compeft::tensor::{ParamSet, Tensor};
+use compeft::util::bench::{measure_peak, Bench, PeakAlloc};
+use compeft::util::pool::ThreadPool;
+use compeft::util::prop;
+use compeft::util::rng::Pcg;
+
+#[global_allocator]
+static ALLOC: PeakAlloc = PeakAlloc;
 
 const GLUE: [&str; 7] = ["mnli", "rte", "qnli", "wnli", "sst2", "mrpc", "qqp"];
 const TA_LAMBDAS: [f64; 4] = [0.2, 0.3, 0.5, 1.0];
 
+/// Dense-vs-ternary engine rows on a synthetic expert pool: same
+/// numbers, different time and peak memory.
+fn engine_comparison(bench: &mut Bench, quick: bool) -> anyhow::Result<()> {
+    let d: usize = if quick { 1 << 18 } else { 1 << 22 };
+    let n_experts = 7usize;
+    let workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(8);
+    println!(
+        "table6 engine comparison: {n_experts} experts x {d} params, \
+         k=0.2, pool={workers}"
+    );
+
+    let mut rng = Pcg::seed(1206);
+    let cfg = CompressConfig {
+        density: 0.2,
+        alpha: 1.0,
+        granularity: Granularity::Global,
+    };
+    // One structural template for decompression + N compressed experts.
+    let mut template = ParamSet::new();
+    template.insert("w", Tensor::zeros(vec![d]));
+    let comps: Vec<CompressedParamSet> = (0..n_experts)
+        .map(|_| {
+            let mut p = ParamSet::new();
+            p.insert("w", Tensor::new(vec![d], prop::task_vector_like(&mut rng, d)));
+            compress_params(&p, &cfg)
+        })
+        .collect();
+    let refs: Vec<&CompressedParamSet> = comps.iter().collect();
+    let pool = ThreadPool::new(workers);
+
+    let methods: Vec<(&str, MergeMethod)> = vec![
+        ("averaging", MergeMethod::Average),
+        ("task_arith", MergeMethod::TaskArithmetic { lambda: 0.3 }),
+        ("ties", MergeMethod::Ties { density: 0.2, lambda: 1.0 }),
+        (
+            "lorahub_w",
+            MergeMethod::Weighted {
+                weights: (0..n_experts).map(|i| 0.6 - 0.1 * i as f64).collect(),
+            },
+        ),
+    ];
+    for (name, method) in &methods {
+        // (a) Reference: densify every expert, then merge.
+        let (dense_out, dense_s, dense_peak) = measure_peak(|| {
+            let dense: Vec<ParamSet> = comps
+                .iter()
+                .map(|c| decompress_params(c, &template).unwrap())
+                .collect();
+            merge_dense(&dense, method).unwrap()
+        });
+        // (b) Ternary-domain, serial.
+        let (tern_out, tern_s, tern_peak) =
+            measure_peak(|| merge_ternary(&refs, method).unwrap());
+        // (c) Ternary-domain, chunk-parallel.
+        let (par_out, par_s, par_peak) =
+            measure_peak(|| par_merge(&refs, method, &pool).unwrap());
+
+        assert_eq!(dense_out, tern_out, "{name}: ternary != dense reference");
+        assert_eq!(dense_out, par_out, "{name}: par != dense reference");
+
+        bench.row(
+            &format!("engine/{name}"),
+            &[
+                ("dense_ms", dense_s * 1e3),
+                ("ternary_ms", tern_s * 1e3),
+                ("ternary_par_ms", par_s * 1e3),
+                ("speedup_serial", dense_s / tern_s.max(1e-12)),
+                ("speedup_par", dense_s / par_s.max(1e-12)),
+                ("dense_peak_mb", dense_peak as f64 / 1e6),
+                ("ternary_peak_mb", tern_peak as f64 / 1e6),
+                ("ternary_par_peak_mb", par_peak as f64 / 1e6),
+            ],
+        );
+    }
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
-    let artifacts = bs::require_artifacts();
+    let quick = std::env::args().any(|a| a == "--quick");
     let mut bench = Bench::new("table6");
 
+    // Engine rows first: artifact-free, always printed.
+    engine_comparison(&mut bench, quick)?;
+    if quick {
+        return Ok(());
+    }
+
+    let artifacts = bs::require_artifacts();
     for scale in ["xs", "s", "m"] {
         if !artifacts.join("models").join(scale).join("base.npz").exists() {
             continue;

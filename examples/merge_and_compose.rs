@@ -8,13 +8,16 @@
 
 use anyhow::Result;
 use compeft::bench_support as bs;
+use compeft::compeft::compress::{compress_params, CompressConfig, Granularity};
+use compeft::compeft::engine::par_merge;
 use compeft::coordinator::registry::ExpertMethod;
 use compeft::eval::fewshot_loss;
 use compeft::merging::es::EsConfig;
 use compeft::merging::lorahub::learn_composition;
-use compeft::merging::{task_arithmetic, ties::ties_merge, ties::TiesConfig};
+use compeft::merging::{task_arithmetic, ties::ties_merge, ties::TiesConfig, MergeMethod};
 use compeft::runtime::AdapterKind;
 use compeft::tensor::ParamSet;
+use compeft::util::pool::ThreadPool;
 use compeft::util::rng::Pcg;
 
 const GLUE: [&str; 7] = ["mnli", "rte", "qnli", "wnli", "sst2", "mrpc", "qqp"];
@@ -55,6 +58,23 @@ fn main() -> Result<()> {
     ] {
         println!("  {name:28} avg accuracy {:.3}", eval_avg(&merged)?);
     }
+
+    // Ternary-domain merging: the same ComPEFT TIES result computed
+    // directly on the compressed payloads — no per-expert dense
+    // materialization — chunk-parallel, and bit-identical by contract.
+    let ccfg = CompressConfig {
+        density: 0.2,
+        alpha: 1.0,
+        granularity: Granularity::Global,
+    };
+    let comps: Vec<_> = experts.iter().map(|e| compress_params(&e.tv, &ccfg)).collect();
+    let refs: Vec<&_> = comps.iter().collect();
+    let pool = ThreadPool::new(4);
+    let t0 = std::time::Instant::now();
+    let tern = par_merge(&refs, &MergeMethod::Ties { density: 0.2, lambda: 1.0 }, &pool)?;
+    let dt = t0.elapsed();
+    assert_eq!(tern, ties_merge(&ctvs, &TiesConfig::default())?);
+    println!("  TIES (ternary-domain)        bit-identical, merged in {dt:?}");
 
     // ---- Part 2: LoraHub composition for an unseen compositional task.
     let mut pool = Vec::new();

@@ -301,6 +301,47 @@ pub fn par_add_assign_cfg(
     Ok(())
 }
 
+/// Chunk-parallel ternary-domain merge
+/// ([`crate::merging::ternary::merge_ternary`] on the pool): TIES,
+/// averaging, task arithmetic, or weighted (LoraHub) composition of N
+/// compressed experts, bit-identical to the dense
+/// decompress-then-merge reference at any worker count and chunk size.
+///
+/// The [`MergePlan`](crate::merging::ternary::MergePlan) does all
+/// global work up front (layout validation, TIES trim thresholds); the
+/// pool then computes disjoint output chunks, each replaying the dense
+/// per-coordinate operation sequence over the experts' supports. Peak
+/// memory is O(d + workers·chunk) — the dense path materializes all N
+/// experts at O(N·d).
+pub fn par_merge(
+    experts: &[&crate::compeft::compress::CompressedParamSet],
+    method: &crate::merging::MergeMethod,
+    pool: &ThreadPool,
+) -> Result<ParamSet> {
+    par_merge_cfg(experts, method, pool, &EngineConfig::default())
+}
+
+/// [`par_merge`] with explicit engine tuning.
+pub fn par_merge_cfg(
+    experts: &[&crate::compeft::compress::CompressedParamSet],
+    method: &crate::merging::MergeMethod,
+    pool: &ThreadPool,
+    engine: &EngineConfig,
+) -> Result<ParamSet> {
+    let plan = crate::merging::ternary::MergePlan::new(experts, method)?;
+    let chunk = engine.chunk.max(1);
+    let mut flat = vec![0.0f32; plan.d()];
+    let mut tasks: Vec<(usize, &mut [f32])> = Vec::new();
+    let mut start = 0usize;
+    for piece in flat.chunks_mut(chunk) {
+        let len = piece.len();
+        tasks.push((start, piece));
+        start += len;
+    }
+    pool.scoped_map(tasks, |(s, out)| plan.run_chunk(s, out));
+    Ok(plan.into_paramset(flat))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -434,16 +475,7 @@ mod tests {
         }
     }
 
-    fn assert_paramset_bit_identical(a: &ParamSet, b: &ParamSet, tag: &str) {
-        assert_eq!(a.names(), b.names(), "{tag}: names");
-        for (name, ta) in a.iter() {
-            let tb = b.get(name).unwrap();
-            assert_eq!(ta.shape, tb.shape, "{tag}/{name}: shape");
-            let bits_a: Vec<u32> = ta.data.iter().map(|x| x.to_bits()).collect();
-            let bits_b: Vec<u32> = tb.data.iter().map(|x| x.to_bits()).collect();
-            assert_eq!(bits_a, bits_b, "{tag}/{name}: values");
-        }
-    }
+    use crate::util::prop::assert_paramset_bit_identical;
 
     #[test]
     fn par_decompress_matches_serial_across_pools_and_chunks() {
@@ -534,6 +566,90 @@ mod tests {
         let pool = ThreadPool::new(2);
         assert!(par_add_assign(&mut dst, &delta, &pool).is_err());
         assert_eq!(dst, snapshot, "failed add must not partially apply");
+    }
+
+    /// Cross-path equivalence for every merge method: the dense
+    /// decompress-then-merge reference, the serial ternary-domain path,
+    /// and the pooled path agree bit for bit across pools {1, 2, 8} and
+    /// several chunk sizes.
+    #[test]
+    fn par_merge_matches_dense_reference_across_pools_and_chunks() {
+        use crate::compeft::compress::decompress_params;
+        use crate::merging::ternary::merge_ternary;
+        use crate::merging::{merge_dense, MergeMethod};
+
+        let mut rng = Pcg::seed(131);
+        let tvs: Vec<ParamSet> =
+            (0..3).map(|_| sample_paramset(&mut rng, 3)).collect();
+        for granularity in [Granularity::Global, Granularity::PerTensor] {
+            let cfg = CompressConfig { density: 0.2, alpha: 1.0, granularity };
+            let comps: Vec<_> =
+                tvs.iter().map(|tv| compress_params(tv, &cfg)).collect();
+            let refs: Vec<&_> = comps.iter().collect();
+            let dense: Vec<ParamSet> = comps
+                .iter()
+                .zip(&tvs)
+                .map(|(c, tv)| decompress_params(c, tv).unwrap())
+                .collect();
+            let methods = [
+                ("average", MergeMethod::Average),
+                ("ta", MergeMethod::TaskArithmetic { lambda: 0.3 }),
+                ("ties", MergeMethod::Ties { density: 0.2, lambda: 1.0 }),
+                (
+                    "weighted",
+                    MergeMethod::Weighted { weights: vec![1.0, -0.5, 0.2] },
+                ),
+            ];
+            for (name, method) in &methods {
+                let want = merge_dense(&dense, method).unwrap();
+                let serial = merge_ternary(&refs, method).unwrap();
+                assert_paramset_bit_identical(
+                    &want,
+                    &serial,
+                    &format!("{granularity:?}/{name}/serial"),
+                );
+                for workers in [1usize, 2, 8] {
+                    let pool = ThreadPool::new(workers);
+                    for chunk in [1usize, 113, 1 << 16] {
+                        let par = par_merge_cfg(
+                            &refs,
+                            method,
+                            &pool,
+                            &EngineConfig { chunk },
+                        )
+                        .unwrap();
+                        assert_paramset_bit_identical(
+                            &want,
+                            &par,
+                            &format!(
+                                "{granularity:?}/{name}/workers={workers} \
+                                 chunk={chunk}"
+                            ),
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn par_merge_error_paths_match_serial() {
+        use crate::merging::MergeMethod;
+        let mut rng = Pcg::seed(137);
+        let tv = sample_paramset(&mut rng, 2);
+        let cfg = CompressConfig::default();
+        let c = compress_params(&tv, &cfg);
+        let other = compress_params(&sample_paramset(&mut rng, 1), &cfg);
+        let pool = ThreadPool::new(2);
+        // Empty list, layout mismatch, weight-count mismatch.
+        assert!(par_merge(&[], &MergeMethod::Average, &pool).is_err());
+        assert!(par_merge(&[&c, &other], &MergeMethod::Average, &pool).is_err());
+        assert!(par_merge(
+            &[&c],
+            &MergeMethod::Weighted { weights: vec![1.0, 2.0] },
+            &pool
+        )
+        .is_err());
     }
 
     #[test]

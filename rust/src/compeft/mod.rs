@@ -27,6 +27,6 @@ pub use compress::{
 };
 pub use engine::{
     par_add_assign, par_compress_paramset, par_compress_vector,
-    par_decompress_params, EngineConfig,
+    par_decompress_params, par_merge, EngineConfig,
 };
 pub use ternary::TernaryVector;

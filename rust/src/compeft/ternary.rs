@@ -100,6 +100,35 @@ impl TernaryVector {
         }
     }
 
+    /// Like [`TernaryVector::fill_dense_range`], but only for support
+    /// indices strictly below `limit` (segment-local, exclusive). The
+    /// ternary-domain TIES trim admits a *prefix* of a tied segment's
+    /// support in index order; this writes exactly that prefix's slice
+    /// of the chunk, leaving clipped coordinates untouched (caller
+    /// zeroes them), so chunked trimmed materialization reproduces the
+    /// dense `prune_to_topk` output bit for bit.
+    pub fn fill_dense_range_clipped(&self, start: usize, out: &mut [f32], limit: u32) {
+        let lo = start as u64;
+        // Clamp to lo so a chunk entirely past the bound is an empty
+        // index range (partition points would otherwise cross).
+        let hi = ((start + out.len()) as u64).min(limit as u64).max(lo);
+        for (signed, list) in [(self.scale, &self.plus), (-self.scale, &self.minus)] {
+            let s = list.partition_point(|&i| (i as u64) < lo);
+            let e = list.partition_point(|&i| (i as u64) < hi);
+            for &i in &list[s..e] {
+                out[i as usize - start] = signed;
+            }
+        }
+    }
+
+    /// Index of the `n`-th support entry (0-based) in global index
+    /// order across both signs, or `None` when `n >= nnz`. Used to turn
+    /// a "first N support entries" budget into an index bound for
+    /// [`TernaryVector::fill_dense_range_clipped`].
+    pub fn nth_support_index(&self, n: usize) -> Option<u32> {
+        self.iter_nonzero().nth(n).map(|(i, _)| i)
+    }
+
     /// Add `s · γ̃` into an existing buffer (decompress-free apply).
     pub fn add_into(&self, out: &mut [f32], weight: f32) {
         assert_eq!(out.len(), self.len);
@@ -262,6 +291,44 @@ mod tests {
         let mut tail = vec![0.0f32; 1];
         t.fill_dense_range(9, &mut tail);
         assert_eq!(tail, vec![-0.5]);
+    }
+
+    #[test]
+    fn clipped_fill_is_prefix_of_support() {
+        let t = sample(); // plus [0,3,7], minus [2,9]; support 0,2,3,7,9
+        // limit 4 admits support {0,2,3} only, at every chunking.
+        for chunk in 1..=t.len {
+            let mut out = vec![0.0f32; t.len];
+            let mut start = 0;
+            for piece in out.chunks_mut(chunk) {
+                t.fill_dense_range_clipped(start, piece, 4);
+                start += piece.len();
+            }
+            assert_eq!(
+                out,
+                vec![0.5, 0.0, -0.5, 0.5, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0],
+                "chunk {chunk}"
+            );
+        }
+        // limit 0 admits nothing; limit >= len admits everything.
+        let mut none = vec![0.0f32; t.len];
+        t.fill_dense_range_clipped(0, &mut none, 0);
+        assert_eq!(none, vec![0.0; t.len]);
+        let mut all = vec![0.0f32; t.len];
+        t.fill_dense_range_clipped(0, &mut all, t.len as u32);
+        assert_eq!(all, t.to_dense());
+    }
+
+    #[test]
+    fn nth_support_index_walks_in_order() {
+        let t = sample();
+        let support: Vec<u32> = t.iter_nonzero().map(|(i, _)| i).collect();
+        assert_eq!(support, vec![0, 2, 3, 7, 9]);
+        for (n, &i) in support.iter().enumerate() {
+            assert_eq!(t.nth_support_index(n), Some(i));
+        }
+        assert_eq!(t.nth_support_index(5), None);
+        assert_eq!(TernaryVector::empty(3).nth_support_index(0), None);
     }
 
     #[test]

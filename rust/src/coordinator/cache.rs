@@ -79,12 +79,18 @@ impl<V> LruTier<V> {
     }
 
     /// Insert, evicting LRU entries as needed. Returns evicted
-    /// (id, value, bytes) tuples (for demotion to a lower tier).
+    /// (id, value, bytes) tuples (for demotion to a lower tier). When
+    /// `id` was already resident, its displaced value is returned
+    /// first, ahead of any LRU evictions.
     pub fn insert(&mut self, id: &str, value: V, bytes: u64) -> Vec<(String, V, u64)> {
         let mut evicted = Vec::new();
-        // Remove any stale copy first.
-        if let Some((_, old_bytes, _)) = self.entries.remove(id) {
+        // Displace any existing copy first — and *return* it: silently
+        // dropping it meant a re-registered expert's prior resident
+        // never demoted to the lower tier, unlike every other entry
+        // this insert pushes out.
+        if let Some((old, old_bytes, _)) = self.entries.remove(id) {
             self.used_bytes -= old_bytes;
+            evicted.push((id.to_string(), old, old_bytes));
         }
         while self.used_bytes + bytes > self.capacity_bytes && !self.entries.is_empty() {
             // Find LRU.
@@ -179,9 +185,35 @@ mod tests {
     fn reinsert_replaces_without_leak() {
         let mut t: LruTier<i32> = LruTier::new("gpu", 100);
         t.insert("a", 1, 40);
-        t.insert("a", 2, 60);
+        let displaced = t.insert("a", 2, 60);
         assert_eq!(t.used_bytes(), 60);
         assert_eq!(t.len(), 1);
+        // The displaced value comes back for demotion instead of being
+        // silently dropped.
+        assert_eq!(displaced, vec![("a".to_string(), 1, 40)]);
+        assert_eq!(t.get("a"), Some(&2));
+    }
+
+    /// Regression for the demotion leak: replacing an id must hand the
+    /// old value back alongside (and ahead of) LRU evictions, so the
+    /// caller can demote it like any other displaced resident.
+    #[test]
+    fn reinsert_returns_old_value_before_lru_evictions() {
+        let mut t: LruTier<i32> = LruTier::new("gpu", 100);
+        t.insert("a", 1, 50);
+        t.insert("b", 2, 50);
+        t.get("a"); // b is LRU
+        // Replacing "a" with a bigger entry displaces old "a" AND
+        // evicts "b" to make room.
+        let out = t.insert("a", 3, 90);
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0], ("a".to_string(), 1, 50), "replaced value first");
+        assert_eq!(out[1], ("b".to_string(), 2, 50), "then LRU evictions");
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.used_bytes(), 90);
+        assert_eq!(t.get("a"), Some(&3));
+        // Eviction counters track only true LRU evictions.
+        assert_eq!(t.stats().evictions, 1);
     }
 
     #[test]

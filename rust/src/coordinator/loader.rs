@@ -21,14 +21,15 @@
 //! serial counterpart, so attaching a pool changes latency only, never
 //! the served weights.
 
-use crate::compeft::compress::decompress_params;
+use crate::compeft::compress::{decompress_params, CompressedParamSet};
 use crate::compeft::engine;
 use crate::compeft::format;
 use crate::coordinator::registry::{ExpertFormat, ExpertMethod, ExpertRecord};
 use crate::coordinator::transport::SimLink;
+use crate::merging::{ternary, MergeMethod};
 use crate::tensor::ParamSet;
 use crate::util::pool::ThreadPool;
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -116,6 +117,47 @@ impl ExpertLoader {
             },
         };
         Ok((tv, t0.elapsed()))
+    }
+
+    /// Decode `.cpeft` bytes into the compressed (ternary) form
+    /// *without* densifying — the input the ternary-domain merge
+    /// engine consumes. Frame-parallel when a pool is attached.
+    pub fn decode_compressed(
+        &self,
+        rec: &ExpertRecord,
+        bytes: &[u8],
+    ) -> Result<(CompressedParamSet, Duration)> {
+        if rec.format != ExpertFormat::Compeft {
+            bail!(
+                "expert {:?} is stored as {:?}, not `.cpeft` — cannot decode \
+                 to the ternary domain",
+                rec.id,
+                rec.format
+            );
+        }
+        let t0 = Instant::now();
+        let c = match &self.pool {
+            Some(pool) => format::from_bytes_par(bytes, pool)?.0,
+            None => format::from_bytes(bytes)?.0,
+        };
+        Ok((c, t0.elapsed()))
+    }
+
+    /// Ternary-domain merge of member experts into one dense task
+    /// vector (chunk-parallel when a pool is attached; bit-identical
+    /// either way). The members are never materialized densely — peak
+    /// memory stays O(d), not O(members·d).
+    pub fn merge_ternary(
+        &self,
+        members: &[&CompressedParamSet],
+        method: &MergeMethod,
+    ) -> Result<(ParamSet, Duration)> {
+        let t0 = Instant::now();
+        let merged = match &self.pool {
+            Some(pool) => engine::par_merge(members, method, pool)?,
+            None => ternary::merge_ternary(members, method)?,
+        };
+        Ok((merged, t0.elapsed()))
     }
 
     /// Materialize the servable adapter: init + task vector.
@@ -262,6 +304,83 @@ mod tests {
                 pooled.materialize(ExpertMethod::Lora, &init, &tv_par).unwrap();
             assert_eq!(adapter_par, adapter_serial, "materialize workers={workers}");
         }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Ternary-domain merge through the loader: fetch two `.cpeft`
+    /// experts, decode to compressed form, merge — and get exactly what
+    /// the dense decompress-then-merge reference produces, with and
+    /// without a pool. This is the loader half of serving a merged
+    /// expert, with no artifacts required.
+    #[test]
+    fn loader_merges_compressed_experts_like_dense_reference() {
+        use crate::merging::{merge_dense, MergeMethod};
+
+        let dir = std::env::temp_dir().join(format!(
+            "compeft_loader_merge_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut reg = Registry::new();
+        let cfg = CompressConfig { density: 0.15, alpha: 1.0, ..Default::default() };
+        let mut originals = Vec::new();
+        for (i, seed) in [21u64, 22, 23].iter().enumerate() {
+            let tv = sample_tv(*seed);
+            let npz = dir.join(format!("t{i}.lora.npz"));
+            tv.save_npz(&npz).unwrap();
+            reg.register_compeft(
+                &format!("e{i}"),
+                "t",
+                "s",
+                ExpertMethod::Lora,
+                &npz,
+                &cfg,
+            )
+            .unwrap();
+            originals.push(tv);
+        }
+
+        let loader = fast_links();
+        let mut members = Vec::new();
+        for i in 0..3 {
+            let rec = reg.get(&format!("e{i}")).unwrap();
+            let (bytes, _) = loader.fetch_encoded(rec).unwrap();
+            let (c, _) = loader.decode_compressed(rec, &bytes).unwrap();
+            members.push(c);
+        }
+        let refs: Vec<&_> = members.iter().collect();
+
+        // Dense reference over the decompressed members.
+        let dense: Vec<ParamSet> = members
+            .iter()
+            .zip(&originals)
+            .map(|(c, tv)| decompress_params(c, tv).unwrap())
+            .collect();
+        for method in [
+            MergeMethod::Average,
+            MergeMethod::Ties { density: 0.3, lambda: 1.0 },
+            MergeMethod::Weighted { weights: vec![0.5, -0.2, 1.0] },
+        ] {
+            let want = merge_dense(&dense, &method).unwrap();
+            let (serial, _) = loader.merge_ternary(&refs, &method).unwrap();
+            assert_eq!(serial, want, "serial {method:?}");
+            for workers in [1usize, 2, 8] {
+                let pooled = fast_links().with_pool(std::sync::Arc::new(
+                    crate::util::pool::ThreadPool::new(workers),
+                ));
+                let (par, _) = pooled.merge_ternary(&refs, &method).unwrap();
+                assert_eq!(par, want, "workers={workers} {method:?}");
+            }
+        }
+
+        // decode_compressed refuses non-.cpeft experts.
+        let npz = dir.join("orig.lora.npz");
+        sample_tv(5).save_npz(&npz).unwrap();
+        reg.register_original("orig", "t", "s", ExpertMethod::Lora, &npz).unwrap();
+        let rec = reg.get("orig").unwrap();
+        let (bytes, _) = loader.fetch_encoded(rec).unwrap();
+        assert!(loader.decode_compressed(rec, &bytes).is_err());
+
         std::fs::remove_dir_all(&dir).ok();
     }
 

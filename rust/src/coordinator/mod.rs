@@ -17,6 +17,8 @@ pub mod registry;
 pub mod server;
 pub mod transport;
 
-pub use registry::{ExpertFormat, ExpertMethod, ExpertRecord, Registry};
+pub use registry::{
+    CompositionRecord, ExpertFormat, ExpertMethod, ExpertRecord, Registry,
+};
 pub use server::{Coordinator, CoordinatorConfig, EngineReport, Prediction};
 pub use transport::{LinkSpec, SimLink};

@@ -1,11 +1,21 @@
 //! Expert catalog: which experts exist, in which formats, at what
 //! encoded sizes. Built by scanning the artifact tree (or registered
 //! programmatically by benches).
+//!
+//! Besides stored experts, the catalog records **compositions**
+//! ([`CompositionRecord`]): virtual experts defined as a merge of
+//! member experts (TIES, averaging, task arithmetic, or learned
+//! LoraHub weights — [`MergeMethod`]). A composition has no checkpoint
+//! of its own; the serving engine materializes it on demand by pulling
+//! the members' `.cpeft` payloads through the host tier and merging
+//! them ternary-domain (never densifying the members), then caches the
+//! result in the accelerator tier like any stored expert.
 
 use crate::compeft::compress::{compress_params, CompressConfig};
 use crate::compeft::format::{self, Encoding};
+use crate::merging::MergeMethod;
 use crate::tensor::ParamSet;
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
@@ -53,10 +63,31 @@ pub struct ExpertRecord {
     pub n_params: usize,
 }
 
+/// A merged (virtual) expert: member expert ids + how to combine them.
+///
+/// Members must be `.cpeft`-stored experts of one adapter family with
+/// identical parameter counts; the merge itself runs ternary-domain in
+/// the loader, so registration is metadata-only.
+#[derive(Clone, Debug)]
+pub struct CompositionRecord {
+    pub id: String,
+    /// Ids of the member experts, in merge order (merge methods are
+    /// order-sensitive only in float rounding, but the order is part of
+    /// the record so repeated materializations are identical).
+    pub members: Vec<String>,
+    /// Merge method + hyper-parameters.
+    pub merge: MergeMethod,
+    /// Adapter family shared by every member.
+    pub method: ExpertMethod,
+    /// Dense parameter count (equal across members).
+    pub n_params: usize,
+}
+
 /// The expert catalog.
 #[derive(Default, Debug)]
 pub struct Registry {
     experts: BTreeMap<String, ExpertRecord>,
+    compositions: BTreeMap<String, CompositionRecord>,
 }
 
 impl Registry {
@@ -64,8 +95,22 @@ impl Registry {
         Registry::default()
     }
 
+    /// Raw insert of a stored-expert record. Does **not** check the
+    /// composition namespace — the checked entry points
+    /// ([`Registry::register_original`], [`Registry::register_compeft`])
+    /// do, and are what benches and the serving setup should use.
     pub fn insert(&mut self, rec: ExpertRecord) {
         self.experts.insert(rec.id.clone(), rec);
+    }
+
+    /// Serving routes stored experts before compositions, so an expert
+    /// registered under an existing composition's id would silently
+    /// shadow it; both checked registration paths reject that.
+    fn ensure_id_free_of_compositions(&self, id: &str) -> Result<()> {
+        if self.compositions.contains_key(id) {
+            bail!("expert id {id:?} collides with a registered composition");
+        }
+        Ok(())
     }
 
     pub fn get(&self, id: &str) -> Option<&ExpertRecord> {
@@ -84,6 +129,94 @@ impl Registry {
         self.experts.is_empty()
     }
 
+    /// Register a merged expert: `id` serves the [`MergeMethod`]
+    /// combination of `members`, materialized ternary-domain on demand.
+    ///
+    /// Validates that the id is free, every member exists as a `.cpeft`
+    /// expert, members share one adapter family and parameter count,
+    /// and (for [`MergeMethod::Weighted`]) the weight count matches.
+    pub fn register_composition(
+        &mut self,
+        id: &str,
+        members: &[&str],
+        merge: MergeMethod,
+    ) -> Result<&CompositionRecord> {
+        if self.experts.contains_key(id) {
+            bail!("composition id {id:?} collides with a stored expert");
+        }
+        if members.is_empty() {
+            bail!("composition {id:?} has no members");
+        }
+        let mut method: Option<ExpertMethod> = None;
+        let mut n_params: Option<usize> = None;
+        for m in members {
+            let rec = match self.experts.get(*m) {
+                Some(r) => r,
+                None => bail!("composition {id:?}: unknown member expert {m:?}"),
+            };
+            if rec.format != ExpertFormat::Compeft {
+                bail!(
+                    "composition {id:?}: member {m:?} is not `.cpeft`-stored — \
+                     ternary-domain merging needs compressed members"
+                );
+            }
+            match method {
+                None => method = Some(rec.method),
+                Some(k) if k != rec.method => bail!(
+                    "composition {id:?}: members mix adapter families \
+                     ({k:?} vs {:?} for {m:?})",
+                    rec.method
+                ),
+                _ => {}
+            }
+            match n_params {
+                None => n_params = Some(rec.n_params),
+                Some(n) if n != rec.n_params => bail!(
+                    "composition {id:?}: member {m:?} has {} params, \
+                     others have {n}",
+                    rec.n_params
+                ),
+                _ => {}
+            }
+        }
+        if let MergeMethod::Weighted { weights } = &merge {
+            if weights.len() != members.len() {
+                bail!(
+                    "composition {id:?}: {} members but {} weights",
+                    members.len(),
+                    weights.len()
+                );
+            }
+        }
+        if let MergeMethod::Ties { density, .. } = &merge {
+            if !(*density > 0.0 && *density <= 1.0) {
+                bail!(
+                    "composition {id:?}: TIES density must be in (0,1], \
+                     got {density}"
+                );
+            }
+        }
+        let rec = CompositionRecord {
+            id: id.to_string(),
+            members: members.iter().map(|m| m.to_string()).collect(),
+            merge,
+            method: method.expect("members non-empty"),
+            n_params: n_params.expect("members non-empty"),
+        };
+        self.compositions.insert(id.to_string(), rec);
+        Ok(self.compositions.get(id).unwrap())
+    }
+
+    /// Look up a composition record by id.
+    pub fn composition(&self, id: &str) -> Option<&CompositionRecord> {
+        self.compositions.get(id)
+    }
+
+    /// Ids of all registered compositions.
+    pub fn composition_ids(&self) -> Vec<String> {
+        self.compositions.keys().cloned().collect()
+    }
+
     /// Register the original (fp16-accounted) form of a task-vector npz.
     pub fn register_original(
         &mut self,
@@ -93,6 +226,7 @@ impl Registry {
         method: ExpertMethod,
         npz_path: &Path,
     ) -> Result<&ExpertRecord> {
+        self.ensure_id_free_of_compositions(id)?;
         let tv = ParamSet::load_npz(npz_path)
             .with_context(|| format!("load {}", npz_path.display()))?;
         let rec = ExpertRecord {
@@ -120,6 +254,7 @@ impl Registry {
         npz_path: &Path,
         cfg: &CompressConfig,
     ) -> Result<&ExpertRecord> {
+        self.ensure_id_free_of_compositions(id)?;
         let tv = ParamSet::load_npz(npz_path)?;
         let compressed = compress_params(&tv, cfg);
         let out = npz_path.with_extension("cpeft");
@@ -214,6 +349,64 @@ mod tests {
             orig.encoded_bytes
         );
         assert!(comp.path.exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn composition_registration_and_validation() {
+        let dir = std::env::temp_dir()
+            .join(format!("compeft_comp_reg_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let npz = tv_npz(&dir, "taskA.lora.npz");
+        let mut reg = Registry::new();
+        let cfg = CompressConfig { density: 0.2, ..Default::default() };
+        reg.register_compeft("e1", "a", "s", ExpertMethod::Lora, &npz, &cfg).unwrap();
+        reg.register_compeft("e2", "a", "s", ExpertMethod::Lora, &npz, &cfg).unwrap();
+        reg.register_original("dense", "a", "s", ExpertMethod::Lora, &npz).unwrap();
+
+        let rec = reg
+            .register_composition("m/avg", &["e1", "e2"], MergeMethod::Average)
+            .unwrap();
+        assert_eq!(rec.members, vec!["e1", "e2"]);
+        assert_eq!(rec.method, ExpertMethod::Lora);
+        assert_eq!(rec.n_params, 512);
+        assert!(reg.composition("m/avg").is_some());
+        assert_eq!(reg.composition_ids(), vec!["m/avg".to_string()]);
+
+        // Weighted must match the member count; TIES density validated.
+        assert!(reg
+            .register_composition(
+                "m/w",
+                &["e1", "e2"],
+                MergeMethod::Weighted { weights: vec![1.0] }
+            )
+            .is_err());
+        assert!(reg
+            .register_composition(
+                "m/t",
+                &["e1", "e2"],
+                MergeMethod::Ties { density: 0.0, lambda: 1.0 }
+            )
+            .is_err());
+        // Unknown member, empty members, non-cpeft member, id collision.
+        assert!(reg
+            .register_composition("m/x", &["nope"], MergeMethod::Average)
+            .is_err());
+        assert!(reg.register_composition("m/e", &[], MergeMethod::Average).is_err());
+        assert!(reg
+            .register_composition("m/d", &["e1", "dense"], MergeMethod::Average)
+            .is_err());
+        assert!(reg
+            .register_composition("e1", &["e2"], MergeMethod::Average)
+            .is_err());
+        // Reverse collision: a stored expert may not take a live
+        // composition's id (serving would shadow the merged expert).
+        assert!(reg
+            .register_compeft("m/avg", "a", "s", ExpertMethod::Lora, &npz, &cfg)
+            .is_err());
+        assert!(reg
+            .register_original("m/avg", "a", "s", ExpertMethod::Lora, &npz)
+            .is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -7,12 +7,21 @@
 //! [`ModelBundle`] (device buffers are not `Send`) and drains batches,
 //! swapping experts through the tiered cache + simulated links when the
 //! target expert is not GPU-resident.
+//!
+//! An expert id may also name a **composition**
+//! ([`CompositionRecord`]): a merged expert the engine materializes on
+//! demand by pulling the members' `.cpeft` payloads through the host
+//! tier and merging them ternary-domain (`load_composed`) — the merged
+//! adapter then lives in the accelerator LRU tier as a first-class
+//! resident, indistinguishable from a stored expert.
 
 use crate::coordinator::batcher::{BatchPolicy, Batcher, Pending};
 use crate::coordinator::cache::{LruTier, TierStats};
 use crate::coordinator::loader::ExpertLoader;
 use crate::coordinator::metrics::{Metrics, MetricsSnapshot, RequestTiming};
-use crate::coordinator::registry::{ExpertMethod, ExpertRecord, Registry};
+use crate::coordinator::registry::{
+    CompositionRecord, ExpertMethod, ExpertRecord, Registry,
+};
 use crate::coordinator::transport::{LinkSpec, SimLink};
 use crate::eval::ANSWER_BASE;
 use crate::runtime::{AdapterKind, ModelBundle, Runtime};
@@ -242,15 +251,22 @@ fn engine_main(
 
     // --- request loop ---
     while let Some((expert_id, batch)) = batcher.next_batch(resident_hint.as_deref()) {
-        let rec = match registry.get(&expert_id) {
-            Some(r) => r.clone(),
-            None => {
-                // Unknown expert: drop requests (metrics still count them).
-                for p in batch {
-                    drop(p.payload.resp);
-                }
-                continue;
+        // Route: a stored expert, or a registered composition (a merged
+        // expert materialized on demand from its members).
+        enum Target {
+            Stored(ExpertRecord),
+            Composed(CompositionRecord),
+        }
+        let target = if let Some(r) = registry.get(&expert_id) {
+            Target::Stored(r.clone())
+        } else if let Some(c) = registry.composition(&expert_id) {
+            Target::Composed(c.clone())
+        } else {
+            // Unknown expert: drop requests (metrics still count them).
+            for p in batch {
+                drop(p.payload.resp);
             }
+            continue;
         };
 
         // Ensure residency.
@@ -259,7 +275,13 @@ fn engine_main(
         let mut sim_swap = Duration::ZERO;
         if gpu.get(&expert_id).is_none() {
             swapped = true;
-            match load_expert(&bundle, &loader, &rec, &mut cpu) {
+            let loaded = match &target {
+                Target::Stored(rec) => load_expert(&bundle, &loader, rec, &mut cpu),
+                Target::Composed(comp) => {
+                    load_composed(&bundle, &loader, &registry, comp, &mut cpu)
+                }
+            };
+            match loaded {
                 Ok((resident, sim)) => {
                     sim_swap = sim;
                     // The GPU tier budgets *decoded* adapter bytes
@@ -377,39 +399,48 @@ fn pack_row(dst: &mut [i32], tokens: &[i32]) {
     }
 }
 
-/// Pull an expert to the GPU tier; returns (resident, simulated time).
-fn load_expert(
-    bundle: &ModelBundle,
+/// Fetch an expert's encoded bytes through the host (CPU) tier,
+/// charging the net link only on a miss.
+fn fetch_via_cpu_tier(
     loader: &ExpertLoader,
     rec: &ExpertRecord,
     cpu: &mut LruTier<Vec<u8>>,
-) -> Result<(Resident, Duration)> {
-    let mut sim = Duration::ZERO;
-    // Host tier: encoded bytes.
-    let encoded: Vec<u8> = match cpu.get(&rec.id) {
-        Some(b) => b.clone(),
-        None => {
-            let (bytes, fetch) = loader.fetch_encoded(rec)?;
-            sim += fetch;
-            cpu.insert(&rec.id, bytes.clone(), rec.encoded_bytes.max(1));
-            bytes
-        }
-    };
-    // Decode against the matching template.
-    let (kind, template) = match rec.method {
+    sim: &mut Duration,
+) -> Result<Vec<u8>> {
+    if let Some(b) = cpu.get(&rec.id) {
+        return Ok(b.clone());
+    }
+    let (bytes, fetch) = loader.fetch_encoded(rec)?;
+    *sim += fetch;
+    cpu.insert(&rec.id, bytes.clone(), rec.encoded_bytes.max(1));
+    Ok(bytes)
+}
+
+/// Runtime kind + adapter init template for an expert method.
+fn kind_and_template(
+    bundle: &ModelBundle,
+    method: ExpertMethod,
+) -> (AdapterKind, &crate::tensor::ParamSet) {
+    match method {
         ExpertMethod::Lora => (AdapterKind::Lora, &bundle.lora_init),
         ExpertMethod::Ia3 => (AdapterKind::Ia3, &bundle.ia3_init),
         ExpertMethod::Full => (AdapterKind::Base, &bundle.base),
-    };
-    let (tv, decode) = loader.decode(rec, &encoded, template)?;
-    sim += decode;
-    // Host → device (encoded bytes move; decode-on-device model, §2.2).
-    sim += loader.upload_cost(rec);
+    }
+}
 
-    let resident = match rec.method {
+/// Materialize a decoded task vector into a GPU-tier resident (adapter
+/// or full-parameter buffers) — shared by stored and merged experts.
+fn build_resident(
+    bundle: &ModelBundle,
+    loader: &ExpertLoader,
+    method: ExpertMethod,
+    tv: &crate::tensor::ParamSet,
+) -> Result<Resident> {
+    let (kind, template) = kind_and_template(bundle, method);
+    Ok(match method {
         ExpertMethod::Full => {
             let params = loader
-                .materialize(rec.method, &bundle.base, &tv)
+                .materialize(method, &bundle.base, tv)
                 .context("apply full tv")?;
             let bufs = bundle.upload_full_params(&params)?;
             Resident {
@@ -420,7 +451,7 @@ fn load_expert(
             }
         }
         _ => {
-            let adapter = loader.materialize(rec.method, template, &tv)?;
+            let adapter = loader.materialize(method, template, tv)?;
             let bufs = bundle.upload_adapter(kind, &adapter)?;
             Resident {
                 kind,
@@ -429,7 +460,60 @@ fn load_expert(
                 dense_bytes: adapter.bytes_fp16(),
             }
         }
-    };
+    })
+}
+
+/// Pull an expert to the GPU tier; returns (resident, simulated time).
+fn load_expert(
+    bundle: &ModelBundle,
+    loader: &ExpertLoader,
+    rec: &ExpertRecord,
+    cpu: &mut LruTier<Vec<u8>>,
+) -> Result<(Resident, Duration)> {
+    let mut sim = Duration::ZERO;
+    // Host tier: encoded bytes.
+    let encoded = fetch_via_cpu_tier(loader, rec, cpu, &mut sim)?;
+    // Decode against the matching template.
+    let (_, template) = kind_and_template(bundle, rec.method);
+    let (tv, decode) = loader.decode(rec, &encoded, template)?;
+    sim += decode;
+    // Host → device (encoded bytes move; decode-on-device model, §2.2).
+    sim += loader.upload_cost(rec);
+    let resident = build_resident(bundle, loader, rec.method, &tv)?;
+    Ok((resident, sim))
+}
+
+/// Materialize a merged expert on demand: pull every member's `.cpeft`
+/// payload through the host tier, decode to the ternary domain (never
+/// densifying members), merge per the composition record, and build a
+/// first-class GPU-tier resident. Members benefit from — and populate —
+/// the host tier exactly like directly-served experts, so a merged
+/// expert whose members are already cached costs no net traffic.
+fn load_composed(
+    bundle: &ModelBundle,
+    loader: &ExpertLoader,
+    registry: &Registry,
+    comp: &CompositionRecord,
+    cpu: &mut LruTier<Vec<u8>>,
+) -> Result<(Resident, Duration)> {
+    let mut sim = Duration::ZERO;
+    let mut members = Vec::with_capacity(comp.members.len());
+    for m in &comp.members {
+        let rec = registry
+            .get(m)
+            .ok_or_else(|| anyhow::anyhow!("composition member {m:?} missing"))?;
+        let encoded = fetch_via_cpu_tier(loader, rec, cpu, &mut sim)?;
+        let (c, decode) = loader.decode_compressed(rec, &encoded)?;
+        sim += decode;
+        members.push(c);
+    }
+    let refs: Vec<&_> = members.iter().collect();
+    let (tv, merge) = loader.merge_ternary(&refs, &comp.merge)?;
+    sim += merge;
+    // The merged update exists only host-side and has no compact wire
+    // form: the device hop moves the dense fp16 adapter.
+    sim += loader.pcie.transfer(tv.bytes_fp16());
+    let resident = build_resident(bundle, loader, comp.method, &tv)?;
     Ok((resident, sim))
 }
 

@@ -15,8 +15,9 @@
 //! [`crate::merging::es`] from a few-shot objective supplied by the
 //! caller (the Figure 4 bench plugs in the runtime's few-shot loss).
 
+use crate::compeft::compress::CompressedParamSet;
 use crate::merging::es::{self, EsConfig, EsResult};
-use crate::merging::weighted_sum;
+use crate::merging::{ternary, weighted_sum, MergeMethod};
 use crate::tensor::ParamSet;
 use crate::util::rng::Pcg;
 use anyhow::Result;
@@ -24,6 +25,22 @@ use anyhow::Result;
 /// Compose expert LoRA ParamSets with fixed weights (paper Eq. 1).
 pub fn compose(experts: &[ParamSet], weights: &[f64]) -> Result<ParamSet> {
     weighted_sum(experts, weights)
+}
+
+/// [`compose`] directly on compressed experts — the ternary-domain
+/// weighted sum, bit-identical to composing the decompressed pool but
+/// without materializing N dense task vectors. This is the hot call of
+/// the ES loop below: LoraHub evaluates hundreds of candidate weight
+/// vectors over the same expert pool, so keeping the pool in `.cpeft`
+/// form cuts the working set from O(N·d) to O(d).
+pub fn compose_ternary(
+    experts: &[&CompressedParamSet],
+    weights: &[f64],
+) -> Result<ParamSet> {
+    ternary::merge_ternary(
+        experts,
+        &MergeMethod::Weighted { weights: weights.to_vec() },
+    )
 }
 
 /// Outcome of a LoraHub adaptation run.
@@ -60,6 +77,38 @@ where
         }
     });
     let composed = compose(experts, &r.best)?;
+    Ok(LoraHubResult {
+        weights: r.best,
+        composed,
+        best_loss: r.best_value,
+        evals: r.evals,
+    })
+}
+
+/// [`learn_composition`] over a compressed expert pool: every candidate
+/// composition is built ternary-domain ([`compose_ternary`]). Because
+/// the composed module is bit-identical to composing the decompressed
+/// pool, the loss sequence — and therefore the learned weights — match
+/// [`learn_composition`] on the dense pool exactly (same `rng`, same
+/// `cfg`, same `loss`).
+pub fn learn_composition_ternary<F>(
+    experts: &[&CompressedParamSet],
+    cfg: &EsConfig,
+    rng: &mut Pcg,
+    mut loss: F,
+) -> Result<LoraHubResult>
+where
+    F: FnMut(&ParamSet) -> f64,
+{
+    anyhow::ensure!(!experts.is_empty(), "no experts to compose");
+    let n = experts.len();
+    let r: EsResult = es::minimize(n, Some(&vec![0.0; n]), cfg, rng, |w| {
+        match compose_ternary(experts, w) {
+            Ok(c) => loss(&c),
+            Err(_) => f64::INFINITY,
+        }
+    });
+    let composed = compose_ternary(experts, &r.best)?;
     Ok(LoraHubResult {
         weights: r.best,
         composed,
@@ -117,5 +166,61 @@ mod tests {
         assert!(
             learn_composition(&[], &EsConfig::default(), &mut rng, |_| 0.0).is_err()
         );
+        assert!(learn_composition_ternary(&[], &EsConfig::default(), &mut rng, |_| 0.0)
+            .is_err());
+    }
+
+    /// The ternary-domain ES run follows the dense run step for step:
+    /// with the same rng/config/loss, compositions are bit-identical,
+    /// so the learned weights and the final composed module agree.
+    #[test]
+    fn ternary_learning_matches_dense_pool() {
+        use crate::compeft::compress::{
+            compress_params, decompress_params, CompressConfig,
+        };
+        use crate::util::prop;
+
+        let mut rng = Pcg::seed(21);
+        let pool: Vec<ParamSet> = (0..3)
+            .map(|_| {
+                let mut p = ParamSet::new();
+                p.insert(
+                    "l0.lora_a",
+                    Tensor::new(vec![300], prop::task_vector_like(&mut rng, 300)),
+                );
+                p.insert(
+                    "l0.lora_b",
+                    Tensor::new(vec![150], prop::task_vector_like(&mut rng, 150)),
+                );
+                p
+            })
+            .collect();
+        let cfg = CompressConfig { density: 0.2, alpha: 1.0, ..Default::default() };
+        let comps: Vec<_> = pool.iter().map(|p| compress_params(p, &cfg)).collect();
+        let refs: Vec<&_> = comps.iter().collect();
+        let dense_pool: Vec<ParamSet> = comps
+            .iter()
+            .zip(&pool)
+            .map(|(c, p)| decompress_params(c, p).unwrap())
+            .collect();
+
+        let target = dense_pool[0].flatten();
+        let loss = |c: &ParamSet| -> f64 {
+            c.flatten()
+                .iter()
+                .zip(&target)
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum()
+        };
+        let es = EsConfig { budget: 60, restarts: 2, ..Default::default() };
+        let mut rng_a = Pcg::seed(5);
+        let dense = learn_composition(&dense_pool, &es, &mut rng_a, loss).unwrap();
+        let mut rng_b = Pcg::seed(5);
+        let tern = learn_composition_ternary(&refs, &es, &mut rng_b, loss).unwrap();
+
+        assert_eq!(dense.weights, tern.weights);
+        assert_eq!(dense.evals, tern.evals);
+        assert!(dense.best_loss == tern.best_loss);
+        assert_eq!(dense.composed, tern.composed);
     }
 }

@@ -11,13 +11,59 @@
 //! All methods take task vectors (not full checkpoints); the merged
 //! model is `base + merged_tv`. The Table 6 / Figure 4 benches call
 //! these with both original and ComPEFT-decompressed task vectors.
+//!
+//! Every method exists in two numerically identical forms:
+//!
+//! * the **dense** reference here and in [`ties`], over materialized
+//!   `ParamSet` task vectors, and
+//! * the **ternary-domain** path in [`ternary`], over compressed
+//!   `.cpeft` payloads directly — no per-expert dense materialization —
+//!   chunk-parallel through [`crate::compeft::engine::par_merge`].
+//!
+//! [`MergeMethod`] names a method + its hyper-parameters so callers
+//! (the serving registry's composition records, the benches) can route
+//! one description through either path; [`merge_dense`] is the
+//! reference dispatcher the equivalence suites compare against.
 
 pub mod es;
 pub mod lorahub;
+pub mod ternary;
 pub mod ties;
 
 use crate::tensor::ParamSet;
 use anyhow::{bail, Result};
+
+/// A merge/composition method with its hyper-parameters — the unit the
+/// serving registry stores in a composition record and the benches
+/// sweep. Dispatched by [`merge_dense`] (reference) and
+/// [`ternary::merge_ternary`] / [`crate::compeft::engine::par_merge`]
+/// (ternary-domain), which produce bit-identical results.
+#[derive(Clone, Debug, PartialEq)]
+pub enum MergeMethod {
+    /// [`average`]: uniform mean of the task vectors.
+    Average,
+    /// [`task_arithmetic`]: λ-scaled sum.
+    TaskArithmetic { lambda: f64 },
+    /// [`ties::ties_merge`]: trim / elect-sign / disjoint-merge.
+    Ties { density: f64, lambda: f64 },
+    /// [`weighted_sum`] with explicit per-expert weights — LoraHub's
+    /// composition (Eq. 1) once the weights are learned.
+    Weighted { weights: Vec<f64> },
+}
+
+/// Dispatch a [`MergeMethod`] over dense task vectors — the reference
+/// path the ternary-domain engine is equivalence-tested against.
+pub fn merge_dense(tvs: &[ParamSet], method: &MergeMethod) -> Result<ParamSet> {
+    match method {
+        MergeMethod::Average => average(tvs),
+        MergeMethod::TaskArithmetic { lambda } => task_arithmetic(tvs, *lambda),
+        MergeMethod::Ties { density, lambda } => ties::ties_merge(
+            tvs,
+            &ties::TiesConfig { density: *density, lambda: *lambda },
+        ),
+        MergeMethod::Weighted { weights } => weighted_sum(tvs, weights),
+    }
+}
 
 /// Weighted sum of task vectors: `Σ_i w_i · tv_i`.
 pub fn weighted_sum(tvs: &[ParamSet], weights: &[f64]) -> Result<ParamSet> {
@@ -76,5 +122,23 @@ mod tests {
     fn mismatched_weights_error() {
         assert!(weighted_sum(&[tv(&[1.0])], &[1.0, 2.0]).is_err());
         assert!(weighted_sum(&[], &[]).is_err());
+    }
+
+    #[test]
+    fn merge_dense_dispatches_every_method() {
+        let tvs = [tv(&[1.0, 2.0]), tv(&[3.0, 6.0])];
+        let avg = merge_dense(&tvs, &MergeMethod::Average).unwrap();
+        assert_eq!(avg.get("w").unwrap().data, vec![2.0, 4.0]);
+        let ta =
+            merge_dense(&tvs, &MergeMethod::TaskArithmetic { lambda: 0.5 }).unwrap();
+        assert_eq!(ta.get("w").unwrap().data, vec![2.0, 4.0]);
+        let w = merge_dense(&tvs, &MergeMethod::Weighted { weights: vec![1.0, 0.0] })
+            .unwrap();
+        assert_eq!(w.get("w").unwrap().data, vec![1.0, 2.0]);
+        let ties =
+            merge_dense(&tvs, &MergeMethod::Ties { density: 1.0, lambda: 1.0 })
+                .unwrap();
+        assert_eq!(ties.get("w").unwrap().data, vec![2.0, 4.0]);
+        assert!(merge_dense(&[], &MergeMethod::Average).is_err());
     }
 }

@@ -1,0 +1,645 @@
+//! Ternary-domain merging: run TIES, averaging, task arithmetic, and
+//! LoraHub composition **directly on compressed experts** — no
+//! per-expert dense materialization (paper §3.6–§3.7).
+//!
+//! A `.cpeft` expert is `τ̃ᵢ = sᵢ · γ̃ᵢ` with one f32 scale per part and
+//! a sparse sign support, so the dense merge algebra collapses:
+//!
+//! * **Sign election** (TIES step 2) is `sgn(Σᵢ sᵢ·γ̃ᵢ)` — a weighted
+//!   sign vote accumulated over supports only.
+//! * **Trim** (TIES step 1) never needs a quickselect: every entry of a
+//!   part has magnitude `|sᵢ|`, so the global top-⌈k·d⌉ threshold falls
+//!   out of the per-part (|scale|, nnz) table in O(parts·log parts),
+//!   and tie-breaking by index becomes a per-part support *prefix*.
+//! * **Disjoint merge / weighted sums** touch only coordinates in the
+//!   union of supports.
+//!
+//! [`MergePlan`] compiles N compressed experts + a
+//! [`MergeMethod`](crate::merging::MergeMethod) into per-coordinate
+//! kernels over `[0, d)` chunks; [`merge_ternary`] drives them
+//! serially, [`crate::compeft::engine::par_merge`] chunk-parallel on a
+//! [`ThreadPool`](crate::util::pool::ThreadPool). Peak memory is
+//! O(d + workers·chunk) instead of the dense path's O(N·d).
+//!
+//! **Equivalence contract.** Output is *bit-identical* to the dense
+//! reference — decompress every expert, then
+//! [`merge_dense`](crate::merging::merge_dense) — at every worker
+//! count and chunk size. The kernels replay the dense per-coordinate
+//! f32 operation sequence exactly (same expert order, same
+//! multiply/add/divide shapes, signed zeros included) by materializing
+//! each expert's *chunk slice* into a scratch buffer; chunking cannot
+//! change results because every dense-path operation is
+//! per-coordinate. The zero-electoral-mass rule matches the fixed
+//! dense TIES: exact sign cancellation admits nothing (see
+//! [`crate::merging::ties`]).
+//!
+//! Scales must be finite; [`MergePlan::new`] rejects NaN/∞ scales
+//! rather than silently diverging from the dense reference's
+//! NaN-comparison semantics.
+
+use crate::compeft::compress::{CompressedParamSet, Granularity};
+use crate::compeft::ternary::TernaryVector;
+use crate::merging::MergeMethod;
+use crate::tensor::{ParamSet, Tensor};
+use crate::util::pool::chunk_ranges;
+use anyhow::{bail, Result};
+
+/// Which slice of a tied segment's support survives the TIES trim.
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Admit {
+    /// Every support entry (strictly above threshold, or tie fully
+    /// inside the budget).
+    All,
+    /// Support entries with index strictly below the bound (a prefix in
+    /// index order — how the dense path breaks exact-threshold ties).
+    Prefix(u32),
+    /// Nothing (below threshold, zero scale, or budget exhausted).
+    Skip,
+}
+
+/// One expert part placed in the global flat coordinate space.
+struct Seg<'a> {
+    offset: usize,
+    tern: &'a TernaryVector,
+    admit: Admit,
+}
+
+impl Seg<'_> {
+    fn fill_range(&self, start: usize, out: &mut [f32]) {
+        let end = start + out.len();
+        let lo = start.max(self.offset);
+        let hi = end.min(self.offset + self.tern.len);
+        if lo >= hi {
+            return;
+        }
+        let dst = &mut out[lo - start..hi - start];
+        match self.admit {
+            Admit::All => self.tern.fill_dense_range(lo - self.offset, dst),
+            Admit::Prefix(bound) => {
+                self.tern.fill_dense_range_clipped(lo - self.offset, dst, bound)
+            }
+            Admit::Skip => {}
+        }
+    }
+}
+
+/// The merge operation compiled against borrowed expert payloads.
+enum Op<'a> {
+    /// `Σᵢ wᵢ·τ̃ᵢ` — average, task arithmetic, and LoraHub composition
+    /// are all this with different weight vectors.
+    Weighted { views: Vec<Vec<Seg<'a>>>, weights: Vec<f64> },
+    /// TIES trim / elect-sign / disjoint-merge; the trim is already
+    /// folded into each segment's [`Admit`].
+    Ties { views: Vec<Vec<Seg<'a>>>, lambda: f64 },
+}
+
+/// A validated, trimmed, ready-to-run ternary-domain merge.
+///
+/// Construction does all the O(parts) global work (layout checks, TIES
+/// threshold + tie budgets); [`MergePlan::run_chunk`] is then pure
+/// per-chunk computation, safe to fan out across a pool.
+pub struct MergePlan<'a> {
+    d: usize,
+    layout: &'a [(String, Vec<usize>, usize)],
+    op: Op<'a>,
+}
+
+impl<'a> MergePlan<'a> {
+    /// Validate experts (non-empty, identical layouts, parts present
+    /// and sized, finite scales) and compile `method` against them.
+    pub fn new(
+        experts: &[&'a CompressedParamSet],
+        method: &MergeMethod,
+    ) -> Result<MergePlan<'a>> {
+        if experts.is_empty() {
+            bail!("no task vectors to merge");
+        }
+        let layout: &'a [(String, Vec<usize>, usize)] = &experts[0].layout;
+        for (i, e) in experts.iter().enumerate().skip(1) {
+            if e.layout.as_slice() != layout {
+                bail!("expert {i} layout differs from expert 0");
+            }
+        }
+        let d: usize = layout
+            .iter()
+            .map(|(_, shape, _)| shape.iter().product::<usize>())
+            .sum();
+
+        let mut views = Vec::with_capacity(experts.len());
+        for (i, e) in experts.iter().enumerate() {
+            let mut segs = Vec::new();
+            match e.granularity {
+                Granularity::Global => {
+                    let tern = match e.parts.get("") {
+                        Some(t) => t,
+                        None => bail!("expert {i}: missing global part"),
+                    };
+                    if tern.len != d {
+                        bail!(
+                            "expert {i}: global part length {} != layout total {d}",
+                            tern.len
+                        );
+                    }
+                    if !tern.scale.is_finite() {
+                        bail!("expert {i}: non-finite scale {}", tern.scale);
+                    }
+                    segs.push(Seg { offset: 0, tern, admit: Admit::All });
+                }
+                Granularity::PerTensor => {
+                    for (name, shape, off) in layout {
+                        let tern = match e.parts.get(name) {
+                            Some(t) => t,
+                            None => bail!("expert {i}: missing part {name:?}"),
+                        };
+                        let n: usize = shape.iter().product();
+                        if tern.len != n {
+                            bail!(
+                                "expert {i}: part {name:?} length {} != tensor \
+                                 length {n}",
+                                tern.len
+                            );
+                        }
+                        if !tern.scale.is_finite() {
+                            bail!(
+                                "expert {i}: non-finite scale {} in part {name:?}",
+                                tern.scale
+                            );
+                        }
+                        segs.push(Seg { offset: *off, tern, admit: Admit::All });
+                    }
+                }
+            }
+            views.push(segs);
+        }
+
+        let op = match method {
+            MergeMethod::Average => {
+                let w = 1.0 / experts.len() as f64;
+                Op::Weighted { views, weights: vec![w; experts.len()] }
+            }
+            MergeMethod::TaskArithmetic { lambda } => {
+                Op::Weighted { views, weights: vec![*lambda; experts.len()] }
+            }
+            MergeMethod::Weighted { weights } => {
+                if weights.len() != experts.len() {
+                    bail!(
+                        "{} task vectors but {} weights",
+                        experts.len(),
+                        weights.len()
+                    );
+                }
+                Op::Weighted { views, weights: weights.clone() }
+            }
+            MergeMethod::Ties { density, lambda } => {
+                if !(*density > 0.0 && *density <= 1.0) {
+                    bail!("density must be in (0,1], got {density}");
+                }
+                for segs in views.iter_mut() {
+                    trim_segments(segs, d, *density);
+                }
+                Op::Ties { views, lambda: *lambda }
+            }
+        };
+        Ok(MergePlan { d, layout, op })
+    }
+
+    /// Total flat length of the merge domain.
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Compute output coordinates `[start, start + out.len())` into
+    /// `out`, which the caller provides zeroed (a fresh slice of the
+    /// flat output vector). Chunk boundaries never affect values.
+    pub fn run_chunk(&self, start: usize, out: &mut [f32]) {
+        let len = out.len();
+        let mut scratch = vec![0.0f32; len];
+        match &self.op {
+            Op::Weighted { views, weights } => {
+                // Dense reference: out = tv₀ · w₀, then out += wᵢ · tvᵢ
+                // (ParamSet::scale / add_scaled) — replayed per chunk.
+                fill_view(&views[0], start, &mut scratch);
+                let w0 = weights[0] as f32;
+                for (o, s) in out.iter_mut().zip(&scratch) {
+                    *o = *s * w0;
+                }
+                for (segs, &w) in views.iter().zip(weights.iter()).skip(1) {
+                    scratch.fill(0.0);
+                    fill_view(segs, start, &mut scratch);
+                    let wf = w as f32;
+                    for (o, s) in out.iter_mut().zip(&scratch) {
+                        *o += wf * *s;
+                    }
+                }
+            }
+            Op::Ties { views, lambda } => {
+                // Elect: Σᵢ trimmedᵢ in expert order.
+                let mut elected = vec![0.0f32; len];
+                for segs in views {
+                    scratch.fill(0.0);
+                    fill_view(segs, start, &mut scratch);
+                    for (e, s) in elected.iter_mut().zip(&scratch) {
+                        *e += *s;
+                    }
+                }
+                // Disjoint merge: mean of sign-agreeing contributions;
+                // zero electoral mass admits nothing (see ties.rs).
+                let mut counts = vec![0u32; len];
+                for segs in views {
+                    scratch.fill(0.0);
+                    fill_view(segs, start, &mut scratch);
+                    for j in 0..len {
+                        let v = scratch[j];
+                        let e = elected[j];
+                        if v != 0.0 && e != 0.0 && v.signum() == e.signum() {
+                            out[j] += v;
+                            counts[j] += 1;
+                        }
+                    }
+                }
+                let lf = *lambda as f32;
+                for j in 0..len {
+                    if counts[j] > 0 {
+                        out[j] = out[j] / counts[j] as f32 * lf;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Reshape the computed flat vector into the experts' shared tensor
+    /// structure (layout order = the original `ParamSet` order).
+    pub fn into_paramset(&self, flat: Vec<f32>) -> ParamSet {
+        debug_assert_eq!(flat.len(), self.d);
+        let mut out = ParamSet::new();
+        for (name, shape, off) in self.layout {
+            let n: usize = shape.iter().product();
+            out.insert(name, Tensor::new(shape.clone(), flat[*off..off + n].to_vec()));
+        }
+        out
+    }
+}
+
+fn fill_view(segs: &[Seg<'_>], start: usize, out: &mut [f32]) {
+    for seg in segs {
+        seg.fill_range(start, out);
+    }
+}
+
+/// TIES trim over one expert's segments: resolve the global top-⌈k·d⌉
+/// magnitude threshold from the per-segment (|scale|, nnz) table and
+/// assign each segment its [`Admit`] rule. Mirrors
+/// [`prune_to_topk`](crate::compeft::sparsify::prune_to_topk) on the
+/// decompressed flat vector exactly: strictly-above entries always
+/// survive, exact-threshold ties fill the remaining budget in global
+/// index order (segments are laid out at increasing offsets, so a
+/// per-segment support prefix is a global-order prefix).
+fn trim_segments(segs: &mut [Seg<'_>], d: usize, density: f64) {
+    if d == 0 {
+        return;
+    }
+    // keep_count's formula, without its u32-domain assert: the ternary
+    // path never indexes the flat domain, so d may exceed u32::MAX.
+    let keep = (((d as f64) * density).ceil() as usize).min(d) as u64;
+
+    // Distinct positive magnitudes, descending. Positive finite f32s
+    // order identically to their bit patterns.
+    let mut mags: Vec<(u32, u64)> = segs
+        .iter()
+        .filter_map(|s| {
+            let mag = s.tern.scale.abs();
+            let nnz = s.tern.nnz() as u64;
+            if mag > 0.0 && nnz > 0 {
+                Some((mag.to_bits(), nnz))
+            } else {
+                None
+            }
+        })
+        .collect();
+    mags.sort_by_key(|&(bits, _)| std::cmp::Reverse(bits));
+    let mut grouped: Vec<(u32, u64)> = Vec::new();
+    for (bits, cnt) in mags {
+        match grouped.last_mut() {
+            Some(last) if last.0 == bits => last.1 += cnt,
+            _ => grouped.push((bits, cnt)),
+        }
+    }
+
+    // Walk down the magnitude ladder to the bucket holding the keep-th
+    // largest |value| — the same value the dense quickselect returns.
+    let mut above = 0u64;
+    let mut thr_bits: Option<u32> = None;
+    for (bits, cnt) in &grouped {
+        if above + cnt >= keep {
+            thr_bits = Some(*bits);
+            break;
+        }
+        above += cnt;
+    }
+
+    let Some(tb) = thr_bits else {
+        // keep exceeds the total nonzero support: threshold is 0.0, and
+        // the dense scan keeps exactly the entries with |v| > 0.
+        for s in segs.iter_mut() {
+            s.admit = if s.tern.scale.abs() > 0.0 && s.tern.nnz() > 0 {
+                Admit::All
+            } else {
+                Admit::Skip
+            };
+        }
+        return;
+    };
+    let thr = f32::from_bits(tb);
+    let mut budget = keep - above;
+    for s in segs.iter_mut() {
+        let mag = s.tern.scale.abs();
+        if mag > thr {
+            s.admit = Admit::All;
+        } else if mag.to_bits() == tb && mag > 0.0 {
+            let nnz = s.tern.nnz() as u64;
+            let take = nnz.min(budget);
+            budget -= take;
+            s.admit = if take == 0 {
+                Admit::Skip
+            } else if take == nnz {
+                Admit::All
+            } else {
+                // Entries strictly below the take-th support index are
+                // exactly the first `take` entries in index order.
+                Admit::Prefix(s.tern.nth_support_index(take as usize).expect("take < nnz"))
+            };
+        } else {
+            s.admit = Admit::Skip;
+        }
+    }
+}
+
+/// Serial ternary-domain merge: bit-identical to the dense
+/// decompress-then-merge reference, at a fraction of the memory. The
+/// chunk-parallel variant is
+/// [`crate::compeft::engine::par_merge`].
+pub fn merge_ternary(
+    experts: &[&CompressedParamSet],
+    method: &MergeMethod,
+) -> Result<ParamSet> {
+    merge_ternary_chunked(experts, method, crate::compeft::engine::DEFAULT_CHUNK)
+}
+
+/// [`merge_ternary`] with an explicit chunk size (work division only —
+/// never affects the output).
+pub fn merge_ternary_chunked(
+    experts: &[&CompressedParamSet],
+    method: &MergeMethod,
+    chunk: usize,
+) -> Result<ParamSet> {
+    let plan = MergePlan::new(experts, method)?;
+    let mut flat = vec![0.0f32; plan.d()];
+    for (s, e) in chunk_ranges(plan.d(), chunk) {
+        plan.run_chunk(s, &mut flat[s..e]);
+    }
+    Ok(plan.into_paramset(flat))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compeft::compress::{compress_params, decompress_params, CompressConfig};
+    use crate::merging::merge_dense;
+    use crate::util::prop::{self, assert_paramset_bit_identical};
+    use crate::util::rng::Pcg;
+    use std::collections::BTreeMap;
+
+    fn sample_tvs(seed: u64, n_experts: usize, base: usize) -> Vec<ParamSet> {
+        let mut rng = Pcg::seed(seed);
+        (0..n_experts)
+            .map(|_| {
+                let mut p = ParamSet::new();
+                for (i, n) in [base, base / 2 + 3, 129].into_iter().enumerate() {
+                    p.insert(
+                        &format!("layer.{i}.w"),
+                        Tensor::new(vec![n], prop::task_vector_like(&mut rng, n)),
+                    );
+                }
+                p
+            })
+            .collect()
+    }
+
+    fn methods() -> Vec<(&'static str, MergeMethod)> {
+        vec![
+            ("average", MergeMethod::Average),
+            ("ta_0.3", MergeMethod::TaskArithmetic { lambda: 0.3 }),
+            ("ties_k2", MergeMethod::Ties { density: 0.2, lambda: 0.7 }),
+            ("ties_k1", MergeMethod::Ties { density: 1.0, lambda: 1.0 }),
+            ("weighted", MergeMethod::Weighted { weights: vec![0.9, -0.4, 0.25] }),
+        ]
+    }
+
+    /// The core contract: ternary-domain output equals the dense
+    /// decompress-then-merge reference bit for bit, for every method,
+    /// both granularities, at several chunk sizes.
+    #[test]
+    fn matches_dense_reference_all_methods() {
+        let tvs = sample_tvs(3, 3, 2000);
+        for granularity in [Granularity::Global, Granularity::PerTensor] {
+            let cfg = CompressConfig { density: 0.15, alpha: 2.0, granularity };
+            let comps: Vec<CompressedParamSet> =
+                tvs.iter().map(|tv| compress_params(tv, &cfg)).collect();
+            let refs: Vec<&CompressedParamSet> = comps.iter().collect();
+            let dense_tvs: Vec<ParamSet> = comps
+                .iter()
+                .zip(&tvs)
+                .map(|(c, tv)| decompress_params(c, tv).unwrap())
+                .collect();
+            for (name, method) in methods() {
+                let want = merge_dense(&dense_tvs, &method).unwrap();
+                for chunk in [1usize, 97, 1 << 16] {
+                    let got = merge_ternary_chunked(&refs, &method, chunk).unwrap();
+                    assert_paramset_bit_identical(
+                        &want,
+                        &got,
+                        &format!("{granularity:?}/{name}/chunk={chunk}"),
+                    );
+                }
+            }
+        }
+    }
+
+    /// Mixed granularities across experts merge over the shared layout.
+    #[test]
+    fn mixed_granularity_experts_merge() {
+        let tvs = sample_tvs(9, 2, 900);
+        let cg = CompressConfig {
+            density: 0.2,
+            alpha: 1.0,
+            granularity: Granularity::Global,
+        };
+        let cp = CompressConfig { granularity: Granularity::PerTensor, ..cg };
+        let a = compress_params(&tvs[0], &cg);
+        let b = compress_params(&tvs[1], &cp);
+        let dense = [
+            decompress_params(&a, &tvs[0]).unwrap(),
+            decompress_params(&b, &tvs[1]).unwrap(),
+        ];
+        for (name, method) in methods() {
+            let method = match method {
+                MergeMethod::Weighted { .. } => MergeMethod::Weighted { weights: vec![0.6, -1.1] },
+                m => m,
+            };
+            let want = merge_dense(&dense, &method).unwrap();
+            let got = merge_ternary(&[&a, &b], &method).unwrap();
+            assert_paramset_bit_identical(&want, &got, name);
+        }
+    }
+
+    /// Randomized cross-path equivalence over sizes, densities, scales
+    /// and expert counts.
+    #[test]
+    fn prop_matches_dense_reference() {
+        prop::check(
+            "merge_ternary == dense reference",
+            25,
+            |rng: &mut Pcg| {
+                let n = prop::sizes(rng).max(2).min(6000);
+                let experts = 1 + rng.range(0, 4);
+                let k = [0.05, 0.2, 0.5, 1.0][rng.range(0, 4)];
+                let tvs: Vec<Vec<f32>> = (0..experts)
+                    .map(|_| prop::task_vector_like(rng, n))
+                    .collect();
+                let mi = rng.range(0, 4);
+                let chunk = [1usize, 64, 1000, 1 << 16][rng.range(0, 4)];
+                (tvs, k, mi, chunk)
+            },
+            |(tvs, k, mi, chunk)| {
+                let n_exp = tvs.len();
+                let method = match *mi {
+                    0 => MergeMethod::Average,
+                    1 => MergeMethod::TaskArithmetic { lambda: 0.4 },
+                    2 => MergeMethod::Ties { density: 0.3, lambda: 1.2 },
+                    _ => MergeMethod::Weighted {
+                        weights: (0..n_exp)
+                            .map(|i| 0.7 - 0.4 * i as f64)
+                            .collect(),
+                    },
+                };
+                let sets: Vec<ParamSet> = tvs
+                    .iter()
+                    .map(|v| {
+                        let mut p = ParamSet::new();
+                        p.insert("w", Tensor::new(vec![v.len()], v.clone()));
+                        p
+                    })
+                    .collect();
+                let cfg =
+                    CompressConfig { density: *k, alpha: 1.5, granularity: Granularity::Global };
+                let comps: Vec<CompressedParamSet> =
+                    sets.iter().map(|p| compress_params(p, &cfg)).collect();
+                let refs: Vec<&CompressedParamSet> = comps.iter().collect();
+                let dense: Vec<ParamSet> = comps
+                    .iter()
+                    .zip(&sets)
+                    .map(|(c, p)| decompress_params(c, p).unwrap())
+                    .collect();
+                let want = merge_dense(&dense, &method).map_err(|e| e.to_string())?;
+                let got =
+                    merge_ternary_chunked(&refs, &method, *chunk).map_err(|e| e.to_string())?;
+                let wf = want.flatten();
+                let gf = got.flatten();
+                for i in 0..wf.len() {
+                    if wf[i].to_bits() != gf[i].to_bits() {
+                        return Err(format!(
+                            "coord {i}: dense {} vs ternary {}",
+                            wf[i], gf[i]
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    fn handmade(len: usize, scale: f32, plus: Vec<u32>, minus: Vec<u32>) -> CompressedParamSet {
+        let mut parts = BTreeMap::new();
+        parts.insert(String::new(), TernaryVector { len, scale, plus, minus });
+        CompressedParamSet {
+            granularity: Granularity::Global,
+            layout: vec![("w".to_string(), vec![len], 0)],
+            parts,
+        }
+    }
+
+    /// The zero-electoral-mass rule on the ternary path: equal-scale
+    /// opposite signs cancel exactly and must merge to 0 (mirroring the
+    /// fixed dense TIES), while agreeing coordinates still merge.
+    #[test]
+    fn ties_zero_mass_admits_nothing_ternary() {
+        // coord 0: +s vs -s → zero mass → 0. coord 1: +s, +s → +s.
+        let a = handmade(3, 0.5, vec![0, 1], vec![]);
+        let b = handmade(3, 0.5, vec![1], vec![0]);
+        let m = merge_ternary(&[&a, &b], &MergeMethod::Ties { density: 1.0, lambda: 1.0 })
+            .unwrap();
+        assert_eq!(m.get("w").unwrap().data, vec![0.0, 0.5, 0.0]);
+    }
+
+    /// Ternary-domain trim: a two-expert pool where the tie budget cuts
+    /// inside one expert's equal-magnitude support — the prefix rule
+    /// must match the dense index-order tie-break.
+    #[test]
+    fn ties_trim_prefix_matches_dense() {
+        // Expert a: support {1,3,5,7} at scale 1.0 (d=8, k=0.25 keeps
+        // 2 → first two support indices 1,3 survive the trim).
+        let a = handmade(8, 1.0, vec![1, 3], vec![5, 7]);
+        let b = handmade(8, 0.25, vec![0, 1], vec![3]);
+        let tvs = [a.parts[""].to_dense(), b.parts[""].to_dense()];
+        let dense: Vec<ParamSet> = tvs
+            .iter()
+            .map(|v| {
+                let mut p = ParamSet::new();
+                p.insert("w", Tensor::new(vec![8], v.clone()));
+                p
+            })
+            .collect();
+        let method = MergeMethod::Ties { density: 0.25, lambda: 1.0 };
+        let want = merge_dense(&dense, &method).unwrap();
+        let got = merge_ternary(&[&a, &b], &method).unwrap();
+        assert_paramset_bit_identical(&want, &got, "trim prefix");
+    }
+
+    #[test]
+    fn error_paths() {
+        let a = handmade(4, 0.5, vec![0], vec![2]);
+        // Empty expert list.
+        assert!(merge_ternary(&[], &MergeMethod::Average).is_err());
+        // Layout mismatch.
+        let b = handmade(5, 0.5, vec![0], vec![2]);
+        assert!(merge_ternary(&[&a, &b], &MergeMethod::Average).is_err());
+        // Weight count mismatch.
+        assert!(
+            merge_ternary(&[&a], &MergeMethod::Weighted { weights: vec![1.0, 2.0] }).is_err()
+        );
+        // Bad density.
+        assert!(merge_ternary(&[&a], &MergeMethod::Ties { density: 0.0, lambda: 1.0 }).is_err());
+        // Non-finite scale.
+        let nan = handmade(4, f32::NAN, vec![0], vec![2]);
+        assert!(merge_ternary(&[&nan], &MergeMethod::Average).is_err());
+        // Missing global part.
+        let mut missing = handmade(4, 0.5, vec![0], vec![]);
+        missing.parts.clear();
+        assert!(merge_ternary(&[&missing], &MergeMethod::Average).is_err());
+        // Part length inconsistent with layout.
+        let mut short = handmade(4, 0.5, vec![0], vec![]);
+        short.parts.get_mut("").unwrap().len = 3;
+        assert!(merge_ternary(&[&short], &MergeMethod::Average).is_err());
+    }
+
+    #[test]
+    fn empty_domain_merges_to_empty() {
+        let empty = ParamSet::new();
+        let cfg = CompressConfig::default();
+        let c = compress_params(&empty, &cfg);
+        let m = merge_ternary(&[&c], &MergeMethod::Average).unwrap();
+        assert!(m.is_empty());
+        let t = merge_ternary(&[&c], &MergeMethod::Ties { density: 0.5, lambda: 1.0 }).unwrap();
+        assert!(t.is_empty());
+    }
+}

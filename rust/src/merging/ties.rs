@@ -55,12 +55,21 @@ pub fn ties_merge(tvs: &[ParamSet], cfg: &TiesConfig) -> Result<ParamSet> {
     }
 
     // Step 3: disjoint mean of sign-agreeing contributions.
+    //
+    // A parameter whose trimmed masses cancel exactly has zero electoral
+    // mass, yet `elected[i].signum()` still reports ±1 (IEEE signum of a
+    // signed zero), so one side's contributions used to be merged on the
+    // strength of nothing — and *which* side depended on the sign bit of
+    // the zero. Zero-mass ties now admit no contribution at all
+    // (`e != 0.0` covers both ±0.0); the ternary-domain path in
+    // [`crate::merging::ternary`] applies the same rule.
     let mut merged = vec![0.0f32; d];
     let mut counts = vec![0u32; d];
     for t in &trimmed {
         for i in 0..d {
             let v = t[i];
-            if v != 0.0 && v.signum() == elected[i].signum() {
+            let e = elected[i];
+            if v != 0.0 && e != 0.0 && v.signum() == e.signum() {
                 merged[i] += v;
                 counts[i] += 1;
             }
@@ -125,5 +134,68 @@ mod tests {
         let mut b = ParamSet::new();
         b.insert("other", Tensor::new(vec![1], vec![1.0]));
         assert!(ties_merge(&[tv(&[1.0]), b], &TiesConfig::default()).is_err());
+    }
+
+    /// Regression for the zero-electoral-mass bug: when trimmed masses
+    /// cancel exactly, `elected` is a signed zero whose `signum()` is
+    /// ±1, so one sign's contributions were merged despite zero
+    /// electoral mass (for the `+0.0` that exact cancellation produces,
+    /// the positive side won). Zero-mass parameters must merge to 0.
+    #[test]
+    fn zero_electoral_mass_admits_nothing() {
+        // Param 0: +2 vs -2 cancels exactly → no elected sign → 0.
+        // Param 1: agreeing +1, +1 → mean 1 (the merge still works).
+        let a = tv(&[2.0, 1.0]);
+        let b = tv(&[-2.0, 1.0]);
+        let m = ties_merge(&[a, b], &TiesConfig { density: 1.0, lambda: 1.0 }).unwrap();
+        assert_eq!(m.get("w").unwrap().data, vec![0.0, 1.0]);
+
+        // Three-way cancellation (+3, -1, -2) is also zero mass.
+        let m3 = ties_merge(
+            &[tv(&[3.0]), tv(&[-1.0]), tv(&[-2.0])],
+            &TiesConfig { density: 1.0, lambda: 1.0 },
+        )
+        .unwrap();
+        assert_eq!(m3.get("w").unwrap().data, vec![0.0]);
+    }
+
+    /// On a single task vector, trim keeps top-k values, the lone
+    /// contributor elects its own sign, and the disjoint mean of one is
+    /// the value itself — so `ties_merge` must equal `prune_to_topk`
+    /// scaled by λ, at any density < 1.
+    #[test]
+    fn prop_single_task_equals_scaled_prune() {
+        use crate::util::prop;
+        use crate::util::rng::Pcg;
+        prop::check(
+            "ties(single tv) == λ·prune_to_topk",
+            30,
+            |rng: &mut Pcg| {
+                let n = prop::sizes(rng).max(1).min(4000);
+                let k = [0.05, 0.2, 0.5, 0.9][rng.range(0, 4)];
+                let lambda = [0.3, 1.0, 1.7][rng.range(0, 3)];
+                (prop::task_vector_like(rng, n), k, lambda)
+            },
+            |(tau, k, lambda)| {
+                let mut p = ParamSet::new();
+                p.insert("w", Tensor::new(vec![tau.len()], tau.clone()));
+                let cfg = TiesConfig { density: *k, lambda: *lambda };
+                let merged = ties_merge(&[p], &cfg).map_err(|e| e.to_string())?;
+                let expect: Vec<f32> = prune_to_topk(tau, *k)
+                    .iter()
+                    .map(|&v| if v != 0.0 { v / 1.0 * *lambda as f32 } else { v })
+                    .collect();
+                let got = &merged.get("w").unwrap().data;
+                for i in 0..tau.len() {
+                    if got[i].to_bits() != expect[i].to_bits() {
+                        return Err(format!(
+                            "coord {i}: {} vs λ·pruned {}",
+                            got[i], expect[i]
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 }

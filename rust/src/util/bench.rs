@@ -167,6 +167,85 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+// ---------------------------------------------------------------------------
+// Peak-allocation tracking (for time/peak-memory bench rows)
+// ---------------------------------------------------------------------------
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+static ALLOC_CURRENT: AtomicUsize = AtomicUsize::new(0);
+static ALLOC_PEAK: AtomicUsize = AtomicUsize::new(0);
+
+/// A [`System`](std::alloc::System)-backed global allocator that tracks
+/// live and peak heap bytes, so benches can report *measured* peak
+/// memory (e.g. dense vs ternary-domain merging) instead of modeled
+/// estimates. Install it in a bench binary:
+///
+/// ```ignore
+/// #[global_allocator]
+/// static ALLOC: compeft::util::bench::PeakAlloc = compeft::util::bench::PeakAlloc;
+/// ```
+///
+/// then bracket a measured region with [`PeakAlloc::reset_peak`] and
+/// [`PeakAlloc::peak_bytes`]. Counters are process-wide and include
+/// worker-thread allocations — which is the point: a parallel path's
+/// scratch buffers count against it.
+pub struct PeakAlloc;
+
+unsafe impl GlobalAlloc for PeakAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc(layout);
+        if !p.is_null() {
+            let live =
+                ALLOC_CURRENT.fetch_add(layout.size(), Ordering::Relaxed) + layout.size();
+            ALLOC_PEAK.fetch_max(live, Ordering::Relaxed);
+        }
+        p
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout);
+        ALLOC_CURRENT.fetch_sub(layout.size(), Ordering::Relaxed);
+    }
+}
+
+impl PeakAlloc {
+    /// Currently live heap bytes.
+    pub fn current_bytes() -> usize {
+        ALLOC_CURRENT.load(Ordering::Relaxed)
+    }
+
+    /// High-water mark since the last [`PeakAlloc::reset_peak`].
+    pub fn peak_bytes() -> usize {
+        ALLOC_PEAK.load(Ordering::Relaxed)
+    }
+
+    /// Restart the high-water mark from the current live size. Returns
+    /// the live size, so `peak_bytes() - reset_peak()` after a region
+    /// is the region's net peak growth.
+    pub fn reset_peak() -> usize {
+        let live = ALLOC_CURRENT.load(Ordering::Relaxed);
+        ALLOC_PEAK.store(live, Ordering::Relaxed);
+        live
+    }
+}
+
+/// Run `f` once and return (result, seconds, net peak heap bytes) — the
+/// shared time/peak-memory bracket for dense-vs-ternary bench rows. The
+/// result passes through [`black_box`] so the measured region cannot be
+/// elided. Byte counts are meaningful only when [`PeakAlloc`] is
+/// installed as the binary's `#[global_allocator]`; otherwise they
+/// read 0.
+pub fn measure_peak<T>(f: impl FnOnce() -> T) -> (T, f64, u64) {
+    let baseline = PeakAlloc::reset_peak();
+    let t0 = Instant::now();
+    let out = f();
+    let secs = t0.elapsed().as_secs_f64();
+    let peak = PeakAlloc::peak_bytes().saturating_sub(baseline) as u64;
+    (black_box(out), secs, peak)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

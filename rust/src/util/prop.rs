@@ -47,6 +47,25 @@ pub fn sizes(rng: &mut Pcg) -> usize {
     }
 }
 
+/// Assert two [`ParamSet`](crate::tensor::ParamSet)s are *bit*-identical
+/// (names, shapes, and every f32's bit pattern — NaN-safe and
+/// signed-zero-strict, unlike `PartialEq`). The shared teeth of the
+/// engine equivalence suites (parallel-vs-serial, ternary-vs-dense).
+pub fn assert_paramset_bit_identical(
+    a: &crate::tensor::ParamSet,
+    b: &crate::tensor::ParamSet,
+    tag: &str,
+) {
+    assert_eq!(a.names(), b.names(), "{tag}: names");
+    for (name, ta) in a.iter() {
+        let tb = b.get(name).unwrap();
+        assert_eq!(ta.shape, tb.shape, "{tag}/{name}: shape");
+        for (i, (x, y)) in ta.data.iter().zip(&tb.data).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{tag}/{name}[{i}]: {x} vs {y}");
+        }
+    }
+}
+
 /// Generate a task-vector-like f32 buffer: mostly near-zero gaussian
 /// values with occasional large-magnitude entries, matching the
 /// statistics reported in the paper's Table 7.

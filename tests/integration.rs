@@ -13,11 +13,15 @@ use compeft::bench_support as bs;
 use compeft::compeft::compress::{
     compress_params, decompress_params, CompressConfig, Granularity,
 };
-use compeft::compeft::engine::{par_compress_paramset, par_decompress_params};
+use compeft::compeft::engine::{
+    par_compress_paramset, par_decompress_params, par_merge,
+};
 use compeft::compeft::format::{self, to_bytes, to_bytes_par, Encoding};
 use compeft::coordinator::batcher::BatchPolicy;
 use compeft::coordinator::registry::{scan_expert_npz, ExpertMethod, Registry};
 use compeft::coordinator::{Coordinator, CoordinatorConfig, LinkSpec};
+use compeft::merging::ternary::merge_ternary;
+use compeft::merging::{merge_dense, MergeMethod};
 use compeft::runtime::AdapterKind;
 use compeft::tensor::{ParamSet, Tensor};
 use compeft::util::pool::ThreadPool;
@@ -190,6 +194,112 @@ fn synthetic_registry_and_sizes() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Ternary-domain merging over the real wire: compress N synthetic
+/// experts, roundtrip each through `.cpeft` bytes, merge the decoded
+/// payloads without densifying them — and match the dense
+/// decompress-then-merge reference bit for bit, serial and pooled, for
+/// all four merge methods. This is the exact path a merged expert takes
+/// on a serving miss.
+#[test]
+fn synthetic_ternary_merge_matches_dense_over_wire() -> anyhow::Result<()> {
+    let tvs: Vec<ParamSet> =
+        (0..3).map(|i| synthetic_tv(41 + i, 12_000)).collect();
+    for granularity in [Granularity::Global, Granularity::PerTensor] {
+        let cfg = CompressConfig { density: 0.1, alpha: 1.0, granularity };
+        // Through the wire: encode + decode each member.
+        let members: Vec<_> = tvs
+            .iter()
+            .map(|tv| {
+                let bytes = to_bytes(&compress_params(tv, &cfg), Encoding::Golomb);
+                format::from_bytes(&bytes).map(|(c, _)| c)
+            })
+            .collect::<anyhow::Result<_>>()?;
+        let refs: Vec<&_> = members.iter().collect();
+        let dense: Vec<ParamSet> = members
+            .iter()
+            .zip(&tvs)
+            .map(|(c, tv)| decompress_params(c, tv))
+            .collect::<anyhow::Result<_>>()?;
+        for method in [
+            MergeMethod::Average,
+            MergeMethod::TaskArithmetic { lambda: 0.3 },
+            MergeMethod::Ties { density: 0.2, lambda: 1.0 },
+            MergeMethod::Weighted { weights: vec![0.8, -0.3, 0.5] },
+        ] {
+            let want = merge_dense(&dense, &method)?;
+            let serial = merge_ternary(&refs, &method)?;
+            assert_eq!(serial, want, "{granularity:?}/{method:?} serial");
+            for workers in [1usize, 2, 8] {
+                let pool = ThreadPool::new(workers);
+                let par = par_merge(&refs, &method, &pool)?;
+                assert_eq!(par, want, "{granularity:?}/{method:?} w={workers}");
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Composition records end to end without artifacts: register `.cpeft`
+/// experts + a composition over them, and check that what the loader
+/// pipeline materializes for the composition equals the dense
+/// reference merge of its members.
+#[test]
+fn synthetic_composition_registry_and_loader() -> anyhow::Result<()> {
+    use compeft::coordinator::loader::ExpertLoader;
+    use compeft::coordinator::SimLink;
+
+    let dir = fresh_dir("composition");
+    let mut reg = Registry::new();
+    let cfg = CompressConfig {
+        density: 0.2,
+        alpha: 1.0,
+        granularity: Granularity::Global,
+    };
+    let mut tvs = Vec::new();
+    for i in 0..2 {
+        let tv = synthetic_tv(60 + i, 6_000);
+        let npz = dir.join(format!("m{i}.lora.npz"));
+        tv.save_npz(&npz)?;
+        reg.register_compeft(&format!("m{i}"), "t", "s", ExpertMethod::Lora, &npz, &cfg)?;
+        tvs.push(tv);
+    }
+    let comp = reg
+        .register_composition(
+            "merged/ties",
+            &["m0", "m1"],
+            MergeMethod::Ties { density: 0.5, lambda: 0.8 },
+        )?
+        .clone();
+    assert_eq!(comp.method, ExpertMethod::Lora);
+
+    // The loader half of load_composed: fetch, decode ternary, merge.
+    let loader = ExpertLoader::new(
+        SimLink::new("net", LinkSpec::internet()).with_time_scale(0.0),
+        SimLink::new("pcie", LinkSpec::pcie()).with_time_scale(0.0),
+    )
+    .with_pool(std::sync::Arc::new(ThreadPool::new(4)));
+    let mut members = Vec::new();
+    for m in &comp.members {
+        let rec = reg.get(m).unwrap();
+        let (bytes, _) = loader.fetch_encoded(rec)?;
+        let (c, _) = loader.decode_compressed(rec, &bytes)?;
+        members.push(c);
+    }
+    let refs: Vec<&_> = members.iter().collect();
+    let (merged, _) = loader.merge_ternary(&refs, &comp.merge)?;
+
+    let dense: Vec<ParamSet> = members
+        .iter()
+        .zip(&tvs)
+        .map(|(c, tv)| decompress_params(c, tv))
+        .collect::<anyhow::Result<_>>()?;
+    let want = merge_dense(&dense, &comp.merge)?;
+    assert_eq!(merged, want);
+
+    std::fs::remove_dir_all(&dir).ok();
+    Ok(())
+}
+
 /// npz interchange on the synthetic fixture: what the Python exporter
 /// writes is what the Rust side reads (and vice versa).
 #[test]
@@ -328,6 +438,64 @@ fn coordinator_serves_compressed_experts() -> anyhow::Result<()> {
     // Both experts cannot fit: at least one swap beyond the first two loads.
     assert!(report.gpu.evictions >= 1, "expected evictions, got {:?}", report.gpu);
     assert!(report.net_bytes > 0);
+    Ok(())
+}
+
+/// Full serving path for a *merged* expert: a composition registered
+/// over two ComPEFT experts is materialized on demand (members pulled
+/// through the host tier, merged ternary-domain), cached as a
+/// first-class GPU resident, and answers requests alongside its
+/// members.
+#[test]
+fn coordinator_serves_merged_expert() -> anyhow::Result<()> {
+    let Some(dir) = artifacts() else { return Ok(()) };
+    let found = scan_expert_npz(&dir, "s")?;
+    let lora: Vec<_> = found
+        .iter()
+        .filter(|(t, m, _)| {
+            *m == ExpertMethod::Lora
+                && dir.join("eval").join(format!("task_{t}.npz")).exists()
+        })
+        .take(2)
+        .collect();
+    if lora.len() < 2 {
+        return Ok(());
+    }
+
+    let mut registry = Registry::new();
+    let cfg = CompressConfig { density: 0.2, alpha: 1.0, granularity: Granularity::Global };
+    for (task, m, path) in &lora {
+        registry.register_compeft(task, task, "s", *m, path, &cfg)?;
+    }
+    registry.register_composition(
+        "merged/avg",
+        &[lora[0].0.as_str(), lora[1].0.as_str()],
+        MergeMethod::Average,
+    )?;
+
+    let mut ccfg = CoordinatorConfig::new(dir.clone(), "s");
+    ccfg.policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) };
+    ccfg.time_scale = 0.0;
+    let coord = Coordinator::start(ccfg, registry)?;
+
+    // Interleave requests to a member and to the merged expert.
+    let set = bs::load_eval(&dir, &format!("task_{}", lora[0].0))?;
+    let mut pending = Vec::new();
+    for i in 0..4 {
+        let tokens = set.tokens[i * set.seq..(i + 1) * set.seq].to_vec();
+        pending.push(coord.submit("merged/avg", tokens.clone(), set.n_classes[i] as usize));
+        pending.push(coord.submit(&lora[0].0, tokens, set.n_classes[i] as usize));
+    }
+    for rx in pending {
+        let p = rx.recv()?;
+        assert!(p.timing.total > Duration::ZERO);
+    }
+    let m = coord.metrics();
+    assert_eq!(m.requests, 8);
+    let report = coord.shutdown()?;
+    // The merged expert moved member bytes over the net at least once.
+    assert!(report.net_bytes > 0);
+    assert!(report.batches >= 2);
     Ok(())
 }
 
