@@ -149,7 +149,7 @@ fn main() -> anyhow::Result<()> {
 
     // Adapter = init + Σ w_i tv_i; compose over tvs then add init.
     let materialize = |tv: &ParamSet| -> ParamSet {
-        let mut a = bundle.lora_init.clone();
+        let mut a = (*bundle.lora_init).clone();
         a.add_assign(tv).unwrap();
         a
     };

@@ -5,25 +5,169 @@
 //! (mean ± std), exactly mirroring the paper's protocol with our link
 //! models (DESIGN.md §3.5) over the real encoded bytes.
 //!
+//! Also measures the serving pipeline's prefetch-on vs prefetch-off
+//! cold-swap stall on a synthetic mixed stored+composed workload —
+//! artifact-free, so it runs in CI:
+//!
 //! Run: `cargo bench --bench table5_latency`
+//!      `cargo bench --bench table5_latency -- --quick` (prefetch +
+//!      decode rows only, no artifacts)
 
 use compeft::bench_support as bs;
 use compeft::compeft::compress::CompressConfig;
 use compeft::compeft::entropy::human_bytes;
+use compeft::coordinator::cache::LruTier;
 use compeft::coordinator::loader::ExpertLoader;
+use compeft::coordinator::metrics::Metrics;
 use compeft::coordinator::registry::{ExpertMethod, Registry};
 use compeft::coordinator::transport::{LinkSpec, SimLink};
-use compeft::tensor::ParamSet;
+use compeft::coordinator::{PrepareContext, PreparedExpert, Prefetcher, TakeOutcome};
+use compeft::merging::MergeMethod;
+use compeft::tensor::{ParamSet, Tensor};
 use compeft::util::bench::Bench;
 use compeft::util::pool::ThreadPool;
+use compeft::util::rng::Pcg;
 use compeft::util::stats;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 const REPS: usize = 10;
 
+/// Prefetch-on vs prefetch-off: replay the same cold-swap sequence
+/// (every step needs a fetch+decode; the workload cycles 4 stored
+/// experts and a ternary-domain composition) through the actual
+/// pipeline components at `time_scale = 0`. Off pays fetch+decode on
+/// the "engine" thread each step; on overlaps them with the previous
+/// step's (simulated) batch execution, paying only pickup + upload.
+fn prefetch_comparison(bench: &mut Bench, quick: bool) -> anyhow::Result<()> {
+    let elems: usize = if quick { 1 << 18 } else { 1 << 20 };
+    let steps = 12usize;
+    let depth = 2usize;
+
+    let dir = std::env::temp_dir()
+        .join(format!("compeft_t5_prefetch_{}", std::process::id()));
+    std::fs::create_dir_all(&dir)?;
+    let mut reg = Registry::new();
+    let ccfg = CompressConfig { density: 0.1, alpha: 1.0, ..Default::default() };
+    let mut rng = Pcg::seed(2026);
+    let mut shape_like = None;
+    for i in 0..4 {
+        let data: Vec<f32> =
+            (0..elems).map(|_| rng.normal_ms(0.0, 7e-4) as f32).collect();
+        let mut tv = ParamSet::new();
+        tv.insert("w.lora_a", Tensor::new(vec![elems], data));
+        let npz = dir.join(format!("e{i}.lora.npz"));
+        tv.save_npz(&npz)?;
+        reg.register_compeft(&format!("e{i}"), "t", "s", ExpertMethod::Lora, &npz, &ccfg)?;
+        shape_like.get_or_insert(tv);
+    }
+    reg.register_composition(
+        "merged",
+        &["e0", "e1", "e2"],
+        MergeMethod::Ties { density: 0.4, lambda: 1.0 },
+    )?;
+    let reg = Arc::new(reg);
+    let templates = bs::zero_templates(&shape_like.unwrap());
+    let targets = ["e0", "e1", "merged", "e2", "e3"];
+    let workload: Vec<&str> = (0..steps).map(|i| targets[i % targets.len()]).collect();
+
+    let mk_ctx = || -> Arc<PrepareContext> {
+        Arc::new(PrepareContext {
+            loader: ExpertLoader::new(
+                SimLink::new("net", LinkSpec::internet()).with_time_scale(0.0),
+                SimLink::new("pcie", LinkSpec::pcie()).with_time_scale(0.0),
+            )
+            .with_pool(Arc::new(ThreadPool::new(4))),
+            registry: Arc::clone(&reg),
+            templates: templates.clone(),
+            cpu: Arc::new(Mutex::new(LruTier::new("cpu", 256 << 20))),
+        })
+    };
+
+    // Calibrate the simulated batch-execution time to one blocking
+    // fetch+decode, the regime where lookahead can hide a swap fully.
+    let exec_time = {
+        let ctx = mk_ctx();
+        let t0 = Instant::now();
+        let _ = ctx.prepare("e0")?;
+        t0.elapsed()
+    };
+
+    // Prefetch off: every step pays the stages on the engine thread.
+    let mut stall_off = Duration::ZERO;
+    {
+        let ctx = mk_ctx();
+        for id in &workload {
+            let t0 = Instant::now();
+            let p: PreparedExpert = ctx.prepare(id)?;
+            stall_off += t0.elapsed();
+            std::mem::drop(p); // "upload + execute"
+            std::thread::sleep(exec_time);
+        }
+    }
+
+    // Prefetch on: stages overlap the previous step's execution.
+    let mut stall_on = Duration::ZERO;
+    let metrics = Arc::new(Metrics::new());
+    {
+        let ctx = mk_ctx();
+        let pf = Prefetcher::start(Arc::clone(&ctx), depth, u64::MAX, Arc::clone(&metrics));
+        for (i, id) in workload.iter().enumerate() {
+            let t0 = Instant::now();
+            let p = match pf.take(id) {
+                TakeOutcome::Hit(p) | TakeOutcome::Waited(p, _) => p,
+                TakeOutcome::Miss => ctx.prepare(id)?,
+                TakeOutcome::Failed(e) => anyhow::bail!("prefetch failed: {e}"),
+            };
+            stall_on += t0.elapsed();
+            std::mem::drop(p);
+            let upcoming: Vec<String> =
+                workload[i + 1..].iter().take(depth).map(|s| s.to_string()).collect();
+            pf.note_plan(upcoming);
+            std::thread::sleep(exec_time);
+        }
+    }
+    let snap = metrics.snapshot();
+    bench.row(
+        "prefetch/cold_swap_stall",
+        &[
+            ("elems", elems as f64),
+            ("steps", steps as f64),
+            ("exec_ms", exec_time.as_secs_f64() * 1e3),
+            ("stall_off_ms", stall_off.as_secs_f64() * 1e3),
+            ("stall_on_ms", stall_on.as_secs_f64() * 1e3),
+            (
+                "stall_hidden_x",
+                stall_off.as_secs_f64() / stall_on.as_secs_f64().max(1e-9),
+            ),
+            ("hits", snap.prefetch_hits as f64),
+            ("waits", snap.prefetch_waits as f64),
+            ("misses", snap.prefetch_misses as f64),
+            ("overlap_saved_ms", snap.overlap_saved_us as f64 / 1e3),
+        ],
+    );
+    println!(
+        "prefetch pipeline: engine-thread swap stall {:.1}ms -> {:.1}ms over {} cold \
+         swaps ({} staged hits, {} waited, {} misses)",
+        stall_off.as_secs_f64() * 1e3,
+        stall_on.as_secs_f64() * 1e3,
+        steps,
+        snap.prefetch_hits,
+        snap.prefetch_waits,
+        snap.prefetch_misses,
+    );
+    std::fs::remove_dir_all(&dir).ok();
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
-    let artifacts = bs::require_artifacts();
+    let quick = std::env::args().any(|a| a == "--quick");
     let mut bench = Bench::new("table5");
+    prefetch_comparison(&mut bench, quick)?;
+    if quick {
+        return Ok(());
+    }
+    let artifacts = bs::require_artifacts();
 
     let mut largest_npz = None;
     for scale in ["xs", "s", "m", "l"] {

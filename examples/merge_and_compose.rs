@@ -109,7 +109,7 @@ fn main() -> Result<()> {
         &EsConfig { budget: 80, restarts: 2, l1: 0.05, ..Default::default() },
         &mut rng,
         |tv| {
-            let mut adapter = bundle.lora_init.clone();
+            let mut adapter = (*bundle.lora_init).clone();
             adapter.add_assign(tv).unwrap();
             fewshot_loss(&bundle, AdapterKind::Lora, bs::EVAL_BATCH, &adapter, &fewshot)
                 .unwrap_or(f64::INFINITY)

@@ -142,10 +142,17 @@ fn main() -> Result<()> {
             m.swap_mean_us / 1e3
         );
         println!(
-            "  bytes moved: net {}  pcie {}  gpu residents {}\n",
+            "  bytes moved: net {}  pcie {}  gpu residents {}",
             human_bytes(report.net_bytes),
             human_bytes(report.pcie_bytes),
             report.gpu.entries
+        );
+        println!(
+            "  prefetch: {} hits / {} waits / {} misses, overlap saved {:.2?}\n",
+            report.prefetch_hits,
+            report.prefetch_waits,
+            report.prefetch_misses,
+            report.overlap_saved
         );
         summary.push((
             format,

@@ -48,6 +48,23 @@ pub fn require_artifacts() -> PathBuf {
     dir
 }
 
+/// All-zeros [`Templates`](crate::coordinator::pipeline::Templates)
+/// matching the shapes of `like` — the artifact-free stand-in for a
+/// model bundle's adapter inits, shared by the pipeline equivalence
+/// tests and the `table5_latency` prefetch bench.
+pub fn zero_templates(like: &ParamSet) -> crate::coordinator::pipeline::Templates {
+    let mut z = ParamSet::new();
+    for (name, t) in like.iter() {
+        z.insert(name, crate::tensor::Tensor::zeros(t.shape.clone()));
+    }
+    let z = std::sync::Arc::new(z);
+    crate::coordinator::pipeline::Templates {
+        base: std::sync::Arc::clone(&z),
+        lora_init: std::sync::Arc::clone(&z),
+        ia3_init: z,
+    }
+}
+
 /// A loaded expert task vector + its metadata.
 #[derive(Clone, Debug)]
 pub struct Expert {
@@ -97,9 +114,9 @@ pub fn kind_and_init<'a>(
     method: ExpertMethod,
 ) -> (AdapterKind, &'a ParamSet) {
     match method {
-        ExpertMethod::Lora => (AdapterKind::Lora, &bundle.lora_init),
-        ExpertMethod::Ia3 => (AdapterKind::Ia3, &bundle.ia3_init),
-        ExpertMethod::Full => (AdapterKind::Base, &bundle.base),
+        ExpertMethod::Lora => (AdapterKind::Lora, &*bundle.lora_init),
+        ExpertMethod::Ia3 => (AdapterKind::Ia3, &*bundle.ia3_init),
+        ExpertMethod::Full => (AdapterKind::Base, &*bundle.base),
     }
 }
 
@@ -113,7 +130,7 @@ pub fn eval_tv(
     let (kind, init) = kind_and_init(bundle, method);
     match method {
         ExpertMethod::Full => {
-            let mut params = bundle.base.clone();
+            let mut params = (*bundle.base).clone();
             params.add_assign(tv)?;
             evaluate(bundle, kind, EVAL_BATCH, None, Some(&params), set)
         }

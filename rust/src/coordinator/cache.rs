@@ -7,8 +7,29 @@
 //! a tier's byte budget is exceeded — smaller (ComPEFT) experts ⇒ more
 //! experts per tier ⇒ fewer evictions and cheaper refills, which is the
 //! mechanism behind the paper's latency claims.
+//!
+//! Entries can be **pinned** ([`LruTier::pin`]): the prefetch pipeline
+//! pins an expert's encoded bytes in the host tier while a background
+//! decode is in flight, so concurrent inserts cannot evict the payload
+//! mid-decode. Pinned entries are passed over by the eviction scan; if
+//! only pinned entries remain, an insert is admitted over budget.
 
 use std::collections::HashMap;
+
+#[derive(Debug)]
+struct Entry<V> {
+    value: V,
+    bytes: u64,
+    last_use: u64,
+    /// Pin count. Entries with `pins > 0` are exempt from LRU eviction
+    /// — the prefetch pipeline pins an expert's encoded bytes while a
+    /// background decode is in flight so a concurrent insert cannot
+    /// evict the payload out from under it. A count (not a flag):
+    /// several concurrent prepares may pin the same id (e.g. a stored
+    /// expert and a composition sharing it as a member), and one
+    /// finishing must not unpin the others.
+    pins: u32,
+}
 
 /// An LRU map with a byte budget.
 #[derive(Debug)]
@@ -17,7 +38,7 @@ pub struct LruTier<V> {
     capacity_bytes: u64,
     used_bytes: u64,
     clock: u64,
-    entries: HashMap<String, (V, u64, u64)>, // value, bytes, last_use
+    entries: HashMap<String, Entry<V>>,
     hits: u64,
     misses: u64,
     evictions: u64,
@@ -66,10 +87,10 @@ impl<V> LruTier<V> {
         self.clock += 1;
         let clock = self.clock;
         match self.entries.get_mut(id) {
-            Some((v, _, last)) => {
-                *last = clock;
+            Some(e) => {
+                e.last_use = clock;
                 self.hits += 1;
-                Some(&*v)
+                Some(&e.value)
             }
             None => {
                 self.misses += 1;
@@ -78,44 +99,84 @@ impl<V> LruTier<V> {
         }
     }
 
+    /// Pin an entry (incrementing its pin count): pinned entries are
+    /// never chosen for LRU eviction (an over-budget insert admits over
+    /// budget rather than evict a pinned entry). Returns false when the
+    /// id is not resident.
+    pub fn pin(&mut self, id: &str) -> bool {
+        match self.entries.get_mut(id) {
+            Some(e) => {
+                e.pins += 1;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Drop one pin; the entry becomes evictable again when the last
+    /// pin is released. Returns false when the id is not resident.
+    pub fn unpin(&mut self, id: &str) -> bool {
+        match self.entries.get_mut(id) {
+            Some(e) => {
+                e.pins = e.pins.saturating_sub(1);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Number of currently pinned entries.
+    pub fn pinned_count(&self) -> usize {
+        self.entries.values().filter(|e| e.pins > 0).count()
+    }
+
     /// Insert, evicting LRU entries as needed. Returns evicted
     /// (id, value, bytes) tuples (for demotion to a lower tier). When
     /// `id` was already resident, its displaced value is returned
-    /// first, ahead of any LRU evictions.
+    /// first, ahead of any LRU evictions. Pinned entries are skipped by
+    /// the eviction scan; when only pinned entries remain, the insert
+    /// is admitted over budget (mirroring the singleton case) so an
+    /// in-flight prefetch can never lose its source bytes.
     pub fn insert(&mut self, id: &str, value: V, bytes: u64) -> Vec<(String, V, u64)> {
         let mut evicted = Vec::new();
         // Displace any existing copy first — and *return* it: silently
         // dropping it meant a re-registered expert's prior resident
         // never demoted to the lower tier, unlike every other entry
         // this insert pushes out.
-        if let Some((old, old_bytes, _)) = self.entries.remove(id) {
-            self.used_bytes -= old_bytes;
-            evicted.push((id.to_string(), old, old_bytes));
+        if let Some(old) = self.entries.remove(id) {
+            self.used_bytes -= old.bytes;
+            evicted.push((id.to_string(), old.value, old.bytes));
         }
         while self.used_bytes + bytes > self.capacity_bytes && !self.entries.is_empty() {
-            // Find LRU.
+            // Find the LRU entry among unpinned candidates.
             let victim = self
                 .entries
                 .iter()
-                .min_by_key(|(_, (_, _, last))| *last)
-                .map(|(k, _)| k.clone())
-                .unwrap();
-            let (v, b, _) = self.entries.remove(&victim).unwrap();
-            self.used_bytes -= b;
+                .filter(|(_, e)| e.pins == 0)
+                .min_by_key(|(_, e)| e.last_use)
+                .map(|(k, _)| k.clone());
+            let Some(victim) = victim else {
+                break; // everything left is pinned: admit over budget
+            };
+            let e = self.entries.remove(&victim).unwrap();
+            self.used_bytes -= e.bytes;
             self.evictions += 1;
-            evicted.push((victim, v, b));
+            evicted.push((victim, e.value, e.bytes));
         }
         self.clock += 1;
-        self.entries.insert(id.to_string(), (value, bytes, self.clock));
+        self.entries.insert(
+            id.to_string(),
+            Entry { value, bytes, last_use: self.clock, pins: 0 },
+        );
         self.used_bytes += bytes;
         evicted
     }
 
     /// Remove a specific entry.
     pub fn remove(&mut self, id: &str) -> Option<(V, u64)> {
-        self.entries.remove(id).map(|(v, b, _)| {
-            self.used_bytes -= b;
-            (v, b)
+        self.entries.remove(id).map(|e| {
+            self.used_bytes -= e.bytes;
+            (e.value, e.bytes)
         })
     }
 
@@ -214,6 +275,81 @@ mod tests {
         assert_eq!(t.get("a"), Some(&3));
         // Eviction counters track only true LRU evictions.
         assert_eq!(t.stats().evictions, 1);
+    }
+
+    /// Pinning contract for the prefetch pipeline: a pinned entry
+    /// survives inserts that would otherwise evict it (the tier admits
+    /// over budget instead), and unpinning restores evictability.
+    #[test]
+    fn pinned_entries_survive_over_budget_insert() {
+        let mut t: LruTier<i32> = LruTier::new("cpu", 100);
+        t.insert("decoding", 1, 60);
+        assert!(t.pin("decoding"));
+        assert_eq!(t.pinned_count(), 1);
+        assert!(!t.pin("absent"), "pin of a missing id reports false");
+
+        // The insert needs 60 bytes freed, but the only candidate is
+        // pinned: nothing is evicted and the tier runs over budget.
+        let ev = t.insert("newcomer", 2, 60);
+        assert!(ev.is_empty(), "pinned entry must not be evicted");
+        assert!(t.contains("decoding") && t.contains("newcomer"));
+        assert_eq!(t.used_bytes(), 120);
+        assert_eq!(t.stats().evictions, 0);
+
+        // With an unpinned sibling present, eviction passes over the
+        // pinned entry even when it is the least recently used.
+        t.get("newcomer"); // "decoding" is now strictly LRU
+        let ev = t.insert("third", 3, 40);
+        assert_eq!(ev.len(), 1, "the unpinned sibling goes; pinned stays");
+        assert_eq!(ev[0].0, "newcomer");
+        assert!(t.contains("decoding"));
+
+        // Unpin: the entry becomes a normal LRU citizen again.
+        assert!(t.unpin("decoding"));
+        assert_eq!(t.pinned_count(), 0);
+        let ev = t.insert("fourth", 4, 90);
+        assert!(
+            ev.iter().any(|(id, _, _)| id == "decoding"),
+            "unpinned entry is evictable again: {ev:?}"
+        );
+    }
+
+    #[test]
+    fn replacing_a_pinned_id_clears_the_pin() {
+        let mut t: LruTier<i32> = LruTier::new("cpu", 100);
+        t.insert("a", 1, 40);
+        t.pin("a");
+        let displaced = t.insert("a", 2, 40);
+        assert_eq!(displaced, vec![("a".to_string(), 1, 40)]);
+        assert_eq!(t.pinned_count(), 0, "fresh insert starts unpinned");
+    }
+
+    /// Pins are a count, not a flag: two concurrent prepares pinning
+    /// the same id (a stored expert also serving as a composition
+    /// member) must both release before the entry is evictable.
+    #[test]
+    fn pins_are_refcounted() {
+        let mut t: LruTier<i32> = LruTier::new("cpu", 100);
+        t.insert("shared", 1, 60);
+        t.pin("shared");
+        t.pin("shared");
+        t.unpin("shared"); // first prepare finished; second still running
+        assert_eq!(t.pinned_count(), 1);
+        let ev = t.insert("other", 2, 60);
+        assert!(ev.is_empty(), "entry with a live pin must survive");
+        assert!(t.contains("shared"));
+        t.unpin("shared"); // last pin released
+        assert_eq!(t.pinned_count(), 0);
+        let ev = t.insert("third", 3, 60);
+        assert!(
+            ev.iter().any(|(id, _, _)| id == "shared"),
+            "fully unpinned entry is evictable: {ev:?}"
+        );
+        // Underflow guard: spurious extra unpin stays at zero.
+        t.insert("z", 9, 1);
+        t.unpin("z");
+        t.unpin("z");
+        assert_eq!(t.pinned_count(), 0);
     }
 
     #[test]

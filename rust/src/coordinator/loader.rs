@@ -12,6 +12,29 @@
 //! faster swaps (paper Table 5). Decode (Golomb → ternary → dense
 //! adapter) happens host-side and is measured separately.
 //!
+//! ## Stages
+//!
+//! A swap-in decomposes into three explicit stages, and the methods
+//! here map onto them one-to-one so callers can run each stage on the
+//! thread that owns its resources:
+//!
+//! 1. **fetch** — [`ExpertLoader::fetch_encoded`]: net link → encoded
+//!    bytes. Thread-agnostic; safe from background prefetch threads
+//!    (the [`SimLink`] serializes concurrent transfers like one NIC).
+//! 2. **decode** — [`ExpertLoader::decode`] /
+//!    [`ExpertLoader::decode_compressed`] + [`ExpertLoader::merge_ternary`]
+//!    + [`ExpertLoader::materialize`]: encoded bytes → dense host-side
+//!    parameters. Pool-parallel, thread-agnostic, bit-identical at any
+//!    worker count.
+//! 3. **upload** — [`ExpertLoader::upload_cost`] plus the device-buffer
+//!    creation in `server.rs`: PCIe hop + PjRt buffers. **Engine-thread
+//!    only** (PjRt buffers are not `Send`).
+//!
+//! The serving engine's prefetcher ([`crate::coordinator::pipeline`])
+//! runs stages 1–2 for *upcoming* experts on background threads while
+//! the engine thread executes the current batch, leaving only the
+//! upload hop on the swap critical path.
+//!
 //! With a thread pool attached ([`ExpertLoader::with_pool`]) the
 //! decode half scales with cores: `.cpeft` v2 frame tables let
 //! [`format::from_bytes_par`] split the Golomb payload across workers,
@@ -34,6 +57,11 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Loads expert checkpoints over simulated links.
+///
+/// Cloning is cheap (shared links + shared decode pool) and is how the
+/// prefetch pipeline hands the fetch/decode stages to background
+/// threads while the engine thread keeps its own handle for uploads.
+#[derive(Clone)]
 pub struct ExpertLoader {
     /// Remote → host link (internet or disk, depending on deployment).
     pub net: SimLink,

@@ -15,6 +15,23 @@ struct Inner {
     batches: u64,
     swaps: u64,
     batch_fill: u64, // sum of batch sizes, for mean fill
+    /// Requests dropped without a reply: unknown expert, expert load
+    /// failure, exec-error leftovers, malformed submits.
+    rejected: u64,
+    /// Swaps fully served from the prefetch staging slot (fetch+decode
+    /// already done off the engine thread; only the upload hop paid).
+    prefetch_hits: u64,
+    /// Swaps that found the prefetch in flight and waited for it
+    /// (partial overlap).
+    prefetch_waits: u64,
+    /// Cold swaps the prefetcher had not staged (engine ran the full
+    /// blocking fetch→decode path).
+    prefetch_misses: u64,
+    /// Staged experts dropped unused (plan changed / staging budget).
+    prefetch_wasted: u64,
+    /// Simulated fetch+decode time removed from the engine critical
+    /// path by prefetching, in µs (the "overlap time saved" counter).
+    overlap_saved_us: u64,
     queue: LogHistogram,
     swap: LogHistogram,
     exec: LogHistogram,
@@ -63,12 +80,52 @@ impl Metrics {
         }
     }
 
+    /// Count `n` requests dropped without a reply (unknown expert,
+    /// load failure, exec-error leftovers, malformed submits).
+    pub fn record_rejected(&self, n: u64) {
+        self.inner.lock().unwrap().rejected += n;
+    }
+
+    /// A cold swap fully served from the staging slot; `saved` is the
+    /// simulated fetch+decode time kept off the engine critical path.
+    pub fn record_prefetch_hit(&self, saved: Duration) {
+        let mut g = self.inner.lock().unwrap();
+        g.prefetch_hits += 1;
+        g.overlap_saved_us += saved.as_micros() as u64;
+    }
+
+    /// A cold swap that found its prefetch still in flight and waited
+    /// for it. Credited **zero** overlap savings: how much of the
+    /// staged cost was already hidden when the engine arrived cannot be
+    /// split between the sim and wall clocks, so the whole staged cost
+    /// is charged to the request like a miss — prefetch-on latency is
+    /// never flattered by partial overlaps.
+    pub fn record_prefetch_wait(&self) {
+        self.inner.lock().unwrap().prefetch_waits += 1;
+    }
+
+    /// A cold swap the prefetcher had not staged.
+    pub fn record_prefetch_miss(&self) {
+        self.inner.lock().unwrap().prefetch_misses += 1;
+    }
+
+    /// `n` staged experts dropped unused.
+    pub fn record_prefetch_wasted(&self, n: u64) {
+        self.inner.lock().unwrap().prefetch_wasted += n;
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let g = self.inner.lock().unwrap();
         MetricsSnapshot {
             requests: g.requests,
             batches: g.batches,
             swaps: g.swaps,
+            rejected: g.rejected,
+            prefetch_hits: g.prefetch_hits,
+            prefetch_waits: g.prefetch_waits,
+            prefetch_misses: g.prefetch_misses,
+            prefetch_wasted: g.prefetch_wasted,
+            overlap_saved_us: g.overlap_saved_us,
             mean_batch_fill: if g.batches == 0 {
                 0.0
             } else {
@@ -91,6 +148,18 @@ pub struct MetricsSnapshot {
     pub requests: u64,
     pub batches: u64,
     pub swaps: u64,
+    /// Requests dropped without a reply.
+    pub rejected: u64,
+    /// Cold swaps served entirely from the prefetch staging slot.
+    pub prefetch_hits: u64,
+    /// Cold swaps that waited on an in-flight prefetch.
+    pub prefetch_waits: u64,
+    /// Cold swaps with nothing staged (full blocking path).
+    pub prefetch_misses: u64,
+    /// Staged experts dropped unused.
+    pub prefetch_wasted: u64,
+    /// Simulated fetch+decode time hidden behind batch execution, µs.
+    pub overlap_saved_us: u64,
     pub mean_batch_fill: f64,
     pub queue_p50_us: f64,
     pub total_p50_us: f64,
@@ -107,6 +176,12 @@ impl MetricsSnapshot {
         j.set("requests", Json::num(self.requests as f64))
             .set("batches", Json::num(self.batches as f64))
             .set("swaps", Json::num(self.swaps as f64))
+            .set("rejected", Json::num(self.rejected as f64))
+            .set("prefetch_hits", Json::num(self.prefetch_hits as f64))
+            .set("prefetch_waits", Json::num(self.prefetch_waits as f64))
+            .set("prefetch_misses", Json::num(self.prefetch_misses as f64))
+            .set("prefetch_wasted", Json::num(self.prefetch_wasted as f64))
+            .set("overlap_saved_us", Json::num(self.overlap_saved_us as f64))
             .set("mean_batch_fill", Json::num(self.mean_batch_fill))
             .set("total_p50_us", Json::num(self.total_p50_us))
             .set("total_p95_us", Json::num(self.total_p95_us))
@@ -145,5 +220,34 @@ mod tests {
         assert!(s.total_mean_us > 250.0);
         let j = s.to_json().to_string();
         assert!(j.contains("\"requests\":100"));
+    }
+
+    /// The rejected counter and the prefetch overlap counters survive
+    /// the snapshot + JSON paths (regression for the unknown-expert
+    /// branch that claimed "metrics still count them" but recorded
+    /// nothing).
+    #[test]
+    fn rejected_and_prefetch_counters_round_trip() {
+        let m = Metrics::new();
+        m.record_rejected(3);
+        m.record_rejected(2);
+        m.record_prefetch_hit(Duration::from_micros(1500));
+        // Waits are counted but credited no overlap savings (the whole
+        // staged cost is charged to the request, like a miss).
+        m.record_prefetch_wait();
+        m.record_prefetch_wait();
+        m.record_prefetch_miss();
+        m.record_prefetch_wasted(4);
+        let s = m.snapshot();
+        assert_eq!(s.rejected, 5);
+        assert_eq!(s.prefetch_hits, 1);
+        assert_eq!(s.prefetch_waits, 2);
+        assert_eq!(s.prefetch_misses, 1);
+        assert_eq!(s.prefetch_wasted, 4);
+        assert_eq!(s.overlap_saved_us, 1500);
+        let j = s.to_json().to_string();
+        assert!(j.contains("\"rejected\":5"));
+        assert!(j.contains("\"prefetch_hits\":1"));
+        assert!(j.contains("\"overlap_saved_us\":1500"));
     }
 }

@@ -3,20 +3,24 @@
 //!
 //! * [`registry`] — expert catalog (formats, encoded sizes)
 //! * [`transport`] — simulated internet/disk/PCIe links over real bytes
-//! * [`cache`] — byte-budgeted LRU tiers (GPU / CPU)
-//! * [`loader`] — fetch → decode → materialize pipeline
-//! * [`batcher`] — per-expert dynamic batching
+//! * [`cache`] — byte-budgeted LRU tiers (GPU / CPU), with pinning
+//! * [`loader`] — the fetch → decode → upload stages of a swap
+//! * [`batcher`] — per-expert dynamic batching + queue-plan lookahead
+//! * [`pipeline`] — prefetch-and-stage pipeline (background fetch+decode
+//!   overlapped with batch execution)
 //! * [`server`] — the engine thread + public [`server::Coordinator`] API
-//! * [`metrics`] — latency histograms, swap/throughput counters
+//! * [`metrics`] — latency histograms, swap/prefetch/throughput counters
 
 pub mod batcher;
 pub mod cache;
 pub mod loader;
 pub mod metrics;
+pub mod pipeline;
 pub mod registry;
 pub mod server;
 pub mod transport;
 
+pub use pipeline::{PrepareContext, PreparedExpert, Prefetcher, TakeOutcome, Templates};
 pub use registry::{
     CompositionRecord, ExpertFormat, ExpertMethod, ExpertRecord, Registry,
 };

@@ -1,0 +1,875 @@
+//! Prefetch-and-stage pipeline: overlap expert fetch/decode with batch
+//! execution.
+//!
+//! The blocking serving loop paid the full swap on the critical path:
+//! net fetch → decode → PCIe upload, serially, on the engine thread —
+//! even when the batcher's queues made the next expert perfectly
+//! predictable. This module splits a swap into its three stages (see
+//! `loader.rs`) and runs the first two *ahead of time* on background
+//! threads:
+//!
+//! ```text
+//!                 engine thread            prefetch threads
+//!                 ─────────────            ────────────────
+//!   batch N       execute ───────────┐     fetch(N+1) → decode(N+1)
+//!                                    │     fetch(N+2) → decode(N+2)
+//!   batch N+1     take(N+1) ✓ upload ┘     ...
+//! ```
+//!
+//! * [`PrepareContext`] — runs stages 1–2 (fetch via the shared host
+//!   tier, decode/merge, materialize) for a stored *or composed* expert
+//!   id, producing a [`PreparedExpert`]. Thread-agnostic: the engine
+//!   uses it as the blocking fallback, the prefetcher from background
+//!   threads.
+//! * [`StagingArea`] — byte-budgeted slot map of decoded-and-ready
+//!   experts between the prefetch threads and the engine.
+//! * [`Prefetcher`] — background workers that watch the batcher's
+//!   [`plan`](crate::coordinator::batcher::Batcher::plan) lookahead and
+//!   keep the staging slots warm.
+//!
+//! Every stage is deterministic (decode and merge are bit-identical at
+//! any pool size), so prefetching changes *when* work happens, never
+//! what is served: predictions are identical with the prefetcher on or
+//! off, at any `prefetch_depth` and any decode-worker count — enforced
+//! by the equivalence suites here and in `tests/integration.rs`.
+
+use crate::coordinator::cache::LruTier;
+use crate::coordinator::loader::ExpertLoader;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::registry::{
+    CompositionRecord, ExpertMethod, ExpertRecord, Registry,
+};
+use crate::tensor::ParamSet;
+use anyhow::{anyhow, Result};
+use std::collections::{HashMap, HashSet};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Adapter-init templates for each expert method, `Arc`-shared with the
+/// model bundle's host-side parameter sets so the decode stage never
+/// needs the (engine-thread-only) runtime objects — and never copies
+/// the base model.
+#[derive(Clone)]
+pub struct Templates {
+    /// Base parameters (template + init for `Full` experts).
+    pub base: Arc<ParamSet>,
+    pub lora_init: Arc<ParamSet>,
+    pub ia3_init: Arc<ParamSet>,
+}
+
+impl Templates {
+    /// Template/init for one expert method (fixes names and shapes for
+    /// decode, and is the init the task vector is added onto).
+    pub fn for_method(&self, method: ExpertMethod) -> &ParamSet {
+        match method {
+            ExpertMethod::Lora => &*self.lora_init,
+            ExpertMethod::Ia3 => &*self.ia3_init,
+            ExpertMethod::Full => &*self.base,
+        }
+    }
+}
+
+/// A decoded-and-ready expert: everything a swap needs except the
+/// engine-thread-only upload hop (PjRt buffers are not `Send`).
+pub struct PreparedExpert {
+    pub id: String,
+    pub method: ExpertMethod,
+    /// Fully materialized host-side parameters: adapter init + task
+    /// vector (adapter families), or base + task vector (`Full`).
+    pub params: ParamSet,
+    /// What the fetch+decode stages would have cost on the engine
+    /// critical path (simulated fetch + real decode/merge time) — the
+    /// time a staging hit removes from the swap.
+    pub staged_sim: Duration,
+    /// Bytes the upload stage moves over PCIe: the encoded checkpoint
+    /// for stored experts (decode-on-device model, paper §2.2), the
+    /// dense fp16 update for merged experts (no compact wire form).
+    pub upload_bytes: u64,
+    /// fp16 accounting of the device-resident form (GPU-tier charge).
+    pub dense_bytes: u64,
+}
+
+/// Shared inputs of the fetch+decode stages: loader (links + decode
+/// pool), expert catalog, adapter templates, and the host (CPU) tier
+/// for encoded bytes — everything is `Sync`, so one context serves the
+/// engine thread and every prefetch thread.
+pub struct PrepareContext {
+    pub loader: ExpertLoader,
+    pub registry: Arc<Registry>,
+    pub templates: Templates,
+    /// Host tier of encoded checkpoint bytes, shared across threads.
+    /// Values are `Arc`-shared so a tier hit hands out the payload
+    /// without copying megabytes under the lock — and so eviction can
+    /// never touch data a decode is reading. Entries are additionally
+    /// pinned while a decode is in flight, keeping the bytes
+    /// tier-resident (no refetch) until the decode completes.
+    pub cpu: Arc<Mutex<LruTier<Arc<Vec<u8>>>>>,
+}
+
+impl PrepareContext {
+    /// Run the fetch+decode stages for `id` (stored or composed),
+    /// producing a [`PreparedExpert`]. Deterministic: the result is
+    /// bit-identical no matter which thread runs it or how large the
+    /// decode pool is.
+    pub fn prepare(&self, id: &str) -> Result<PreparedExpert> {
+        if let Some(rec) = self.registry.get(id) {
+            self.prepare_stored(rec)
+        } else if let Some(comp) = self.registry.composition(id) {
+            self.prepare_composed(comp)
+        } else {
+            Err(anyhow!("unknown expert {id:?}"))
+        }
+    }
+
+    /// Fetch an expert's encoded bytes through the shared host tier,
+    /// charging the net link only on a miss. The payload comes back as
+    /// a shared `Arc` (no megabyte copies under the tier lock; eviction
+    /// can never touch data a decode is reading) and the returned
+    /// [`PinGuard`] keeps the tier entry resident until dropped — even
+    /// if the caller's decode panics (the guard unpins on unwind).
+    fn fetch_via_cpu_tier<'a>(
+        &'a self,
+        rec: &ExpertRecord,
+    ) -> Result<(Arc<Vec<u8>>, Duration, PinGuard<'a>)> {
+        {
+            let mut cpu = self.cpu.lock().unwrap();
+            if let Some(b) = cpu.get(&rec.id) {
+                let bytes = Arc::clone(b);
+                cpu.pin(&rec.id);
+                return Ok((bytes, Duration::ZERO, PinGuard::new(&self.cpu, &rec.id)));
+            }
+        }
+        // The net transfer runs outside the tier lock so concurrent
+        // prepares serialize on the link (one NIC), not on the tier.
+        // Two prepares racing on the same id (an expert that is both
+        // served directly and a composition member) may thus both pay
+        // the fetch — ordinary link contention — but the tier insert
+        // must be idempotent: replacing the entry another thread just
+        // inserted would strip its pins (LruTier replacement resets the
+        // pin count) and void the stays-resident-mid-decode guarantee.
+        let (bytes, fetch) = self.loader.fetch_encoded(rec)?;
+        let bytes = Arc::new(bytes);
+        let mut cpu = self.cpu.lock().unwrap();
+        if !cpu.contains(&rec.id) {
+            cpu.insert(&rec.id, Arc::clone(&bytes), rec.encoded_bytes.max(1));
+        }
+        cpu.pin(&rec.id);
+        drop(cpu);
+        Ok((bytes, fetch, PinGuard::new(&self.cpu, &rec.id)))
+    }
+
+    fn prepare_stored(&self, rec: &ExpertRecord) -> Result<PreparedExpert> {
+        let (bytes, fetch, pin) = self.fetch_via_cpu_tier(rec)?;
+        let template = self.templates.for_method(rec.method);
+        // The encoded bytes stay pinned in the host tier while this
+        // decode runs: a concurrent prefetch insert cannot push them
+        // out and force upcoming users of the same expert to refetch.
+        let (tv, decode) = self.loader.decode(rec, bytes.as_slice(), template)?;
+        drop(pin);
+        let params = self.loader.materialize(rec.method, template, &tv)?;
+        Ok(PreparedExpert {
+            id: rec.id.clone(),
+            method: rec.method,
+            staged_sim: fetch + decode,
+            upload_bytes: rec.encoded_bytes,
+            dense_bytes: params.bytes_fp16(),
+            params,
+        })
+    }
+
+    fn prepare_composed(&self, comp: &CompositionRecord) -> Result<PreparedExpert> {
+        let mut staged_sim = Duration::ZERO;
+        let mut members = Vec::with_capacity(comp.members.len());
+        for m in &comp.members {
+            let rec = self
+                .registry
+                .get(m)
+                .ok_or_else(|| anyhow!("composition member {m:?} missing"))?;
+            let (bytes, fetch, pin) = self.fetch_via_cpu_tier(rec)?;
+            staged_sim += fetch;
+            let (c, decode) = self.loader.decode_compressed(rec, bytes.as_slice())?;
+            drop(pin);
+            staged_sim += decode;
+            members.push(c);
+        }
+        let refs: Vec<&_> = members.iter().collect();
+        let (tv, merge) = self.loader.merge_ternary(&refs, &comp.merge)?;
+        staged_sim += merge;
+        // The merged update exists only host-side and has no compact
+        // wire form: the device hop moves the dense fp16 update.
+        let upload_bytes = tv.bytes_fp16();
+        let template = self.templates.for_method(comp.method);
+        let params = self.loader.materialize(comp.method, template, &tv)?;
+        Ok(PreparedExpert {
+            id: comp.id.clone(),
+            method: comp.method,
+            staged_sim,
+            upload_bytes,
+            dense_bytes: params.bytes_fp16(),
+            params,
+        })
+    }
+}
+
+/// RAII pin on a host-tier entry: created with the pin already taken,
+/// released on drop — including on unwind, so a panicking decode
+/// cannot leak a pin and leave the entry permanently unevictable.
+/// Pins are refcounted in the tier, so concurrent prepares sharing an
+/// id (a stored expert that is also a composition member) each hold
+/// their own pin.
+struct PinGuard<'a> {
+    cpu: &'a Mutex<LruTier<Arc<Vec<u8>>>>,
+    id: String,
+}
+
+impl<'a> PinGuard<'a> {
+    fn new(cpu: &'a Mutex<LruTier<Arc<Vec<u8>>>>, id: &str) -> PinGuard<'a> {
+        PinGuard { cpu, id: id.to_string() }
+    }
+}
+
+impl Drop for PinGuard<'_> {
+    fn drop(&mut self) {
+        // Best-effort during unwind: a poisoned tier mutex (a panic
+        // inside the lock, which no pipeline code does) must not turn
+        // into a double panic here.
+        if let Ok(mut cpu) = self.cpu.lock() {
+            cpu.unpin(&self.id);
+        }
+    }
+}
+
+/// How a staging-slot lookup resolved.
+pub enum TakeOutcome {
+    /// Fully staged: fetch+decode already happened off-thread.
+    Hit(PreparedExpert),
+    /// Prefetch was in flight; the caller blocked for this long.
+    Waited(PreparedExpert, Duration),
+    /// The background prepare failed (the caller should fall back to
+    /// the blocking path, which reports the error in context).
+    Failed(String),
+    /// Nothing staged or in flight for this id.
+    Miss,
+}
+
+enum Slot {
+    InFlight,
+    Ready { prepared: PreparedExpert, seq: u64, charge: u64 },
+    Failed(String),
+}
+
+struct StagingInner {
+    slots: HashMap<String, Slot>,
+    ready_bytes: u64,
+    seq: u64,
+    /// Ids whose staged entry was budget-evicted since the last plan
+    /// update. Claims on them are refused until the next `retain`, so
+    /// an over-tight budget degrades to at most one wasted prepare per
+    /// id per plan instead of an endless background churn loop.
+    suppressed: HashSet<String>,
+}
+
+/// Byte-budgeted hand-off buffer between the prefetch threads and the
+/// engine: at most `budget_bytes` of decoded experts are held ready
+/// (fp16 accounting, like the GPU tier); depositing past the budget
+/// evicts the **newest** staged entry (counted as wasted prefetch) —
+/// entries are staged in service order, so the oldest is the next one
+/// the engine will take and must be the last to go. A single entry
+/// larger than the whole budget is discarded on deposit when siblings
+/// are staged (one blocking pickup beats evicting every sibling), and
+/// admitted over budget when it is alone.
+pub struct StagingArea {
+    budget_bytes: u64,
+    inner: Mutex<StagingInner>,
+    cv: Condvar,
+}
+
+impl StagingArea {
+    pub fn new(budget_bytes: u64) -> StagingArea {
+        StagingArea {
+            budget_bytes: budget_bytes.max(1),
+            inner: Mutex::new(StagingInner {
+                slots: HashMap::new(),
+                ready_bytes: 0,
+                seq: 0,
+                suppressed: HashSet::new(),
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Atomically claim `id` for preparation. Returns false when the id
+    /// is already claimed, staged, failed-and-unconsumed, or was
+    /// budget-evicted under the current plan.
+    pub fn claim(&self, id: &str) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.slots.contains_key(id) || inner.suppressed.contains(id) {
+            return false;
+        }
+        inner.slots.insert(id.to_string(), Slot::InFlight);
+        true
+    }
+
+    /// Deliver the result of a claimed preparation. Returns how many
+    /// staged experts were discarded unused by this call (the deposit
+    /// itself when its claim was cancelled, plus any budget evictions).
+    pub fn deposit(&self, id: &str, res: Result<PreparedExpert>) -> u64 {
+        let mut wasted = 0u64;
+        {
+            let mut inner = self.inner.lock().unwrap();
+            match inner.slots.get(id) {
+                Some(Slot::InFlight) => match res {
+                    Ok(p) => {
+                        let charge = p.dense_bytes.max(1);
+                        // An entry bigger than the whole budget (e.g. a
+                        // Full-method expert under a small accelerator
+                        // budget) would evict every sibling for a
+                        // single pickup: when siblings are staged,
+                        // discard it instead — the engine's blocking
+                        // fallback serves it, the siblings keep their
+                        // hits, and the suppression stops workers from
+                        // re-preparing it until the plan moves on. With
+                        // nothing else staged it is admitted over
+                        // budget (it must stay takeable).
+                        let has_siblings = inner
+                            .slots
+                            .iter()
+                            .any(|(k, s)| k != id && matches!(s, Slot::Ready { .. }));
+                        if charge > self.budget_bytes && has_siblings {
+                            inner.slots.remove(id);
+                            inner.suppressed.insert(id.to_string());
+                            wasted += 1;
+                        } else {
+                            inner.seq += 1;
+                            let seq = inner.seq;
+                            inner.ready_bytes += charge;
+                            inner.slots.insert(
+                                id.to_string(),
+                                Slot::Ready { prepared: p, seq, charge },
+                            );
+                            // Budget: evict the *newest* staged entries
+                            // — never the one just deposited (it must
+                            // stay takeable) and preferably never the
+                            // oldest, which is the next expert the
+                            // engine will ask for. Victims are
+                            // suppressed so workers do not immediately
+                            // re-prepare them into the same full
+                            // staging area.
+                            while inner.ready_bytes > self.budget_bytes {
+                                let victim = inner
+                                    .slots
+                                    .iter()
+                                    .filter_map(|(k, s)| match s {
+                                        Slot::Ready { seq, .. } if k != id => {
+                                            Some((*seq, k.clone()))
+                                        }
+                                        _ => None,
+                                    })
+                                    .max()
+                                    .map(|(_, k)| k);
+                                let Some(v) = victim else { break };
+                                if let Some(Slot::Ready { charge, .. }) =
+                                    inner.slots.remove(&v)
+                                {
+                                    inner.ready_bytes -= charge;
+                                    wasted += 1;
+                                }
+                                inner.suppressed.insert(v);
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        inner.slots.insert(id.to_string(), Slot::Failed(format!("{e:#}")));
+                    }
+                },
+                // Claim cancelled (plan moved on) or duplicate work:
+                // discard. Deterministic stages make the discard safe —
+                // any other copy of this id is bit-identical.
+                _ => {
+                    if res.is_ok() {
+                        wasted += 1;
+                    }
+                }
+            }
+        }
+        self.cv.notify_all();
+        wasted
+    }
+
+    /// Consume the slot for `id`: returns immediately on Ready/Failed/
+    /// absent, blocks while a prefetch for `id` is in flight.
+    pub fn take(&self, id: &str) -> TakeOutcome {
+        let mut inner = self.inner.lock().unwrap();
+        let mut waited: Option<Instant> = None;
+        loop {
+            match inner.slots.get(id) {
+                None => return TakeOutcome::Miss,
+                Some(Slot::InFlight) => {
+                    waited.get_or_insert_with(Instant::now);
+                    inner = self.cv.wait(inner).unwrap();
+                }
+                Some(_) => {
+                    let slot = inner.slots.remove(id).unwrap();
+                    return match slot {
+                        Slot::Ready { prepared, charge, .. } => {
+                            inner.ready_bytes -= charge;
+                            match waited {
+                                None => TakeOutcome::Hit(prepared),
+                                Some(t0) => TakeOutcome::Waited(prepared, t0.elapsed()),
+                            }
+                        }
+                        Slot::Failed(e) => TakeOutcome::Failed(e),
+                        Slot::InFlight => unreachable!("matched above"),
+                    };
+                }
+            }
+        }
+    }
+
+    /// Drop every slot whose id is not in `keep`; returns how many
+    /// staged (ready) experts were discarded. In-flight claims are
+    /// cancelled — their eventual deposit is discarded and counted
+    /// there. A plan update also lifts budget-eviction suppressions:
+    /// the new plan gets a fresh chance to stage every id.
+    pub fn retain(&self, keep: &[&str]) -> u64 {
+        let mut inner = self.inner.lock().unwrap();
+        inner.suppressed.clear();
+        let drop_ids: Vec<String> = inner
+            .slots
+            .keys()
+            .filter(|k| !keep.contains(&k.as_str()))
+            .cloned()
+            .collect();
+        let mut wasted = 0u64;
+        for k in drop_ids {
+            match inner.slots.remove(&k) {
+                Some(Slot::Ready { charge, .. }) => {
+                    inner.ready_bytes -= charge;
+                    wasted += 1;
+                }
+                _ => {} // InFlight counted at deposit; Failed is free
+            }
+        }
+        wasted
+    }
+
+    /// Number of decoded experts currently staged ready.
+    pub fn ready_count(&self) -> usize {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .slots
+            .values()
+            .filter(|s| matches!(s, Slot::Ready { .. }))
+            .count()
+    }
+
+    /// fp16 bytes of staged-ready experts (budget accounting).
+    pub fn ready_bytes(&self) -> u64 {
+        self.inner.lock().unwrap().ready_bytes
+    }
+}
+
+struct PlanState {
+    /// Upcoming expert ids, in service order (the batcher's plan).
+    desired: Vec<String>,
+    closed: bool,
+}
+
+struct PfShared {
+    ctx: Arc<PrepareContext>,
+    staging: StagingArea,
+    metrics: Arc<Metrics>,
+    plan: Mutex<PlanState>,
+    cv: Condvar,
+}
+
+/// Background lookahead: worker threads watch the engine's plan and run
+/// the fetch+decode stages for upcoming experts into the staging area
+/// while the engine thread executes batches.
+pub struct Prefetcher {
+    shared: Arc<PfShared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Prefetcher {
+    /// Spawn the prefetch workers. `depth` bounds both the lookahead
+    /// the engine publishes and the worker count (clamped to [1, 4]);
+    /// `staging_budget_bytes` bounds the decoded bytes held ready.
+    pub fn start(
+        ctx: Arc<PrepareContext>,
+        depth: usize,
+        staging_budget_bytes: u64,
+        metrics: Arc<Metrics>,
+    ) -> Prefetcher {
+        let shared = Arc::new(PfShared {
+            ctx,
+            staging: StagingArea::new(staging_budget_bytes),
+            metrics,
+            plan: Mutex::new(PlanState { desired: Vec::new(), closed: false }),
+            cv: Condvar::new(),
+        });
+        let workers = (0..depth.clamp(1, 4))
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("compeft-prefetch-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn prefetch worker")
+            })
+            .collect();
+        Prefetcher { shared, workers }
+    }
+
+    /// Publish the engine's lookahead: the experts expected next, in
+    /// service order (already filtered of GPU residents and the expert
+    /// being served). Staged entries that fell out of the plan are
+    /// discarded and counted as wasted prefetches.
+    pub fn note_plan(&self, upcoming: Vec<String>) {
+        let wasted = {
+            let mut plan = self.shared.plan.lock().unwrap();
+            plan.desired = upcoming;
+            let keep: Vec<&str> = plan.desired.iter().map(|s| s.as_str()).collect();
+            self.shared.staging.retain(&keep)
+        };
+        if wasted > 0 {
+            self.shared.metrics.record_prefetch_wasted(wasted);
+        }
+        self.shared.cv.notify_all();
+    }
+
+    /// Engine-side pickup of a staged expert (blocks on an in-flight
+    /// prefetch rather than duplicating its work). Also drops the id
+    /// from the plan so an idle worker does not immediately re-prepare
+    /// what was just consumed. Records the hit/wait/miss outcome — and
+    /// the overlap time a hit saved — into the metrics sink.
+    pub fn take(&self, id: &str) -> TakeOutcome {
+        {
+            let mut plan = self.shared.plan.lock().unwrap();
+            plan.desired.retain(|d| d != id);
+        }
+        let out = self.shared.staging.take(id);
+        match &out {
+            TakeOutcome::Hit(p) => self.shared.metrics.record_prefetch_hit(p.staged_sim),
+            TakeOutcome::Waited(..) => self.shared.metrics.record_prefetch_wait(),
+            // A failed prefetch sends the engine down the blocking path,
+            // which is a miss for overlap purposes.
+            TakeOutcome::Miss | TakeOutcome::Failed(_) => {
+                self.shared.metrics.record_prefetch_miss()
+            }
+        }
+        out
+    }
+
+    /// Staging visibility for tests and reports.
+    pub fn staging(&self) -> &StagingArea {
+        &self.shared.staging
+    }
+}
+
+impl Drop for Prefetcher {
+    fn drop(&mut self) {
+        {
+            let mut plan = self.shared.plan.lock().unwrap();
+            plan.closed = true;
+            plan.desired.clear();
+        }
+        self.shared.cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        // Whatever is still staged at shutdown was prepared for nothing.
+        let leftover = self.shared.staging.retain(&[]);
+        if leftover > 0 {
+            self.shared.metrics.record_prefetch_wasted(leftover);
+        }
+    }
+}
+
+fn worker_loop(shared: &PfShared) {
+    loop {
+        // Find the first planned expert nobody has claimed yet.
+        let target = {
+            let mut plan = shared.plan.lock().unwrap();
+            loop {
+                if plan.closed {
+                    return;
+                }
+                let next = plan
+                    .desired
+                    .iter()
+                    .find(|id| shared.staging.claim(id))
+                    .cloned();
+                match next {
+                    Some(id) => break id,
+                    None => plan = shared.cv.wait(plan).unwrap(),
+                }
+            }
+        };
+        // A panicking prepare must still deposit, or an engine blocked
+        // in `take` on this in-flight slot would wait forever.
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            shared.ctx.prepare(&target)
+        }))
+        .unwrap_or_else(|_| {
+            Err(anyhow!("prefetch worker panicked preparing {target:?}"))
+        });
+        let wasted = shared.staging.deposit(&target, res);
+        if wasted > 0 {
+            shared.metrics.record_prefetch_wasted(wasted);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compeft::compress::CompressConfig;
+    use crate::coordinator::transport::{LinkSpec, SimLink};
+    use crate::merging::MergeMethod;
+    use crate::tensor::Tensor;
+    use crate::util::pool::ThreadPool;
+    use crate::util::prop;
+    use crate::util::rng::Pcg;
+    use std::path::PathBuf;
+
+    fn sample_tv(seed: u64, n: usize) -> ParamSet {
+        let mut rng = Pcg::seed(seed);
+        let mut p = ParamSet::new();
+        p.insert("a.lora_a", Tensor::new(vec![n], prop::task_vector_like(&mut rng, n)));
+        p.insert(
+            "b.lora_b",
+            Tensor::new(vec![n / 2], prop::task_vector_like(&mut rng, n / 2)),
+        );
+        p
+    }
+
+    use crate::bench_support::zero_templates;
+
+    /// Registry of three stored `.cpeft` experts plus one composition,
+    /// with real files on disk — the mixed workload the engine serves.
+    fn mixed_fixture(dir: &PathBuf) -> (Arc<Registry>, Templates) {
+        std::fs::create_dir_all(dir).unwrap();
+        let mut reg = Registry::new();
+        let cfg = CompressConfig { density: 0.15, alpha: 1.0, ..Default::default() };
+        let mut first_tv = None;
+        for i in 0..3u64 {
+            let tv = sample_tv(100 + i, 4096);
+            let npz = dir.join(format!("e{i}.lora.npz"));
+            tv.save_npz(&npz).unwrap();
+            reg.register_compeft(
+                &format!("e{i}"),
+                "t",
+                "s",
+                ExpertMethod::Lora,
+                &npz,
+                &cfg,
+            )
+            .unwrap();
+            first_tv.get_or_insert(tv);
+        }
+        reg.register_composition(
+            "merged/ties",
+            &["e0", "e1", "e2"],
+            MergeMethod::Ties { density: 0.4, lambda: 0.9 },
+        )
+        .unwrap();
+        let templates = zero_templates(&first_tv.unwrap());
+        (Arc::new(reg), templates)
+    }
+
+    fn fresh_ctx(
+        registry: Arc<Registry>,
+        templates: Templates,
+        workers: usize,
+    ) -> Arc<PrepareContext> {
+        let loader = ExpertLoader::new(
+            SimLink::new("net", LinkSpec::internet()).with_time_scale(0.0),
+            SimLink::new("pcie", LinkSpec::pcie()).with_time_scale(0.0),
+        )
+        .with_pool(Arc::new(ThreadPool::new(workers)));
+        Arc::new(PrepareContext {
+            loader,
+            registry,
+            templates,
+            cpu: Arc::new(Mutex::new(LruTier::new("cpu", 64 << 20))),
+        })
+    }
+
+    /// The pipeline's correctness bar, below the engine: for a mixed
+    /// stored+composed workload, whatever the prefetcher stages is
+    /// bit-identical to the blocking prepare, at every lookahead depth
+    /// and decode-worker count.
+    #[test]
+    fn prefetched_experts_match_blocking_prepare() {
+        let dir = std::env::temp_dir()
+            .join(format!("compeft_pipeline_eq_{}", std::process::id()));
+        let (reg, templates) = mixed_fixture(&dir);
+        let ids = ["e0", "merged/ties", "e1", "e2"];
+
+        // Blocking reference, serial decode.
+        let ctx_ref = fresh_ctx(Arc::clone(&reg), templates.clone(), 1);
+        let reference: Vec<PreparedExpert> =
+            ids.iter().map(|id| ctx_ref.prepare(id).unwrap()).collect();
+
+        for depth in [1usize, 3] {
+            for workers in [1usize, 2, 8] {
+                let ctx = fresh_ctx(Arc::clone(&reg), templates.clone(), workers);
+                let metrics = Arc::new(Metrics::new());
+                let pf = Prefetcher::start(
+                    Arc::clone(&ctx),
+                    depth,
+                    u64::MAX,
+                    Arc::clone(&metrics),
+                );
+                pf.note_plan(ids.iter().map(|s| s.to_string()).collect());
+                for (id, want) in ids.iter().zip(&reference) {
+                    let got = match pf.take(id) {
+                        TakeOutcome::Hit(p) | TakeOutcome::Waited(p, _) => p,
+                        TakeOutcome::Miss => ctx.prepare(id).unwrap(),
+                        TakeOutcome::Failed(e) => panic!("prefetch failed: {e}"),
+                    };
+                    assert_eq!(
+                        got.params, want.params,
+                        "depth={depth} workers={workers} id={id}"
+                    );
+                    assert_eq!(got.upload_bytes, want.upload_bytes);
+                    assert_eq!(got.dense_bytes, want.dense_bytes);
+                    assert_eq!(got.method, want.method);
+                }
+                drop(pf);
+                let s = metrics.snapshot();
+                assert_eq!(
+                    s.prefetch_hits + s.prefetch_waits,
+                    ids.len() as u64 - s.prefetch_misses,
+                    "every take resolved"
+                );
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Staging byte budget: depositing past the budget evicts the
+    /// *newest* staged entry — never the one just deposited and never
+    /// the oldest, which is the next expert the engine will take — and
+    /// suppresses the victim from re-claim until the next plan update.
+    #[test]
+    fn staging_budget_evicts_newest_ready_and_suppresses_reclaim() {
+        let mk = |id: &str, bytes: u64| PreparedExpert {
+            id: id.to_string(),
+            method: ExpertMethod::Lora,
+            params: ParamSet::new(),
+            staged_sim: Duration::ZERO,
+            upload_bytes: bytes,
+            dense_bytes: bytes,
+        };
+        let staging = StagingArea::new(130);
+        assert!(staging.claim("a"));
+        assert!(!staging.claim("a"), "double claim refused");
+        assert_eq!(staging.deposit("a", Ok(mk("a", 60))), 0);
+        assert!(staging.claim("b"));
+        assert_eq!(staging.deposit("b", Ok(mk("b", 60))), 0, "120 fits in 130");
+        assert!(staging.claim("c"));
+        // 180 > 130: the newest staged entry ("b") goes, counted wasted.
+        assert_eq!(staging.deposit("c", Ok(mk("c", 60))), 1);
+        assert_eq!(staging.ready_count(), 2);
+        assert_eq!(staging.ready_bytes(), 120);
+        assert!(matches!(staging.take("b"), TakeOutcome::Miss));
+        // ...and cannot be re-claimed into the same full area until the
+        // plan moves on (prevents background churn under tight budgets).
+        assert!(!staging.claim("b"), "budget victim is suppressed");
+        match staging.take("a") {
+            TakeOutcome::Hit(p) => assert_eq!(p.id, "a", "next-to-serve survives"),
+            _ => panic!("a must be staged"),
+        }
+        assert!(matches!(staging.take("c"), TakeOutcome::Hit(_)));
+        assert_eq!(staging.ready_bytes(), 0);
+        staging.retain(&[]);
+        assert!(staging.claim("b"), "plan update lifts the suppression");
+
+        // An entry larger than the whole budget is still admitted when
+        // nothing else is staged (it must stay takeable).
+        assert!(staging.claim("big"));
+        assert_eq!(staging.deposit("big", Ok(mk("big", 500))), 0);
+        assert!(matches!(staging.take("big"), TakeOutcome::Hit(_)));
+
+        // ...but with a sibling staged, the too-big entry is discarded
+        // instead of evicting the sibling for one pickup.
+        staging.retain(&[]);
+        assert!(staging.claim("s1"));
+        assert_eq!(staging.deposit("s1", Ok(mk("s1", 50))), 0);
+        assert!(staging.claim("whale"));
+        assert_eq!(staging.deposit("whale", Ok(mk("whale", 500))), 1);
+        assert!(matches!(staging.take("whale"), TakeOutcome::Miss));
+        assert!(!staging.claim("whale"), "discarded whale is suppressed");
+        match staging.take("s1") {
+            TakeOutcome::Hit(p) => assert_eq!(p.id, "s1", "sibling keeps its hit"),
+            _ => panic!("sibling must survive a whale deposit"),
+        }
+
+        // A cancelled claim's deposit is discarded and counted.
+        assert!(staging.claim("stale"));
+        assert_eq!(staging.retain(&[]), 0, "in-flight cancel is counted at deposit");
+        assert_eq!(staging.deposit("stale", Ok(mk("stale", 10))), 1);
+        assert!(matches!(staging.take("stale"), TakeOutcome::Miss));
+
+        // Failed prepares surface as Failed, once.
+        assert!(staging.claim("broken"));
+        assert_eq!(staging.deposit("broken", Err(anyhow!("boom"))), 0);
+        match staging.take("broken") {
+            TakeOutcome::Failed(e) => assert!(e.contains("boom")),
+            _ => panic!("expected Failed"),
+        }
+        assert!(matches!(staging.take("broken"), TakeOutcome::Miss));
+    }
+
+    /// A plan update discards staged experts that are no longer
+    /// upcoming (wasted prefetch) while keeping the ones still planned.
+    #[test]
+    fn plan_change_discards_stale_staged_entries() {
+        let dir = std::env::temp_dir()
+            .join(format!("compeft_pipeline_retain_{}", std::process::id()));
+        let (reg, templates) = mixed_fixture(&dir);
+        let ctx = fresh_ctx(Arc::clone(&reg), templates, 2);
+        let metrics = Arc::new(Metrics::new());
+        let pf = Prefetcher::start(Arc::clone(&ctx), 2, u64::MAX, Arc::clone(&metrics));
+        pf.note_plan(vec!["e0".into(), "e1".into()]);
+        // Poll until both are staged; taking them here would consume
+        // the slots and hide the waste this test wants to observe.
+        let t0 = Instant::now();
+        while pf.staging().ready_count() < 2 {
+            assert!(t0.elapsed() < Duration::from_secs(20), "prefetch stalled");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // e1 falls out of the plan: it must be discarded and counted.
+        pf.note_plan(vec!["e0".into()]);
+        assert_eq!(pf.staging().ready_count(), 1);
+        assert!(matches!(pf.take("e1"), TakeOutcome::Miss));
+        assert!(matches!(pf.take("e0"), TakeOutcome::Hit(_)));
+        drop(pf);
+        assert!(metrics.snapshot().prefetch_wasted >= 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Unknown ids fail cleanly through the context (the engine's
+    /// unknown-expert branch rejects before ever reaching prepare, so
+    /// this is the backstop) and a failed prefetch resolves to Failed
+    /// rather than wedging the staging slot.
+    #[test]
+    fn unknown_expert_prepare_fails_cleanly() {
+        let dir = std::env::temp_dir()
+            .join(format!("compeft_pipeline_unknown_{}", std::process::id()));
+        let (reg, templates) = mixed_fixture(&dir);
+        let ctx = fresh_ctx(Arc::clone(&reg), templates, 1);
+        assert!(ctx.prepare("nope").is_err());
+
+        let metrics = Arc::new(Metrics::new());
+        let pf = Prefetcher::start(Arc::clone(&ctx), 1, u64::MAX, Arc::clone(&metrics));
+        pf.note_plan(vec!["nope".into()]);
+        match pf.take("nope") {
+            TakeOutcome::Failed(e) => assert!(e.contains("unknown expert"), "{e}"),
+            TakeOutcome::Miss => {} // worker had not claimed yet — equally fine
+            _ => panic!("an unknown expert cannot be staged"),
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -8,20 +8,29 @@
 //! swapping experts through the tiered cache + simulated links when the
 //! target expert is not GPU-resident.
 //!
-//! An expert id may also name a **composition**
-//! ([`CompositionRecord`]): a merged expert the engine materializes on
-//! demand by pulling the members' `.cpeft` payloads through the host
-//! tier and merging them ternary-domain (`load_composed`) — the merged
-//! adapter then lives in the accelerator LRU tier as a first-class
-//! resident, indistinguishable from a stored expert.
+//! Swaps run as a **staged pipeline with lookahead prefetch**
+//! ([`crate::coordinator::pipeline`]): the batcher's queue plan tells
+//! background threads which experts come next, their fetch+decode
+//! stages run while the engine executes the current batch, and a cold
+//! swap pays only the engine-thread upload hop on a staging hit.
+//! `CoordinatorConfig::prefetch_depth` sets the lookahead (0 disables
+//! it); predictions are bit-identical either way.
+//!
+//! An expert id may also name a **composition**: a merged expert
+//! materialized on demand by pulling the members' `.cpeft` payloads
+//! through the host tier and merging them ternary-domain
+//! ([`PrepareContext::prepare`]) — the merged adapter then lives in the
+//! accelerator LRU tier as a first-class resident, indistinguishable
+//! from a stored expert, and prefetches like one.
 
 use crate::coordinator::batcher::{BatchPolicy, Batcher, Pending};
 use crate::coordinator::cache::{LruTier, TierStats};
 use crate::coordinator::loader::ExpertLoader;
 use crate::coordinator::metrics::{Metrics, MetricsSnapshot, RequestTiming};
-use crate::coordinator::registry::{
-    CompositionRecord, ExpertMethod, ExpertRecord, Registry,
+use crate::coordinator::pipeline::{
+    PrepareContext, PreparedExpert, Prefetcher, TakeOutcome, Templates,
 };
+use crate::coordinator::registry::{ExpertMethod, Registry};
 use crate::coordinator::transport::{LinkSpec, SimLink};
 use crate::eval::ANSWER_BASE;
 use crate::runtime::{AdapterKind, ModelBundle, Runtime};
@@ -29,7 +38,7 @@ use crate::runtime::{AdapterKind, ModelBundle, Runtime};
 use anyhow::{Context, Result};
 use std::path::PathBuf;
 use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Serving batch size must match an exported executable batch.
@@ -54,6 +63,14 @@ pub struct CoordinatorConfig {
     /// any count; this only tunes swap-in latency. Defaults to the
     /// machine's available parallelism.
     pub decode_workers: usize,
+    /// Lookahead of the prefetch pipeline: how many upcoming experts
+    /// (from the batcher's queue plan) have their fetch+decode stages
+    /// run on background threads while the engine executes the current
+    /// batch. `0` disables prefetching (the pre-pipeline blocking
+    /// behavior). Served predictions are bit-identical at any depth and
+    /// any worker count; this only tunes how much cold-swap latency is
+    /// hidden behind execution.
+    pub prefetch_depth: usize,
 }
 
 impl CoordinatorConfig {
@@ -70,6 +87,7 @@ impl CoordinatorConfig {
             decode_workers: std::thread::available_parallelism()
                 .map(|n| n.get())
                 .unwrap_or(1),
+            prefetch_depth: 2,
         }
     }
 }
@@ -96,6 +114,19 @@ pub struct EngineReport {
     pub net_bytes: u64,
     pub pcie_bytes: u64,
     pub batches: u64,
+    /// Requests dropped without a reply (unknown expert, load failure,
+    /// exec-error leftovers, malformed submits).
+    pub rejected: u64,
+    /// Cold swaps served entirely from the prefetch staging slot.
+    pub prefetch_hits: u64,
+    /// Cold swaps that waited on an in-flight prefetch.
+    pub prefetch_waits: u64,
+    /// Cold swaps nothing was staged for (full blocking path).
+    pub prefetch_misses: u64,
+    /// Staged experts discarded unused.
+    pub prefetch_wasted: u64,
+    /// Simulated fetch+decode time hidden behind batch execution.
+    pub overlap_saved: Duration,
 }
 
 /// Public handle: submit requests, read metrics, shut down.
@@ -169,6 +200,7 @@ impl Coordinator {
         let (tx, rx) = mpsc::channel();
         if tokens.len() != self.seq_len {
             // Dropping `tx` makes the receiver report the rejection.
+            self.metrics.record_rejected(1);
             return rx;
         }
         self.batcher.push(expert, ClientRequest { tokens, n_classes, resp: tx });
@@ -240,61 +272,111 @@ fn engine_main(
     };
 
     // Decode pool: parallel .cpeft frame decode + materialization on
-    // GPU-tier misses. Owned by the engine thread; results are
-    // bit-identical at any worker count.
+    // GPU-tier misses. Shared between the engine thread (blocking
+    // fallback) and the prefetch threads; results are bit-identical at
+    // any worker count.
     let pool = Arc::new(crate::util::pool::ThreadPool::new(cfg.decode_workers.max(1)));
     let loader = ExpertLoader::new(net.clone(), pcie.clone()).with_pool(pool);
+    let registry = Arc::new(registry);
+    // Host tier of encoded bytes, shared with the prefetch threads
+    // (entries pinned while a background decode is in flight).
+    let cpu = Arc::new(Mutex::new(LruTier::new("cpu", cfg.cpu_capacity_bytes)));
+    let ctx = Arc::new(PrepareContext {
+        loader: loader.clone(),
+        registry: Arc::clone(&registry),
+        // Shared Arcs, not copies: the prefetch threads read the same
+        // host-side parameter sets the bundle owns.
+        templates: Templates {
+            base: Arc::clone(&bundle.base),
+            lora_init: Arc::clone(&bundle.lora_init),
+            ia3_init: Arc::clone(&bundle.ia3_init),
+        },
+        cpu: Arc::clone(&cpu),
+    });
+    let prefetcher = if cfg.prefetch_depth > 0 {
+        Some(Prefetcher::start(
+            Arc::clone(&ctx),
+            cfg.prefetch_depth,
+            // The staging slots hold decoded (dense) experts host-side;
+            // budget them at one accelerator tier per lookahead slot so
+            // a full-depth plan can be staged without the newest
+            // deposit evicting the next expert to be served.
+            cfg.gpu_capacity_bytes.saturating_mul(cfg.prefetch_depth as u64),
+            Arc::clone(&metrics),
+        ))
+    } else {
+        None
+    };
     let mut gpu: LruTier<Resident> = LruTier::new("gpu", cfg.gpu_capacity_bytes);
-    let mut cpu: LruTier<Vec<u8>> = LruTier::new("cpu", cfg.cpu_capacity_bytes);
     let mut resident_hint: Option<String> = None;
     let seq = bundle.meta.seq_len;
 
     // --- request loop ---
     while let Some((expert_id, batch)) = batcher.next_batch(resident_hint.as_deref()) {
-        // Route: a stored expert, or a registered composition (a merged
-        // expert materialized on demand from its members).
-        enum Target {
-            Stored(ExpertRecord),
-            Composed(CompositionRecord),
-        }
-        let target = if let Some(r) = registry.get(&expert_id) {
-            Target::Stored(r.clone())
-        } else if let Some(c) = registry.composition(&expert_id) {
-            Target::Composed(c.clone())
-        } else {
-            // Unknown expert: drop requests (metrics still count them).
+        if registry.get(&expert_id).is_none() && registry.composition(&expert_id).is_none()
+        {
+            // Unknown expert: drop the requests and count the drops.
+            metrics.record_rejected(batch.len() as u64);
             for p in batch {
                 drop(p.payload.resp);
             }
             continue;
-        };
+        }
 
-        // Ensure residency.
+        // Ensure residency. Stages 1–2 (fetch+decode) come from the
+        // prefetch staging slot when the lookahead saw this expert
+        // coming — the batch then pays only the upload hop — with the
+        // blocking prepare as fallback.
         let t_swap = Instant::now();
         let mut swapped = false;
         let mut sim_swap = Duration::ZERO;
         if gpu.get(&expert_id).is_none() {
             swapped = true;
-            let loaded = match &target {
-                Target::Stored(rec) => load_expert(&bundle, &loader, rec, &mut cpu),
-                Target::Composed(comp) => {
-                    load_composed(&bundle, &loader, &registry, comp, &mut cpu)
-                }
-            };
-            match loaded {
-                Ok((resident, sim)) => {
-                    sim_swap = sim;
+            let prepared: Result<PreparedExpert> =
+                match prefetcher.as_ref().map(|pf| pf.take(&expert_id)) {
+                    // Fully staged: the fetch+decode sim time was paid
+                    // off the critical path; the batch pays only the
+                    // upload hop below.
+                    Some(TakeOutcome::Hit(p)) => Ok(p),
+                    // In flight when the engine arrived: the overlap
+                    // was only partial, and how much of the staged cost
+                    // was already hidden cannot be split between the
+                    // sim and wall clocks — charge the whole staged
+                    // cost like a miss (conservative: prefetch-on
+                    // latency is never flattered by partial overlaps;
+                    // the wait itself is inside `t_swap`'s window).
+                    Some(TakeOutcome::Waited(p, _)) => {
+                        sim_swap += p.staged_sim;
+                        Ok(p)
+                    }
+                    // Miss / failed prefetch / prefetch disabled: run
+                    // the stages here and charge them to the batch,
+                    // exactly like the pre-pipeline engine.
+                    Some(TakeOutcome::Failed(_)) | Some(TakeOutcome::Miss) | None => {
+                        match ctx.prepare(&expert_id) {
+                            Ok(p) => {
+                                sim_swap += p.staged_sim;
+                                Ok(p)
+                            }
+                            Err(e) => Err(e),
+                        }
+                    }
+                };
+            // Stage 3: engine-thread-only upload (PjRt buffers are not
+            // `Send`).
+            match prepared.and_then(|p| upload_prepared(&bundle, &loader, &p)) {
+                Ok((resident, upload_sim)) => {
+                    sim_swap += upload_sim;
                     // The GPU tier budgets *decoded* adapter bytes
                     // (`gpu_capacity_bytes` docs): charge what actually
                     // sits in device memory, not the 8–50x smaller
-                    // encoded form — charging encoded bytes admitted
-                    // ~26 "residents" into a 2 MiB budget that holds
-                    // one dense adapter.
+                    // encoded form.
                     let charge = resident.dense_bytes.max(1);
                     gpu.insert(&expert_id, resident, charge);
                 }
                 Err(e) => {
                     eprintln!("[engine] load {expert_id} failed: {e:#}");
+                    metrics.record_rejected(batch.len() as u64);
                     for p in batch {
                         drop(p.payload.resp);
                     }
@@ -305,6 +387,20 @@ fn engine_main(
         let swap_wall = t_swap.elapsed();
         let swap_total = sim_swap.max(swap_wall);
         resident_hint = Some(expert_id.clone());
+
+        // Publish the lookahead *before* executing, so the prefetch
+        // threads overlap the next experts' fetch+decode with this
+        // batch's execution. GPU residents and the expert being served
+        // are excluded — prefetching them would be pure waste.
+        if let Some(pf) = &prefetcher {
+            let upcoming: Vec<String> = batcher
+                .plan(cfg.prefetch_depth + 2, Some(&expert_id))
+                .into_iter()
+                .filter(|id| *id != expert_id && !gpu.contains(id))
+                .take(cfg.prefetch_depth)
+                .collect();
+            pf.note_plan(upcoming);
+        }
         let resident = gpu.get(&expert_id).expect("just inserted");
 
         // Execute in SERVE_BATCH chunks.
@@ -358,30 +454,34 @@ fn engine_main(
             i += take;
         }
         let exec = t_exec.elapsed();
-        if exec_err {
-            continue;
-        }
 
-        let now = Instant::now();
-        for (ci, p) in responses {
-            let timing = RequestTiming {
-                queue: p.enqueued.elapsed().saturating_sub(swap_wall + exec),
-                swap: swap_total,
-                exec,
-                total: now.duration_since(p.enqueued) + (swap_total - swap_wall),
-                swapped,
-            };
-            metrics.record_request(&timing);
-            let _ = p.payload.resp.send(Prediction { class: classes[ci], timing });
+        // Reply to every chunk that completed — including ahead of an
+        // exec error, whose already-computed responses used to be
+        // silently dropped along with the failed chunk's.
+        let answered = responses.len();
+        flush_responses(&metrics, responses, &classes, swap_wall, swap_total, exec, swapped);
+        if exec_err {
+            metrics.record_rejected((batch.len() - answered) as u64);
+            continue;
         }
     }
 
+    // Stop the prefetch threads before the final snapshot so in-flight
+    // deposits and shutdown discards are all accounted.
+    drop(prefetcher);
+    let snap = metrics.snapshot();
     Ok(EngineReport {
         gpu: gpu.stats(),
-        cpu: cpu.stats(),
+        cpu: cpu.lock().unwrap().stats(),
         net_bytes: net.bytes_moved(),
         pcie_bytes: pcie.bytes_moved(),
-        batches: metrics.snapshot().batches,
+        batches: snap.batches,
+        rejected: snap.rejected,
+        prefetch_hits: snap.prefetch_hits,
+        prefetch_waits: snap.prefetch_waits,
+        prefetch_misses: snap.prefetch_misses,
+        prefetch_wasted: snap.prefetch_wasted,
+        overlap_saved: Duration::from_micros(snap.overlap_saved_us),
     })
 }
 
@@ -399,122 +499,72 @@ fn pack_row(dst: &mut [i32], tokens: &[i32]) {
     }
 }
 
-/// Fetch an expert's encoded bytes through the host (CPU) tier,
-/// charging the net link only on a miss.
-fn fetch_via_cpu_tier(
-    loader: &ExpertLoader,
-    rec: &ExpertRecord,
-    cpu: &mut LruTier<Vec<u8>>,
-    sim: &mut Duration,
-) -> Result<Vec<u8>> {
-    if let Some(b) = cpu.get(&rec.id) {
-        return Ok(b.clone());
-    }
-    let (bytes, fetch) = loader.fetch_encoded(rec)?;
-    *sim += fetch;
-    cpu.insert(&rec.id, bytes.clone(), rec.encoded_bytes.max(1));
-    Ok(bytes)
-}
-
-/// Runtime kind + adapter init template for an expert method.
-fn kind_and_template(
-    bundle: &ModelBundle,
-    method: ExpertMethod,
-) -> (AdapterKind, &crate::tensor::ParamSet) {
+/// Runtime forward variant for an expert method.
+fn adapter_kind(method: ExpertMethod) -> AdapterKind {
     match method {
-        ExpertMethod::Lora => (AdapterKind::Lora, &bundle.lora_init),
-        ExpertMethod::Ia3 => (AdapterKind::Ia3, &bundle.ia3_init),
-        ExpertMethod::Full => (AdapterKind::Base, &bundle.base),
+        ExpertMethod::Lora => AdapterKind::Lora,
+        ExpertMethod::Ia3 => AdapterKind::Ia3,
+        ExpertMethod::Full => AdapterKind::Base,
     }
 }
 
-/// Materialize a decoded task vector into a GPU-tier resident (adapter
-/// or full-parameter buffers) — shared by stored and merged experts.
-fn build_resident(
+/// Stage 3 of a swap — the engine-thread-only upload hop: move the
+/// prepared expert's bytes over PCIe (encoded bytes for stored experts,
+/// dense fp16 for merged ones; see [`PreparedExpert::upload_bytes`])
+/// and create the device buffers. Returns the GPU-tier resident and the
+/// simulated transfer time.
+fn upload_prepared(
     bundle: &ModelBundle,
     loader: &ExpertLoader,
-    method: ExpertMethod,
-    tv: &crate::tensor::ParamSet,
-) -> Result<Resident> {
-    let (kind, template) = kind_and_template(bundle, method);
-    Ok(match method {
-        ExpertMethod::Full => {
-            let params = loader
-                .materialize(method, &bundle.base, tv)
-                .context("apply full tv")?;
-            let bufs = bundle.upload_full_params(&params)?;
-            Resident {
-                kind,
-                adapter_bufs: Vec::new(),
-                full_bufs: Some(bufs),
-                dense_bytes: params.bytes_fp16(),
-            }
-        }
-        _ => {
-            let adapter = loader.materialize(method, template, tv)?;
-            let bufs = bundle.upload_adapter(kind, &adapter)?;
-            Resident {
-                kind,
-                adapter_bufs: bufs,
-                full_bufs: None,
-                dense_bytes: adapter.bytes_fp16(),
-            }
-        }
-    })
-}
-
-/// Pull an expert to the GPU tier; returns (resident, simulated time).
-fn load_expert(
-    bundle: &ModelBundle,
-    loader: &ExpertLoader,
-    rec: &ExpertRecord,
-    cpu: &mut LruTier<Vec<u8>>,
+    p: &PreparedExpert,
 ) -> Result<(Resident, Duration)> {
-    let mut sim = Duration::ZERO;
-    // Host tier: encoded bytes.
-    let encoded = fetch_via_cpu_tier(loader, rec, cpu, &mut sim)?;
-    // Decode against the matching template.
-    let (_, template) = kind_and_template(bundle, rec.method);
-    let (tv, decode) = loader.decode(rec, &encoded, template)?;
-    sim += decode;
-    // Host → device (encoded bytes move; decode-on-device model, §2.2).
-    sim += loader.upload_cost(rec);
-    let resident = build_resident(bundle, loader, rec.method, &tv)?;
+    let sim = loader.pcie.transfer(p.upload_bytes);
+    let kind = adapter_kind(p.method);
+    let resident = match p.method {
+        ExpertMethod::Full => Resident {
+            kind,
+            adapter_bufs: Vec::new(),
+            full_bufs: Some(
+                bundle.upload_full_params(&p.params).context("upload full params")?,
+            ),
+            dense_bytes: p.dense_bytes,
+        },
+        _ => Resident {
+            kind,
+            adapter_bufs: bundle.upload_adapter(kind, &p.params)?,
+            full_bufs: None,
+            dense_bytes: p.dense_bytes,
+        },
+    };
     Ok((resident, sim))
 }
 
-/// Materialize a merged expert on demand: pull every member's `.cpeft`
-/// payload through the host tier, decode to the ternary domain (never
-/// densifying members), merge per the composition record, and build a
-/// first-class GPU-tier resident. Members benefit from — and populate —
-/// the host tier exactly like directly-served experts, so a merged
-/// expert whose members are already cached costs no net traffic.
-fn load_composed(
-    bundle: &ModelBundle,
-    loader: &ExpertLoader,
-    registry: &Registry,
-    comp: &CompositionRecord,
-    cpu: &mut LruTier<Vec<u8>>,
-) -> Result<(Resident, Duration)> {
-    let mut sim = Duration::ZERO;
-    let mut members = Vec::with_capacity(comp.members.len());
-    for m in &comp.members {
-        let rec = registry
-            .get(m)
-            .ok_or_else(|| anyhow::anyhow!("composition member {m:?} missing"))?;
-        let encoded = fetch_via_cpu_tier(loader, rec, cpu, &mut sim)?;
-        let (c, decode) = loader.decode_compressed(rec, &encoded)?;
-        sim += decode;
-        members.push(c);
+/// Reply to every request whose logits were computed: record timing and
+/// send the prediction. Extracted from the exec loop so the exec-error
+/// path flushes the chunks that *did* complete before abandoning the
+/// rest (their already-computed responses used to be dropped without a
+/// reply alongside the failed chunk's).
+fn flush_responses(
+    metrics: &Metrics,
+    responses: Vec<(usize, &Pending<ClientRequest>)>,
+    classes: &[usize],
+    swap_wall: Duration,
+    swap_total: Duration,
+    exec: Duration,
+    swapped: bool,
+) {
+    let now = Instant::now();
+    for (ci, p) in responses {
+        let timing = RequestTiming {
+            queue: p.enqueued.elapsed().saturating_sub(swap_wall + exec),
+            swap: swap_total,
+            exec,
+            total: now.duration_since(p.enqueued) + (swap_total - swap_wall),
+            swapped,
+        };
+        metrics.record_request(&timing);
+        let _ = p.payload.resp.send(Prediction { class: classes[ci], timing });
     }
-    let refs: Vec<&_> = members.iter().collect();
-    let (tv, merge) = loader.merge_ternary(&refs, &comp.merge)?;
-    sim += merge;
-    // The merged update exists only host-side and has no compact wire
-    // form: the device hop moves the dense fp16 adapter.
-    sim += loader.pcie.transfer(tv.bytes_fp16());
-    let resident = build_resident(bundle, loader, comp.method, &tv)?;
-    Ok((resident, sim))
 }
 
 #[cfg(test)]
@@ -525,6 +575,52 @@ mod tests {
     use crate::coordinator::cache::LruTier;
     use crate::util::prop;
     use crate::util::rng::Pcg;
+
+    /// The response-flush helper replies to exactly the chunks whose
+    /// logits were computed and records their timings; requests beyond
+    /// the flushed set (an exec error mid-batch) see a dropped sender
+    /// and a `rejected` count, not silence with a leaked reply.
+    #[test]
+    fn flush_responses_replies_to_completed_chunks_only() {
+        let metrics = Metrics::new();
+        let mk = |tokens: Vec<i32>| {
+            let (tx, rx) = mpsc::channel();
+            (
+                Pending {
+                    payload: ClientRequest { tokens, n_classes: 2, resp: tx },
+                    enqueued: Instant::now(),
+                },
+                rx,
+            )
+        };
+        let (p0, r0) = mk(vec![1]);
+        let (p1, r1) = mk(vec![2]);
+        let (p2, r2) = mk(vec![3]);
+        let batch = vec![p0, p1, p2];
+        // Two chunks completed before the (simulated) exec error.
+        let classes = vec![1usize, 0];
+        let responses: Vec<(usize, &Pending<ClientRequest>)> =
+            vec![(0, &batch[0]), (1, &batch[1])];
+        flush_responses(
+            &metrics,
+            responses,
+            &classes,
+            Duration::ZERO,
+            Duration::from_millis(1),
+            Duration::from_micros(10),
+            true,
+        );
+        assert_eq!(r0.recv().unwrap().class, 1);
+        assert_eq!(r1.recv().unwrap().class, 0);
+        // The engine's exec-error path: count the unanswered remainder,
+        // then drop the batch (disconnecting their senders).
+        metrics.record_rejected((batch.len() - classes.len()) as u64);
+        drop(batch);
+        assert!(r2.recv().is_err(), "unanswered request sees a disconnect");
+        let s = metrics.snapshot();
+        assert_eq!(s.requests, 2, "only completed chunks are recorded");
+        assert_eq!(s.rejected, 1);
+    }
 
     #[test]
     fn pack_row_pads_truncates_and_copies_exact() {

@@ -11,6 +11,14 @@
 //! transfer begun while another is in flight queues behind it, which is
 //! precisely the contention that makes expert swapping a bottleneck in
 //! concurrent multi-expert serving (§1).
+//!
+//! Links are `Clone + Send + Sync` over shared state, and the prefetch
+//! pipeline relies on that: background fetch threads and the engine
+//! thread issue transfers on the *same* link, and both the wall-clock
+//! queue (scaled sleeps) and the simulated queue (unscaled service
+//! times on the sim clock, see [`SimLink::transfer`]) keep their FIFO
+//! semantics under that concurrency — a prefetch does not get a free
+//! ride past the NIC, it queues like any other transfer.
 
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -241,6 +249,51 @@ mod tests {
         let service = link.spec.duration_for(1000);
         assert_eq!(a, service);
         assert_eq!(b, service, "idle link must report pure service time");
+    }
+
+    /// The prefetch pipeline's usage pattern: background threads and
+    /// the "engine" interleave transfers on one shared link across an
+    /// extended burst. At any scale the accounting must stay exact and
+    /// every simulated time bounded by the whole burst's service time —
+    /// the PR 2 sim-clock/wall-clock separation must survive sustained
+    /// multi-thread traffic, not just a single contended burst.
+    #[test]
+    fn interleaved_prefetch_and_engine_transfers_keep_queue_semantics() {
+        const PREFETCH_THREADS: usize = 3;
+        const PER_THREAD: usize = 5;
+        let service = Duration::from_millis(10);
+        let link = Arc::new(
+            SimLink::new("net", LinkSpec { bandwidth: 1e9, latency: service })
+                .with_time_scale(0.0),
+        );
+        let handles: Vec<_> = (0..PREFETCH_THREADS)
+            .map(|_| {
+                let l = Arc::clone(&link);
+                std::thread::spawn(move || {
+                    (0..PER_THREAD).map(|_| l.transfer(1_000)).collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        // The "engine" transfers from this thread, interleaved.
+        let mut engine_sims = Vec::new();
+        for _ in 0..PER_THREAD {
+            engine_sims.push(link.transfer(1_000));
+        }
+        let mut all: Vec<Duration> = engine_sims;
+        for h in handles {
+            all.extend(h.join().unwrap());
+        }
+        let n = (PREFETCH_THREADS + 1) * PER_THREAD;
+        assert_eq!(link.transfers(), n as u64);
+        assert_eq!(link.bytes_moved(), n as u64 * 1_000);
+        let per = link.spec.duration_for(1_000);
+        for (i, sim) in all.iter().enumerate() {
+            assert!(*sim >= per, "transfer {i}: {sim:?} below service time");
+            assert!(
+                *sim <= per * n as u32 + Duration::from_millis(100),
+                "transfer {i}: {sim:?} exceeds the whole burst's service"
+            );
+        }
     }
 
     #[test]

@@ -204,6 +204,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .flag("k", "0.2", "ComPEFT density")
         .flag("alpha", "1.0", "ComPEFT α")
         .flag("time-scale", "1.0", "simulated-link wall-clock factor")
+        .flag("prefetch-depth", "2", "experts prefetched ahead of execution (0 = off)")
         .flag("seed", "0", "trace seed");
     let a = spec.parse(argv)?;
     let artifacts = bs::require_artifacts();
@@ -246,6 +247,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     ccfg.net = LinkSpec::internet();
     ccfg.pcie = LinkSpec::pcie();
     ccfg.time_scale = a.get_f64("time-scale")?;
+    ccfg.prefetch_depth = a.get_usize("prefetch-depth")?;
     let coord = Coordinator::start(ccfg, registry)?;
 
     // Replay a Zipf-skewed trace; tokens come from each task's eval set.
@@ -310,6 +312,16 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         "bytes moved: net {}  pcie {}",
         human_bytes(report.net_bytes),
         human_bytes(report.pcie_bytes)
+    );
+    println!(
+        "prefetch: {} hits  {} waits  {} misses  {} wasted  overlap saved {:.2?}  \
+         rejected {}",
+        report.prefetch_hits,
+        report.prefetch_waits,
+        report.prefetch_misses,
+        report.prefetch_wasted,
+        report.overlap_saved,
+        report.rejected
     );
     Ok(())
 }

@@ -87,11 +87,15 @@ impl ModelMeta {
 }
 
 /// A fully loaded model scale.
+///
+/// The parameter sets are `Arc`-shared host-side data: the serving
+/// pipeline's prefetch threads hold the same allocations as templates
+/// (`coordinator::pipeline::Templates`) without copying the base model.
 pub struct ModelBundle {
     pub meta: ModelMeta,
-    pub base: ParamSet,
-    pub lora_init: ParamSet,
-    pub ia3_init: ParamSet,
+    pub base: Arc<ParamSet>,
+    pub lora_init: Arc<ParamSet>,
+    pub ia3_init: Arc<ParamSet>,
     rt: Runtime,
     dir: PathBuf,
     /// Base parameters resident on device, in `meta.base_order`.
@@ -118,9 +122,9 @@ impl ModelBundle {
         }
         Ok(ModelBundle {
             meta,
-            base,
-            lora_init,
-            ia3_init,
+            base: Arc::new(base),
+            lora_init: Arc::new(lora_init),
+            ia3_init: Arc::new(ia3_init),
             rt: rt.clone(),
             dir,
             base_buffers,
@@ -232,8 +236,8 @@ impl ModelBundle {
             Some(a) => self.upload_adapter(kind, a)?,
             None => match kind {
                 AdapterKind::Base => Vec::new(),
-                AdapterKind::Lora => self.upload_adapter(kind, &self.lora_init)?,
-                AdapterKind::Ia3 => self.upload_adapter(kind, &self.ia3_init)?,
+                AdapterKind::Lora => self.upload_adapter(kind, &*self.lora_init)?,
+                AdapterKind::Ia3 => self.upload_adapter(kind, &*self.ia3_init)?,
             },
         };
         let full_bufs = match full_params {

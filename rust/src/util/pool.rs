@@ -12,8 +12,14 @@ use std::thread;
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
 /// Fixed-size thread pool. Dropping the pool joins all workers.
+///
+/// The submission handle is wrapped in a `Mutex` so the pool is `Sync`
+/// on every toolchain (std's `mpsc::Sender` only became `Sync` in Rust
+/// 1.72): the serving engine shares one decode pool between the engine
+/// thread and the background prefetch threads. The lock is held only
+/// for the channel send, never while a job runs.
 pub struct ThreadPool {
-    tx: Option<mpsc::Sender<Job>>,
+    tx: Option<Mutex<mpsc::Sender<Job>>>,
     workers: Vec<thread::JoinHandle<()>>,
 }
 
@@ -41,7 +47,7 @@ impl ThreadPool {
                     .expect("spawn worker")
             })
             .collect();
-        ThreadPool { tx: Some(tx), workers }
+        ThreadPool { tx: Some(Mutex::new(tx)), workers }
     }
 
     /// Submit a job for execution.
@@ -54,6 +60,8 @@ impl ThreadPool {
         self.tx
             .as_ref()
             .expect("pool shut down")
+            .lock()
+            .unwrap()
             .send(job)
             .expect("workers alive");
     }
@@ -236,6 +244,30 @@ mod tests {
         // The pool survives a panicking job and keeps serving.
         let ok = pool.scoped_map(data, |x| x + 1);
         assert_eq!(ok, vec![2, 3, 4, 5, 6]);
+    }
+
+    /// The serving pipeline shares one decode pool between the engine
+    /// thread and the prefetch threads: concurrent `scoped_map` calls
+    /// from different caller threads must interleave safely, each
+    /// collecting exactly its own results.
+    #[test]
+    fn concurrent_scoped_map_callers_share_one_pool() {
+        let pool = Arc::new(ThreadPool::new(3));
+        let handles: Vec<_> = (0..4u64)
+            .map(|t| {
+                let pool = Arc::clone(&pool);
+                std::thread::spawn(move || {
+                    let out = pool.map((0..200u64).collect::<Vec<_>>(), move |x| x * 7 + t);
+                    assert_eq!(
+                        out,
+                        (0..200u64).map(|x| x * 7 + t).collect::<Vec<_>>()
+                    );
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
     }
 
     #[test]

@@ -272,7 +272,8 @@ fn synthetic_composition_registry_and_loader() -> anyhow::Result<()> {
         .clone();
     assert_eq!(comp.method, ExpertMethod::Lora);
 
-    // The loader half of load_composed: fetch, decode ternary, merge.
+    // The loader half of serving a composition: fetch, decode ternary,
+    // merge (what PrepareContext::prepare runs for a composed id).
     let loader = ExpertLoader::new(
         SimLink::new("net", LinkSpec::internet()).with_time_scale(0.0),
         SimLink::new("pcie", LinkSpec::pcie()).with_time_scale(0.0),
@@ -296,6 +297,102 @@ fn synthetic_composition_registry_and_loader() -> anyhow::Result<()> {
     let want = merge_dense(&dense, &comp.merge)?;
     assert_eq!(merged, want);
 
+    std::fs::remove_dir_all(&dir).ok();
+    Ok(())
+}
+
+/// Pipeline equivalence below the engine, no artifacts: for a mixed
+/// stored+composed workload served through the public pipeline API,
+/// whatever the prefetcher stages is bit-identical to the blocking
+/// prepare path, at every lookahead depth and decode-worker count.
+/// (The artifact-gated `prefetch_on_off_serve_identical_predictions`
+/// extends this through PJRT execution to served predictions.)
+#[test]
+fn synthetic_prefetch_pipeline_matches_blocking() -> anyhow::Result<()> {
+    use compeft::coordinator::cache::LruTier;
+    use compeft::coordinator::loader::ExpertLoader;
+    use compeft::coordinator::{
+        PrepareContext, PreparedExpert, Prefetcher, SimLink, TakeOutcome,
+    };
+    use compeft::coordinator::metrics::Metrics;
+    use std::sync::{Arc, Mutex};
+
+    let dir = fresh_dir("prefetch_eq");
+    let mut reg = Registry::new();
+    let cfg = CompressConfig {
+        density: 0.2,
+        alpha: 1.0,
+        granularity: Granularity::Global,
+    };
+    let mut template_like = None;
+    for i in 0..3u64 {
+        let tv = synthetic_tv(70 + i, 6_000);
+        let npz = dir.join(format!("p{i}.lora.npz"));
+        tv.save_npz(&npz)?;
+        reg.register_compeft(&format!("p{i}"), "t", "s", ExpertMethod::Lora, &npz, &cfg)?;
+        template_like.get_or_insert(tv);
+    }
+    reg.register_composition(
+        "merged/ta",
+        &["p0", "p1", "p2"],
+        MergeMethod::TaskArithmetic { lambda: 0.4 },
+    )?;
+    let reg = Arc::new(reg);
+    let templates = bs::zero_templates(&template_like.unwrap());
+    let mk_ctx = |workers: usize| {
+        Arc::new(PrepareContext {
+            loader: ExpertLoader::new(
+                SimLink::new("net", LinkSpec::internet()).with_time_scale(0.0),
+                SimLink::new("pcie", LinkSpec::pcie()).with_time_scale(0.0),
+            )
+            .with_pool(Arc::new(ThreadPool::new(workers))),
+            registry: Arc::clone(&reg),
+            templates: templates.clone(),
+            cpu: Arc::new(Mutex::new(LruTier::new("cpu", 64 << 20))),
+        })
+    };
+
+    let workload = ["p1", "merged/ta", "p0", "p2", "merged/ta"];
+    let reference: Vec<PreparedExpert> = {
+        let ctx = mk_ctx(1);
+        workload.iter().map(|id| ctx.prepare(id).unwrap()).collect()
+    };
+    for depth in [1usize, 2] {
+        for workers in [1usize, 2, 8] {
+            let ctx = mk_ctx(workers);
+            let metrics = Arc::new(Metrics::new());
+            let pf =
+                Prefetcher::start(Arc::clone(&ctx), depth, u64::MAX, Arc::clone(&metrics));
+            for (step, (id, want)) in workload.iter().zip(&reference).enumerate() {
+                // The engine's publication order: current target first
+                // consumed, then the next `depth` ids planned.
+                let upcoming: Vec<String> = workload[step + 1..]
+                    .iter()
+                    .take(depth)
+                    .map(|s| s.to_string())
+                    .collect();
+                let got = match pf.take(id) {
+                    TakeOutcome::Hit(p) | TakeOutcome::Waited(p, _) => p,
+                    TakeOutcome::Miss => ctx.prepare(id)?,
+                    TakeOutcome::Failed(e) => panic!("prefetch failed: {e}"),
+                };
+                pf.note_plan(upcoming);
+                assert_eq!(
+                    got.params, want.params,
+                    "depth={depth} workers={workers} step={step} id={id}"
+                );
+                assert_eq!(got.upload_bytes, want.upload_bytes, "{id}");
+                assert_eq!(got.dense_bytes, want.dense_bytes, "{id}");
+            }
+            drop(pf);
+            let s = metrics.snapshot();
+            assert_eq!(
+                s.prefetch_hits + s.prefetch_waits + s.prefetch_misses,
+                workload.len() as u64,
+                "every pickup resolved one way (depth={depth} workers={workers})"
+            );
+        }
+    }
     std::fs::remove_dir_all(&dir).ok();
     Ok(())
 }
@@ -496,6 +593,102 @@ fn coordinator_serves_merged_expert() -> anyhow::Result<()> {
     // The merged expert moved member bytes over the net at least once.
     assert!(report.net_bytes > 0);
     assert!(report.batches >= 2);
+    Ok(())
+}
+
+/// The pipeline's acceptance bar end to end: the same mixed
+/// stored+composed request trace served with prefetch disabled, and
+/// with prefetch enabled at different depths and decode-worker counts,
+/// produces bit-identical predictions — prefetching changes when swap
+/// work happens, never what is served.
+#[test]
+fn prefetch_on_off_serve_identical_predictions() -> anyhow::Result<()> {
+    let Some(dir) = artifacts() else { return Ok(()) };
+    let found = scan_expert_npz(&dir, "s")?;
+    let lora: Vec<_> = found
+        .iter()
+        .filter(|(t, m, _)| {
+            *m == ExpertMethod::Lora
+                && dir.join("eval").join(format!("task_{t}.npz")).exists()
+        })
+        .take(2)
+        .collect();
+    if lora.len() < 2 {
+        return Ok(());
+    }
+    let build_registry = || -> anyhow::Result<Registry> {
+        let mut registry = Registry::new();
+        let cfg = CompressConfig {
+            density: 0.2,
+            alpha: 1.0,
+            granularity: Granularity::Global,
+        };
+        for (task, m, path) in &lora {
+            registry.register_compeft(task, task, "s", *m, path, &cfg)?;
+        }
+        registry.register_composition(
+            "merged/avg",
+            &[lora[0].0.as_str(), lora[1].0.as_str()],
+            MergeMethod::Average,
+        )?;
+        Ok(registry)
+    };
+
+    // One shared trace cycling member / merged / member experts.
+    let set = bs::load_eval(&dir, &format!("task_{}", lora[0].0))?;
+    let trace: Vec<(String, Vec<i32>, usize)> = (0..9)
+        .map(|i| {
+            let expert = match i % 3 {
+                0 => lora[0].0.clone(),
+                1 => "merged/avg".to_string(),
+                _ => lora[1].0.clone(),
+            };
+            let ex = i % set.n.min(4);
+            (
+                expert,
+                set.tokens[ex * set.seq..(ex + 1) * set.seq].to_vec(),
+                set.n_classes[ex] as usize,
+            )
+        })
+        .collect();
+
+    let serve = |prefetch_depth: usize, decode_workers: usize| -> anyhow::Result<Vec<usize>> {
+        let mut ccfg = CoordinatorConfig::new(dir.clone(), "s");
+        // Room for ~1 dense adapter: every expert change is a cold swap,
+        // the case prefetching exists for.
+        ccfg.gpu_capacity_bytes =
+            build_registry()?.get(&lora[0].0).unwrap().n_params as u64 * 2 + 8;
+        ccfg.policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) };
+        ccfg.time_scale = 0.0;
+        ccfg.prefetch_depth = prefetch_depth;
+        ccfg.decode_workers = decode_workers;
+        let coord = Coordinator::start(ccfg, build_registry()?)?;
+        let pending: Vec<_> = trace
+            .iter()
+            .map(|(e, tokens, n)| coord.submit(e, tokens.clone(), *n))
+            .collect();
+        let classes: Vec<usize> =
+            pending.into_iter().map(|rx| rx.recv().map(|p| p.class)).collect::<Result<_, _>>()?;
+        let report = coord.shutdown()?;
+        if prefetch_depth == 0 {
+            assert_eq!(
+                report.prefetch_hits + report.prefetch_waits + report.prefetch_misses,
+                0,
+                "disabled prefetch records no pickups"
+            );
+        }
+        Ok(classes)
+    };
+
+    let reference = serve(0, 1)?;
+    assert_eq!(reference.len(), trace.len());
+    for (depth, workers) in [(1usize, 1usize), (3, 4), (8, 2)] {
+        let got = serve(depth, workers)?;
+        assert_eq!(
+            got, reference,
+            "predictions must be bit-identical (depth={depth} workers={workers})"
+        );
+    }
     Ok(())
 }
 
