@@ -12,7 +12,13 @@
 //! serving claim end to end with real accuracy preserved.
 //!
 //! Requires `make artifacts`. Run:
-//!   cargo run --release --example serve_experts [scale] [n_requests]
+//!   cargo run --release --example serve_experts [scale] [n_requests] \
+//!       [--store-nodes N] [--replication R]
+//!
+//! With `--store-nodes` the coordinator fetches experts from the
+//! sharded, replicated store (striped multi-replica transfers with
+//! CRC-verified failover) instead of the flat single link — the served
+//! predictions are bit-identical either way.
 
 use anyhow::{Context, Result};
 use compeft::bench_support as bs;
@@ -28,9 +34,29 @@ use compeft::util::rng::{Pcg, Zipf};
 use std::time::{Duration, Instant};
 
 fn main() -> Result<()> {
-    let args: Vec<String> = std::env::args().skip(1).collect();
-    let scale = args.first().cloned().unwrap_or_else(|| "s".into());
-    let n_req: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(400);
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let spec = compeft::util::cli::ArgSpec::new(
+        "serve_experts",
+        "serve the expert pool over original vs ComPEFT checkpoints; \
+         positionals: [scale] [n_requests]",
+    )
+    .flag("store-nodes", "0", "sharded store nodes (0 = flat single link)")
+    .flag("replication", "1", "replicas per expert in the sharded store");
+    let a = spec.parse(&argv)?;
+    // Malformed values error out loudly instead of silently falling
+    // back to the flat store.
+    let store_nodes = a.get_usize("store-nodes")?;
+    let replication = a.get_usize("replication")?;
+    let scale = a
+        .positional()
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "s".into());
+    let n_req: usize = a
+        .positional()
+        .get(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(400);
     let artifacts = bs::require_artifacts();
 
     // Expert pool: every instruct-task LoRA expert of this scale.
@@ -84,6 +110,8 @@ fn main() -> Result<()> {
         cfg.policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) };
         cfg.net = LinkSpec::internet();
         cfg.pcie = LinkSpec::pcie();
+        cfg.store_nodes = store_nodes;
+        cfg.replication = replication;
         let coord = Coordinator::start(cfg, registry)?;
 
         // Identical Zipf trace for both formats.
@@ -148,12 +176,25 @@ fn main() -> Result<()> {
             report.gpu.entries
         );
         println!(
-            "  prefetch: {} hits / {} waits / {} misses, overlap saved {:.2?}\n",
+            "  prefetch: {} hits / {} waits / {} misses, overlap saved {:.2?}",
             report.prefetch_hits,
             report.prefetch_waits,
             report.prefetch_misses,
             report.overlap_saved
         );
+        if store_nodes > 0 {
+            println!(
+                "  store: {} nodes x{} replication, {} stripe retries / {} failovers \
+                 / {} corrupt\n",
+                store_nodes,
+                replication,
+                report.stripe_retries,
+                report.failovers,
+                report.corrupt_payloads
+            );
+        } else {
+            println!();
+        }
         summary.push((
             format,
             n_req as f64 / wall.as_secs_f64(),

@@ -233,9 +233,15 @@ impl MaskPair {
         let len = u64::from_le_bytes(bytes[0..8].try_into()?) as usize;
         let scale = f32::from_le_bytes(bytes[8..12].try_into()?);
         let w = words(len);
-        let need = 12 + 16 * w;
-        if bytes.len() < need {
-            bail!("mask pair truncated: need {need}, have {}", bytes.len());
+        // Checked arithmetic: a corrupt `len` near usize::MAX must fail
+        // here, not overflow the size computation (or allocation-bomb
+        // the word vectors, which are capacity'd from `w` below).
+        match w.checked_mul(16).and_then(|x| x.checked_add(12)) {
+            Some(need) if need <= bytes.len() => {}
+            _ => bail!(
+                "mask pair truncated: len {len} needs more than the {} bytes present",
+                bytes.len()
+            ),
         }
         let mut plus = Vec::with_capacity(w);
         let mut minus = Vec::with_capacity(w);
@@ -338,7 +344,7 @@ mod tests {
             random_index_sets(&mut rng, 4097),
             random_index_sets(&mut rng, 100_000),
         ];
-        for workers in [1usize, 2, 8] {
+        for workers in crate::util::prop::pool_sizes() {
             let pool = ThreadPool::new(workers);
             for chunk_words in [1usize, 9, 1024] {
                 for (i, t) in cases.iter().enumerate() {
@@ -364,7 +370,7 @@ mod tests {
             random_index_sets(&mut rng, 4097),
             random_index_sets(&mut rng, 100_000),
         ];
-        for workers in [1usize, 2, 8] {
+        for workers in crate::util::prop::pool_sizes() {
             let pool = ThreadPool::new(workers);
             for chunk_words in [1usize, 9, 1024] {
                 for (i, t) in cases.iter().enumerate() {

@@ -387,7 +387,7 @@ mod tests {
         let tau = prop::task_vector_like(&mut rng, 200_000);
         let cfg = CompressConfig { density: 0.05, alpha: 2.0, ..Default::default() };
         let serial = compress_vector(&tau, &cfg);
-        for workers in [1usize, 2, 8] {
+        for workers in crate::util::prop::pool_sizes() {
             let pool = ThreadPool::new(workers);
             for chunk in [512usize, 1 << 14, 1 << 16, 1 << 22] {
                 let par = par_compress_vector_cfg(
@@ -462,7 +462,7 @@ mod tests {
             for granularity in [Granularity::Global, Granularity::PerTensor] {
                 let cfg = CompressConfig { density: 0.2, alpha: 1.0, granularity };
                 let serial = compress_params(&tv, &cfg);
-                for workers in [1usize, 2, 8] {
+                for workers in crate::util::prop::pool_sizes() {
                     let pool = ThreadPool::new(workers);
                     let par = par_compress_paramset(&tv, &cfg, &pool);
                     assert_compressed_bit_identical(
@@ -487,7 +487,7 @@ mod tests {
                 let cfg = CompressConfig { density: 0.15, alpha: 2.0, granularity };
                 let c = compress_params(&tv, &cfg);
                 let serial = decompress_params(&c, &tv).unwrap();
-                for workers in [1usize, 2, 8] {
+                for workers in crate::util::prop::pool_sizes() {
                     let pool = ThreadPool::new(workers);
                     for chunk in [1usize, 113, 1 << 16] {
                         let par = par_decompress_params_cfg(
@@ -540,7 +540,7 @@ mod tests {
             let delta = sample_paramset(&mut Pcg::seed(400 + tensors as u64), tensors);
             let mut serial = base.clone();
             serial.add_assign(&delta).unwrap();
-            for workers in [1usize, 2, 8] {
+            for workers in crate::util::prop::pool_sizes() {
                 let pool = ThreadPool::new(workers);
                 for chunk in [1usize, 97, 1 << 16] {
                     let mut par = base.clone();
@@ -608,7 +608,7 @@ mod tests {
                     &serial,
                     &format!("{granularity:?}/{name}/serial"),
                 );
-                for workers in [1usize, 2, 8] {
+                for workers in crate::util::prop::pool_sizes() {
                     let pool = ThreadPool::new(workers);
                     for chunk in [1usize, 113, 1 << 16] {
                         let par = par_merge_cfg(

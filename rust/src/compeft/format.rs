@@ -3,9 +3,14 @@
 //! One file holds a whole [`CompressedParamSet`]: a header, the tensor
 //! layout table, and one payload record per part, each encoded as either
 //! Golomb (storage-optimal) or bitmask (compute-optimal) per §2.2. A
-//! CRC32 over everything after the header guards against truncated or
-//! trailing-garbage transfers — important because the serving path
-//! streams these over simulated links. Readers reject any bytes left
+//! CRC32 guards against truncated, bit-flipped, or trailing-garbage
+//! transfers — important because the serving path streams these over
+//! (faulty) simulated links. In **v2 the CRC covers the header too**,
+//! so *any* single-bit flip anywhere in a v2 buffer — magic, version,
+//! flags, granularity/encoding tags, frame tables, payloads, or the CRC
+//! itself — fails the read (the bit-flip fuzz suite in
+//! `tests/integration.rs` asserts exactly that); v1 keeps its legacy
+//! body-only coverage for compatibility. Readers reject any bytes left
 //! over after the last part: a CRC-consistent writer that appends junk
 //! is a bug, not a format feature.
 //!
@@ -24,7 +29,7 @@
 //! magic "CPFT" | version u16 (1|2) | flags u16 | granularity u8 | encoding u8
 //! n_layout u32 | [ name, ndim u32, dims u64*, offset u64 ]*
 //! n_parts u32  | [ name, FRAMES?, payload_len u64, payload ]*
-//! crc32 u32                                   (over layout+parts)
+//! crc32 u32             (v2: over header+layout+parts; v1: layout+parts)
 //!
 //! FRAMES (v2 only):
 //!   chunk u32    — nonzeros per Golomb frame / words per bitmask chunk
@@ -224,7 +229,10 @@ fn assemble(
     });
     out.push(enc.tag());
     out.extend_from_slice(&body);
-    out.extend_from_slice(&crc32(&body).to_le_bytes());
+    // v2 covers the header too (any bit flip in the buffer fails the
+    // read); v1 keeps the legacy body-only coverage.
+    let crc = if version >= 2 { crc32(&out) } else { crc32(&body) };
+    out.extend_from_slice(&crc.to_le_bytes());
     out
 }
 
@@ -331,17 +339,30 @@ fn from_bytes_impl(
 
     let body = &bytes[10..bytes.len() - 4];
     let stored_crc = u32::from_le_bytes(bytes[bytes.len() - 4..].try_into()?);
-    let actual = crc32(body);
+    // v2 CRCs cover the header as well; v1 only the body (legacy).
+    let covered: &[u8] =
+        if version >= 2 { &bytes[..bytes.len() - 4] } else { body };
+    let actual = crc32(covered);
     if stored_crc != actual {
         bail!("crc mismatch: stored {stored_crc:#x}, computed {actual:#x}");
     }
 
     let mut pos = 0usize;
     let n_layout = get_u32(body, &mut pos)? as usize;
+    // Count fields size pre-allocations, so they are sanity-bounded by
+    // the remaining bytes before any Vec is reserved: a corrupt count
+    // must fail structurally, never allocation-bomb. A layout entry is
+    // ≥ 16 bytes (name len + ndim + offset), a dim 8 bytes.
+    if n_layout > body.len() / 16 + 1 {
+        bail!("layout count {n_layout} exceeds what {} bytes can hold", body.len());
+    }
     let mut layout = Vec::with_capacity(n_layout);
     for _ in 0..n_layout {
         let name = get_str(body, &mut pos)?;
         let ndim = get_u32(body, &mut pos)? as usize;
+        if ndim > (body.len() - pos) / 8 {
+            bail!("tensor {name:?}: ndim {ndim} exceeds the remaining bytes");
+        }
         let mut shape = Vec::with_capacity(ndim);
         for _ in 0..ndim {
             shape.push(get_u64(body, &mut pos)? as usize);
@@ -352,6 +373,9 @@ fn from_bytes_impl(
 
     // Collect raw part records first so payload decode can fan out.
     let n_parts = get_u32(body, &mut pos)? as usize;
+    if n_parts > (body.len() - pos) / 12 + 1 {
+        bail!("part count {n_parts} exceeds what {} bytes can hold", body.len() - pos);
+    }
     let mut raw: Vec<(String, Option<FrameTable>, &[u8])> = Vec::with_capacity(n_parts);
     for _ in 0..n_parts {
         let name = get_str(body, &mut pos)?;
@@ -446,6 +470,39 @@ fn from_bytes_impl(
     Ok((CompressedParamSet { granularity, layout, parts }, enc))
 }
 
+// -- corruption-sweep support (shared by the format tests and the
+// integration bit-flip fuzz) ------------------------------------------------
+
+/// Rebuild a container around a mutated body, recomputing the CRC with
+/// the right per-version coverage so the corruption is CRC-consistent —
+/// it models a *buggy writer*, not line noise. `original` supplies the
+/// 10-byte header (and its version field decides the CRC coverage).
+pub fn reassemble_body(original: &[u8], body: Vec<u8>) -> Vec<u8> {
+    assert!(original.len() >= 10, "need a full header to reassemble");
+    let version = u16::from_le_bytes([original[4], original[5]]);
+    let mut out = original[..10].to_vec();
+    out.extend_from_slice(&body);
+    let crc = if version >= 2 { crc32(&out) } else { crc32(&body) };
+    out.extend_from_slice(&crc.to_le_bytes());
+    out
+}
+
+/// CRC-consistent truncation variants of a container: the body cut at
+/// several depths (inside the layout, the frame tables, and the
+/// payloads), each re-wrapped with a freshly computed CRC. Every
+/// variant must fail **structurally** (never parse short, never panic,
+/// never balloon an allocation) — the contract both the format suite
+/// and the integration corruption sweep assert.
+pub fn truncation_sweep(bytes: &[u8]) -> Vec<Vec<u8>> {
+    assert!(bytes.len() > 14, "not a plausible container");
+    let body = &bytes[10..bytes.len() - 4];
+    [1usize, 8, 40, body.len() / 2, body.len().saturating_sub(5), body.len() - 1]
+        .into_iter()
+        .filter(|&keep| keep < body.len())
+        .map(|keep| reassemble_body(bytes, body[..keep].to_vec()))
+        .collect()
+}
+
 /// Write a compressed expert to disk.
 pub fn save(path: &Path, c: &CompressedParamSet, enc: Encoding) -> Result<u64> {
     if let Some(parent) = path.parent() {
@@ -503,7 +560,7 @@ mod tests {
     #[test]
     fn parallel_container_is_byte_identical() {
         use crate::util::pool::ThreadPool;
-        for workers in [1usize, 2, 8] {
+        for workers in crate::util::prop::pool_sizes() {
             let pool = ThreadPool::new(workers);
             for g in [Granularity::Global, Granularity::PerTensor] {
                 for enc in [Encoding::Golomb, Encoding::Bitmask] {
@@ -526,15 +583,6 @@ mod tests {
                 to_bytes_par(&empty, Encoding::Golomb, &pool)
             );
         }
-    }
-
-    /// Rebuild a container around a mutated body, recomputing the CRC so
-    /// the corruption is CRC-consistent (a buggy writer, not line noise).
-    fn reassemble(header: &[u8], body: Vec<u8>) -> Vec<u8> {
-        let mut out = header[..10].to_vec();
-        out.extend_from_slice(&body);
-        out.extend_from_slice(&crc32(&body).to_le_bytes());
-        out
     }
 
     #[test]
@@ -570,7 +618,7 @@ mod tests {
     #[test]
     fn parallel_decode_matches_serial_across_versions() {
         use crate::util::pool::ThreadPool;
-        for workers in [1usize, 2, 8] {
+        for workers in crate::util::prop::pool_sizes() {
             let pool = ThreadPool::new(workers);
             for g in [Granularity::Global, Granularity::PerTensor] {
                 for enc in [Encoding::Golomb, Encoding::Bitmask] {
@@ -608,7 +656,7 @@ mod tests {
         {
             let mut body = bytes[10..bytes.len() - 4].to_vec();
             body.extend_from_slice(b"JUNK");
-            let evil = reassemble(&bytes, body);
+            let evil = reassemble_body(&bytes, body);
             let err = from_bytes(&evil).unwrap_err().to_string();
             assert!(err.contains("trailing"), "{err}");
             let pool = ThreadPool::new(2);
@@ -618,15 +666,26 @@ mod tests {
 
     #[test]
     fn crc_consistent_truncation_rejected() {
-        let c = sample_compressed(Granularity::PerTensor);
-        let bytes = to_bytes(&c, Encoding::Golomb);
-        let body = &bytes[10..bytes.len() - 4];
-        // Cut the body at several depths (inside the layout, the frame
-        // tables, and the payloads), always with a recomputed CRC: every
-        // cut must fail structurally, never parse short.
-        for keep in [1usize, 8, 40, body.len() / 2, body.len() - 5, body.len() - 1] {
-            let cut = reassemble(&bytes, body[..keep].to_vec());
-            assert!(from_bytes(&cut).is_err(), "cut at {keep} accepted");
+        // Cuts at several depths (inside the layout, the frame tables,
+        // and the payloads), always with a recomputed CRC: every cut
+        // must fail structurally, never parse short. The sweep itself
+        // is the shared `truncation_sweep` helper, which the
+        // integration corruption suite also runs (over both encodings
+        // and granularities, serial and parallel readers).
+        for g in [Granularity::Global, Granularity::PerTensor] {
+            for enc in [Encoding::Golomb, Encoding::Bitmask] {
+                let c = sample_compressed(g);
+                for bytes in [to_bytes(&c, enc), to_bytes_v1(&c, enc)] {
+                    let cuts = truncation_sweep(&bytes);
+                    assert!(cuts.len() >= 5, "sweep must cut at several depths");
+                    for (i, cut) in cuts.iter().enumerate() {
+                        assert!(
+                            from_bytes(cut).is_err(),
+                            "{g:?}/{enc:?} cut {i} accepted"
+                        );
+                    }
+                }
+            }
         }
     }
 
@@ -657,7 +716,7 @@ mod tests {
         let pool = ThreadPool::new(2);
         let mut evil_body = body.clone();
         evil_body[at..at + 4].copy_from_slice(&0u32.to_le_bytes());
-        let evil = reassemble(&bytes, evil_body);
+        let evil = reassemble_body(&bytes, evil_body);
         assert!(from_bytes(&evil).is_err(), "serial reader accepted chunk=0");
         assert!(from_bytes_par(&evil, &pool).is_err(), "parallel reader accepted");
 
@@ -667,7 +726,7 @@ mod tests {
         let stored = u64::from_le_bytes(body[off_at..off_at + 8].try_into().unwrap());
         let mut evil_body = body.clone();
         evil_body[off_at..off_at + 8].copy_from_slice(&(stored + 8).to_le_bytes());
-        let evil = reassemble(&bytes, evil_body);
+        let evil = reassemble_body(&bytes, evil_body);
         assert!(from_bytes(&evil).is_err(), "serial reader accepted a lying offset");
         assert!(
             from_bytes_par(&evil, &pool).is_err(),

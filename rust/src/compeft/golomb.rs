@@ -193,7 +193,7 @@ struct StreamHeader {
     scale: f32,
 }
 
-fn parse_header(r: &mut BitReader) -> Result<StreamHeader> {
+fn parse_header(r: &mut BitReader, payload_bytes: usize) -> Result<StreamHeader> {
     let magic = r.get_bits(32).context("truncated header")? as u32;
     if magic != MAGIC {
         bail!("bad golomb magic {magic:#x}");
@@ -207,6 +207,13 @@ fn parse_header(r: &mut BitReader) -> Result<StreamHeader> {
     let scale = f32::from_bits(r.get_bits(32).context("scale")? as u32);
     if nnz > len {
         bail!("nnz {nnz} exceeds len {len}");
+    }
+    // Every entry costs ≥ 2 bits (unary terminator + sign), so a
+    // stream of `payload_bytes` cannot hold more than 4·bytes entries.
+    // Bounds the index-list pre-allocations below: a corrupt header
+    // declaring an absurd nnz fails here instead of allocation-bombing.
+    if nnz > payload_bytes.saturating_mul(4) {
+        bail!("declared nnz {nnz} impossible for a {payload_bytes}-byte payload");
     }
     Ok(StreamHeader { len, nnz, b, scale })
 }
@@ -247,7 +254,7 @@ fn decode_entries(
 /// Decode a Golomb-coded byte stream back to a ternary vector.
 pub fn decode(bytes: &[u8]) -> Result<TernaryVector> {
     let mut r = BitReader::new(bytes);
-    let h = parse_header(&mut r)?;
+    let h = parse_header(&mut r, bytes.len())?;
     let mut plus = Vec::with_capacity(h.nnz / 2 + 1);
     let mut minus = Vec::with_capacity(h.nnz / 2 + 1);
     decode_entries(&mut r, h.nnz, -1, h.b, h.len, &mut plus, &mut minus)?;
@@ -275,7 +282,7 @@ pub fn decode_par(
     pool: &ThreadPool,
 ) -> Result<TernaryVector> {
     let mut r = BitReader::new(bytes);
-    let h = parse_header(&mut r)?;
+    let h = parse_header(&mut r, bytes.len())?;
     let chunk = table.chunk_nnz as usize;
     if chunk == 0 {
         bail!("frame table chunk_nnz is zero");
@@ -500,7 +507,7 @@ pub(crate) mod tests {
                 &CompressConfig { density: 0.05, ..Default::default() },
             ));
         }
-        for workers in [1usize, 2, 8] {
+        for workers in crate::util::prop::pool_sizes() {
             let pool = ThreadPool::new(workers);
             for chunk_nnz in [1usize, 7, 256, 1 << 20] {
                 for (i, t) in cases.iter().enumerate() {
@@ -532,7 +539,7 @@ pub(crate) mod tests {
                 &CompressConfig { density: 0.05, ..Default::default() },
             ));
         }
-        for workers in [1usize, 2, 8] {
+        for workers in crate::util::prop::pool_sizes() {
             let pool = ThreadPool::new(workers);
             for chunk_nnz in [1usize, 7, 256, 1 << 20] {
                 for (i, t) in cases.iter().enumerate() {

@@ -348,7 +348,7 @@ mod tests {
             (prop::task_vector_like(&mut rng, 64), 0.001), // keep = 1
             (vec![0.5f32], 0.5),
         ];
-        for workers in [1usize, 2, 8] {
+        for workers in crate::util::prop::pool_sizes() {
             let pool = ThreadPool::new(workers);
             for chunk in [100usize, 1 << 12, 1 << 20] {
                 for (i, (tau, k)) in cases.iter().enumerate() {

@@ -21,6 +21,10 @@
 //! 1. **fetch** — [`ExpertLoader::fetch_encoded`]: net link → encoded
 //!    bytes. Thread-agnostic; safe from background prefetch threads
 //!    (the [`SimLink`] serializes concurrent transfers like one NIC).
+//!    With a sharded [`ExpertStore`] attached
+//!    ([`ExpertLoader::with_store`]) this stage becomes a striped
+//!    multi-replica fetch with CRC-verified failover — same bytes,
+//!    lower latency, no single point of failure.
 //! 2. **decode** — [`ExpertLoader::decode`] /
 //!    [`ExpertLoader::decode_compressed`] + [`ExpertLoader::merge_ternary`]
 //!    + [`ExpertLoader::materialize`]: encoded bytes → dense host-side
@@ -48,6 +52,7 @@ use crate::compeft::compress::{decompress_params, CompressedParamSet};
 use crate::compeft::engine;
 use crate::compeft::format;
 use crate::coordinator::registry::{ExpertFormat, ExpertMethod, ExpertRecord};
+use crate::coordinator::store::ExpertStore;
 use crate::coordinator::transport::SimLink;
 use crate::merging::{ternary, MergeMethod};
 use crate::tensor::ParamSet;
@@ -64,12 +69,17 @@ use std::time::{Duration, Instant};
 #[derive(Clone)]
 pub struct ExpertLoader {
     /// Remote → host link (internet or disk, depending on deployment).
+    /// Unused for fetches when a sharded [`ExpertStore`] is attached.
     pub net: SimLink,
     /// Host → device link.
     pub pcie: SimLink,
     /// Optional decode pool: when set, `.cpeft` parsing, dense
     /// materialization, and adapter application run chunked across it.
     pool: Option<Arc<ThreadPool>>,
+    /// Optional sharded store: when set, [`ExpertLoader::fetch_encoded`]
+    /// runs the striped multi-replica fetch (with failover) instead of
+    /// the flat single-link transfer. Bytes are identical either way.
+    store: Option<Arc<ExpertStore>>,
 }
 
 /// Timing breakdown of one load.
@@ -91,7 +101,7 @@ impl LoadTiming {
 
 impl ExpertLoader {
     pub fn new(net: SimLink, pcie: SimLink) -> ExpertLoader {
-        ExpertLoader { net, pcie, pool: None }
+        ExpertLoader { net, pcie, pool: None, store: None }
     }
 
     /// Attach a decode pool; subsequent [`ExpertLoader::decode`] and
@@ -102,8 +112,23 @@ impl ExpertLoader {
         self
     }
 
-    /// Fetch the encoded checkpoint bytes over the net link.
+    /// Attach a sharded expert store: fetches become striped
+    /// multi-replica transfers with CRC-verified failover. The decoded
+    /// bytes — and everything downstream — are bit-identical to the
+    /// single-link path; only the (simulated) latency and the fault
+    /// tolerance change.
+    pub fn with_store(mut self, store: Arc<ExpertStore>) -> ExpertLoader {
+        self.store = Some(store);
+        self
+    }
+
+    /// Fetch the encoded checkpoint bytes: striped from the sharded
+    /// store when one is attached, otherwise a flat transfer over the
+    /// net link.
     pub fn fetch_encoded(&self, rec: &ExpertRecord) -> Result<(Vec<u8>, Duration)> {
+        if let Some(store) = &self.store {
+            return store.fetch(rec);
+        }
         let bytes = std::fs::read(&rec.path)
             .with_context(|| format!("read {}", rec.path.display()))?;
         let sim = self.net.transfer(rec.encoded_bytes);
@@ -321,7 +346,7 @@ mod tests {
         let adapter_serial =
             serial.materialize(ExpertMethod::Lora, &init, &tv_serial).unwrap();
 
-        for workers in [1usize, 2, 8] {
+        for workers in crate::util::prop::pool_sizes() {
             let pooled = fast_links()
                 .with_pool(std::sync::Arc::new(crate::util::pool::ThreadPool::new(
                     workers,
@@ -392,7 +417,7 @@ mod tests {
             let want = merge_dense(&dense, &method).unwrap();
             let (serial, _) = loader.merge_ternary(&refs, &method).unwrap();
             assert_eq!(serial, want, "serial {method:?}");
-            for workers in [1usize, 2, 8] {
+            for workers in crate::util::prop::pool_sizes() {
                 let pooled = fast_links().with_pool(std::sync::Arc::new(
                     crate::util::pool::ThreadPool::new(workers),
                 ));
@@ -409,6 +434,64 @@ mod tests {
         let (bytes, _) = loader.fetch_encoded(rec).unwrap();
         assert!(loader.decode_compressed(rec, &bytes).is_err());
 
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// A store-backed loader fetches byte-identical payloads (decoding
+    /// to the same ternary form) even while the store is failing over
+    /// around a dead node, and the flat `net` link stays untouched.
+    #[test]
+    fn store_backed_loader_fetches_identical_bytes_under_faults() {
+        use crate::coordinator::metrics::Metrics;
+        use crate::coordinator::store::{ExpertStore, Placement, StoreConfig};
+        use crate::coordinator::transport::FaultPlan;
+
+        let dir = std::env::temp_dir().join(format!(
+            "compeft_loader_store_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let tv = sample_tv(29);
+        let npz = dir.join("t.lora.npz");
+        tv.save_npz(&npz).unwrap();
+        let mut reg = Registry::new();
+        reg.register_compeft(
+            "c",
+            "t",
+            "s",
+            ExpertMethod::Lora,
+            &npz,
+            &CompressConfig { density: 0.2, alpha: 1.0, ..Default::default() },
+        )
+        .unwrap();
+        let rec = reg.get("c").unwrap().clone();
+
+        let flat = fast_links();
+        let (want, _) = flat.fetch_encoded(&rec).unwrap();
+
+        let metrics = std::sync::Arc::new(Metrics::new());
+        let mut cfg = StoreConfig::new(3, 2);
+        cfg.time_scale = 0.0;
+        cfg.stripe_bytes = 512;
+        cfg.faults =
+            FaultPlan::none(1).kill_node(Placement::new(3, 2, 0).nodes_for("c")[0]);
+        let store = std::sync::Arc::new(ExpertStore::new(
+            cfg,
+            Some(std::sync::Arc::new(crate::util::pool::ThreadPool::new(2))),
+            std::sync::Arc::clone(&metrics),
+        ));
+        let sharded = fast_links().with_store(std::sync::Arc::clone(&store));
+        let (got, sim) = sharded.fetch_encoded(&rec).unwrap();
+        assert_eq!(got, want, "striped fetch must reassemble the flat bytes");
+        assert!(sim > Duration::ZERO);
+        assert_eq!(sharded.net.bytes_moved(), 0, "flat link unused with a store");
+        assert_eq!(store.bytes_moved(), rec.encoded_bytes);
+        assert!(metrics.snapshot().failovers > 0, "dead primary must fail over");
+
+        // Decode of the striped payload equals decode of the flat one.
+        let (a, _) = flat.decode(&rec, &want, &tv).unwrap();
+        let (b, _) = sharded.decode(&rec, &got, &tv).unwrap();
+        assert_eq!(a, b);
         std::fs::remove_dir_all(&dir).ok();
     }
 

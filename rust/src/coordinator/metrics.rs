@@ -32,6 +32,15 @@ struct Inner {
     /// Simulated fetch+decode time removed from the engine critical
     /// path by prefetching, in µs (the "overlap time saved" counter).
     overlap_saved_us: u64,
+    /// Extra stripe fetch attempts beyond the first, across all striped
+    /// store fetches (every failover retry and corruption re-fetch).
+    stripe_retries: u64,
+    /// Stripes that succeeded on a replica other than their first
+    /// choice (counted once per stripe, however many retries it took).
+    failovers: u64,
+    /// Stripe payloads received corrupt (per-stripe CRC mismatch) and
+    /// re-fetched from another replica.
+    corrupt_payloads: u64,
     queue: LogHistogram,
     swap: LogHistogram,
     exec: LogHistogram,
@@ -114,6 +123,16 @@ impl Metrics {
         self.inner.lock().unwrap().prefetch_wasted += n;
     }
 
+    /// Striped-store fault accounting for one fetch: extra attempts
+    /// beyond the first (`retries`), stripes served by a non-first
+    /// replica (`failovers`), and corrupt receptions (`corrupts`).
+    pub fn record_store_faults(&self, retries: u64, failovers: u64, corrupts: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.stripe_retries += retries;
+        g.failovers += failovers;
+        g.corrupt_payloads += corrupts;
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let g = self.inner.lock().unwrap();
         MetricsSnapshot {
@@ -126,6 +145,9 @@ impl Metrics {
             prefetch_misses: g.prefetch_misses,
             prefetch_wasted: g.prefetch_wasted,
             overlap_saved_us: g.overlap_saved_us,
+            stripe_retries: g.stripe_retries,
+            failovers: g.failovers,
+            corrupt_payloads: g.corrupt_payloads,
             mean_batch_fill: if g.batches == 0 {
                 0.0
             } else {
@@ -160,6 +182,12 @@ pub struct MetricsSnapshot {
     pub prefetch_wasted: u64,
     /// Simulated fetch+decode time hidden behind batch execution, µs.
     pub overlap_saved_us: u64,
+    /// Extra stripe fetch attempts beyond the first (striped store).
+    pub stripe_retries: u64,
+    /// Stripes served by a replica other than their first choice.
+    pub failovers: u64,
+    /// Stripe payloads received corrupt and re-fetched elsewhere.
+    pub corrupt_payloads: u64,
     pub mean_batch_fill: f64,
     pub queue_p50_us: f64,
     pub total_p50_us: f64,
@@ -182,6 +210,9 @@ impl MetricsSnapshot {
             .set("prefetch_misses", Json::num(self.prefetch_misses as f64))
             .set("prefetch_wasted", Json::num(self.prefetch_wasted as f64))
             .set("overlap_saved_us", Json::num(self.overlap_saved_us as f64))
+            .set("stripe_retries", Json::num(self.stripe_retries as f64))
+            .set("failovers", Json::num(self.failovers as f64))
+            .set("corrupt_payloads", Json::num(self.corrupt_payloads as f64))
             .set("mean_batch_fill", Json::num(self.mean_batch_fill))
             .set("total_p50_us", Json::num(self.total_p50_us))
             .set("total_p95_us", Json::num(self.total_p95_us))
@@ -238,8 +269,13 @@ mod tests {
         m.record_prefetch_wait();
         m.record_prefetch_miss();
         m.record_prefetch_wasted(4);
+        m.record_store_faults(3, 2, 1);
+        m.record_store_faults(1, 1, 0);
         let s = m.snapshot();
         assert_eq!(s.rejected, 5);
+        assert_eq!(s.stripe_retries, 4);
+        assert_eq!(s.failovers, 3);
+        assert_eq!(s.corrupt_payloads, 1);
         assert_eq!(s.prefetch_hits, 1);
         assert_eq!(s.prefetch_waits, 2);
         assert_eq!(s.prefetch_misses, 1);
@@ -249,5 +285,8 @@ mod tests {
         assert!(j.contains("\"rejected\":5"));
         assert!(j.contains("\"prefetch_hits\":1"));
         assert!(j.contains("\"overlap_saved_us\":1500"));
+        assert!(j.contains("\"stripe_retries\":4"));
+        assert!(j.contains("\"failovers\":3"));
+        assert!(j.contains("\"corrupt_payloads\":1"));
     }
 }

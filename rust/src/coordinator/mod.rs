@@ -2,14 +2,18 @@
 //! running system.
 //!
 //! * [`registry`] — expert catalog (formats, encoded sizes)
-//! * [`transport`] — simulated internet/disk/PCIe links over real bytes
+//! * [`transport`] — simulated internet/disk/PCIe links over real bytes,
+//!   with deterministic seeded fault injection ([`transport::FaultPlan`])
+//! * [`store`] — sharded, replicated expert store: consistent-hash
+//!   placement, striped parallel fetch, CRC-verified replica failover
 //! * [`cache`] — byte-budgeted LRU tiers (GPU / CPU), with pinning
 //! * [`loader`] — the fetch → decode → upload stages of a swap
 //! * [`batcher`] — per-expert dynamic batching + queue-plan lookahead
 //! * [`pipeline`] — prefetch-and-stage pipeline (background fetch+decode
 //!   overlapped with batch execution)
 //! * [`server`] — the engine thread + public [`server::Coordinator`] API
-//! * [`metrics`] — latency histograms, swap/prefetch/throughput counters
+//! * [`metrics`] — latency histograms, swap/prefetch/throughput/failover
+//!   counters
 
 pub mod batcher;
 pub mod cache;
@@ -18,6 +22,7 @@ pub mod metrics;
 pub mod pipeline;
 pub mod registry;
 pub mod server;
+pub mod store;
 pub mod transport;
 
 pub use pipeline::{PrepareContext, PreparedExpert, Prefetcher, TakeOutcome, Templates};
@@ -25,4 +30,5 @@ pub use registry::{
     CompositionRecord, ExpertFormat, ExpertMethod, ExpertRecord, Registry,
 };
 pub use server::{Coordinator, CoordinatorConfig, EngineReport, Prediction};
-pub use transport::{LinkSpec, SimLink};
+pub use store::{ExpertStore, Placement, StoreConfig};
+pub use transport::{Fault, FaultPlan, FaultSpec, LinkSpec, SimLink};

@@ -93,6 +93,12 @@ pub struct PreparedExpert {
 /// pool), expert catalog, adapter templates, and the host (CPU) tier
 /// for encoded bytes — everything is `Sync`, so one context serves the
 /// engine thread and every prefetch thread.
+///
+/// The fetch stage targets whatever the loader is wired to: the flat
+/// `net` link, or — when the coordinator runs a sharded store
+/// ([`crate::coordinator::store::ExpertStore`]) — the striped
+/// multi-replica fetch with CRC-verified failover. Either way the
+/// fetched bytes are identical, so everything staged downstream is too.
 pub struct PrepareContext {
     pub loader: ExpertLoader,
     pub registry: Arc<Registry>,
@@ -712,7 +718,7 @@ mod tests {
             ids.iter().map(|id| ctx_ref.prepare(id).unwrap()).collect();
 
         for depth in [1usize, 3] {
-            for workers in [1usize, 2, 8] {
+            for workers in crate::util::prop::pool_sizes() {
                 let ctx = fresh_ctx(Arc::clone(&reg), templates.clone(), workers);
                 let metrics = Arc::new(Metrics::new());
                 let pf = Prefetcher::start(
@@ -847,6 +853,87 @@ mod tests {
         assert!(matches!(pf.take("e0"), TakeOutcome::Hit(_)));
         drop(pf);
         assert!(metrics.snapshot().prefetch_wasted >= 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Store-backed pipeline equivalence: a PrepareContext whose loader
+    /// fetches from the sharded store — including one failing over
+    /// around a dead node — prepares experts bit-identical to the
+    /// flat-link blocking path, at every pool size. This is the
+    /// pipeline half of the "sharded store never changes predictions"
+    /// acceptance bar (the integration fault suite extends it over the
+    /// full fault sweep).
+    #[test]
+    fn store_backed_prefetch_matches_flat_blocking_prepare() {
+        use crate::coordinator::store::{ExpertStore, Placement, StoreConfig};
+        use crate::coordinator::transport::{FaultPlan, FaultSpec};
+
+        let dir = std::env::temp_dir()
+            .join(format!("compeft_pipeline_store_{}", std::process::id()));
+        let (reg, templates) = mixed_fixture(&dir);
+        let ids = ["e0", "merged/ties", "e1", "e2"];
+        let ctx_flat = fresh_ctx(Arc::clone(&reg), templates.clone(), 1);
+        let reference: Vec<PreparedExpert> =
+            ids.iter().map(|id| ctx_flat.prepare(id).unwrap()).collect();
+
+        let plans = [
+            FaultPlan::none(0),
+            FaultPlan::new(
+                11,
+                FaultSpec { drop_p: 1.0, first_attempt_only: true, ..Default::default() },
+            ),
+            FaultPlan::none(2).kill_node(Placement::new(3, 2, 0).nodes_for("e0")[0]),
+        ];
+        for plan in plans {
+            for workers in crate::util::prop::pool_sizes() {
+                let pool = Arc::new(ThreadPool::new(workers));
+                let metrics = Arc::new(Metrics::new());
+                let mut scfg = StoreConfig::new(3, 2);
+                scfg.time_scale = 0.0;
+                scfg.stripe_bytes = 1024;
+                scfg.faults = plan.clone();
+                let store = Arc::new(ExpertStore::new(
+                    scfg,
+                    Some(Arc::clone(&pool)),
+                    Arc::clone(&metrics),
+                ));
+                let ctx = Arc::new(PrepareContext {
+                    loader: ExpertLoader::new(
+                        SimLink::new("net", LinkSpec::internet()).with_time_scale(0.0),
+                        SimLink::new("pcie", LinkSpec::pcie()).with_time_scale(0.0),
+                    )
+                    .with_pool(pool)
+                    .with_store(store),
+                    registry: Arc::clone(&reg),
+                    templates: templates.clone(),
+                    cpu: Arc::new(Mutex::new(LruTier::new("cpu", 64 << 20))),
+                });
+                let pf = Prefetcher::start(
+                    Arc::clone(&ctx),
+                    2,
+                    u64::MAX,
+                    Arc::clone(&metrics),
+                );
+                pf.note_plan(ids.iter().map(|s| s.to_string()).collect());
+                for (id, want) in ids.iter().zip(&reference) {
+                    let got = match pf.take(id) {
+                        TakeOutcome::Hit(p) | TakeOutcome::Waited(p, _) => p,
+                        TakeOutcome::Miss => ctx.prepare(id).unwrap(),
+                        TakeOutcome::Failed(e) => panic!("prefetch failed: {e}"),
+                    };
+                    assert_eq!(got.params, want.params, "w={workers} id={id}");
+                    assert_eq!(got.upload_bytes, want.upload_bytes, "{id}");
+                    assert_eq!(got.dense_bytes, want.dense_bytes, "{id}");
+                }
+                drop(pf);
+                if !plan.is_none() {
+                    assert!(
+                        metrics.snapshot().failovers > 0,
+                        "fault plan must have fired through the pipeline"
+                    );
+                }
+            }
+        }
         std::fs::remove_dir_all(&dir).ok();
     }
 

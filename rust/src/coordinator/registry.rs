@@ -29,7 +29,10 @@ pub enum ExpertFormat {
 }
 
 /// Adapter family of the expert.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+///
+/// `Ord` so catalog listings (and [`scan_expert_npz`]) can sort on
+/// `(task, method)` deterministically.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub enum ExpertMethod {
     Lora,
     Ia3,
@@ -95,12 +98,19 @@ impl Registry {
         Registry::default()
     }
 
-    /// Raw insert of a stored-expert record. Does **not** check the
-    /// composition namespace — the checked entry points
-    /// ([`Registry::register_original`], [`Registry::register_compeft`])
-    /// do, and are what benches and the serving setup should use.
-    pub fn insert(&mut self, rec: ExpertRecord) {
+    /// Insert a stored-expert record, running the same id validation as
+    /// the registering entry points: an id colliding with a live
+    /// composition is rejected. (The raw insert used to bypass
+    /// `ensure_id_free_of_compositions` entirely — serving routes
+    /// stored experts before compositions, so a raw insert could
+    /// silently shadow a registered merged expert, the exact hazard the
+    /// checked paths guard against.) Re-inserting an existing *expert*
+    /// id stays allowed and replaces the record (re-registration after
+    /// recompression).
+    pub fn insert(&mut self, rec: ExpertRecord) -> Result<()> {
+        self.ensure_id_free_of_compositions(&rec.id)?;
         self.experts.insert(rec.id.clone(), rec);
+        Ok(())
     }
 
     /// Serving routes stored experts before compositions, so an expert
@@ -239,7 +249,7 @@ impl Registry {
             encoded_bytes: tv.bytes_fp16(),
             n_params: tv.total_elements(),
         };
-        self.insert(rec);
+        self.insert(rec)?;
         Ok(self.get(id).unwrap())
     }
 
@@ -269,13 +279,30 @@ impl Registry {
             encoded_bytes: bytes,
             n_params: tv.total_elements(),
         };
-        self.insert(rec);
+        self.insert(rec)?;
         Ok(self.get(id).unwrap())
+    }
+
+    /// Placement record of the catalog: which store nodes hold each
+    /// stored expert under `placement`, in id order. The serving setup
+    /// prints this so operators can see the shard layout; tests assert
+    /// it is a pure function of the catalog + placement.
+    pub fn assignments(
+        &self,
+        placement: &crate::coordinator::store::Placement,
+    ) -> Vec<(String, Vec<crate::coordinator::store::NodeId>)> {
+        self.experts
+            .keys()
+            .map(|id| (id.clone(), placement.nodes_for(id)))
+            .collect()
     }
 }
 
 /// Scan `artifacts/experts/{scale}` for `{task}.{method}.npz` task
-/// vectors; returns (task, method, path) triples.
+/// vectors; returns (task, method, path) triples sorted on
+/// `(task, method)` — fully deterministic even when one task ships
+/// several adapter families (sorting on task alone left the
+/// intra-task order up to the directory iterator).
 pub fn scan_expert_npz(artifacts: &Path, scale: &str) -> Result<Vec<(String, ExpertMethod, PathBuf)>> {
     let dir = artifacts.join("experts").join(scale);
     let mut out = Vec::new();
@@ -303,7 +330,7 @@ pub fn scan_expert_npz(artifacts: &Path, scale: &str) -> Result<Vec<(String, Exp
             }
         }
     }
-    out.sort_by(|a, b| a.0.cmp(&b.0));
+    out.sort_by(|a, b| (&a.0, a.1).cmp(&(&b.0, b.1)));
     Ok(out)
 }
 
@@ -408,6 +435,103 @@ mod tests {
             .register_original("m/avg", "a", "s", ExpertMethod::Lora, &npz)
             .is_err());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Regression: the raw `insert` used to bypass
+    /// `ensure_id_free_of_compositions`, so it could silently shadow a
+    /// registered composition (serving routes stored experts first).
+    /// It must now run the same validation as the checked paths, while
+    /// still allowing same-kind re-registration.
+    #[test]
+    fn raw_insert_cannot_shadow_a_composition() {
+        let dir = std::env::temp_dir()
+            .join(format!("compeft_raw_insert_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let npz = tv_npz(&dir, "taskA.lora.npz");
+        let mut reg = Registry::new();
+        let cfg = CompressConfig { density: 0.2, ..Default::default() };
+        reg.register_compeft("e1", "a", "s", ExpertMethod::Lora, &npz, &cfg).unwrap();
+        reg.register_compeft("e2", "a", "s", ExpertMethod::Lora, &npz, &cfg).unwrap();
+        reg.register_composition("m/avg", &["e1", "e2"], MergeMethod::Average).unwrap();
+
+        let raw = |id: &str| ExpertRecord {
+            id: id.to_string(),
+            task: "a".into(),
+            scale: "s".into(),
+            method: ExpertMethod::Lora,
+            format: ExpertFormat::OriginalFp16,
+            path: npz.clone(),
+            encoded_bytes: 1024,
+            n_params: 512,
+        };
+        // Shadowing the live composition is rejected...
+        let err = reg.insert(raw("m/avg")).unwrap_err().to_string();
+        assert!(err.contains("collides"), "{err}");
+        assert!(reg.get("m/avg").is_none(), "rejected insert must not land");
+        assert!(reg.composition("m/avg").is_some(), "composition untouched");
+        // ...while fresh ids and expert re-registration stay allowed.
+        reg.insert(raw("fresh")).unwrap();
+        assert!(reg.get("fresh").is_some());
+        reg.insert(raw("e1")).unwrap(); // replace after recompression
+        assert_eq!(reg.get("e1").unwrap().format, ExpertFormat::OriginalFp16);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Placement assignments are a deterministic record of the shard
+    /// layout: id order follows the catalog, node sets follow the
+    /// placement, and recomputing yields the same answer.
+    #[test]
+    fn assignments_record_shard_layout() {
+        use crate::coordinator::store::Placement;
+        let dir = std::env::temp_dir()
+            .join(format!("compeft_reg_assign_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let npz = tv_npz(&dir, "taskA.lora.npz");
+        let mut reg = Registry::new();
+        for id in ["b", "a", "c"] {
+            reg.register_original(id, "t", "s", ExpertMethod::Lora, &npz).unwrap();
+        }
+        let p = Placement::new(4, 2, 3);
+        let got = reg.assignments(&p);
+        assert_eq!(
+            got.iter().map(|(id, _)| id.as_str()).collect::<Vec<_>>(),
+            vec!["a", "b", "c"],
+            "catalog order"
+        );
+        for (id, nodes) in &got {
+            assert_eq!(nodes, &p.nodes_for(id));
+            assert_eq!(nodes.len(), 2);
+        }
+        assert_eq!(got, reg.assignments(&p), "pure function");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Two adapter families of one task must come back in a fixed
+    /// order: the scan sorts on (task, method), not task alone.
+    #[test]
+    fn scan_orders_methods_within_a_task() {
+        let root = std::env::temp_dir()
+            .join(format!("compeft_scan_methods_{}", std::process::id()));
+        let dir = root.join("experts/s");
+        std::fs::create_dir_all(&dir).unwrap();
+        // Same task, two methods — written ia3-first to catch an
+        // iterator-order-dependent scan.
+        tv_npz(&dir, "alpha.ia3.npz");
+        tv_npz(&dir, "alpha.lora.npz");
+        tv_npz(&dir, "beta.full.npz");
+        let found = scan_expert_npz(&root, "s").unwrap();
+        let keys: Vec<(String, ExpertMethod)> =
+            found.iter().map(|(t, m, _)| (t.clone(), *m)).collect();
+        assert_eq!(
+            keys,
+            vec![
+                ("alpha".to_string(), ExpertMethod::Lora),
+                ("alpha".to_string(), ExpertMethod::Ia3),
+                ("beta".to_string(), ExpertMethod::Full),
+            ],
+            "(task, method) order is fixed by the enum, not the dirent order"
+        );
+        std::fs::remove_dir_all(&root).ok();
     }
 
     #[test]

@@ -31,7 +31,8 @@ use crate::coordinator::pipeline::{
     PrepareContext, PreparedExpert, Prefetcher, TakeOutcome, Templates,
 };
 use crate::coordinator::registry::{ExpertMethod, Registry};
-use crate::coordinator::transport::{LinkSpec, SimLink};
+use crate::coordinator::store::{ExpertStore, StoreConfig};
+use crate::coordinator::transport::{FaultPlan, FaultSpec, LinkSpec, SimLink};
 use crate::eval::ANSWER_BASE;
 use crate::runtime::{AdapterKind, ModelBundle, Runtime};
 
@@ -71,6 +72,21 @@ pub struct CoordinatorConfig {
     /// any worker count; this only tunes how much cold-swap latency is
     /// hidden behind execution.
     pub prefetch_depth: usize,
+    /// Nodes in the sharded expert store. `0` = flat single-link store
+    /// (the pre-store behavior). With nodes, fetches run as striped
+    /// multi-replica transfers with CRC-verified failover — predictions
+    /// stay bit-identical at any node count, replication factor, and
+    /// fault seed (given ≥ 1 surviving replica per stripe).
+    pub store_nodes: usize,
+    /// Replicas per expert in the sharded store (clamped to ≥ 1 and to
+    /// the node count at placement time).
+    pub replication: usize,
+    /// Seed of the store's deterministic fault plan: same seed → same
+    /// fault/failover sequence and counters, at any worker count.
+    pub fault_seed: u64,
+    /// Fault probabilities injected into the store links (all-zero by
+    /// default: a healthy store).
+    pub store_faults: FaultSpec,
 }
 
 impl CoordinatorConfig {
@@ -88,6 +104,10 @@ impl CoordinatorConfig {
                 .map(|n| n.get())
                 .unwrap_or(1),
             prefetch_depth: 2,
+            store_nodes: 0,
+            replication: 1,
+            fault_seed: 0,
+            store_faults: FaultSpec::default(),
         }
     }
 }
@@ -127,6 +147,12 @@ pub struct EngineReport {
     pub prefetch_wasted: u64,
     /// Simulated fetch+decode time hidden behind batch execution.
     pub overlap_saved: Duration,
+    /// Extra stripe fetch attempts beyond the first (sharded store).
+    pub stripe_retries: u64,
+    /// Stripes served by a replica other than their first choice.
+    pub failovers: u64,
+    /// Stripe payloads received corrupt and re-fetched elsewhere.
+    pub corrupt_payloads: u64,
 }
 
 /// Public handle: submit requests, read metrics, shut down.
@@ -276,7 +302,28 @@ fn engine_main(
     // fallback) and the prefetch threads; results are bit-identical at
     // any worker count.
     let pool = Arc::new(crate::util::pool::ThreadPool::new(cfg.decode_workers.max(1)));
-    let loader = ExpertLoader::new(net.clone(), pcie.clone()).with_pool(pool);
+    // Sharded store: striped multi-replica fetch over per-node links
+    // (stripes run on the shared decode pool), replacing the flat net
+    // link. Bytes — and therefore predictions — are identical either
+    // way; only latency, fault tolerance, and the failover counters
+    // change.
+    let store = if cfg.store_nodes > 0 {
+        let mut scfg = StoreConfig::new(cfg.store_nodes, cfg.replication);
+        scfg.link = cfg.net;
+        scfg.time_scale = cfg.time_scale;
+        scfg.faults = FaultPlan::new(cfg.fault_seed, cfg.store_faults);
+        Some(Arc::new(ExpertStore::new(
+            scfg,
+            Some(Arc::clone(&pool)),
+            Arc::clone(&metrics),
+        )))
+    } else {
+        None
+    };
+    let mut loader = ExpertLoader::new(net.clone(), pcie.clone()).with_pool(pool);
+    if let Some(store) = &store {
+        loader = loader.with_store(Arc::clone(store));
+    }
     let registry = Arc::new(registry);
     // Host tier of encoded bytes, shared with the prefetch threads
     // (entries pinned while a background decode is in flight).
@@ -473,7 +520,11 @@ fn engine_main(
     Ok(EngineReport {
         gpu: gpu.stats(),
         cpu: cpu.lock().unwrap().stats(),
-        net_bytes: net.bytes_moved(),
+        // With a sharded store, fetch bytes move over its node links.
+        net_bytes: store
+            .as_ref()
+            .map(|s| s.bytes_moved())
+            .unwrap_or_else(|| net.bytes_moved()),
         pcie_bytes: pcie.bytes_moved(),
         batches: snap.batches,
         rejected: snap.rejected,
@@ -482,6 +533,9 @@ fn engine_main(
         prefetch_misses: snap.prefetch_misses,
         prefetch_wasted: snap.prefetch_wasted,
         overlap_saved: Duration::from_micros(snap.overlap_saved_us),
+        stripe_retries: snap.stripe_retries,
+        failovers: snap.failovers,
+        corrupt_payloads: snap.corrupt_payloads,
     })
 }
 

@@ -1,0 +1,743 @@
+//! Sharded, replicated expert store with striped parallel fetch.
+//!
+//! The single flat store behind one `net` [`SimLink`] was both the
+//! fetch-throughput bottleneck and a single point of failure — at the
+//! paper's "ship experts over the internet per query" scale (§5.4),
+//! that link serializes every expert download. This module simulates a
+//! **multi-node store**:
+//!
+//! * [`Placement`] — consistent-hash placement with virtual nodes:
+//!   `nodes_for(id)` returns `[primary, replicas…]`, a pure function of
+//!   `(id, node set, seed)`. Adding a node remaps only ~K/n expert ids
+//!   (bounded churn), so a growing store does not reshuffle the world.
+//! * [`ExpertStore`] — one [`SimLink`] per node. A fetch splits the
+//!   payload into **stripes** (default: one per replica) pulled
+//!   concurrently from different replicas on the shared [`ThreadPool`]
+//!   and reassembled byte-identically, so remote fetch latency scales
+//!   down with replication instead of serializing on one NIC.
+//! * **Failover** — every stripe carries a CRC computed from the source
+//!   payload; a dropped or corrupt-on-read attempt (injected by the
+//!   links' deterministic [`FaultPlan`]) is detected and the stripe is
+//!   re-fetched from the next replica. With ≥ 1 surviving replica per
+//!   stripe the reassembled bytes — and therefore the served
+//!   predictions — are bit-identical to the single-store path.
+//!   Retries/failovers/corruptions are counted into
+//!   [`Metrics`] (`stripe_retries`, `failovers`, `corrupt_payloads`).
+//!
+//! ## Determinism
+//!
+//! Stripe geometry depends only on the payload size and config, and
+//! faults are keyed on `(id, stripe, attempt)` — never on wall-clock or
+//! arrival order — so the same seed yields the same failover sequence
+//! and counters at any pool size. The reported fetch duration is
+//! likewise computed from the analytic link model (per-replica service
+//! sums, max across replicas = parallel completion), not from wall
+//! timing, so it is reproducible too.
+//!
+//! ## Byte accounting
+//!
+//! Stripes charge the links a proportional share of the record's
+//! `encoded_bytes` (the same accounting the flat path used), so
+//! `net_bytes` and Table-5-style timing stay comparable whether the
+//! store is on or off: a 1-node, 1-replica store fetch costs exactly
+//! `latency + encoded_bytes/bandwidth`, the flat link's cost.
+
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::registry::ExpertRecord;
+use crate::coordinator::transport::{Fault, FaultPlan, LinkSpec, SimLink};
+use crate::compeft::format::crc32;
+use crate::util::pool::{chunk_ranges, ThreadPool};
+use crate::util::rng::{fnv1a_64, splitmix64};
+use anyhow::{bail, Context, Result};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// A store node's id (index into the store's link array).
+pub type NodeId = usize;
+
+/// Virtual nodes per physical node on the hash ring. More vnodes →
+/// smoother load split and tighter churn bounds, at O(nodes · vnodes)
+/// ring size. 128 keeps per-node share within a few percent of 1/n.
+const VNODES: usize = 128;
+
+/// Default placement seed: the one the coordinator's serve path uses
+/// (shared with the `serve` CLI's shard-layout printout so the record
+/// it prints always matches where the store actually fetches from).
+pub const DEFAULT_PLACEMENT_SEED: u64 = 0;
+
+fn hash_id(seed: u64, id: &str) -> u64 {
+    splitmix64(fnv1a_64(seed, id.as_bytes()))
+}
+
+/// Consistent-hash placement of expert ids onto store nodes.
+///
+/// Pure data: building the same `(nodes, replication, seed)` twice
+/// yields the same ring, and [`Placement::nodes_for`] is a pure
+/// function of the id — no interior state, no randomness at query time.
+#[derive(Clone, Debug)]
+pub struct Placement {
+    /// Sorted (point, node) ring of virtual nodes.
+    ring: Vec<(u64, NodeId)>,
+    nodes: Vec<NodeId>,
+    replication: usize,
+    seed: u64,
+}
+
+impl Placement {
+    /// Placement over nodes `0..nodes`.
+    pub fn new(nodes: usize, replication: usize, seed: u64) -> Placement {
+        let ids: Vec<NodeId> = (0..nodes.max(1)).collect();
+        Placement::with_nodes(&ids, replication, seed)
+    }
+
+    /// Placement over an explicit node set (ids need not be contiguous
+    /// — the churn property tests grow the set one node at a time).
+    pub fn with_nodes(nodes: &[NodeId], replication: usize, seed: u64) -> Placement {
+        assert!(!nodes.is_empty(), "placement needs at least one node");
+        let mut ring = Vec::with_capacity(nodes.len() * VNODES);
+        for &node in nodes {
+            for v in 0..VNODES {
+                let point =
+                    splitmix64(seed ^ splitmix64(((node as u64) << 32) | v as u64));
+                ring.push((point, node));
+            }
+        }
+        ring.sort_unstable();
+        Placement {
+            ring,
+            nodes: nodes.to_vec(),
+            replication: replication.max(1),
+            seed,
+        }
+    }
+
+    /// Nodes holding `id`, primary first, then `replication - 1`
+    /// distinct replicas (fewer if the cluster is smaller): walk the
+    /// ring clockwise from the id's hash point collecting distinct
+    /// nodes — the textbook consistent-hashing successor walk.
+    pub fn nodes_for(&self, id: &str) -> Vec<NodeId> {
+        let want = self.replication.min(self.nodes.len());
+        let h = hash_id(self.seed ^ 0xA5A5_A5A5_A5A5_A5A5, id);
+        let start = self.ring.partition_point(|&(p, _)| p < h);
+        let mut out = Vec::with_capacity(want);
+        for i in 0..self.ring.len() {
+            let (_, node) = self.ring[(start + i) % self.ring.len()];
+            if !out.contains(&node) {
+                out.push(node);
+                if out.len() == want {
+                    break;
+                }
+            }
+        }
+        out
+    }
+
+    /// Configured replication factor.
+    pub fn replication(&self) -> usize {
+        self.replication
+    }
+
+    /// The node universe this placement maps onto.
+    pub fn nodes(&self) -> &[NodeId] {
+        &self.nodes
+    }
+}
+
+/// Configuration of the simulated multi-node store.
+#[derive(Clone, Debug)]
+pub struct StoreConfig {
+    /// Number of store nodes (each with its own [`SimLink`]).
+    pub nodes: usize,
+    /// Replicas per expert (clamped to the node count at placement).
+    pub replication: usize,
+    /// Placement seed (the hash ring; independent of the fault seed).
+    pub placement_seed: u64,
+    /// Link model of every node's pipe.
+    pub link: LinkSpec,
+    /// Wall-clock compression for the node links (see
+    /// [`SimLink::with_time_scale`]).
+    pub time_scale: f64,
+    /// Stripe size in *encoded* bytes; `0` = auto (one stripe per
+    /// replica, the latency-optimal split for high-latency links).
+    pub stripe_bytes: u64,
+    /// Deterministic fault injection applied to every node link.
+    pub faults: FaultPlan,
+}
+
+impl StoreConfig {
+    pub fn new(nodes: usize, replication: usize) -> StoreConfig {
+        StoreConfig {
+            nodes: nodes.max(1),
+            replication: replication.max(1),
+            placement_seed: DEFAULT_PLACEMENT_SEED,
+            link: LinkSpec::internet(),
+            time_scale: 1.0,
+            stripe_bytes: 0,
+            faults: FaultPlan::none(0),
+        }
+    }
+}
+
+/// Per-fetch fault accounting (also accumulated into [`Metrics`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FetchFaults {
+    /// Extra attempts beyond the first, summed over stripes.
+    pub stripe_retries: u64,
+    /// Stripes that succeeded on a non-first replica (once per stripe).
+    pub failovers: u64,
+    /// Attempts whose payload arrived corrupt (per-stripe CRC caught).
+    pub corrupt_payloads: u64,
+}
+
+/// The simulated multi-node expert store.
+pub struct ExpertStore {
+    placement: Placement,
+    /// One contended link per node, all sharing the fault plan (each
+    /// keyed with its own node id).
+    links: Vec<SimLink>,
+    spec: LinkSpec,
+    stripe_bytes: u64,
+    pool: Option<Arc<ThreadPool>>,
+    metrics: Arc<Metrics>,
+}
+
+/// One stripe's fetch work order.
+struct StripeJob {
+    stripe: u32,
+    /// Byte range in the payload.
+    start: usize,
+    end: usize,
+    /// Link charge for this range (proportional share of encoded_bytes).
+    charge: u64,
+    /// Replica attempt order (placement rotated by stripe index).
+    replicas: Vec<NodeId>,
+}
+
+/// One stripe's outcome: the verified bytes, per-node simulated service
+/// time spent (successful + failed attempts), and fault counts.
+struct StripeDone {
+    start: usize,
+    bytes: Vec<u8>,
+    node_time: Vec<(NodeId, Duration)>,
+    faults: FetchFaults,
+}
+
+impl ExpertStore {
+    /// Build the store. The pool (shared with the decode engine) runs
+    /// stripe fetches concurrently; without one, stripes fetch serially
+    /// (identical bytes and counters, longer wall time).
+    pub fn new(
+        cfg: StoreConfig,
+        pool: Option<Arc<ThreadPool>>,
+        metrics: Arc<Metrics>,
+    ) -> ExpertStore {
+        let nodes = cfg.nodes.max(1);
+        let links = (0..nodes)
+            .map(|n| {
+                SimLink::new("store", cfg.link)
+                    .with_time_scale(cfg.time_scale)
+                    .with_faults(cfg.faults.clone(), n)
+            })
+            .collect();
+        ExpertStore {
+            placement: Placement::new(nodes, cfg.replication, cfg.placement_seed),
+            links,
+            spec: cfg.link,
+            stripe_bytes: cfg.stripe_bytes,
+            pool,
+            metrics,
+        }
+    }
+
+    pub fn placement(&self) -> &Placement {
+        &self.placement
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.links.len()
+    }
+
+    /// Payload bytes moved across all node links.
+    pub fn bytes_moved(&self) -> u64 {
+        self.links.iter().map(|l| l.bytes_moved()).sum()
+    }
+
+    /// Fetch an expert's encoded payload: striped across its replicas,
+    /// CRC-verified per stripe, reassembled byte-identically. Returns
+    /// the payload and the simulated fetch time (analytic model:
+    /// per-replica service sums, max across replicas).
+    pub fn fetch(&self, rec: &ExpertRecord) -> Result<(Vec<u8>, Duration)> {
+        let data = std::fs::read(&rec.path)
+            .with_context(|| format!("read {}", rec.path.display()))?;
+        let (out, sim, faults) = self.fetch_payload(&rec.id, &data, rec.encoded_bytes)?;
+        self.metrics.record_store_faults(
+            faults.stripe_retries,
+            faults.failovers,
+            faults.corrupt_payloads,
+        );
+        Ok((out, sim))
+    }
+
+    /// The striped fetch over an in-memory payload (`fetch` minus the
+    /// file read and metrics sink) — also the unit the store tests
+    /// drive directly. `encoded_bytes` is the link-charge total
+    /// (`rec.encoded_bytes`); stripes charge proportional shares that
+    /// sum to it exactly.
+    pub fn fetch_payload(
+        &self,
+        id: &str,
+        data: &[u8],
+        encoded_bytes: u64,
+    ) -> Result<(Vec<u8>, Duration, FetchFaults)> {
+        let replicas = self.placement.nodes_for(id);
+        if data.is_empty() {
+            bail!("expert {id:?} has an empty payload");
+        }
+        let stripe = if self.stripe_bytes > 0 {
+            self.stripe_bytes as usize
+        } else {
+            data.len().div_ceil(replicas.len())
+        };
+        let jobs: Vec<StripeJob> = chunk_ranges(data.len(), stripe)
+            .into_iter()
+            .enumerate()
+            .map(|(i, (start, end))| {
+                // Proportional encoded-byte charge; prefix differences
+                // sum to encoded_bytes exactly, so striping never
+                // changes the total byte accounting. The prefix product
+                // runs in u128: multi-GiB payloads would overflow the
+                // u64 intermediate (encoded_bytes · offset).
+                let share = |off: usize| -> u64 {
+                    (encoded_bytes as u128 * off as u128 / data.len() as u128) as u64
+                };
+                let charge = share(end) - share(start);
+                // Rotate the replica order per stripe so stripes spread
+                // across the replica set instead of hammering the
+                // primary.
+                let r = i % replicas.len();
+                let order: Vec<NodeId> = replicas[r..]
+                    .iter()
+                    .chain(replicas[..r].iter())
+                    .copied()
+                    .collect();
+                StripeJob { stripe: i as u32, start, end, charge, replicas: order }
+            })
+            .collect();
+
+        let fetch_one = |job: &StripeJob| -> Result<StripeDone> {
+            let want = &data[job.start..job.end];
+            let expect_crc = crc32(want);
+            let mut node_time = Vec::with_capacity(job.replicas.len());
+            let mut faults = FetchFaults::default();
+            for (attempt, &node) in job.replicas.iter().enumerate() {
+                let out = self.links[node].transfer_keyed(
+                    job.charge,
+                    id,
+                    job.stripe,
+                    attempt as u32,
+                );
+                // What the wire delivered this attempt (None = dropped).
+                let got: Option<Vec<u8>> = match out.fault {
+                    Fault::Drop => {
+                        // Connection latency paid, nothing delivered.
+                        node_time.push((node, self.spec.latency));
+                        None
+                    }
+                    Fault::Corrupt => {
+                        // Full (wasted) transfer of damaged bytes: flip
+                        // one deterministic byte; the per-stripe CRC
+                        // below is what detects it — real verification,
+                        // not a flag check.
+                        let mut g = want.to_vec();
+                        let at = (hash_id(job.stripe as u64, id) ^ attempt as u64)
+                            as usize
+                            % g.len();
+                        g[at] ^= 0x20;
+                        node_time.push((node, self.spec.duration_for(job.charge)));
+                        Some(g)
+                    }
+                    Fault::Delay(d) => {
+                        node_time.push((node, self.spec.duration_for(job.charge) + d));
+                        Some(want.to_vec())
+                    }
+                    Fault::None => {
+                        node_time.push((node, self.spec.duration_for(job.charge)));
+                        Some(want.to_vec())
+                    }
+                };
+                // Integrity gate: accept only CRC-verified payloads.
+                match got {
+                    Some(g) if crc32(&g) == expect_crc => {
+                        if attempt > 0 {
+                            faults.failovers += 1;
+                        }
+                        return Ok(StripeDone {
+                            start: job.start,
+                            bytes: g,
+                            node_time,
+                            faults,
+                        });
+                    }
+                    Some(_) => {
+                        faults.corrupt_payloads += 1;
+                        faults.stripe_retries += 1;
+                    }
+                    None => faults.stripe_retries += 1,
+                }
+            }
+            bail!(
+                "stripe {} of {id:?}: all {} replicas failed",
+                job.stripe,
+                job.replicas.len()
+            )
+        };
+
+        let results: Vec<Result<StripeDone>> = match &self.pool {
+            Some(pool) => {
+                let refs: Vec<&StripeJob> = jobs.iter().collect();
+                pool.scoped_map(refs, |job| fetch_one(job))
+            }
+            None => jobs.iter().map(fetch_one).collect(),
+        };
+
+        // Reassemble + aggregate the analytic time model: each node's
+        // link serializes its own stripes (sum), replicas run in
+        // parallel (max across nodes).
+        let mut out = vec![0u8; data.len()];
+        let mut per_node = vec![Duration::ZERO; self.links.len()];
+        let mut faults = FetchFaults::default();
+        for done in results {
+            let done = done?;
+            out[done.start..done.start + done.bytes.len()].copy_from_slice(&done.bytes);
+            for (node, d) in done.node_time {
+                per_node[node] += d;
+            }
+            faults.stripe_retries += done.faults.stripe_retries;
+            faults.failovers += done.faults.failovers;
+            faults.corrupt_payloads += done.faults.corrupt_payloads;
+        }
+        let sim = per_node.into_iter().max().unwrap_or(Duration::ZERO);
+        Ok((out, sim, faults))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compeft::compress::{compress_params, CompressConfig};
+    use crate::compeft::format::{self, Encoding};
+    use crate::coordinator::registry::{ExpertFormat, ExpertMethod};
+    use crate::coordinator::transport::FaultSpec;
+    use crate::tensor::{ParamSet, Tensor};
+    use crate::util::prop;
+    use crate::util::rng::Pcg;
+    use std::collections::BTreeSet;
+    use std::path::PathBuf;
+
+    // -- placement properties ----------------------------------------------
+
+    /// Every id gets exactly `min(replication, n)` distinct nodes, and
+    /// placement is a pure function of (id, node set, seed).
+    #[test]
+    fn placement_replicates_distinctly_and_is_pure() {
+        for (n, r) in [(1usize, 1usize), (2, 2), (5, 2), (8, 3), (8, 12)] {
+            let a = Placement::new(n, r, 9);
+            let b = Placement::new(n, r, 9);
+            let other_seed = Placement::new(n, r, 10);
+            let mut moved_by_seed = 0;
+            for i in 0..200 {
+                let id = format!("expert/{i}");
+                let nodes = a.nodes_for(&id);
+                assert_eq!(nodes.len(), r.min(n), "n={n} r={r}");
+                let distinct: BTreeSet<_> = nodes.iter().collect();
+                assert_eq!(distinct.len(), nodes.len(), "replicas distinct");
+                assert!(nodes.iter().all(|&x| x < n), "nodes in range");
+                // Pure: a fresh instance agrees exactly.
+                assert_eq!(nodes, b.nodes_for(&id));
+                if nodes != other_seed.nodes_for(&id) {
+                    moved_by_seed += 1;
+                }
+            }
+            if n > 1 {
+                assert!(moved_by_seed > 0, "seed must matter (n={n} r={r})");
+            }
+        }
+    }
+
+    /// Consistent-hashing churn bound: adding one node remaps at most
+    /// ~K/n primaries, and every id that moves, moves TO the new node.
+    #[test]
+    fn placement_adding_a_node_has_bounded_churn() {
+        const K: usize = 600;
+        for seed in [0u64, 7, 2026] {
+            for n in [4usize, 8] {
+                let before_nodes: Vec<NodeId> = (0..n).collect();
+                let mut after_nodes = before_nodes.clone();
+                after_nodes.push(n); // the new node
+                let before = Placement::with_nodes(&before_nodes, 2, seed);
+                let after = Placement::with_nodes(&after_nodes, 2, seed);
+                let mut moved = 0usize;
+                for i in 0..K {
+                    let id = format!("expert/{seed}/{i}");
+                    let p0 = before.nodes_for(&id)[0];
+                    let p1 = after.nodes_for(&id)[0];
+                    if p0 != p1 {
+                        moved += 1;
+                        assert_eq!(
+                            p1, n,
+                            "a remapped primary must land on the new node"
+                        );
+                    }
+                }
+                // Expected ~K/(n+1); 3x slack covers vnode variance.
+                let bound = 3 * K / (n + 1);
+                assert!(
+                    moved > 0 && moved <= bound,
+                    "seed={seed} n={n}: moved {moved}, bound {bound}"
+                );
+            }
+        }
+    }
+
+    /// Load balance: with 128 vnodes no node owns a wildly unfair share
+    /// of primaries.
+    #[test]
+    fn placement_spreads_primaries() {
+        let n = 6;
+        let p = Placement::new(n, 1, 3);
+        let mut counts = vec![0usize; n];
+        const K: usize = 1200;
+        for i in 0..K {
+            counts[p.nodes_for(&format!("e{i}"))[0]] += 1;
+        }
+        let (min, max) = (counts.iter().min().unwrap(), counts.iter().max().unwrap());
+        assert!(
+            *min * 3 >= *max,
+            "share spread too wide: {counts:?} (min {min}, max {max})"
+        );
+    }
+
+    // -- striped fetch ------------------------------------------------------
+
+    fn temp_record(dir: &PathBuf, seed: u64) -> (ExpertRecord, Vec<u8>) {
+        std::fs::create_dir_all(dir).unwrap();
+        let mut rng = Pcg::seed(seed);
+        let mut p = ParamSet::new();
+        p.insert(
+            "w",
+            Tensor::new(vec![6000], prop::task_vector_like(&mut rng, 6000)),
+        );
+        let c = compress_params(
+            &p,
+            &CompressConfig { density: 0.2, ..Default::default() },
+        );
+        let path = dir.join(format!("e{seed}.cpeft"));
+        let bytes = format::save(&path, &c, Encoding::Golomb).unwrap();
+        let data = std::fs::read(&path).unwrap();
+        (
+            ExpertRecord {
+                id: format!("e{seed}"),
+                task: "t".into(),
+                scale: "s".into(),
+                method: ExpertMethod::Lora,
+                format: ExpertFormat::Compeft,
+                path,
+                encoded_bytes: bytes,
+                n_params: 6000,
+            },
+            data,
+        )
+    }
+
+    fn store(cfg: StoreConfig, workers: usize) -> ExpertStore {
+        let pool = if workers == 0 {
+            None
+        } else {
+            Some(Arc::new(ThreadPool::new(workers)))
+        };
+        ExpertStore::new(cfg, pool, Arc::new(Metrics::new()))
+    }
+
+    /// Fault-free striped fetch reassembles the exact payload at every
+    /// node count, replication factor, stripe size, and pool size, and
+    /// the byte accounting equals the flat path's `encoded_bytes`.
+    #[test]
+    fn striped_fetch_is_byte_identical_and_charges_encoded_bytes() {
+        let dir = std::env::temp_dir()
+            .join(format!("compeft_store_eq_{}", std::process::id()));
+        let (rec, want) = temp_record(&dir, 11);
+        for (nodes, repl) in [(1usize, 1usize), (3, 2), (5, 3), (4, 8)] {
+            for stripe_bytes in [0u64, 257, 4096] {
+                // 0 workers = the poolless serial fetch path.
+                for workers in std::iter::once(0).chain(prop::pool_sizes()) {
+                    let mut cfg = StoreConfig::new(nodes, repl);
+                    cfg.time_scale = 0.0;
+                    cfg.stripe_bytes = stripe_bytes;
+                    let s = store(cfg, workers);
+                    let (got, sim, faults) = s
+                        .fetch_payload(&rec.id, &want, rec.encoded_bytes)
+                        .unwrap();
+                    assert_eq!(
+                        got, want,
+                        "nodes={nodes} repl={repl} stripe={stripe_bytes} w={workers}"
+                    );
+                    assert_eq!(faults, FetchFaults::default(), "fault-free run");
+                    assert!(sim > Duration::ZERO);
+                    assert_eq!(
+                        s.bytes_moved(),
+                        rec.encoded_bytes,
+                        "stripe charges must sum to encoded_bytes exactly"
+                    );
+                }
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// The latency story: with R replicas and auto-striping, the
+    /// analytic fetch time is `latency + (bytes/R)/bw` — strictly below
+    /// the single-node `latency + bytes/bw` whenever R > 1.
+    #[test]
+    fn striping_beats_single_link_on_the_model() {
+        let dir = std::env::temp_dir()
+            .join(format!("compeft_store_lat_{}", std::process::id()));
+        let (rec, data) = temp_record(&dir, 13);
+        let mut single_cfg = StoreConfig::new(1, 1);
+        single_cfg.time_scale = 0.0;
+        let flat_cost = single_cfg.link.duration_for(rec.encoded_bytes);
+        let single = store(single_cfg, 2);
+        let (_, t1, _) = single.fetch_payload(&rec.id, &data, rec.encoded_bytes).unwrap();
+        // 1 node, 1 replica, auto stripe = the flat link's exact cost.
+        assert_eq!(t1, flat_cost);
+
+        let mut prev = t1;
+        for repl in [2usize, 3] {
+            let mut cfg = StoreConfig::new(repl, repl);
+            cfg.time_scale = 0.0;
+            let s = store(cfg, 4);
+            let (_, t, _) = s.fetch_payload(&rec.id, &data, rec.encoded_bytes).unwrap();
+            assert!(
+                t < prev,
+                "replication {repl}: {t:?} not below {prev:?}"
+            );
+            prev = t;
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Failover: faulted fetches still reassemble the exact payload,
+    /// count their retries/failovers/corruptions, and the counters are
+    /// identical across pool sizes and repeated runs (determinism).
+    #[test]
+    fn faulted_fetch_recovers_and_counts_deterministically() {
+        let dir = std::env::temp_dir()
+            .join(format!("compeft_store_fault_{}", std::process::id()));
+        let (rec, want) = temp_record(&dir, 17);
+        let plans: Vec<(&str, FaultPlan)> = vec![
+            (
+                "drop-primary",
+                FaultPlan::new(
+                    5,
+                    FaultSpec { drop_p: 1.0, first_attempt_only: true, ..Default::default() },
+                ),
+            ),
+            (
+                "corrupt-primary",
+                FaultPlan::new(
+                    6,
+                    FaultSpec {
+                        corrupt_p: 1.0,
+                        first_attempt_only: true,
+                        ..Default::default()
+                    },
+                ),
+            ),
+            (
+                "kill-primary-node",
+                // Kill the node that is this id's primary, so stripe 0
+                // (whose attempt order starts at the primary) is
+                // guaranteed to fail over.
+                FaultPlan::none(7)
+                    .kill_node(Placement::new(3, 2, 0).nodes_for(&rec.id)[0]),
+            ),
+        ];
+        for (name, plan) in plans {
+            let mut reference: Option<FetchFaults> = None;
+            for &workers in &prop::pool_sizes() {
+                for round in 0..2 {
+                    let mut cfg = StoreConfig::new(3, 2);
+                    cfg.time_scale = 0.0;
+                    cfg.stripe_bytes = 256; // several stripes per fetch
+                    cfg.faults = plan.clone();
+                    let s = store(cfg, workers);
+                    let (got, _, faults) =
+                        s.fetch_payload(&rec.id, &want, rec.encoded_bytes).unwrap();
+                    assert_eq!(got, want, "{name} w={workers}");
+                    assert!(
+                        faults.stripe_retries > 0,
+                        "{name}: plan must actually fire"
+                    );
+                    assert!(faults.failovers > 0, "{name}: failover must occur");
+                    if name == "corrupt-primary" {
+                        assert!(faults.corrupt_payloads > 0, "{name}");
+                    }
+                    match &reference {
+                        None => reference = Some(faults),
+                        Some(r) => assert_eq!(
+                            faults, *r,
+                            "{name}: counters must not depend on pool size \
+                             (w={workers}, round={round})"
+                        ),
+                    }
+                }
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// A stripe with no surviving replica fails loudly (never returns
+    /// silently corrupt bytes): killing every node makes fetch error.
+    #[test]
+    fn fetch_fails_when_no_replica_survives() {
+        let dir = std::env::temp_dir()
+            .join(format!("compeft_store_dead_{}", std::process::id()));
+        let (rec, data) = temp_record(&dir, 19);
+        let mut cfg = StoreConfig::new(2, 2);
+        cfg.time_scale = 0.0;
+        cfg.faults = FaultPlan::none(0).kill_node(0).kill_node(1);
+        let s = store(cfg, 2);
+        let err = s
+            .fetch_payload(&rec.id, &data, rec.encoded_bytes)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("replicas failed"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// `fetch` end to end over a real file + metrics sink: payload
+    /// parses back as the original container, counters land in the
+    /// shared Metrics.
+    #[test]
+    fn fetch_reads_file_and_records_metrics() {
+        let dir = std::env::temp_dir()
+            .join(format!("compeft_store_file_{}", std::process::id()));
+        let (rec, _) = temp_record(&dir, 23);
+        let metrics = Arc::new(Metrics::new());
+        let mut cfg = StoreConfig::new(3, 2);
+        cfg.time_scale = 0.0;
+        cfg.stripe_bytes = 512;
+        cfg.faults = FaultPlan::new(
+            1,
+            FaultSpec { drop_p: 1.0, first_attempt_only: true, ..Default::default() },
+        );
+        let s = ExpertStore::new(cfg, Some(Arc::new(ThreadPool::new(2))), metrics.clone());
+        let (bytes, sim) = s.fetch(&rec).unwrap();
+        assert!(format::from_bytes(&bytes).is_ok(), "payload survives striping");
+        assert!(sim > Duration::ZERO);
+        let snap = metrics.snapshot();
+        assert!(snap.stripe_retries > 0);
+        assert_eq!(snap.stripe_retries, snap.failovers, "every drop failed over");
+        assert_eq!(snap.corrupt_payloads, 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

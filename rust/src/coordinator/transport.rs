@@ -20,6 +20,8 @@
 //! semantics under that concurrency — a prefetch does not get a free
 //! ride past the NIC, it queues like any other transfer.
 
+use crate::util::rng::Pcg;
+use std::collections::BTreeSet;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -54,6 +56,123 @@ impl LinkSpec {
     }
 }
 
+/// What happened to one faulted transfer attempt.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fault {
+    /// Delivered normally.
+    None,
+    /// Delivered, but the service time grew by the given amount
+    /// (congestion, retransmits).
+    Delay(Duration),
+    /// The transfer failed outright (node unreachable, connection
+    /// reset). Only the connection latency was paid; no payload moved.
+    Drop,
+    /// The payload was delivered but corrupted in flight — the caller's
+    /// integrity check (per-stripe CRC in the expert store) must catch
+    /// it and re-fetch from another replica.
+    Corrupt,
+}
+
+/// Fault probabilities and magnitudes of a [`FaultPlan`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FaultSpec {
+    /// Probability a transfer is delayed by `delay`.
+    pub delay_p: f64,
+    /// Extra service time of a delayed transfer.
+    pub delay: Duration,
+    /// Probability a transfer is dropped.
+    pub drop_p: f64,
+    /// Probability a transfer is corrupted in flight.
+    pub corrupt_p: f64,
+    /// When set, faults hit only `attempt == 0` of each stripe — every
+    /// failover is then guaranteed to succeed, which is how the
+    /// "drop-primary" / "corrupt-one-stripe" test plans keep ≥ 1
+    /// surviving replica per stripe by construction.
+    pub first_attempt_only: bool,
+}
+
+/// Deterministic, seeded fault injection for keyed transfers.
+///
+/// Faults are decided by a pure function of
+/// `(seed, node, key, stripe, attempt)` — **not** by a per-link
+/// transfer counter — so the fault sequence is independent of thread
+/// interleaving: the same seed produces the same failover sequence and
+/// counters at any worker count, which is what makes the fault suites
+/// deterministic across pool sizes.
+///
+/// Unkeyed [`SimLink::transfer`] calls are never faulted; only the
+/// sharded expert store issues keyed transfers.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    spec: FaultSpec,
+    /// Nodes that drop every transfer (the "kill-one-node" plan).
+    dead_nodes: BTreeSet<usize>,
+}
+
+impl FaultPlan {
+    /// A plan that injects nothing (the production default).
+    pub fn none(seed: u64) -> FaultPlan {
+        FaultPlan::new(seed, FaultSpec::default())
+    }
+
+    pub fn new(seed: u64, spec: FaultSpec) -> FaultPlan {
+        FaultPlan { seed, spec, dead_nodes: BTreeSet::new() }
+    }
+
+    /// Mark a node dead: every transfer it serves is dropped.
+    pub fn kill_node(mut self, node: usize) -> FaultPlan {
+        self.dead_nodes.insert(node);
+        self
+    }
+
+    /// True when this plan can never inject a fault.
+    pub fn is_none(&self) -> bool {
+        self.dead_nodes.is_empty()
+            && self.spec.delay_p <= 0.0
+            && self.spec.drop_p <= 0.0
+            && self.spec.corrupt_p <= 0.0
+    }
+
+    /// Decide the fault for one transfer attempt. Pure: depends only on
+    /// the plan and the `(node, key, stripe, attempt)` coordinates.
+    pub fn decide(&self, node: usize, key: &str, stripe: u32, attempt: u32) -> Fault {
+        if self.dead_nodes.contains(&node) {
+            return Fault::Drop;
+        }
+        if self.spec.first_attempt_only && attempt > 0 {
+            return Fault::None;
+        }
+        // The shared seeded FNV-1a key-fold (util::rng::fnv1a_64, also
+        // the store placement's fold) xor'd with the coordinates, then
+        // drawn through a Pcg stream: deterministic across platforms,
+        // well mixed across neighboring stripes/attempts.
+        let mut h = crate::util::rng::fnv1a_64(self.seed, key.as_bytes());
+        h ^= ((node as u64) << 48) ^ ((stripe as u64) << 16) ^ attempt as u64;
+        let u = Pcg::new(h, self.seed.rotate_left(17) | 1).next_f64();
+        let FaultSpec { delay_p, drop_p, corrupt_p, delay, .. } = self.spec;
+        if u < drop_p {
+            Fault::Drop
+        } else if u < drop_p + corrupt_p {
+            Fault::Corrupt
+        } else if u < drop_p + corrupt_p + delay_p {
+            Fault::Delay(delay)
+        } else {
+            Fault::None
+        }
+    }
+}
+
+/// Result of a keyed (fault-injectable) transfer.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultedTransfer {
+    /// Simulated transfer time, including queueing and any injected
+    /// delay. A dropped transfer still pays the connection latency.
+    pub sim: Duration,
+    /// What the fault plan did to this attempt.
+    pub fault: Fault,
+}
+
 struct LinkState {
     /// Wall-clock instant the link drains in the *scaled* domain —
     /// governs how long callers actually sleep.
@@ -75,6 +194,9 @@ pub struct SimLink {
     time_scale: f64,
     /// Epoch anchoring the simulated clock.
     origin: Instant,
+    /// Fault injection for keyed transfers: the plan plus this link's
+    /// node id in the store topology. Unkeyed transfers are unaffected.
+    faults: Option<Arc<(FaultPlan, usize)>>,
     state: Arc<Mutex<LinkState>>,
 }
 
@@ -85,6 +207,7 @@ impl SimLink {
             spec,
             time_scale: 1.0,
             origin: Instant::now(),
+            faults: None,
             state: Arc::new(Mutex::new(LinkState {
                 busy_until: None,
                 sim_free_at: 0.0,
@@ -92,6 +215,13 @@ impl SimLink {
                 transfers: 0,
             })),
         }
+    }
+
+    /// Attach a fault plan. `node` is this link's node id in the store
+    /// topology — the coordinate the plan's decisions are keyed on.
+    pub fn with_faults(mut self, plan: FaultPlan, node: usize) -> SimLink {
+        self.faults = Some(Arc::new((plan, node)));
+        self
     }
 
     /// Compress wall-clock sleeps by `scale` (metrics stay in simulated
@@ -119,8 +249,44 @@ impl SimLink {
     /// which at `scale = 0` amplified nanoseconds of noise into ~1e12×
     /// phantom queueing under contention.
     pub fn transfer(&self, bytes: u64) -> Duration {
+        self.transfer_service(bytes, self.spec.duration_for(bytes))
+    }
+
+    /// Keyed transfer: like [`SimLink::transfer`], but subject to the
+    /// attached [`FaultPlan`] (no plan → never faulted). The key
+    /// coordinates `(key, stripe, attempt)` — not a transfer counter —
+    /// select the fault, so concurrency cannot change the outcome.
+    ///
+    /// A [`Fault::Drop`] pays only the connection latency and moves no
+    /// payload bytes; [`Fault::Delay`] stretches the service time;
+    /// [`Fault::Corrupt`] transfers normally (the caller's integrity
+    /// check is what detects the damage).
+    pub fn transfer_keyed(
+        &self,
+        bytes: u64,
+        key: &str,
+        stripe: u32,
+        attempt: u32,
+    ) -> FaultedTransfer {
+        let fault = match &self.faults {
+            Some(f) => f.0.decide(f.1, key, stripe, attempt),
+            None => Fault::None,
+        };
+        let sim = match fault {
+            Fault::Drop => self.transfer_service(0, self.spec.latency),
+            Fault::Delay(d) => {
+                self.transfer_service(bytes, self.spec.duration_for(bytes) + d)
+            }
+            Fault::None | Fault::Corrupt => self.transfer(bytes),
+        };
+        FaultedTransfer { sim, fault }
+    }
+
+    /// The queueing core shared by every transfer flavor: occupy the
+    /// link for `service` (both clocks), account `bytes`, sleep the
+    /// scaled wall wait, return the simulated time including queueing.
+    fn transfer_service(&self, bytes: u64, service: Duration) -> Duration {
         let now = Instant::now();
-        let service = self.spec.duration_for(bytes);
         let scale = self.time_scale;
         let (wall_wait, queue_sim) = {
             let mut st = self.state.lock().unwrap();
@@ -294,6 +460,101 @@ mod tests {
                 "transfer {i}: {sim:?} exceeds the whole burst's service"
             );
         }
+    }
+
+    /// Fault decisions are a pure function of (seed, node, key, stripe,
+    /// attempt): two plans with the same seed agree everywhere, the
+    /// decision never depends on call order, and different seeds
+    /// produce different sequences.
+    #[test]
+    fn fault_plan_is_deterministic_and_seeded() {
+        let spec = FaultSpec {
+            delay_p: 0.2,
+            delay: Duration::from_millis(5),
+            drop_p: 0.2,
+            corrupt_p: 0.2,
+            first_attempt_only: false,
+        };
+        let a = FaultPlan::new(42, spec);
+        let b = FaultPlan::new(42, spec);
+        let c = FaultPlan::new(43, spec);
+        let mut seen = [0usize; 4];
+        let mut differs_from_c = 0;
+        for node in 0..3usize {
+            for stripe in 0..40u32 {
+                for attempt in 0..2u32 {
+                    let fa = a.decide(node, "expert/x", stripe, attempt);
+                    assert_eq!(fa, b.decide(node, "expert/x", stripe, attempt));
+                    // Re-asking (any interleaving) never changes the answer.
+                    assert_eq!(fa, a.decide(node, "expert/x", stripe, attempt));
+                    if fa != c.decide(node, "expert/x", stripe, attempt) {
+                        differs_from_c += 1;
+                    }
+                    seen[match fa {
+                        Fault::None => 0,
+                        Fault::Delay(_) => 1,
+                        Fault::Drop => 2,
+                        Fault::Corrupt => 3,
+                    }] += 1;
+                }
+            }
+        }
+        assert!(seen.iter().all(|&n| n > 0), "all fault kinds occur: {seen:?}");
+        assert!(differs_from_c > 0, "a different seed must change the plan");
+
+        // Dead nodes drop everything; first_attempt_only spares retries.
+        let killed = FaultPlan::none(7).kill_node(1);
+        assert_eq!(killed.decide(1, "e", 0, 0), Fault::Drop);
+        assert_eq!(killed.decide(1, "e", 9, 3), Fault::Drop);
+        assert_eq!(killed.decide(0, "e", 0, 0), Fault::None);
+        let primary_only = FaultPlan::new(
+            3,
+            FaultSpec { drop_p: 1.0, first_attempt_only: true, ..Default::default() },
+        );
+        assert_eq!(primary_only.decide(0, "e", 5, 0), Fault::Drop);
+        assert_eq!(primary_only.decide(0, "e", 5, 1), Fault::None);
+        assert!(FaultPlan::none(0).is_none());
+        assert!(!killed.is_none());
+        assert!(!primary_only.is_none());
+    }
+
+    /// Keyed transfers apply the plan's timing semantics: a drop pays
+    /// only latency and moves no bytes, a delay stretches the service
+    /// time, an unfaulted keyed transfer equals a plain transfer.
+    #[test]
+    fn transfer_keyed_applies_fault_timing() {
+        let spec = LinkSpec { bandwidth: 1e6, latency: Duration::from_millis(10) };
+        // drop_p = 1: every keyed transfer on this link is dropped.
+        let dropper = SimLink::new("t", spec)
+            .with_time_scale(0.0)
+            .with_faults(
+                FaultPlan::new(1, FaultSpec { drop_p: 1.0, ..Default::default() }),
+                0,
+            );
+        let out = dropper.transfer_keyed(1_000_000, "e", 0, 0);
+        assert_eq!(out.fault, Fault::Drop);
+        assert_eq!(out.sim, spec.latency, "drop pays connection latency only");
+        assert_eq!(dropper.bytes_moved(), 0, "no payload moved on a drop");
+        assert_eq!(dropper.transfers(), 1);
+
+        // delay_p = 1: service time grows by exactly the configured delay.
+        let delay = Duration::from_millis(7);
+        let delayer = SimLink::new("t", spec)
+            .with_time_scale(0.0)
+            .with_faults(
+                FaultPlan::new(1, FaultSpec { delay_p: 1.0, delay, ..Default::default() }),
+                0,
+            );
+        let out = delayer.transfer_keyed(1_000_000, "e", 0, 0);
+        assert_eq!(out.fault, Fault::Delay(delay));
+        assert_eq!(out.sim, spec.duration_for(1_000_000) + delay);
+        assert_eq!(delayer.bytes_moved(), 1_000_000);
+
+        // No plan attached: keyed == plain, never faulted.
+        let clean = SimLink::new("t", spec).with_time_scale(0.0);
+        let out = clean.transfer_keyed(1_000_000, "e", 0, 0);
+        assert_eq!(out.fault, Fault::None);
+        assert_eq!(out.sim, spec.duration_for(1_000_000));
     }
 
     #[test]

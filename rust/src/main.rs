@@ -205,6 +205,9 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .flag("alpha", "1.0", "ComPEFT α")
         .flag("time-scale", "1.0", "simulated-link wall-clock factor")
         .flag("prefetch-depth", "2", "experts prefetched ahead of execution (0 = off)")
+        .flag("store-nodes", "0", "sharded store nodes (0 = flat single link)")
+        .flag("replication", "1", "replicas per expert in the sharded store")
+        .flag("fault-seed", "0", "seed of the store's deterministic fault plan")
         .flag("seed", "0", "trace seed");
     let a = spec.parse(argv)?;
     let artifacts = bs::require_artifacts();
@@ -248,6 +251,27 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     ccfg.pcie = LinkSpec::pcie();
     ccfg.time_scale = a.get_f64("time-scale")?;
     ccfg.prefetch_depth = a.get_usize("prefetch-depth")?;
+    ccfg.store_nodes = a.get_usize("store-nodes")?;
+    ccfg.replication = a.get_usize("replication")?;
+    ccfg.fault_seed = a.get_u64("fault-seed")?;
+    if ccfg.store_nodes > 0 {
+        // Shard layout record: how the catalog maps onto store nodes —
+        // built with the same seed the engine's store uses, so the
+        // printed layout always matches where fetches actually go.
+        let placement = compeft::coordinator::Placement::new(
+            ccfg.store_nodes,
+            ccfg.replication,
+            compeft::coordinator::store::DEFAULT_PLACEMENT_SEED,
+        );
+        let mut per_node = vec![0usize; ccfg.store_nodes];
+        for (_, nodes) in registry.assignments(&placement) {
+            per_node[nodes[0]] += 1;
+        }
+        println!(
+            "sharded store: {} nodes, replication {}, primaries per node {:?}",
+            ccfg.store_nodes, ccfg.replication, per_node
+        );
+    }
     let coord = Coordinator::start(ccfg, registry)?;
 
     // Replay a Zipf-skewed trace; tokens come from each task's eval set.
@@ -322,6 +346,10 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         report.prefetch_wasted,
         report.overlap_saved,
         report.rejected
+    );
+    println!(
+        "store: {} stripe retries  {} failovers  {} corrupt payloads",
+        report.stripe_retries, report.failovers, report.corrupt_payloads
     );
     Ok(())
 }

@@ -207,7 +207,7 @@ mod tests {
     #[test]
     fn scoped_map_borrows_stack_data() {
         let data: Vec<u64> = (0..10_000).collect();
-        for workers in [1, 2, 8] {
+        for workers in crate::util::prop::pool_sizes() {
             let pool = ThreadPool::new(workers);
             let ranges = chunk_ranges(data.len(), 997);
             let sums = pool.scoped_map(ranges.clone(), |(s, e)| {

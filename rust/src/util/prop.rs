@@ -47,6 +47,27 @@ pub fn sizes(rng: &mut Pcg) -> usize {
     }
 }
 
+/// Worker-count ladder for the pool-parameterized equivalence suites.
+///
+/// Defaults to `{1, 2, 8}`; the `COMPEFT_TEST_WORKERS` environment
+/// variable overrides it with a single count (`"8"`) or a comma list
+/// (`"1,8"`) — the CI test matrix uses this to re-run every
+/// pool-parameterized suite at fixed worker counts without editing the
+/// tests.
+pub fn pool_sizes() -> Vec<usize> {
+    if let Ok(s) = std::env::var("COMPEFT_TEST_WORKERS") {
+        let sizes: Vec<usize> = s
+            .split(',')
+            .filter_map(|t| t.trim().parse().ok())
+            .filter(|&n| (1..=64).contains(&n))
+            .collect();
+        if !sizes.is_empty() {
+            return sizes;
+        }
+    }
+    vec![1, 2, 8]
+}
+
 /// Assert two [`ParamSet`](crate::tensor::ParamSet)s are *bit*-identical
 /// (names, shapes, and every f32's bit pattern — NaN-safe and
 /// signed-zero-strict, unlike `PartialEq`). The shared teeth of the

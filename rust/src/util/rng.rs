@@ -7,6 +7,28 @@
 //! simulated links) take an explicit [`Pcg`] so every run is
 //! reproducible from a seed.
 
+/// splitmix64 finalizer: a cheap, well-mixed u64 → u64 bijection.
+/// Used to turn structured keys (node ids, hash folds) into uniform
+/// points for consistent hashing and fault-plan decisions.
+pub fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E3779B97F4A7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
+    x ^ (x >> 31)
+}
+
+/// Seeded FNV-1a over a byte string. The one key-fold shared by the
+/// store's consistent-hash placement and the transport's fault plan —
+/// fault determinism ("same seed → same failover sequence") depends on
+/// this exact function, so it lives in one place.
+pub fn fnv1a_64(seed: u64, bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64 ^ seed;
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
 /// PCG-XSH-RR 64/32 generator.
 ///
 /// Not cryptographic. Deterministic across platforms (pure integer ops).

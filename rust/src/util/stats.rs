@@ -304,7 +304,7 @@ mod tests {
         let n = 3 * MOMENT_BLOCK + 12_345;
         let xs: Vec<f32> = (0..n).map(|_| rng.normal_ms(0.0, 0.01) as f32).collect();
         let serial = blocked_std_f32(&xs);
-        for workers in [1, 2, 8] {
+        for workers in crate::util::prop::pool_sizes() {
             let pool = ThreadPool::new(workers);
             let par = par_blocked_std_f32(&xs, &pool);
             assert_eq!(serial.to_bits(), par.to_bits(), "workers={workers}");

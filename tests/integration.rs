@@ -25,6 +25,7 @@ use compeft::merging::{merge_dense, MergeMethod};
 use compeft::runtime::AdapterKind;
 use compeft::tensor::{ParamSet, Tensor};
 use compeft::util::pool::ThreadPool;
+use compeft::util::prop;
 use compeft::util::rng::Pcg;
 use std::path::PathBuf;
 use std::time::Duration;
@@ -229,7 +230,7 @@ fn synthetic_ternary_merge_matches_dense_over_wire() -> anyhow::Result<()> {
             let want = merge_dense(&dense, &method)?;
             let serial = merge_ternary(&refs, &method)?;
             assert_eq!(serial, want, "{granularity:?}/{method:?} serial");
-            for workers in [1usize, 2, 8] {
+            for workers in prop::pool_sizes() {
                 let pool = ThreadPool::new(workers);
                 let par = par_merge(&refs, &method, &pool)?;
                 assert_eq!(par, want, "{granularity:?}/{method:?} w={workers}");
@@ -358,7 +359,7 @@ fn synthetic_prefetch_pipeline_matches_blocking() -> anyhow::Result<()> {
         workload.iter().map(|id| ctx.prepare(id).unwrap()).collect()
     };
     for depth in [1usize, 2] {
-        for workers in [1usize, 2, 8] {
+        for workers in prop::pool_sizes() {
             let ctx = mk_ctx(workers);
             let metrics = Arc::new(Metrics::new());
             let pf =
@@ -394,6 +395,224 @@ fn synthetic_prefetch_pipeline_matches_blocking() -> anyhow::Result<()> {
         }
     }
     std::fs::remove_dir_all(&dir).ok();
+    Ok(())
+}
+
+/// The deterministic fault-injection suite (the sharded store's
+/// acceptance bar, artifact-free): for a mixed stored+composed
+/// workload, a store-backed `PrepareContext` under seeded fault plans —
+/// delay-only, drop-primary, corrupt-stripes, kill-one-node — prepares
+/// experts **bit-identical** to the flat single-store reference, with
+/// `failovers > 0` wherever failures were injected, and with the same
+/// failover counters at every pool size and on every rerun (same seed →
+/// same sequence).
+#[test]
+fn synthetic_sharded_store_fault_sweeps_converge() -> anyhow::Result<()> {
+    use compeft::coordinator::cache::LruTier;
+    use compeft::coordinator::loader::ExpertLoader;
+    use compeft::coordinator::metrics::Metrics;
+    use compeft::coordinator::store::{ExpertStore, Placement, StoreConfig};
+    use compeft::coordinator::transport::{FaultPlan, FaultSpec};
+    use compeft::coordinator::{PrepareContext, PreparedExpert, SimLink};
+    use std::sync::{Arc, Mutex};
+
+    let dir = fresh_dir("store_faults");
+    let mut reg = Registry::new();
+    let cfg = CompressConfig {
+        density: 0.15,
+        alpha: 1.0,
+        granularity: Granularity::Global,
+    };
+    let mut template_like = None;
+    for i in 0..3u64 {
+        let tv = synthetic_tv(90 + i, 8_000);
+        let npz = dir.join(format!("s{i}.lora.npz"));
+        tv.save_npz(&npz)?;
+        reg.register_compeft(&format!("s{i}"), "t", "s", ExpertMethod::Lora, &npz, &cfg)?;
+        template_like.get_or_insert(tv);
+    }
+    reg.register_composition(
+        "merged/ties",
+        &["s0", "s1", "s2"],
+        MergeMethod::Ties { density: 0.4, lambda: 1.0 },
+    )?;
+    let reg = std::sync::Arc::new(reg);
+    let templates = bs::zero_templates(&template_like.unwrap());
+    let workload = ["s1", "merged/ties", "s0", "s2"];
+
+    // Flat single-store reference (no store attached).
+    let flat_ctx = PrepareContext {
+        loader: ExpertLoader::new(
+            SimLink::new("net", LinkSpec::internet()).with_time_scale(0.0),
+            SimLink::new("pcie", LinkSpec::pcie()).with_time_scale(0.0),
+        )
+        .with_pool(Arc::new(ThreadPool::new(2))),
+        registry: Arc::clone(&reg),
+        templates: templates.clone(),
+        cpu: Arc::new(Mutex::new(LruTier::new("cpu", 64 << 20))),
+    };
+    let reference: Vec<PreparedExpert> =
+        workload.iter().map(|id| flat_ctx.prepare(id).unwrap()).collect();
+
+    // The seeded sweeps. `must_failover` encodes which plans inject
+    // actual failures (delay-only slows transfers but loses nothing).
+    let kill = Placement::new(3, 2, 0).nodes_for("s0")[0];
+    let sweeps: Vec<(&str, FaultPlan, bool)> = vec![
+        (
+            "delay-only",
+            FaultPlan::new(
+                101,
+                FaultSpec {
+                    delay_p: 1.0,
+                    delay: Duration::from_millis(3),
+                    ..Default::default()
+                },
+            ),
+            false,
+        ),
+        (
+            "drop-primary",
+            FaultPlan::new(
+                102,
+                FaultSpec { drop_p: 1.0, first_attempt_only: true, ..Default::default() },
+            ),
+            true,
+        ),
+        (
+            "corrupt-stripes",
+            FaultPlan::new(
+                103,
+                FaultSpec {
+                    corrupt_p: 1.0,
+                    first_attempt_only: true,
+                    ..Default::default()
+                },
+            ),
+            true,
+        ),
+        ("kill-one-node", FaultPlan::none(104).kill_node(kill), true),
+    ];
+
+    for (name, plan, must_failover) in sweeps {
+        let mut counter_ref: Option<(u64, u64, u64)> = None;
+        for workers in prop::pool_sizes() {
+            for round in 0..2 {
+                let pool = Arc::new(ThreadPool::new(workers));
+                let metrics = Arc::new(Metrics::new());
+                let mut scfg = StoreConfig::new(3, 2);
+                scfg.time_scale = 0.0;
+                scfg.stripe_bytes = 200; // several stripes per expert
+                scfg.faults = plan.clone();
+                let store = Arc::new(ExpertStore::new(
+                    scfg,
+                    Some(Arc::clone(&pool)),
+                    Arc::clone(&metrics),
+                ));
+                let ctx = PrepareContext {
+                    loader: ExpertLoader::new(
+                        SimLink::new("net", LinkSpec::internet()).with_time_scale(0.0),
+                        SimLink::new("pcie", LinkSpec::pcie()).with_time_scale(0.0),
+                    )
+                    .with_pool(Arc::clone(&pool))
+                    .with_store(Arc::clone(&store)),
+                    registry: Arc::clone(&reg),
+                    templates: templates.clone(),
+                    cpu: Arc::new(Mutex::new(LruTier::new("cpu", 64 << 20))),
+                };
+                for (id, want) in workload.iter().zip(&reference) {
+                    let got = ctx.prepare(id)?;
+                    prop::assert_paramset_bit_identical(
+                        &got.params,
+                        &want.params,
+                        &format!("{name} w={workers} id={id}"),
+                    );
+                    assert_eq!(got.upload_bytes, want.upload_bytes, "{name}/{id}");
+                    assert_eq!(got.dense_bytes, want.dense_bytes, "{name}/{id}");
+                }
+                let s = metrics.snapshot();
+                if must_failover {
+                    assert!(s.failovers > 0, "{name}: failures must have fired");
+                    assert!(s.stripe_retries >= s.failovers, "{name}");
+                } else {
+                    assert_eq!(s.stripe_retries, 0, "{name}: delay loses nothing");
+                    assert_eq!(s.failovers, 0, "{name}");
+                }
+                if name == "corrupt-stripes" {
+                    assert!(s.corrupt_payloads > 0, "{name}");
+                } else {
+                    assert_eq!(s.corrupt_payloads, 0, "{name}");
+                }
+                // Same seed → same failover sequence and counters, at
+                // every pool size and on every rerun.
+                let counters = (s.stripe_retries, s.failovers, s.corrupt_payloads);
+                match &counter_ref {
+                    None => counter_ref = Some(counters),
+                    Some(r) => assert_eq!(
+                        counters, *r,
+                        "{name}: counters drifted (w={workers}, round={round})"
+                    ),
+                }
+            }
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+    Ok(())
+}
+
+/// Corruption-robustness sweep for `compeft::format`: a seeded bit-flip
+/// pass over **every byte** of `.cpeft` v2 buffers — header, frame
+/// tables, Golomb payloads, bitmask words, and the CRC itself — must
+/// return `Err` from both readers, and never panic or OOM (v2 CRCs
+/// cover the full buffer, so no flip can slip through; corrupt counts
+/// and lengths are structurally bounded before any allocation).
+/// The CRC-consistent truncation sweep (the shared
+/// `format::truncation_sweep` helper, also run by the format unit
+/// suite) must fail structurally at every cut depth too.
+#[test]
+fn synthetic_cpeft_bitflip_fuzz_never_panics() -> anyhow::Result<()> {
+    let tv = synthetic_tv(77, 6_000);
+    let pool = ThreadPool::new(2);
+    let mut rng = Pcg::seed(0xB17F11);
+    for granularity in [Granularity::Global, Granularity::PerTensor] {
+        for enc in [Encoding::Golomb, Encoding::Bitmask] {
+            let cfg = CompressConfig { density: 0.1, alpha: 1.0, granularity };
+            let c = compress_params(&tv, &cfg);
+            let bytes = to_bytes(&c, enc);
+            assert!(format::from_bytes(&bytes).is_ok(), "fixture must parse");
+
+            // Raw bit flips: every byte position, one seeded bit each.
+            for pos in 0..bytes.len() {
+                let mut evil = bytes.clone();
+                evil[pos] ^= 1u8 << rng.below(8);
+                let res = format::from_bytes(&evil);
+                assert!(
+                    res.is_err(),
+                    "{granularity:?}/{enc:?}: flip at byte {pos} was accepted"
+                );
+                // The parallel reader agrees (sampled: it shares the
+                // structural parse, only payload decode fans out).
+                if pos % 5 == 0 {
+                    assert!(
+                        format::from_bytes_par(&evil, &pool).is_err(),
+                        "{granularity:?}/{enc:?}: parallel reader accepted flip at {pos}"
+                    );
+                }
+            }
+
+            // CRC-consistent truncations (buggy-writer model): every
+            // cut fails structurally on both readers.
+            for (i, cut) in format::truncation_sweep(&bytes).iter().enumerate() {
+                assert!(
+                    format::from_bytes(cut).is_err(),
+                    "{granularity:?}/{enc:?}: truncation {i} accepted"
+                );
+                assert!(
+                    format::from_bytes_par(cut, &pool).is_err(),
+                    "{granularity:?}/{enc:?}: truncation {i} accepted (par)"
+                );
+            }
+        }
+    }
     Ok(())
 }
 
@@ -689,6 +908,116 @@ fn prefetch_on_off_serve_identical_predictions() -> anyhow::Result<()> {
             "predictions must be bit-identical (depth={depth} workers={workers})"
         );
     }
+    Ok(())
+}
+
+/// The sharded store's acceptance bar through the full engine: the same
+/// mixed stored+composed trace served by the flat single-link store,
+/// by sharded stores of several node counts/replication factors, and by
+/// a sharded store under a seeded fault plan, produces bit-identical
+/// predictions — sharding and failover change where bytes come from,
+/// never what is served.
+#[test]
+fn sharded_store_serve_identical_predictions() -> anyhow::Result<()> {
+    use compeft::coordinator::transport::FaultSpec;
+
+    let Some(dir) = artifacts() else { return Ok(()) };
+    let found = scan_expert_npz(&dir, "s")?;
+    let lora: Vec<_> = found
+        .iter()
+        .filter(|(t, m, _)| {
+            *m == ExpertMethod::Lora
+                && dir.join("eval").join(format!("task_{t}.npz")).exists()
+        })
+        .take(2)
+        .collect();
+    if lora.len() < 2 {
+        return Ok(());
+    }
+    let build_registry = || -> anyhow::Result<Registry> {
+        let mut registry = Registry::new();
+        let cfg = CompressConfig {
+            density: 0.2,
+            alpha: 1.0,
+            granularity: Granularity::Global,
+        };
+        for (task, m, path) in &lora {
+            registry.register_compeft(task, task, "s", *m, path, &cfg)?;
+        }
+        registry.register_composition(
+            "merged/avg",
+            &[lora[0].0.as_str(), lora[1].0.as_str()],
+            MergeMethod::Average,
+        )?;
+        Ok(registry)
+    };
+
+    let set = bs::load_eval(&dir, &format!("task_{}", lora[0].0))?;
+    let trace: Vec<(String, Vec<i32>, usize)> = (0..9)
+        .map(|i| {
+            let expert = match i % 3 {
+                0 => lora[0].0.clone(),
+                1 => "merged/avg".to_string(),
+                _ => lora[1].0.clone(),
+            };
+            let ex = i % set.n.min(4);
+            (
+                expert,
+                set.tokens[ex * set.seq..(ex + 1) * set.seq].to_vec(),
+                set.n_classes[ex] as usize,
+            )
+        })
+        .collect();
+
+    let serve = |store_nodes: usize,
+                 replication: usize,
+                 faults: Option<FaultSpec>|
+     -> anyhow::Result<Vec<usize>> {
+        let mut ccfg = CoordinatorConfig::new(dir.clone(), "s");
+        ccfg.gpu_capacity_bytes =
+            build_registry()?.get(&lora[0].0).unwrap().n_params as u64 * 2 + 8;
+        ccfg.policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) };
+        ccfg.time_scale = 0.0;
+        ccfg.store_nodes = store_nodes;
+        ccfg.replication = replication;
+        if let Some(spec) = faults {
+            ccfg.fault_seed = 77;
+            ccfg.store_faults = spec;
+        }
+        let coord = Coordinator::start(ccfg, build_registry()?)?;
+        let pending: Vec<_> = trace
+            .iter()
+            .map(|(e, tokens, n)| coord.submit(e, tokens.clone(), *n))
+            .collect();
+        let classes: Vec<usize> = pending
+            .into_iter()
+            .map(|rx| rx.recv().map(|p| p.class))
+            .collect::<Result<_, _>>()?;
+        let report = coord.shutdown()?;
+        if store_nodes == 0 {
+            assert_eq!(report.stripe_retries, 0, "flat store never stripes");
+        }
+        if faults.is_some() {
+            assert!(report.failovers > 0, "fault plan must have fired");
+        } else {
+            assert_eq!(report.failovers, 0, "healthy store never fails over");
+        }
+        Ok(classes)
+    };
+
+    let reference = serve(0, 1, None)?;
+    assert_eq!(reference.len(), trace.len());
+    for (nodes, repl) in [(1usize, 1usize), (3, 2), (5, 3)] {
+        assert_eq!(
+            serve(nodes, repl, None)?,
+            reference,
+            "healthy sharded store (nodes={nodes} repl={repl})"
+        );
+    }
+    // Under a drop-every-primary fault plan the store fails over on
+    // every stripe and still serves the same predictions.
+    let faulty = FaultSpec { drop_p: 1.0, first_attempt_only: true, ..Default::default() };
+    assert_eq!(serve(3, 2, Some(faulty))?, reference, "faulted sharded store");
     Ok(())
 }
 
