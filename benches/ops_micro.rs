@@ -3,12 +3,17 @@
 //! dense f32 baseline, and end-to-end Algorithm 1 compression speed.
 //!
 //! Run: `cargo bench --bench ops_micro`
+//!      `cargo bench --bench ops_micro -- --quick` (256K-param vectors,
+//!      5 iterations — the CI smoke shape)
+//!      `... -- --quick --json BENCH_ops_micro.json` (machine-readable
+//!      `{bench, row, value, unit, config}` records)
 
 use compeft::compeft::bitmask::MaskPair;
 use compeft::compeft::compress::{compress_vector, CompressConfig};
 use compeft::compeft::engine::par_compress_vector;
 use compeft::compeft::{golomb, ternary::TernaryVector};
-use compeft::util::bench::{black_box, Bench};
+use compeft::util::bench::{black_box, json_flag, Bench, JsonSink, Measurement};
+use compeft::util::json::Json;
 use compeft::util::pool::ThreadPool;
 use compeft::util::rng::Pcg;
 
@@ -17,28 +22,71 @@ fn random_tv(n: usize, seed: u64) -> Vec<f32> {
     (0..n).map(|_| rng.normal() as f32 * 0.01).collect()
 }
 
+/// Time a throughput case and mirror it into the `--json` sink.
+fn runt<F: FnMut()>(
+    b: &mut Bench,
+    sink: &mut Option<JsonSink>,
+    name: &str,
+    bytes: u64,
+    f: F,
+) -> Measurement {
+    let m = b.run_throughput(name, bytes, f);
+    if let Some(s) = sink {
+        let mean = m.mean.as_secs_f64();
+        s.record(&format!("{name}/mean_s"), mean, "s");
+        s.record(&format!("{name}/mb_per_s"), bytes as f64 / mean.max(1e-12) / 1e6, "MB/s");
+    }
+    m
+}
+
+/// Print a free-form row and mirror it into the `--json` sink.
+fn row(b: &mut Bench, sink: &mut Option<JsonSink>, label: &str, fields: &[(&str, f64)]) {
+    b.row(label, fields);
+    if let Some(s) = sink {
+        for (k, v) in fields {
+            s.record(&format!("{label}/{k}"), *v, "value");
+        }
+    }
+}
+
 fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let d: usize = if quick { 1 << 18 } else { 1 << 22 };
+    let sz = if quick { "256K" } else { "4M" };
+    let mut sink = json_flag(&args).map(|path| {
+        let mut config = Json::obj();
+        config
+            .set("quick", Json::Bool(quick))
+            .set("d", Json::num(d as f64));
+        JsonSink::new(path, "ops_micro", config)
+    });
+    let sink = &mut sink;
     let mut b = Bench::new("ops_micro");
-    let d = 1 << 22; // 4M params ≈ a real LoRA module
+    if quick {
+        b = b.iters(5).warmup(1);
+    }
     let tau = random_tv(d, 7);
     let bytes_dense = (d * 4) as u64;
 
     // Algorithm 1 end to end (the compressor's hot path).
     let cfg = CompressConfig { density: 0.05, alpha: 1.0, ..Default::default() };
-    let serial = b.run_throughput("compress_4M_k5", bytes_dense, || {
+    let serial = runt(&mut b, sink, &format!("compress_{sz}_k5"), bytes_dense, || {
         black_box(compress_vector(&tau, &cfg));
     });
 
     let tern = compress_vector(&tau, &cfg);
 
-    // Parallel chunked engine: worker-count scaling on the same 4M τ.
+    // Parallel chunked engine: worker-count scaling on the same τ.
     // Output is bit-identical to the serial path (asserted below); the
     // interesting number is the speedup at 8 workers.
     let mut par_means = Vec::new();
     for workers in [1usize, 2, 4, 8] {
         let pool = ThreadPool::new(workers);
-        let m = b.run_throughput(
-            &format!("par_compress_4M_k5_w{workers}"),
+        let m = runt(
+            &mut b,
+            sink,
+            &format!("par_compress_{sz}_k5_w{workers}"),
             bytes_dense,
             || {
                 black_box(par_compress_vector(&tau, &cfg, &pool));
@@ -58,23 +106,24 @@ fn main() {
         .zip(&par_means)
         .map(|(label, &(_, mean))| (label.as_str(), serial_mean / mean))
         .collect();
-    b.row("par_compress_speedup_vs_serial", &speedups);
+    row(&mut b, sink, "par_compress_speedup_vs_serial", &speedups);
 
     // Parallel Golomb encode of the plus/minus streams.
     let pool8 = ThreadPool::new(8);
-    b.run_throughput("golomb_encode_par_4M_k5_w8", bytes_dense, || {
+    runt(&mut b, sink, &format!("golomb_encode_par_{sz}_k5_w8"), bytes_dense, || {
         black_box(golomb::encode_par(&tern, &pool8, 1 << 15));
     });
     assert_eq!(golomb::encode_par(&tern, &pool8, 1 << 15), golomb::encode(&tern));
 
     // Golomb encode / decode.
     let encoded = golomb::encode(&tern);
-    b.run_throughput("golomb_encode_4M_k5", bytes_dense, || {
+    runt(&mut b, sink, &format!("golomb_encode_{sz}_k5"), bytes_dense, || {
         black_box(golomb::encode(&tern));
     });
-    let serial_decode = b.run_throughput("golomb_decode_4M_k5", bytes_dense, || {
-        black_box(golomb::decode(&encoded).unwrap());
-    });
+    let serial_decode =
+        runt(&mut b, sink, &format!("golomb_decode_{sz}_k5"), bytes_dense, || {
+            black_box(golomb::decode(&encoded).unwrap());
+        });
 
     // Parallel framed decode: worker-count scaling on the same payload
     // through the v2 frame table (the serving-path swap-in decode).
@@ -83,8 +132,10 @@ fn main() {
     let mut dec_means = Vec::new();
     for workers in [1usize, 2, 4, 8] {
         let pool = ThreadPool::new(workers);
-        let m = b.run_throughput(
-            &format!("par_decode_4M_k5_w{workers}"),
+        let m = runt(
+            &mut b,
+            sink,
+            &format!("par_decode_{sz}_k5_w{workers}"),
             bytes_dense,
             || {
                 black_box(golomb::decode_par(&encoded, &table, &pool).unwrap());
@@ -102,9 +153,11 @@ fn main() {
         .zip(&dec_means)
         .map(|(label, &(_, mean))| (label.as_str(), serial_dec_mean / mean))
         .collect();
-    b.row("par_decode_speedup_vs_serial", &dec_speedups);
+    row(&mut b, sink, "par_decode_speedup_vs_serial", &dec_speedups);
 
-    b.row(
+    row(
+        &mut b,
+        sink,
         "golomb_size",
         &[
             ("dense_mb", bytes_dense as f64 / 1e6),
@@ -117,17 +170,17 @@ fn main() {
     // per 64 parameters").
     let tern2 = compress_vector(&random_tv(d, 8), &cfg);
     let (ma, mb) = (MaskPair::from_ternary(&tern), MaskPair::from_ternary(&tern2));
-    b.run_throughput("mask_xor_popcnt_distance_4M", bytes_dense, || {
+    runt(&mut b, sink, &format!("mask_xor_popcnt_distance_{sz}"), bytes_dense, || {
         black_box(ma.ternary_l1_distance(&mb).unwrap());
     });
-    b.run_throughput("mask_and_dot_4M", bytes_dense, || {
+    runt(&mut b, sink, &format!("mask_and_dot_{sz}"), bytes_dense, || {
         black_box(ma.dot(&mb).unwrap());
     });
 
     // Dense f32 dot product baseline over the same logical vectors.
     let da = tern.to_dense();
     let db = tern2.to_dense();
-    b.run_throughput("dense_f32_dot_4M", bytes_dense * 2, || {
+    runt(&mut b, sink, &format!("dense_f32_dot_{sz}"), bytes_dense * 2, || {
         let mut acc = 0.0f64;
         for (x, y) in da.iter().zip(&db) {
             acc += (*x as f64) * (*y as f64);
@@ -136,24 +189,24 @@ fn main() {
     });
 
     // Decompress (sparse add into dense) — the serving decode path.
-    b.run_throughput("decompress_add_into_4M", bytes_dense, || {
+    runt(&mut b, sink, &format!("decompress_add_into_{sz}"), bytes_dense, || {
         let mut buf = vec![0.0f32; d];
         tern.add_into(&mut buf, 1.0);
         black_box(buf);
     });
 
     // Mask round-trips (wire conversions).
-    b.run_throughput("mask_from_ternary_4M", bytes_dense, || {
+    runt(&mut b, sink, &format!("mask_from_ternary_{sz}"), bytes_dense, || {
         black_box(MaskPair::from_ternary(&tern));
     });
     let as_bytes = ma.to_bytes();
-    b.run_throughput("mask_decode_4M", as_bytes.len() as u64, || {
+    runt(&mut b, sink, &format!("mask_decode_{sz}"), as_bytes.len() as u64, || {
         black_box(MaskPair::from_bytes(&as_bytes).unwrap());
     });
-    b.run_throughput("mask_to_ternary_4M", bytes_dense, || {
+    runt(&mut b, sink, &format!("mask_to_ternary_{sz}"), bytes_dense, || {
         black_box(ma.to_ternary());
     });
-    b.run_throughput("mask_to_ternary_par_4M_w8", bytes_dense, || {
+    runt(&mut b, sink, &format!("mask_to_ternary_par_{sz}_w8"), bytes_dense, || {
         black_box(ma.to_ternary_par(&pool8, 1 << 13));
     });
     assert_eq!(ma.to_ternary_par(&pool8, 1 << 13), ma.to_ternary());
@@ -164,4 +217,8 @@ fn main() {
         da.iter().zip(&db).map(|(x, y)| (*x as f64) * (*y as f64)).sum();
     assert!((fast - slow).abs() <= 1e-6 * (1.0 + slow.abs()) + 1e-6);
     let _ = TernaryVector::empty(0);
+
+    if let Some(s) = sink.as_ref() {
+        s.write().expect("write --json artifact");
+    }
 }

@@ -25,7 +25,8 @@ use compeft::coordinator::transport::{LinkSpec, SimLink};
 use compeft::coordinator::{PrepareContext, PreparedExpert, Prefetcher, TakeOutcome};
 use compeft::merging::MergeMethod;
 use compeft::tensor::{ParamSet, Tensor};
-use compeft::util::bench::Bench;
+use compeft::util::bench::{json_flag, Bench, JsonSink};
+use compeft::util::json::Json;
 use compeft::util::pool::ThreadPool;
 use compeft::util::rng::Pcg;
 use compeft::util::stats;
@@ -34,13 +35,38 @@ use std::time::{Duration, Instant};
 
 const REPS: usize = 10;
 
+/// Mirror a printed row into the `--json` artifact (units inferred from
+/// the field-name suffix convention the rows already follow).
+fn sink_row(sink: &mut Option<JsonSink>, label: &str, fields: &[(&str, f64)]) {
+    if let Some(s) = sink {
+        for (k, v) in fields {
+            let unit = if k.ends_with("_ms") {
+                "ms"
+            } else if k.ends_with("_us") {
+                "us"
+            } else if k.ends_with("_x") || k.contains("speedup") {
+                "x"
+            } else if *k == "bytes" {
+                "bytes"
+            } else {
+                "count"
+            };
+            s.record(&format!("{label}/{k}"), *v, unit);
+        }
+    }
+}
+
 /// Prefetch-on vs prefetch-off: replay the same cold-swap sequence
 /// (every step needs a fetch+decode; the workload cycles 4 stored
 /// experts and a ternary-domain composition) through the actual
 /// pipeline components at `time_scale = 0`. Off pays fetch+decode on
 /// the "engine" thread each step; on overlaps them with the previous
 /// step's (simulated) batch execution, paying only pickup + upload.
-fn prefetch_comparison(bench: &mut Bench, quick: bool) -> anyhow::Result<()> {
+fn prefetch_comparison(
+    bench: &mut Bench,
+    sink: &mut Option<JsonSink>,
+    quick: bool,
+) -> anyhow::Result<()> {
     let elems: usize = if quick { 1 << 18 } else { 1 << 20 };
     let steps = 12usize;
     let depth = 2usize;
@@ -129,24 +155,20 @@ fn prefetch_comparison(bench: &mut Bench, quick: bool) -> anyhow::Result<()> {
         }
     }
     let snap = metrics.snapshot();
-    bench.row(
-        "prefetch/cold_swap_stall",
-        &[
-            ("elems", elems as f64),
-            ("steps", steps as f64),
-            ("exec_ms", exec_time.as_secs_f64() * 1e3),
-            ("stall_off_ms", stall_off.as_secs_f64() * 1e3),
-            ("stall_on_ms", stall_on.as_secs_f64() * 1e3),
-            (
-                "stall_hidden_x",
-                stall_off.as_secs_f64() / stall_on.as_secs_f64().max(1e-9),
-            ),
-            ("hits", snap.prefetch_hits as f64),
-            ("waits", snap.prefetch_waits as f64),
-            ("misses", snap.prefetch_misses as f64),
-            ("overlap_saved_ms", snap.overlap_saved_us as f64 / 1e3),
-        ],
-    );
+    let fields = [
+        ("elems", elems as f64),
+        ("steps", steps as f64),
+        ("exec_ms", exec_time.as_secs_f64() * 1e3),
+        ("stall_off_ms", stall_off.as_secs_f64() * 1e3),
+        ("stall_on_ms", stall_on.as_secs_f64() * 1e3),
+        ("stall_hidden_x", stall_off.as_secs_f64() / stall_on.as_secs_f64().max(1e-9)),
+        ("hits", snap.prefetch_hits as f64),
+        ("waits", snap.prefetch_waits as f64),
+        ("misses", snap.prefetch_misses as f64),
+        ("overlap_saved_ms", snap.overlap_saved_us as f64 / 1e3),
+    ];
+    bench.row("prefetch/cold_swap_stall", &fields);
+    sink_row(sink, "prefetch/cold_swap_stall", &fields);
     println!(
         "prefetch pipeline: engine-thread swap stall {:.1}ms -> {:.1}ms over {} cold \
          swaps ({} staged hits, {} waited, {} misses)",
@@ -167,7 +189,11 @@ fn prefetch_comparison(bench: &mut Bench, quick: bool) -> anyhow::Result<()> {
 /// whose stripes pull concurrently from R links. The fault-free run
 /// must show zero retries/failovers, and multi-replica fetch must beat
 /// the single link's wall time — the store's whole reason to exist.
-fn striped_fetch_comparison(bench: &mut Bench, quick: bool) -> anyhow::Result<()> {
+fn striped_fetch_comparison(
+    bench: &mut Bench,
+    sink: &mut Option<JsonSink>,
+    quick: bool,
+) -> anyhow::Result<()> {
     let elems: usize = if quick { 1 << 20 } else { 1 << 22 };
     let dir = std::env::temp_dir()
         .join(format!("compeft_t5_striped_{}", std::process::id()));
@@ -230,6 +256,7 @@ fn striped_fetch_comparison(bench: &mut Bench, quick: bool) -> anyhow::Result<()
     rows.push(("failovers".to_string(), 0.0));
     let rows_ref: Vec<(&str, f64)> = rows.iter().map(|(k, v)| (k.as_str(), *v)).collect();
     bench.row("store/striped_fetch", &rows_ref);
+    sink_row(sink, "store/striped_fetch", &rows_ref);
     println!(
         "striped fetch: single link {single_ms:.2} ms -> best replicated {best:.2} ms \
          ({:.2}x) over {} of encoded payload, 0 retries / 0 failovers",
@@ -241,10 +268,19 @@ fn striped_fetch_comparison(bench: &mut Bench, quick: bool) -> anyhow::Result<()
 }
 
 fn main() -> anyhow::Result<()> {
-    let quick = std::env::args().any(|a| a == "--quick");
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let mut sink = json_flag(&args).map(|path| {
+        let mut config = Json::obj();
+        config.set("quick", Json::Bool(quick));
+        JsonSink::new(path, "table5_latency", config)
+    });
     let mut bench = Bench::new("table5");
-    prefetch_comparison(&mut bench, quick)?;
-    striped_fetch_comparison(&mut bench, quick)?;
+    prefetch_comparison(&mut bench, &mut sink, quick)?;
+    striped_fetch_comparison(&mut bench, &mut sink, quick)?;
+    if let Some(s) = &sink {
+        s.write()?;
+    }
     if quick {
         return Ok(());
     }

@@ -1,0 +1,164 @@
+//! Admission control: bounded-queue backpressure and deadline-aware
+//! early load shedding.
+//!
+//! Under overload, admitting every request makes *every* request late —
+//! queues grow without bound and even requests that will eventually be
+//! served have already blown their deadlines by the time they reach the
+//! accelerator (goodput collapses to zero while throughput stays high).
+//! Shedding at the door keeps the queue short enough that admitted
+//! requests still finish in time: lower throughput, strictly higher
+//! goodput. The `service_load` bench's overload row measures exactly
+//! this trade.
+//!
+//! [`admit`] is a **pure function** of (config, queue depth, deadline):
+//! no clocks, no RNG, no global state. Given the same arrival sequence
+//! — which the trace generator guarantees from a seed — the accept/shed
+//! set is bit-identical across runs, machines, and worker counts.
+
+use crate::coordinator::metrics::RejectReason;
+
+/// Admission policy. The default admits everything (unbounded queue, no
+/// shedding) — the coordinator's pre-admission behavior.
+#[derive(Clone, Copy, Debug)]
+pub struct AdmissionConfig {
+    /// Reject new requests once this many are queued (0 = unbounded).
+    pub queue_cap: usize,
+    /// Shed a request at submit when the queue-delay estimate already
+    /// exceeds its deadline.
+    pub shed_deadline: bool,
+    /// Estimated service time of one batch (swap amortization + exec),
+    /// µs — the knob that turns queue depth into a delay estimate.
+    pub est_batch_us: u64,
+    /// Expected requests per released batch (the policy's `max_batch`).
+    pub max_batch: usize,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig {
+            queue_cap: 0,
+            shed_deadline: false,
+            est_batch_us: 5_000,
+            max_batch: 8,
+        }
+    }
+}
+
+impl AdmissionConfig {
+    /// Estimated queueing delay with `queued` requests ahead, µs: the
+    /// number of batches that must drain first times the per-batch
+    /// service estimate. Deliberately simple — a conservative FIFO
+    /// bound that ignores batching overlap — because the estimate only
+    /// needs to be monotone in queue depth and deterministic.
+    pub fn queue_delay_us(&self, queued: usize) -> u64 {
+        let batches = queued.div_ceil(self.max_batch.max(1)) as u64;
+        batches.saturating_mul(self.est_batch_us)
+    }
+}
+
+/// Admission verdict for one request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmitDecision {
+    Admit,
+    /// Shed: the queue-delay estimate already exceeds the deadline.
+    ShedDeadline,
+    /// Rejected by bounded-queue backpressure.
+    QueueFull,
+}
+
+impl AdmitDecision {
+    /// The metrics reason a non-admit verdict records.
+    pub fn reject_reason(&self) -> Option<RejectReason> {
+        match self {
+            AdmitDecision::Admit => None,
+            AdmitDecision::ShedDeadline => Some(RejectReason::ShedDeadline),
+            AdmitDecision::QueueFull => Some(RejectReason::QueueFull),
+        }
+    }
+}
+
+/// Decide whether to admit a request given the current total queue
+/// depth and the request's latency budget (µs; None = no deadline,
+/// never deadline-shed). Pure in its inputs.
+pub fn admit(
+    cfg: &AdmissionConfig,
+    queued: usize,
+    deadline_us: Option<u64>,
+) -> AdmitDecision {
+    if cfg.queue_cap > 0 && queued >= cfg.queue_cap {
+        return AdmitDecision::QueueFull;
+    }
+    if cfg.shed_deadline {
+        if let Some(d) = deadline_us {
+            if cfg.queue_delay_us(queued) > d {
+                return AdmitDecision::ShedDeadline;
+            }
+        }
+    }
+    AdmitDecision::Admit
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_admits_everything() {
+        let cfg = AdmissionConfig::default();
+        for queued in [0usize, 1, 1_000, 1_000_000] {
+            assert_eq!(admit(&cfg, queued, Some(0)), AdmitDecision::Admit);
+            assert_eq!(admit(&cfg, queued, None), AdmitDecision::Admit);
+        }
+    }
+
+    #[test]
+    fn queue_cap_backpressure_kicks_in_at_the_cap() {
+        let cfg = AdmissionConfig { queue_cap: 64, ..Default::default() };
+        assert_eq!(admit(&cfg, 63, None), AdmitDecision::Admit);
+        assert_eq!(admit(&cfg, 64, None), AdmitDecision::QueueFull);
+        assert_eq!(admit(&cfg, 10_000, None), AdmitDecision::QueueFull);
+    }
+
+    #[test]
+    fn deadline_shedding_is_monotone_in_queue_depth() {
+        let cfg = AdmissionConfig {
+            shed_deadline: true,
+            est_batch_us: 1_000,
+            max_batch: 8,
+            ..Default::default()
+        };
+        // 16 queued = 2 batches ahead = 2 ms estimate.
+        assert_eq!(admit(&cfg, 16, Some(2_000)), AdmitDecision::Admit);
+        assert_eq!(admit(&cfg, 17, Some(2_000)), AdmitDecision::ShedDeadline);
+        // No deadline → never deadline-shed.
+        assert_eq!(admit(&cfg, 10_000, None), AdmitDecision::Admit);
+        // Estimates are monotone: once shed at depth d, shed at d' > d.
+        let d = (0..200)
+            .find(|&q| admit(&cfg, q, Some(3_500)) != AdmitDecision::Admit)
+            .unwrap();
+        for q in d..d + 50 {
+            assert_ne!(admit(&cfg, q, Some(3_500)), AdmitDecision::Admit, "q={q}");
+        }
+    }
+
+    #[test]
+    fn queue_full_takes_precedence_over_shedding() {
+        let cfg = AdmissionConfig {
+            queue_cap: 8,
+            shed_deadline: true,
+            est_batch_us: 1_000_000,
+            max_batch: 1,
+            ..Default::default()
+        };
+        assert_eq!(admit(&cfg, 8, Some(0)), AdmitDecision::QueueFull);
+        assert_eq!(
+            admit(&cfg, 8, Some(0)).reject_reason(),
+            Some(RejectReason::QueueFull)
+        );
+        assert_eq!(
+            admit(&cfg, 1, Some(0)).reject_reason(),
+            Some(RejectReason::ShedDeadline)
+        );
+        assert_eq!(admit(&cfg, 0, None).reject_reason(), None);
+    }
+}

@@ -9,15 +9,69 @@ use crate::util::stats::LogHistogram;
 use std::sync::Mutex;
 use std::time::Duration;
 
+/// Why a request was dropped without a reply. The catch-all `rejected`
+/// counter used to conflate admission-control policy (shedding,
+/// backpressure) with client errors (malformed submits) and server
+/// faults (load/exec failures); every drop now names its reason.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RejectReason {
+    /// Admission control: the queue-delay estimate already blew the
+    /// request's deadline, so it was shed at submit.
+    ShedDeadline,
+    /// Admission control: the bounded queue was full (backpressure).
+    QueueFull,
+    /// Client error: mis-sized token vector at submit.
+    Malformed,
+    /// The expert id names neither a stored expert nor a composition.
+    UnknownExpert,
+    /// The expert failed to fetch/decode/upload.
+    LoadFailure,
+    /// Batch execution failed mid-way; these requests never got logits.
+    ExecError,
+}
+
+/// Per-reason drop counters (see [`RejectReason`]). `total()` is the
+/// old catch-all `rejected` value.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RejectCounts {
+    pub shed_deadline: u64,
+    pub queue_full: u64,
+    pub malformed: u64,
+    pub unknown_expert: u64,
+    pub load_failure: u64,
+    pub exec_error: u64,
+}
+
+impl RejectCounts {
+    pub fn total(&self) -> u64 {
+        self.shed_deadline
+            + self.queue_full
+            + self.malformed
+            + self.unknown_expert
+            + self.load_failure
+            + self.exec_error
+    }
+
+    fn slot(&mut self, reason: RejectReason) -> &mut u64 {
+        match reason {
+            RejectReason::ShedDeadline => &mut self.shed_deadline,
+            RejectReason::QueueFull => &mut self.queue_full,
+            RejectReason::Malformed => &mut self.malformed,
+            RejectReason::UnknownExpert => &mut self.unknown_expert,
+            RejectReason::LoadFailure => &mut self.load_failure,
+            RejectReason::ExecError => &mut self.exec_error,
+        }
+    }
+}
+
 #[derive(Default)]
 struct Inner {
     requests: u64,
     batches: u64,
     swaps: u64,
     batch_fill: u64, // sum of batch sizes, for mean fill
-    /// Requests dropped without a reply: unknown expert, expert load
-    /// failure, exec-error leftovers, malformed submits.
-    rejected: u64,
+    /// Requests dropped without a reply, split by reason.
+    rejected: RejectCounts,
     /// Swaps fully served from the prefetch staging slot (fetch+decode
     /// already done off the engine thread; only the upload hop paid).
     prefetch_hits: u64,
@@ -89,10 +143,11 @@ impl Metrics {
         }
     }
 
-    /// Count `n` requests dropped without a reply (unknown expert,
-    /// load failure, exec-error leftovers, malformed submits).
-    pub fn record_rejected(&self, n: u64) {
-        self.inner.lock().unwrap().rejected += n;
+    /// Count `n` requests dropped without a reply, attributed to
+    /// `reason` (shedding, backpressure, malformed submits, unknown
+    /// experts, load/exec failures).
+    pub fn record_rejected(&self, reason: RejectReason, n: u64) {
+        *self.inner.lock().unwrap().rejected.slot(reason) += n;
     }
 
     /// A cold swap fully served from the staging slot; `saved` is the
@@ -139,7 +194,8 @@ impl Metrics {
             requests: g.requests,
             batches: g.batches,
             swaps: g.swaps,
-            rejected: g.rejected,
+            rejected: g.rejected.total(),
+            rejected_by: g.rejected,
             prefetch_hits: g.prefetch_hits,
             prefetch_waits: g.prefetch_waits,
             prefetch_misses: g.prefetch_misses,
@@ -170,8 +226,10 @@ pub struct MetricsSnapshot {
     pub requests: u64,
     pub batches: u64,
     pub swaps: u64,
-    /// Requests dropped without a reply.
+    /// Requests dropped without a reply (sum of `rejected_by`).
     pub rejected: u64,
+    /// The same drops split by reason.
+    pub rejected_by: RejectCounts,
     /// Cold swaps served entirely from the prefetch staging slot.
     pub prefetch_hits: u64,
     /// Cold swaps that waited on an in-flight prefetch.
@@ -205,6 +263,12 @@ impl MetricsSnapshot {
             .set("batches", Json::num(self.batches as f64))
             .set("swaps", Json::num(self.swaps as f64))
             .set("rejected", Json::num(self.rejected as f64))
+            .set("shed_deadline", Json::num(self.rejected_by.shed_deadline as f64))
+            .set("queue_full", Json::num(self.rejected_by.queue_full as f64))
+            .set("malformed", Json::num(self.rejected_by.malformed as f64))
+            .set("unknown_expert", Json::num(self.rejected_by.unknown_expert as f64))
+            .set("load_failure", Json::num(self.rejected_by.load_failure as f64))
+            .set("exec_error", Json::num(self.rejected_by.exec_error as f64))
             .set("prefetch_hits", Json::num(self.prefetch_hits as f64))
             .set("prefetch_waits", Json::num(self.prefetch_waits as f64))
             .set("prefetch_misses", Json::num(self.prefetch_misses as f64))
@@ -253,15 +317,15 @@ mod tests {
         assert!(j.contains("\"requests\":100"));
     }
 
-    /// The rejected counter and the prefetch overlap counters survive
+    /// The rejected counters and the prefetch overlap counters survive
     /// the snapshot + JSON paths (regression for the unknown-expert
     /// branch that claimed "metrics still count them" but recorded
     /// nothing).
     #[test]
     fn rejected_and_prefetch_counters_round_trip() {
         let m = Metrics::new();
-        m.record_rejected(3);
-        m.record_rejected(2);
+        m.record_rejected(RejectReason::UnknownExpert, 3);
+        m.record_rejected(RejectReason::Malformed, 2);
         m.record_prefetch_hit(Duration::from_micros(1500));
         // Waits are counted but credited no overlap savings (the whole
         // staged cost is charged to the request, like a miss).
@@ -273,6 +337,8 @@ mod tests {
         m.record_store_faults(1, 1, 0);
         let s = m.snapshot();
         assert_eq!(s.rejected, 5);
+        assert_eq!(s.rejected_by.unknown_expert, 3);
+        assert_eq!(s.rejected_by.malformed, 2);
         assert_eq!(s.stripe_retries, 4);
         assert_eq!(s.failovers, 3);
         assert_eq!(s.corrupt_payloads, 1);
@@ -288,5 +354,51 @@ mod tests {
         assert!(j.contains("\"stripe_retries\":4"));
         assert!(j.contains("\"failovers\":3"));
         assert!(j.contains("\"corrupt_payloads\":1"));
+    }
+
+    /// Regression for the catch-all `rejected` counter: every reason
+    /// lands in its own slot, the aggregate is exactly their sum, and
+    /// the JSON snapshot exposes each reason under a stable key — so
+    /// policy shedding can no longer masquerade as client error (or
+    /// vice versa).
+    #[test]
+    fn rejected_reasons_are_split_and_sum_to_total() {
+        let m = Metrics::new();
+        let reasons = [
+            (RejectReason::ShedDeadline, 7),
+            (RejectReason::QueueFull, 5),
+            (RejectReason::Malformed, 3),
+            (RejectReason::UnknownExpert, 2),
+            (RejectReason::LoadFailure, 1),
+            (RejectReason::ExecError, 4),
+        ];
+        for (r, n) in reasons {
+            m.record_rejected(r, n);
+        }
+        let s = m.snapshot();
+        assert_eq!(
+            s.rejected_by,
+            RejectCounts {
+                shed_deadline: 7,
+                queue_full: 5,
+                malformed: 3,
+                unknown_expert: 2,
+                load_failure: 1,
+                exec_error: 4,
+            }
+        );
+        assert_eq!(s.rejected, 22, "aggregate stays the per-reason sum");
+        assert_eq!(s.rejected_by.total(), s.rejected);
+        let j = s.to_json().to_string();
+        for key in [
+            "\"shed_deadline\":7",
+            "\"queue_full\":5",
+            "\"malformed\":3",
+            "\"unknown_expert\":2",
+            "\"load_failure\":1",
+            "\"exec_error\":4",
+        ] {
+            assert!(j.contains(key), "missing {key} in {j}");
+        }
     }
 }

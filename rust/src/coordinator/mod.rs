@@ -12,9 +12,12 @@
 //! * [`pipeline`] — prefetch-and-stage pipeline (background fetch+decode
 //!   overlapped with batch execution)
 //! * [`server`] — the engine thread + public [`server::Coordinator`] API
+//! * [`admission`] — bounded-queue backpressure + deadline-aware load
+//!   shedding at the submit door (pure, deterministic)
 //! * [`metrics`] — latency histograms, swap/prefetch/throughput/failover
 //!   counters
 
+pub mod admission;
 pub mod batcher;
 pub mod cache;
 pub mod loader;
@@ -25,6 +28,8 @@ pub mod server;
 pub mod store;
 pub mod transport;
 
+pub use admission::{admit, AdmissionConfig, AdmitDecision};
+pub use metrics::{RejectCounts, RejectReason};
 pub use pipeline::{PrepareContext, PreparedExpert, Prefetcher, TakeOutcome, Templates};
 pub use registry::{
     CompositionRecord, ExpertFormat, ExpertMethod, ExpertRecord, Registry,

@@ -23,10 +23,13 @@
 //! accelerator LRU tier as a first-class resident, indistinguishable
 //! from a stored expert, and prefetches like one.
 
+use crate::coordinator::admission::{self, AdmissionConfig};
 use crate::coordinator::batcher::{BatchPolicy, Batcher, Pending};
 use crate::coordinator::cache::{LruTier, TierStats};
 use crate::coordinator::loader::ExpertLoader;
-use crate::coordinator::metrics::{Metrics, MetricsSnapshot, RequestTiming};
+use crate::coordinator::metrics::{
+    Metrics, MetricsSnapshot, RejectCounts, RejectReason, RequestTiming,
+};
 use crate::coordinator::pipeline::{
     PrepareContext, PreparedExpert, Prefetcher, TakeOutcome, Templates,
 };
@@ -87,6 +90,10 @@ pub struct CoordinatorConfig {
     /// Fault probabilities injected into the store links (all-zero by
     /// default: a healthy store).
     pub store_faults: FaultSpec,
+    /// Admission control at [`Coordinator::submit`]: bounded-queue
+    /// backpressure and deadline-aware shedding. The default admits
+    /// everything (the pre-admission behavior).
+    pub admission: AdmissionConfig,
 }
 
 impl CoordinatorConfig {
@@ -108,6 +115,7 @@ impl CoordinatorConfig {
             replication: 1,
             fault_seed: 0,
             store_faults: FaultSpec::default(),
+            admission: AdmissionConfig::default(),
         }
     }
 }
@@ -134,9 +142,11 @@ pub struct EngineReport {
     pub net_bytes: u64,
     pub pcie_bytes: u64,
     pub batches: u64,
-    /// Requests dropped without a reply (unknown expert, load failure,
-    /// exec-error leftovers, malformed submits).
+    /// Requests dropped without a reply (sum of `rejected_by`).
     pub rejected: u64,
+    /// The same drops split by reason: admission-control shedding and
+    /// backpressure vs client errors vs server faults.
+    pub rejected_by: RejectCounts,
     /// Cold swaps served entirely from the prefetch staging slot.
     pub prefetch_hits: u64,
     /// Cold swaps that waited on an in-flight prefetch.
@@ -159,6 +169,7 @@ pub struct EngineReport {
 pub struct Coordinator {
     batcher: Arc<Batcher<ClientRequest>>,
     metrics: Arc<Metrics>,
+    admission: AdmissionConfig,
     /// Sequence length every request's token vector must match
     /// (fixed by the loaded model bundle).
     seq_len: usize,
@@ -174,6 +185,7 @@ impl Coordinator {
     pub fn start(cfg: CoordinatorConfig, registry: Registry) -> Result<Coordinator> {
         let batcher = Arc::new(Batcher::new(cfg.policy));
         let metrics = Arc::new(Metrics::new());
+        let admission = cfg.admission;
         let net = SimLink::new("net", cfg.net).with_time_scale(cfg.time_scale);
         let pcie = SimLink::new("pcie", cfg.pcie).with_time_scale(cfg.time_scale);
 
@@ -201,7 +213,15 @@ impl Coordinator {
                 return Err(err);
             }
         };
-        Ok(Coordinator { batcher, metrics, seq_len, net, pcie, engine: Some(engine) })
+        Ok(Coordinator {
+            batcher,
+            metrics,
+            admission,
+            seq_len,
+            net,
+            pcie,
+            engine: Some(engine),
+        })
     }
 
     /// Sequence length the loaded model expects per request.
@@ -223,14 +243,50 @@ impl Coordinator {
         tokens: Vec<i32>,
         n_classes: usize,
     ) -> mpsc::Receiver<Prediction> {
+        self.submit_with(expert, 0, None, tokens, n_classes)
+    }
+
+    /// [`Coordinator::submit`] with a tenant id (weighted-fair service in
+    /// the batcher) and an optional latency budget.
+    ///
+    /// Admission control runs here, at the door: malformed requests,
+    /// bounded-queue backpressure, and deadline-aware shedding all drop
+    /// the sender before the request touches the engine — the receiver
+    /// reports a disconnect and the drop is counted under its
+    /// [`RejectReason`]. A shed request never consumes a fetch, a decode,
+    /// or a batch slot.
+    pub fn submit_with(
+        &self,
+        expert: &str,
+        tenant: u32,
+        deadline: Option<Duration>,
+        tokens: Vec<i32>,
+        n_classes: usize,
+    ) -> mpsc::Receiver<Prediction> {
         let (tx, rx) = mpsc::channel();
         if tokens.len() != self.seq_len {
             // Dropping `tx` makes the receiver report the rejection.
-            self.metrics.record_rejected(1);
+            self.metrics.record_rejected(RejectReason::Malformed, 1);
             return rx;
         }
-        self.batcher.push(expert, ClientRequest { tokens, n_classes, resp: tx });
+        let deadline_us = deadline.map(|d| d.as_micros() as u64);
+        let verdict = admission::admit(&self.admission, self.batcher.queued(), deadline_us);
+        if let Some(reason) = verdict.reject_reason() {
+            self.metrics.record_rejected(reason, 1);
+            return rx;
+        }
+        self.batcher.push_at(
+            expert,
+            tenant,
+            ClientRequest { tokens, n_classes, resp: tx },
+            Instant::now(),
+        );
         rx
+    }
+
+    /// Set a tenant's weighted-fair service weight (default 1).
+    pub fn set_tenant_weight(&self, tenant: u32, weight: u64) {
+        self.batcher.set_tenant_weight(tenant, weight);
     }
 
     pub fn metrics(&self) -> MetricsSnapshot {
@@ -363,7 +419,7 @@ fn engine_main(
         if registry.get(&expert_id).is_none() && registry.composition(&expert_id).is_none()
         {
             // Unknown expert: drop the requests and count the drops.
-            metrics.record_rejected(batch.len() as u64);
+            metrics.record_rejected(RejectReason::UnknownExpert, batch.len() as u64);
             for p in batch {
                 drop(p.payload.resp);
             }
@@ -423,7 +479,7 @@ fn engine_main(
                 }
                 Err(e) => {
                     eprintln!("[engine] load {expert_id} failed: {e:#}");
-                    metrics.record_rejected(batch.len() as u64);
+                    metrics.record_rejected(RejectReason::LoadFailure, batch.len() as u64);
                     for p in batch {
                         drop(p.payload.resp);
                     }
@@ -508,7 +564,7 @@ fn engine_main(
         let answered = responses.len();
         flush_responses(&metrics, responses, &classes, swap_wall, swap_total, exec, swapped);
         if exec_err {
-            metrics.record_rejected((batch.len() - answered) as u64);
+            metrics.record_rejected(RejectReason::ExecError, (batch.len() - answered) as u64);
             continue;
         }
     }
@@ -528,6 +584,7 @@ fn engine_main(
         pcie_bytes: pcie.bytes_moved(),
         batches: snap.batches,
         rejected: snap.rejected,
+        rejected_by: snap.rejected_by,
         prefetch_hits: snap.prefetch_hits,
         prefetch_waits: snap.prefetch_waits,
         prefetch_misses: snap.prefetch_misses,
@@ -643,6 +700,7 @@ mod tests {
                 Pending {
                     payload: ClientRequest { tokens, n_classes: 2, resp: tx },
                     enqueued: Instant::now(),
+                    tenant: 0,
                 },
                 rx,
             )
@@ -668,7 +726,7 @@ mod tests {
         assert_eq!(r1.recv().unwrap().class, 0);
         // The engine's exec-error path: count the unanswered remainder,
         // then drop the batch (disconnecting their senders).
-        metrics.record_rejected((batch.len() - classes.len()) as u64);
+        metrics.record_rejected(RejectReason::ExecError, (batch.len() - classes.len()) as u64);
         drop(batch);
         assert!(r2.recv().is_err(), "unanswered request sees a disconnect");
         let s = metrics.snapshot();

@@ -14,3 +14,4 @@ pub mod merging;
 pub mod runtime;
 pub mod tensor;
 pub mod util;
+pub mod workload;

@@ -5,6 +5,9 @@
 //!   inspect    print stats of a .cpeft / task-vector .npz
 //!   eval       evaluate an expert (original or compressed) via PJRT
 //!   serve      run the serving coordinator on a synthetic trace
+//!   loadgen    replay a seeded trace scenario through the scheduling +
+//!              admission stack on the deterministic sim clock
+//!              (artifact-free)
 //!
 //! `compeft <subcommand> --help` lists flags.
 
@@ -30,9 +33,10 @@ fn main() {
         Some("inspect") => run(cmd_inspect(&argv[1..])),
         Some("eval") => run(cmd_eval(&argv[1..])),
         Some("serve") => run(cmd_serve(&argv[1..])),
+        Some("loadgen") => run(cmd_loadgen(&argv[1..])),
         _ => {
             eprintln!(
-                "usage: compeft <compress|inspect|eval|serve> [flags]\n\
+                "usage: compeft <compress|inspect|eval|serve|loadgen> [flags]\n\
                  see README.md for the experiment-to-bench map"
             );
             2
@@ -194,6 +198,126 @@ fn cmd_eval(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+fn cmd_loadgen(argv: &[String]) -> Result<()> {
+    use compeft::coordinator::admission::AdmissionConfig;
+    use compeft::util::bench::JsonSink;
+    use compeft::util::json::Json;
+    use compeft::workload::sim::{self, Mode, ServiceModel, SimConfig};
+    use compeft::workload::{Trace, TraceSpec};
+
+    let spec = ArgSpec::new(
+        "loadgen",
+        "replay seeded trace scenarios on the deterministic sim clock (artifact-free)",
+    )
+    .flag("scenario", "all", "steady | flash | diurnal | bursty | all")
+    .flag("seed", "2026", "trace seed (same seed -> bit-identical results)")
+    .flag("duration-ms", "2000", "trace length in simulated milliseconds")
+    .flag("experts", "32", "expert catalog size")
+    .flag("tenants", "4", "number of tenants")
+    .flag("rps", "800", "total offered load, requests/second")
+    .flag("queue-cap", "1024", "admission queue cap (0 = unbounded)")
+    .boolean("no-shed", "disable deadline-aware shedding")
+    .flag("est-batch-us", "20000", "admission queue-delay estimate per batch, us")
+    .flag("gpu-slots", "4", "simulated accelerator residency, in experts")
+    .flag("prefetch-depth", "2", "staged-prefetch lookahead (0 = off)")
+    .flag("concurrency", "0", "closed-loop outstanding requests (0 = open loop)")
+    .flag("json", "", "write {bench,row,value,unit,config} records to this path");
+    let a = spec.parse(argv)?;
+
+    let duration_us = a.get_u64("duration-ms")? * 1_000;
+    let n_experts = a.get_usize("experts")? as u32;
+    let tenants = a.get_usize("tenants")?;
+    let total_rps = a.get_f64("rps")?;
+    let seed = a.get_u64("seed")?;
+    let concurrency = a.get_usize("concurrency")?;
+
+    let cfg = SimConfig {
+        admission: AdmissionConfig {
+            queue_cap: a.get_usize("queue-cap")?,
+            shed_deadline: !a.get_bool("no-shed"),
+            est_batch_us: a.get_u64("est-batch-us")?,
+            ..Default::default()
+        },
+        model: ServiceModel {
+            gpu_slots: a.get_usize("gpu-slots")?,
+            prefetch_depth: a.get_usize("prefetch-depth")?,
+            ..Default::default()
+        },
+        mode: if concurrency > 0 { Mode::Closed { concurrency } } else { Mode::Open },
+        ..Default::default()
+    };
+
+    let mut sink = if a.get("json").is_empty() {
+        None
+    } else {
+        let mut config = Json::obj();
+        config
+            .set("seed", Json::num(seed as f64))
+            .set("duration_us", Json::num(duration_us as f64))
+            .set("n_experts", Json::num(f64::from(n_experts)))
+            .set("tenants", Json::num(tenants as f64))
+            .set("total_rps", Json::num(total_rps));
+        Some(JsonSink::new(PathBuf::from(a.get("json")), "loadgen", config))
+    };
+
+    let names: Vec<&str> = match a.get("scenario") {
+        "all" => vec!["steady", "flash", "diurnal", "bursty"],
+        one => vec![one],
+    };
+    for name in names {
+        let Some(tspec) = TraceSpec::scenario(name, duration_us, n_experts, tenants, total_rps)
+        else {
+            bail!("unknown scenario {name} (steady|flash|diurnal|bursty|all)");
+        };
+        let trace = Trace::generate(&tspec, seed);
+        let r = sim::run(&trace, &cfg);
+        println!("--- scenario {name} (seed {seed}) ---");
+        println!(
+            "offered {:.1} rps  submitted {}  accepted {}  completed {}  \
+             shed {} ({:.1}% | deadline {}, queue_full {})",
+            trace.offered_rps(),
+            r.submitted,
+            r.accepted,
+            r.completed,
+            r.shed.total(),
+            r.shed_rate() * 100.0,
+            r.shed.shed_deadline,
+            r.shed.queue_full,
+        );
+        println!(
+            "latency: p50 {:.2}ms  p99 {:.2}ms  p999 {:.2}ms  mean {:.2}ms",
+            r.p50_us() / 1e3,
+            r.p99_us() / 1e3,
+            r.p999_us() / 1e3,
+            r.latency.mean_us() / 1e3,
+        );
+        println!(
+            "goodput {:.1} rps ({} met deadline)  batches {}  swaps {}  fetches {}  \
+             prefetch hits {}  max queued {}",
+            r.goodput_rps(),
+            r.deadline_met,
+            r.batches,
+            r.swaps,
+            r.fetches,
+            r.prefetch_hits,
+            r.max_queued,
+        );
+        if let Some(s) = &mut sink {
+            s.record(&format!("{name}/goodput_rps"), r.goodput_rps(), "rps");
+            s.record(&format!("{name}/shed_rate"), r.shed_rate(), "frac");
+            s.record(&format!("{name}/p50_us"), r.p50_us(), "us");
+            s.record(&format!("{name}/p99_us"), r.p99_us(), "us");
+            s.record(&format!("{name}/p999_us"), r.p999_us(), "us");
+            s.record(&format!("{name}/fetches"), r.fetches as f64, "count");
+            s.record(&format!("{name}/max_queued"), r.max_queued as f64, "count");
+        }
+    }
+    if let Some(s) = &sink {
+        s.write().context("write --json artifact")?;
+    }
+    Ok(())
+}
+
 fn cmd_serve(argv: &[String]) -> Result<()> {
     let spec = ArgSpec::new("serve", "run the coordinator on a synthetic trace")
         .flag("scale", "s", "model scale")
@@ -347,6 +471,19 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         report.overlap_saved,
         report.rejected
     );
+    if report.rejected > 0 {
+        let rb = report.rejected_by;
+        println!(
+            "rejected by reason: shed_deadline {}  queue_full {}  malformed {}  \
+             unknown_expert {}  load_failure {}  exec_error {}",
+            rb.shed_deadline,
+            rb.queue_full,
+            rb.malformed,
+            rb.unknown_expert,
+            rb.load_failure,
+            rb.exec_error
+        );
+    }
     println!(
         "store: {} stripe retries  {} failovers  {} corrupt payloads",
         report.stripe_retries, report.failovers, report.corrupt_payloads

@@ -148,6 +148,69 @@ impl Bench {
     }
 }
 
+/// Scan a bench target's argv for `--json <path>` / `--json=<path>`.
+/// Returns the artifact path, or None when the flag is absent.
+pub fn json_flag(args: &[String]) -> Option<std::path::PathBuf> {
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        if a == "--json" {
+            return it.next().map(std::path::PathBuf::from);
+        }
+        if let Some(p) = a.strip_prefix("--json=") {
+            return Some(std::path::PathBuf::from(p));
+        }
+    }
+    None
+}
+
+/// Machine-readable result sink behind the benches' `--json <path>`
+/// flag: collects rows and writes one JSON array of records with the
+/// stable schema `{bench, row, value, unit, config}` — `bench` the
+/// target name, `row` the `label/metric` pair, `config` the run
+/// parameters shared by every record. CI uploads these `BENCH_*.json`
+/// files as workflow artifacts.
+pub struct JsonSink {
+    path: std::path::PathBuf,
+    bench: String,
+    config: Json,
+    records: Vec<Json>,
+}
+
+impl JsonSink {
+    pub fn new(path: std::path::PathBuf, bench: &str, config: Json) -> JsonSink {
+        JsonSink { path, bench: bench.to_string(), config, records: Vec::new() }
+    }
+
+    /// Append one record. `row` is conventionally `label/metric`
+    /// (e.g. `steady/p999_us`); `unit` names `value`'s unit (`us`,
+    /// `rps`, `frac`, `count`, ...).
+    pub fn record(&mut self, row: &str, value: f64, unit: &str) {
+        let mut j = Json::obj();
+        j.set("bench", Json::str(&self.bench))
+            .set("row", Json::str(row))
+            .set("value", Json::num(value))
+            .set("unit", Json::str(unit))
+            .set("config", self.config.clone());
+        self.records.push(j);
+    }
+
+    /// Record every field of a printed row under `label/<field>`.
+    pub fn record_row(&mut self, label: &str, fields: &[(&str, f64, &str)]) {
+        for (metric, value, unit) in fields {
+            self.record(&format!("{label}/{metric}"), *value, unit);
+        }
+    }
+
+    /// Write the artifact. Call once at the end of the bench run.
+    pub fn write(&self) -> std::io::Result<()> {
+        if let Some(dir) = self.path.parent().filter(|d| !d.as_os_str().is_empty()) {
+            std::fs::create_dir_all(dir)?;
+        }
+        let doc = Json::Arr(self.records.clone());
+        std::fs::write(&self.path, doc.to_string() + "\n")
+    }
+}
+
 fn fmt_dur(d: Duration) -> String {
     let s = d.as_secs_f64();
     if s >= 1.0 {
@@ -256,6 +319,52 @@ mod tests {
         let m = b.run("sleep60us", || std::thread::sleep(Duration::from_micros(60)));
         assert!(m.mean >= Duration::from_micros(55), "mean={:?}", m.mean);
         assert_eq!(m.iters, 5);
+    }
+
+    #[test]
+    fn json_flag_parses_both_spellings() {
+        let args = |v: &[&str]| v.iter().map(|s| s.to_string()).collect::<Vec<_>>();
+        assert_eq!(
+            json_flag(&args(&["--quick", "--json", "out.json"])),
+            Some(std::path::PathBuf::from("out.json"))
+        );
+        assert_eq!(
+            json_flag(&args(&["--json=a/b.json"])),
+            Some(std::path::PathBuf::from("a/b.json"))
+        );
+        assert_eq!(json_flag(&args(&["--quick"])), None);
+        assert_eq!(json_flag(&args(&["--json"])), None, "dangling flag");
+    }
+
+    #[test]
+    fn json_sink_writes_stable_schema() {
+        let dir = std::env::temp_dir().join(format!("compeft_sink_{}", std::process::id()));
+        let path = dir.join("BENCH_test.json");
+        let mut config = Json::obj();
+        config.set("seed", Json::num(42.0));
+        let mut sink = JsonSink::new(path.clone(), "service_load", config);
+        sink.record("steady/p999_us", 1234.5, "us");
+        sink.record_row("flash", &[("goodput_rps", 10.0, "rps"), ("shed_rate", 0.25, "frac")]);
+        sink.write().unwrap();
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let records = match &doc {
+            Json::Arr(xs) => xs,
+            other => panic!("artifact must be an array, got {other:?}"),
+        };
+        assert_eq!(records.len(), 3);
+        for r in records {
+            assert_eq!(r.get("bench").and_then(|j| j.as_str()), Some("service_load"));
+            for key in ["row", "value", "unit", "config"] {
+                assert!(r.get(key).is_some(), "record missing {key}");
+            }
+            assert_eq!(
+                r.get("config").and_then(|c| c.get("seed")).and_then(|j| j.as_f64()),
+                Some(42.0)
+            );
+        }
+        assert_eq!(records[0].get("row").and_then(|j| j.as_str()), Some("steady/p999_us"));
+        assert_eq!(records[2].get("unit").and_then(|j| j.as_str()), Some("frac"));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

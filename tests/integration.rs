@@ -19,7 +19,7 @@ use compeft::compeft::engine::{
 use compeft::compeft::format::{self, to_bytes, to_bytes_par, Encoding};
 use compeft::coordinator::batcher::BatchPolicy;
 use compeft::coordinator::registry::{scan_expert_npz, ExpertMethod, Registry};
-use compeft::coordinator::{Coordinator, CoordinatorConfig, LinkSpec};
+use compeft::coordinator::{AdmissionConfig, Coordinator, CoordinatorConfig, LinkSpec};
 use compeft::merging::ternary::merge_ternary;
 use compeft::merging::{merge_dense, MergeMethod};
 use compeft::runtime::AdapterKind;
@@ -27,6 +27,8 @@ use compeft::tensor::{ParamSet, Tensor};
 use compeft::util::pool::ThreadPool;
 use compeft::util::prop;
 use compeft::util::rng::Pcg;
+use compeft::workload::sim::{self, Outcome, ServiceModel, SimConfig};
+use compeft::workload::{Trace, TraceSpec};
 use std::path::PathBuf;
 use std::time::Duration;
 
@@ -1111,4 +1113,103 @@ fn pallas_and_rust_agree_on_ternarization() -> anyhow::Result<()> {
     // allow a whisker of disagreement.
     assert!(mismatches <= 2, "{mismatches} mismatches");
     Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Load harness + admission control (no artifacts)
+// ---------------------------------------------------------------------------
+
+fn flash_sim_config() -> SimConfig {
+    SimConfig {
+        admission: AdmissionConfig {
+            queue_cap: 96,
+            shed_deadline: true,
+            est_batch_us: 20_000,
+            ..Default::default()
+        },
+        model: ServiceModel { gpu_slots: 2, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+/// Admission is a pure function of (trace seed, config): the per-request
+/// accepted/shed/completed outcome vector, the per-reason shed counters,
+/// and the service counters are bit-identical across reruns and across
+/// trace-generation pool sizes (`COMPEFT_TEST_WORKERS`).
+#[test]
+fn loadgen_admission_outcomes_bit_identical_across_pool_sizes_and_reruns() {
+    let spec = TraceSpec::flash_crowd(1_500_000, 24, 3, 900.0, 6.0);
+    let seed = 0xA11CE;
+    let cfg = flash_sim_config();
+
+    let serial_trace = Trace::generate(&spec, seed);
+    let baseline = sim::run(&serial_trace, &cfg);
+    assert!(baseline.shed.total() > 0, "flash crowd must trigger shedding");
+
+    for workers in prop::pool_sizes() {
+        let pool = ThreadPool::new(workers);
+        let trace = Trace::generate_with_pool(&spec, seed, &pool);
+        assert_eq!(
+            trace.events, serial_trace.events,
+            "trace generation diverged at {workers} workers"
+        );
+        for rerun in 0..2 {
+            let r = sim::run(&trace, &cfg);
+            assert_eq!(
+                r.outcomes, baseline.outcomes,
+                "outcomes diverged (workers={workers}, rerun={rerun})"
+            );
+            assert_eq!(r.shed, baseline.shed, "per-reason shed counters diverged");
+            assert_eq!(
+                (r.accepted, r.completed, r.batches, r.fetches, r.prefetch_hits, r.max_queued),
+                (
+                    baseline.accepted,
+                    baseline.completed,
+                    baseline.batches,
+                    baseline.fetches,
+                    baseline.prefetch_hits,
+                    baseline.max_queued
+                ),
+                "service counters diverged (workers={workers}, rerun={rerun})"
+            );
+        }
+    }
+}
+
+/// Early-shed requests are free: they never consume a fetch, a swap, or a
+/// batch slot. Deleting the shed events from a flash-crowd trace and
+/// replaying only the survivors with admission wide open reproduces the
+/// identical schedule — same batch/fetch counters and the same per-request
+/// outcome for every surviving event.
+#[test]
+fn loadgen_flash_crowd_early_sheds_consume_no_fetch_or_service() {
+    let spec = TraceSpec::flash_crowd(1_500_000, 24, 3, 900.0, 6.0);
+    let trace = Trace::generate(&spec, 0xF1A5);
+    let cfg = flash_sim_config();
+
+    let shed_run = sim::run(&trace, &cfg);
+    assert!(shed_run.shed.shed_deadline > 0, "flash crowd must trigger deadline sheds");
+
+    let kept: Vec<usize> = (0..trace.events.len())
+        .filter(|&i| !matches!(shed_run.outcomes[i], Outcome::Shed(_)))
+        .collect();
+    let pruned = Trace {
+        events: kept.iter().map(|&i| trace.events[i]).collect(),
+        n_experts: trace.n_experts,
+        duration_us: trace.duration_us,
+    };
+    let open = sim::run(&pruned, &SimConfig { admission: AdmissionConfig::default(), ..cfg });
+
+    assert_eq!(open.shed.total(), 0, "pruned replay must admit everything");
+    assert_eq!(
+        (open.batches, open.swaps, open.fetches, open.prefetch_hits),
+        (shed_run.batches, shed_run.swaps, shed_run.fetches, shed_run.prefetch_hits),
+        "shed requests must not perturb the service schedule"
+    );
+    for (pi, &oi) in kept.iter().enumerate() {
+        assert_eq!(
+            open.outcomes[pi], shed_run.outcomes[oi],
+            "event {oi}: outcome changed when shed events were removed"
+        );
+    }
 }
