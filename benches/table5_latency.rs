@@ -16,6 +16,7 @@
 use compeft::bench_support as bs;
 use compeft::compeft::compress::CompressConfig;
 use compeft::compeft::entropy::human_bytes;
+use compeft::coordinator::archive::{build_from_registry, ArchiveTier};
 use compeft::coordinator::cache::LruTier;
 use compeft::coordinator::loader::ExpertLoader;
 use compeft::coordinator::metrics::Metrics;
@@ -25,13 +26,17 @@ use compeft::coordinator::transport::{LinkSpec, SimLink};
 use compeft::coordinator::{PrepareContext, PreparedExpert, Prefetcher, TakeOutcome};
 use compeft::merging::MergeMethod;
 use compeft::tensor::{ParamSet, Tensor};
-use compeft::util::bench::{json_flag, Bench, JsonSink};
+use compeft::util::bench::{json_flag, measure_peak, Bench, JsonSink, PeakAlloc};
 use compeft::util::json::Json;
 use compeft::util::pool::ThreadPool;
 use compeft::util::rng::Pcg;
 use compeft::util::stats;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
+
+/// Measured (not modeled) peak heap for the zero-copy comparison rows.
+#[global_allocator]
+static ALLOC: PeakAlloc = PeakAlloc;
 
 const REPS: usize = 10;
 
@@ -108,6 +113,7 @@ fn prefetch_comparison(
             registry: Arc::clone(&reg),
             templates: templates.clone(),
             cpu: Arc::new(Mutex::new(LruTier::new("cpu", 256 << 20))),
+            archive: None,
         })
     };
 
@@ -267,6 +273,131 @@ fn striped_fetch_comparison(
     Ok(())
 }
 
+/// Archive-resident views vs host copies on a cold-swap fetch sweep:
+/// the same expert pool fetched (a) over the flat link — every fetch
+/// materializes a fresh heap buffer — and (b) as zero-copy views of a
+/// resident `.cpar` image. Measures wall time and *measured* peak heap
+/// (PeakAlloc is this binary's global allocator), and enforces the
+/// zero-copy acceptance bar: the view path performs **zero** heap
+/// copies of encoded payload bytes and its serving peak is a small
+/// fraction of the copy path's.
+fn archive_view_comparison(
+    bench: &mut Bench,
+    sink: &mut Option<JsonSink>,
+    quick: bool,
+) -> anyhow::Result<()> {
+    let elems: usize = if quick { 1 << 18 } else { 1 << 20 };
+    let n_experts = 4usize;
+    let dir = std::env::temp_dir()
+        .join(format!("compeft_t5_archive_{}", std::process::id()));
+    std::fs::create_dir_all(&dir)?;
+    let mut reg = Registry::new();
+    let ccfg = CompressConfig { density: 0.1, alpha: 1.0, ..Default::default() };
+    let mut rng = Pcg::seed(4242);
+    for i in 0..n_experts {
+        let data: Vec<f32> =
+            (0..elems).map(|_| rng.normal_ms(0.0, 7e-4) as f32).collect();
+        let mut tv = ParamSet::new();
+        tv.insert("w.lora_a", Tensor::new(vec![elems], data));
+        let npz = dir.join(format!("e{i}.lora.npz"));
+        tv.save_npz(&npz)?;
+        reg.register_compeft(&format!("e{i}"), "t", "s", ExpertMethod::Lora, &npz, &ccfg)?;
+    }
+    let archive_path = dir.join("experts.cpar");
+    let (members, archive_bytes) = build_from_registry(&reg, &archive_path)?;
+    assert_eq!(members, n_experts);
+    let mut ids = reg.ids();
+    ids.sort();
+    let recs: Vec<_> = ids.iter().map(|id| reg.get(id).unwrap().clone()).collect();
+    let encoded_total: u64 = recs.iter().map(|r| r.encoded_bytes).sum();
+
+    // Host-copy leg: flat-link fetch, one fresh buffer per expert.
+    let flat_metrics = Arc::new(Metrics::new());
+    let flat = ExpertLoader::new(
+        SimLink::new("net", LinkSpec::internet()).with_time_scale(0.0),
+        SimLink::new("pcie", LinkSpec::pcie()).with_time_scale(0.0),
+    )
+    .with_meter(flat_metrics.copy_meter());
+    let mut copy_ms = Vec::with_capacity(REPS);
+    let mut host_peak = 0u64;
+    let mut reference = Vec::new();
+    for _ in 0..REPS {
+        let (fetched, secs, peak) = measure_peak(|| -> anyhow::Result<Vec<_>> {
+            recs.iter().map(|r| Ok(flat.fetch_encoded(r)?.0)).collect()
+        });
+        copy_ms.push(secs * 1e3);
+        host_peak = host_peak.max(peak);
+        reference = fetched?;
+    }
+    let host_copies = flat_metrics.snapshot().payload_copies;
+    assert_eq!(
+        host_copies,
+        (REPS * n_experts) as u64,
+        "every flat fetch materializes exactly one buffer"
+    );
+
+    // Resident-view leg: the archive image is opened (and resident)
+    // up front, like an OS page cache; *serving* then hands out views.
+    let arc_metrics = Arc::new(Metrics::new());
+    let tier = ArchiveTier::open(&archive_path, Arc::clone(&arc_metrics))?;
+    let mut view_ms = Vec::with_capacity(REPS);
+    let mut view_peak = 0u64;
+    let mut views = Vec::new();
+    for _ in 0..REPS {
+        let (got, secs, peak) = measure_peak(|| {
+            recs.iter()
+                .map(|r| tier.get(&r.id).expect("archived"))
+                .collect::<Vec<_>>()
+        });
+        view_ms.push(secs * 1e3);
+        view_peak = view_peak.max(peak);
+        views = got;
+    }
+    for (v, want) in views.iter().zip(&reference) {
+        assert_eq!(v, want, "archive view must be bit-identical to the flat fetch");
+    }
+    let snap = arc_metrics.snapshot();
+    assert_eq!(
+        snap.payload_copies, 0,
+        "archive-resident serving performs zero heap copies of encoded bytes"
+    );
+    assert_eq!(snap.archive_hits, (REPS * n_experts) as u64);
+    assert!(
+        view_peak < host_peak / 8,
+        "resident-view serving peak ({view_peak} B) must be a small fraction of \
+         the host-copy peak ({host_peak} B)"
+    );
+
+    let copy_mean = stats::mean(&copy_ms);
+    let view_mean = stats::mean(&view_ms);
+    let fields = [
+        ("experts", n_experts as f64),
+        ("encoded_bytes", encoded_total as f64),
+        ("archive_bytes", archive_bytes as f64),
+        ("host_copy_ms", copy_mean),
+        ("resident_view_ms", view_mean),
+        ("fetch_speedup_x", copy_mean / view_mean.max(1e-9)),
+        ("host_peak_bytes", host_peak as f64),
+        ("view_peak_bytes", view_peak as f64),
+        ("host_payload_copies", host_copies as f64),
+        ("view_payload_copies", snap.payload_copies as f64),
+    ];
+    bench.row("archive/resident_view_vs_host_copy", &fields);
+    sink_row(sink, "archive/resident_view_vs_host_copy", &fields);
+    println!(
+        "archive tier: {} experts ({} encoded) served as views of a {} image — \
+         peak heap {} -> {} per sweep, {} -> 0 payload copies",
+        n_experts,
+        human_bytes(encoded_total),
+        human_bytes(archive_bytes),
+        human_bytes(host_peak),
+        human_bytes(view_peak),
+        host_copies,
+    );
+    std::fs::remove_dir_all(&dir).ok();
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let quick = args.iter().any(|a| a == "--quick");
@@ -278,6 +409,7 @@ fn main() -> anyhow::Result<()> {
     let mut bench = Bench::new("table5");
     prefetch_comparison(&mut bench, &mut sink, quick)?;
     striped_fetch_comparison(&mut bench, &mut sink, quick)?;
+    archive_view_comparison(&mut bench, &mut sink, quick)?;
     if let Some(s) = &sink {
         s.write()?;
     }

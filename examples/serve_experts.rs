@@ -41,12 +41,19 @@ fn main() -> Result<()> {
          positionals: [scale] [n_requests]",
     )
     .flag("store-nodes", "0", "sharded store nodes (0 = flat single link)")
-    .flag("replication", "1", "replicas per expert in the sharded store");
+    .flag("replication", "1", "replicas per expert in the sharded store")
+    .flag(
+        "archive",
+        "",
+        "local .cpar archive (see `compeft archive build`) served as \
+         zero-copy views; applies to the compeft leg only",
+    );
     let a = spec.parse(&argv)?;
     // Malformed values error out loudly instead of silently falling
     // back to the flat store.
     let store_nodes = a.get_usize("store-nodes")?;
     let replication = a.get_usize("replication")?;
+    let archive = a.get("archive").to_string();
     let scale = a
         .positional()
         .first()
@@ -112,6 +119,11 @@ fn main() -> Result<()> {
         cfg.pcie = LinkSpec::pcie();
         cfg.store_nodes = store_nodes;
         cfg.replication = replication;
+        // The archive holds `.cpeft` members; the original-fp16 leg
+        // must not view ComPEFT bytes for its npz-format experts.
+        if format == "compeft" && !archive.is_empty() {
+            cfg.archive = Some(std::path::PathBuf::from(&archive));
+        }
         let coord = Coordinator::start(cfg, registry)?;
 
         // Identical Zipf trace for both formats.
@@ -194,6 +206,14 @@ fn main() -> Result<()> {
             );
         } else {
             println!();
+        }
+        if report.archive_hits > 0 {
+            println!(
+                "  archive: {} hits, {} viewed in place, {} payload copies\n",
+                report.archive_hits,
+                human_bytes(report.archive_bytes_viewed),
+                report.payload_copies
+            );
         }
         summary.push((
             format,

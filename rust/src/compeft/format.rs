@@ -25,6 +25,14 @@
 //! on a [`ThreadPool`](crate::util::pool::ThreadPool) with output
 //! identical to the serial reader.
 //!
+//! Both readers take `&[u8]` and never need the buffer to outlive the
+//! call, so they decode **in place** from any
+//! [`Payload`](crate::compeft::payload::Payload) view — including a
+//! member of a `.cpar` archive
+//! ([`coordinator::archive`](crate::coordinator::archive)), where
+//! payloads sit at 64-byte-aligned file offsets so chunk frames keep
+//! the alignment class they would have in a standalone file.
+//!
 //! ```text
 //! magic "CPFT" | version u16 (1|2) | flags u16 | granularity u8 | encoding u8
 //! n_layout u32 | [ name, ndim u32, dims u64*, offset u64 ]*

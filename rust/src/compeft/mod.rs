@@ -11,6 +11,8 @@
 //! * [`entropy`] — storage accounting (entropy bounds, ratios)
 //! * [`format`] — the `.cpeft` on-disk / on-wire container (v2:
 //!   chunk-framed payloads; v1 remains readable)
+//! * [`payload`] — zero-copy [`Payload`] views of encoded bytes (owned
+//!   / sliced / mapped-archive regions) + the [`CopyMeter`] copy guard
 
 pub mod bitmask;
 pub mod compress;
@@ -18,6 +20,7 @@ pub mod engine;
 pub mod entropy;
 pub mod format;
 pub mod golomb;
+pub mod payload;
 pub mod sparsify;
 pub mod ternary;
 
@@ -29,4 +32,5 @@ pub use engine::{
     par_add_assign, par_compress_paramset, par_compress_vector,
     par_decompress_params, par_merge, EngineConfig,
 };
+pub use payload::{CopyMeter, Payload, PayloadBacking};
 pub use ternary::TernaryVector;

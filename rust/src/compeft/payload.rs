@@ -1,0 +1,300 @@
+//! Zero-copy views of encoded expert payload bytes.
+//!
+//! Every layer of the serve path used to hand encoded checkpoint bytes
+//! around as owned `Vec<u8>`s: the store copied each stripe off the
+//! source buffer, reassembly concatenated the copies, the host tier
+//! held yet another `Arc<Vec<u8>>`, and the fp16 decode path cloned the
+//! whole buffer once more. None of those copies changed a byte — the
+//! decode readers ([`crate::compeft::format::from_bytes`] /
+//! [`from_bytes_par`](crate::compeft::format::from_bytes_par)) only
+//! ever *borrow* `&[u8]`. [`Payload`] makes the borrow first-class: a
+//! cheaply clonable view `(backing, start, len)` over either
+//!
+//! * **owned** bytes (`Arc<Vec<u8>>` — a fetched buffer, shared not
+//!   copied), or
+//! * a **mapped** region (an [`PayloadBacking`] such as the archive
+//!   tier's simulated page cache, where the bytes stay resident in one
+//!   big buffer and every expert is a sub-range view).
+//!
+//! `Payload` derefs to `&[u8]`, so every existing `&[u8]` consumer —
+//! the container readers, the parallel decode engine, the CRC — reads
+//! straight out of the view with zero further allocation. Sub-ranges
+//! ([`Payload::slice`]) re-slice the same backing (stripes of one
+//! fetch, members of one archive), and bounds are validated at
+//! construction so deref can never panic.
+//!
+//! [`CopyMeter`] is the refactor's regression guard: every place that
+//! still materializes encoded payload bytes into fresh heap memory
+//! (the one unavoidable read off disk/remote, plus any fallback
+//! concatenation) counts itself, surfacing as the `payload_copies`
+//! metric. An archive-resident serve must count **zero**.
+
+use anyhow::{bail, Result};
+use std::ops::Deref;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// A stable byte region a [`Payload`] can view without owning it — the
+/// archive tier's simulated page cache implements this so expert
+/// payloads are served as in-place views of the resident file image.
+///
+/// Contract: `as_bytes` must return the **same** slice (same address,
+/// same length) for the lifetime of the backing. Views validate their
+/// range once at construction and deref without re-checking.
+pub trait PayloadBacking: Send + Sync {
+    fn as_bytes(&self) -> &[u8];
+}
+
+impl PayloadBacking for Vec<u8> {
+    fn as_bytes(&self) -> &[u8] {
+        self
+    }
+}
+
+/// What a [`Payload`] borrows from.
+#[derive(Clone)]
+enum Backing {
+    /// Shared owned bytes (a fetched buffer).
+    Owned(Arc<Vec<u8>>),
+    /// A region of some longer-lived mapping (archive page cache).
+    Mapped(Arc<dyn PayloadBacking>),
+}
+
+impl Backing {
+    fn bytes(&self) -> &[u8] {
+        match self {
+            Backing::Owned(v) => v,
+            Backing::Mapped(m) => m.as_bytes(),
+        }
+    }
+}
+
+/// A zero-copy, cheaply clonable view of encoded payload bytes.
+///
+/// Cloning bumps a refcount; slicing narrows the window over the same
+/// backing. The backing stays alive as long as any view of it does, so
+/// handing a view out of a cache tier — or evicting the tier entry
+/// while a decode still holds a view — can never invalidate the bytes.
+#[derive(Clone)]
+pub struct Payload {
+    backing: Backing,
+    start: usize,
+    len: usize,
+}
+
+impl Payload {
+    /// View over a freshly materialized buffer (takes ownership; the
+    /// buffer is shared from here on, never copied again).
+    pub fn from_vec(bytes: Vec<u8>) -> Payload {
+        Payload::from_arc(Arc::new(bytes))
+    }
+
+    /// View over already-shared owned bytes.
+    pub fn from_arc(bytes: Arc<Vec<u8>>) -> Payload {
+        let len = bytes.len();
+        Payload { backing: Backing::Owned(bytes), start: 0, len }
+    }
+
+    /// View of `[start, start+len)` inside a mapped backing (archive
+    /// region). Bounds are validated here, once, so deref cannot panic.
+    pub fn mapped(
+        backing: Arc<dyn PayloadBacking>,
+        start: usize,
+        len: usize,
+    ) -> Result<Payload> {
+        let total = backing.as_bytes().len();
+        match start.checked_add(len) {
+            Some(end) if end <= total => {
+                Ok(Payload { backing: Backing::Mapped(backing), start, len })
+            }
+            _ => bail!("payload view [{start}, {start}+{len}) outside backing of {total} bytes"),
+        }
+    }
+
+    /// Re-slice this view to `[start, start+len)` **relative to the
+    /// view** — same backing, narrower window, no copy. Works on every
+    /// variant (a stripe of a fetched buffer, a member of an archive).
+    pub fn slice(&self, start: usize, len: usize) -> Result<Payload> {
+        match start.checked_add(len) {
+            Some(end) if end <= self.len => Ok(Payload {
+                backing: self.backing.clone(),
+                start: self.start + start,
+                len,
+            }),
+            _ => bail!(
+                "sub-view [{start}, {start}+{len}) outside payload of {} bytes",
+                self.len
+            ),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The viewed bytes. (Also available through `Deref`, so a
+    /// `&Payload` coerces to `&[u8]` wherever one is expected.)
+    pub fn as_slice(&self) -> &[u8] {
+        &self.backing.bytes()[self.start..self.start + self.len]
+    }
+}
+
+impl Deref for Payload {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl std::fmt::Debug for Payload {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let kind = match self.backing {
+            Backing::Owned(_) => "owned",
+            Backing::Mapped(_) => "mapped",
+        };
+        write!(f, "Payload({kind}, start={}, len={})", self.start, self.len)
+    }
+}
+
+impl PartialEq for Payload {
+    fn eq(&self, other: &Payload) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl Eq for Payload {}
+
+impl PartialEq<[u8]> for Payload {
+    fn eq(&self, other: &[u8]) -> bool {
+        self.as_slice() == other
+    }
+}
+
+impl PartialEq<Vec<u8>> for Payload {
+    fn eq(&self, other: &Vec<u8>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+/// Shared counter of encoded-payload heap copies — the zero-copy
+/// refactor's regression guard, surfaced as the `payload_copies`
+/// metric. Each copy *event* (a buffer materialized from disk/remote,
+/// a fallback reassembly concatenation) counts once; views, clones,
+/// and slices count nothing. Cloning the meter shares the counter
+/// (one meter per engine, handed to its loader and store), so
+/// concurrently running engines/tests never contaminate each other —
+/// deliberately not a process-global.
+#[derive(Clone, Debug, Default)]
+pub struct CopyMeter(Arc<AtomicU64>);
+
+impl CopyMeter {
+    pub fn new() -> CopyMeter {
+        CopyMeter::default()
+    }
+
+    /// Count `copies` heap materializations of encoded payload bytes.
+    pub fn record(&self, copies: u64) {
+        self.0.fetch_add(copies, Ordering::Relaxed);
+    }
+
+    /// Copies counted so far (across every clone of this meter).
+    pub fn count(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn owned_view_derefs_and_slices_without_copy() {
+        let data: Vec<u8> = (0..100u8).collect();
+        let p = Payload::from_vec(data.clone());
+        assert_eq!(p.len(), 100);
+        assert_eq!(&*p, &data[..]);
+        assert_eq!(p, data, "PartialEq<Vec<u8>>");
+
+        // A sub-view shares the backing: same underlying addresses.
+        let s = p.slice(10, 20).unwrap();
+        assert_eq!(&*s, &data[10..30]);
+        assert_eq!(s.as_slice().as_ptr(), unsafe { p.as_slice().as_ptr().add(10) });
+
+        // Re-slicing a slice composes offsets.
+        let ss = s.slice(5, 5).unwrap();
+        assert_eq!(&*ss, &data[15..20]);
+
+        // Clones are views too, not copies.
+        let c = p.clone();
+        assert_eq!(c.as_slice().as_ptr(), p.as_slice().as_ptr());
+    }
+
+    #[test]
+    fn out_of_range_views_fail_at_construction_never_at_deref() {
+        let p = Payload::from_vec(vec![0u8; 16]);
+        assert!(p.slice(10, 7).is_err());
+        assert!(p.slice(17, 0).is_err());
+        assert!(p.slice(usize::MAX, 2).is_err(), "overflowing range must not wrap");
+        assert!(p.slice(16, 0).is_ok(), "empty view at the end is fine");
+        assert!(p.slice(16, 0).unwrap().is_empty());
+
+        let backing: Arc<dyn PayloadBacking> = Arc::new(vec![1u8; 8]);
+        assert!(Payload::mapped(Arc::clone(&backing), 6, 3).is_err());
+        let m = Payload::mapped(backing, 2, 4).unwrap();
+        assert_eq!(&*m, &[1u8, 1, 1, 1]);
+    }
+
+    #[test]
+    fn mapped_views_read_in_place_from_the_backing() {
+        struct Region(Vec<u8>);
+        impl PayloadBacking for Region {
+            fn as_bytes(&self) -> &[u8] {
+                &self.0
+            }
+        }
+        let region = Arc::new(Region((0..64u8).collect()));
+        let a = Payload::mapped(Arc::clone(&region) as Arc<dyn PayloadBacking>, 0, 32)
+            .unwrap();
+        let b = Payload::mapped(region.clone() as Arc<dyn PayloadBacking>, 32, 32)
+            .unwrap();
+        // Adjacent views of one backing are contiguous in memory — the
+        // property the store's zero-copy stripe reassembly relies on.
+        assert_eq!(
+            unsafe { a.as_slice().as_ptr().add(a.len()) },
+            b.as_slice().as_ptr()
+        );
+        assert_eq!(&*b, &region.0[32..]);
+
+        // The backing survives as long as any view does.
+        drop(region);
+        assert_eq!(a[5], 5);
+    }
+
+    #[test]
+    fn views_outlive_their_source_handles() {
+        // The cache-eviction scenario: the tier drops its entry while a
+        // decode still holds a view — the bytes must stay valid.
+        let held;
+        {
+            let p = Payload::from_vec(vec![7u8; 1024]);
+            held = p.slice(100, 24).unwrap();
+        } // p (the "tier entry") dropped here
+        assert_eq!(&*held, &[7u8; 24][..]);
+    }
+
+    #[test]
+    fn copy_meter_is_shared_across_clones() {
+        let m = CopyMeter::new();
+        let m2 = m.clone();
+        m.record(1);
+        m2.record(2);
+        assert_eq!(m.count(), 3);
+        assert_eq!(m2.count(), 3);
+        assert_eq!(CopyMeter::new().count(), 0, "fresh meters are independent");
+    }
+}

@@ -1,0 +1,467 @@
+//! The `.cpeft` **archive tier**: many encoded experts packed into one
+//! local file, served as zero-copy [`Payload`] views.
+//!
+//! An archive (`CPAR`) is a fixed-offset index followed by the raw
+//! encoded payloads of its members:
+//!
+//! ```text
+//! magic "CPAR" | version u16 | flags u16 | n_members u32
+//! [ id_len u32 | id bytes | offset u64 | len u64 | member_crc u32 ]*   (sorted by id)
+//! index_crc u32                          (CRC-32 of everything above)
+//! ..zero padding..
+//! member payloads                        (each offset 64-byte aligned)
+//! ```
+//!
+//! The index is CRC'd and bounds-checked with the same discipline as
+//! the v2 `.cpeft` header: an implausible member count, an
+//! out-of-bounds or overlapping region, an unsorted index, non-zero
+//! padding, or trailing garbage is a structured `Err`, never a panic —
+//! and every member access re-verifies the member CRC, so a flipped
+//! bit inside a payload degrades that one expert to the remote-store
+//! path instead of serving a wrong view.
+//!
+//! [`ArchiveTier`] keeps the whole file resident in one shared buffer —
+//! a **simulated page cache** standing in for a real OS `mmap` (no
+//! platform mmap without bringing in a dependency; the access pattern
+//! and the zero-copy property are identical). `get` hands out a
+//! [`Payload::mapped`] view of the member's byte range: the existing
+//! readers ([`format::from_bytes`](crate::compeft::format::from_bytes) /
+//! `from_bytes_par`) decode **in place** from the file image, so an
+//! archive-resident expert costs zero heap copies of encoded bytes.
+//! Member payloads start on [`MEMBER_ALIGN`]-byte file offsets, so the
+//! v2 chunk frames inside each member keep a fixed alignment class and
+//! parallel decode workers read the view exactly as they would a
+//! standalone file.
+//!
+//! In the cache hierarchy the archive slots between host RAM and the
+//! remote store: GPU ⊃ host ⊃ **archive** ⊃ remote.
+
+use crate::compeft::format::crc32;
+use crate::compeft::payload::{Payload, PayloadBacking};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::registry::Registry;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+
+pub const ARCHIVE_MAGIC: &[u8; 4] = b"CPAR";
+pub const ARCHIVE_VERSION: u16 = 1;
+/// Member payloads start on this file-offset alignment, so chunk
+/// frames inside a member keep the alignment class they would have in
+/// a standalone `.cpeft` file.
+pub const MEMBER_ALIGN: usize = 64;
+
+const HEADER_LEN: usize = 12;
+/// Smallest possible index entry: 4 (id_len) + 1 (id) + 8 + 8 + 4.
+const MIN_ENTRY: usize = 25;
+
+/// The resident file image — the simulated page cache every member
+/// view borrows from.
+struct PageCache(Vec<u8>);
+
+impl PayloadBacking for PageCache {
+    fn as_bytes(&self) -> &[u8] {
+        &self.0
+    }
+}
+
+#[derive(Clone, Debug)]
+struct Member {
+    id: String,
+    offset: usize,
+    len: usize,
+    crc: u32,
+}
+
+/// Builds a `.cpeft` archive from (id, encoded bytes) members.
+#[derive(Default)]
+pub struct ArchiveBuilder {
+    members: BTreeMap<String, Vec<u8>>,
+}
+
+impl ArchiveBuilder {
+    pub fn new() -> ArchiveBuilder {
+        ArchiveBuilder::default()
+    }
+
+    /// Add one member. Ids must be unique and non-empty; `bytes` are
+    /// stored verbatim (whatever the expert's wire format).
+    pub fn add(&mut self, id: &str, bytes: Vec<u8>) -> Result<()> {
+        if id.is_empty() {
+            bail!("archive member id must be non-empty");
+        }
+        if self.members.contains_key(id) {
+            bail!("duplicate archive member id {id:?}");
+        }
+        self.members.insert(id.to_string(), bytes);
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    /// Serialize: index (sorted by id, CRC'd), then members at
+    /// [`MEMBER_ALIGN`]-aligned offsets with zero padding between.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        // Layout pass: where does each member land?
+        let mut index_len = HEADER_LEN;
+        for id in self.members.keys() {
+            index_len += 4 + id.len() + 8 + 8 + 4;
+        }
+        let mut cursor = index_len + 4; // past index_crc
+        let mut offsets = Vec::with_capacity(self.members.len());
+        for bytes in self.members.values() {
+            let off = cursor.next_multiple_of(MEMBER_ALIGN);
+            offsets.push(off);
+            cursor = off + bytes.len();
+        }
+        let total = cursor;
+
+        let mut out = Vec::with_capacity(total);
+        out.extend_from_slice(ARCHIVE_MAGIC);
+        out.extend_from_slice(&ARCHIVE_VERSION.to_le_bytes());
+        out.extend_from_slice(&0u16.to_le_bytes()); // flags
+        out.extend_from_slice(&(self.members.len() as u32).to_le_bytes());
+        for ((id, bytes), off) in self.members.iter().zip(&offsets) {
+            out.extend_from_slice(&(id.len() as u32).to_le_bytes());
+            out.extend_from_slice(id.as_bytes());
+            out.extend_from_slice(&(*off as u64).to_le_bytes());
+            out.extend_from_slice(&(bytes.len() as u64).to_le_bytes());
+            out.extend_from_slice(&crc32(bytes).to_le_bytes());
+        }
+        debug_assert_eq!(out.len(), index_len);
+        let index_crc = crc32(&out);
+        out.extend_from_slice(&index_crc.to_le_bytes());
+        for (bytes, off) in self.members.values().zip(&offsets) {
+            out.resize(*off, 0); // zero padding up to the aligned start
+            out.extend_from_slice(bytes);
+        }
+        debug_assert_eq!(out.len(), total);
+        out
+    }
+
+    /// Write the archive to `path`; returns the bytes written.
+    pub fn write_to(&self, path: &Path) -> Result<u64> {
+        let bytes = self.to_bytes();
+        std::fs::write(path, &bytes)
+            .with_context(|| format!("writing archive {}", path.display()))?;
+        Ok(bytes.len() as u64)
+    }
+}
+
+/// Pack every expert in `reg` (its stored checkpoint bytes, verbatim)
+/// into one archive at `out`. Returns `(members, bytes_written)`.
+pub fn build_from_registry(reg: &Registry, out: &Path) -> Result<(usize, u64)> {
+    let mut b = ArchiveBuilder::new();
+    for id in reg.ids() {
+        let rec = reg.get(&id).expect("id came from the registry");
+        let bytes = std::fs::read(&rec.path)
+            .with_context(|| format!("reading {} for archive member {id}", rec.path.display()))?;
+        b.add(&id, bytes)?;
+    }
+    let written = b.write_to(out)?;
+    Ok((b.len(), written))
+}
+
+/// A read-only, fully resident archive serving members as zero-copy
+/// [`Payload`] views. Construction validates the whole index (magic,
+/// version, CRC, bounds, ordering, padding); `get` re-verifies the
+/// member CRC on every access so a corrupt payload region yields
+/// `None` (degrade to the remote path) rather than a wrong view.
+pub struct ArchiveTier {
+    cache: Arc<PageCache>,
+    /// Sorted by id (the index order), for binary search.
+    index: Vec<Member>,
+    metrics: Arc<Metrics>,
+}
+
+impl ArchiveTier {
+    /// Load and validate an archive file.
+    pub fn open(path: &Path, metrics: Arc<Metrics>) -> Result<ArchiveTier> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading archive {}", path.display()))?;
+        ArchiveTier::from_bytes(bytes, metrics)
+            .with_context(|| format!("opening archive {}", path.display()))
+    }
+
+    /// Validate an in-memory archive image (the page cache is this
+    /// buffer; members become views of it).
+    pub fn from_bytes(bytes: Vec<u8>, metrics: Arc<Metrics>) -> Result<ArchiveTier> {
+        let len = bytes.len();
+        if len < HEADER_LEN + 4 {
+            bail!("archive too short ({len} bytes) for header + index CRC");
+        }
+        if &bytes[0..4] != ARCHIVE_MAGIC {
+            bail!("bad archive magic {:?}", &bytes[0..4]);
+        }
+        let version = u16::from_le_bytes([bytes[4], bytes[5]]);
+        if version != ARCHIVE_VERSION {
+            bail!("unsupported archive version {version}");
+        }
+        let flags = u16::from_le_bytes([bytes[6], bytes[7]]);
+        if flags != 0 {
+            bail!("unsupported archive flags {flags:#06x}");
+        }
+        let n_members = u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]) as usize;
+        // Plausibility bound before any allocation, v2-header style: an
+        // index entry is at least MIN_ENTRY bytes.
+        if n_members > (len - HEADER_LEN - 4) / MIN_ENTRY + 1 {
+            bail!("implausible archive member count {n_members} for {len} bytes");
+        }
+
+        let mut pos = HEADER_LEN;
+        let mut index = Vec::with_capacity(n_members);
+        let read = |pos: usize, n: usize| -> Result<&[u8]> {
+            // Index reads must stop short of the trailing index CRC.
+            if pos + n > len - 4 {
+                bail!("archive index truncated at byte {pos}");
+            }
+            Ok(&bytes[pos..pos + n])
+        };
+        for _ in 0..n_members {
+            let id_len = u32::from_le_bytes(read(pos, 4)?.try_into().unwrap()) as usize;
+            pos += 4;
+            if id_len == 0 {
+                bail!("archive member id must be non-empty");
+            }
+            let id = std::str::from_utf8(read(pos, id_len)?)
+                .context("archive member id is not UTF-8")?
+                .to_string();
+            pos += id_len;
+            let offset = u64::from_le_bytes(read(pos, 8)?.try_into().unwrap());
+            pos += 8;
+            let mlen = u64::from_le_bytes(read(pos, 8)?.try_into().unwrap());
+            pos += 8;
+            let crc = u32::from_le_bytes(read(pos, 4)?.try_into().unwrap());
+            pos += 4;
+            let (offset, mlen) = (offset as usize, mlen as usize);
+            index.push(Member { id, offset, len: mlen, crc });
+        }
+        let index_end = pos;
+        let stored_crc =
+            u32::from_le_bytes(bytes[index_end..index_end + 4].try_into().unwrap());
+        if crc32(&bytes[..index_end]) != stored_crc {
+            bail!("archive index CRC mismatch");
+        }
+
+        // Member regions: sorted ids, aligned, ascending, in bounds,
+        // zero padding between them, no trailing garbage.
+        let mut prev_end = index_end + 4;
+        for w in index.windows(2) {
+            if w[0].id >= w[1].id {
+                bail!("archive index not sorted by unique id ({:?} >= {:?})", w[0].id, w[1].id);
+            }
+        }
+        for m in &index {
+            if m.offset % MEMBER_ALIGN != 0 {
+                bail!("member {:?} offset {} not {MEMBER_ALIGN}-byte aligned", m.id, m.offset);
+            }
+            if m.offset < prev_end {
+                bail!("member {:?} region overlaps the bytes before it", m.id);
+            }
+            let end = m
+                .offset
+                .checked_add(m.len)
+                .filter(|&e| e <= len)
+                .with_context(|| format!("member {:?} region out of bounds", m.id))?;
+            if bytes[prev_end..m.offset].iter().any(|&b| b != 0) {
+                bail!("non-zero padding before member {:?}", m.id);
+            }
+            prev_end = end;
+        }
+        if prev_end != len {
+            bail!("{} trailing bytes after the last archive member", len - prev_end);
+        }
+
+        Ok(ArchiveTier { cache: Arc::new(PageCache(bytes)), index, metrics })
+    }
+
+    /// Serve `id` as a zero-copy view of the resident file image.
+    /// Verifies the member CRC on every access: a corrupt region
+    /// returns `None` (counted as a failover + corrupt payload, like a
+    /// bad stripe) so the caller degrades to the remote-store path.
+    pub fn get(&self, id: &str) -> Option<Payload> {
+        let i = self.index.binary_search_by(|m| m.id.as_str().cmp(id)).ok()?;
+        let m = &self.index[i];
+        let region = &self.cache.0[m.offset..m.offset + m.len];
+        if crc32(region) != m.crc {
+            self.metrics.record_store_faults(0, 1, 1);
+            return None;
+        }
+        let view = Payload::mapped(
+            Arc::clone(&self.cache) as Arc<dyn PayloadBacking>,
+            m.offset,
+            m.len,
+        )
+        .expect("member bounds validated at open");
+        self.metrics.record_archive_hit(m.len as u64);
+        Some(view)
+    }
+
+    pub fn contains(&self, id: &str) -> bool {
+        self.index.binary_search_by(|m| m.id.as_str().cmp(id)).is_ok()
+    }
+
+    /// Member ids, in index (sorted) order.
+    pub fn ids(&self) -> Vec<String> {
+        self.index.iter().map(|m| m.id.clone()).collect()
+    }
+
+    /// `(offset, len)` of a member's byte range in the file image —
+    /// for tests asserting alignment and in-place views.
+    pub fn member_range(&self, id: &str) -> Option<(usize, usize)> {
+        let i = self.index.binary_search_by(|m| m.id.as_str().cmp(id)).ok()?;
+        Some((self.index[i].offset, self.index[i].len))
+    }
+
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+
+    /// Bytes held resident by the simulated page cache (the whole file).
+    pub fn resident_bytes(&self) -> u64 {
+        self.cache.0.len() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_members() -> Vec<(String, Vec<u8>)> {
+        // Irregular sizes on purpose: exercise padding and alignment.
+        vec![
+            ("expert/a".to_string(), (0..200u16).map(|i| (i % 251) as u8).collect()),
+            ("expert/b".to_string(), vec![0xAB; 77]),
+            ("zz".to_string(), (0..1000u16).map(|i| (i * 7 % 256) as u8).collect()),
+        ]
+    }
+
+    fn build_sample() -> Vec<u8> {
+        let mut b = ArchiveBuilder::new();
+        for (id, bytes) in sample_members() {
+            b.add(&id, bytes).unwrap();
+        }
+        b.to_bytes()
+    }
+
+    #[test]
+    fn roundtrip_serves_aligned_in_place_views() {
+        let image = build_sample();
+        let m = Arc::new(Metrics::new());
+        let tier = ArchiveTier::from_bytes(image, Arc::clone(&m)).unwrap();
+        assert_eq!(tier.len(), 3);
+        let mut viewed = 0u64;
+        for (id, want) in sample_members() {
+            let got = tier.get(&id).expect("member present");
+            assert_eq!(&*got, &want[..], "bit-identical member {id}");
+            let (off, len) = tier.member_range(&id).unwrap();
+            assert_eq!(off % MEMBER_ALIGN, 0, "member {id} offset aligned");
+            assert_eq!(len, want.len());
+            viewed += len as u64;
+        }
+        // Views read in place: no copy, the slice points into the image.
+        let (off, _) = tier.member_range("zz").unwrap();
+        let v = tier.get("zz").unwrap();
+        assert_eq!(
+            v.as_slice().as_ptr(),
+            unsafe { tier.cache.0.as_ptr().add(off) },
+            "archive view reads straight out of the page cache"
+        );
+        let s = m.snapshot();
+        assert_eq!(s.archive_hits, 4);
+        assert_eq!(s.archive_bytes_viewed, viewed + v.len() as u64);
+        assert_eq!(s.payload_copies, 0);
+        assert!(tier.get("absent").is_none());
+    }
+
+    #[test]
+    fn builder_rejects_duplicate_and_empty_ids() {
+        let mut b = ArchiveBuilder::new();
+        b.add("x", vec![1]).unwrap();
+        assert!(b.add("x", vec![2]).is_err());
+        assert!(b.add("", vec![3]).is_err());
+        // Empty archive is valid and serves nothing.
+        let tier =
+            ArchiveTier::from_bytes(ArchiveBuilder::new().to_bytes(), Arc::new(Metrics::new()))
+                .unwrap();
+        assert!(tier.is_empty());
+        assert!(tier.get("x").is_none());
+    }
+
+    /// Any single-bit flip anywhere in the file either fails `open`
+    /// (index/padding damage) or makes exactly the damaged member
+    /// return `None` — never a panic, never a wrong-expert view.
+    #[test]
+    fn bitflip_fuzz_never_panics_or_serves_wrong_bytes() {
+        let image = build_sample();
+        let members = sample_members();
+        for i in 0..image.len() {
+            let mut bad = image.clone();
+            bad[i] ^= 1 << (i % 8);
+            let m = Arc::new(Metrics::new());
+            match ArchiveTier::from_bytes(bad, m) {
+                Err(_) => {}
+                Ok(tier) => {
+                    for (id, want) in &members {
+                        match tier.get(id) {
+                            None => {}
+                            Some(got) => assert_eq!(
+                                &*got,
+                                &want[..],
+                                "flip at byte {i} served a wrong view of {id}"
+                            ),
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn corrupt_member_degrades_and_counts_like_a_bad_stripe() {
+        let image = build_sample();
+        let m = Arc::new(Metrics::new());
+        let (off, len) = {
+            let tier = ArchiveTier::from_bytes(image.clone(), Arc::clone(&m)).unwrap();
+            tier.member_range("expert/b").unwrap()
+        };
+        let mut bad = image;
+        bad[off + len / 2] ^= 0x20;
+        let tier = ArchiveTier::from_bytes(bad, Arc::clone(&m)).unwrap();
+        assert!(tier.get("expert/b").is_none(), "corrupt member must not be served");
+        // Undamaged members still serve.
+        assert!(tier.get("expert/a").is_some());
+        let s = m.snapshot();
+        assert_eq!(s.failovers, 1);
+        assert_eq!(s.corrupt_payloads, 1);
+        assert_eq!(s.archive_hits, 1);
+    }
+
+    #[test]
+    fn truncation_sweep_always_errs() {
+        let image = build_sample();
+        let cuts = [0, 1, 8, HEADER_LEN, HEADER_LEN + 5, image.len() / 2, image.len() - 1];
+        for cut in cuts {
+            let bad = image[..cut].to_vec();
+            assert!(
+                ArchiveTier::from_bytes(bad, Arc::new(Metrics::new())).is_err(),
+                "truncation to {cut} bytes must be rejected"
+            );
+        }
+        // Trailing garbage is rejected too, like the v2 container.
+        let mut long = image.clone();
+        long.push(0);
+        assert!(ArchiveTier::from_bytes(long, Arc::new(Metrics::new())).is_err());
+    }
+}

@@ -364,6 +364,50 @@ mod tests {
         assert!((s.hit_rate() - 0.5).abs() < 1e-12);
     }
 
+    /// The host tier stores zero-copy [`Payload`] views: a `get` hands
+    /// out a clone of the view (refcount bump, same bytes), so an entry
+    /// evicted while a decode still borrows it cannot invalidate the
+    /// in-flight bytes — the view keeps the backing alive past both
+    /// LRU eviction and explicit removal. This is the safety net under
+    /// the pipeline's `PinGuard` (the pin only guarantees *residency*,
+    /// not validity).
+    #[test]
+    fn evicted_payload_views_stay_valid_for_borrowers() {
+        use crate::compeft::payload::Payload;
+
+        let mut t: LruTier<Payload> = LruTier::new("cpu", 100);
+        let original: Vec<u8> = (0..60u8).collect();
+        t.insert("decoding", Payload::from_vec(original.clone()), 60);
+
+        // A prepare grabs the view (as `fetch_via_cpu_tier` does) and
+        // starts "decoding" from it...
+        let borrowed = t.get("decoding").unwrap().clone();
+        assert_eq!(
+            borrowed.as_slice().as_ptr(),
+            t.get("decoding").unwrap().as_slice().as_ptr(),
+            "tier hit is a view of the resident bytes, not a copy"
+        );
+
+        // ...then a burst of inserts evicts the entry mid-decode.
+        let ev = t.insert("newcomer", Payload::from_vec(vec![9u8; 70]), 70);
+        assert!(
+            ev.iter().any(|(id, _, _)| id == "decoding"),
+            "unpinned entry was evicted: {ev:?}"
+        );
+        drop(ev); // the tier's handle on the bytes is gone for good
+        assert!(!t.contains("decoding"));
+
+        // The borrowed view still reads the original bytes in place.
+        assert_eq!(borrowed, original);
+        let tail = borrowed.slice(50, 10).unwrap();
+        assert_eq!(&*tail, &original[50..]);
+
+        // Same story for explicit removal while borrowed.
+        let b2 = t.get("newcomer").unwrap().clone();
+        t.remove("newcomer").unwrap();
+        assert_eq!(b2, vec![9u8; 70]);
+    }
+
     #[test]
     fn smaller_entries_mean_more_residents() {
         // The paper's core serving argument, as a cache property: at a

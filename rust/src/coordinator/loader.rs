@@ -19,7 +19,10 @@
 //! thread that owns its resources:
 //!
 //! 1. **fetch** — [`ExpertLoader::fetch_encoded`]: net link → encoded
-//!    bytes. Thread-agnostic; safe from background prefetch threads
+//!    bytes as a zero-copy [`Payload`] view (the one unavoidable heap
+//!    materialization off disk/remote is counted on the loader's
+//!    [`CopyMeter`]; archive-resident views skip even that).
+//!    Thread-agnostic; safe from background prefetch threads
 //!    (the [`SimLink`] serializes concurrent transfers like one NIC).
 //!    With a sharded [`ExpertStore`] attached
 //!    ([`ExpertLoader::with_store`]) this stage becomes a striped
@@ -51,6 +54,7 @@
 use crate::compeft::compress::{decompress_params, CompressedParamSet};
 use crate::compeft::engine;
 use crate::compeft::format;
+use crate::compeft::payload::{CopyMeter, Payload};
 use crate::coordinator::registry::{ExpertFormat, ExpertMethod, ExpertRecord};
 use crate::coordinator::store::ExpertStore;
 use crate::coordinator::transport::SimLink;
@@ -80,6 +84,10 @@ pub struct ExpertLoader {
     /// runs the striped multi-replica fetch (with failover) instead of
     /// the flat single-link transfer. Bytes are identical either way.
     store: Option<Arc<ExpertStore>>,
+    /// Counts encoded-byte heap copies (the flat fetch's one
+    /// materialization off disk). Share the engine's meter via
+    /// [`ExpertLoader::with_meter`] so they land in `payload_copies`.
+    meter: CopyMeter,
 }
 
 /// Timing breakdown of one load.
@@ -101,7 +109,7 @@ impl LoadTiming {
 
 impl ExpertLoader {
     pub fn new(net: SimLink, pcie: SimLink) -> ExpertLoader {
-        ExpertLoader { net, pcie, pool: None, store: None }
+        ExpertLoader { net, pcie, pool: None, store: None, meter: CopyMeter::new() }
     }
 
     /// Attach a decode pool; subsequent [`ExpertLoader::decode`] and
@@ -122,17 +130,33 @@ impl ExpertLoader {
         self
     }
 
-    /// Fetch the encoded checkpoint bytes: striped from the sharded
-    /// store when one is attached, otherwise a flat transfer over the
-    /// net link.
-    pub fn fetch_encoded(&self, rec: &ExpertRecord) -> Result<(Vec<u8>, Duration)> {
+    /// Share the engine's copy meter so this loader's encoded-byte
+    /// materializations are counted in the engine's `payload_copies`.
+    pub fn with_meter(mut self, meter: CopyMeter) -> ExpertLoader {
+        self.meter = meter;
+        self
+    }
+
+    /// This loader's copy meter (shared handle).
+    pub fn meter(&self) -> CopyMeter {
+        self.meter.clone()
+    }
+
+    /// Fetch the encoded checkpoint bytes as a zero-copy [`Payload`]
+    /// view: striped from the sharded store when one is attached,
+    /// otherwise a flat transfer over the net link. Either way the
+    /// returned view is shared from here on — downstream decode, tier
+    /// insertion, and staging never copy the encoded bytes again.
+    pub fn fetch_encoded(&self, rec: &ExpertRecord) -> Result<(Payload, Duration)> {
         if let Some(store) = &self.store {
             return store.fetch(rec);
         }
         let bytes = std::fs::read(&rec.path)
             .with_context(|| format!("read {}", rec.path.display()))?;
+        // The one unavoidable materialization off disk/remote.
+        self.meter.record(1);
         let sim = self.net.transfer(rec.encoded_bytes);
-        Ok((bytes, sim))
+        Ok((Payload::from_vec(bytes), sim))
     }
 
     /// Decode encoded bytes into a dense task vector with the structure
@@ -146,8 +170,10 @@ impl ExpertLoader {
         let t0 = Instant::now();
         let tv = match rec.format {
             ExpertFormat::OriginalFp16 => {
-                // npz container (dense f32; fp16 is the accounting model).
-                let cursor = std::io::Cursor::new(bytes.to_vec());
+                // npz container (dense f32; fp16 is the accounting
+                // model). The reader seeks over the borrowed bytes —
+                // no owned copy of the container.
+                let cursor = std::io::Cursor::new(bytes);
                 let arrays = crate::util::npz::read_npz_from(cursor)?;
                 let mut p = ParamSet::new();
                 for (name, arr) in arrays {
@@ -292,6 +318,11 @@ mod tests {
         let (bytes, _) = loader.fetch_encoded(rec).unwrap();
         let (decoded, _) = loader.decode(rec, &bytes, &tv).unwrap();
         assert_eq!(decoded, tv);
+        assert_eq!(
+            loader.meter().count(),
+            1,
+            "a flat fetch is exactly one materialization; decode adds none"
+        );
 
         // ComPEFT decodes to the ternary approximation (same support
         // signs as the rust compressor's output).

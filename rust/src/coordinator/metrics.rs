@@ -4,6 +4,7 @@
 //! increment only); snapshots are taken off the request path by benches
 //! and the CLI's `serve` summary.
 
+use crate::compeft::payload::CopyMeter;
 use crate::util::json::Json;
 use crate::util::stats::LogHistogram;
 use std::sync::Mutex;
@@ -95,6 +96,11 @@ struct Inner {
     /// Stripe payloads received corrupt (per-stripe CRC mismatch) and
     /// re-fetched from another replica.
     corrupt_payloads: u64,
+    /// Expert payloads served as zero-copy views out of the local
+    /// archive tier (no host-tier copy, no remote fetch).
+    archive_hits: u64,
+    /// Total encoded bytes served as archive views.
+    archive_bytes_viewed: u64,
     queue: LogHistogram,
     swap: LogHistogram,
     exec: LogHistogram,
@@ -105,6 +111,10 @@ struct Inner {
 #[derive(Default)]
 pub struct Metrics {
     inner: Mutex<Inner>,
+    /// Lock-free counter of encoded-payload heap copies, shared with
+    /// this engine's loader and store via [`Metrics::copy_meter`] so
+    /// `payload_copies` in the snapshot reflects exactly this engine.
+    copy_meter: CopyMeter,
 }
 
 /// Per-request latency breakdown.
@@ -188,6 +198,21 @@ impl Metrics {
         g.corrupt_payloads += corrupts;
     }
 
+    /// One expert payload served as a zero-copy view out of the local
+    /// archive tier (`bytes` = its encoded size).
+    pub fn record_archive_hit(&self, bytes: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.archive_hits += 1;
+        g.archive_bytes_viewed += bytes;
+    }
+
+    /// A handle on this engine's copy counter — hand clones to the
+    /// loader/store (`with_meter`) so every encoded-byte heap copy they
+    /// make lands in this snapshot's `payload_copies`.
+    pub fn copy_meter(&self) -> CopyMeter {
+        self.copy_meter.clone()
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let g = self.inner.lock().unwrap();
         MetricsSnapshot {
@@ -204,6 +229,9 @@ impl Metrics {
             stripe_retries: g.stripe_retries,
             failovers: g.failovers,
             corrupt_payloads: g.corrupt_payloads,
+            archive_hits: g.archive_hits,
+            archive_bytes_viewed: g.archive_bytes_viewed,
+            payload_copies: self.copy_meter.count(),
             mean_batch_fill: if g.batches == 0 {
                 0.0
             } else {
@@ -246,6 +274,13 @@ pub struct MetricsSnapshot {
     pub failovers: u64,
     /// Stripe payloads received corrupt and re-fetched elsewhere.
     pub corrupt_payloads: u64,
+    /// Experts served as zero-copy views out of the local archive tier.
+    pub archive_hits: u64,
+    /// Total encoded bytes served as archive views.
+    pub archive_bytes_viewed: u64,
+    /// Heap copies of encoded payload bytes (the zero-copy regression
+    /// counter — archive-resident serving must keep this at 0).
+    pub payload_copies: u64,
     pub mean_batch_fill: f64,
     pub queue_p50_us: f64,
     pub total_p50_us: f64,
@@ -277,6 +312,9 @@ impl MetricsSnapshot {
             .set("stripe_retries", Json::num(self.stripe_retries as f64))
             .set("failovers", Json::num(self.failovers as f64))
             .set("corrupt_payloads", Json::num(self.corrupt_payloads as f64))
+            .set("archive_hits", Json::num(self.archive_hits as f64))
+            .set("archive_bytes_viewed", Json::num(self.archive_bytes_viewed as f64))
+            .set("payload_copies", Json::num(self.payload_copies as f64))
             .set("mean_batch_fill", Json::num(self.mean_batch_fill))
             .set("total_p50_us", Json::num(self.total_p50_us))
             .set("total_p95_us", Json::num(self.total_p95_us))
@@ -335,6 +373,9 @@ mod tests {
         m.record_prefetch_wasted(4);
         m.record_store_faults(3, 2, 1);
         m.record_store_faults(1, 1, 0);
+        m.record_archive_hit(4096);
+        m.record_archive_hit(1024);
+        m.copy_meter().record(3);
         let s = m.snapshot();
         assert_eq!(s.rejected, 5);
         assert_eq!(s.rejected_by.unknown_expert, 3);
@@ -347,6 +388,9 @@ mod tests {
         assert_eq!(s.prefetch_misses, 1);
         assert_eq!(s.prefetch_wasted, 4);
         assert_eq!(s.overlap_saved_us, 1500);
+        assert_eq!(s.archive_hits, 2);
+        assert_eq!(s.archive_bytes_viewed, 5120);
+        assert_eq!(s.payload_copies, 3);
         let j = s.to_json().to_string();
         assert!(j.contains("\"rejected\":5"));
         assert!(j.contains("\"prefetch_hits\":1"));
@@ -354,6 +398,9 @@ mod tests {
         assert!(j.contains("\"stripe_retries\":4"));
         assert!(j.contains("\"failovers\":3"));
         assert!(j.contains("\"corrupt_payloads\":1"));
+        assert!(j.contains("\"archive_hits\":2"));
+        assert!(j.contains("\"archive_bytes_viewed\":5120"));
+        assert!(j.contains("\"payload_copies\":3"));
     }
 
     /// Regression for the catch-all `rejected` counter: every reason

@@ -7,6 +7,8 @@
 //! * [`store`] — sharded, replicated expert store: consistent-hash
 //!   placement, striped parallel fetch, CRC-verified replica failover
 //! * [`cache`] — byte-budgeted LRU tiers (GPU / CPU), with pinning
+//! * [`archive`] — the `.cpeft` archive tier: one CRC-indexed file of
+//!   packed experts served as zero-copy views of a simulated page cache
 //! * [`loader`] — the fetch → decode → upload stages of a swap
 //! * [`batcher`] — per-expert dynamic batching + queue-plan lookahead
 //! * [`pipeline`] — prefetch-and-stage pipeline (background fetch+decode
@@ -18,6 +20,7 @@
 //!   counters
 
 pub mod admission;
+pub mod archive;
 pub mod batcher;
 pub mod cache;
 pub mod loader;
@@ -29,6 +32,7 @@ pub mod store;
 pub mod transport;
 
 pub use admission::{admit, AdmissionConfig, AdmitDecision};
+pub use archive::{build_from_registry, ArchiveBuilder, ArchiveTier};
 pub use metrics::{RejectCounts, RejectReason};
 pub use pipeline::{PrepareContext, PreparedExpert, Prefetcher, TakeOutcome, Templates};
 pub use registry::{

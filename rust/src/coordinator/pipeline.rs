@@ -33,6 +33,8 @@
 //! off, at any `prefetch_depth` and any decode-worker count — enforced
 //! by the equivalence suites here and in `tests/integration.rs`.
 
+use crate::compeft::payload::Payload;
+use crate::coordinator::archive::ArchiveTier;
 use crate::coordinator::cache::LruTier;
 use crate::coordinator::loader::ExpertLoader;
 use crate::coordinator::metrics::Metrics;
@@ -104,12 +106,21 @@ pub struct PrepareContext {
     pub registry: Arc<Registry>,
     pub templates: Templates,
     /// Host tier of encoded checkpoint bytes, shared across threads.
-    /// Values are `Arc`-shared so a tier hit hands out the payload
-    /// without copying megabytes under the lock — and so eviction can
-    /// never touch data a decode is reading. Entries are additionally
-    /// pinned while a decode is in flight, keeping the bytes
-    /// tier-resident (no refetch) until the decode completes.
-    pub cpu: Arc<Mutex<LruTier<Arc<Vec<u8>>>>>,
+    /// Entries are zero-copy [`Payload`] views, so a tier hit hands
+    /// out the payload without copying a byte under the lock — and
+    /// since a view keeps its backing alive, eviction can never touch
+    /// data a decode is reading. Entries are additionally pinned while
+    /// a decode is in flight, keeping the bytes tier-resident (no
+    /// refetch) until the decode completes.
+    pub cpu: Arc<Mutex<LruTier<Payload>>>,
+    /// Optional local archive tier, consulted between the host tier
+    /// and the remote fetch (GPU ⊃ host ⊃ archive ⊃ remote). An
+    /// archive hit is a borrowed view of the resident file image:
+    /// free in the link model, zero heap copies, and **not** inserted
+    /// into the host tier (the bytes are already local-resident; a
+    /// second copy would double-charge the host budget), so it needs
+    /// no pin either — the view itself keeps the archive image alive.
+    pub archive: Option<Arc<ArchiveTier>>,
 }
 
 impl PrepareContext {
@@ -127,22 +138,37 @@ impl PrepareContext {
         }
     }
 
-    /// Fetch an expert's encoded bytes through the shared host tier,
-    /// charging the net link only on a miss. The payload comes back as
-    /// a shared `Arc` (no megabyte copies under the tier lock; eviction
-    /// can never touch data a decode is reading) and the returned
-    /// [`PinGuard`] keeps the tier entry resident until dropped — even
-    /// if the caller's decode panics (the guard unpins on unwind).
+    /// Fetch an expert's encoded bytes through the cache hierarchy:
+    /// host tier, then the local archive, then the remote fetch (which
+    /// charges the net/store links). The payload comes back as a
+    /// zero-copy [`Payload`] view — a tier hit clones the view (not
+    /// the bytes), an archive hit borrows the resident file image, and
+    /// a remote fetch shares the one materialized buffer. For
+    /// tier-resident entries the returned [`PinGuard`] keeps the entry
+    /// resident until dropped — even if the caller's decode panics
+    /// (the guard unpins on unwind). Archive hits need no pin: the
+    /// view itself keeps the archive image alive.
     fn fetch_via_cpu_tier<'a>(
         &'a self,
         rec: &ExpertRecord,
-    ) -> Result<(Arc<Vec<u8>>, Duration, PinGuard<'a>)> {
+    ) -> Result<(Payload, Duration, Option<PinGuard<'a>>)> {
         {
             let mut cpu = self.cpu.lock().unwrap();
             if let Some(b) = cpu.get(&rec.id) {
-                let bytes = Arc::clone(b);
+                let bytes = b.clone();
                 cpu.pin(&rec.id);
-                return Ok((bytes, Duration::ZERO, PinGuard::new(&self.cpu, &rec.id)));
+                return Ok((
+                    bytes,
+                    Duration::ZERO,
+                    Some(PinGuard::new(&self.cpu, &rec.id)),
+                ));
+            }
+        }
+        // Archive tier: local-resident, free in the link model, and a
+        // corrupt/absent member falls through to the remote path.
+        if let Some(archive) = &self.archive {
+            if let Some(view) = archive.get(&rec.id) {
+                return Ok((view, Duration::ZERO, None));
             }
         }
         // The net transfer runs outside the tier lock so concurrent
@@ -154,14 +180,13 @@ impl PrepareContext {
         // inserted would strip its pins (LruTier replacement resets the
         // pin count) and void the stays-resident-mid-decode guarantee.
         let (bytes, fetch) = self.loader.fetch_encoded(rec)?;
-        let bytes = Arc::new(bytes);
         let mut cpu = self.cpu.lock().unwrap();
         if !cpu.contains(&rec.id) {
-            cpu.insert(&rec.id, Arc::clone(&bytes), rec.encoded_bytes.max(1));
+            cpu.insert(&rec.id, bytes.clone(), rec.encoded_bytes.max(1));
         }
         cpu.pin(&rec.id);
         drop(cpu);
-        Ok((bytes, fetch, PinGuard::new(&self.cpu, &rec.id)))
+        Ok((bytes, fetch, Some(PinGuard::new(&self.cpu, &rec.id))))
     }
 
     fn prepare_stored(&self, rec: &ExpertRecord) -> Result<PreparedExpert> {
@@ -222,14 +247,17 @@ impl PrepareContext {
 /// cannot leak a pin and leave the entry permanently unevictable.
 /// Pins are refcounted in the tier, so concurrent prepares sharing an
 /// id (a stored expert that is also a composition member) each hold
-/// their own pin.
+/// their own pin. (The pin keeps the entry *tier-resident* — no
+/// refetch for upcoming users; the decode's borrowed bytes would stay
+/// valid even without it, since a [`Payload`] view keeps its backing
+/// alive across eviction.)
 struct PinGuard<'a> {
-    cpu: &'a Mutex<LruTier<Arc<Vec<u8>>>>,
+    cpu: &'a Mutex<LruTier<Payload>>,
     id: String,
 }
 
 impl<'a> PinGuard<'a> {
-    fn new(cpu: &'a Mutex<LruTier<Arc<Vec<u8>>>>, id: &str) -> PinGuard<'a> {
+    fn new(cpu: &'a Mutex<LruTier<Payload>>, id: &str) -> PinGuard<'a> {
         PinGuard { cpu, id: id.to_string() }
     }
 }
@@ -698,6 +726,7 @@ mod tests {
             registry,
             templates,
             cpu: Arc::new(Mutex::new(LruTier::new("cpu", 64 << 20))),
+            archive: None,
         })
     }
 
@@ -907,6 +936,7 @@ mod tests {
                     registry: Arc::clone(&reg),
                     templates: templates.clone(),
                     cpu: Arc::new(Mutex::new(LruTier::new("cpu", 64 << 20))),
+                    archive: None,
                 });
                 let pf = Prefetcher::start(
                     Arc::clone(&ctx),
@@ -933,6 +963,69 @@ mod tests {
                     );
                 }
             }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Archive-backed prepare: with every stored expert packed into a
+    /// local archive, prepares are bit-identical to the flat remote
+    /// path at every pool size, the net link never fires, nothing is
+    /// double-copied into the host tier, and the copy meter stays at
+    /// zero — the zero-copy acceptance bar at the pipeline layer.
+    #[test]
+    fn archive_backed_prepare_matches_flat_and_skips_host_tier() {
+        use crate::coordinator::archive::{build_from_registry, ArchiveTier};
+
+        let dir = std::env::temp_dir()
+            .join(format!("compeft_pipeline_archive_{}", std::process::id()));
+        let (reg, templates) = mixed_fixture(&dir);
+        let ids = ["e0", "merged/ties", "e1", "e2"];
+        let ctx_flat = fresh_ctx(Arc::clone(&reg), templates.clone(), 1);
+        let reference: Vec<PreparedExpert> =
+            ids.iter().map(|id| ctx_flat.prepare(id).unwrap()).collect();
+
+        let archive_path = dir.join("experts.cpar");
+        let (members, _) = build_from_registry(&reg, &archive_path).unwrap();
+        assert_eq!(members, 3, "all stored experts packed");
+
+        for workers in crate::util::prop::pool_sizes() {
+            let metrics = Arc::new(Metrics::new());
+            let tier = Arc::new(
+                ArchiveTier::open(&archive_path, Arc::clone(&metrics)).unwrap(),
+            );
+            let loader = ExpertLoader::new(
+                SimLink::new("net", LinkSpec::internet()).with_time_scale(0.0),
+                SimLink::new("pcie", LinkSpec::pcie()).with_time_scale(0.0),
+            )
+            .with_pool(Arc::new(ThreadPool::new(workers)))
+            .with_meter(metrics.copy_meter());
+            let net = loader.net.clone();
+            let ctx = PrepareContext {
+                loader,
+                registry: Arc::clone(&reg),
+                templates: templates.clone(),
+                cpu: Arc::new(Mutex::new(LruTier::new("cpu", 64 << 20))),
+                archive: Some(tier),
+            };
+            for (id, want) in ids.iter().zip(&reference) {
+                let got = ctx.prepare(id).unwrap();
+                assert_eq!(got.params, want.params, "w={workers} id={id}");
+                assert_eq!(got.upload_bytes, want.upload_bytes, "{id}");
+                assert_eq!(got.dense_bytes, want.dense_bytes, "{id}");
+            }
+            assert_eq!(net.bytes_moved(), 0, "archive hits must not touch the net");
+            assert_eq!(
+                ctx.cpu.lock().unwrap().stats().entries,
+                0,
+                "archive views are not double-cached in the host tier"
+            );
+            let s = metrics.snapshot();
+            assert!(s.archive_hits >= ids.len() as u64 - 1, "hits counted");
+            assert!(s.archive_bytes_viewed > 0);
+            assert_eq!(
+                s.payload_copies, 0,
+                "archive-resident serving performs zero encoded-byte copies"
+            );
         }
         std::fs::remove_dir_all(&dir).ok();
     }

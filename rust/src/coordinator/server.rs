@@ -94,6 +94,15 @@ pub struct CoordinatorConfig {
     /// backpressure and deadline-aware shedding. The default admits
     /// everything (the pre-admission behavior).
     pub admission: AdmissionConfig,
+    /// Optional local `.cpeft` archive
+    /// ([`crate::coordinator::archive`]): when set, the engine opens it
+    /// as a third cache level between the host tier and the remote
+    /// store (GPU ⊃ host ⊃ archive ⊃ remote). Archive-resident experts
+    /// are served as zero-copy views of the resident file image — no
+    /// net/store transfer, no heap copy of the encoded bytes. A
+    /// missing, truncated, or corrupt archive degrades to the remote
+    /// path at startup (counted as a store fault), never a crash.
+    pub archive: Option<PathBuf>,
 }
 
 impl CoordinatorConfig {
@@ -116,6 +125,7 @@ impl CoordinatorConfig {
             fault_seed: 0,
             store_faults: FaultSpec::default(),
             admission: AdmissionConfig::default(),
+            archive: None,
         }
     }
 }
@@ -163,6 +173,14 @@ pub struct EngineReport {
     pub failovers: u64,
     /// Stripe payloads received corrupt and re-fetched elsewhere.
     pub corrupt_payloads: u64,
+    /// Fetches served as zero-copy views of the local archive.
+    pub archive_hits: u64,
+    /// Encoded bytes those archive hits viewed in place.
+    pub archive_bytes_viewed: u64,
+    /// Heap copies of encoded payload bytes made by the fetch path
+    /// (file/remote materializations + fallback reassembly concats).
+    /// Archive-resident serving keeps this at zero.
+    pub payload_copies: u64,
 }
 
 /// Public handle: submit requests, read metrics, shut down.
@@ -376,10 +394,30 @@ fn engine_main(
     } else {
         None
     };
-    let mut loader = ExpertLoader::new(net.clone(), pcie.clone()).with_pool(pool);
+    let mut loader = ExpertLoader::new(net.clone(), pcie.clone())
+        .with_pool(pool)
+        .with_meter(metrics.copy_meter());
     if let Some(store) = &store {
         loader = loader.with_store(Arc::clone(store));
     }
+    // Local archive tier: zero-copy views of the resident file image,
+    // consulted between the host tier and the remote fetch. A dead
+    // archive (missing file, truncated index, corrupt CRC) is a
+    // degraded start, not a failed one: log it, count it like a failed
+    // replica, and serve everything through the remote path.
+    let archive = cfg.archive.as_ref().and_then(|path| {
+        match crate::coordinator::archive::ArchiveTier::open(path, Arc::clone(&metrics)) {
+            Ok(tier) => Some(Arc::new(tier)),
+            Err(e) => {
+                eprintln!(
+                    "[engine] archive {} unusable, serving via remote store: {e:#}",
+                    path.display()
+                );
+                metrics.record_store_faults(0, 1, 0);
+                None
+            }
+        }
+    });
     let registry = Arc::new(registry);
     // Host tier of encoded bytes, shared with the prefetch threads
     // (entries pinned while a background decode is in flight).
@@ -395,6 +433,7 @@ fn engine_main(
             ia3_init: Arc::clone(&bundle.ia3_init),
         },
         cpu: Arc::clone(&cpu),
+        archive,
     });
     let prefetcher = if cfg.prefetch_depth > 0 {
         Some(Prefetcher::start(
@@ -593,6 +632,9 @@ fn engine_main(
         stripe_retries: snap.stripe_retries,
         failovers: snap.failovers,
         corrupt_payloads: snap.corrupt_payloads,
+        archive_hits: snap.archive_hits,
+        archive_bytes_viewed: snap.archive_bytes_viewed,
+        payload_copies: snap.payload_copies,
     })
 }
 

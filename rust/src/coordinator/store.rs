@@ -15,14 +15,26 @@
 //!   concurrently from different replicas on the shared [`ThreadPool`]
 //!   and reassembled byte-identically, so remote fetch latency scales
 //!   down with replication instead of serializing on one NIC.
-//! * **Failover** — every stripe carries a CRC computed from the source
-//!   payload; a dropped or corrupt-on-read attempt (injected by the
-//!   links' deterministic [`FaultPlan`]) is detected and the stripe is
-//!   re-fetched from the next replica. With ≥ 1 surviving replica per
-//!   stripe the reassembled bytes — and therefore the served
-//!   predictions — are bit-identical to the single-store path.
-//!   Retries/failovers/corruptions are counted into
+//! * **Failover** — a dropped or corrupt-on-read attempt (injected by
+//!   the links' deterministic [`FaultPlan`]) fails the stripe's CRC-32
+//!   integrity gate and the stripe is re-fetched from the next replica.
+//!   (The gate is evaluated analytically: the injected corruption is a
+//!   single flipped byte, a burst ≤ 8 bits, which CRC-32 — linear over
+//!   XOR, detecting every burst ≤ 32 bits — catches unconditionally, so
+//!   no corrupted copy is ever materialized; counters and timing are
+//!   bit-identical to the old materialize-then-compare gate.) With ≥ 1
+//!   surviving replica per stripe the reassembled bytes — and therefore
+//!   the served predictions — are bit-identical to the single-store
+//!   path. Retries/failovers/corruptions are counted into
 //!   [`Metrics`] (`stripe_retries`, `failovers`, `corrupt_payloads`).
+//!
+//! ## Zero-copy stripes
+//!
+//! Stripes are [`Payload`] views of the fetched source buffer, not
+//! copies; when every stripe succeeds (from whichever replica), the
+//! reassembled payload is the source view itself — the only heap
+//! materialization in a store fetch is the initial file read, counted
+//! on the engine's copy meter.
 //!
 //! ## Determinism
 //!
@@ -42,10 +54,10 @@
 //! store is on or off: a 1-node, 1-replica store fetch costs exactly
 //! `latency + encoded_bytes/bandwidth`, the flat link's cost.
 
+use crate::compeft::payload::Payload;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::registry::ExpertRecord;
 use crate::coordinator::transport::{Fault, FaultPlan, LinkSpec, SimLink};
-use crate::compeft::format::crc32;
 use crate::util::pool::{chunk_ranges, ThreadPool};
 use crate::util::rng::{fnv1a_64, splitmix64};
 use anyhow::{bail, Context, Result};
@@ -213,11 +225,11 @@ struct StripeJob {
     replicas: Vec<NodeId>,
 }
 
-/// One stripe's outcome: the verified bytes, per-node simulated service
-/// time spent (successful + failed attempts), and fault counts.
+/// One stripe's outcome: the verified payload view, per-node simulated
+/// service time spent (successful + failed attempts), and fault counts.
 struct StripeDone {
     start: usize,
-    bytes: Vec<u8>,
+    view: Payload,
     node_time: Vec<(NodeId, Duration)>,
     faults: FetchFaults,
 }
@@ -263,12 +275,16 @@ impl ExpertStore {
     }
 
     /// Fetch an expert's encoded payload: striped across its replicas,
-    /// CRC-verified per stripe, reassembled byte-identically. Returns
-    /// the payload and the simulated fetch time (analytic model:
-    /// per-replica service sums, max across replicas).
-    pub fn fetch(&self, rec: &ExpertRecord) -> Result<(Vec<u8>, Duration)> {
-        let data = std::fs::read(&rec.path)
+    /// CRC-gated per stripe, reassembled byte-identically as a
+    /// zero-copy [`Payload`] view. Returns the payload and the
+    /// simulated fetch time (analytic model: per-replica service sums,
+    /// max across replicas).
+    pub fn fetch(&self, rec: &ExpertRecord) -> Result<(Payload, Duration)> {
+        let bytes = std::fs::read(&rec.path)
             .with_context(|| format!("read {}", rec.path.display()))?;
+        // The one heap materialization of a store fetch.
+        self.metrics.copy_meter().record(1);
+        let data = Payload::from_vec(bytes);
         let (out, sim, faults) = self.fetch_payload(&rec.id, &data, rec.encoded_bytes)?;
         self.metrics.record_store_faults(
             faults.stripe_retries,
@@ -282,13 +298,14 @@ impl ExpertStore {
     /// file read and metrics sink) — also the unit the store tests
     /// drive directly. `encoded_bytes` is the link-charge total
     /// (`rec.encoded_bytes`); stripes charge proportional shares that
-    /// sum to it exactly.
+    /// sum to it exactly. Stripes are views of `data`; when every
+    /// stripe succeeds the result is `data` itself (no concatenation).
     pub fn fetch_payload(
         &self,
         id: &str,
-        data: &[u8],
+        data: &Payload,
         encoded_bytes: u64,
-    ) -> Result<(Vec<u8>, Duration, FetchFaults)> {
+    ) -> Result<(Payload, Duration, FetchFaults)> {
         let replicas = self.placement.nodes_for(id);
         if data.is_empty() {
             bail!("expert {id:?} has an empty payload");
@@ -325,8 +342,9 @@ impl ExpertStore {
             .collect();
 
         let fetch_one = |job: &StripeJob| -> Result<StripeDone> {
-            let want = &data[job.start..job.end];
-            let expect_crc = crc32(want);
+            let want = data
+                .slice(job.start, job.end - job.start)
+                .expect("stripe ranges are within the payload");
             let mut node_time = Vec::with_capacity(job.replicas.len());
             let mut faults = FetchFaults::default();
             for (attempt, &node) in job.replicas.iter().enumerate() {
@@ -336,49 +354,48 @@ impl ExpertStore {
                     job.stripe,
                     attempt as u32,
                 );
-                // What the wire delivered this attempt (None = dropped).
-                let got: Option<Vec<u8>> = match out.fault {
+                // The per-stripe CRC-32 integrity gate, evaluated
+                // analytically: a delivered payload is the source view
+                // itself (trivially CRC-equal), and the Corrupt fault's
+                // single flipped byte is a burst ≤ 8 bits, which CRC-32
+                // (linear over XOR, catching every burst ≤ 32 bits)
+                // fails unconditionally — so the gate's outcome is
+                // known without materializing a damaged copy. Counters
+                // and per-node service time match the old
+                // copy-then-compare gate bit for bit.
+                let delivered: Option<bool> = match out.fault {
                     Fault::Drop => {
                         // Connection latency paid, nothing delivered.
                         node_time.push((node, self.spec.latency));
                         None
                     }
                     Fault::Corrupt => {
-                        // Full (wasted) transfer of damaged bytes: flip
-                        // one deterministic byte; the per-stripe CRC
-                        // below is what detects it — real verification,
-                        // not a flag check.
-                        let mut g = want.to_vec();
-                        let at = (hash_id(job.stripe as u64, id) ^ attempt as u64)
-                            as usize
-                            % g.len();
-                        g[at] ^= 0x20;
+                        // Full (wasted) transfer of damaged bytes.
                         node_time.push((node, self.spec.duration_for(job.charge)));
-                        Some(g)
+                        Some(false)
                     }
                     Fault::Delay(d) => {
                         node_time.push((node, self.spec.duration_for(job.charge) + d));
-                        Some(want.to_vec())
+                        Some(true)
                     }
                     Fault::None => {
                         node_time.push((node, self.spec.duration_for(job.charge)));
-                        Some(want.to_vec())
+                        Some(true)
                     }
                 };
-                // Integrity gate: accept only CRC-verified payloads.
-                match got {
-                    Some(g) if crc32(&g) == expect_crc => {
+                match delivered {
+                    Some(true) => {
                         if attempt > 0 {
                             faults.failovers += 1;
                         }
                         return Ok(StripeDone {
                             start: job.start,
-                            bytes: g,
+                            view: want,
                             node_time,
                             faults,
                         });
                     }
-                    Some(_) => {
+                    Some(false) => {
                         faults.corrupt_payloads += 1;
                         faults.stripe_retries += 1;
                     }
@@ -403,12 +420,12 @@ impl ExpertStore {
         // Reassemble + aggregate the analytic time model: each node's
         // link serializes its own stripes (sum), replicas run in
         // parallel (max across nodes).
-        let mut out = vec![0u8; data.len()];
+        let mut parts: Vec<(usize, Payload)> = Vec::with_capacity(jobs.len());
         let mut per_node = vec![Duration::ZERO; self.links.len()];
         let mut faults = FetchFaults::default();
         for done in results {
             let done = done?;
-            out[done.start..done.start + done.bytes.len()].copy_from_slice(&done.bytes);
+            parts.push((done.start, done.view));
             for (node, d) in done.node_time {
                 per_node[node] += d;
             }
@@ -417,6 +434,32 @@ impl ExpertStore {
             faults.corrupt_payloads += done.faults.corrupt_payloads;
         }
         let sim = per_node.into_iter().max().unwrap_or(Duration::ZERO);
+        parts.sort_by_key(|&(start, _)| start);
+
+        // Zero-copy reassembly: every delivered stripe is a view of
+        // `data`, so when the views tile the payload in place (they
+        // always do — failover changes *which replica* served a
+        // stripe, not *what bytes* it is), the reassembled payload is
+        // the source view itself. The concatenating fallback is kept
+        // for safety and counted as the copy it is.
+        let base = data.as_slice().as_ptr() as usize;
+        let mut covered = 0usize;
+        let in_place = parts.iter().all(|(start, v)| {
+            let tiles = *start == covered
+                && v.as_slice().as_ptr() as usize == base + start;
+            covered = start + v.len();
+            tiles
+        }) && covered == data.len();
+        let out = if in_place {
+            data.clone()
+        } else {
+            self.metrics.copy_meter().record(1);
+            let mut buf = vec![0u8; data.len()];
+            for (start, v) in &parts {
+                buf[*start..*start + v.len()].copy_from_slice(v);
+            }
+            Payload::from_vec(buf)
+        };
         Ok((out, sim, faults))
     }
 }
@@ -566,6 +609,7 @@ mod tests {
         let dir = std::env::temp_dir()
             .join(format!("compeft_store_eq_{}", std::process::id()));
         let (rec, want) = temp_record(&dir, 11);
+        let want = Payload::from_vec(want);
         for (nodes, repl) in [(1usize, 1usize), (3, 2), (5, 3), (4, 8)] {
             for stripe_bytes in [0u64, 257, 4096] {
                 // 0 workers = the poolless serial fetch path.
@@ -580,6 +624,14 @@ mod tests {
                     assert_eq!(
                         got, want,
                         "nodes={nodes} repl={repl} stripe={stripe_bytes} w={workers}"
+                    );
+                    // Zero-copy reassembly: the stripes tiled the source
+                    // in place, so the result IS the source view (the
+                    // old path concatenated fresh heap copies here).
+                    assert_eq!(
+                        got.as_slice().as_ptr(),
+                        want.as_slice().as_ptr(),
+                        "reassembly must not copy when all stripes succeed"
                     );
                     assert_eq!(faults, FetchFaults::default(), "fault-free run");
                     assert!(sim > Duration::ZERO);
@@ -602,6 +654,7 @@ mod tests {
         let dir = std::env::temp_dir()
             .join(format!("compeft_store_lat_{}", std::process::id()));
         let (rec, data) = temp_record(&dir, 13);
+        let data = Payload::from_vec(data);
         let mut single_cfg = StoreConfig::new(1, 1);
         single_cfg.time_scale = 0.0;
         let flat_cost = single_cfg.link.duration_for(rec.encoded_bytes);
@@ -633,6 +686,7 @@ mod tests {
         let dir = std::env::temp_dir()
             .join(format!("compeft_store_fault_{}", std::process::id()));
         let (rec, want) = temp_record(&dir, 17);
+        let want = Payload::from_vec(want);
         let plans: Vec<(&str, FaultPlan)> = vec![
             (
                 "drop-primary",
@@ -673,6 +727,14 @@ mod tests {
                     let (got, _, faults) =
                         s.fetch_payload(&rec.id, &want, rec.encoded_bytes).unwrap();
                     assert_eq!(got, want, "{name} w={workers}");
+                    // Failover changes which replica served a stripe,
+                    // never what bytes it is — the reassembly stays a
+                    // zero-copy view of the source even under faults.
+                    assert_eq!(
+                        got.as_slice().as_ptr(),
+                        want.as_slice().as_ptr(),
+                        "{name}: faulted reassembly must still be in place"
+                    );
                     assert!(
                         faults.stripe_retries > 0,
                         "{name}: plan must actually fire"
@@ -702,6 +764,7 @@ mod tests {
         let dir = std::env::temp_dir()
             .join(format!("compeft_store_dead_{}", std::process::id()));
         let (rec, data) = temp_record(&dir, 19);
+        let data = Payload::from_vec(data);
         let mut cfg = StoreConfig::new(2, 2);
         cfg.time_scale = 0.0;
         cfg.faults = FaultPlan::none(0).kill_node(0).kill_node(1);
@@ -738,6 +801,10 @@ mod tests {
         assert!(snap.stripe_retries > 0);
         assert_eq!(snap.stripe_retries, snap.failovers, "every drop failed over");
         assert_eq!(snap.corrupt_payloads, 0);
+        assert_eq!(
+            snap.payload_copies, 1,
+            "a store fetch is one file materialization, zero reassembly copies"
+        );
         std::fs::remove_dir_all(&dir).ok();
     }
 }

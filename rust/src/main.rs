@@ -8,6 +8,9 @@
 //!   loadgen    replay a seeded trace scenario through the scheduling +
 //!              admission stack on the deterministic sim clock
 //!              (artifact-free)
+//!   archive    `archive build` packs a scale's compressed experts into
+//!              one `.cpar` archive; `serve --archive <path>` then
+//!              serves them as zero-copy views of the resident image
 //!
 //! `compeft <subcommand> --help` lists flags.
 
@@ -34,9 +37,10 @@ fn main() {
         Some("eval") => run(cmd_eval(&argv[1..])),
         Some("serve") => run(cmd_serve(&argv[1..])),
         Some("loadgen") => run(cmd_loadgen(&argv[1..])),
+        Some("archive") => run(cmd_archive(&argv[1..])),
         _ => {
             eprintln!(
-                "usage: compeft <compress|inspect|eval|serve|loadgen> [flags]\n\
+                "usage: compeft <compress|inspect|eval|serve|loadgen|archive> [flags]\n\
                  see README.md for the experiment-to-bench map"
             );
             2
@@ -318,6 +322,84 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Build the serving registry from this scale's instruct experts —
+/// shared by `serve` and `archive build` so an archive packs exactly
+/// the ids the coordinator will ask it for.
+fn build_serve_registry(
+    artifacts: &PathBuf,
+    scale: &str,
+    compressed: bool,
+    cfg: &CompressConfig,
+) -> Result<(Registry, Vec<(String, String)>)> {
+    let mut registry = Registry::new();
+    let found = compeft::coordinator::registry::scan_expert_npz(artifacts, scale)?;
+    if found.is_empty() {
+        bail!("no experts found for scale {scale} — run `make artifacts`");
+    }
+    let mut ids = Vec::new();
+    for (task, method, path) in &found {
+        if *method != ExpertMethod::Lora {
+            continue;
+        }
+        // Only tasks with eval sets (instruct tasks).
+        if !artifacts.join("eval").join(format!("task_{task}.npz")).exists() {
+            continue;
+        }
+        let id = format!("{task}.lora");
+        if compressed {
+            registry.register_compeft(&id, task, scale, *method, path, cfg)?;
+        } else {
+            registry.register_original(&id, task, scale, *method, path)?;
+        }
+        ids.push((id, task.clone()));
+    }
+    Ok((registry, ids))
+}
+
+fn cmd_archive(argv: &[String]) -> Result<()> {
+    match argv.first().map(|s| s.as_str()) {
+        Some("build") => cmd_archive_build(&argv[1..]),
+        _ => bail!("usage: compeft archive build [flags] (--help lists them)"),
+    }
+}
+
+/// Pack a scale's compressed experts into one `.cpar` archive whose
+/// members the coordinator serves as zero-copy views
+/// (`serve --archive <path>`).
+fn cmd_archive_build(argv: &[String]) -> Result<()> {
+    let spec = ArgSpec::new(
+        "archive build",
+        "pack a scale's compressed experts into one .cpar archive",
+    )
+    .flag("scale", "s", "model scale")
+    .flag("output", "", "archive path (default: <artifacts>/experts_<scale>.cpar)")
+    .flag("k", "0.2", "ComPEFT density")
+    .flag("alpha", "1.0", "ComPEFT α");
+    let a = spec.parse(argv)?;
+    let artifacts = bs::require_artifacts();
+    let scale = a.get("scale");
+    let cfg = CompressConfig {
+        density: a.get_f64("k")?,
+        alpha: a.get_f64("alpha")?,
+        granularity: Granularity::Global,
+    };
+    let (registry, ids) = build_serve_registry(&artifacts, scale, true, &cfg)?;
+    let out = if a.get("output").is_empty() {
+        artifacts.join(format!("experts_{scale}.cpar"))
+    } else {
+        PathBuf::from(a.get("output"))
+    };
+    let (members, bytes) = compeft::coordinator::build_from_registry(&registry, &out)?;
+    println!(
+        "packed {members} of {} experts into {} ({})",
+        ids.len(),
+        out.display(),
+        human_bytes(bytes)
+    );
+    println!("serve them in place with: compeft serve --archive {}", out.display());
+    Ok(())
+}
+
 fn cmd_serve(argv: &[String]) -> Result<()> {
     let spec = ArgSpec::new("serve", "run the coordinator on a synthetic trace")
         .flag("scale", "s", "model scale")
@@ -332,40 +414,20 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .flag("store-nodes", "0", "sharded store nodes (0 = flat single link)")
         .flag("replication", "1", "replicas per expert in the sharded store")
         .flag("fault-seed", "0", "seed of the store's deterministic fault plan")
+        .flag("archive", "", "local .cpar archive served as zero-copy views")
         .flag("seed", "0", "trace seed");
     let a = spec.parse(argv)?;
     let artifacts = bs::require_artifacts();
     let scale = a.get("scale");
 
     // Build the registry from the instruct experts of this scale.
-    let mut registry = Registry::new();
-    let found = compeft::coordinator::registry::scan_expert_npz(&artifacts, scale)?;
-    if found.is_empty() {
-        bail!("no experts found for scale {scale} — run `make artifacts`");
-    }
     let compressed = a.get("format") == "compeft";
     let cfg = CompressConfig {
         density: a.get_f64("k")?,
         alpha: a.get_f64("alpha")?,
         granularity: Granularity::Global,
     };
-    let mut ids = Vec::new();
-    for (task, method, path) in &found {
-        if *method != ExpertMethod::Lora {
-            continue;
-        }
-        // Only tasks with eval sets (instruct tasks).
-        if !artifacts.join("eval").join(format!("task_{task}.npz")).exists() {
-            continue;
-        }
-        let id = format!("{task}.lora");
-        if compressed {
-            registry.register_compeft(&id, task, scale, *method, path, &cfg)?;
-        } else {
-            registry.register_original(&id, task, scale, *method, path)?;
-        }
-        ids.push((id, task.clone()));
-    }
+    let (registry, ids) = build_serve_registry(&artifacts, scale, compressed, &cfg)?;
     println!("registered {} experts ({})", ids.len(), a.get("format"));
 
     let mut ccfg = CoordinatorConfig::new(artifacts.clone(), scale);
@@ -378,6 +440,9 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     ccfg.store_nodes = a.get_usize("store-nodes")?;
     ccfg.replication = a.get_usize("replication")?;
     ccfg.fault_seed = a.get_u64("fault-seed")?;
+    if !a.get("archive").is_empty() {
+        ccfg.archive = Some(PathBuf::from(a.get("archive")));
+    }
     if ccfg.store_nodes > 0 {
         // Shard layout record: how the catalog maps onto store nodes —
         // built with the same seed the engine's store uses, so the
@@ -487,6 +552,12 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     println!(
         "store: {} stripe retries  {} failovers  {} corrupt payloads",
         report.stripe_retries, report.failovers, report.corrupt_payloads
+    );
+    println!(
+        "archive: {} hits  {} viewed in place  {} payload copies",
+        report.archive_hits,
+        human_bytes(report.archive_bytes_viewed),
+        report.payload_copies
     );
     Ok(())
 }

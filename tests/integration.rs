@@ -352,6 +352,7 @@ fn synthetic_prefetch_pipeline_matches_blocking() -> anyhow::Result<()> {
             registry: Arc::clone(&reg),
             templates: templates.clone(),
             cpu: Arc::new(Mutex::new(LruTier::new("cpu", 64 << 20))),
+            archive: None,
         })
     };
 
@@ -452,6 +453,7 @@ fn synthetic_sharded_store_fault_sweeps_converge() -> anyhow::Result<()> {
         registry: Arc::clone(&reg),
         templates: templates.clone(),
         cpu: Arc::new(Mutex::new(LruTier::new("cpu", 64 << 20))),
+        archive: None,
     };
     let reference: Vec<PreparedExpert> =
         workload.iter().map(|id| flat_ctx.prepare(id).unwrap()).collect();
@@ -520,6 +522,7 @@ fn synthetic_sharded_store_fault_sweeps_converge() -> anyhow::Result<()> {
                     registry: Arc::clone(&reg),
                     templates: templates.clone(),
                     cpu: Arc::new(Mutex::new(LruTier::new("cpu", 64 << 20))),
+                    archive: None,
                 };
                 for (id, want) in workload.iter().zip(&reference) {
                     let got = ctx.prepare(id)?;
@@ -557,6 +560,306 @@ fn synthetic_sharded_store_fault_sweeps_converge() -> anyhow::Result<()> {
             }
         }
     }
+    std::fs::remove_dir_all(&dir).ok();
+    Ok(())
+}
+
+/// Tier-interaction equivalence for the archive level (GPU ⊃ host ⊃
+/// archive ⊃ remote), artifact-free: the same mixed stored+composed
+/// workload prepared via the remote fetch, via a warmed host tier, and
+/// via a local `.cpar` archive is **bit-identical** at every pool size.
+/// The archive leg must additionally perform zero heap copies of
+/// encoded payload bytes (the per-engine `CopyMeter`), move zero bytes
+/// over the net link, and never double-cache its views in the host
+/// tier; a *partial* archive serves what it has as views and falls
+/// through to the remote path for the rest — still bit-identical.
+#[test]
+fn synthetic_archive_tier_matches_host_and_remote_paths() -> anyhow::Result<()> {
+    use compeft::coordinator::archive::{build_from_registry, ArchiveBuilder, ArchiveTier};
+    use compeft::coordinator::cache::LruTier;
+    use compeft::coordinator::loader::ExpertLoader;
+    use compeft::coordinator::metrics::Metrics;
+    use compeft::coordinator::{PrepareContext, PreparedExpert, SimLink};
+    use std::sync::{Arc, Mutex};
+
+    let dir = fresh_dir("archive_tiers");
+    let mut reg = Registry::new();
+    let cfg = CompressConfig {
+        density: 0.15,
+        alpha: 1.0,
+        granularity: Granularity::Global,
+    };
+    let mut template_like = None;
+    for i in 0..3u64 {
+        let tv = synthetic_tv(110 + i, 7_000);
+        let npz = dir.join(format!("a{i}.lora.npz"));
+        tv.save_npz(&npz)?;
+        reg.register_compeft(&format!("a{i}"), "t", "s", ExpertMethod::Lora, &npz, &cfg)?;
+        template_like.get_or_insert(tv);
+    }
+    reg.register_composition(
+        "merged/ties",
+        &["a0", "a1", "a2"],
+        MergeMethod::Ties { density: 0.4, lambda: 1.0 },
+    )?;
+    let reg = Arc::new(reg);
+    let templates = bs::zero_templates(&template_like.unwrap());
+    // 3 distinct stored fetches on a cold host tier: a1, then a0+a2 as
+    // composition members (a1 tier-hits), then a0/a2 tier-hit again.
+    let workload = ["a1", "merged/ties", "a0", "a2"];
+
+    let archive_path = dir.join("experts.cpar");
+    let (members, written) = build_from_registry(&reg, &archive_path)?;
+    assert_eq!(members, 3, "every stored expert packed (compositions are virtual)");
+    assert!(written > 0);
+    // A partial archive: only a0 and a1 — a2 must come from remote.
+    let partial_path = dir.join("partial.cpar");
+    {
+        let mut b = ArchiveBuilder::new();
+        for id in ["a0", "a1"] {
+            let rec = reg.get(id).unwrap();
+            b.add(id, std::fs::read(&rec.path)?)?;
+        }
+        b.write_to(&partial_path)?;
+    }
+
+    let mk_ctx = |workers: usize,
+                  metrics: &Arc<Metrics>,
+                  archive: Option<Arc<ArchiveTier>>| {
+        let loader = ExpertLoader::new(
+            SimLink::new("net", LinkSpec::internet()).with_time_scale(0.0),
+            SimLink::new("pcie", LinkSpec::pcie()).with_time_scale(0.0),
+        )
+        .with_pool(Arc::new(ThreadPool::new(workers)))
+        .with_meter(metrics.copy_meter());
+        let net = loader.net.clone();
+        let ctx = PrepareContext {
+            loader,
+            registry: Arc::clone(&reg),
+            templates: templates.clone(),
+            cpu: Arc::new(Mutex::new(LruTier::new("cpu", 64 << 20))),
+            archive,
+        };
+        (ctx, net)
+    };
+
+    // Flat remote reference, serial pool.
+    let ref_metrics = Arc::new(Metrics::new());
+    let (ref_ctx, _) = mk_ctx(1, &ref_metrics, None);
+    let reference: Vec<PreparedExpert> =
+        workload.iter().map(|id| ref_ctx.prepare(id).unwrap()).collect();
+
+    for workers in prop::pool_sizes() {
+        // Remote leg, then the same ctx again with a warmed host tier:
+        // exactly one copy per stored expert, ever.
+        let metrics = Arc::new(Metrics::new());
+        let (ctx, net) = mk_ctx(workers, &metrics, None);
+        for pass in 0..2 {
+            for (id, want) in workload.iter().zip(&reference) {
+                let got = ctx.prepare(id)?;
+                prop::assert_paramset_bit_identical(
+                    &got.params,
+                    &want.params,
+                    &format!("remote pass={pass} w={workers} id={id}"),
+                );
+                assert_eq!(got.upload_bytes, want.upload_bytes, "{id}");
+                assert_eq!(got.dense_bytes, want.dense_bytes, "{id}");
+            }
+            let s = metrics.snapshot();
+            assert_eq!(
+                s.payload_copies, 3,
+                "one copy per stored expert, none on host-tier hits (pass={pass})"
+            );
+            assert_eq!(s.archive_hits, 0, "no archive attached");
+        }
+        assert!(net.bytes_moved() > 0, "remote leg pays the net transfer");
+
+        // Archive leg: every stored fetch is an in-place view.
+        let metrics = Arc::new(Metrics::new());
+        let tier = Arc::new(ArchiveTier::open(&archive_path, Arc::clone(&metrics))?);
+        let (ctx, net) = mk_ctx(workers, &metrics, Some(tier));
+        for (id, want) in workload.iter().zip(&reference) {
+            let got = ctx.prepare(id)?;
+            prop::assert_paramset_bit_identical(
+                &got.params,
+                &want.params,
+                &format!("archive w={workers} id={id}"),
+            );
+        }
+        assert_eq!(net.bytes_moved(), 0, "archive hits never touch the net");
+        assert_eq!(
+            ctx.cpu.lock().unwrap().stats().entries,
+            0,
+            "archive views are not double-cached in the host tier"
+        );
+        let s = metrics.snapshot();
+        // a1 + members a0,a1,a2 + a0 + a2: six fetches, all archive.
+        assert_eq!(s.archive_hits, 6, "every stored fetch hit the archive");
+        assert!(s.archive_bytes_viewed > 0);
+        assert_eq!(s.payload_copies, 0, "archive-resident serving copies nothing");
+        assert_eq!(s.failovers, 0);
+
+        // Partial archive: a0/a1 from the image, a2 from remote.
+        let metrics = Arc::new(Metrics::new());
+        let tier = Arc::new(ArchiveTier::open(&partial_path, Arc::clone(&metrics))?);
+        let (ctx, net) = mk_ctx(workers, &metrics, Some(tier));
+        for (id, want) in workload.iter().zip(&reference) {
+            let got = ctx.prepare(id)?;
+            prop::assert_paramset_bit_identical(
+                &got.params,
+                &want.params,
+                &format!("partial-archive w={workers} id={id}"),
+            );
+        }
+        let s = metrics.snapshot();
+        assert!(s.archive_hits > 0, "archived members served as views");
+        assert_eq!(s.payload_copies, 1, "only the missing a2 is fetched and copied");
+        assert!(net.bytes_moved() > 0, "the miss fell through to remote");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+    Ok(())
+}
+
+/// Archive-index corruption robustness at the integration level, on an
+/// archive of *real* compressed experts: a seeded bit-flip pass over
+/// every header/index byte (plus a strided sample of the member
+/// region) must yield a structured `Err` from `open`, or a tier whose
+/// every `get` is `None`-or-bit-identical — never a panic, never a
+/// wrong-expert view. The truncation + trailing-garbage sweep must
+/// always `Err`. And a tier carrying one corrupt member must degrade
+/// that expert to the remote path **mid-pipeline**: `prepare` stays
+/// bit-identical to the flat reference while the corruption is counted
+/// like a bad stripe (`corrupt_payloads`/`failovers`).
+#[test]
+fn synthetic_archive_bitflip_and_truncation_fuzz() -> anyhow::Result<()> {
+    use compeft::coordinator::archive::{build_from_registry, ArchiveTier};
+    use compeft::coordinator::cache::LruTier;
+    use compeft::coordinator::loader::ExpertLoader;
+    use compeft::coordinator::metrics::Metrics;
+    use compeft::coordinator::{PrepareContext, SimLink};
+    use std::sync::{Arc, Mutex};
+
+    let dir = fresh_dir("archive_fuzz");
+    let mut reg = Registry::new();
+    let cfg = CompressConfig {
+        density: 0.1,
+        alpha: 1.0,
+        granularity: Granularity::Global,
+    };
+    let mut template_like = None;
+    for i in 0..2u64 {
+        let tv = synthetic_tv(130 + i, 4_000);
+        let npz = dir.join(format!("f{i}.lora.npz"));
+        tv.save_npz(&npz)?;
+        reg.register_compeft(&format!("f{i}"), "t", "s", ExpertMethod::Lora, &npz, &cfg)?;
+        template_like.get_or_insert(tv);
+    }
+    let reg = Arc::new(reg);
+    let templates = bs::zero_templates(&template_like.unwrap());
+
+    let archive_path = dir.join("experts.cpar");
+    build_from_registry(&reg, &archive_path)?;
+    let image = std::fs::read(&archive_path)?;
+    let (index_end, member_bytes) = {
+        let tier = ArchiveTier::from_bytes(image.clone(), Arc::new(Metrics::new()))?;
+        let first_member = ["f0", "f1"]
+            .iter()
+            .map(|id| tier.member_range(id).unwrap().0)
+            .min()
+            .unwrap();
+        let bytes: Vec<(String, Vec<u8>)> = ["f0", "f1"]
+            .iter()
+            .map(|id| {
+                let (off, len) = tier.member_range(id).unwrap();
+                (id.to_string(), image[off..off + len].to_vec())
+            })
+            .collect();
+        (first_member, bytes)
+    };
+
+    // Every header/index/padding byte, one seeded bit each; the member
+    // region sampled strided (each flip re-CRCs both members, so the
+    // full cross product would dominate the suite's runtime).
+    let mut rng = Pcg::seed(0xCA9A12);
+    let positions = (0..index_end).chain((index_end..image.len()).step_by(97));
+    for pos in positions {
+        let mut evil = image.clone();
+        evil[pos] ^= 1u8 << rng.below(8);
+        match ArchiveTier::from_bytes(evil, Arc::new(Metrics::new())) {
+            Err(_) => {}
+            Ok(tier) => {
+                for (id, want) in &member_bytes {
+                    match tier.get(id) {
+                        None => {}
+                        Some(got) => assert_eq!(
+                            &*got,
+                            &want[..],
+                            "flip at byte {pos} served a wrong view of {id}"
+                        ),
+                    }
+                }
+            }
+        }
+    }
+
+    // Truncations and trailing garbage: structured Err, every cut.
+    for cut in [0, 1, 8, 12, index_end, image.len() / 2, image.len() - 1] {
+        assert!(
+            ArchiveTier::from_bytes(image[..cut].to_vec(), Arc::new(Metrics::new())).is_err(),
+            "truncation to {cut} bytes must be rejected"
+        );
+    }
+    let mut long = image.clone();
+    long.push(0);
+    assert!(
+        ArchiveTier::from_bytes(long, Arc::new(Metrics::new())).is_err(),
+        "trailing garbage must be rejected"
+    );
+
+    // One corrupt member, end to end: the damaged expert degrades to
+    // the remote fetch and still prepares bit-identically.
+    let flat_metrics = Arc::new(Metrics::new());
+    let mk_loader = |metrics: &Arc<Metrics>| {
+        ExpertLoader::new(
+            SimLink::new("net", LinkSpec::internet()).with_time_scale(0.0),
+            SimLink::new("pcie", LinkSpec::pcie()).with_time_scale(0.0),
+        )
+        .with_pool(Arc::new(ThreadPool::new(2)))
+        .with_meter(metrics.copy_meter())
+    };
+    let flat_ctx = PrepareContext {
+        loader: mk_loader(&flat_metrics),
+        registry: Arc::clone(&reg),
+        templates: templates.clone(),
+        cpu: Arc::new(Mutex::new(LruTier::new("cpu", 64 << 20))),
+        archive: None,
+    };
+    let want: Vec<_> = ["f0", "f1"].iter().map(|id| flat_ctx.prepare(id).unwrap()).collect();
+
+    let metrics = Arc::new(Metrics::new());
+    let mut bad = image;
+    let (off, len) = {
+        let tier = ArchiveTier::from_bytes(bad.clone(), Arc::new(Metrics::new()))?;
+        tier.member_range("f0").unwrap()
+    };
+    bad[off + len / 2] ^= 0x10;
+    let tier = Arc::new(ArchiveTier::from_bytes(bad, Arc::clone(&metrics))?);
+    let ctx = PrepareContext {
+        loader: mk_loader(&metrics),
+        registry: Arc::clone(&reg),
+        templates: templates.clone(),
+        cpu: Arc::new(Mutex::new(LruTier::new("cpu", 64 << 20))),
+        archive: Some(tier),
+    };
+    for (id, w) in ["f0", "f1"].iter().zip(&want) {
+        let got = ctx.prepare(id)?;
+        prop::assert_paramset_bit_identical(&got.params, &w.params, id);
+    }
+    let s = metrics.snapshot();
+    assert!(s.corrupt_payloads > 0, "the bad member was detected");
+    assert!(s.failovers > 0, "and counted as a failover to remote");
+    assert_eq!(s.archive_hits, 1, "the intact member still served as a view");
+    assert_eq!(s.payload_copies, 1, "only the degraded expert was fetched");
     std::fs::remove_dir_all(&dir).ok();
     Ok(())
 }
@@ -1020,6 +1323,119 @@ fn sharded_store_serve_identical_predictions() -> anyhow::Result<()> {
     // every stripe and still serves the same predictions.
     let faulty = FaultSpec { drop_p: 1.0, first_attempt_only: true, ..Default::default() };
     assert_eq!(serve(3, 2, Some(faulty))?, reference, "faulted sharded store");
+    Ok(())
+}
+
+/// The archive tier's acceptance bar through the full engine: the same
+/// mixed stored+composed trace served without an archive, with a
+/// `.cpar` archive of the expert pool (every fetch an in-place view —
+/// zero payload copies end to end), and with a *dead* archive path
+/// (degrades to the remote store, counted as a failover) produces
+/// bit-identical predictions — the archive changes where bytes live,
+/// never what is served.
+#[test]
+fn archive_serve_identical_predictions_and_dead_archive_degrades() -> anyhow::Result<()> {
+    use compeft::coordinator::build_from_registry;
+
+    let Some(dir) = artifacts() else { return Ok(()) };
+    let found = scan_expert_npz(&dir, "s")?;
+    let lora: Vec<_> = found
+        .iter()
+        .filter(|(t, m, _)| {
+            *m == ExpertMethod::Lora
+                && dir.join("eval").join(format!("task_{t}.npz")).exists()
+        })
+        .take(2)
+        .collect();
+    if lora.len() < 2 {
+        return Ok(());
+    }
+    let build_registry = || -> anyhow::Result<Registry> {
+        let mut registry = Registry::new();
+        let cfg = CompressConfig {
+            density: 0.2,
+            alpha: 1.0,
+            granularity: Granularity::Global,
+        };
+        for (task, m, path) in &lora {
+            registry.register_compeft(task, task, "s", *m, path, &cfg)?;
+        }
+        registry.register_composition(
+            "merged/avg",
+            &[lora[0].0.as_str(), lora[1].0.as_str()],
+            MergeMethod::Average,
+        )?;
+        Ok(registry)
+    };
+
+    let tmp = fresh_dir("serve_archive");
+    let archive_path = tmp.join("experts.cpar");
+    let (members, _) = build_from_registry(&build_registry()?, &archive_path)?;
+    assert_eq!(members, 2);
+
+    let set = bs::load_eval(&dir, &format!("task_{}", lora[0].0))?;
+    let trace: Vec<(String, Vec<i32>, usize)> = (0..9)
+        .map(|i| {
+            let expert = match i % 3 {
+                0 => lora[0].0.clone(),
+                1 => "merged/avg".to_string(),
+                _ => lora[1].0.clone(),
+            };
+            let ex = i % set.n.min(4);
+            (
+                expert,
+                set.tokens[ex * set.seq..(ex + 1) * set.seq].to_vec(),
+                set.n_classes[ex] as usize,
+            )
+        })
+        .collect();
+
+    let serve = |archive: Option<PathBuf>| -> anyhow::Result<(Vec<usize>, compeft::coordinator::EngineReport)> {
+        let mut ccfg = CoordinatorConfig::new(dir.clone(), "s");
+        // Room for ~1 dense adapter: every expert change is a cold
+        // swap, so the archive is consulted on every refetch.
+        ccfg.gpu_capacity_bytes =
+            build_registry()?.get(&lora[0].0).unwrap().n_params as u64 * 2 + 8;
+        ccfg.policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) };
+        ccfg.time_scale = 0.0;
+        ccfg.archive = archive;
+        let coord = Coordinator::start(ccfg, build_registry()?)?;
+        let pending: Vec<_> = trace
+            .iter()
+            .map(|(e, tokens, n)| coord.submit(e, tokens.clone(), *n))
+            .collect();
+        let classes: Vec<usize> = pending
+            .into_iter()
+            .map(|rx| rx.recv().map(|p| p.class))
+            .collect::<Result<_, _>>()?;
+        let report = coord.shutdown()?;
+        Ok((classes, report))
+    };
+
+    let (reference, report) = serve(None)?;
+    assert_eq!(reference.len(), trace.len());
+    assert_eq!(report.archive_hits, 0, "no archive attached");
+    assert!(report.payload_copies > 0, "remote fetches materialize buffers");
+
+    // Archived pool: bit-identical, every fetch an in-place view.
+    let (got, report) = serve(Some(archive_path))?;
+    assert_eq!(got, reference, "archive-resident serving changes no prediction");
+    assert!(report.archive_hits > 0, "the archive actually served fetches");
+    assert!(report.archive_bytes_viewed > 0);
+    assert_eq!(
+        report.payload_copies, 0,
+        "archive-resident serving performs zero encoded-byte copies"
+    );
+    assert_eq!(report.net_bytes, 0, "nothing left for the net to move");
+
+    // Dead archive: the engine logs, counts a failover, and serves
+    // identically via the remote path.
+    let (got, report) = serve(Some(tmp.join("missing.cpar")))?;
+    assert_eq!(got, reference, "a dead archive degrades, never diverges");
+    assert_eq!(report.archive_hits, 0);
+    assert!(report.failovers >= 1, "the unusable archive is counted");
+
+    std::fs::remove_dir_all(&tmp).ok();
     Ok(())
 }
 
