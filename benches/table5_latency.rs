@@ -31,7 +31,8 @@ use compeft::util::json::Json;
 use compeft::util::pool::ThreadPool;
 use compeft::util::rng::Pcg;
 use compeft::util::stats;
-use std::sync::{Arc, Mutex};
+use compeft::util::sync::{rank, OrderedMutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Measured (not modeled) peak heap for the zero-copy comparison rows.
@@ -112,7 +113,11 @@ fn prefetch_comparison(
             .with_pool(Arc::new(ThreadPool::new(4))),
             registry: Arc::clone(&reg),
             templates: templates.clone(),
-            cpu: Arc::new(Mutex::new(LruTier::new("cpu", 256 << 20))),
+            cpu: Arc::new(OrderedMutex::new(
+                rank::CPU_TIER,
+                "cache.cpu_tier",
+                LruTier::new("cpu", 256 << 20),
+            )),
             archive: None,
         })
     };

@@ -1,0 +1,590 @@
+//! A small, dependency-free Rust lexer for `compeft-lint`.
+//!
+//! Produces a token stream with line numbers, plus the side channels
+//! the rule engine needs: `// compeft-lint: allow(...)` directives and
+//! per-token test-region membership (`#[cfg(test)]` items, `#[test]`
+//! functions, `mod tests`). It handles the lexical constructs that trip
+//! naive scanners: raw strings (`r#"..."#`, any hash depth), byte and
+//! byte-raw strings, nested block comments, and the char-literal vs
+//! lifetime ambiguity (`'x'` vs `'x`).
+//!
+//! This is an analysis lexer, not a compiler front end: numeric
+//! literals and multi-char operators are tokenized loosely (rules only
+//! look at identifiers, punctuation adjacency, and strings), but
+//! string/comment/char boundaries — the things that could hide or
+//! fabricate a `.lock()` — are exact.
+
+/// Token kind. Strings and chars keep no contents: rules must never
+/// match inside literals, so dropping the text enforces that.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Tok {
+    /// Identifier or keyword.
+    Ident(String),
+    /// `'a`, `'static` — lifetimes (distinct from char literals).
+    Lifetime,
+    /// `'x'`, `'\n'`, `b'x'` — char/byte literals.
+    CharLit,
+    /// Any string literal: `"…"`, `r#"…"#`, `b"…"`, `br#"…"#`.
+    StrLit,
+    /// Numeric literal (loosely tokenized).
+    Num,
+    /// Single punctuation character: `. ( ) [ ] { } ; : , # ! & …`.
+    Punct(char),
+}
+
+/// One token with its source position and test-region membership.
+#[derive(Clone, Debug)]
+pub struct Token {
+    pub tok: Tok,
+    /// 1-based source line.
+    pub line: u32,
+    /// True inside `#[cfg(test)]` / `#[test]` items or `mod tests`.
+    pub in_test: bool,
+}
+
+impl Token {
+    pub fn ident(&self) -> Option<&str> {
+        match &self.tok {
+            Tok::Ident(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn is_punct(&self, c: char) -> bool {
+        self.tok == Tok::Punct(c)
+    }
+}
+
+/// A `// compeft-lint: allow(rule-a, rule-b) -- reason` directive.
+#[derive(Clone, Debug)]
+pub struct Allow {
+    /// Line the comment sits on.
+    pub line: u32,
+    /// Rule ids named inside `allow(...)`.
+    pub rules: Vec<String>,
+    /// True when a non-empty reason follows `--`.
+    pub has_reason: bool,
+    /// True when the comment is alone on its line (then it also covers
+    /// the next line).
+    pub own_line: bool,
+    /// True when the directive sits inside a test region.
+    pub in_test: bool,
+}
+
+impl Allow {
+    /// Lines this directive suppresses: its own line, plus the next
+    /// line when the comment stands alone.
+    pub fn covers(&self, line: u32) -> bool {
+        line == self.line || (self.own_line && line == self.line + 1)
+    }
+}
+
+/// Lexed file: tokens plus lint directives.
+#[derive(Debug, Default)]
+pub struct LexFile {
+    pub tokens: Vec<Token>,
+    pub allows: Vec<Allow>,
+}
+
+const DIRECTIVE: &str = "compeft-lint:";
+
+/// Lex `src`. Never fails: unterminated constructs are closed at EOF
+/// (the analyzer must degrade, not die, on odd input).
+pub fn lex(src: &str) -> LexFile {
+    let b = src.as_bytes();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    let mut tokens: Vec<Token> = Vec::new();
+    let mut allows: Vec<Allow> = Vec::new();
+    // Becomes true when anything other than whitespace was seen since
+    // the start of the current line (drives `Allow::own_line`).
+    let mut line_has_code = false;
+
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            b'\n' => {
+                line += 1;
+                line_has_code = false;
+                i += 1;
+            }
+            c if (c as char).is_ascii_whitespace() => i += 1,
+            b'/' if i + 1 < b.len() && b[i + 1] == b'/' => {
+                // Line comment; may carry a lint directive.
+                let start = i;
+                while i < b.len() && b[i] != b'\n' {
+                    i += 1;
+                }
+                let text = &src[start..i];
+                if let Some(a) = parse_directive(text, line, !line_has_code) {
+                    allows.push(a);
+                }
+                line_has_code = true;
+            }
+            b'/' if i + 1 < b.len() && b[i + 1] == b'*' => {
+                // Nested block comment.
+                let mut depth = 1usize;
+                i += 2;
+                while i < b.len() && depth > 0 {
+                    if b[i] == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+                        depth += 1;
+                        i += 2;
+                    } else if b[i] == b'*' && i + 1 < b.len() && b[i + 1] == b'/' {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        if b[i] == b'\n' {
+                            line += 1;
+                        }
+                        i += 1;
+                    }
+                }
+                line_has_code = true;
+            }
+            b'"' => {
+                let tl = line;
+                i = skip_cooked_string(b, i + 1, &mut line);
+                push(&mut tokens, Tok::StrLit, tl);
+                line_has_code = true;
+            }
+            b'\'' => {
+                // Char literal vs lifetime.
+                let tl = line;
+                if is_char_literal(b, i) {
+                    i = skip_char_literal(b, i + 1);
+                    push(&mut tokens, Tok::CharLit, tl);
+                } else {
+                    i += 1;
+                    while i < b.len() && is_ident_byte(b[i]) {
+                        i += 1;
+                    }
+                    push(&mut tokens, Tok::Lifetime, tl);
+                }
+                line_has_code = true;
+            }
+            c if c.is_ascii_digit() => {
+                let tl = line;
+                i = skip_number(b, i);
+                push(&mut tokens, Tok::Num, tl);
+                line_has_code = true;
+            }
+            c if is_ident_start(c) => {
+                let tl = line;
+                // Raw/byte string prefixes: r"…", r#"…"#, b"…", br#"…"#.
+                if let Some(next) = raw_or_byte_string_end(b, i, &mut line) {
+                    i = next;
+                    push(&mut tokens, Tok::StrLit, tl);
+                } else {
+                    let start = i;
+                    while i < b.len() && is_ident_byte(b[i]) {
+                        i += 1;
+                    }
+                    push(&mut tokens, Tok::Ident(src[start..i].to_string()), tl);
+                }
+                line_has_code = true;
+            }
+            c => {
+                push(&mut tokens, Tok::Punct(c as char), line);
+                i += 1;
+                line_has_code = true;
+            }
+        }
+    }
+
+    mark_test_regions(&mut tokens, &mut allows);
+    LexFile { tokens, allows }
+}
+
+fn push(tokens: &mut Vec<Token>, tok: Tok, line: u32) {
+    tokens.push(Token { tok, line, in_test: false });
+}
+
+fn is_ident_start(c: u8) -> bool {
+    c == b'_' || (c as char).is_ascii_alphabetic()
+}
+
+fn is_ident_byte(c: u8) -> bool {
+    c == b'_' || (c as char).is_ascii_alphanumeric()
+}
+
+/// Skip a cooked string body starting just past the opening quote.
+/// Returns the index past the closing quote.
+fn skip_cooked_string(b: &[u8], mut i: usize, line: &mut u32) -> usize {
+    while i < b.len() {
+        match b[i] {
+            b'\\' => i += 2, // escape: skip the escaped byte too
+            b'"' => return i + 1,
+            b'\n' => {
+                *line += 1;
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    i
+}
+
+/// At a `'`: char literal or lifetime? `'\…'` and `'x'` are chars;
+/// `'ident` (no closing quote right after one char) is a lifetime.
+fn is_char_literal(b: &[u8], i: usize) -> bool {
+    match b.get(i + 1) {
+        Some(b'\\') => true,
+        Some(&c) if is_ident_byte(c) => b.get(i + 2) == Some(&b'\''),
+        Some(_) => true, // '(' etc. — punctuation chars like '[' or ' '
+        None => false,
+    }
+}
+
+/// Skip a char-literal body starting just past the opening quote.
+fn skip_char_literal(b: &[u8], mut i: usize) -> usize {
+    if b.get(i) == Some(&b'\\') {
+        i += 2;
+        // \x41 / \u{…} escapes: run to the closing quote.
+        while i < b.len() && b[i] != b'\'' {
+            i += 1;
+        }
+        return (i + 1).min(b.len());
+    }
+    i += 1; // the char itself
+    if b.get(i) == Some(&b'\'') {
+        i += 1;
+    }
+    i
+}
+
+fn skip_number(b: &[u8], mut i: usize) -> usize {
+    // Digits + ident bytes cover hex/suffixes; a dot joins only when
+    // followed by a digit so `0..len` stays three tokens.
+    while i < b.len() {
+        if is_ident_byte(b[i]) {
+            i += 1;
+        } else if b[i] == b'.'
+            && b.get(i + 1).is_some_and(|&c| c.is_ascii_digit())
+            && b.get(i.wrapping_sub(1)).is_some_and(|&c| c.is_ascii_digit())
+        {
+            i += 1;
+        } else {
+            break;
+        }
+    }
+    i
+}
+
+/// If position `i` starts a raw or byte string (`r"`, `r#…#"`, `b"`,
+/// `br#…`), consume it and return the index past its end.
+fn raw_or_byte_string_end(b: &[u8], i: usize, line: &mut u32) -> Option<usize> {
+    let mut j = i;
+    let mut raw = false;
+    match b[j] {
+        b'r' => {
+            raw = true;
+            j += 1;
+        }
+        b'b' => {
+            j += 1;
+            if b.get(j) == Some(&b'r') {
+                raw = true;
+                j += 1;
+            }
+        }
+        _ => return None,
+    }
+    if raw {
+        let mut hashes = 0usize;
+        while b.get(j) == Some(&b'#') {
+            hashes += 1;
+            j += 1;
+        }
+        if b.get(j) != Some(&b'"') {
+            return None; // plain ident starting with r/br (e.g. `ranges`)
+        }
+        j += 1;
+        // Scan for `"` followed by `hashes` hashes.
+        while j < b.len() {
+            if b[j] == b'\n' {
+                *line += 1;
+                j += 1;
+                continue;
+            }
+            if b[j] == b'"' {
+                let mut k = j + 1;
+                let mut seen = 0usize;
+                while seen < hashes && b.get(k) == Some(&b'#') {
+                    seen += 1;
+                    k += 1;
+                }
+                if seen == hashes {
+                    return Some(k);
+                }
+            }
+            j += 1;
+        }
+        Some(j)
+    } else {
+        // b"…" cooked byte string.
+        if b.get(j) != Some(&b'"') {
+            return None;
+        }
+        Some(skip_cooked_string(b, j + 1, line))
+    }
+}
+
+/// Parse a lint directive out of a line comment's text.
+fn parse_directive(comment: &str, line: u32, own_line: bool) -> Option<Allow> {
+    let t = comment.trim_start_matches('/').trim();
+    let rest = t.strip_prefix(DIRECTIVE)?.trim();
+    let rest = rest.strip_prefix("allow")?.trim_start();
+    let rest = rest.strip_prefix('(')?;
+    let close = rest.find(')')?;
+    let rules: Vec<String> = rest[..close]
+        .split(',')
+        .map(|r| r.trim().to_string())
+        .filter(|r| !r.is_empty())
+        .collect();
+    let tail = rest[close + 1..].trim();
+    let has_reason = match tail.strip_prefix("--") {
+        Some(reason) => !reason.trim().is_empty(),
+        None => false,
+    };
+    Some(Allow { line, rules, has_reason, own_line, in_test: false })
+}
+
+/// Mark tokens (and allows) inside test regions: an item annotated
+/// `#[cfg(test)]` / `#[test]`, or a `mod tests`/`mod test` body.
+fn mark_test_regions(tokens: &mut [Token], allows: &mut [Allow]) {
+    let mut depth = 0i32;
+    // Stack of depths at which a test region's `{` opened.
+    let mut regions: Vec<i32> = Vec::new();
+    let mut pending = false;
+    let mut region_lines: Vec<(u32, u32)> = Vec::new();
+    let mut open_line = 0u32;
+
+    let mut i = 0usize;
+    while i < tokens.len() {
+        let in_test = !regions.is_empty();
+        tokens[i].in_test = in_test;
+        match &tokens[i].tok {
+            Tok::Punct('#') => {
+                // Attribute: #[ … ] (or #![ … ]); inspect its idents.
+                let mut j = i + 1;
+                if tokens.get(j).map(|t| t.is_punct('!')) == Some(true) {
+                    j += 1;
+                }
+                if tokens.get(j).map(|t| t.is_punct('[')) == Some(true) {
+                    let (end, is_test_attr) = scan_attr(tokens, j);
+                    if is_test_attr && !in_test {
+                        pending = true;
+                        open_line = tokens[i].line;
+                    }
+                    for t in tokens[i..end.min(tokens.len())].iter_mut() {
+                        t.in_test = in_test;
+                    }
+                    i = end;
+                    continue;
+                }
+            }
+            Tok::Ident(s) if s == "mod" => {
+                if let Some(Tok::Ident(name)) = tokens.get(i + 1).map(|t| &t.tok) {
+                    if (name == "tests" || name == "test") && !in_test {
+                        pending = true;
+                        open_line = tokens[i].line;
+                    }
+                }
+            }
+            Tok::Punct('{') => {
+                depth += 1;
+                if pending {
+                    regions.push(depth);
+                    pending = false;
+                    tokens[i].in_test = true;
+                }
+            }
+            Tok::Punct('}') => {
+                if regions.last() == Some(&depth) {
+                    regions.pop();
+                    region_lines.push((open_line, tokens[i].line));
+                    tokens[i].in_test = true;
+                }
+                depth -= 1;
+            }
+            Tok::Punct(';') if pending && regions.is_empty() => {
+                // `#[cfg(test)] use …;` — attribute on a bodyless item.
+                pending = false;
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    // Regions still open at EOF run to the end.
+    if !regions.is_empty() {
+        region_lines.push((open_line, u32::MAX));
+    }
+    for a in allows.iter_mut() {
+        a.in_test =
+            region_lines.iter().any(|&(s, e)| a.line >= s && a.line <= e);
+    }
+}
+
+/// Scan an attribute starting at its `[`; returns (index past the
+/// closing `]`, whether it marks a test region). Test markers:
+/// `#[test]`, `#[cfg(test)]`, `#[cfg(any/all(… test …))]`.
+fn scan_attr(tokens: &[Token], open: usize) -> (usize, bool) {
+    let mut depth = 0i32;
+    let mut is_cfg = false;
+    let mut has_test = false;
+    let mut first_ident: Option<&str> = None;
+    let mut j = open;
+    while j < tokens.len() {
+        match &tokens[j].tok {
+            Tok::Punct('[') => depth += 1,
+            Tok::Punct(']') => {
+                depth -= 1;
+                if depth == 0 {
+                    j += 1;
+                    break;
+                }
+            }
+            Tok::Ident(s) => {
+                if first_ident.is_none() {
+                    first_ident = Some(s);
+                }
+                if s == "cfg" {
+                    is_cfg = true;
+                }
+                if s == "test" {
+                    has_test = true;
+                }
+            }
+            _ => {}
+        }
+        j += 1;
+    }
+    let marks_test = match first_ident {
+        Some("test") => true,
+        Some("cfg") => is_cfg && has_test,
+        _ => false,
+    };
+    (j, marks_test)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(f: &LexFile) -> Vec<String> {
+        f.tokens
+            .iter()
+            .filter_map(|t| t.ident().map(|s| s.to_string()))
+            .collect()
+    }
+
+    #[test]
+    fn raw_string_hides_lock_calls() {
+        // The raw string contains `"].lock()"` — it must lex as ONE
+        // StrLit token; no `lock` identifier may escape it.
+        let src = r####"let s = r#"x"].lock()"y"#; a.lock();"####;
+        let f = lex(src);
+        let ids = idents(&f);
+        assert_eq!(ids, vec!["let", "s", "a", "lock"]);
+        let strs = f.tokens.iter().filter(|t| t.tok == Tok::StrLit).count();
+        assert_eq!(strs, 1, "raw string is a single token");
+    }
+
+    #[test]
+    fn nested_block_comments_are_skipped() {
+        let src = "a /* outer /* inner.lock() */ still comment */ b";
+        let ids = idents(&lex(src));
+        assert_eq!(ids, vec!["a", "b"]);
+    }
+
+    #[test]
+    fn char_literal_vs_lifetime() {
+        let src = "let c: char = 'x'; fn f<'a>(v: &'a [u8]) { v.get('['); }";
+        let f = lex(src);
+        let chars = f.tokens.iter().filter(|t| t.tok == Tok::CharLit).count();
+        let lifes = f.tokens.iter().filter(|t| t.tok == Tok::Lifetime).count();
+        assert_eq!(chars, 2, "'x' and '[' are char literals");
+        assert_eq!(lifes, 2, "<'a> and &'a are lifetimes");
+    }
+
+    #[test]
+    fn escaped_quotes_and_byte_strings() {
+        let src = r#"let a = "s\"t.lock()"; let b = b"x.lock()"; c.lock();"#;
+        let ids = idents(&lex(src));
+        assert_eq!(ids, vec!["let", "a", "let", "b", "c", "lock"]);
+    }
+
+    #[test]
+    fn cfg_test_region_tracking_nests() {
+        let src = "
+fn live() { x.lock(); }
+#[cfg(test)]
+mod tests {
+    fn helper() { y.lock(); }
+    #[cfg(test)]
+    mod inner { fn g() { z.lock(); } }
+    fn after_inner() { w.lock(); }
+}
+fn live2() { v.lock(); }
+";
+        let f = lex(src);
+        let lock_of = |name: &str| {
+            f.tokens
+                .iter()
+                .position(|t| t.ident() == Some(name))
+                .map(|p| f.tokens[p].in_test)
+                .unwrap()
+        };
+        assert!(!lock_of("x"), "top-level fn is live code");
+        assert!(lock_of("y"), "mod tests body is a test region");
+        assert!(lock_of("z"), "nested cfg(test) stays a test region");
+        assert!(lock_of("w"), "after the nested mod, still in outer region");
+        assert!(!lock_of("v"), "code after the region is live again");
+    }
+
+    #[test]
+    fn test_attr_marks_single_fn() {
+        let src = "
+#[test]
+fn a_test() { x.unwrap(); }
+fn live() { y.unwrap(); }
+";
+        let f = lex(src);
+        let pos = |name: &str| f.tokens.iter().position(|t| t.ident() == Some(name)).unwrap();
+        assert!(f.tokens[pos("x")].in_test);
+        assert!(!f.tokens[pos("y")].in_test);
+    }
+
+    #[test]
+    fn cfg_test_on_bodyless_item_does_not_leak() {
+        let src = "#[cfg(test)]\nuse foo::bar;\nfn live() { x.unwrap(); }";
+        let f = lex(src);
+        let pos = f.tokens.iter().position(|t| t.ident() == Some("x")).unwrap();
+        assert!(!f.tokens[pos].in_test);
+    }
+
+    #[test]
+    fn directive_parsing_variants() {
+        let src = "
+let a = 1; // compeft-lint: allow(no-map-order) -- reduction is order-free
+// compeft-lint: allow(lock-order, no-wall-clock) -- bench scaffolding
+// compeft-lint: allow(no-panic-in-parse)
+// compeft-lint: allow(no-panic-in-parse) --
+// not a directive
+";
+        let f = lex(src);
+        assert_eq!(f.allows.len(), 4);
+        assert!(f.allows[0].has_reason && !f.allows[0].own_line);
+        assert!(f.allows[0].covers(2) && !f.allows[0].covers(3));
+        assert_eq!(f.allows[1].rules, vec!["lock-order", "no-wall-clock"]);
+        assert!(f.allows[1].own_line && f.allows[1].covers(4));
+        assert!(!f.allows[2].has_reason, "bare allow");
+        assert!(!f.allows[3].has_reason, "empty reason is bare");
+    }
+
+    #[test]
+    fn numbers_do_not_eat_ranges() {
+        let ids: Vec<String> = idents(&lex("for i in 0..table.len() {}"));
+        assert_eq!(ids, vec!["for", "i", "in", "table", "len"]);
+    }
+}

@@ -1,0 +1,902 @@
+//! `lock-order`: static lock-acquisition-order checking.
+//!
+//! The coordinator holds several mutexes (batcher queues, prefetch
+//! plan, staging area, CPU cache tier, transport link state, pool
+//! channels, executable cache, metrics). A deadlock needs two threads
+//! acquiring two of them in opposite orders — so we declare a total
+//! rank order (the table in [`LOCK_CLASSES`], mirrored at runtime by
+//! `util::sync::rank`) and statically reject any code path that
+//! acquires a lower-ranked lock while holding a higher-ranked one.
+//!
+//! The pass works on the lexer's token stream:
+//!
+//! 1. index every `fn` (with its `impl` owner) in the scoped files;
+//! 2. per function, simulate brace depth to find which guards are
+//!    live at each point, recording (a) direct `.lock()` acquisitions
+//!    and (b) method calls made while guards are held;
+//! 3. resolve calls interprocedurally — `self.m()` through the
+//!    enclosing impl, `x.m()` through a receiver-ident → type hint
+//!    table, bare `m()` through same-file free functions — and close
+//!    each function's may-acquire set transitively;
+//! 4. turn every "acquire B while holding A" into an edge A → B and
+//!    check each edge against the rank table, plus a belt-and-braces
+//!    cycle check over the legal edges.
+//!
+//! Receivers are matched by field identifier per file (`inner` means
+//! the staging area in `pipeline.rs` but the metrics state in
+//! `metrics.rs`); an unmatched `.lock()` receiver in a scoped file is
+//! itself an error, so new mutexes must be added to the table.
+
+use super::lexer::{LexFile, Tok, Token};
+use super::Diagnostic;
+use crate::util::sync::rank;
+
+pub const RULE: &str = "lock-order";
+
+/// Declared lock classes and their ranks (must acquire in strictly
+/// increasing rank). The runtime twin is `util::sync::rank`; a test
+/// below pins the two tables together.
+pub const LOCK_CLASSES: &[(&str, u32)] = &[
+    ("batcher.queues", rank::BATCHER_QUEUES),
+    ("pipeline.plan", rank::PREFETCH_PLAN),
+    ("pipeline.staging", rank::STAGING),
+    ("cache.cpu_tier", rank::CPU_TIER),
+    ("transport.link", rank::LINK_STATE),
+    ("pool.sender", rank::POOL_SENDER),
+    ("pool.receiver", rank::POOL_RECEIVER),
+    ("runtime.exec_cache", rank::EXEC_CACHE),
+    ("metrics.inner", rank::METRICS),
+];
+
+/// `.lock()` receiver field ident → lock class, scoped by file suffix
+/// ("" matches any file).
+const RECEIVER_CLASSES: &[(&str, &str, &str)] = &[
+    ("coordinator/batcher.rs", "queues", "batcher.queues"),
+    ("coordinator/pipeline.rs", "plan", "pipeline.plan"),
+    ("coordinator/pipeline.rs", "inner", "pipeline.staging"),
+    ("coordinator/pipeline.rs", "cpu", "cache.cpu_tier"),
+    ("coordinator/server.rs", "cpu", "cache.cpu_tier"),
+    ("coordinator/transport.rs", "state", "transport.link"),
+    ("util/pool.rs", "tx", "pool.sender"),
+    ("util/pool.rs", "rx", "pool.receiver"),
+    ("runtime/bundle.rs", "exes", "runtime.exec_cache"),
+    ("coordinator/metrics.rs", "inner", "metrics.inner"),
+];
+
+/// Receiver variable/field ident → type name, for resolving `x.m()`
+/// calls across modules while a lock is held.
+const RECEIVER_TYPES: &[(&str, &str)] = &[
+    ("batcher", "Batcher"),
+    ("staging", "StagingArea"),
+    ("metrics", "Metrics"),
+    ("pool", "ThreadPool"),
+];
+
+/// Method names that forward to the underlying value without locking;
+/// skipped when scanning backwards for the receiver field ident
+/// (`self.tx.as_ref().expect("...").lock()` resolves to `tx`).
+const ADAPTERS: &[&str] = &[
+    "as_ref", "as_mut", "as_deref", "expect", "unwrap", "clone", "borrow",
+    "borrow_mut",
+];
+
+const KEYWORDS: &[&str] = &[
+    "if", "while", "for", "match", "return", "loop", "in", "as", "let",
+    "mut", "ref", "move", "pub", "fn", "impl", "use", "mod", "struct",
+    "enum", "trait", "where", "unsafe", "dyn", "break", "continue", "else",
+    "self", "Self", "super", "crate", "true", "false", "Some", "Ok", "Err",
+    "None",
+];
+
+/// Files whose lock usage is in scope for this rule.
+pub fn in_scope(path: &str) -> bool {
+    (path.contains("coordinator/")
+        || path.ends_with("util/pool.rs")
+        || path.ends_with("runtime/bundle.rs"))
+        && !path.contains("analysis/")
+}
+
+fn class_of(path: &str, recv: &str) -> Option<usize> {
+    for (file, ident, class) in RECEIVER_CLASSES {
+        if (file.is_empty() || path.ends_with(file)) && recv == *ident {
+            return LOCK_CLASSES.iter().position(|(n, _)| n == class);
+        }
+    }
+    None
+}
+
+fn rank_of(class: usize) -> u32 {
+    LOCK_CLASSES[class].1
+}
+
+/// A function indexed in pass 1.
+struct Func {
+    owner: Option<String>,
+    name: String,
+    file: usize,
+    /// Token index range of the body, excluding the outer braces.
+    body: std::ops::Range<usize>,
+}
+
+/// What a function does with locks (pass 2).
+#[derive(Default)]
+struct Effects {
+    /// Directly acquired classes with the held-set at that point.
+    acquires: Vec<(usize, u32, Vec<usize>)>, // (class, line, held)
+    /// Calls made; `held` is the set of classes held at the call site.
+    calls: Vec<(CallKey, u32, Vec<usize>)>, // (callee, line, held)
+}
+
+#[derive(Clone, PartialEq, Eq, Hash, Debug)]
+enum CallKey {
+    /// `x.m()` with a type hint, or `self.m()` via the impl owner.
+    Method(String, String),
+    /// `m()` resolved against free fns in the same file.
+    Free(usize, String),
+}
+
+struct HeldLock {
+    class: usize,
+    guard: Option<String>,
+    depth: usize,
+    /// Temporary (no `let` binding): released at end of statement.
+    temp: bool,
+}
+
+/// Run the lock-order rule over lexed files. `files` pairs each path
+/// with its lex result; diagnostics point at acquisition sites.
+pub fn check(files: &[(String, LexFile)]) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    let mut funcs: Vec<Func> = Vec::new();
+    for (fi, (path, lexed)) in files.iter().enumerate() {
+        if in_scope(path) {
+            index_functions(fi, &lexed.tokens, &mut funcs);
+        }
+    }
+    // Extract per-function lock behaviour.
+    let mut effects: Vec<Effects> = Vec::new();
+    for f in &funcs {
+        let (path, lexed) = &files[f.file];
+        effects.push(extract(path, &lexed.tokens, f, &mut diags));
+    }
+    // Resolve call keys to function indices.
+    let mut resolved: Vec<Vec<usize>> = Vec::with_capacity(funcs.len());
+    for e in &effects {
+        let mut callees = Vec::new();
+        for (key, _, _) in &e.calls {
+            if let Some(ci) = resolve(&funcs, key) {
+                callees.push(ci);
+            }
+        }
+        resolved.push(callees);
+    }
+    // Transitive may-acquire closure per function.
+    let mut closure: Vec<Option<Vec<usize>>> = vec![None; funcs.len()];
+    for i in 0..funcs.len() {
+        close(i, &effects, &resolved, &mut closure, &mut Vec::new());
+    }
+    // Collect edges: held class -> acquired class.
+    struct Edge {
+        from: usize,
+        to: usize,
+        file: usize,
+        line: u32,
+        via: Option<String>,
+    }
+    let mut edges: Vec<Edge> = Vec::new();
+    for (i, e) in effects.iter().enumerate() {
+        let file = funcs[i].file;
+        for (class, line, held) in &e.acquires {
+            for h in held {
+                edges.push(Edge { from: *h, to: *class, file, line: *line, via: None });
+            }
+        }
+        for (key, line, held) in &e.calls {
+            if held.is_empty() {
+                continue;
+            }
+            if let Some(ci) = resolve(&funcs, key) {
+                let via = format!("{:?}", key);
+                for c in closure[ci].as_deref().unwrap_or(&[]) {
+                    for h in held {
+                        edges.push(Edge {
+                            from: *h,
+                            to: *c,
+                            file,
+                            line: *line,
+                            via: Some(via.clone()),
+                        });
+                    }
+                }
+            }
+        }
+    }
+    // Rank check, deduped per (from, to, site).
+    let mut seen = std::collections::BTreeSet::new();
+    let mut legal = std::collections::BTreeSet::new();
+    for e in &edges {
+        if !seen.insert((e.from, e.to, e.file, e.line)) {
+            continue;
+        }
+        let (fname, tname) = (LOCK_CLASSES[e.from].0, LOCK_CLASSES[e.to].0);
+        if e.from == e.to {
+            diags.push(Diagnostic::new(
+                &files[e.file].0,
+                e.line,
+                RULE,
+                format!("re-entrant acquisition of lock class `{fname}`"),
+            ));
+        } else if rank_of(e.from) >= rank_of(e.to) {
+            let via = e.via.as_deref().map(|v| format!(" (via {v})")).unwrap_or_default();
+            diags.push(Diagnostic::new(
+                &files[e.file].0,
+                e.line,
+                RULE,
+                format!(
+                    "acquires `{tname}` (rank {}) while holding `{fname}` (rank {}){via}; \
+                     declared order requires strictly increasing rank",
+                    rank_of(e.to),
+                    rank_of(e.from),
+                ),
+            ));
+        } else {
+            legal.insert((e.from, e.to));
+        }
+    }
+    if let Some(cycle) = find_cycle(&legal) {
+        let names: Vec<&str> = cycle.iter().map(|&c| LOCK_CLASSES[c].0).collect();
+        diags.push(Diagnostic::new(
+            &files.first().map(|(p, _)| p.as_str()).unwrap_or("<lock-graph>"),
+            0,
+            RULE,
+            format!("lock acquisition graph has a cycle: {}", names.join(" -> ")),
+        ));
+    }
+    diags
+}
+
+fn resolve(funcs: &[Func], key: &CallKey) -> Option<usize> {
+    match key {
+        CallKey::Method(ty, name) => funcs
+            .iter()
+            .position(|f| f.owner.as_deref() == Some(ty) && f.name == *name),
+        CallKey::Free(file, name) => funcs
+            .iter()
+            .position(|f| f.file == *file && f.owner.is_none() && f.name == *name),
+    }
+}
+
+fn close(
+    i: usize,
+    effects: &[Effects],
+    resolved: &[Vec<usize>],
+    memo: &mut Vec<Option<Vec<usize>>>,
+    stack: &mut Vec<usize>,
+) {
+    if memo[i].is_some() || stack.contains(&i) {
+        return;
+    }
+    stack.push(i);
+    let mut acc: Vec<usize> = effects[i].acquires.iter().map(|(c, _, _)| *c).collect();
+    for &ci in &resolved[i] {
+        close(ci, effects, resolved, memo, stack);
+        if let Some(sub) = &memo[ci] {
+            acc.extend_from_slice(sub);
+        }
+    }
+    acc.sort_unstable();
+    acc.dedup();
+    stack.pop();
+    memo[i] = Some(acc);
+}
+
+/// DFS cycle detection over the legal-edge set.
+fn find_cycle(edges: &std::collections::BTreeSet<(usize, usize)>) -> Option<Vec<usize>> {
+    let n = LOCK_CLASSES.len();
+    // 0 = unvisited, 1 = on stack, 2 = done
+    let mut state = vec![0u8; n];
+    let mut path: Vec<usize> = Vec::new();
+    fn dfs(
+        v: usize,
+        edges: &std::collections::BTreeSet<(usize, usize)>,
+        state: &mut [u8],
+        path: &mut Vec<usize>,
+    ) -> Option<Vec<usize>> {
+        state[v] = 1;
+        path.push(v);
+        for &(a, b) in edges.iter().filter(|(a, _)| *a == v) {
+            debug_assert_eq!(a, v);
+            if state[b] == 1 {
+                let start = path.iter().position(|&p| p == b).unwrap_or(0);
+                let mut cyc = path[start..].to_vec();
+                cyc.push(b);
+                return Some(cyc);
+            }
+            if state[b] == 0 {
+                if let Some(c) = dfs(b, edges, state, path) {
+                    return Some(c);
+                }
+            }
+        }
+        path.pop();
+        state[v] = 2;
+        None
+    }
+    for v in 0..n {
+        if state[v] == 0 {
+            if let Some(c) = dfs(v, edges, &mut state, &mut path) {
+                return Some(c);
+            }
+        }
+    }
+    None
+}
+
+/// Pass 1: index `fn` items with their `impl` owner.
+fn index_functions(file: usize, toks: &[Token], out: &mut Vec<Func>) {
+    let mut depth = 0usize;
+    let mut impls: Vec<(Option<String>, usize)> = Vec::new(); // (owner, open depth)
+    let mut i = 0usize;
+    while i < toks.len() {
+        match &toks[i].tok {
+            Tok::Punct('{') => depth += 1,
+            Tok::Punct('}') => {
+                depth = depth.saturating_sub(1);
+                if let Some((_, d)) = impls.last() {
+                    if depth < *d {
+                        impls.pop();
+                    }
+                }
+            }
+            Tok::Ident(s) if s == "impl" => {
+                // Owner = ident after `for` if present, else the first
+                // ident outside generics.
+                let mut j = i + 1;
+                let mut angle = 0i32;
+                let mut first: Option<String> = None;
+                let mut after_for: Option<String> = None;
+                let mut saw_for = false;
+                while j < toks.len() && !toks[j].is_punct('{') && !toks[j].is_punct(';') {
+                    match &toks[j].tok {
+                        Tok::Punct('<') => angle += 1,
+                        Tok::Punct('>') => angle -= 1,
+                        Tok::Ident(id) if angle == 0 => {
+                            if id == "for" {
+                                saw_for = true;
+                            } else if saw_for && after_for.is_none() {
+                                after_for = Some(id.clone());
+                            } else if first.is_none() {
+                                first = Some(id.clone());
+                            }
+                        }
+                        _ => {}
+                    }
+                    j += 1;
+                }
+                if j < toks.len() && toks[j].is_punct('{') {
+                    impls.push((after_for.or(first), depth + 1));
+                    depth += 1;
+                    i = j + 1;
+                    continue;
+                }
+                i = j;
+            }
+            Tok::Ident(s) if s == "fn" => {
+                if let Some(Tok::Ident(name)) = toks.get(i + 1).map(|t| &t.tok) {
+                    let name = name.clone();
+                    // Find the body `{` (or `;` for bodyless items) at
+                    // zero paren/bracket depth after the signature.
+                    let mut j = i + 2;
+                    let mut pd = 0i32;
+                    while j < toks.len() {
+                        match toks[j].tok {
+                            Tok::Punct('(') | Tok::Punct('[') => pd += 1,
+                            Tok::Punct(')') | Tok::Punct(']') => pd -= 1,
+                            Tok::Punct('{') if pd == 0 => break,
+                            Tok::Punct(';') if pd == 0 => break,
+                            _ => {}
+                        }
+                        j += 1;
+                    }
+                    if j < toks.len() && toks[j].is_punct('{') {
+                        let body_start = j + 1;
+                        let end = matching_brace(toks, j);
+                        let owner =
+                            impls.last().and_then(|(o, _)| o.clone());
+                        out.push(Func {
+                            owner,
+                            name,
+                            file,
+                            body: body_start..end,
+                        });
+                        // Keep walking *into* the body so nested fns
+                        // (and impls in odd places) are indexed too.
+                        i += 2;
+                        continue;
+                    }
+                    i = j;
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+}
+
+/// Token index of the `}` matching the `{` at `open`.
+fn matching_brace(toks: &[Token], open: usize) -> usize {
+    let mut d = 0i32;
+    for (j, t) in toks.iter().enumerate().skip(open) {
+        match t.tok {
+            Tok::Punct('{') => d += 1,
+            Tok::Punct('}') => {
+                d -= 1;
+                if d == 0 {
+                    return j;
+                }
+            }
+            _ => {}
+        }
+    }
+    toks.len()
+}
+
+/// Pass 2: walk one function body, tracking held guards.
+fn extract(
+    path: &str,
+    toks: &[Token],
+    f: &Func,
+    diags: &mut Vec<Diagnostic>,
+) -> Effects {
+    let mut eff = Effects::default();
+    let mut held: Vec<HeldLock> = Vec::new();
+    let mut depth = 0usize;
+    let mut i = f.body.start;
+    while i < f.body.end {
+        let t = &toks[i];
+        match &t.tok {
+            Tok::Punct('{') => depth += 1,
+            Tok::Punct('}') => {
+                depth = depth.saturating_sub(1);
+                held.retain(|h| h.depth <= depth);
+            }
+            Tok::Punct(';') => {
+                held.retain(|h| !(h.temp && h.depth == depth));
+            }
+            Tok::Ident(s) if s == "fn" => {
+                // Skip nested fn bodies: they are indexed separately
+                // and don't run as part of this function.
+                if matches!(toks.get(i + 1).map(|t| &t.tok), Some(Tok::Ident(_))) {
+                    let mut j = i + 2;
+                    while j < f.body.end && !toks[j].is_punct('{') && !toks[j].is_punct(';') {
+                        j += 1;
+                    }
+                    if j < f.body.end && toks[j].is_punct('{') {
+                        i = matching_brace(toks, j) + 1;
+                        continue;
+                    }
+                    i = j;
+                }
+            }
+            Tok::Ident(s) if s == "drop" && is_punct_at(toks, i + 1, '(') => {
+                if let Some(Tok::Ident(g)) = toks.get(i + 2).map(|t| &t.tok) {
+                    if is_punct_at(toks, i + 3, ')') {
+                        if let Some(pos) =
+                            held.iter().rposition(|h| h.guard.as_deref() == Some(g))
+                        {
+                            held.remove(pos);
+                        }
+                    }
+                }
+            }
+            Tok::Punct('.')
+                if ident_at(toks, i + 1) == Some("lock")
+                    && is_punct_at(toks, i + 2, '(')
+                    && is_punct_at(toks, i + 3, ')') =>
+            {
+                if !t.in_test {
+                    match receiver_ident(toks, f.body.start, i) {
+                        Some(recv) => match class_of(path, &recv) {
+                            Some(class) => {
+                                let held_now: Vec<usize> =
+                                    held.iter().map(|h| h.class).collect();
+                                eff.acquires.push((class, t.line, held_now));
+                                let (guard, temp) =
+                                    guard_binding(toks, f.body.start, i);
+                                held.push(HeldLock { class, guard, depth, temp });
+                            }
+                            None => diags.push(Diagnostic::new(
+                                path,
+                                t.line,
+                                RULE,
+                                format!(
+                                    "`.lock()` on unranked receiver `{recv}`; add it \
+                                     to the lock-rank table in analysis::lockorder"
+                                ),
+                            )),
+                        },
+                        None => diags.push(Diagnostic::new(
+                            path,
+                            t.line,
+                            RULE,
+                            "`.lock()` with unresolvable receiver".to_string(),
+                        )),
+                    }
+                }
+                i += 4;
+                continue;
+            }
+            Tok::Ident(name)
+                if is_punct_at(toks, i + 1, '(')
+                    && !KEYWORDS.contains(&name.as_str())
+                    && !held.is_empty()
+                    && !t.in_test =>
+            {
+                // Method or free-function call while locks are held.
+                // Macros (`name!(...)`) have a `!` before the paren and
+                // don't land here.
+                let held_now: Vec<usize> = held.iter().map(|h| h.class).collect();
+                if is_punct_at_back(toks, i, '.') {
+                    // `recv.name(...)`: resolve the receiver ident.
+                    if let Some(recv) = receiver_ident(toks, f.body.start, i - 1) {
+                        if recv == "self" {
+                            if let Some(owner) = &f.owner {
+                                eff.calls.push((
+                                    CallKey::Method(owner.clone(), name.clone()),
+                                    t.line,
+                                    held_now,
+                                ));
+                            }
+                        } else if let Some((_, ty)) =
+                            RECEIVER_TYPES.iter().find(|(id, _)| *id == recv)
+                        {
+                            eff.calls.push((
+                                CallKey::Method(ty.to_string(), name.clone()),
+                                t.line,
+                                held_now,
+                            ));
+                        }
+                    }
+                } else if !is_punct_at_back(toks, i, ':') {
+                    eff.calls.push((CallKey::Free(f.file, name.clone()), t.line, held_now));
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    eff
+}
+
+fn ident_at(toks: &[Token], i: usize) -> Option<&str> {
+    toks.get(i).and_then(|t| t.ident())
+}
+
+fn is_punct_at(toks: &[Token], i: usize, c: char) -> bool {
+    toks.get(i).is_some_and(|t| t.is_punct(c))
+}
+
+fn is_punct_at_back(toks: &[Token], i: usize, c: char) -> bool {
+    i > 0 && toks[i - 1].is_punct(c)
+}
+
+/// Scan backwards from the `.` at `dot` for the receiver's field
+/// ident, skipping adapter-method chains like `.as_ref().expect(..)`.
+fn receiver_ident(toks: &[Token], lo: usize, dot: usize) -> Option<String> {
+    let mut i = dot;
+    while i > lo {
+        i -= 1;
+        match &toks[i].tok {
+            Tok::Punct(')') => {
+                // Walk back over the balanced group, then expect an
+                // adapter method name before it.
+                let mut d = 1i32;
+                while i > lo && d != 0 {
+                    i -= 1;
+                    match toks[i].tok {
+                        Tok::Punct(')') => d += 1,
+                        Tok::Punct('(') => d -= 1,
+                        _ => {}
+                    }
+                }
+                if i > lo {
+                    if let Some(name) = toks[i - 1].ident() {
+                        if ADAPTERS.contains(&name) {
+                            i -= 1; // consume the adapter name
+                            continue;
+                        }
+                        return Some(name.to_string());
+                    }
+                }
+                return None;
+            }
+            Tok::Punct('.') | Tok::Punct('?') => {}
+            Tok::Ident(s) => {
+                if ADAPTERS.contains(&s.as_str()) {
+                    continue;
+                }
+                return Some(s.clone());
+            }
+            _ => return None,
+        }
+    }
+    None
+}
+
+/// Find the `let` binding (if any) for the statement containing the
+/// acquisition at token `at`. Returns (guard name, is_temporary).
+fn guard_binding(toks: &[Token], lo: usize, at: usize) -> (Option<String>, bool) {
+    // Back up to the statement start.
+    let mut s = at;
+    while s > lo {
+        match toks[s - 1].tok {
+            Tok::Punct(';') | Tok::Punct('{') | Tok::Punct('}') | Tok::Punct(',') => break,
+            _ => s -= 1,
+        }
+    }
+    // Forward: a `let` before the first `=` names the guard.
+    let mut saw_let = false;
+    let mut last_ident: Option<String> = None;
+    for t in &toks[s..at] {
+        match &t.tok {
+            Tok::Ident(id) if id == "let" => saw_let = true,
+            Tok::Punct('=') => {
+                return if saw_let {
+                    (last_ident, false)
+                } else {
+                    (None, true)
+                };
+            }
+            Tok::Ident(id) if saw_let => {
+                if !matches!(id.as_str(), "mut" | "Ok" | "Some" | "Err" | "if" | "while") {
+                    last_ident = Some(id.clone());
+                }
+            }
+            _ => {}
+        }
+    }
+    (None, true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::lex;
+
+    fn run(fixtures: &[(&str, &str)]) -> Vec<Diagnostic> {
+        let files: Vec<(String, LexFile)> = fixtures
+            .iter()
+            .map(|(p, s)| (p.to_string(), lex(s)))
+            .collect();
+        check(&files)
+    }
+
+    #[test]
+    fn ranks_strictly_increase_and_match_runtime_table() {
+        for w in LOCK_CLASSES.windows(2) {
+            assert!(w[0].1 < w[1].1, "{} vs {}", w[0].0, w[1].0);
+        }
+        assert_eq!(LOCK_CLASSES[0].1, rank::BATCHER_QUEUES);
+        assert_eq!(LOCK_CLASSES[LOCK_CLASSES.len() - 1].1, rank::METRICS);
+    }
+
+    #[test]
+    fn blessed_order_passes() {
+        // plan (20) -> staging (30): the prefetcher's real pattern.
+        let d = run(&[(
+            "rust/src/coordinator/pipeline.rs",
+            r#"
+            impl Prefetcher {
+                fn tick(&self) {
+                    let mut plan = self.shared.plan.lock().unwrap();
+                    let mut inner = self.inner.lock().unwrap();
+                    inner.touch(&mut plan);
+                }
+            }
+            "#,
+        )]);
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn seeded_out_of_order_fires() {
+        // staging (30) then plan (20): must fire. The runtime twin of
+        // this fixture lives in util::sync tests.
+        let d = run(&[(
+            "rust/src/coordinator/pipeline.rs",
+            r#"
+            impl Prefetcher {
+                fn bad(&self) {
+                    let mut inner = self.inner.lock().unwrap();
+                    let mut plan = self.shared.plan.lock().unwrap();
+                    plan.touch(&mut inner);
+                }
+            }
+            "#,
+        )]);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].rule, RULE);
+        assert!(d[0].msg.contains("pipeline.plan"), "{}", d[0].msg);
+        assert!(d[0].msg.contains("pipeline.staging"), "{}", d[0].msg);
+        assert_eq!(d[0].line, 5);
+    }
+
+    #[test]
+    fn re_entrant_acquisition_fires() {
+        let d = run(&[(
+            "rust/src/coordinator/batcher.rs",
+            r#"
+            impl Batcher {
+                fn bad(&self) {
+                    let a = self.queues.lock().unwrap();
+                    let b = self.queues.lock().unwrap();
+                }
+            }
+            "#,
+        )]);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert!(d[0].msg.contains("re-entrant"), "{}", d[0].msg);
+    }
+
+    #[test]
+    fn guard_scope_and_drop_release() {
+        // Block scoping and explicit drop() both release the guard, so
+        // the later acquisition has nothing held against it.
+        let d = run(&[(
+            "rust/src/coordinator/pipeline.rs",
+            r#"
+            impl StagingArea {
+                fn scoped(&self) {
+                    {
+                        let mut inner = self.inner.lock().unwrap();
+                        inner.x += 1;
+                    }
+                    let mut plan = self.plan.lock().unwrap();
+                }
+                fn dropped(&self) {
+                    let mut inner = self.inner.lock().unwrap();
+                    drop(inner);
+                    let mut plan = self.plan.lock().unwrap();
+                }
+            }
+            "#,
+        )]);
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn statement_temporary_releases_at_semicolon() {
+        // A `.lock().unwrap().field` temporary dies at the `;` — no
+        // edge to the next acquisition.
+        let d = run(&[(
+            "rust/src/coordinator/metrics.rs",
+            r#"
+            impl Metrics {
+                fn bump(&self) {
+                    self.inner.lock().unwrap().hits += 1;
+                    let g = self.inner.lock().unwrap();
+                }
+            }
+            "#,
+        )]);
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn interprocedural_self_call_fires() {
+        // Holding staging, `self.refill()` locks plan: edge staging ->
+        // plan must be found through the call.
+        let d = run(&[(
+            "rust/src/coordinator/pipeline.rs",
+            r#"
+            impl StagingArea {
+                fn bad(&self) {
+                    let mut inner = self.inner.lock().unwrap();
+                    self.refill(&mut inner);
+                }
+                fn refill(&self, inner: &mut Inner) {
+                    let mut plan = self.plan.lock().unwrap();
+                }
+            }
+            "#,
+        )]);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert!(d[0].msg.contains("via"), "{}", d[0].msg);
+        assert_eq!(d[0].line, 5);
+    }
+
+    #[test]
+    fn cross_type_call_via_receiver_hint() {
+        // Holding the transport link state (rank 50), a call into
+        // StagingArea::admit — which locks staging (rank 30) — must be
+        // caught through the receiver-ident hint table.
+        let d = run(&[
+            (
+                "rust/src/coordinator/pipeline.rs",
+                r#"
+                impl StagingArea {
+                    fn admit(&self) {
+                        let g = self.inner.lock().unwrap();
+                    }
+                }
+                "#,
+            ),
+            (
+                "rust/src/coordinator/transport.rs",
+                r#"
+                fn deliver(staging: &StagingArea, state: &OrderedMutex<LinkState>) {
+                    let st = state.lock().unwrap();
+                    staging.admit();
+                }
+                "#,
+            ),
+        ]);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert!(
+            d[0].msg.contains("pipeline.staging") && d[0].msg.contains("transport.link"),
+            "{}",
+            d[0].msg
+        );
+    }
+
+    #[test]
+    fn adapter_chain_resolves_receiver() {
+        // pool.rs submit(): `self.tx.as_ref().expect("...").lock()`
+        // must classify as pool.sender, not fail as unresolvable.
+        let d = run(&[(
+            "rust/src/util/pool.rs",
+            r#"
+            impl ThreadPool {
+                fn submit(&self, job: Job) {
+                    self.tx.as_ref().expect("pool shut down").lock().unwrap().send(job).unwrap();
+                }
+            }
+            "#,
+        )]);
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn unranked_receiver_is_reported_in_scope_only() {
+        let bad = run(&[(
+            "rust/src/coordinator/pipeline.rs",
+            "fn f(m: &Mutex<u32>) { let g = mystery.lock().unwrap(); }",
+        )]);
+        assert_eq!(bad.len(), 1, "{bad:?}");
+        assert!(bad[0].msg.contains("mystery"), "{}", bad[0].msg);
+        // Same code outside the scoped files: silent.
+        let ok = run(&[(
+            "rust/src/compeft/format.rs",
+            "fn f(m: &Mutex<u32>) { let g = mystery.lock().unwrap(); }",
+        )]);
+        assert!(ok.is_empty(), "{ok:?}");
+    }
+
+    #[test]
+    fn test_regions_are_exempt() {
+        let d = run(&[(
+            "rust/src/coordinator/pipeline.rs",
+            r#"
+            #[cfg(test)]
+            mod tests {
+                fn helper(s: &StagingArea) {
+                    let mut inner = s.inner.lock().unwrap();
+                    let mut plan = s.plan.lock().unwrap();
+                }
+            }
+            "#,
+        )]);
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn cycle_detector_finds_cycles() {
+        let mut edges = std::collections::BTreeSet::new();
+        edges.insert((0usize, 1usize));
+        edges.insert((1, 2));
+        assert!(find_cycle(&edges).is_none());
+        edges.insert((2, 0));
+        let cyc = find_cycle(&edges).expect("cycle");
+        assert!(cyc.len() >= 3, "{cyc:?}");
+    }
+}

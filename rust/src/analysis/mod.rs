@@ -1,0 +1,302 @@
+//! `compeft-lint`: an in-repo, dependency-free static analysis pass
+//! enforcing this repo's determinism / panic-safety / lock-discipline
+//! contracts. Runs three ways: `compeft lint` (CLI, non-zero exit on
+//! violations), the tier-1 gate in `tests/lint.rs`, and a dedicated CI
+//! step.
+//!
+//! Rules (each motivated by a shipped bug — see the README section
+//! "Static analysis & determinism contract"):
+//!
+//! | rule id                   | where it lives        |
+//! |---------------------------|-----------------------|
+//! | `no-panic-in-parse`       | [`rules`]             |
+//! | `no-map-order`            | [`rules`]             |
+//! | `no-wall-clock`           | [`rules`]             |
+//! | `no-unchecked-wire-alloc` | [`rules`]             |
+//! | `lock-order`              | [`lockorder`]         |
+//!
+//! Escape hatch: `// compeft-lint: allow(rule-id) -- <reason>` on the
+//! offending line, or alone on the line above it. The reason is
+//! mandatory: a bare `allow` is itself reported
+//! (`allow-without-reason`), as is an `allow` naming an id that does
+//! not exist (`unknown-rule-id`) — so suppressions can't rot silently.
+
+pub mod lexer;
+pub mod lockorder;
+pub mod rules;
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// The allowable rule ids (what `allow(...)` may name).
+pub const KNOWN_RULES: &[&str] = &[
+    rules::NO_PANIC,
+    rules::NO_MAP_ORDER,
+    rules::NO_WALL_CLOCK,
+    lockorder::RULE,
+    rules::NO_WIRE_ALLOC,
+];
+
+/// Meta-rules emitted by the allow machinery itself (not allowable).
+pub const ALLOW_NO_REASON: &str = "allow-without-reason";
+pub const UNKNOWN_RULE: &str = "unknown-rule-id";
+
+/// One `file:line [rule-id] message` finding.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    pub file: String,
+    pub line: u32,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl Diagnostic {
+    pub fn new(file: &str, line: u32, rule: &'static str, msg: String) -> Diagnostic {
+        Diagnostic { file: file.to_string(), line, rule, msg }
+    }
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{} [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// Analyze in-memory sources (path, text). The path decides which
+/// rules and scoping tables apply, so fixtures exercise production
+/// configuration. Returns unsuppressed diagnostics, sorted by
+/// (file, line, rule).
+pub fn analyze_sources(files: &[(String, String)]) -> Vec<Diagnostic> {
+    let lexed: Vec<(String, lexer::LexFile)> = files
+        .iter()
+        .map(|(p, s)| (p.clone(), lexer::lex(s)))
+        .collect();
+    let mut raw: Vec<Diagnostic> = Vec::new();
+    for (path, lf) in &lexed {
+        raw.extend(rules::check_file(path, lf));
+    }
+    raw.extend(lockorder::check(&lexed));
+
+    let mut out: Vec<Diagnostic> = Vec::new();
+    for d in raw {
+        let allows = lexed
+            .iter()
+            .find(|(p, _)| *p == d.file)
+            .map(|(_, lf)| lf.allows.as_slice())
+            .unwrap_or(&[]);
+        let suppressed = allows.iter().any(|a| {
+            a.has_reason && a.covers(d.line) && a.rules.iter().any(|r| r == d.rule)
+        });
+        if !suppressed {
+            out.push(d);
+        }
+    }
+    // The allow machinery's own violations: reasonless or unknown-id
+    // directives are findings wherever they appear (test code too —
+    // a rotten suppression is a lie regardless of where it sits).
+    for (path, lf) in &lexed {
+        for a in &lf.allows {
+            if !a.has_reason {
+                out.push(Diagnostic::new(
+                    path,
+                    a.line,
+                    ALLOW_NO_REASON,
+                    "allow without a `-- <reason>` justification".to_string(),
+                ));
+            }
+            for r in &a.rules {
+                if !KNOWN_RULES.contains(&r.as_str()) {
+                    out.push(Diagnostic::new(
+                        path,
+                        a.line,
+                        UNKNOWN_RULE,
+                        format!("allow names unknown rule `{r}` (known: {})",
+                            KNOWN_RULES.join(", ")),
+                    ));
+                }
+            }
+        }
+    }
+    out.sort_by(|a, b| {
+        (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule))
+    });
+    out
+}
+
+/// Lint every `.rs` file under `<repo_root>/rust/src`, in sorted path
+/// order. `repo_root` is normally `env!("CARGO_MANIFEST_DIR")`.
+pub fn lint_tree(repo_root: &Path) -> anyhow::Result<Vec<Diagnostic>> {
+    let src = repo_root.join("rust").join("src");
+    let mut paths: Vec<PathBuf> = Vec::new();
+    collect_rs(&src, &mut paths)?;
+    paths.sort();
+    let mut files = Vec::with_capacity(paths.len());
+    for p in &paths {
+        let text = std::fs::read_to_string(p)
+            .map_err(|e| anyhow::anyhow!("read {}: {e}", p.display()))?;
+        // Report paths relative to the repo root, with `/` separators.
+        let rel = p
+            .strip_prefix(repo_root)
+            .unwrap_or(p)
+            .to_string_lossy()
+            .replace('\\', "/");
+        files.push((rel, text));
+    }
+    Ok(analyze_sources(&files))
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> anyhow::Result<()> {
+    let entries = std::fs::read_dir(dir)
+        .map_err(|e| anyhow::anyhow!("read_dir {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| anyhow::anyhow!("read_dir {}: {e}", dir.display()))?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(path: &str, src: &str) -> Vec<Diagnostic> {
+        analyze_sources(&[(path.to_string(), src.to_string())])
+    }
+
+    // Per-rule allow quadruples: the must-fire/must-pass halves live in
+    // the rule modules; here each rule id gets (a) allow-with-reason
+    // accepted and (b) bare allow rejected.
+
+    #[test]
+    fn allow_with_reason_suppresses_each_rule() {
+        let cases: &[(&str, &str, &str)] = &[
+            (
+                rules::NO_PANIC,
+                "rust/src/compeft/format.rs",
+                "fn f(b: &[u8]) -> u8 {\n    // compeft-lint: allow(no-panic-in-parse) -- caller validated len\n    b[0]\n}",
+            ),
+            (
+                rules::NO_MAP_ORDER,
+                "rust/src/coordinator/cache.rs",
+                "struct T {\n    // compeft-lint: allow(no-map-order) -- keyed access only\n    entries: HashMap<String, u32>,\n}",
+            ),
+            (
+                rules::NO_WALL_CLOCK,
+                "rust/src/workload/sim.rs",
+                "fn f() {\n    // compeft-lint: allow(no-wall-clock) -- offset cancels in us_of\n    let t = Instant::now();\n}",
+            ),
+            (
+                rules::NO_WIRE_ALLOC,
+                "rust/src/util/npz.rs",
+                "fn f(n: usize) -> Vec<u8> {\n    // compeft-lint: allow(no-unchecked-wire-alloc) -- n <= archive len by construction\n    Vec::with_capacity(n)\n}",
+            ),
+            (
+                lockorder::RULE,
+                "rust/src/coordinator/pipeline.rs",
+                "impl S {\n    fn f(&self) {\n        let i = self.inner.lock().unwrap();\n        // compeft-lint: allow(lock-order) -- fixture: documented exception\n        let p = self.plan.lock().unwrap();\n    }\n}",
+            ),
+        ];
+        for (rule, path, src) in cases {
+            let d = run(path, src);
+            assert!(d.is_empty(), "{rule}: {d:?}");
+            // Sanity: without the allow the same snippet fires.
+            let stripped: String = src
+                .lines()
+                .filter(|l| !l.contains("compeft-lint"))
+                .collect::<Vec<_>>()
+                .join("\n");
+            let d = run(path, &stripped);
+            assert!(d.iter().any(|d| d.rule == *rule), "{rule}: {d:?}");
+        }
+    }
+
+    #[test]
+    fn bare_allow_is_rejected_and_does_not_suppress() {
+        let d = run(
+            "rust/src/compeft/format.rs",
+            "fn f(b: &[u8]) -> u8 {\n    // compeft-lint: allow(no-panic-in-parse)\n    b[0]\n}",
+        );
+        let rules_seen: Vec<&str> = d.iter().map(|d| d.rule).collect();
+        assert!(rules_seen.contains(&ALLOW_NO_REASON), "{d:?}");
+        assert!(rules_seen.contains(&rules::NO_PANIC), "{d:?}");
+    }
+
+    #[test]
+    fn empty_reason_counts_as_bare() {
+        let d = run(
+            "rust/src/compeft/format.rs",
+            "fn f(b: &[u8]) -> u8 {\n    // compeft-lint: allow(no-panic-in-parse) --\n    b[0]\n}",
+        );
+        assert!(d.iter().any(|d| d.rule == ALLOW_NO_REASON), "{d:?}");
+    }
+
+    #[test]
+    fn unknown_rule_id_in_allow_is_reported() {
+        let d = run(
+            "rust/src/compeft/format.rs",
+            "// compeft-lint: allow(no-such-rule) -- oops\nfn f() {}",
+        );
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].rule, UNKNOWN_RULE);
+        assert!(d[0].msg.contains("no-such-rule"), "{}", d[0].msg);
+    }
+
+    #[test]
+    fn trailing_allow_covers_its_own_line() {
+        let d = run(
+            "rust/src/compeft/format.rs",
+            "fn f(b: &[u8]) -> u8 { b[0] } // compeft-lint: allow(no-panic-in-parse) -- len checked by caller",
+        );
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn own_line_allow_does_not_leak_past_next_line() {
+        let d = run(
+            "rust/src/compeft/format.rs",
+            "fn f(b: &[u8]) -> u8 {\n    // compeft-lint: allow(no-panic-in-parse) -- only covers next line\n    let a = b[0];\n    let c = b[1];\n    a + c\n}",
+        );
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].line, 4);
+    }
+
+    #[test]
+    fn allow_for_one_rule_does_not_suppress_another() {
+        let d = run(
+            "rust/src/util/npz.rs",
+            "fn f(n: usize) -> u8 {\n    // compeft-lint: allow(no-unchecked-wire-alloc) -- wrong rule\n    let b = vec![0u8; 4];\n    b[n]\n}",
+        );
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].rule, rules::NO_PANIC);
+    }
+
+    #[test]
+    fn multi_rule_allow_suppresses_both() {
+        let d = run(
+            "rust/src/util/npz.rs",
+            "fn f(b: &[u8], n: usize) -> Vec<u8> {\n    // compeft-lint: allow(no-panic-in-parse, no-unchecked-wire-alloc) -- n validated against b.len() by caller\n    { let _ = b[0]; Vec::with_capacity(n) }\n}",
+        );
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn diagnostics_format_as_file_line_rule() {
+        let d = Diagnostic::new("rust/src/a.rs", 7, rules::NO_PANIC, "msg".into());
+        assert_eq!(d.to_string(), "rust/src/a.rs:7 [no-panic-in-parse] msg");
+    }
+
+    #[test]
+    fn diagnostics_are_sorted_and_stable() {
+        let d = run(
+            "rust/src/util/npz.rs",
+            "fn f(b: &[u8]) -> u8 { b[1] + b[0] }\nfn g(b: &[u8]) -> u8 { b[0] }",
+        );
+        assert_eq!(d.len(), 3);
+        assert!(d.windows(2).all(|w| (w[0].line, w[0].rule) <= (w[1].line, w[1].rule)));
+    }
+}

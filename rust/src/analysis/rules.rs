@@ -1,0 +1,445 @@
+//! Per-file lint rules for `compeft-lint`.
+//!
+//! Four of the five rules live here (the cross-file `lock-order` pass
+//! is `analysis::lockorder`). Each is grounded in a shipped bug or a
+//! standing contract of this repo:
+//!
+//! - `no-panic-in-parse` — wire parsing must return `Err`, never
+//!   panic (PR 2: a `copy_from_slice` length panic in decode killed
+//!   the serving engine for all clients). Bans `.unwrap()`,
+//!   `.expect()`, `panic!`-family macros, and direct `[...]` indexing
+//!   in the wire-parse modules.
+//! - `no-map-order` — no `HashMap`/`HashSet` in non-test coordinator
+//!   or workload code without an order-insensitivity justification
+//!   (PR 4: `Batcher::pick` followed `HashMap` iteration order and
+//!   starved queues). Keyed on the type name: hash containers are
+//!   only admissible where every iteration over them is provably
+//!   order-insensitive, and that argument belongs next to the field.
+//! - `no-wall-clock` — `Instant::now`/`SystemTime::now` only in the
+//!   allowlisted wall-time modules, so the virtual-clock purity of
+//!   the workload/sim paths can't silently regress.
+//! - `no-unchecked-wire-alloc` — `with_capacity`/`vec![x; n]` in
+//!   parse modules must have a nearby bounds check (a `bail!`/
+//!   `ensure!`/`checked_mul`/... within the preceding lines) or an
+//!   annotation, so a hostile length field can't drive allocation.
+
+use super::lexer::{LexFile, Tok, Token};
+use super::Diagnostic;
+
+pub const NO_PANIC: &str = "no-panic-in-parse";
+pub const NO_MAP_ORDER: &str = "no-map-order";
+pub const NO_WALL_CLOCK: &str = "no-wall-clock";
+pub const NO_WIRE_ALLOC: &str = "no-unchecked-wire-alloc";
+
+/// Modules that parse wire/disk bytes: a malformed or hostile input
+/// must surface as `Err`, not a panic.
+const PARSE_FILES: &[&str] = &[
+    "compeft/format.rs",
+    "compeft/golomb.rs",
+    "compeft/bitmask.rs",
+    "compeft/payload.rs",
+    "coordinator/archive.rs",
+    "util/npz.rs",
+];
+
+/// Modules whose job is measuring or pacing real time.
+const WALL_CLOCK_FILES: &[&str] = &[
+    "coordinator/loader.rs",
+    "coordinator/server.rs",
+    "coordinator/transport.rs",
+    "util/bench.rs",
+    "main.rs",
+];
+
+const PANIC_MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+
+/// Idents whose presence in the preceding lines counts as a bounds
+/// check for `no-unchecked-wire-alloc`.
+const BOUNDS_EVIDENCE: &[&str] =
+    &["bail", "ensure", "checked_mul", "checked_add", "checked_sub", "min", "take"];
+
+/// Lines of lookback for the bounds-evidence scan.
+const EVIDENCE_WINDOW: u32 = 10;
+
+fn is_parse_file(path: &str) -> bool {
+    PARSE_FILES.iter().any(|f| path.ends_with(f))
+}
+
+fn is_map_order_scope(path: &str) -> bool {
+    path.contains("coordinator/") || path.contains("workload/")
+}
+
+fn is_wall_clock_file(path: &str) -> bool {
+    WALL_CLOCK_FILES.iter().any(|f| path.ends_with(f)) || path.contains("analysis/")
+}
+
+/// Run all per-file rules over one lexed file.
+pub fn check_file(path: &str, lexed: &LexFile) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    let toks = &lexed.tokens;
+    let in_use = use_statement_mask(toks);
+    let parse = is_parse_file(path);
+    let map_scope = is_map_order_scope(path);
+    let wall = !is_wall_clock_file(path);
+    for (i, t) in toks.iter().enumerate() {
+        if t.in_test {
+            continue;
+        }
+        match &t.tok {
+            Tok::Ident(id) => {
+                if parse {
+                    no_panic_ident(path, toks, i, id, &mut diags);
+                    no_wire_alloc_ident(path, toks, i, id, &mut diags);
+                }
+                if map_scope
+                    && !in_use[i]
+                    && (id == "HashMap" || id == "HashSet")
+                {
+                    diags.push(Diagnostic::new(
+                        path,
+                        t.line,
+                        NO_MAP_ORDER,
+                        format!(
+                            "`{id}` in coordinator/workload code: use `BTreeMap`/\
+                             sorted iteration, or annotate why every iteration \
+                             over it is order-insensitive"
+                        ),
+                    ));
+                }
+                if wall
+                    && (id == "Instant" || id == "SystemTime")
+                    && is_punct(toks, i + 1, ':')
+                    && is_punct(toks, i + 2, ':')
+                    && ident_at(toks, i + 3) == Some("now")
+                {
+                    diags.push(Diagnostic::new(
+                        path,
+                        t.line,
+                        NO_WALL_CLOCK,
+                        format!(
+                            "`{id}::now` outside the wall-time modules: sim/\
+                             workload paths must stay virtual-clock pure"
+                        ),
+                    ));
+                }
+            }
+            Tok::Punct('[') if parse && i > 0 => {
+                // Index expression: `expr[...]`. An opening bracket
+                // after a value (ident, `)`, `]`, or `?`) indexes; after
+                // `#` it's an attribute, after `!` a macro, after type
+                // or grouping punctuation it's an array/slice type or
+                // literal.
+                let indexes = match &toks[i - 1].tok {
+                    Tok::Ident(id) => !matches!(
+                        id.as_str(),
+                        "mut" | "ref" | "dyn" | "in" | "as" | "return" | "else"
+                    ),
+                    Tok::Punct(')') | Tok::Punct(']') | Tok::Punct('?') => true,
+                    _ => false,
+                };
+                if indexes {
+                    diags.push(Diagnostic::new(
+                        path,
+                        t.line,
+                        NO_PANIC,
+                        "direct `[...]` indexing in wire-parse code can panic on \
+                         malformed input; use `get`/`get_mut` or validate and \
+                         annotate"
+                            .to_string(),
+                    ));
+                }
+            }
+            _ => {}
+        }
+    }
+    diags
+}
+
+fn no_panic_ident(
+    path: &str,
+    toks: &[Token],
+    i: usize,
+    id: &str,
+    diags: &mut Vec<Diagnostic>,
+) {
+    if (id == "unwrap" || id == "expect")
+        && i > 0
+        && toks[i - 1].is_punct('.')
+        && is_punct(toks, i + 1, '(')
+    {
+        diags.push(Diagnostic::new(
+            path,
+            toks[i].line,
+            NO_PANIC,
+            format!("`.{id}()` in wire-parse code: return `Err` instead"),
+        ));
+    }
+    if PANIC_MACROS.contains(&id) && is_punct(toks, i + 1, '!') {
+        diags.push(Diagnostic::new(
+            path,
+            toks[i].line,
+            NO_PANIC,
+            format!("`{id}!` in wire-parse code: return `Err` instead"),
+        ));
+    }
+}
+
+fn no_wire_alloc_ident(
+    path: &str,
+    toks: &[Token],
+    i: usize,
+    id: &str,
+    diags: &mut Vec<Diagnostic>,
+) {
+    let t = &toks[i];
+    if id == "with_capacity" && is_punct(toks, i + 1, '(') {
+        // `with_capacity(<literal>)` is fine; anything computed needs
+        // nearby evidence of a bounds check.
+        let const_arg = matches!(toks.get(i + 2).map(|t| &t.tok), Some(Tok::Num))
+            && is_punct(toks, i + 3, ')');
+        if !const_arg && !has_bounds_evidence(toks, t.line) {
+            diags.push(Diagnostic::new(
+                path,
+                t.line,
+                NO_WIRE_ALLOC,
+                "`with_capacity` with a computed size in wire-parse code: \
+                 bound it (bail!/ensure!/checked_mul/...) within the \
+                 preceding lines, or annotate"
+                    .to_string(),
+            ));
+        }
+    }
+    if id == "vec" && is_punct(toks, i + 1, '!') && is_punct(toks, i + 2, '[') {
+        // `vec![elem; n]`: find the `;` at bracket depth 1.
+        let mut depth = 0i32;
+        let mut j = i + 2;
+        let mut semi: Option<usize> = None;
+        while j < toks.len() {
+            match toks[j].tok {
+                Tok::Punct('[') => depth += 1,
+                Tok::Punct(']') => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                Tok::Punct(';') if depth == 1 => semi = Some(j),
+                _ => {}
+            }
+            j += 1;
+        }
+        if let Some(s) = semi {
+            let const_len = matches!(toks.get(s + 1).map(|t| &t.tok), Some(Tok::Num))
+                && is_punct(toks, s + 2, ']');
+            if !const_len && !has_bounds_evidence(toks, t.line) {
+                diags.push(Diagnostic::new(
+                    path,
+                    t.line,
+                    NO_WIRE_ALLOC,
+                    "`vec![_; n]` with a computed length in wire-parse code: \
+                     bound it (bail!/ensure!/checked_mul/...) within the \
+                     preceding lines, or annotate"
+                        .to_string(),
+                ));
+            }
+        }
+    }
+}
+
+/// True when a bounds-check ident appears within the preceding
+/// [`EVIDENCE_WINDOW`] lines (inclusive of the allocation line).
+fn has_bounds_evidence(toks: &[Token], line: u32) -> bool {
+    let lo = line.saturating_sub(EVIDENCE_WINDOW);
+    toks.iter().any(|t| {
+        t.line >= lo
+            && t.line <= line
+            && t.ident().is_some_and(|id| BOUNDS_EVIDENCE.contains(&id))
+    })
+}
+
+/// `mask[i]` is true for tokens inside a `use ...;` item.
+fn use_statement_mask(toks: &[Token]) -> Vec<bool> {
+    let mut mask = vec![false; toks.len()];
+    let mut i = 0;
+    while i < toks.len() {
+        let is_use = toks[i].ident() == Some("use")
+            && (i == 0 || !toks[i - 1].is_punct('.') && !toks[i - 1].is_punct(':'));
+        if is_use {
+            while i < toks.len() && !toks[i].is_punct(';') {
+                mask[i] = true;
+                i += 1;
+            }
+        }
+        i += 1;
+    }
+    mask
+}
+
+fn ident_at(toks: &[Token], i: usize) -> Option<&str> {
+    toks.get(i).and_then(|t| t.ident())
+}
+
+fn is_punct(toks: &[Token], i: usize, c: char) -> bool {
+    toks.get(i).is_some_and(|t| t.is_punct(c))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::lex;
+
+    fn run(path: &str, src: &str) -> Vec<Diagnostic> {
+        check_file(path, &lex(src))
+    }
+
+    fn rules(d: &[Diagnostic]) -> Vec<&str> {
+        d.iter().map(|d| d.rule).collect()
+    }
+
+    #[test]
+    fn no_panic_fires_on_unwrap_expect_and_macros() {
+        let d = run(
+            "rust/src/compeft/format.rs",
+            r#"
+            fn parse(b: &[u8]) -> Result<u16> {
+                let x = b.first().unwrap();
+                let y = b.get(1).expect("hdr");
+                if *x == 0 { panic!("zero"); }
+                unreachable!("tag")
+            }
+            "#,
+        );
+        assert_eq!(rules(&d), vec![NO_PANIC; 4], "{d:?}");
+        assert_eq!(d[0].line, 3);
+    }
+
+    #[test]
+    fn no_panic_fires_on_direct_indexing() {
+        let d = run(
+            "rust/src/util/npz.rs",
+            "fn f(b: &[u8]) -> u8 { let w = b[0]; let s = &b[1..3]; w + s[0] }",
+        );
+        assert_eq!(rules(&d), vec![NO_PANIC; 3], "{d:?}");
+    }
+
+    #[test]
+    fn no_panic_passes_on_checked_access_and_types() {
+        // `get`-based access, array types, attributes, macro brackets,
+        // and array literals must not fire.
+        let d = run(
+            "rust/src/compeft/golomb.rs",
+            r#"
+            #[derive(Clone)]
+            struct H { buf: [u8; 4] }
+            fn f(b: &[u8]) -> Option<u8> {
+                let v: Vec<u8> = vec![1, 2];
+                let _arr = [0u8, 1];
+                b.get(0).copied()
+            }
+            "#,
+        );
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn no_panic_ignores_test_regions_and_other_files() {
+        let in_test = run(
+            "rust/src/compeft/format.rs",
+            r#"
+            #[cfg(test)]
+            mod tests {
+                fn t(b: &[u8]) { let _ = b[0]; b.first().unwrap(); }
+            }
+            "#,
+        );
+        assert!(in_test.is_empty(), "{in_test:?}");
+        let other = run("rust/src/coordinator/batcher.rs", "fn f(b: &[u8]) { b[0]; }");
+        assert!(other.iter().all(|d| d.rule != NO_PANIC), "{other:?}");
+    }
+
+    #[test]
+    fn map_order_fires_in_scope_and_skips_use_lines() {
+        let d = run(
+            "rust/src/coordinator/cache.rs",
+            r#"
+            use std::collections::HashMap;
+            struct T { entries: HashMap<String, u32> }
+            "#,
+        );
+        assert_eq!(rules(&d), vec![NO_MAP_ORDER], "{d:?}");
+        assert_eq!(d[0].line, 3);
+    }
+
+    #[test]
+    fn map_order_passes_btreemap_and_out_of_scope() {
+        let ok = run(
+            "rust/src/coordinator/registry.rs",
+            "struct R { by_id: BTreeMap<String, u32> }",
+        );
+        assert!(ok.is_empty(), "{ok:?}");
+        let other = run(
+            "rust/src/runtime/bundle.rs",
+            "struct C { exes: HashMap<u32, u32> }",
+        );
+        assert!(other.is_empty(), "{other:?}");
+    }
+
+    #[test]
+    fn wall_clock_fires_outside_allowlist_only() {
+        let d = run(
+            "rust/src/workload/sim.rs",
+            "fn f() { let t = Instant::now(); }",
+        );
+        assert_eq!(rules(&d), vec![NO_WALL_CLOCK], "{d:?}");
+        let fn_ref = run(
+            "rust/src/workload/sim.rs",
+            "fn f(w: &mut Option<Instant>) { w.get_or_insert_with(Instant::now); }",
+        );
+        assert_eq!(rules(&fn_ref), vec![NO_WALL_CLOCK], "{fn_ref:?}");
+        let ok = run(
+            "rust/src/coordinator/loader.rs",
+            "fn f() { let t = Instant::now(); let s = SystemTime::now(); }",
+        );
+        assert!(ok.is_empty(), "{ok:?}");
+        // Bare type mentions (params, fields) are fine anywhere.
+        let ty = run(
+            "rust/src/coordinator/batcher.rs",
+            "struct P { enqueued: Instant } fn f(now: Instant) {}",
+        );
+        assert!(ty.iter().all(|d| d.rule != NO_WALL_CLOCK), "{ty:?}");
+    }
+
+    #[test]
+    fn wire_alloc_fires_without_evidence_and_passes_with() {
+        let bad = run(
+            "rust/src/coordinator/archive.rs",
+            "fn f(n: usize) -> Vec<u8> { Vec::with_capacity(n) }",
+        );
+        assert_eq!(rules(&bad), vec![NO_WIRE_ALLOC], "{bad:?}");
+        let good = run(
+            "rust/src/coordinator/archive.rs",
+            r#"
+            fn f(n: usize) -> Result<Vec<u8>> {
+                if n > MAX { bail!("too big"); }
+                Ok(Vec::with_capacity(n))
+            }
+            "#,
+        );
+        assert!(good.is_empty(), "{good:?}");
+    }
+
+    #[test]
+    fn wire_alloc_vec_macro_and_const_sizes() {
+        let bad = run(
+            "rust/src/util/npz.rs",
+            "fn f(n: usize) -> Vec<u8> { vec![0u8; n] }",
+        );
+        assert_eq!(rules(&bad), vec![NO_WIRE_ALLOC], "{bad:?}");
+        // Constant sizes and list-form vec! are fine.
+        let good = run(
+            "rust/src/util/npz.rs",
+            "fn f() -> Vec<u8> { let a = Vec::with_capacity(64); vec![0u8; 16]; vec![1, 2, 3] }",
+        );
+        assert!(good.is_empty(), "{good:?}");
+    }
+}

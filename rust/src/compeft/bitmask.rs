@@ -32,12 +32,16 @@ fn words(len: usize) -> usize {
 impl MaskPair {
     pub fn from_ternary(t: &TernaryVector) -> MaskPair {
         let w = words(t.len);
+        // compeft-lint: allow(no-unchecked-wire-alloc) -- packs an in-memory vector, len is not wire data
         let mut plus = vec![0u64; w];
+        // compeft-lint: allow(no-unchecked-wire-alloc) -- packs an in-memory vector, len is not wire data
         let mut minus = vec![0u64; w];
         for &i in &t.plus {
+            // compeft-lint: allow(no-panic-in-parse) -- TernaryVector invariant: index < len <= 64*words
             plus[i as usize / 64] |= 1u64 << (i % 64);
         }
         for &i in &t.minus {
+            // compeft-lint: allow(no-panic-in-parse) -- TernaryVector invariant: index < len <= 64*words
             minus[i as usize / 64] |= 1u64 << (i % 64);
         }
         MaskPair { len: t.len, scale: t.scale, plus, minus }
@@ -62,15 +66,19 @@ impl MaskPair {
             let pack = |sorted: &[u32]| {
                 let start = sorted.partition_point(|&i| (i as u64) < lo);
                 let end = sorted.partition_point(|&i| (i as u64) < hi_excl);
+                // compeft-lint: allow(no-unchecked-wire-alloc) -- chunk of an in-memory vector
                 let mut words_block = vec![0u64; we - ws];
-                for &i in &sorted[start..end] {
+                for &i in sorted.get(start..end).unwrap_or_default() {
+                    // compeft-lint: allow(no-panic-in-parse) -- partition_point bounds the chunk's indices
                     words_block[i as usize / 64 - ws] |= 1u64 << (i % 64);
                 }
                 words_block
             };
             (pack(&t.plus), pack(&t.minus))
         });
+        // compeft-lint: allow(no-unchecked-wire-alloc) -- packs an in-memory vector, len is not wire data
         let mut plus = Vec::with_capacity(w);
+        // compeft-lint: allow(no-unchecked-wire-alloc) -- packs an in-memory vector, len is not wire data
         let mut minus = Vec::with_capacity(w);
         for (p, m) in blocks {
             plus.extend_from_slice(&p);
@@ -84,7 +92,7 @@ impl MaskPair {
     /// `to_ternary_par` run, so their index order is identical by
     /// construction.
     fn unpack_words(words: &[u64], ws: usize, we: usize, out: &mut Vec<u32>) {
-        for (w, &word) in words[ws..we].iter().enumerate() {
+        for (w, &word) in words.get(ws..we).unwrap_or_default().iter().enumerate() {
             let mut bits = word;
             while bits != 0 {
                 let b = bits.trailing_zeros();
@@ -172,11 +180,13 @@ impl MaskPair {
         }
         let mut agree = 0i64;
         let mut oppose = 0i64;
-        for i in 0..self.plus.len() {
-            agree += (self.plus[i] & other.plus[i]).count_ones() as i64;
-            agree += (self.minus[i] & other.minus[i]).count_ones() as i64;
-            oppose += (self.plus[i] & other.minus[i]).count_ones() as i64;
-            oppose += (self.minus[i] & other.plus[i]).count_ones() as i64;
+        let a_words = self.plus.iter().zip(&self.minus);
+        let b_words = other.plus.iter().zip(&other.minus);
+        for ((&ap, &am), (&bp, &bm)) in a_words.zip(b_words) {
+            agree += (ap & bp).count_ones() as i64;
+            agree += (am & bm).count_ones() as i64;
+            oppose += (ap & bm).count_ones() as i64;
+            oppose += (am & bp).count_ones() as i64;
         }
         Ok((agree - oppose) as f64 * self.scale as f64 * other.scale as f64)
     }
@@ -200,12 +210,14 @@ impl MaskPair {
             let mut bits = p;
             while bits != 0 {
                 let b = bits.trailing_zeros() as usize;
+                // compeft-lint: allow(no-panic-in-parse) -- mask invariant: set bits < len == out.len()
                 out[w * 64 + b] += s;
                 bits &= bits - 1;
             }
             let mut bits = m;
             while bits != 0 {
                 let b = bits.trailing_zeros() as usize;
+                // compeft-lint: allow(no-panic-in-parse) -- mask invariant: set bits < len == out.len()
                 out[w * 64 + b] -= s;
                 bits &= bits - 1;
             }
@@ -214,6 +226,7 @@ impl MaskPair {
 
     /// Serialize: len u64 | scale f32 | plus words | minus words (LE).
     pub fn to_bytes(&self) -> Vec<u8> {
+        // compeft-lint: allow(no-unchecked-wire-alloc) -- write path: sized from in-memory masks
         let mut out = Vec::with_capacity(12 + 16 * self.plus.len());
         out.extend_from_slice(&(self.len as u64).to_le_bytes());
         out.extend_from_slice(&self.scale.to_le_bytes());
@@ -230,8 +243,8 @@ impl MaskPair {
         if bytes.len() < 12 {
             bail!("mask pair too short");
         }
-        let len = u64::from_le_bytes(bytes[0..8].try_into()?) as usize;
-        let scale = f32::from_le_bytes(bytes[8..12].try_into()?);
+        let len = u64::from_le_bytes(bytes.get(0..8).unwrap_or_default().try_into()?) as usize;
+        let scale = f32::from_le_bytes(bytes.get(8..12).unwrap_or_default().try_into()?);
         let w = words(len);
         // Checked arithmetic: a corrupt `len` near usize::MAX must fail
         // here, not overflow the size computation (or allocation-bomb
@@ -246,13 +259,13 @@ impl MaskPair {
         let mut plus = Vec::with_capacity(w);
         let mut minus = Vec::with_capacity(w);
         for i in 0..w {
-            plus.push(u64::from_le_bytes(bytes[12 + 8 * i..20 + 8 * i].try_into()?));
+            let raw = bytes.get(12 + 8 * i..20 + 8 * i).unwrap_or_default();
+            plus.push(u64::from_le_bytes(raw.try_into()?));
         }
         let off = 12 + 8 * w;
         for i in 0..w {
-            minus.push(u64::from_le_bytes(
-                bytes[off + 8 * i..off + 8 + 8 * i].try_into()?,
-            ));
+            let raw = bytes.get(off + 8 * i..off + 8 + 8 * i).unwrap_or_default();
+            minus.push(u64::from_le_bytes(raw.try_into()?));
         }
         let mp = MaskPair { len, scale, plus, minus };
         // Sanity: a bit set in both masks is a corrupt stream.

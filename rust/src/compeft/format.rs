@@ -50,7 +50,7 @@ use crate::compeft::compress::{CompressedParamSet, Granularity};
 use crate::compeft::golomb::{self, FrameTable};
 use crate::compeft::ternary::TernaryVector;
 use crate::util::pool::ThreadPool;
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
 use std::io::Write as _;
 use std::path::Path;
@@ -99,16 +99,12 @@ impl Encoding {
 
 fn crc32_table() -> [u32; 256] {
     let mut table = [0u32; 256];
-    let mut i = 0;
-    while i < 256 {
+    for (i, slot) in table.iter_mut().enumerate() {
         let mut c = i as u32;
-        let mut j = 0;
-        while j < 8 {
+        for _ in 0..8 {
             c = if c & 1 != 0 { 0xEDB88320 ^ (c >> 1) } else { c >> 1 };
-            j += 1;
         }
-        table[i] = c;
-        i += 1;
+        *slot = c;
     }
     table
 }
@@ -118,6 +114,7 @@ pub fn crc32(data: &[u8]) -> u32 {
     let table = crc32_table();
     let mut c = 0xFFFFFFFFu32;
     for &b in data {
+        // compeft-lint: allow(no-panic-in-parse) -- index masked to 0..=255, the table size
         c = table[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
     }
     c ^ 0xFFFFFFFF
@@ -132,28 +129,24 @@ fn put_str(out: &mut Vec<u8>, s: &str) {
 
 fn get_str(bytes: &[u8], pos: &mut usize) -> Result<String> {
     let n = get_u32(bytes, pos)? as usize;
-    if *pos + n > bytes.len() {
-        bail!("truncated string");
-    }
-    let s = std::str::from_utf8(&bytes[*pos..*pos + n])?.to_string();
+    let raw = bytes
+        .get(*pos..pos.checked_add(n).ok_or_else(|| anyhow!("truncated string"))?)
+        .ok_or_else(|| anyhow!("truncated string"))?;
+    let s = std::str::from_utf8(raw)?.to_string();
     *pos += n;
     Ok(s)
 }
 
 fn get_u32(bytes: &[u8], pos: &mut usize) -> Result<u32> {
-    if *pos + 4 > bytes.len() {
-        bail!("truncated u32");
-    }
-    let v = u32::from_le_bytes(bytes[*pos..*pos + 4].try_into()?);
+    let raw = bytes.get(*pos..*pos + 4).ok_or_else(|| anyhow!("truncated u32"))?;
+    let v = u32::from_le_bytes(raw.try_into()?);
     *pos += 4;
     Ok(v)
 }
 
 fn get_u64(bytes: &[u8], pos: &mut usize) -> Result<u64> {
-    if *pos + 8 > bytes.len() {
-        bail!("truncated u64");
-    }
-    let v = u64::from_le_bytes(bytes[*pos..*pos + 8].try_into()?);
+    let raw = bytes.get(*pos..*pos + 8).ok_or_else(|| anyhow!("truncated u64"))?;
+    let v = u64::from_le_bytes(raw.try_into()?);
     *pos += 8;
     Ok(v)
 }
@@ -215,18 +208,20 @@ fn assemble(
     for (i, (name, payload)) in c.parts.keys().zip(payloads).enumerate() {
         put_str(&mut body, name);
         if version >= 2 {
-            let ft = &frames[i];
-            body.extend_from_slice(&ft.chunk_nnz.to_le_bytes());
-            body.extend_from_slice(&(ft.frames.len() as u32).to_le_bytes());
-            for &(off, prev) in &ft.frames {
-                body.extend_from_slice(&off.to_le_bytes());
-                body.extend_from_slice(&prev.to_le_bytes());
+            if let Some(ft) = frames.get(i) {
+                body.extend_from_slice(&ft.chunk_nnz.to_le_bytes());
+                body.extend_from_slice(&(ft.frames.len() as u32).to_le_bytes());
+                for &(off, prev) in &ft.frames {
+                    body.extend_from_slice(&off.to_le_bytes());
+                    body.extend_from_slice(&prev.to_le_bytes());
+                }
             }
         }
         body.extend_from_slice(&(payload.len() as u64).to_le_bytes());
         body.extend_from_slice(payload);
     }
 
+    // compeft-lint: allow(no-unchecked-wire-alloc) -- write path: sized from the in-memory body
     let mut out = Vec::with_capacity(body.len() + 16);
     out.extend_from_slice(MAGIC);
     out.extend_from_slice(&version.to_le_bytes());
@@ -283,8 +278,7 @@ pub fn to_bytes_par(
     const BITMASK_CHUNK_WORDS: usize = 1 << 13;
 
     let terns: Vec<&TernaryVector> = c.parts.values().collect();
-    let encoded: Vec<(Vec<u8>, FrameTable)> = if terns.len() == 1 {
-        let tern = terns[0];
+    let encoded: Vec<(Vec<u8>, FrameTable)> = if let [tern] = terns.as_slice() {
         let payload = match enc {
             Encoding::Golomb => golomb::encode_par(tern, pool, GOLOMB_CHUNK_NNZ),
             Encoding::Bitmask => {
@@ -297,12 +291,7 @@ pub fn to_bytes_par(
             (encode_payload(tern, enc), part_frames(tern, enc))
         })
     };
-    let mut payloads = Vec::with_capacity(encoded.len());
-    let mut frames = Vec::with_capacity(encoded.len());
-    for (p, f) in encoded {
-        payloads.push(p);
-        frames.push(f);
-    }
+    let (payloads, frames): (Vec<_>, Vec<_>) = encoded.into_iter().unzip();
     assemble(c, enc, &payloads, VERSION, &frames)
 }
 
@@ -331,25 +320,33 @@ fn from_bytes_impl(
     bytes: &[u8],
     pool: Option<&ThreadPool>,
 ) -> Result<(CompressedParamSet, Encoding)> {
-    if bytes.len() < 14 || &bytes[..4] != MAGIC {
+    if bytes.len() < 14 || bytes.get(..4) != Some(MAGIC.as_slice()) {
         bail!("not a .cpeft file");
     }
-    let version = u16::from_le_bytes(bytes[4..6].try_into()?);
+    // Past the length check every fixed header offset exists; `byte`
+    // keeps the reads panic-free regardless.
+    let byte = |i: usize| bytes.get(i).copied().unwrap_or(0);
+    let version = u16::from_le_bytes([byte(4), byte(5)]);
     if version != VERSION_V1 && version != VERSION {
         bail!("unsupported .cpeft version {version}");
     }
-    let granularity = match bytes[8] {
+    let granularity = match byte(8) {
         0 => Granularity::Global,
         1 => Granularity::PerTensor,
         g => bail!("unknown granularity {g}"),
     };
-    let enc = Encoding::from_tag(bytes[9])?;
+    let enc = Encoding::from_tag(byte(9))?;
 
-    let body = &bytes[10..bytes.len() - 4];
-    let stored_crc = u32::from_le_bytes(bytes[bytes.len() - 4..].try_into()?);
+    let body = bytes.get(10..bytes.len() - 4).unwrap_or_default();
+    let stored_crc = u32::from_le_bytes([
+        byte(bytes.len() - 4),
+        byte(bytes.len() - 3),
+        byte(bytes.len() - 2),
+        byte(bytes.len() - 1),
+    ]);
     // v2 CRCs cover the header as well; v1 only the body (legacy).
     let covered: &[u8] =
-        if version >= 2 { &bytes[..bytes.len() - 4] } else { body };
+        if version >= 2 { bytes.get(..bytes.len() - 4).unwrap_or_default() } else { body };
     let actual = crc32(covered);
     if stored_crc != actual {
         bail!("crc mismatch: stored {stored_crc:#x}, computed {actual:#x}");
@@ -407,7 +404,7 @@ fn from_bytes_impl(
         if plen > body.len() - pos {
             bail!("truncated payload for part {name:?}");
         }
-        let payload = &body[pos..pos + plen];
+        let payload = body.get(pos..pos + plen).unwrap_or_default();
         pos += plen;
         raw.push((name, frames, payload));
     }
@@ -426,10 +423,11 @@ fn from_bytes_impl(
             Encoding::Bitmask => Ok(MaskPair::from_bytes(payload)?.to_ternary()),
         }
     };
-    let decoded: Vec<Result<TernaryVector>> = match pool {
-        None => raw.iter().map(|(_, _, payload)| serial_decode(payload)).collect(),
-        Some(pool) if raw.len() == 1 => {
-            let (_, frames, payload) = &raw[0];
+    let decoded: Vec<Result<TernaryVector>> = match (pool, raw.as_slice()) {
+        (None, _) => {
+            raw.iter().map(|(_, _, payload)| serial_decode(payload)).collect()
+        }
+        (Some(pool), [(_, frames, payload)]) => {
             vec![match (enc, frames) {
                 (Encoding::Golomb, Some(ft)) => golomb::decode_par(payload, ft, pool),
                 (Encoding::Golomb, None) => golomb::decode(payload),
@@ -443,7 +441,7 @@ fn from_bytes_impl(
                 }
             }]
         }
-        Some(pool) => {
+        (Some(pool), _) => {
             let payloads: Vec<&[u8]> = raw.iter().map(|(_, _, p)| *p).collect();
             pool.scoped_map(payloads, &serial_decode)
         }
@@ -487,8 +485,11 @@ fn from_bytes_impl(
 /// 10-byte header (and its version field decides the CRC coverage).
 pub fn reassemble_body(original: &[u8], body: Vec<u8>) -> Vec<u8> {
     assert!(original.len() >= 10, "need a full header to reassemble");
-    let version = u16::from_le_bytes([original[4], original[5]]);
-    let mut out = original[..10].to_vec();
+    let mut out = original.get(..10).unwrap_or_default().to_vec();
+    let version = u16::from_le_bytes([
+        out.get(4).copied().unwrap_or(0),
+        out.get(5).copied().unwrap_or(0),
+    ]);
     out.extend_from_slice(&body);
     let crc = if version >= 2 { crc32(&out) } else { crc32(&body) };
     out.extend_from_slice(&crc.to_le_bytes());
@@ -503,11 +504,11 @@ pub fn reassemble_body(original: &[u8], body: Vec<u8>) -> Vec<u8> {
 /// and the integration corruption sweep assert.
 pub fn truncation_sweep(bytes: &[u8]) -> Vec<Vec<u8>> {
     assert!(bytes.len() > 14, "not a plausible container");
-    let body = &bytes[10..bytes.len() - 4];
+    let body = bytes.get(10..bytes.len() - 4).unwrap_or_default();
     [1usize, 8, 40, body.len() / 2, body.len().saturating_sub(5), body.len() - 1]
         .into_iter()
         .filter(|&keep| keep < body.len())
-        .map(|keep| reassemble_body(bytes, body[..keep].to_vec()))
+        .map(|keep| reassemble_body(bytes, body.get(..keep).unwrap_or_default().to_vec()))
         .collect()
 }
 

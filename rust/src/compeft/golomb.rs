@@ -94,6 +94,7 @@ impl FrameTable {
 pub fn frame_table(t: &TernaryVector, chunk_nnz: usize) -> FrameTable {
     let chunk_nnz = chunk_nnz.clamp(1, u32::MAX as usize);
     let b = stream_rice_parameter(t) as u64;
+    // compeft-lint: allow(no-unchecked-wire-alloc) -- encode path: sized from the in-memory vector
     let mut frames = Vec::with_capacity(t.nnz().div_ceil(chunk_nnz));
     let mut bits = HEADER_BITS;
     let mut prev: i64 = -1;
@@ -175,8 +176,12 @@ pub fn encode_par(t: &TernaryVector, pool: &ThreadPool, chunk_nnz: usize) -> Vec
     let ranges = chunk_ranges(merged.len(), chunk_nnz);
     let pieces: Vec<BitWriter> = pool.scoped_map(ranges, |(s, e)| {
         let mut piece = BitWriter::new();
-        let prev: i64 = if s == 0 { -1 } else { merged[s - 1].0 as i64 };
-        encode_entries(&mut piece, merged[s..e].iter().copied(), prev, b);
+        // `chunk_ranges` yields in-bounds, contiguous ranges; `get`
+        // keeps the closure panic-free regardless.
+        let prev: i64 =
+            if s == 0 { -1 } else { merged.get(s - 1).map_or(-1, |&(i, _)| i as i64) };
+        let run = merged.get(s..e).unwrap_or_default();
+        encode_entries(&mut piece, run.iter().copied(), prev, b);
         piece
     });
     for piece in &pieces {
@@ -255,7 +260,9 @@ fn decode_entries(
 pub fn decode(bytes: &[u8]) -> Result<TernaryVector> {
     let mut r = BitReader::new(bytes);
     let h = parse_header(&mut r, bytes.len())?;
+    // compeft-lint: allow(no-unchecked-wire-alloc) -- nnz plausibility-bounded in parse_header
     let mut plus = Vec::with_capacity(h.nnz / 2 + 1);
+    // compeft-lint: allow(no-unchecked-wire-alloc) -- nnz plausibility-bounded in parse_header
     let mut minus = Vec::with_capacity(h.nnz / 2 + 1);
     decode_entries(&mut r, h.nnz, -1, h.b, h.len, &mut plus, &mut minus)?;
     Ok(TernaryVector { len: h.len, scale: h.scale, plus, minus })
@@ -324,13 +331,17 @@ pub fn decode_par(
             Ok((plus, minus, last))
         });
 
+    // compeft-lint: allow(no-unchecked-wire-alloc) -- nnz plausibility-bounded in parse_header
     let mut plus = Vec::with_capacity(h.nnz / 2 + 1);
+    // compeft-lint: allow(no-unchecked-wire-alloc) -- nnz plausibility-bounded in parse_header
     let mut minus = Vec::with_capacity(h.nnz / 2 + 1);
     let mut prev_last: i64 = -1;
     for (f, piece) in pieces.into_iter().enumerate() {
         let (p, m, last) = piece.with_context(|| format!("frame {f}"))?;
-        let declared: i64 =
-            if table.frames[f].1 == NO_PREV { -1 } else { table.frames[f].1 as i64 };
+        let declared: i64 = table
+            .frames
+            .get(f)
+            .map_or(-1, |&(_, d)| if d == NO_PREV { -1 } else { d as i64 });
         if declared != prev_last {
             bail!(
                 "frame {f}: declared prev index {declared} does not continue the \

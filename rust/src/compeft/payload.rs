@@ -139,6 +139,7 @@ impl Payload {
     /// The viewed bytes. (Also available through `Deref`, so a
     /// `&Payload` coerces to `&[u8]` wherever one is expected.)
     pub fn as_slice(&self) -> &[u8] {
+        // compeft-lint: allow(no-panic-in-parse) -- range validated once at view construction
         &self.backing.bytes()[self.start..self.start + self.len]
     }
 }

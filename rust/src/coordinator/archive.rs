@@ -40,7 +40,7 @@ use crate::compeft::format::crc32;
 use crate::compeft::payload::{Payload, PayloadBacking};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::registry::Registry;
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::Arc;
@@ -115,6 +115,7 @@ impl ArchiveBuilder {
             index_len += 4 + id.len() + 8 + 8 + 4;
         }
         let mut cursor = index_len + 4; // past index_crc
+        // compeft-lint: allow(no-unchecked-wire-alloc) -- write path: sized from in-memory members
         let mut offsets = Vec::with_capacity(self.members.len());
         for bytes in self.members.values() {
             let off = cursor.next_multiple_of(MEMBER_ALIGN);
@@ -123,6 +124,7 @@ impl ArchiveBuilder {
         }
         let total = cursor;
 
+        // compeft-lint: allow(no-unchecked-wire-alloc) -- write path: sized from in-memory members
         let mut out = Vec::with_capacity(total);
         out.extend_from_slice(ARCHIVE_MAGIC);
         out.extend_from_slice(&ARCHIVE_VERSION.to_le_bytes());
@@ -160,7 +162,7 @@ impl ArchiveBuilder {
 pub fn build_from_registry(reg: &Registry, out: &Path) -> Result<(usize, u64)> {
     let mut b = ArchiveBuilder::new();
     for id in reg.ids() {
-        let rec = reg.get(&id).expect("id came from the registry");
+        let rec = reg.get(&id).with_context(|| format!("missing registry id {id:?}"))?;
         let bytes = std::fs::read(&rec.path)
             .with_context(|| format!("reading {} for archive member {id}", rec.path.display()))?;
         b.add(&id, bytes)?;
@@ -197,17 +199,23 @@ impl ArchiveTier {
         if len < HEADER_LEN + 4 {
             bail!("archive too short ({len} bytes) for header + index CRC");
         }
-        if &bytes[0..4] != ARCHIVE_MAGIC {
-            bail!("bad archive magic {:?}", &bytes[0..4]);
+        let magic = bytes.get(0..4).unwrap_or_default();
+        if magic != ARCHIVE_MAGIC.as_slice() {
+            bail!("bad archive magic {magic:?}");
         }
+        // Fixed header reads, guarded by the `len >= HEADER_LEN + 4`
+        // bail above.
+        // compeft-lint: allow(no-panic-in-parse) -- header bytes 4..12 exist: len >= HEADER_LEN+4 was checked
         let version = u16::from_le_bytes([bytes[4], bytes[5]]);
         if version != ARCHIVE_VERSION {
             bail!("unsupported archive version {version}");
         }
+        // compeft-lint: allow(no-panic-in-parse) -- header bytes 4..12 exist: len >= HEADER_LEN+4 was checked
         let flags = u16::from_le_bytes([bytes[6], bytes[7]]);
         if flags != 0 {
             bail!("unsupported archive flags {flags:#06x}");
         }
+        // compeft-lint: allow(no-panic-in-parse) -- header bytes 4..12 exist: len >= HEADER_LEN+4 was checked
         let n_members = u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]) as usize;
         // Plausibility bound before any allocation, v2-header style: an
         // index entry is at least MIN_ENTRY bytes.
@@ -219,13 +227,13 @@ impl ArchiveTier {
         let mut index = Vec::with_capacity(n_members);
         let read = |pos: usize, n: usize| -> Result<&[u8]> {
             // Index reads must stop short of the trailing index CRC.
-            if pos + n > len - 4 {
-                bail!("archive index truncated at byte {pos}");
-            }
-            Ok(&bytes[pos..pos + n])
+            pos.checked_add(n)
+                .filter(|&end| end <= len - 4)
+                .and_then(|end| bytes.get(pos..end))
+                .ok_or_else(|| anyhow!("archive index truncated at byte {pos}"))
         };
         for _ in 0..n_members {
-            let id_len = u32::from_le_bytes(read(pos, 4)?.try_into().unwrap()) as usize;
+            let id_len = u32::from_le_bytes(read(pos, 4)?.try_into()?) as usize;
             pos += 4;
             if id_len == 0 {
                 bail!("archive member id must be non-empty");
@@ -234,19 +242,23 @@ impl ArchiveTier {
                 .context("archive member id is not UTF-8")?
                 .to_string();
             pos += id_len;
-            let offset = u64::from_le_bytes(read(pos, 8)?.try_into().unwrap());
+            let offset = u64::from_le_bytes(read(pos, 8)?.try_into()?);
             pos += 8;
-            let mlen = u64::from_le_bytes(read(pos, 8)?.try_into().unwrap());
+            let mlen = u64::from_le_bytes(read(pos, 8)?.try_into()?);
             pos += 8;
-            let crc = u32::from_le_bytes(read(pos, 4)?.try_into().unwrap());
+            let crc = u32::from_le_bytes(read(pos, 4)?.try_into()?);
             pos += 4;
             let (offset, mlen) = (offset as usize, mlen as usize);
             index.push(Member { id, offset, len: mlen, crc });
         }
         let index_end = pos;
-        let stored_crc =
-            u32::from_le_bytes(bytes[index_end..index_end + 4].try_into().unwrap());
-        if crc32(&bytes[..index_end]) != stored_crc {
+        let stored_crc = u32::from_le_bytes(
+            bytes
+                .get(index_end..index_end + 4)
+                .ok_or_else(|| anyhow!("archive index truncated at byte {index_end}"))?
+                .try_into()?,
+        );
+        if crc32(bytes.get(..index_end).unwrap_or_default()) != stored_crc {
             bail!("archive index CRC mismatch");
         }
 
@@ -254,8 +266,10 @@ impl ArchiveTier {
         // zero padding between them, no trailing garbage.
         let mut prev_end = index_end + 4;
         for w in index.windows(2) {
-            if w[0].id >= w[1].id {
-                bail!("archive index not sorted by unique id ({:?} >= {:?})", w[0].id, w[1].id);
+            if let [a, b] = w {
+                if a.id >= b.id {
+                    bail!("archive index not sorted by unique id ({:?} >= {:?})", a.id, b.id);
+                }
             }
         }
         for m in &index {
@@ -270,7 +284,9 @@ impl ArchiveTier {
                 .checked_add(m.len)
                 .filter(|&e| e <= len)
                 .with_context(|| format!("member {:?} region out of bounds", m.id))?;
-            if bytes[prev_end..m.offset].iter().any(|&b| b != 0) {
+            // `prev_end <= m.offset <= end <= len` was established just
+            // above, so this `get` cannot miss.
+            if bytes.get(prev_end..m.offset).unwrap_or_default().iter().any(|&b| b != 0) {
                 bail!("non-zero padding before member {:?}", m.id);
             }
             prev_end = end;
@@ -288,8 +304,10 @@ impl ArchiveTier {
     /// bad stripe) so the caller degrades to the remote-store path.
     pub fn get(&self, id: &str) -> Option<Payload> {
         let i = self.index.binary_search_by(|m| m.id.as_str().cmp(id)).ok()?;
-        let m = &self.index[i];
-        let region = &self.cache.0[m.offset..m.offset + m.len];
+        let m = self.index.get(i)?;
+        // Bounds were validated at open; `get` keeps the lookup
+        // panic-free even so.
+        let region = self.cache.0.get(m.offset..m.offset + m.len)?;
         if crc32(region) != m.crc {
             self.metrics.record_store_faults(0, 1, 1);
             return None;
@@ -299,7 +317,7 @@ impl ArchiveTier {
             m.offset,
             m.len,
         )
-        .expect("member bounds validated at open");
+        .ok()?;
         self.metrics.record_archive_hit(m.len as u64);
         Some(view)
     }
@@ -317,7 +335,8 @@ impl ArchiveTier {
     /// for tests asserting alignment and in-place views.
     pub fn member_range(&self, id: &str) -> Option<(usize, usize)> {
         let i = self.index.binary_search_by(|m| m.id.as_str().cmp(id)).ok()?;
-        Some((self.index[i].offset, self.index[i].len))
+        let m = self.index.get(i)?;
+        Some((m.offset, m.len))
     }
 
     pub fn len(&self) -> usize {

@@ -21,8 +21,9 @@
 //! on a virtual clock: same pushes + same clock ⇒ same batches, at any
 //! worker count.
 
+use crate::util::sync::{rank, OrderedMutex};
 use std::collections::{HashMap, VecDeque};
-use std::sync::{Condvar, Mutex};
+use std::sync::Condvar;
 use std::time::{Duration, Instant};
 
 /// One queued request (payload is opaque to the batcher).
@@ -58,10 +59,16 @@ struct TenantState {
 }
 
 struct Queues<T> {
+    /// Every iteration over this map reduces through a total order —
+    /// sum (`queued`), min over (enqueued, id) (`next_deadline`,
+    /// `flush_key`), or an explicit sort/min with an id tie-break
+    /// (`plan`, `pick` rules 2–3) — so map order never leaks.
+    // compeft-lint: allow(no-map-order) -- iterations reduce via total-order tie-breaks, see field doc
     by_expert: HashMap<String, VecDeque<Pending<T>>>,
     closed: bool,
     /// WFQ bookkeeping, keyed by tenant. Absent tenants have weight 1
     /// and zero service.
+    // compeft-lint: allow(no-map-order) -- keyed access only, never iterated
     tenants: HashMap<u32, TenantState>,
 }
 
@@ -87,7 +94,7 @@ impl<T> Queues<T> {
 /// Thread-safe batcher.
 pub struct Batcher<T> {
     policy: BatchPolicy,
-    queues: Mutex<Queues<T>>,
+    queues: OrderedMutex<Queues<T>>,
     cv: Condvar,
 }
 
@@ -95,10 +102,10 @@ impl<T> Batcher<T> {
     pub fn new(policy: BatchPolicy) -> Batcher<T> {
         Batcher {
             policy,
-            queues: Mutex::new(Queues {
-                by_expert: HashMap::new(),
+            queues: OrderedMutex::new(rank::BATCHER_QUEUES, "batcher.queues", Queues {
+                by_expert: HashMap::new(), // compeft-lint: allow(no-map-order) -- see field doc
                 closed: false,
-                tenants: HashMap::new(),
+                tenants: HashMap::new(), // compeft-lint: allow(no-map-order) -- see field doc
             }),
             cv: Condvar::new(),
         }
@@ -106,6 +113,7 @@ impl<T> Batcher<T> {
 
     /// Enqueue a request for an expert (default tenant, wall clock).
     pub fn push(&self, expert: &str, payload: T) {
+        // compeft-lint: allow(no-wall-clock) -- engine-facing arrival stamp; sim paths inject `now` via push_at
         self.push_at(expert, 0, payload, Instant::now());
     }
 
@@ -167,6 +175,7 @@ impl<T> Batcher<T> {
     pub fn next_batch(&self, prefer_resident: Option<&str>) -> Option<(String, Vec<Pending<T>>)> {
         let mut guard = self.queues.lock().unwrap();
         loop {
+            // compeft-lint: allow(no-wall-clock) -- blocking engine loop runs on the wall clock; the sim drives try_next_batch
             if let Some(key) = self.pick(&guard, prefer_resident, Instant::now()) {
                 return Some(self.drain(&mut guard, &key));
             }
@@ -184,6 +193,7 @@ impl<T> Batcher<T> {
             // reset the timer, so a lone request could wait up to
             // ~2× max_wait before release.
             let wait = {
+                // compeft-lint: allow(no-wall-clock) -- deadline sleep for the blocking engine loop, wall time by design
                 let now = Instant::now();
                 let next_deadline = guard
                     .by_expert
@@ -196,9 +206,8 @@ impl<T> Batcher<T> {
                     None => self.policy.max_wait,
                 }
             };
-            let (g, _) = self
-                .cv
-                .wait_timeout(guard, wait.max(Duration::from_micros(200)))
+            let (g, _) = guard
+                .wait_timeout(&self.cv, wait.max(Duration::from_micros(200)))
                 .unwrap();
             guard = g;
         }

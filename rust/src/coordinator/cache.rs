@@ -38,6 +38,10 @@ pub struct LruTier<V> {
     capacity_bytes: u64,
     used_bytes: u64,
     clock: u64,
+    /// Eviction scans pick `min_by_key` over `last_use`, a strictly
+    /// increasing logical clock that is unique per entry — the victim
+    /// is the same whatever order the map iterates.
+    // compeft-lint: allow(no-map-order) -- eviction min_by_key over the unique last_use clock is order-free
     entries: HashMap<String, Entry<V>>,
     hits: u64,
     misses: u64,
@@ -51,7 +55,7 @@ impl<V> LruTier<V> {
             capacity_bytes,
             used_bytes: 0,
             clock: 0,
-            entries: HashMap::new(),
+            entries: HashMap::new(), // compeft-lint: allow(no-map-order) -- see field doc
             hits: 0,
             misses: 0,
             evictions: 0,

@@ -7,7 +7,7 @@
 use crate::compeft::payload::CopyMeter;
 use crate::util::json::Json;
 use crate::util::stats::LogHistogram;
-use std::sync::Mutex;
+use crate::util::sync::{rank, OrderedMutex};
 use std::time::Duration;
 
 /// Why a request was dropped without a reply. The catch-all `rejected`
@@ -108,13 +108,21 @@ struct Inner {
 }
 
 /// Thread-safe metrics sink.
-#[derive(Default)]
 pub struct Metrics {
-    inner: Mutex<Inner>,
+    inner: OrderedMutex<Inner>,
     /// Lock-free counter of encoded-payload heap copies, shared with
     /// this engine's loader and store via [`Metrics::copy_meter`] so
     /// `payload_copies` in the snapshot reflects exactly this engine.
     copy_meter: CopyMeter,
+}
+
+impl Default for Metrics {
+    fn default() -> Metrics {
+        Metrics {
+            inner: OrderedMutex::new(rank::METRICS, "metrics.inner", Inner::default()),
+            copy_meter: CopyMeter::default(),
+        }
+    }
 }
 
 /// Per-request latency breakdown.

@@ -18,6 +18,39 @@
 //!   shedding at the submit door (pure, deterministic)
 //! * [`metrics`] — latency histograms, swap/prefetch/throughput/failover
 //!   counters
+//!
+//! # Lock-rank table
+//!
+//! Every long-lived mutex on the serve path is an
+//! [`OrderedMutex`](crate::util::sync::OrderedMutex) carrying a static
+//! rank, and a thread may only acquire locks in **strictly increasing
+//! rank order**. The contract is enforced twice: debug builds keep a
+//! thread-local stack of held ranks and panic on an out-of-order (or
+//! re-entrant) acquisition, and the static analyzer (`cargo run -- lint`,
+//! rule `lock-order`) reconstructs the whole-crate acquisition graph and
+//! rejects any edge that descends the table — so a deadlock-shaped
+//! change fails review even if no test happens to interleave it.
+//!
+//! The numeric ranks live in [`crate::util::sync::rank`] (the single
+//! source of truth; `analysis::lockorder::LOCK_CLASSES` mirrors it and a
+//! test pins the two together):
+//!
+//! | rank | lock               | guards                                      |
+//! |-----:|--------------------|---------------------------------------------|
+//! |   10 | `batcher.queues`   | per-expert queues + WFQ tenant state         |
+//! |   20 | `pipeline.plan`    | prefetch plan (queue snapshot → worker work)  |
+//! |   30 | `pipeline.staging` | staged decode results awaiting the engine    |
+//! |   40 | `cache.cpu_tier`   | CPU-tier LRU over decoded payloads           |
+//! |   50 | `transport.link`   | per-link virtual-time transfer state         |
+//! |   60 | `pool.sender`      | thread-pool injector queue                   |
+//! |   61 | `pool.receiver`    | thread-pool result collection                |
+//! |   70 | `runtime.exec_cache` | compiled-executable memo                   |
+//! |   80 | `metrics.inner`    | metrics registry (always innermost)          |
+//!
+//! Working rules: hold at most what you need; anything taken while a
+//! lower-ranked guard is live must rank higher; `metrics.inner` is
+//! deliberately last so any code path may record while holding any lock
+//! (though the coordinator's paths record after release anyway).
 
 pub mod admission;
 pub mod archive;

@@ -42,9 +42,10 @@ use crate::coordinator::registry::{
     CompositionRecord, ExpertMethod, ExpertRecord, Registry,
 };
 use crate::tensor::ParamSet;
+use crate::util::sync::{rank, OrderedMutex};
 use anyhow::{anyhow, Result};
-use std::collections::{HashMap, HashSet};
-use std::sync::{Arc, Condvar, Mutex};
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::{Arc, Condvar};
 use std::time::{Duration, Instant};
 
 /// Adapter-init templates for each expert method, `Arc`-shared with the
@@ -112,7 +113,7 @@ pub struct PrepareContext {
     /// data a decode is reading. Entries are additionally pinned while
     /// a decode is in flight, keeping the bytes tier-resident (no
     /// refetch) until the decode completes.
-    pub cpu: Arc<Mutex<LruTier<Payload>>>,
+    pub cpu: Arc<OrderedMutex<LruTier<Payload>>>,
     /// Optional local archive tier, consulted between the host tier
     /// and the remote fetch (GPU ⊃ host ⊃ archive ⊃ remote). An
     /// archive hit is a borrowed view of the resident file image:
@@ -252,12 +253,12 @@ impl PrepareContext {
 /// valid even without it, since a [`Payload`] view keeps its backing
 /// alive across eviction.)
 struct PinGuard<'a> {
-    cpu: &'a Mutex<LruTier<Payload>>,
+    cpu: &'a OrderedMutex<LruTier<Payload>>,
     id: String,
 }
 
 impl<'a> PinGuard<'a> {
-    fn new(cpu: &'a Mutex<LruTier<Payload>>, id: &str) -> PinGuard<'a> {
+    fn new(cpu: &'a OrderedMutex<LruTier<Payload>>, id: &str) -> PinGuard<'a> {
         PinGuard { cpu, id: id.to_string() }
     }
 }
@@ -293,14 +294,16 @@ enum Slot {
 }
 
 struct StagingInner {
-    slots: HashMap<String, Slot>,
+    /// Ordered map so every iteration (victim selection, sibling scan,
+    /// retain) visits slots in one deterministic order on every run.
+    slots: BTreeMap<String, Slot>,
     ready_bytes: u64,
     seq: u64,
     /// Ids whose staged entry was budget-evicted since the last plan
     /// update. Claims on them are refused until the next `retain`, so
     /// an over-tight budget degrades to at most one wasted prepare per
     /// id per plan instead of an endless background churn loop.
-    suppressed: HashSet<String>,
+    suppressed: BTreeSet<String>,
 }
 
 /// Byte-budgeted hand-off buffer between the prefetch threads and the
@@ -314,7 +317,7 @@ struct StagingInner {
 /// admitted over budget when it is alone.
 pub struct StagingArea {
     budget_bytes: u64,
-    inner: Mutex<StagingInner>,
+    inner: OrderedMutex<StagingInner>,
     cv: Condvar,
 }
 
@@ -322,11 +325,11 @@ impl StagingArea {
     pub fn new(budget_bytes: u64) -> StagingArea {
         StagingArea {
             budget_bytes: budget_bytes.max(1),
-            inner: Mutex::new(StagingInner {
-                slots: HashMap::new(),
+            inner: OrderedMutex::new(rank::STAGING, "pipeline.staging", StagingInner {
+                slots: BTreeMap::new(),
                 ready_bytes: 0,
                 seq: 0,
-                suppressed: HashSet::new(),
+                suppressed: BTreeSet::new(),
             }),
             cv: Condvar::new(),
         }
@@ -439,24 +442,25 @@ impl StagingArea {
             match inner.slots.get(id) {
                 None => return TakeOutcome::Miss,
                 Some(Slot::InFlight) => {
+                    // compeft-lint: allow(no-wall-clock) -- measures real engine block time for the wait metric
                     waited.get_or_insert_with(Instant::now);
-                    inner = self.cv.wait(inner).unwrap();
+                    inner = inner.wait(&self.cv).unwrap();
                 }
-                Some(_) => {
-                    let slot = inner.slots.remove(id).unwrap();
-                    return match slot {
-                        Slot::Ready { prepared, charge, .. } => {
-                            inner.ready_bytes -= charge;
-                            match waited {
-                                None => TakeOutcome::Hit(prepared),
-                                Some(t0) => TakeOutcome::Waited(prepared, t0.elapsed()),
-                            }
-                        }
-                        Slot::Failed(e) => TakeOutcome::Failed(e),
-                        Slot::InFlight => unreachable!("matched above"),
-                    };
+                Some(_) => break,
+            }
+        }
+        match inner.slots.remove(id) {
+            Some(Slot::Ready { prepared, charge, .. }) => {
+                inner.ready_bytes -= charge;
+                match waited {
+                    None => TakeOutcome::Hit(prepared),
+                    Some(t0) => TakeOutcome::Waited(prepared, t0.elapsed()),
                 }
             }
+            Some(Slot::Failed(e)) => TakeOutcome::Failed(e),
+            // The loop only breaks on Ready/Failed while the lock is
+            // held continuously, so this arm is unreachable in practice.
+            _ => TakeOutcome::Miss,
         }
     }
 
@@ -513,7 +517,7 @@ struct PfShared {
     ctx: Arc<PrepareContext>,
     staging: StagingArea,
     metrics: Arc<Metrics>,
-    plan: Mutex<PlanState>,
+    plan: OrderedMutex<PlanState>,
     cv: Condvar,
 }
 
@@ -539,7 +543,11 @@ impl Prefetcher {
             ctx,
             staging: StagingArea::new(staging_budget_bytes),
             metrics,
-            plan: Mutex::new(PlanState { desired: Vec::new(), closed: false }),
+            plan: OrderedMutex::new(
+                rank::PREFETCH_PLAN,
+                "pipeline.plan",
+                PlanState { desired: Vec::new(), closed: false },
+            ),
             cv: Condvar::new(),
         });
         let workers = (0..depth.clamp(1, 4))
@@ -635,7 +643,7 @@ fn worker_loop(shared: &PfShared) {
                     .cloned();
                 match next {
                     Some(id) => break id,
-                    None => plan = shared.cv.wait(plan).unwrap(),
+                    None => plan = plan.wait(&shared.cv).unwrap(),
                 }
             }
         };
@@ -725,7 +733,11 @@ mod tests {
             loader,
             registry,
             templates,
-            cpu: Arc::new(Mutex::new(LruTier::new("cpu", 64 << 20))),
+            cpu: Arc::new(OrderedMutex::new(
+                rank::CPU_TIER,
+                "cache.cpu_tier",
+                LruTier::new("cpu", 64 << 20),
+            )),
             archive: None,
         })
     }
@@ -935,7 +947,11 @@ mod tests {
                     .with_store(store),
                     registry: Arc::clone(&reg),
                     templates: templates.clone(),
-                    cpu: Arc::new(Mutex::new(LruTier::new("cpu", 64 << 20))),
+                    cpu: Arc::new(OrderedMutex::new(
+                        rank::CPU_TIER,
+                        "cache.cpu_tier",
+                        LruTier::new("cpu", 64 << 20),
+                    )),
                     archive: None,
                 });
                 let pf = Prefetcher::start(
@@ -1004,7 +1020,11 @@ mod tests {
                 loader,
                 registry: Arc::clone(&reg),
                 templates: templates.clone(),
-                cpu: Arc::new(Mutex::new(LruTier::new("cpu", 64 << 20))),
+                cpu: Arc::new(OrderedMutex::new(
+                    rank::CPU_TIER,
+                    "cache.cpu_tier",
+                    LruTier::new("cpu", 64 << 20),
+                )),
                 archive: Some(tier),
             };
             for (id, want) in ids.iter().zip(&reference) {

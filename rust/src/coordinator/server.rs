@@ -38,11 +38,12 @@ use crate::coordinator::store::{ExpertStore, StoreConfig};
 use crate::coordinator::transport::{FaultPlan, FaultSpec, LinkSpec, SimLink};
 use crate::eval::ANSWER_BASE;
 use crate::runtime::{AdapterKind, ModelBundle, Runtime};
+use crate::util::sync::{rank, OrderedMutex};
 
 use anyhow::{Context, Result};
 use std::path::PathBuf;
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Serving batch size must match an exported executable batch.
@@ -421,7 +422,11 @@ fn engine_main(
     let registry = Arc::new(registry);
     // Host tier of encoded bytes, shared with the prefetch threads
     // (entries pinned while a background decode is in flight).
-    let cpu = Arc::new(Mutex::new(LruTier::new("cpu", cfg.cpu_capacity_bytes)));
+    let cpu = Arc::new(OrderedMutex::new(
+        rank::CPU_TIER,
+        "cache.cpu_tier",
+        LruTier::new("cpu", cfg.cpu_capacity_bytes),
+    ));
     let ctx = Arc::new(PrepareContext {
         loader: loader.clone(),
         registry: Arc::clone(&registry),

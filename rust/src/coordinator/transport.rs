@@ -21,8 +21,9 @@
 //! ride past the NIC, it queues like any other transfer.
 
 use crate::util::rng::Pcg;
+use crate::util::sync::{rank, OrderedMutex};
 use std::collections::BTreeSet;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Static description of a link.
@@ -197,7 +198,7 @@ pub struct SimLink {
     /// Fault injection for keyed transfers: the plan plus this link's
     /// node id in the store topology. Unkeyed transfers are unaffected.
     faults: Option<Arc<(FaultPlan, usize)>>,
-    state: Arc<Mutex<LinkState>>,
+    state: Arc<OrderedMutex<LinkState>>,
 }
 
 impl SimLink {
@@ -208,7 +209,7 @@ impl SimLink {
             time_scale: 1.0,
             origin: Instant::now(),
             faults: None,
-            state: Arc::new(Mutex::new(LinkState {
+            state: Arc::new(OrderedMutex::new(rank::LINK_STATE, "transport.link", LinkState {
                 busy_until: None,
                 sim_free_at: 0.0,
                 bytes_moved: 0,

@@ -5,6 +5,7 @@
 //! (2023) as a three-layer Rust + JAX + Pallas system. See README.md for
 //! the build/test/bench quickstart and the layer map.
 
+pub mod analysis;
 pub mod baselines;
 pub mod bench_support;
 pub mod compeft;

@@ -11,6 +11,9 @@
 //!   archive    `archive build` packs a scale's compressed experts into
 //!              one `.cpar` archive; `serve --archive <path>` then
 //!              serves them as zero-copy views of the resident image
+//!   lint       run `compeft-lint` (the in-repo determinism/panic-safety/
+//!              lock-discipline analyzer) over rust/src; non-zero exit on
+//!              any unsuppressed violation
 //!
 //! `compeft <subcommand> --help` lists flags.
 
@@ -38,9 +41,10 @@ fn main() {
         Some("serve") => run(cmd_serve(&argv[1..])),
         Some("loadgen") => run(cmd_loadgen(&argv[1..])),
         Some("archive") => run(cmd_archive(&argv[1..])),
+        Some("lint") => run(cmd_lint(&argv[1..])),
         _ => {
             eprintln!(
-                "usage: compeft <compress|inspect|eval|serve|loadgen|archive> [flags]\n\
+                "usage: compeft <compress|inspect|eval|serve|loadgen|archive|lint> [flags]\n\
                  see README.md for the experiment-to-bench map"
             );
             2
@@ -56,6 +60,31 @@ fn run(r: Result<()>) -> i32 {
             eprintln!("{e:#}");
             1
         }
+    }
+}
+
+fn cmd_lint(argv: &[String]) -> Result<()> {
+    let spec = ArgSpec::new("lint", "run compeft-lint over rust/src")
+        .flag("root", "", "repo root (default: the build-time manifest dir)");
+    let a = spec.parse(argv)?;
+    let root = if a.get("root").is_empty() {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+    } else {
+        PathBuf::from(a.get("root"))
+    };
+    let diags = compeft::analysis::lint_tree(&root)?;
+    for d in &diags {
+        println!("{d}");
+    }
+    if diags.is_empty() {
+        println!("compeft-lint: clean");
+        Ok(())
+    } else {
+        bail!(
+            "compeft-lint: {} violation(s); fix them or annotate with \
+             `// compeft-lint: allow(rule-id) -- <reason>`",
+            diags.len()
+        )
     }
 }
 

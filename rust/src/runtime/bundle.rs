@@ -4,10 +4,11 @@
 use crate::runtime::client::{Executable, Runtime};
 use crate::tensor::ParamSet;
 use crate::util::json::Json;
+use crate::util::sync::{rank, OrderedMutex};
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 /// Which forward variant an execution uses.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -101,7 +102,7 @@ pub struct ModelBundle {
     /// Base parameters resident on device, in `meta.base_order`.
     base_buffers: Vec<xla::PjRtBuffer>,
     /// Lazily compiled executables keyed by (kind, batch).
-    exes: Mutex<HashMap<(AdapterKind, usize), Arc<Executable>>>,
+    exes: OrderedMutex<HashMap<(AdapterKind, usize), Arc<Executable>>>,
 }
 
 impl ModelBundle {
@@ -128,7 +129,7 @@ impl ModelBundle {
             rt: rt.clone(),
             dir,
             base_buffers,
-            exes: Mutex::new(HashMap::new()),
+            exes: OrderedMutex::new(rank::EXEC_CACHE, "runtime.exec_cache", HashMap::new()),
         })
     }
 

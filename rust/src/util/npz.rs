@@ -68,6 +68,7 @@ impl NpyArray {
 
     pub fn from_f32(shape: Vec<usize>, values: &[f32]) -> NpyArray {
         assert_eq!(shape.iter().product::<usize>(), values.len());
+        // compeft-lint: allow(no-unchecked-wire-alloc) -- sized from caller-held in-memory values, not wire data
         let mut data = Vec::with_capacity(values.len() * 4);
         for v in values {
             data.extend_from_slice(&v.to_le_bytes());
@@ -77,6 +78,7 @@ impl NpyArray {
 
     pub fn from_i64(shape: Vec<usize>, values: &[i64]) -> NpyArray {
         assert_eq!(shape.iter().product::<usize>(), values.len());
+        // compeft-lint: allow(no-unchecked-wire-alloc) -- sized from caller-held in-memory values, not wire data
         let mut data = Vec::with_capacity(values.len() * 8);
         for v in values {
             data.extend_from_slice(&v.to_le_bytes());
@@ -89,12 +91,14 @@ impl NpyArray {
             DType::F32 => Ok(self
                 .data
                 .chunks_exact(4)
+                // compeft-lint: allow(no-panic-in-parse) -- chunks_exact(4) yields exactly 4 bytes
                 .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
                 .collect()),
             DType::F64 => Ok(self
                 .data
                 .chunks_exact(8)
                 .map(|c| {
+                    // compeft-lint: allow(no-panic-in-parse) -- chunks_exact(8) yields exactly 8 bytes
                     f64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]])
                         as f32
                 })
@@ -109,12 +113,14 @@ impl NpyArray {
                 .data
                 .chunks_exact(8)
                 .map(|c| {
+                    // compeft-lint: allow(no-panic-in-parse) -- chunks_exact(8) yields exactly 8 bytes
                     i64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]])
                 })
                 .collect()),
             DType::I32 => Ok(self
                 .data
                 .chunks_exact(4)
+                // compeft-lint: allow(no-panic-in-parse) -- chunks_exact(4) yields exactly 4 bytes
                 .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]) as i64)
                 .collect()),
             DType::U8 => Ok(self.data.iter().map(|&b| b as i64).collect()),
@@ -131,12 +137,12 @@ const NPY_MAGIC: &[u8; 6] = b"\x93NUMPY";
 
 /// Serialize one array to npy v1.0 bytes.
 pub fn write_npy_bytes(arr: &NpyArray) -> Vec<u8> {
-    let shape_str = match arr.shape.len() {
-        0 => "()".to_string(),
-        1 => format!("({},)", arr.shape[0]),
-        _ => format!(
+    let shape_str = match arr.shape.as_slice() {
+        [] => "()".to_string(),
+        [d] => format!("({d},)"),
+        ds => format!(
             "({})",
-            arr.shape.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(", ")
+            ds.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(", ")
         ),
     };
     let header = format!(
@@ -149,6 +155,7 @@ pub fn write_npy_bytes(arr: &NpyArray) -> Vec<u8> {
     let pad = (64 - unpadded % 64) % 64;
     let hlen = (header.len() + pad + 1) as u16;
 
+    // compeft-lint: allow(no-unchecked-wire-alloc) -- write path: sized from in-memory data being serialized
     let mut out = Vec::with_capacity(unpadded + pad + arr.data.len());
     out.extend_from_slice(NPY_MAGIC);
     out.extend_from_slice(&[1u8, 0u8]); // version 1.0
@@ -160,31 +167,32 @@ pub fn write_npy_bytes(arr: &NpyArray) -> Vec<u8> {
     out
 }
 
-/// Parse npy v1.0/2.0 bytes into an array.
+/// Parse npy v1.0/2.0 bytes into an array. Never panics on malformed
+/// input: every header field is range-checked and the element count is
+/// computed with overflow checks before it sizes anything.
 pub fn read_npy_bytes(bytes: &[u8]) -> Result<NpyArray> {
-    if bytes.len() < 10 || &bytes[..6] != NPY_MAGIC {
+    if bytes.get(..6) != Some(NPY_MAGIC.as_slice()) {
         bail!("not an npy file (bad magic)");
     }
-    let major = bytes[6];
+    let byte_at = |i: usize| -> Result<usize> {
+        Ok(*bytes.get(i).ok_or_else(|| anyhow!("truncated npy header"))? as usize)
+    };
+    let major = byte_at(6)?;
     let (hlen, header_start) = match major {
-        1 => (u16::from_le_bytes([bytes[8], bytes[9]]) as usize, 10usize),
-        2 | 3 => {
-            if bytes.len() < 12 {
-                bail!("truncated npy v2 header");
-            }
-            (
-                u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]) as usize,
-                12usize,
-            )
-        }
+        1 => (byte_at(8)? | (byte_at(9)? << 8), 10usize),
+        2 | 3 => (
+            byte_at(8)? | (byte_at(9)? << 8) | (byte_at(10)? << 16) | (byte_at(11)? << 24),
+            12usize,
+        ),
         v => bail!("unsupported npy major version {v}"),
     };
-    let header_end = header_start + hlen;
-    if bytes.len() < header_end {
-        bail!("truncated npy header");
-    }
-    let header = std::str::from_utf8(&bytes[header_start..header_end])
-        .context("npy header not utf-8")?;
+    let header_end = header_start
+        .checked_add(hlen)
+        .ok_or_else(|| anyhow!("npy header length overflows"))?;
+    let header_bytes = bytes
+        .get(header_start..header_end)
+        .ok_or_else(|| anyhow!("truncated npy header"))?;
+    let header = std::str::from_utf8(header_bytes).context("npy header not utf-8")?;
 
     let descr = extract_quoted(header, "descr")?;
     let dtype = DType::from_descr(&descr)?;
@@ -193,31 +201,43 @@ pub fn read_npy_bytes(bytes: &[u8]) -> Result<NpyArray> {
     }
     let shape = parse_shape(header)?;
 
-    let n: usize = shape.iter().product();
-    let need = n * dtype.size();
-    let data = &bytes[header_end..];
-    if data.len() < need {
-        bail!("npy data truncated: need {need} bytes, have {}", data.len());
-    }
-    Ok(NpyArray { dtype, shape, data: data[..need].to_vec() })
+    // A hostile header can declare dims whose product wraps usize;
+    // checked arithmetic turns that into an error before any slicing
+    // or allocation is sized from it.
+    let n = shape
+        .iter()
+        .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+        .ok_or_else(|| anyhow!("npy shape {shape:?} overflows element count"))?;
+    let need = n
+        .checked_mul(dtype.size())
+        .ok_or_else(|| anyhow!("npy shape {shape:?} overflows byte count"))?;
+    let data = bytes.get(header_end..).unwrap_or(&[]);
+    let data = data.get(..need).ok_or_else(|| {
+        anyhow!("npy data truncated: need {need} bytes, have {}", data.len())
+    })?;
+    Ok(NpyArray { dtype, shape, data: data.to_vec() })
 }
 
 fn extract_quoted(header: &str, key: &str) -> Result<String> {
     let pat = format!("'{key}':");
     let at = header.find(&pat).ok_or_else(|| anyhow!("npy header missing {key}"))?;
-    let rest = &header[at + pat.len()..];
+    // `find` returns in-range indices, so these `get`s cannot miss; the
+    // empty-string fallback keeps the path index-free anyway.
+    let rest = header.get(at + pat.len()..).unwrap_or("");
     let q1 = rest.find('\'').ok_or_else(|| anyhow!("bad {key} value"))?;
-    let rest = &rest[q1 + 1..];
+    let rest = rest.get(q1 + 1..).unwrap_or("");
     let q2 = rest.find('\'').ok_or_else(|| anyhow!("bad {key} value"))?;
-    Ok(rest[..q2].to_string())
+    Ok(rest.get(..q2).unwrap_or("").to_string())
 }
 
 fn parse_shape(header: &str) -> Result<Vec<usize>> {
     let at = header.find("'shape':").ok_or_else(|| anyhow!("npy header missing shape"))?;
-    let rest = &header[at..];
+    let rest = header.get(at..).unwrap_or("");
     let open = rest.find('(').ok_or_else(|| anyhow!("bad shape"))?;
     let close = rest.find(')').ok_or_else(|| anyhow!("bad shape"))?;
-    let inner = &rest[open + 1..close];
+    // `)` before `(` — e.g. a header like "'shape': ) ("— must be a
+    // parse error, not a backwards slice panic.
+    let inner = rest.get(open + 1..close).ok_or_else(|| anyhow!("bad shape"))?;
     let mut shape = Vec::new();
     for part in inner.split(',') {
         let part = part.trim();
@@ -248,7 +268,10 @@ pub fn read_npz_from<R: Read + Seek>(reader: R) -> Result<BTreeMap<String, NpyAr
     for i in 0..zip.len() {
         let mut entry = zip.by_index(i).context("zip entry")?;
         let name = entry.name().trim_end_matches(".npy").to_string();
-        let mut bytes = Vec::with_capacity(entry.size() as usize);
+        // Grow with the bytes actually read: pre-sizing from the
+        // entry's *declared* size would let a hostile archive demand an
+        // arbitrarily large allocation before a single byte arrives.
+        let mut bytes = Vec::new();
         entry.read_to_end(&mut bytes)?;
         let arr =
             read_npy_bytes(&bytes).with_context(|| format!("entry {name:?}"))?;
@@ -352,5 +375,85 @@ mod tests {
     fn rejects_garbage() {
         assert!(read_npy_bytes(b"not an npy").is_err());
         assert!(read_npy_bytes(b"").is_err());
+    }
+
+    /// Valid npy v1 framing around an arbitrary header string.
+    fn v1_with_header(header: &str) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(NPY_MAGIC);
+        out.extend_from_slice(&[1u8, 0u8]);
+        let h = format!("{header}\n");
+        out.extend_from_slice(&(h.len() as u16).to_le_bytes());
+        out.extend_from_slice(h.as_bytes());
+        out
+    }
+
+    #[test]
+    fn hostile_shape_product_errs_instead_of_wrapping() {
+        // 2^28 * 2^28 * 2^28 = 2^84 wraps a 64-bit element count.
+        let h = "{'descr': '<f8', 'fortran_order': False, \
+                 'shape': (268435456, 268435456, 268435456), }";
+        let err = read_npy_bytes(&v1_with_header(h)).unwrap_err();
+        assert!(format!("{err:#}").contains("overflows"), "{err:#}");
+        // 2^61 elements fit, but * 8 bytes wraps to a byte count of 0 —
+        // the old unchecked multiply accepted this as an empty array of
+        // 2^61 declared elements.
+        let h = "{'descr': '<f8', 'fortran_order': False, \
+                 'shape': (2305843009213693952,), }";
+        let err = read_npy_bytes(&v1_with_header(h)).unwrap_err();
+        assert!(format!("{err:#}").contains("overflows"), "{err:#}");
+    }
+
+    #[test]
+    fn reversed_shape_parens_err_not_panic() {
+        let h = "{'descr': '<f4', 'fortran_order': False, 'shape': ) (, }";
+        assert!(read_npy_bytes(&v1_with_header(h)).is_err());
+    }
+
+    #[test]
+    fn truncated_headers_err_not_panic() {
+        // v1 with a header-length field promising more than exists.
+        let mut v1 = Vec::new();
+        v1.extend_from_slice(NPY_MAGIC);
+        v1.extend_from_slice(&[1u8, 0u8]);
+        v1.extend_from_slice(&u16::MAX.to_le_bytes());
+        assert!(read_npy_bytes(&v1).is_err());
+        // v2 cut off in the middle of its 4-byte length field.
+        let mut v2 = Vec::new();
+        v2.extend_from_slice(NPY_MAGIC);
+        v2.extend_from_slice(&[2u8, 0u8]);
+        v2.extend_from_slice(&[0xFF, 0xFF]);
+        assert!(read_npy_bytes(&v2).is_err());
+    }
+
+    #[test]
+    fn lying_zip_entry_size_cannot_force_allocation() {
+        let mut arrays = BTreeMap::new();
+        arrays.insert("w".to_string(), NpyArray::from_f32(vec![2], &[1.0, 2.0]));
+        let mut buf = Vec::new();
+        {
+            let mut zipw = zip::ZipWriter::new(Cursor::new(&mut buf));
+            let opts = zip::write::FileOptions::default()
+                .compression_method(zip::CompressionMethod::Stored);
+            for (name, arr) in &arrays {
+                zipw.start_file(format!("{name}.npy"), opts).unwrap();
+                zipw.write_all(&write_npy_bytes(arr)).unwrap();
+            }
+            zipw.finish().unwrap();
+        }
+        // Inflate the declared *uncompressed* size to ~4 GiB in both the
+        // local header (offset 22) and the central directory (offset 24
+        // past its signature). The stored data is untouched, so a reader
+        // that sizes buffers from bytes actually read still succeeds —
+        // one that trusts the declared size would allocate 4 GiB first.
+        let lie = 0xFFFF_FFFEu32.to_le_bytes();
+        buf[22..26].copy_from_slice(&lie);
+        let cd = buf
+            .windows(4)
+            .position(|w| w == [0x50, 0x4b, 0x01, 0x02])
+            .expect("central directory signature");
+        buf[cd + 24..cd + 28].copy_from_slice(&lie);
+        let back = read_npz_from(Cursor::new(&buf)).unwrap();
+        assert_eq!(back["w"].to_f32().unwrap(), vec![1.0, 2.0]);
     }
 }

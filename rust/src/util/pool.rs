@@ -5,8 +5,9 @@
 //! classic channel-fed pool with graceful shutdown is sufficient and
 //! keeps the request path allocation-light.
 
+use crate::util::sync::{rank, OrderedMutex};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -19,7 +20,7 @@ type Job = Box<dyn FnOnce() + Send + 'static>;
 /// thread and the background prefetch threads. The lock is held only
 /// for the channel send, never while a job runs.
 pub struct ThreadPool {
-    tx: Option<Mutex<mpsc::Sender<Job>>>,
+    tx: Option<OrderedMutex<mpsc::Sender<Job>>>,
     workers: Vec<thread::JoinHandle<()>>,
 }
 
@@ -28,7 +29,7 @@ impl ThreadPool {
     pub fn new(n: usize) -> ThreadPool {
         assert!(n >= 1);
         let (tx, rx) = mpsc::channel::<Job>();
-        let rx = Arc::new(Mutex::new(rx));
+        let rx = Arc::new(OrderedMutex::new(rank::POOL_RECEIVER, "pool.receiver", rx));
         let workers = (0..n)
             .map(|i| {
                 let rx = Arc::clone(&rx);
@@ -47,7 +48,10 @@ impl ThreadPool {
                     .expect("spawn worker")
             })
             .collect();
-        ThreadPool { tx: Some(Mutex::new(tx)), workers }
+        ThreadPool {
+            tx: Some(OrderedMutex::new(rank::POOL_SENDER, "pool.sender", tx)),
+            workers,
+        }
     }
 
     /// Submit a job for execution.

@@ -1,0 +1,333 @@
+//! Rank-ordered mutexes: the runtime twin of the static `lock-order`
+//! lint (`analysis::lockorder`).
+//!
+//! Every coordinator mutex belongs to a named lock class with a fixed
+//! rank (the [`rank`] constants; the class table with docs lives in
+//! `analysis::lockorder::LOCK_CLASSES` and the blessed order is
+//! documented in `coordinator/mod.rs`). A thread must acquire locks in
+//! strictly increasing rank. In debug builds (`debug_assertions`) a
+//! thread-local stack of held ranks enforces this at runtime and
+//! panics on the first out-of-order or re-entrant acquisition — so a
+//! deadlock that would need a lucky interleaving to manifest fails
+//! deterministically on any single-threaded test that merely *walks*
+//! the wrong path. Release builds compile the tracking away;
+//! [`OrderedMutex`] is then a plain `Mutex` plus two words.
+//!
+//! The API mirrors `std::sync::Mutex` closely enough that existing
+//! `.lock().unwrap()` call sites compile unchanged. Condvar waits go
+//! through the guard ([`OrderedGuard::wait`] /
+//! [`OrderedGuard::wait_timeout`]) because `std::sync::Condvar` wants
+//! the raw `MutexGuard`: the wait keeps the rank on the stack — the
+//! thread still logically holds its place in the order while blocked —
+//! and re-wraps the reacquired guard without re-pushing.
+
+use std::sync::{Condvar, LockResult, Mutex, MutexGuard, PoisonError, WaitTimeoutResult};
+use std::time::Duration;
+
+/// Declared lock ranks. Acquire in strictly increasing rank only.
+/// Mirrored by `analysis::lockorder::LOCK_CLASSES`; keep both in sync
+/// (a lockorder test pins them together).
+pub mod rank {
+    /// `Batcher.queues` — request queues + admission state.
+    pub const BATCHER_QUEUES: u32 = 10;
+    /// `PfShared.plan` — prefetcher's desired-expert plan.
+    pub const PREFETCH_PLAN: u32 = 20;
+    /// `StagingArea.inner` — staged decoded experts.
+    pub const STAGING: u32 = 30;
+    /// The shared CPU `LruTier` (pipeline/server `cpu`).
+    pub const CPU_TIER: u32 = 40;
+    /// `SimLink.state` — transport byte/transfer accounting.
+    pub const LINK_STATE: u32 = 50;
+    /// `ThreadPool.tx` — job submission channel.
+    pub const POOL_SENDER: u32 = 60;
+    /// `ThreadPool` worker receiver.
+    pub const POOL_RECEIVER: u32 = 61;
+    /// `BundleCache.exes` — compiled executable cache.
+    pub const EXEC_CACHE: u32 = 70;
+    /// `Metrics.inner` — counters; leaf rank, safe to bump anywhere.
+    pub const METRICS: u32 = 80;
+}
+
+#[cfg(debug_assertions)]
+mod tracker {
+    use std::cell::RefCell;
+
+    thread_local! {
+        static HELD: RefCell<Vec<(u32, &'static str)>> =
+            const { RefCell::new(Vec::new()) };
+    }
+
+    /// Check the new rank against every held rank, then push it.
+    /// Guards may drop in any order, so the check is against the max
+    /// held rank, not just the top of stack.
+    pub fn acquire(rank: u32, name: &'static str) {
+        HELD.with(|h| {
+            let mut h = h.borrow_mut();
+            if let Some(&(r, n)) = h.iter().find(|&&(r, _)| r >= rank) {
+                panic!(
+                    "lock-order violation: acquiring `{name}` (rank {rank}) \
+                     while holding `{n}` (rank {r}); held = {:?}",
+                    h.as_slice()
+                );
+            }
+            h.push((rank, name));
+        });
+    }
+
+    /// Remove the most recent entry with this rank (guards can drop
+    /// non-LIFO, so we match by rank rather than popping blindly).
+    pub fn release(rank: u32) {
+        HELD.with(|h| {
+            let mut h = h.borrow_mut();
+            if let Some(i) = h.iter().rposition(|&(r, _)| r == rank) {
+                h.remove(i);
+            }
+        });
+    }
+}
+
+#[cfg(not(debug_assertions))]
+mod tracker {
+    #[inline(always)]
+    pub fn acquire(_rank: u32, _name: &'static str) {}
+    #[inline(always)]
+    pub fn release(_rank: u32) {}
+}
+
+/// A `Mutex` tagged with a lock-class rank, checked in debug builds.
+pub struct OrderedMutex<T: ?Sized> {
+    rank: u32,
+    name: &'static str,
+    inner: Mutex<T>,
+}
+
+impl<T> OrderedMutex<T> {
+    pub fn new(rank: u32, name: &'static str, value: T) -> OrderedMutex<T> {
+        OrderedMutex { rank, name, inner: Mutex::new(value) }
+    }
+
+    /// Acquire, panicking (debug builds) if a held lock has rank >=
+    /// this one. Returns `LockResult` like `Mutex::lock`, so existing
+    /// `.lock().unwrap()` call sites are unchanged.
+    pub fn lock(&self) -> LockResult<OrderedGuard<'_, T>> {
+        tracker::acquire(self.rank, self.name);
+        match self.inner.lock() {
+            Ok(g) => Ok(self.wrap(g)),
+            Err(p) => Err(PoisonError::new(self.wrap(p.into_inner()))),
+        }
+    }
+
+    fn wrap<'a>(&self, g: MutexGuard<'a, T>) -> OrderedGuard<'a, T> {
+        OrderedGuard { inner: Some(g), rank: self.rank, name: self.name }
+    }
+}
+
+impl<T: std::fmt::Debug> std::fmt::Debug for OrderedMutex<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("OrderedMutex")
+            .field("name", &self.name)
+            .field("rank", &self.rank)
+            .finish_non_exhaustive()
+    }
+}
+
+/// Guard for [`OrderedMutex`]; releases the rank entry on drop.
+///
+/// `inner` is `Some` for the guard's whole life; it is only taken by
+/// the wait methods, which consume `self` (the rank entry survives the
+/// wait — see module docs).
+pub struct OrderedGuard<'a, T: ?Sized> {
+    inner: Option<MutexGuard<'a, T>>,
+    rank: u32,
+    name: &'static str,
+}
+
+impl<'a, T: ?Sized> OrderedGuard<'a, T> {
+    /// Block on `cv`, releasing the mutex while waiting and re-wrapping
+    /// the reacquired guard. The rank stays on this thread's stack for
+    /// the duration (the thread is blocked; it cannot acquire anything
+    /// else anyway).
+    pub fn wait(mut self, cv: &Condvar) -> LockResult<OrderedGuard<'a, T>> {
+        let (rank, name) = (self.rank, self.name);
+        let g = self.inner.take().expect("guard holds its MutexGuard until dropped");
+        drop(self); // inner is None: drop releases nothing
+        match cv.wait(g) {
+            Ok(g) => Ok(OrderedGuard { inner: Some(g), rank, name }),
+            Err(p) => Err(PoisonError::new(OrderedGuard {
+                inner: Some(p.into_inner()),
+                rank,
+                name,
+            })),
+        }
+    }
+
+    /// [`OrderedGuard::wait`] with a timeout.
+    pub fn wait_timeout(
+        mut self,
+        cv: &Condvar,
+        dur: Duration,
+    ) -> LockResult<(OrderedGuard<'a, T>, WaitTimeoutResult)> {
+        let (rank, name) = (self.rank, self.name);
+        let g = self.inner.take().expect("guard holds its MutexGuard until dropped");
+        drop(self);
+        match cv.wait_timeout(g, dur) {
+            Ok((g, t)) => Ok((OrderedGuard { inner: Some(g), rank, name }, t)),
+            Err(p) => {
+                let (g, t) = p.into_inner();
+                Err(PoisonError::new((
+                    OrderedGuard { inner: Some(g), rank, name },
+                    t,
+                )))
+            }
+        }
+    }
+}
+
+impl<T: ?Sized> std::ops::Deref for OrderedGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.inner.as_ref().expect("guard holds its MutexGuard until dropped")
+    }
+}
+
+impl<T: ?Sized> std::ops::DerefMut for OrderedGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner.as_mut().expect("guard holds its MutexGuard until dropped")
+    }
+}
+
+impl<T: ?Sized> Drop for OrderedGuard<'_, T> {
+    fn drop(&mut self) {
+        if self.inner.is_some() {
+            tracker::release(self.rank);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn blessed_order_is_silent() {
+        // plan (20) -> staging (30) -> metrics (80): the coordinator's
+        // real nesting. Must not panic in any build.
+        let plan = OrderedMutex::new(rank::PREFETCH_PLAN, "pipeline.plan", 0u32);
+        let staging = OrderedMutex::new(rank::STAGING, "pipeline.staging", 0u32);
+        let metrics = OrderedMutex::new(rank::METRICS, "metrics.inner", 0u32);
+        let p = plan.lock().unwrap();
+        let s = staging.lock().unwrap();
+        let m = metrics.lock().unwrap();
+        drop((p, s, m));
+        // Reacquire after release: the stack must be clean.
+        let _m = metrics.lock().unwrap();
+        let _p = plan.lock().unwrap();
+    }
+
+    #[test]
+    fn non_lifo_drop_keeps_tracking_consistent() {
+        let a = OrderedMutex::new(rank::BATCHER_QUEUES, "batcher.queues", ());
+        let b = OrderedMutex::new(rank::STAGING, "pipeline.staging", ());
+        let c = OrderedMutex::new(rank::CPU_TIER, "cache.cpu_tier", ());
+        let ga = a.lock().unwrap();
+        let gb = b.lock().unwrap();
+        drop(ga); // out of acquisition order
+        let gc = c.lock().unwrap();
+        drop(gb);
+        drop(gc);
+        // Everything released: low rank acquires cleanly again.
+        let _ga = a.lock().unwrap();
+    }
+
+    /// Runtime twin of the lint's seeded out-of-order fixture
+    /// (`analysis::lockorder::tests::seeded_out_of_order_fires`):
+    /// staging then plan must panic under the debug tracker.
+    #[test]
+    #[cfg(debug_assertions)]
+    fn out_of_order_acquisition_panics_in_debug() {
+        let err = std::thread::spawn(|| {
+            let plan =
+                OrderedMutex::new(rank::PREFETCH_PLAN, "pipeline.plan", 0u32);
+            let staging =
+                OrderedMutex::new(rank::STAGING, "pipeline.staging", 0u32);
+            let _s = staging.lock().unwrap();
+            let _p = plan.lock().unwrap(); // rank 20 under rank 30: boom
+        })
+        .join()
+        .expect_err("out-of-order acquisition must panic");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("lock-order violation"), "{msg}");
+        assert!(msg.contains("pipeline.plan"), "{msg}");
+        assert!(msg.contains("pipeline.staging"), "{msg}");
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    fn re_entrant_acquisition_panics_in_debug() {
+        let err = std::thread::spawn(|| {
+            let m = Arc::new(OrderedMutex::new(rank::METRICS, "metrics.inner", ()));
+            let _a = m.lock().unwrap();
+            let _b = m.lock().unwrap(); // same rank: self-deadlock
+        })
+        .join()
+        .expect_err("re-entrant acquisition must panic");
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("lock-order violation"), "{msg}");
+    }
+
+    #[test]
+    fn condvar_wait_roundtrip_preserves_rank() {
+        let staging = Arc::new(OrderedMutex::new(rank::STAGING, "pipeline.staging", 0u32));
+        let cv = Arc::new(Condvar::new());
+        let (s2, cv2) = (Arc::clone(&staging), Arc::clone(&cv));
+        let t = std::thread::spawn(move || {
+            let mut g = s2.lock().unwrap();
+            while *g == 0 {
+                g = g.wait(&cv2).unwrap();
+            }
+            *g
+        });
+        // Give the waiter a chance to park, then publish.
+        std::thread::sleep(Duration::from_millis(10));
+        *staging.lock().unwrap() = 7;
+        cv.notify_all();
+        assert_eq!(t.join().unwrap(), 7);
+        // The waiter's wait/re-wrap cycle must leave this thread's
+        // tracker clean for a fresh blessed-order pass.
+        let _g = staging.lock().unwrap();
+    }
+
+    #[test]
+    fn condvar_wait_timeout_times_out_and_releases() {
+        let m = OrderedMutex::new(rank::BATCHER_QUEUES, "batcher.queues", ());
+        let cv = Condvar::new();
+        let g = m.lock().unwrap();
+        let (g, res) = g.wait_timeout(&cv, Duration::from_millis(5)).unwrap();
+        assert!(res.timed_out());
+        drop(g);
+        let _again = m.lock().unwrap();
+    }
+
+    #[test]
+    fn poisoned_lock_still_returns_guard() {
+        let m = Arc::new(OrderedMutex::new(rank::METRICS, "metrics.inner", 3u32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        // Poisoned: Err carries a usable guard, mirroring std.
+        let v = match m.lock() {
+            Ok(g) => *g,
+            Err(p) => *p.into_inner(),
+        };
+        assert_eq!(v, 3);
+        // Tracker stayed balanced through the poison path.
+        let _again = m.lock();
+    }
+}

@@ -184,6 +184,7 @@ pub fn run(trace: &Trace, cfg: &SimConfig) -> SimReport {
     // The batcher speaks `Instant`; anchor virtual µs to an arbitrary
     // origin. Only differences of these instants are ever used, so the
     // origin's wall value cannot leak into any outcome.
+    // compeft-lint: allow(no-wall-clock) -- arbitrary origin for the virtual clock; only differences are used
     let origin = Instant::now();
     let at = |t_us: u64| origin + Duration::from_micros(t_us);
     let us_of = |i: Instant| i.duration_since(origin).as_micros() as u64;

@@ -104,6 +104,10 @@ struct EntryMeta {
 /// Read-only view of a ZIP archive.
 pub struct ZipArchive<R> {
     reader: R,
+    /// Total archive length, used to bound per-entry reads: a hostile
+    /// central directory can declare sizes up to ~4 GiB, and buffers
+    /// must never be allocated from a claim the file cannot back.
+    stream_len: u64,
     entries: Vec<EntryMeta>,
 }
 
@@ -172,7 +176,7 @@ impl<R: Read + Seek> ZipArchive<R> {
             });
             pos += 46 + name_len + extra_len + comment_len;
         }
-        Ok(ZipArchive { reader, entries })
+        Ok(ZipArchive { reader, stream_len: len, entries })
     }
 
     /// Number of entries.
@@ -208,6 +212,16 @@ impl<R: Read + Seek> ZipArchive<R> {
         }
         let name_len = rd_u16(&lh, 26) as u64;
         let extra_len = rd_u16(&lh, 28) as u64;
+        // Bound the declared size by what the file can actually hold
+        // *before* sizing the buffer from it: a lying central directory
+        // must produce an error, not a multi-gigabyte allocation.
+        let data_start = meta.local_offset + 30 + name_len + extra_len;
+        if data_start + meta.comp_size > self.stream_len {
+            return Err(ZipError::new(format!(
+                "entry {:?} claims {} bytes past end of archive",
+                meta.name, meta.comp_size
+            )));
+        }
         self.reader.seek(SeekFrom::Current((name_len + extra_len) as i64))?;
         let mut data = vec![0u8; meta.comp_size as usize];
         self.reader.read_exact(&mut data)?;
@@ -429,6 +443,22 @@ mod tests {
         let mut ar = ZipArchive::new(Cursor::new(bytes)).unwrap();
         assert!(ar.by_index(0).is_err());
         assert!(ZipArchive::new(Cursor::new(b"garbage".to_vec())).is_err());
+    }
+
+    #[test]
+    fn lying_comp_size_errs_before_allocating() {
+        let mut bytes = write_archive(&[("x", b"payload")]);
+        // Patch the central directory's compressed size to ~4 GiB. The
+        // reader must reject it against the real archive length instead
+        // of allocating (and zeroing) a 4 GiB buffer first.
+        let cd = bytes
+            .windows(4)
+            .position(|w| w == CENTRAL_SIG.to_le_bytes())
+            .unwrap();
+        bytes[cd + 20..cd + 24].copy_from_slice(&0xFFFF_FFFEu32.to_le_bytes());
+        let mut ar = ZipArchive::new(Cursor::new(bytes)).unwrap();
+        let err = ar.by_index(0).unwrap_err();
+        assert!(err.to_string().contains("past end of archive"), "{err}");
     }
 
     /// Bytes of `np.savez(buf, w=..., ids=...)` produced by NumPy 1.x —

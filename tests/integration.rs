@@ -318,7 +318,8 @@ fn synthetic_prefetch_pipeline_matches_blocking() -> anyhow::Result<()> {
         PrepareContext, PreparedExpert, Prefetcher, SimLink, TakeOutcome,
     };
     use compeft::coordinator::metrics::Metrics;
-    use std::sync::{Arc, Mutex};
+    use compeft::util::sync::{rank, OrderedMutex};
+    use std::sync::Arc;
 
     let dir = fresh_dir("prefetch_eq");
     let mut reg = Registry::new();
@@ -351,7 +352,11 @@ fn synthetic_prefetch_pipeline_matches_blocking() -> anyhow::Result<()> {
             .with_pool(Arc::new(ThreadPool::new(workers))),
             registry: Arc::clone(&reg),
             templates: templates.clone(),
-            cpu: Arc::new(Mutex::new(LruTier::new("cpu", 64 << 20))),
+            cpu: Arc::new(OrderedMutex::new(
+                rank::CPU_TIER,
+                "cache.cpu_tier",
+                LruTier::new("cpu", 64 << 20),
+            )),
             archive: None,
         })
     };
@@ -417,7 +422,8 @@ fn synthetic_sharded_store_fault_sweeps_converge() -> anyhow::Result<()> {
     use compeft::coordinator::store::{ExpertStore, Placement, StoreConfig};
     use compeft::coordinator::transport::{FaultPlan, FaultSpec};
     use compeft::coordinator::{PrepareContext, PreparedExpert, SimLink};
-    use std::sync::{Arc, Mutex};
+    use compeft::util::sync::{rank, OrderedMutex};
+    use std::sync::Arc;
 
     let dir = fresh_dir("store_faults");
     let mut reg = Registry::new();
@@ -452,7 +458,11 @@ fn synthetic_sharded_store_fault_sweeps_converge() -> anyhow::Result<()> {
         .with_pool(Arc::new(ThreadPool::new(2))),
         registry: Arc::clone(&reg),
         templates: templates.clone(),
-        cpu: Arc::new(Mutex::new(LruTier::new("cpu", 64 << 20))),
+        cpu: Arc::new(OrderedMutex::new(
+            rank::CPU_TIER,
+            "cache.cpu_tier",
+            LruTier::new("cpu", 64 << 20),
+        )),
         archive: None,
     };
     let reference: Vec<PreparedExpert> =
@@ -521,7 +531,11 @@ fn synthetic_sharded_store_fault_sweeps_converge() -> anyhow::Result<()> {
                     .with_store(Arc::clone(&store)),
                     registry: Arc::clone(&reg),
                     templates: templates.clone(),
-                    cpu: Arc::new(Mutex::new(LruTier::new("cpu", 64 << 20))),
+                    cpu: Arc::new(OrderedMutex::new(
+                        rank::CPU_TIER,
+                        "cache.cpu_tier",
+                        LruTier::new("cpu", 64 << 20),
+                    )),
                     archive: None,
                 };
                 for (id, want) in workload.iter().zip(&reference) {
@@ -580,7 +594,8 @@ fn synthetic_archive_tier_matches_host_and_remote_paths() -> anyhow::Result<()> 
     use compeft::coordinator::loader::ExpertLoader;
     use compeft::coordinator::metrics::Metrics;
     use compeft::coordinator::{PrepareContext, PreparedExpert, SimLink};
-    use std::sync::{Arc, Mutex};
+    use compeft::util::sync::{rank, OrderedMutex};
+    use std::sync::Arc;
 
     let dir = fresh_dir("archive_tiers");
     let mut reg = Registry::new();
@@ -637,7 +652,11 @@ fn synthetic_archive_tier_matches_host_and_remote_paths() -> anyhow::Result<()> 
             loader,
             registry: Arc::clone(&reg),
             templates: templates.clone(),
-            cpu: Arc::new(Mutex::new(LruTier::new("cpu", 64 << 20))),
+            cpu: Arc::new(OrderedMutex::new(
+                rank::CPU_TIER,
+                "cache.cpu_tier",
+                LruTier::new("cpu", 64 << 20),
+            )),
             archive,
         };
         (ctx, net)
@@ -737,7 +756,8 @@ fn synthetic_archive_bitflip_and_truncation_fuzz() -> anyhow::Result<()> {
     use compeft::coordinator::loader::ExpertLoader;
     use compeft::coordinator::metrics::Metrics;
     use compeft::coordinator::{PrepareContext, SimLink};
-    use std::sync::{Arc, Mutex};
+    use compeft::util::sync::{rank, OrderedMutex};
+    use std::sync::Arc;
 
     let dir = fresh_dir("archive_fuzz");
     let mut reg = Registry::new();
@@ -831,7 +851,11 @@ fn synthetic_archive_bitflip_and_truncation_fuzz() -> anyhow::Result<()> {
         loader: mk_loader(&flat_metrics),
         registry: Arc::clone(&reg),
         templates: templates.clone(),
-        cpu: Arc::new(Mutex::new(LruTier::new("cpu", 64 << 20))),
+        cpu: Arc::new(OrderedMutex::new(
+            rank::CPU_TIER,
+            "cache.cpu_tier",
+            LruTier::new("cpu", 64 << 20),
+        )),
         archive: None,
     };
     let want: Vec<_> = ["f0", "f1"].iter().map(|id| flat_ctx.prepare(id).unwrap()).collect();
@@ -848,7 +872,11 @@ fn synthetic_archive_bitflip_and_truncation_fuzz() -> anyhow::Result<()> {
         loader: mk_loader(&metrics),
         registry: Arc::clone(&reg),
         templates: templates.clone(),
-        cpu: Arc::new(Mutex::new(LruTier::new("cpu", 64 << 20))),
+        cpu: Arc::new(OrderedMutex::new(
+            rank::CPU_TIER,
+            "cache.cpu_tier",
+            LruTier::new("cpu", 64 << 20),
+        )),
         archive: Some(tier),
     };
     for (id, w) in ["f0", "f1"].iter().zip(&want) {

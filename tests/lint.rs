@@ -1,0 +1,23 @@
+//! Tier-1 gate: `compeft-lint` must report zero unsuppressed
+//! violations over `rust/src`. The same pass runs as `compeft lint`
+//! (CLI) and as a dedicated CI step; this test keeps it inside
+//! `cargo test -q` so a violation can't land even when CI config is
+//! bypassed.
+
+use std::path::Path;
+
+#[test]
+fn tree_is_lint_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let diags = compeft::analysis::lint_tree(root).expect("lint walk failed");
+    if !diags.is_empty() {
+        for d in &diags {
+            eprintln!("{d}");
+        }
+        panic!(
+            "compeft-lint: {} violation(s); fix them or annotate with \
+             `// compeft-lint: allow(rule-id) -- <reason>`",
+            diags.len()
+        );
+    }
+}
