@@ -4,7 +4,8 @@
 //!
 //! Run: `cargo bench --bench ops_micro`
 //!      `cargo bench --bench ops_micro -- --quick` (256K-param vectors,
-//!      5 iterations — the CI smoke shape)
+//!      5 iterations — the CI smoke shape; writes `BENCH_decode.json`
+//!      unless `--json <path>` picks another artifact location)
 //!      `... -- --quick --json BENCH_ops_micro.json` (machine-readable
 //!      `{bench, row, value, unit, config}` records)
 
@@ -54,7 +55,13 @@ fn main() {
     let quick = args.iter().any(|a| a == "--quick");
     let d: usize = if quick { 1 << 18 } else { 1 << 22 };
     let sz = if quick { "256K" } else { "4M" };
-    let mut sink = json_flag(&args).map(|path| {
+    // `--quick` is the CI smoke shape: it always leaves a
+    // machine-readable artifact behind (`BENCH_decode.json` unless
+    // `--json` chose a path) so the perf gate has something to assert.
+    let json_path = json_flag(&args).or_else(|| {
+        quick.then(|| std::path::PathBuf::from("BENCH_decode.json"))
+    });
+    let mut sink = json_path.map(|path| {
         let mut config = Json::obj();
         config
             .set("quick", Json::Bool(quick))
@@ -124,6 +131,25 @@ fn main() {
         runt(&mut b, sink, &format!("golomb_decode_{sz}_k5"), bytes_dense, || {
             black_box(golomb::decode(&encoded).unwrap());
         });
+
+    // Bit-at-a-time oracle loop: the pre-word-kernel decoder, kept as
+    // the baseline the branchless 64-bit window kernel is measured
+    // against (and differentially tested against in `golomb`/`bitio`).
+    let bitwise_decode =
+        runt(&mut b, sink, &format!("golomb_decode_bitloop_{sz}_k5"), bytes_dense, || {
+            black_box(golomb::decode_bitwise(&encoded).unwrap());
+        });
+    assert_eq!(
+        golomb::decode_bitwise(&encoded).unwrap(),
+        tern,
+        "bit-loop oracle diverged from the word kernel"
+    );
+    row(
+        &mut b,
+        sink,
+        "word_decode_speedup_vs_bitloop",
+        &[("x", bitwise_decode.mean.as_secs_f64() / serial_decode.mean.as_secs_f64())],
+    );
 
     // Parallel framed decode: worker-count scaling on the same payload
     // through the v2 frame table (the serving-path swap-in decode).

@@ -11,7 +11,9 @@
 //!
 //! Run: `cargo bench --bench table5_latency`
 //!      `cargo bench --bench table5_latency -- --quick` (prefetch +
-//!      decode rows only, no artifacts)
+//!      decode rows only, no model artifacts; writes
+//!      `BENCH_latency.json` unless `--json <path>` picks another
+//!      artifact location)
 
 use compeft::bench_support as bs;
 use compeft::compeft::compress::CompressConfig;
@@ -189,6 +191,119 @@ fn prefetch_comparison(
         snap.prefetch_hits,
         snap.prefetch_waits,
         snap.prefetch_misses,
+    );
+    std::fs::remove_dir_all(&dir).ok();
+    Ok(())
+}
+
+/// Fused vs staged cold swap through the sharded store: the same
+/// multi-frame `.cpeft` expert (nnz well past the 8192-nonzero frame
+/// size) run (a) staged — striped fetch, then decode — and (b) fused —
+/// Golomb frames decode as their stripes land
+/// (`ExpertLoader::fetch_decode_fused`). Both paths are asserted
+/// bit-identical; the fused simulated cold-swap cost must come in
+/// under the staged fetch+decode sum (≈ `max(fetch, decode)` instead
+/// of the sum), and the hidden time shows up in `decode_overlap_us`.
+fn fusion_comparison(
+    bench: &mut Bench,
+    sink: &mut Option<JsonSink>,
+    quick: bool,
+) -> anyhow::Result<()> {
+    let elems: usize = if quick { 1 << 18 } else { 1 << 21 };
+    let dir = std::env::temp_dir()
+        .join(format!("compeft_t5_fusion_{}", std::process::id()));
+    std::fs::create_dir_all(&dir)?;
+    let mut rng = Pcg::seed(909);
+    let data: Vec<f32> = (0..elems).map(|_| rng.normal_ms(0.0, 7e-4) as f32).collect();
+    let mut tv = ParamSet::new();
+    tv.insert("w.lora_a", Tensor::new(vec![elems], data));
+    let npz = dir.join("fused.lora.npz");
+    tv.save_npz(&npz)?;
+    let mut reg = Registry::new();
+    let ccfg = CompressConfig { density: 0.1, alpha: 1.0, ..Default::default() };
+    reg.register_compeft("fused", "t", "s", ExpertMethod::Lora, &npz, &ccfg)?;
+    let rec = reg.get("fused").unwrap().clone();
+    let template = ParamSet::load_npz(&npz)?;
+
+    let metrics = Arc::new(Metrics::new());
+    let mk_loader = || {
+        // Fresh store per leg and per rep so link queueing never
+        // accumulates across measurements (same discipline as the
+        // striped-fetch rows).
+        let mut cfg = StoreConfig::new(3, 2);
+        cfg.time_scale = 0.0;
+        cfg.stripe_bytes = 2048;
+        let pool = Arc::new(ThreadPool::new(4));
+        let store = Arc::new(ExpertStore::new(
+            cfg,
+            Some(Arc::clone(&pool)),
+            Arc::clone(&metrics),
+        ));
+        ExpertLoader::new(
+            SimLink::new("net", LinkSpec::internet()).with_time_scale(0.0),
+            SimLink::new("pcie", LinkSpec::pcie()).with_time_scale(0.0),
+        )
+        .with_pool(pool)
+        .with_store(store)
+    };
+
+    // The fusion shape gate: the registry-built container must be a
+    // single-part Golomb payload with several frames, or the bench is
+    // not exercising what it claims to.
+    {
+        let (bytes, _) = mk_loader().fetch_encoded(&rec)?;
+        let plan = compeft::compeft::format::golomb_frame_plan(bytes.as_slice())?
+            .expect("registry-built .cpeft is a single-part Golomb container");
+        assert!(
+            plan.table.frames.len() > 1,
+            "fusion bench needs a multi-frame payload ({} frame)",
+            plan.table.frames.len()
+        );
+    }
+
+    let mut staged_ms = Vec::with_capacity(REPS);
+    let mut fused_ms = Vec::with_capacity(REPS);
+    for _ in 0..REPS {
+        let staged_loader = mk_loader();
+        let (bytes, fetch) = staged_loader.fetch_encoded(&rec)?;
+        let (tv_staged, decode) = staged_loader.decode(&rec, bytes.as_slice(), &template)?;
+        staged_ms.push((fetch + decode).as_secs_f64() * 1e3);
+
+        let fused = mk_loader()
+            .fetch_decode_fused(&rec, &template)?
+            .expect("store-backed .cpeft expert takes the fused path");
+        assert_eq!(fused.tv, tv_staged, "fused decode must be bit-identical");
+        assert!(
+            fused.fused <= fused.fetch + fused.decode,
+            "fused cold swap can never exceed its own staged sum"
+        );
+        fused_ms.push(fused.fused.as_secs_f64() * 1e3);
+    }
+    let staged_mean = stats::mean(&staged_ms);
+    let fused_mean = stats::mean(&fused_ms);
+    assert!(
+        fused_mean < staged_mean,
+        "fused cold swap ({fused_mean:.3} ms) must beat the staged \
+         fetch+decode sum ({staged_mean:.3} ms)"
+    );
+    let snap = metrics.snapshot();
+    assert_eq!(snap.fused_loads, REPS as u64, "every rep ran the fused path");
+    let fields = [
+        ("elems", elems as f64),
+        ("encoded_bytes", rec.encoded_bytes as f64),
+        ("staged_ms", staged_mean),
+        ("fused_ms", fused_mean),
+        ("hidden_ms", staged_mean - fused_mean),
+        ("overlap_saved_ms", snap.decode_overlap_us as f64 / 1e3 / REPS as f64),
+        ("speedup_x", staged_mean / fused_mean.max(1e-9)),
+    ];
+    bench.row("fusion/cold_swap_overlap", &fields);
+    sink_row(sink, "fusion/cold_swap_overlap", &fields);
+    println!(
+        "fused fetch→decode: staged {staged_mean:.3} ms -> fused {fused_mean:.3} ms \
+         per cold swap ({} of encoded payload, {:.3} ms decode overlap hidden/rep)",
+        human_bytes(rec.encoded_bytes),
+        snap.decode_overlap_us as f64 / 1e3 / REPS as f64,
     );
     std::fs::remove_dir_all(&dir).ok();
     Ok(())
@@ -406,7 +521,12 @@ fn archive_view_comparison(
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let quick = args.iter().any(|a| a == "--quick");
-    let mut sink = json_flag(&args).map(|path| {
+    // `--quick` is the CI smoke shape: always leave the machine-readable
+    // artifact behind (`BENCH_latency.json` unless `--json` chose a path).
+    let json_path = json_flag(&args).or_else(|| {
+        quick.then(|| std::path::PathBuf::from("BENCH_latency.json"))
+    });
+    let mut sink = json_path.map(|path| {
         let mut config = Json::obj();
         config.set("quick", Json::Bool(quick));
         JsonSink::new(path, "table5_latency", config)
@@ -414,6 +534,7 @@ fn main() -> anyhow::Result<()> {
     let mut bench = Bench::new("table5");
     prefetch_comparison(&mut bench, &mut sink, quick)?;
     striped_fetch_comparison(&mut bench, &mut sink, quick)?;
+    fusion_comparison(&mut bench, &mut sink, quick)?;
     archive_view_comparison(&mut bench, &mut sink, quick)?;
     if let Some(s) = &sink {
         s.write()?;

@@ -215,6 +215,12 @@ fn main() -> Result<()> {
                 report.payload_copies
             );
         }
+        if report.fused_loads > 0 {
+            println!(
+                "  fused decode: {} loads, overlap hidden {:.2?}\n",
+                report.fused_loads, report.decode_overlap
+            );
+        }
         summary.push((
             format,
             n_req as f64 / wall.as_secs_f64(),

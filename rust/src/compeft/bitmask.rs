@@ -102,10 +102,22 @@ impl MaskPair {
         }
     }
 
+    /// Population count of a word range — pre-sizes the index lists the
+    /// trailing-zeros scan fills, so expansion never reallocs mid-scan
+    /// (and the popcount sweep warms the words for the scan itself).
+    fn range_nnz(words: &[u64], ws: usize, we: usize) -> usize {
+        words
+            .get(ws..we)
+            .unwrap_or_default()
+            .iter()
+            .map(|w| w.count_ones() as usize)
+            .sum()
+    }
+
     pub fn to_ternary(&self) -> TernaryVector {
-        let mut plus = Vec::new();
-        let mut minus = Vec::new();
         let w = self.plus.len();
+        let mut plus = Vec::with_capacity(Self::range_nnz(&self.plus, 0, w));
+        let mut minus = Vec::with_capacity(Self::range_nnz(&self.minus, 0, w));
         Self::unpack_words(&self.plus, 0, w, &mut plus);
         Self::unpack_words(&self.minus, 0, w, &mut minus);
         TernaryVector { len: self.len, scale: self.scale, plus, minus }
@@ -126,14 +138,14 @@ impl MaskPair {
         let w = self.plus.len();
         let ranges = crate::util::pool::chunk_ranges(w, chunk_words);
         let blocks: Vec<(Vec<u32>, Vec<u32>)> = pool.scoped_map(ranges, |(ws, we)| {
-            let mut plus = Vec::new();
-            let mut minus = Vec::new();
+            let mut plus = Vec::with_capacity(Self::range_nnz(&self.plus, ws, we));
+            let mut minus = Vec::with_capacity(Self::range_nnz(&self.minus, ws, we));
             Self::unpack_words(&self.plus, ws, we, &mut plus);
             Self::unpack_words(&self.minus, ws, we, &mut minus);
             (plus, minus)
         });
-        let mut plus = Vec::new();
-        let mut minus = Vec::new();
+        let mut plus = Vec::with_capacity(Self::range_nnz(&self.plus, 0, w));
+        let mut minus = Vec::with_capacity(Self::range_nnz(&self.minus, 0, w));
         for (p, m) in blocks {
             plus.extend_from_slice(&p);
             minus.extend_from_slice(&m);

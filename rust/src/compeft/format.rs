@@ -316,10 +316,26 @@ pub fn from_bytes_par(
     from_bytes_impl(bytes, Some(pool))
 }
 
-fn from_bytes_impl(
-    bytes: &[u8],
-    pool: Option<&ThreadPool>,
-) -> Result<(CompressedParamSet, Encoding)> {
+/// A structurally validated container, payloads not yet decoded: the
+/// output of [`parse_structure`], everything both readers (and the
+/// fused-path planner) agree on before any payload bits are touched.
+struct RawContainer {
+    version: u16,
+    granularity: Granularity,
+    enc: Encoding,
+    layout: Vec<(String, Vec<usize>, usize)>,
+    /// Per part: name, v2 frame table, absolute payload byte range in
+    /// the container buffer.
+    parts: Vec<(String, Option<FrameTable>, std::ops::Range<usize>)>,
+}
+
+/// Every validation a `.cpeft` read performs before decoding payloads:
+/// magic/version/granularity/encoding, the full-coverage CRC, the
+/// layout table, the part records (with their v2 frame tables), and the
+/// no-trailing-garbage rule. Both readers and
+/// [`golomb_frame_plan`] go through here, so a corrupt container is
+/// rejected identically on every path.
+fn parse_structure(bytes: &[u8]) -> Result<RawContainer> {
     if bytes.len() < 14 || bytes.get(..4) != Some(MAGIC.as_slice()) {
         bail!("not a .cpeft file");
     }
@@ -381,7 +397,8 @@ fn from_bytes_impl(
     if n_parts > (body.len() - pos) / 12 + 1 {
         bail!("part count {n_parts} exceeds what {} bytes can hold", body.len() - pos);
     }
-    let mut raw: Vec<(String, Option<FrameTable>, &[u8])> = Vec::with_capacity(n_parts);
+    let mut raw: Vec<(String, Option<FrameTable>, std::ops::Range<usize>)> =
+        Vec::with_capacity(n_parts);
     for _ in 0..n_parts {
         let name = get_str(body, &mut pos)?;
         let frames = if version >= 2 {
@@ -404,9 +421,9 @@ fn from_bytes_impl(
         if plen > body.len() - pos {
             bail!("truncated payload for part {name:?}");
         }
-        let payload = body.get(pos..pos + plen).unwrap_or_default();
+        // Absolute range in the container buffer (body starts at 10).
+        raw.push((name, frames, 10 + pos..10 + pos + plen));
         pos += plen;
-        raw.push((name, frames, payload));
     }
     // A CRC-consistent writer that appends junk after the last part is
     // corrupt, not tolerated: every body byte must be accounted for.
@@ -416,6 +433,46 @@ fn from_bytes_impl(
             body.len() - pos
         );
     }
+    Ok(RawContainer { version, granularity, enc, layout, parts: raw })
+}
+
+/// The v2 golomb frame-table revalidation, enforced on *every* read
+/// path (serial, parallel, and the fused frame-at-a-time path): the
+/// honest table is a pure function of the decoded vector and the
+/// stored chunk size, so recomputing it validates every offset and
+/// predecessor index — a lying but CRC-consistent table fails
+/// identically however the container is opened.
+fn validate_part_table(
+    name: &str,
+    frames: Option<&FrameTable>,
+    tern: &TernaryVector,
+    enc: Encoding,
+) -> Result<()> {
+    if matches!(enc, Encoding::Golomb) {
+        if let Some(ft) = frames {
+            let chunk = ft.chunk_nnz as usize;
+            if chunk == 0 || *ft != golomb::frame_table(tern, chunk) {
+                bail!(
+                    "part {name:?}: frame table ({} frames, chunk {}) \
+                     inconsistent with payload ({} nonzeros)",
+                    ft.frames.len(),
+                    ft.chunk_nnz,
+                    tern.nnz()
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+fn from_bytes_impl(
+    bytes: &[u8],
+    pool: Option<&ThreadPool>,
+) -> Result<(CompressedParamSet, Encoding)> {
+    let rc = parse_structure(bytes)?;
+    let enc = rc.enc;
+    let payload_at =
+        |r: &std::ops::Range<usize>| bytes.get(r.clone()).unwrap_or_default();
 
     let serial_decode = |payload: &[u8]| -> Result<TernaryVector> {
         match enc {
@@ -423,11 +480,14 @@ fn from_bytes_impl(
             Encoding::Bitmask => Ok(MaskPair::from_bytes(payload)?.to_ternary()),
         }
     };
-    let decoded: Vec<Result<TernaryVector>> = match (pool, raw.as_slice()) {
-        (None, _) => {
-            raw.iter().map(|(_, _, payload)| serial_decode(payload)).collect()
-        }
-        (Some(pool), [(_, frames, payload)]) => {
+    let decoded: Vec<Result<TernaryVector>> = match (pool, rc.parts.as_slice()) {
+        (None, _) => rc
+            .parts
+            .iter()
+            .map(|(_, _, r)| serial_decode(payload_at(r)))
+            .collect(),
+        (Some(pool), [(_, frames, r)]) => {
+            let payload = payload_at(r);
             vec![match (enc, frames) {
                 (Encoding::Golomb, Some(ft)) => golomb::decode_par(payload, ft, pool),
                 (Encoding::Golomb, None) => golomb::decode(payload),
@@ -442,38 +502,87 @@ fn from_bytes_impl(
             }]
         }
         (Some(pool), _) => {
-            let payloads: Vec<&[u8]> = raw.iter().map(|(_, _, p)| *p).collect();
+            let payloads: Vec<&[u8]> =
+                rc.parts.iter().map(|(_, _, r)| payload_at(r)).collect();
             pool.scoped_map(payloads, &serial_decode)
         }
     };
 
     let mut parts = BTreeMap::new();
-    for ((name, frames, _), tern) in raw.iter().zip(decoded) {
+    for ((name, frames, _), tern) in rc.parts.iter().zip(decoded) {
         let tern = tern.with_context(|| format!("part {name:?}"))?;
-        // v2 golomb parts must carry a table that matches the payload —
-        // enforced on *every* read path (the honest table is a pure
-        // function of the decoded vector and the stored chunk size, so
-        // recomputing it validates every offset and predecessor index),
-        // meaning a lying but CRC-consistent table fails identically
-        // whether the file is opened serially or in parallel.
-        if matches!(enc, Encoding::Golomb) {
-            if let Some(ft) = frames {
-                let chunk = ft.chunk_nnz as usize;
-                if chunk == 0 || *ft != golomb::frame_table(&tern, chunk) {
-                    bail!(
-                        "part {name:?}: frame table ({} frames, chunk {}) \
-                         inconsistent with payload ({} nonzeros)",
-                        ft.frames.len(),
-                        ft.chunk_nnz,
-                        tern.nnz()
-                    );
-                }
-            }
-        }
+        validate_part_table(name, frames.as_ref(), &tern, enc)?;
         parts.insert(name.clone(), tern);
     }
 
-    Ok((CompressedParamSet { granularity, layout, parts }, enc))
+    Ok((
+        CompressedParamSet { granularity: rc.granularity, layout: rc.layout, parts },
+        enc,
+    ))
+}
+
+/// The fused fetch→decode plan for a container: when `bytes` is a v2
+/// **single-part Golomb** container, everything the loader needs to
+/// decode its payload frame by frame as fetch stripes land — the frame
+/// table, the payload's absolute byte range (so stripe coverage maps
+/// onto [`golomb::FrameDecoder::frame_end_byte`] watermarks), and the
+/// layout/granularity to rebuild the param set at the end.
+///
+/// Runs every pre-decode validation [`from_bytes`] runs — full-buffer
+/// CRC included — so a corrupt container is rejected before any frame
+/// decodes. (In a real deployment the per-stripe CRC gates the store
+/// already applies would stand in until the last stripe lands; here
+/// the whole buffer is in memory, so the container CRC is simply
+/// checked up front.) Returns `Ok(None)` for every other *valid* shape
+/// (v1, bitmask, multi-part, empty) — the caller falls back to the
+/// unfused fetch-then-decode path.
+pub struct GolombFramePlan {
+    /// The single part's name.
+    pub name: String,
+    /// Its stored frame table (revalidated against the decode at
+    /// [`GolombFramePlan::finish`]).
+    pub table: FrameTable,
+    /// Absolute byte range of the Golomb payload in the container.
+    pub payload: std::ops::Range<usize>,
+    granularity: Granularity,
+    layout: Vec<(String, Vec<usize>, usize)>,
+}
+
+pub fn golomb_frame_plan(bytes: &[u8]) -> Result<Option<GolombFramePlan>> {
+    let rc = parse_structure(bytes)?;
+    if rc.version < 2 || rc.enc != Encoding::Golomb || rc.parts.len() != 1 {
+        return Ok(None);
+    }
+    let mut parts = rc.parts;
+    let Some((name, Some(table), payload)) = parts.pop() else {
+        return Ok(None);
+    };
+    Ok(Some(GolombFramePlan {
+        name,
+        table,
+        payload,
+        granularity: rc.granularity,
+        layout: rc.layout,
+    }))
+}
+
+impl GolombFramePlan {
+    /// Wrap the frame-decoded vector back into the param set, applying
+    /// the same stored-table revalidation as [`from_bytes`] — the fused
+    /// path rejects a lying frame table exactly like the unfused ones.
+    pub fn finish(self, tern: TernaryVector) -> Result<(CompressedParamSet, Encoding)> {
+        validate_part_table(&self.name, Some(&self.table), &tern, Encoding::Golomb)?;
+        let mut parts = BTreeMap::new();
+        parts.insert(self.name, tern);
+        Ok((
+            CompressedParamSet {
+                granularity: self.granularity,
+                layout: self.layout,
+                parts,
+            },
+            Encoding::Golomb,
+        ))
+    }
 }
 
 // -- corruption-sweep support (shared by the format tests and the
@@ -741,6 +850,53 @@ mod tests {
             from_bytes_par(&evil, &pool).is_err(),
             "parallel reader accepted a lying offset"
         );
+    }
+
+    /// The fused-path planner: single-part v2 Golomb containers get a
+    /// plan whose frame-by-frame decode reproduces `from_bytes`
+    /// exactly; every other valid shape opts out with `Ok(None)`;
+    /// corrupt containers and lying tables are rejected just like on
+    /// the unfused paths.
+    #[test]
+    fn golomb_frame_plan_matches_from_bytes_and_validates() {
+        use crate::compeft::golomb::FrameDecoder;
+        let c = sample_compressed(Granularity::Global);
+        let bytes = to_bytes(&c, Encoding::Golomb);
+        let plan = golomb_frame_plan(&bytes).unwrap().expect("plan for v2 golomb");
+        assert!(plan.payload.end <= bytes.len());
+        let payload = &bytes[plan.payload.clone()];
+        let mut fd = FrameDecoder::new(payload, &plan.table).unwrap();
+        for _ in 0..fd.frame_count() {
+            fd.decode_next().unwrap();
+        }
+        let tern = fd.finish().unwrap();
+        let (fused, fenc) = plan.finish(tern).unwrap();
+        let (unfused, uenc) = from_bytes(&bytes).unwrap();
+        assert_eq!(fenc, uenc);
+        assert_eq!(fused, unfused, "fused decode must be bit-identical");
+
+        // Valid shapes the fused path declines: bitmask, v1, multi-part.
+        let bm = to_bytes(&c, Encoding::Bitmask);
+        assert!(golomb_frame_plan(&bm).unwrap().is_none(), "bitmask");
+        let v1 = to_bytes_v1(&c, Encoding::Golomb);
+        assert!(golomb_frame_plan(&v1).unwrap().is_none(), "v1");
+        let multi = sample_compressed(Granularity::PerTensor);
+        let mb = to_bytes(&multi, Encoding::Golomb);
+        assert!(golomb_frame_plan(&mb).unwrap().is_none(), "multi-part");
+
+        // Corruption is rejected before any frame decodes.
+        let mut evil = bytes.clone();
+        let mid = evil.len() / 2;
+        evil[mid] ^= 0x40;
+        assert!(golomb_frame_plan(&evil).is_err(), "corrupt container");
+
+        // A lying frame table passes the plan (it is CRC-consistent)
+        // but fails at finish, exactly like the unfused readers.
+        let plan = golomb_frame_plan(&bytes).unwrap().unwrap();
+        let payload = &bytes[plan.payload.clone()];
+        let mut wrong = crate::compeft::golomb::decode(payload).unwrap();
+        wrong.plus.pop();
+        assert!(plan.finish(wrong).is_err(), "lying table must fail finish");
     }
 
     #[test]

@@ -223,12 +223,99 @@ fn parse_header(r: &mut BitReader, payload_bytes: usize) -> Result<StreamHeader>
     Ok(StreamHeader { len, nnz, b, scale })
 }
 
+/// Decode one Rice codeword (unary quotient ++ `b`-bit remainder ++
+/// sign bit) starting at `r`'s position. Word-at-a-time fast path:
+/// peek a 64-bit window once, and when the whole codeword fits inside
+/// its valid bits, extract quotient (`leading_zeros` on the inverted
+/// window), remainder, and sign with shifts alone — no per-bit loop,
+/// no branch per field — then consume the codeword in one step.
+/// Codewords straddling the window edge (giant gaps, or the stream
+/// tail) fall back to the bit-at-a-time oracle loop, which is also
+/// what reports every truncation error, so corrupt streams fail with
+/// the same messages on both paths.
+#[inline]
+fn decode_one(r: &mut BitReader, prev: i64, b: u32, len: usize) -> Result<(u32, bool)> {
+    let (w, avail) = r.peek_word();
+    let ones = (!w).leading_zeros();
+    // ones + terminator + remainder + sign, all inside the valid bits.
+    // peek_word zero-fills below `avail`, so a unary run reaching the
+    // window edge reads as `ones >= avail` and takes the slow path —
+    // the guard can never mistake padding for a terminator.
+    let width = ones + 2 + b;
+    if width <= avail {
+        let after = ones + 1; // skip the run and its terminator
+        // Top `b` bits after the terminator. Two-step shift: a single
+        // `>> (64 - b)` would be UB at b = 0; this form yields 0 there
+        // (the first right shift zero-fills bit 63).
+        let rem = ((w << after) >> 1) >> (63 - b);
+        let gap = ((ones as u64) << b) | rem;
+        let idx = prev + 1 + gap as i64;
+        if idx as usize >= len {
+            bail!("decoded index {idx} out of range {len}");
+        }
+        let sign = (w >> (63 - (after + b))) & 1 == 1;
+        r.consume(width);
+        return Ok((idx as u32, sign));
+    }
+    let q = r.get_unary().context("truncated unary gap")?;
+    let rem = r.get_bits(b).context("truncated remainder")?;
+    let gap = (q << b) | rem;
+    let idx = prev + 1 + gap as i64;
+    if idx as usize >= len {
+        bail!("decoded index {idx} out of range {len}");
+    }
+    let sign = r.get_bit().context("truncated sign bit")?;
+    Ok((idx as u32, sign))
+}
+
 /// Rice-decode `count` (gap, sign) entries whose predecessor nonzero sat
 /// at index `prev` (−1 at stream start), appending indices to
 /// `plus`/`minus`. Returns the index of the last decoded nonzero. Both
 /// the serial and the per-frame parallel decoders funnel through this
-/// one loop — the exact mirror of [`encode_entries`].
+/// one loop — the exact mirror of [`encode_entries`] — built on the
+/// word-at-a-time [`decode_one`] kernel, with the sign dispatched by
+/// select (index into a two-element array) rather than a branch.
 fn decode_entries(
+    r: &mut BitReader,
+    count: usize,
+    mut prev: i64,
+    b: u32,
+    len: usize,
+    plus: &mut Vec<u32>,
+    minus: &mut Vec<u32>,
+) -> Result<i64> {
+    for _ in 0..count {
+        let (idx, sign) = decode_one(r, prev, b, len)?;
+        [&mut *minus, &mut *plus][sign as usize].push(idx);
+        prev = idx as i64;
+    }
+    Ok(prev)
+}
+
+/// Rice-decode exactly `slot.len()` entries into `slot` as
+/// `(index, sign)` pairs, in stream order. The parallel decoder hands
+/// each frame a disjoint pre-sized range of one shared buffer, so
+/// frames allocate nothing. Returns the index of the last decoded
+/// nonzero (the frame-continuity witness).
+fn decode_entries_into(
+    r: &mut BitReader,
+    slot: &mut [(u32, bool)],
+    mut prev: i64,
+    b: u32,
+    len: usize,
+) -> Result<i64> {
+    for e in slot.iter_mut() {
+        let (idx, sign) = decode_one(r, prev, b, len)?;
+        *e = (idx, sign);
+        prev = idx as i64;
+    }
+    Ok(prev)
+}
+
+/// The original bit-at-a-time decode loop, kept verbatim as the
+/// differential-test oracle for the word-at-a-time kernel (and as the
+/// `ops_micro` bit-loop baseline). Never called on the serving path.
+fn decode_entries_bitwise(
     r: &mut BitReader,
     count: usize,
     mut prev: i64,
@@ -257,14 +344,35 @@ fn decode_entries(
 }
 
 /// Decode a Golomb-coded byte stream back to a ternary vector.
+///
+/// `plus`/`minus` are each sized to the full header `nnz` bound: an
+/// all-one-sign stream (legal and common for small vectors) would
+/// otherwise realloc a `nnz/2`-sized list up to `nnz`, doubling the
+/// worst-case decode allocations. The bound is the same
+/// plausibility-checked header field either way.
 pub fn decode(bytes: &[u8]) -> Result<TernaryVector> {
     let mut r = BitReader::new(bytes);
     let h = parse_header(&mut r, bytes.len())?;
     // compeft-lint: allow(no-unchecked-wire-alloc) -- nnz plausibility-bounded in parse_header
-    let mut plus = Vec::with_capacity(h.nnz / 2 + 1);
+    let mut plus = Vec::with_capacity(h.nnz);
     // compeft-lint: allow(no-unchecked-wire-alloc) -- nnz plausibility-bounded in parse_header
-    let mut minus = Vec::with_capacity(h.nnz / 2 + 1);
+    let mut minus = Vec::with_capacity(h.nnz);
     decode_entries(&mut r, h.nnz, -1, h.b, h.len, &mut plus, &mut minus)?;
+    Ok(TernaryVector { len: h.len, scale: h.scale, plus, minus })
+}
+
+/// [`decode`] through the bit-at-a-time oracle loop
+/// ([`decode_entries_bitwise`]): the pre-word-kernel decoder, kept as
+/// the differential-test reference and the `ops_micro` bit-loop
+/// baseline. Identical output and identical errors to [`decode`].
+pub fn decode_bitwise(bytes: &[u8]) -> Result<TernaryVector> {
+    let mut r = BitReader::new(bytes);
+    let h = parse_header(&mut r, bytes.len())?;
+    // compeft-lint: allow(no-unchecked-wire-alloc) -- nnz plausibility-bounded in parse_header
+    let mut plus = Vec::with_capacity(h.nnz);
+    // compeft-lint: allow(no-unchecked-wire-alloc) -- nnz plausibility-bounded in parse_header
+    let mut minus = Vec::with_capacity(h.nnz);
+    decode_entries_bitwise(&mut r, h.nnz, -1, h.b, h.len, &mut plus, &mut minus)?;
     Ok(TernaryVector { len: h.len, scale: h.scale, plus, minus })
 }
 
@@ -311,33 +419,31 @@ pub fn decode_par(
         });
     }
 
-    let items: Vec<(usize, u64, u32)> = table
+    // Frames decode into disjoint pre-sized ranges of one shared entry
+    // buffer instead of per-frame Vec pairs: `chunks_mut(chunk)` yields
+    // exactly `⌈nnz / chunk⌉` slices (the last one short), matching the
+    // frame count checked above, so frame `f` owns entries
+    // `[f·chunk, min((f+1)·chunk, nnz))` — zero allocations inside the
+    // parallel region and no concat copies afterwards.
+    // compeft-lint: allow(no-unchecked-wire-alloc) -- nnz plausibility-bounded in parse_header
+    let mut entries: Vec<(u32, bool)> = vec![(0, false); h.nnz];
+    let items: Vec<(u64, u32, &mut [(u32, bool)])> = table
         .frames
         .iter()
-        .enumerate()
-        .map(|(f, &(off, prev))| (f, off, prev))
+        .zip(entries.chunks_mut(chunk))
+        .map(|(&(off, prev), slot)| (off, prev, slot))
         .collect();
-    let pieces: Vec<Result<(Vec<u32>, Vec<u32>, i64)>> =
-        pool.scoped_map(items, |(f, off, prev_raw)| {
-            let count = chunk.min(h.nnz - f * chunk);
-            let mut fr = BitReader::new(bytes);
-            fr.seek(off)
-                .ok_or_else(|| anyhow::anyhow!("bit offset {off} beyond payload"))?;
-            let prev: i64 = if prev_raw == NO_PREV { -1 } else { prev_raw as i64 };
-            let mut plus = Vec::with_capacity(count / 2 + 1);
-            let mut minus = Vec::with_capacity(count / 2 + 1);
-            let last =
-                decode_entries(&mut fr, count, prev, h.b, h.len, &mut plus, &mut minus)?;
-            Ok((plus, minus, last))
-        });
+    let lasts: Vec<Result<i64>> = pool.scoped_map(items, |(off, prev_raw, slot)| {
+        let mut fr = BitReader::new(bytes);
+        fr.seek(off)
+            .ok_or_else(|| anyhow::anyhow!("bit offset {off} beyond payload"))?;
+        let prev: i64 = if prev_raw == NO_PREV { -1 } else { prev_raw as i64 };
+        decode_entries_into(&mut fr, slot, prev, h.b, h.len)
+    });
 
-    // compeft-lint: allow(no-unchecked-wire-alloc) -- nnz plausibility-bounded in parse_header
-    let mut plus = Vec::with_capacity(h.nnz / 2 + 1);
-    // compeft-lint: allow(no-unchecked-wire-alloc) -- nnz plausibility-bounded in parse_header
-    let mut minus = Vec::with_capacity(h.nnz / 2 + 1);
     let mut prev_last: i64 = -1;
-    for (f, piece) in pieces.into_iter().enumerate() {
-        let (p, m, last) = piece.with_context(|| format!("frame {f}"))?;
+    for (f, last) in lasts.into_iter().enumerate() {
+        let last = last.with_context(|| format!("frame {f}"))?;
         let declared: i64 = table
             .frames
             .get(f)
@@ -349,10 +455,145 @@ pub fn decode_par(
             );
         }
         prev_last = last;
-        plus.extend_from_slice(&p);
-        minus.extend_from_slice(&m);
+    }
+    // Split by sign in stream (index) order — exactly the order the
+    // serial decoder pushes, so output is bit-identical.
+    // compeft-lint: allow(no-unchecked-wire-alloc) -- nnz plausibility-bounded in parse_header
+    let mut plus = Vec::with_capacity(h.nnz);
+    // compeft-lint: allow(no-unchecked-wire-alloc) -- nnz plausibility-bounded in parse_header
+    let mut minus = Vec::with_capacity(h.nnz);
+    for &(idx, sign) in &entries {
+        [&mut minus, &mut plus][sign as usize].push(idx);
     }
     Ok(TernaryVector { len: h.len, scale: h.scale, plus, minus })
+}
+
+/// Sequential per-frame decoder for the fused fetch→decode path.
+///
+/// [`decode_par`] needs the whole payload before it can start; the
+/// fused loader instead decodes frame `f` the moment the fetch has
+/// delivered the bytes up to [`FrameDecoder::frame_end_byte`]`(f)`,
+/// overlapping decode with the stripes still in flight. The decoder
+/// performs the same header, frame-count, and frame-continuity
+/// validation as `decode_par` (a lying table fails loudly here too),
+/// runs the same word-at-a-time [`decode_one`] kernel into the same
+/// shared entry buffer, and [`FrameDecoder::finish`] performs the same
+/// stream-order sign split — so the fused path's output is
+/// bit-identical to the serial and parallel decoders'.
+pub struct FrameDecoder<'a> {
+    bytes: &'a [u8],
+    table: &'a FrameTable,
+    header: StreamHeader,
+    /// Shared (index, sign) buffer; frame `f` owns
+    /// `[f·chunk, min((f+1)·chunk, nnz))`.
+    entries: Vec<(u32, bool)>,
+    /// Frames decoded so far — also the next frame to decode.
+    next: usize,
+    /// Last index decoded by the previous frame (continuity witness).
+    prev_last: i64,
+}
+
+impl<'a> FrameDecoder<'a> {
+    /// Validate the header against the frame table and set up the
+    /// shared entry buffer. Fails on everything [`decode_par`] would
+    /// reject before decoding (bad header, zero chunk, wrong frame
+    /// count).
+    pub fn new(bytes: &'a [u8], table: &'a FrameTable) -> Result<FrameDecoder<'a>> {
+        let mut r = BitReader::new(bytes);
+        let header = parse_header(&mut r, bytes.len())?;
+        let chunk = table.chunk_nnz as usize;
+        if chunk == 0 {
+            bail!("frame table chunk_nnz is zero");
+        }
+        let expect = header.nnz.div_ceil(chunk);
+        if table.frames.len() != expect {
+            bail!(
+                "frame table has {} frames, expected {expect} for nnz {}",
+                table.frames.len(),
+                header.nnz
+            );
+        }
+        // compeft-lint: allow(no-unchecked-wire-alloc) -- nnz plausibility-bounded in parse_header
+        let entries: Vec<(u32, bool)> = vec![(0, false); header.nnz];
+        Ok(FrameDecoder { bytes, table, header, entries, next: 0, prev_last: -1 })
+    }
+
+    /// Total number of frames in the payload.
+    pub fn frame_count(&self) -> usize {
+        self.table.frames.len()
+    }
+
+    /// Frames decoded so far.
+    pub fn frames_done(&self) -> usize {
+        self.next
+    }
+
+    /// The payload byte prefix that must have landed before frame `f`
+    /// can decode: frame `f`'s codewords end where frame `f + 1`'s
+    /// begin (rounded up to a whole byte); the last frame needs the
+    /// full payload. This is the fusion readiness watermark the loader
+    /// compares against stripe arrivals.
+    pub fn frame_end_byte(&self, f: usize) -> usize {
+        match self.table.frames.get(f + 1) {
+            Some(&(off, _)) => (off.div_ceil(8) as usize).min(self.bytes.len()),
+            None => self.bytes.len(),
+        }
+    }
+
+    /// Decode the next frame (in order): check its declared predecessor
+    /// continues the previous frame, then run the word kernel over its
+    /// slice of the shared entry buffer.
+    pub fn decode_next(&mut self) -> Result<()> {
+        let f = self.next;
+        let Some(&(off, prev_raw)) = self.table.frames.get(f) else {
+            bail!("frame {f} out of range ({} frames)", self.table.frames.len());
+        };
+        let declared: i64 = if prev_raw == NO_PREV { -1 } else { prev_raw as i64 };
+        if declared != self.prev_last {
+            bail!(
+                "frame {f}: declared prev index {declared} does not continue the \
+                 previous frame (last decoded index {})",
+                self.prev_last
+            );
+        }
+        let chunk = self.table.chunk_nnz as usize;
+        let lo = (f * chunk).min(self.header.nnz);
+        let hi = ((f + 1) * chunk).min(self.header.nnz);
+        let slot = self.entries.get_mut(lo..hi).unwrap_or_default();
+        let mut r = BitReader::new(self.bytes);
+        r.seek(off)
+            .ok_or_else(|| anyhow::anyhow!("bit offset {off} beyond payload"))?;
+        self.prev_last =
+            decode_entries_into(&mut r, slot, declared, self.header.b, self.header.len)
+                .with_context(|| format!("frame {f}"))?;
+        self.next = f + 1;
+        Ok(())
+    }
+
+    /// All frames decoded → the ternary vector, via the same
+    /// stream-order sign split as [`decode_par`].
+    pub fn finish(self) -> Result<TernaryVector> {
+        if self.next != self.table.frames.len() {
+            bail!(
+                "finish with {} of {} frames decoded",
+                self.next,
+                self.table.frames.len()
+            );
+        }
+        // compeft-lint: allow(no-unchecked-wire-alloc) -- nnz plausibility-bounded in parse_header
+        let mut plus = Vec::with_capacity(self.header.nnz);
+        // compeft-lint: allow(no-unchecked-wire-alloc) -- nnz plausibility-bounded in parse_header
+        let mut minus = Vec::with_capacity(self.header.nnz);
+        for &(idx, sign) in &self.entries {
+            [&mut minus, &mut plus][sign as usize].push(idx);
+        }
+        Ok(TernaryVector {
+            len: self.header.len,
+            scale: self.header.scale,
+            plus,
+            minus,
+        })
+    }
 }
 
 /// Exact encoded size in bytes for a ternary vector without encoding it.
@@ -654,6 +895,191 @@ pub(crate) mod tests {
             bytes < entropy * 1.25,
             "encoded {bytes} bits vs entropy {entropy} bits"
         );
+    }
+
+    /// Differential contract of the word-at-a-time kernel: on random
+    /// streams — whose codewords land at every 64-bit window alignment
+    /// — [`decode`] (word path) and [`decode_bitwise`] (bit-at-a-time
+    /// oracle) produce identical vectors, and on truncated streams
+    /// both fail.
+    #[test]
+    fn prop_word_decode_matches_bitwise_oracle() {
+        prop::check(
+            "word-at-a-time decode vs bitwise oracle",
+            80,
+            |rng: &mut Pcg| {
+                let n = prop::sizes(rng).min(20_000);
+                random_index_sets(rng, n)
+            },
+            |t| {
+                let bytes = encode(t);
+                let word = decode(&bytes).map_err(|e| e.to_string())?;
+                let oracle = decode_bitwise(&bytes).map_err(|e| e.to_string())?;
+                if word != oracle {
+                    return Err("word kernel diverged from bitwise oracle".into());
+                }
+                if word != *t {
+                    return Err("decode roundtrip mismatch".into());
+                }
+                // Truncation: chop a byte off a nonempty payload — both
+                // paths must agree on accept/reject and on the value.
+                if bytes.len() > 25 {
+                    let cut = &bytes[..bytes.len() - 1];
+                    match (decode(cut), decode_bitwise(cut)) {
+                        (Ok(a), Ok(b)) if a == b => {}
+                        (Err(_), Err(_)) => {}
+                        _ => return Err("paths disagree on truncated stream".into()),
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Golomb edge cases the word kernel must cover exactly: `b = 0`
+    /// (unary-only Rice, dense vectors), `chunk_nnz = 1` (every frame a
+    /// single codeword), `nnz` an exact multiple of `chunk_nnz`, and a
+    /// final frame shorter than the chunk.
+    #[test]
+    fn word_kernel_edge_cases() {
+        use crate::util::pool::ThreadPool;
+        let pool = ThreadPool::new(3);
+
+        // Dense vector: density 1.0 → rice_parameter = 0, every gap is
+        // pure unary (quotient + terminator + sign, no remainder bits).
+        let dense = TernaryVector {
+            len: 97,
+            scale: 0.5,
+            plus: (0..97).step_by(2).collect(),
+            minus: (1..97).step_by(2).collect(),
+        };
+        assert_eq!(super::stream_rice_parameter(&dense), 0, "b = 0 case");
+
+        // One-sign stream (satellite: decode sizes by the full nnz
+        // bound, so this must not realloc — and must roundtrip).
+        let one_sign = TernaryVector {
+            len: 64,
+            scale: 1.0,
+            plus: (0..64).collect(),
+            minus: vec![],
+        };
+
+        // Sparse vector with giant gaps (deep unary quotients that can
+        // straddle the 64-bit window and exercise the slow path).
+        let sparse = TernaryVector {
+            len: 3_000_000,
+            scale: -1.5,
+            plus: vec![0, 1_499_999],
+            minus: vec![2_999_999],
+        };
+
+        // nnz = 12: exact multiple of chunk 4 and 6; short final frame
+        // for chunk 5; single-codeword frames for chunk 1.
+        let twelve = TernaryVector {
+            len: 400,
+            scale: 2.0,
+            plus: vec![3, 17, 40, 41, 99, 250],
+            minus: vec![5, 20, 77, 130, 300, 399],
+        };
+
+        // All nonzeros clustered at the tail: the density-derived Rice
+        // parameter is small but the leading gap is enormous, so its
+        // unary run is far longer than any 64-bit window — the kernel
+        // must take the bit-at-a-time fallback and still agree.
+        let clustered = TernaryVector {
+            len: 10_000,
+            scale: 0.25,
+            plus: (9_900..9_950).collect(),
+            minus: (9_950..10_000).collect(),
+        };
+
+        for (name, t) in [
+            ("dense_b0", &dense),
+            ("one_sign", &one_sign),
+            ("sparse_gaps", &sparse),
+            ("twelve", &twelve),
+            ("clustered_tail", &clustered),
+        ] {
+            let bytes = encode(t);
+            assert_eq!(&decode(&bytes).unwrap(), t, "{name}: word decode");
+            assert_eq!(&decode_bitwise(&bytes).unwrap(), t, "{name}: oracle");
+            for chunk in [1usize, 4, 5, 6, 12, 1 << 20] {
+                let table = frame_table(t, chunk);
+                assert_eq!(
+                    table.frames.len(),
+                    t.nnz().div_ceil(chunk),
+                    "{name} chunk {chunk}: frame count"
+                );
+                let par = decode_par(&bytes, &table, &pool).unwrap();
+                assert_eq!(&par, t, "{name} chunk {chunk}: par decode");
+            }
+        }
+    }
+
+    /// The fused-path frame decoder is bit-identical to the serial
+    /// decoder at every chunk size, its byte watermarks are monotone
+    /// and end at the payload length, and it rejects the same lying
+    /// tables and out-of-order use that `decode_par` rejects.
+    #[test]
+    fn frame_decoder_matches_serial_and_validates() {
+        let mut rng = Pcg::seed(61);
+        let mut cases = vec![
+            TernaryVector::empty(0),
+            TernaryVector::empty(5000),
+            TernaryVector { len: 1, scale: 1.0, plus: vec![0], minus: vec![] },
+        ];
+        for len in [100usize, 4097, 20_000] {
+            cases.push(random_index_sets(&mut rng, len));
+        }
+        for (i, t) in cases.iter().enumerate() {
+            let bytes = encode(t);
+            for chunk in [1usize, 7, 256, 1 << 20] {
+                let table = frame_table(t, chunk);
+                let mut fd = FrameDecoder::new(&bytes, &table).unwrap();
+                assert_eq!(fd.frame_count(), t.nnz().div_ceil(chunk));
+                let mut prev_end = 0usize;
+                for f in 0..fd.frame_count() {
+                    let end = fd.frame_end_byte(f);
+                    assert!(end >= prev_end, "case {i} chunk {chunk}: monotone");
+                    assert!(end <= bytes.len());
+                    prev_end = end;
+                    fd.decode_next().unwrap();
+                    assert_eq!(fd.frames_done(), f + 1);
+                }
+                if fd.frame_count() > 0 {
+                    assert_eq!(
+                        fd.frame_end_byte(fd.frame_count() - 1),
+                        bytes.len(),
+                        "last frame needs the full payload"
+                    );
+                }
+                let got = fd.finish().unwrap();
+                assert_eq!(&got, &decode(&bytes).unwrap(), "case {i} chunk {chunk}");
+            }
+        }
+
+        // Rejections mirror decode_par's.
+        let t = TernaryVector {
+            len: 500,
+            scale: 1.0,
+            plus: vec![3, 20, 90, 200, 333],
+            minus: vec![7, 50, 450],
+        };
+        let bytes = encode(&t);
+        let good = frame_table(&t, 3);
+        let mut bad = good.clone();
+        bad.frames.pop();
+        assert!(FrameDecoder::new(&bytes, &bad).is_err(), "wrong frame count");
+        let bad = FrameTable { chunk_nnz: 0, frames: good.frames.clone() };
+        assert!(FrameDecoder::new(&bytes, &bad).is_err(), "zero chunk");
+        let mut bad = good.clone();
+        bad.frames[1].1 = 499;
+        let mut fd = FrameDecoder::new(&bytes, &bad).unwrap();
+        let r = (0..fd.frame_count()).try_for_each(|_| fd.decode_next());
+        assert!(r.is_err(), "lying predecessor must fail");
+        // Early finish fails loudly.
+        let fd = FrameDecoder::new(&bytes, &good).unwrap();
+        assert!(fd.finish().is_err(), "finish before all frames decoded");
     }
 
     #[test]

@@ -84,20 +84,14 @@ impl TernaryVector {
     /// Write the dense values of coordinates `[start, start + out.len())`
     /// into `out` (which must be zeroed by the caller): `+scale` at plus
     /// indices, `-scale` at minus indices, untouched elsewhere. Writes
-    /// plus before minus, exactly like [`TernaryVector::to_dense`], so
-    /// chunked parallel materialization reproduces the serial buffer bit
-    /// for bit. The relevant index subranges are found by binary search
-    /// (the lists are sorted), so a chunk costs O(log nnz + nnz_in_range).
+    /// plus before minus within each block, exactly like
+    /// [`TernaryVector::to_dense`], so chunked parallel materialization
+    /// reproduces the serial buffer bit for bit. See
+    /// [`TernaryVector::scatter_blocked`] for the scatter scheme.
     pub fn fill_dense_range(&self, start: usize, out: &mut [f32]) {
         let lo = start as u64;
         let hi = (start + out.len()) as u64;
-        for (signed, list) in [(self.scale, &self.plus), (-self.scale, &self.minus)] {
-            let s = list.partition_point(|&i| (i as u64) < lo);
-            let e = list.partition_point(|&i| (i as u64) < hi);
-            for &i in &list[s..e] {
-                out[i as usize - start] = signed;
-            }
-        }
+        self.scatter_blocked(start, out, lo, hi);
     }
 
     /// Like [`TernaryVector::fill_dense_range`], but only for support
@@ -112,12 +106,47 @@ impl TernaryVector {
         // Clamp to lo so a chunk entirely past the bound is an empty
         // index range (partition points would otherwise cross).
         let hi = ((start + out.len()) as u64).min(limit as u64).max(lo);
-        for (signed, list) in [(self.scale, &self.plus), (-self.scale, &self.minus)] {
-            let s = list.partition_point(|&i| (i as u64) < lo);
-            let e = list.partition_point(|&i| (i as u64) < hi);
-            for &i in &list[s..e] {
-                out[i as usize - start] = signed;
+        self.scatter_blocked(start, out, lo, hi);
+    }
+
+    /// Cache-blocked two-list scatter behind both `fill_dense_range`
+    /// variants: writes `vals[s]` at each sign-`s` index in `[lo, hi)`.
+    ///
+    /// Rather than sweeping the whole output range once per sign (two
+    /// full passes over a buffer that may be far larger than cache),
+    /// the range is walked in 32 KiB blocks with both signs scattered
+    /// into a block before moving on, so every output cache line is
+    /// touched in one pass. The sign's value is a select from a
+    /// two-entry table (`vals[s]`), not a per-element branch, and the
+    /// inner loops are pure scatters: each block's index subranges are
+    /// found by one binary search per list (the lists are sorted and
+    /// consumed in order — cursors only move forward). Blocks cover
+    /// disjoint output regions and keep the plus-before-minus write
+    /// order within a block, so the result is identical to the
+    /// unblocked two-pass scatter.
+    fn scatter_blocked(&self, start: usize, out: &mut [f32], lo: u64, hi: u64) {
+        const BLOCK: u64 = 1 << 13; // 8K f32 = 32 KiB of output per block
+        let vals = [self.scale, -self.scale];
+        let lists: [&[u32]; 2] = [&self.plus, &self.minus];
+        let mut cur = [0usize; 2];
+        let mut end = [0usize; 2];
+        for s in 0..2 {
+            cur[s] = lists[s].partition_point(|&i| (i as u64) < lo);
+            end[s] = lists[s].partition_point(|&i| (i as u64) < hi);
+        }
+        let mut bs = lo;
+        while bs < hi {
+            let be = (bs + BLOCK).min(hi);
+            for s in 0..2 {
+                let list = lists[s];
+                let e = cur[s]
+                    + list[cur[s]..end[s]].partition_point(|&i| (i as u64) < be);
+                for &i in &list[cur[s]..e] {
+                    out[i as usize - start] = vals[s];
+                }
+                cur[s] = e;
             }
+            bs = be;
         }
     }
 

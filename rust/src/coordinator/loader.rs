@@ -42,6 +42,14 @@
 //! the engine thread executes the current batch, leaving only the
 //! upload hop on the swap critical path.
 //!
+//! With a store attached, stages 1–2 can also **fuse**
+//! ([`ExpertLoader::fetch_decode_fused`]): the striped fetch posts
+//! per-stripe completion events, and a decode worker consumes the
+//! payload's Golomb frames as their bytes land, so a cold swap costs
+//! ≈ `max(fetch, decode)` instead of `fetch + decode` — bit-identical
+//! output, same corruption rejects, and the saved time is reported as
+//! `decode_overlap_us` in [`Metrics`](crate::coordinator::metrics).
+//!
 //! With a thread pool attached ([`ExpertLoader::with_pool`]) the
 //! decode half scales with cores: `.cpeft` v2 frame tables let
 //! [`format::from_bytes_par`] split the Golomb payload across workers,
@@ -54,14 +62,17 @@
 use crate::compeft::compress::{decompress_params, CompressedParamSet};
 use crate::compeft::engine;
 use crate::compeft::format;
+use crate::compeft::golomb::FrameDecoder;
 use crate::compeft::payload::{CopyMeter, Payload};
+use crate::compeft::ternary::TernaryVector;
 use crate::coordinator::registry::{ExpertFormat, ExpertMethod, ExpertRecord};
-use crate::coordinator::store::ExpertStore;
+use crate::coordinator::store::{ExpertStore, FetchEvent};
 use crate::coordinator::transport::SimLink;
 use crate::merging::{ternary, MergeMethod};
 use crate::tensor::ParamSet;
 use crate::util::pool::ThreadPool;
 use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -88,6 +99,29 @@ pub struct ExpertLoader {
     /// materialization off disk). Share the engine's meter via
     /// [`ExpertLoader::with_meter`] so they land in `payload_copies`.
     meter: CopyMeter,
+}
+
+/// Outcome of one fused fetch→decode
+/// ([`ExpertLoader::fetch_decode_fused`]): the decoded task vector is
+/// bit-identical to fetch-then-decode; the timing fields separate the
+/// unfused accounting (`fetch + decode`) from the fused critical path.
+pub struct FusedLoad {
+    /// The decoded dense task vector.
+    pub tv: ParamSet,
+    /// The fetched container bytes (zero-copy view) — callers insert
+    /// these into the host tier exactly as on the unfused path.
+    pub payload: Payload,
+    /// Unfused accounting: the fetch's simulated duration.
+    pub fetch: Duration,
+    /// Unfused accounting: total real decode time (frames + finish +
+    /// densify).
+    pub decode: Duration,
+    /// The fused critical path: frame decode replayed against the
+    /// stripe arrival schedule, so ≈ `max(fetch, decode)` + tails,
+    /// never more than `fetch + decode`.
+    pub fused: Duration,
+    /// `fetch + decode − fused`: the cold-swap time the overlap hid.
+    pub overlap: Duration,
 }
 
 /// Timing breakdown of one load.
@@ -196,6 +230,150 @@ impl ExpertLoader {
             },
         };
         Ok((tv, t0.elapsed()))
+    }
+
+    /// Fused fetch→decode: stream the striped store fetch and decode
+    /// the payload's Golomb frames *as their bytes land*, instead of
+    /// fetch-then-decode. Requires an attached [`ExpertStore`] and a
+    /// `.cpeft` expert — returns `Ok(None)` otherwise so callers fall
+    /// back to the staged path.
+    ///
+    /// A decode worker thread drains the store's completion channel:
+    /// the [`FetchEvent::Source`] buffer first (container metadata —
+    /// header, CRC, frame table — is validated up front via
+    /// [`format::golomb_frame_plan`]), then per-stripe
+    /// [`FetchEvent::Stripe`] notices advance a contiguous-coverage
+    /// watermark, and frame `f` decodes the moment the watermark passes
+    /// its last payload byte. Real wall time overlaps; the *simulated*
+    /// fused duration replays the same frame decode against the
+    /// deterministic [`StripeArrival`](crate::coordinator::store::StripeArrival)
+    /// schedule, so the reported cold-swap cost is
+    /// ≈ `max(fetch, decode)` rather than their sum. Output is
+    /// bit-identical to [`ExpertLoader::fetch_encoded`] +
+    /// [`ExpertLoader::decode`]: same kernels, same frame-table
+    /// revalidation, same rejects.
+    pub fn fetch_decode_fused(
+        &self,
+        rec: &ExpertRecord,
+        template: &ParamSet,
+    ) -> Result<Option<FusedLoad>> {
+        let Some(store) = &self.store else { return Ok(None) };
+        if rec.format != ExpertFormat::Compeft {
+            return Ok(None);
+        }
+
+        // (need, duration) per frame: the container byte prefix the
+        // frame waited for, and its real decode time.
+        type FrameRun = (format::GolombFramePlan, TernaryVector, Vec<(usize, Duration)>);
+        let (tx, rx) = std::sync::mpsc::channel::<FetchEvent>();
+        let decoder = std::thread::spawn(move || -> Result<Option<FrameRun>> {
+            // The source buffer always arrives before any stripe; if
+            // the fetch dies before sending it, bow out — the fetch
+            // error is authoritative.
+            let Ok(FetchEvent::Source(payload)) = rx.recv() else {
+                return Ok(None);
+            };
+            let plan = match format::golomb_frame_plan(&payload)? {
+                Some(p) => p,
+                None => return Ok(None), // valid but not a fused-able shape
+            };
+            let bytes = payload.as_slice();
+            let slice = bytes.get(plan.payload.clone()).unwrap_or_default();
+            let mut fd = FrameDecoder::new(slice, &plan.table)?;
+            // Contiguous-coverage watermark over container bytes:
+            // stripes land in any order; a frame decodes once the
+            // prefix through its last byte is covered.
+            let mut pending: BTreeMap<usize, usize> = BTreeMap::new();
+            let mut watermark = 0usize;
+            let mut frames: Vec<(usize, Duration)> =
+                Vec::with_capacity(fd.frame_count());
+            let mut open = true;
+            for f in 0..fd.frame_count() {
+                // The final frame also waits for the container's
+                // trailing CRC — the whole buffer.
+                let need = if f + 1 == fd.frame_count() {
+                    bytes.len()
+                } else {
+                    plan.payload.start + fd.frame_end_byte(f)
+                };
+                while open && watermark < need {
+                    match rx.recv() {
+                        Ok(FetchEvent::Stripe(l)) => {
+                            pending.insert(l.start, l.end);
+                            while let Some((&s, &e)) = pending.first_key_value() {
+                                if s > watermark {
+                                    break;
+                                }
+                                watermark = watermark.max(e);
+                                pending.remove(&s);
+                            }
+                        }
+                        Ok(FetchEvent::Source(_)) => {}
+                        // Channel closed: the fetch is over. On success
+                        // every byte is in the buffer; on failure the
+                        // caller discards this result for the fetch
+                        // error either way.
+                        Err(_) => open = false,
+                    }
+                }
+                let t = Instant::now();
+                fd.decode_next()?;
+                frames.push((need, t.elapsed()));
+            }
+            let tern = fd.finish()?;
+            Ok(Some((plan, tern, frames)))
+        });
+
+        let fetched = store.fetch_streamed(rec, &tx);
+        drop(tx); // close the channel so the decode worker drains out
+        let joined = decoder
+            .join()
+            .map_err(|_| anyhow::anyhow!("fused decode worker panicked"))?;
+        let (payload, fetch, arrivals) = fetched?;
+        let Some((plan, tern, frames)) = joined? else {
+            // Valid container, but not the fused shape (v1, bitmask,
+            // multi-part): plain decode of the already-fetched bytes.
+            let (tv, decode) = self.decode(rec, &payload, template)?;
+            return Ok(Some(FusedLoad {
+                tv,
+                payload,
+                fetch,
+                decode,
+                fused: fetch + decode,
+                overlap: Duration::ZERO,
+            }));
+        };
+
+        // Post-frame work (sign split + table revalidation + densify)
+        // runs after the last frame on both paths.
+        let t_post = Instant::now();
+        let (compressed, _) = plan.finish(tern)?;
+        let tv = match &self.pool {
+            Some(pool) => engine::par_decompress_params(&compressed, template, pool)?,
+            None => decompress_params(&compressed, template)?,
+        };
+        let post = t_post.elapsed();
+
+        // The fused critical path: replay the measured frame decode
+        // against the deterministic arrival schedule. Frame `f` starts
+        // at max(its bytes' simulated arrival, frame `f−1`'s end).
+        // Arrivals tile the payload in start order, so "every byte
+        // below `need` has landed" is a prefix maximum of `sim_ready`.
+        let mut t_end = Duration::ZERO;
+        for &(need, d) in &frames {
+            let ready = arrivals
+                .iter()
+                .take_while(|a| a.start < need)
+                .map(|a| a.sim_ready)
+                .max()
+                .unwrap_or(Duration::ZERO);
+            t_end = t_end.max(ready) + d;
+        }
+        let decode = frames.iter().map(|&(_, d)| d).sum::<Duration>() + post;
+        let fused = t_end.max(fetch) + post;
+        let overlap = (fetch + decode).saturating_sub(fused);
+        store.metrics().record_decode_overlap(overlap);
+        Ok(Some(FusedLoad { tv, payload, fetch, decode, fused, overlap }))
     }
 
     /// Decode `.cpeft` bytes into the compressed (ternary) form
@@ -523,6 +701,120 @@ mod tests {
         let (a, _) = flat.decode(&rec, &want, &tv).unwrap();
         let (b, _) = sharded.decode(&rec, &got, &tv).unwrap();
         assert_eq!(a, b);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// The fused fetch→decode path: bit-identical task vectors to the
+    /// staged fetch-then-decode path at every pool size, with and
+    /// without store faults; the fused critical path never exceeds
+    /// `fetch + decode` and the overlap accounting is exact; non-fused
+    /// shapes (bitmask) fall back gracefully; no store → `None`.
+    #[test]
+    fn fused_fetch_decode_matches_staged_path() {
+        use crate::compeft::compress::compress_params;
+        use crate::compeft::format::Encoding;
+        use crate::coordinator::metrics::Metrics;
+        use crate::coordinator::store::{ExpertStore, StoreConfig};
+        use crate::coordinator::transport::{FaultPlan, FaultSpec};
+
+        let dir = std::env::temp_dir()
+            .join(format!("compeft_loader_fused_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        // Big enough for several 8K-nonzero frames: density 0.3 over
+        // 60K params ≈ 18K nonzeros ≈ 3 frames.
+        let mut rng = Pcg::seed(41);
+        let n = 60_000usize;
+        let mut p = ParamSet::new();
+        p.insert("w", Tensor::new(vec![n], prop::task_vector_like(&mut rng, n)));
+        let c = compress_params(
+            &p,
+            &CompressConfig { density: 0.3, ..Default::default() },
+        );
+        let mk = |enc: Encoding, name: &str| -> ExpertRecord {
+            let path = dir.join(format!("{name}.cpeft"));
+            let bytes = format::save(&path, &c, enc).unwrap();
+            ExpertRecord {
+                id: name.into(),
+                task: "t".into(),
+                scale: "s".into(),
+                method: ExpertMethod::Lora,
+                format: ExpertFormat::Compeft,
+                path,
+                encoded_bytes: bytes,
+                n_params: n,
+            }
+        };
+        let rec = mk(Encoding::Golomb, "fused");
+
+        let flat = fast_links();
+        let (want_bytes, _) = flat.fetch_encoded(&rec).unwrap();
+        let (want_tv, _) = flat.decode(&rec, &want_bytes, &p).unwrap();
+        let plan = format::golomb_frame_plan(&want_bytes).unwrap().unwrap();
+        assert!(plan.table.frames.len() > 1, "need a multi-frame payload");
+
+        // Without a store the fused path declines.
+        assert!(flat.fetch_decode_fused(&rec, &p).unwrap().is_none());
+
+        let store_with = |faults: FaultPlan, workers: usize| {
+            let mut cfg = StoreConfig::new(3, 2);
+            cfg.time_scale = 0.0;
+            cfg.stripe_bytes = 512; // several stripes per fetch
+            cfg.faults = faults;
+            let pool = Arc::new(ThreadPool::new(workers));
+            fast_links().with_pool(Arc::clone(&pool)).with_store(Arc::new(
+                ExpertStore::new(cfg, Some(pool), Arc::new(Metrics::new())),
+            ))
+        };
+
+        for &workers in &prop::pool_sizes() {
+            let plans: Vec<(&str, FaultPlan)> = vec![
+                ("clean", FaultPlan::none(3)),
+                (
+                    "drop",
+                    FaultPlan::new(
+                        5,
+                        FaultSpec {
+                            drop_p: 0.4,
+                            first_attempt_only: true,
+                            ..Default::default()
+                        },
+                    ),
+                ),
+            ];
+            for (fname, faults) in plans {
+                let loader = store_with(faults, workers);
+                let fused = loader
+                    .fetch_decode_fused(&rec, &p)
+                    .unwrap()
+                    .expect("store-backed golomb container must fuse");
+                assert_eq!(fused.tv, want_tv, "{fname} w={workers}: bit-identical");
+                assert_eq!(fused.payload, want_bytes, "{fname} w={workers}");
+                assert!(fused.fetch > Duration::ZERO);
+                assert!(
+                    fused.fused <= fused.fetch + fused.decode,
+                    "{fname} w={workers}: fused {:?} exceeds unfused {:?}",
+                    fused.fused,
+                    fused.fetch + fused.decode
+                );
+                assert_eq!(
+                    fused.overlap,
+                    (fused.fetch + fused.decode) - fused.fused,
+                    "{fname} w={workers}: overlap accounting must be exact"
+                );
+            }
+        }
+
+        // A bitmask container declines fusion but still decodes through
+        // the fallback, identically to the staged path.
+        let bm = mk(Encoding::Bitmask, "fallback");
+        let (bm_bytes, _) = flat.fetch_encoded(&bm).unwrap();
+        let (bm_tv, _) = flat.decode(&bm, &bm_bytes, &p).unwrap();
+        let loader = store_with(FaultPlan::none(0), 2);
+        let fused = loader.fetch_decode_fused(&bm, &p).unwrap().expect("fallback");
+        assert_eq!(fused.tv, bm_tv, "fallback decode must match");
+        assert_eq!(fused.overlap, Duration::ZERO, "fallback has no overlap");
+        assert_eq!(fused.fused, fused.fetch + fused.decode);
+
         std::fs::remove_dir_all(&dir).ok();
     }
 

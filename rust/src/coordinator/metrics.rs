@@ -87,6 +87,11 @@ struct Inner {
     /// Simulated fetch+decode time removed from the engine critical
     /// path by prefetching, in µs (the "overlap time saved" counter).
     overlap_saved_us: u64,
+    /// Cold-swap time hidden by the fused fetch→decode path (frames
+    /// decoded as stripes land): `fetch + decode − fused`, in µs.
+    decode_overlap_us: u64,
+    /// Cold swaps that ran the fused fetch→decode path.
+    fused_loads: u64,
     /// Extra stripe fetch attempts beyond the first, across all striped
     /// store fetches (every failover retry and corruption re-fetch).
     stripe_retries: u64,
@@ -196,6 +201,15 @@ impl Metrics {
         self.inner.lock().unwrap().prefetch_wasted += n;
     }
 
+    /// One cold swap ran the fused fetch→decode path; `hidden` is the
+    /// cold-swap time the stripe/frame overlap removed
+    /// (`fetch + decode − fused`).
+    pub fn record_decode_overlap(&self, hidden: Duration) {
+        let mut g = self.inner.lock().unwrap();
+        g.fused_loads += 1;
+        g.decode_overlap_us += hidden.as_micros() as u64;
+    }
+
     /// Striped-store fault accounting for one fetch: extra attempts
     /// beyond the first (`retries`), stripes served by a non-first
     /// replica (`failovers`), and corrupt receptions (`corrupts`).
@@ -234,6 +248,8 @@ impl Metrics {
             prefetch_misses: g.prefetch_misses,
             prefetch_wasted: g.prefetch_wasted,
             overlap_saved_us: g.overlap_saved_us,
+            decode_overlap_us: g.decode_overlap_us,
+            fused_loads: g.fused_loads,
             stripe_retries: g.stripe_retries,
             failovers: g.failovers,
             corrupt_payloads: g.corrupt_payloads,
@@ -276,6 +292,11 @@ pub struct MetricsSnapshot {
     pub prefetch_wasted: u64,
     /// Simulated fetch+decode time hidden behind batch execution, µs.
     pub overlap_saved_us: u64,
+    /// Cold-swap time hidden by fused fetch→decode (frames decoded as
+    /// stripes landed): `fetch + decode − fused`, µs.
+    pub decode_overlap_us: u64,
+    /// Cold swaps that ran the fused fetch→decode path.
+    pub fused_loads: u64,
     /// Extra stripe fetch attempts beyond the first (striped store).
     pub stripe_retries: u64,
     /// Stripes served by a replica other than their first choice.
@@ -317,6 +338,8 @@ impl MetricsSnapshot {
             .set("prefetch_misses", Json::num(self.prefetch_misses as f64))
             .set("prefetch_wasted", Json::num(self.prefetch_wasted as f64))
             .set("overlap_saved_us", Json::num(self.overlap_saved_us as f64))
+            .set("decode_overlap_us", Json::num(self.decode_overlap_us as f64))
+            .set("fused_loads", Json::num(self.fused_loads as f64))
             .set("stripe_retries", Json::num(self.stripe_retries as f64))
             .set("failovers", Json::num(self.failovers as f64))
             .set("corrupt_payloads", Json::num(self.corrupt_payloads as f64))
@@ -381,6 +404,8 @@ mod tests {
         m.record_prefetch_wasted(4);
         m.record_store_faults(3, 2, 1);
         m.record_store_faults(1, 1, 0);
+        m.record_decode_overlap(Duration::from_micros(700));
+        m.record_decode_overlap(Duration::from_micros(300));
         m.record_archive_hit(4096);
         m.record_archive_hit(1024);
         m.copy_meter().record(3);
@@ -396,6 +421,8 @@ mod tests {
         assert_eq!(s.prefetch_misses, 1);
         assert_eq!(s.prefetch_wasted, 4);
         assert_eq!(s.overlap_saved_us, 1500);
+        assert_eq!(s.decode_overlap_us, 1000);
+        assert_eq!(s.fused_loads, 2);
         assert_eq!(s.archive_hits, 2);
         assert_eq!(s.archive_bytes_viewed, 5120);
         assert_eq!(s.payload_copies, 3);
@@ -403,6 +430,8 @@ mod tests {
         assert!(j.contains("\"rejected\":5"));
         assert!(j.contains("\"prefetch_hits\":1"));
         assert!(j.contains("\"overlap_saved_us\":1500"));
+        assert!(j.contains("\"decode_overlap_us\":1000"));
+        assert!(j.contains("\"fused_loads\":2"));
         assert!(j.contains("\"stripe_retries\":4"));
         assert!(j.contains("\"failovers\":3"));
         assert!(j.contains("\"corrupt_payloads\":1"));

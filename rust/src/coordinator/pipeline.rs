@@ -27,6 +27,15 @@
 //!   [`plan`](crate::coordinator::batcher::Batcher::plan) lookahead and
 //!   keep the staging slots warm.
 //!
+//! Within stage 1–2 there is a second, finer overlap: when the expert
+//! is a remote store-backed `.cpeft` checkpoint, the prepare runs the
+//! **fused** fetch→decode
+//! ([`ExpertLoader::fetch_decode_fused`](crate::coordinator::loader::ExpertLoader::fetch_decode_fused))
+//! — Golomb frames decode as their stripes land, so the staged cost is
+//! ≈ `max(fetch, decode)` rather than their sum, and the hidden time
+//! lands in the `decode_overlap_us` metric. Host-tier and archive hits
+//! skip it (their fetch is free; nothing to overlap).
+//!
 //! Every stage is deterministic (decode and merge are bit-identical at
 //! any pool size), so prefetching changes *when* work happens, never
 //! what is served: predictions are identical with the prefetcher on or
@@ -191,6 +200,9 @@ impl PrepareContext {
     }
 
     fn prepare_stored(&self, rec: &ExpertRecord) -> Result<PreparedExpert> {
+        if let Some(prepared) = self.prepare_stored_fused(rec)? {
+            return Ok(prepared);
+        }
         let (bytes, fetch, pin) = self.fetch_via_cpu_tier(rec)?;
         let template = self.templates.for_method(rec.method);
         // The encoded bytes stay pinned in the host tier while this
@@ -207,6 +219,49 @@ impl PrepareContext {
             dense_bytes: params.bytes_fp16(),
             params,
         })
+    }
+
+    /// Fused cold path for store-backed `.cpeft` experts: stream the
+    /// striped fetch and decode Golomb frames as their stripes land
+    /// ([`ExpertLoader::fetch_decode_fused`]), charging the staged cost
+    /// `≈ max(fetch, decode)` instead of their sum. Only attempted when
+    /// the bytes are genuinely remote — a host-tier or archive hit has
+    /// a free fetch, so there is nothing to overlap and the staged path
+    /// (which also records the hit) must serve it. Returns `Ok(None)`
+    /// whenever the fused path does not apply; the caller falls back to
+    /// the staged fetch-then-decode, so predictions never depend on
+    /// which path ran (the loader's fused suite proves bit-identity).
+    fn prepare_stored_fused(&self, rec: &ExpertRecord) -> Result<Option<PreparedExpert>> {
+        if self.cpu.lock().unwrap().contains(&rec.id) {
+            return Ok(None);
+        }
+        if let Some(archive) = &self.archive {
+            if archive.contains(&rec.id) {
+                return Ok(None);
+            }
+        }
+        let template = self.templates.for_method(rec.method);
+        let Some(fused) = self.loader.fetch_decode_fused(rec, template)? else {
+            return Ok(None);
+        };
+        // Same idempotent tier insert as the staged remote path, so
+        // upcoming users of this expert hit the host tier either way.
+        // No pin needed: the decode already happened.
+        {
+            let mut cpu = self.cpu.lock().unwrap();
+            if !cpu.contains(&rec.id) {
+                cpu.insert(&rec.id, fused.payload.clone(), rec.encoded_bytes.max(1));
+            }
+        }
+        let params = self.loader.materialize(rec.method, template, &fused.tv)?;
+        Ok(Some(PreparedExpert {
+            id: rec.id.clone(),
+            method: rec.method,
+            staged_sim: fused.fused,
+            upload_bytes: rec.encoded_bytes,
+            dense_bytes: params.bytes_fp16(),
+            params,
+        }))
     }
 
     fn prepare_composed(&self, comp: &CompositionRecord) -> Result<PreparedExpert> {
@@ -979,6 +1034,85 @@ mod tests {
                     );
                 }
             }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// The fused fetch→decode cold path at the pipeline layer: a
+    /// remote store-backed `.cpeft` expert (big enough for several
+    /// 8192-nonzero Golomb frames) prepares bit-identically to the
+    /// flat blocking path at every pool size, and the hidden time is
+    /// counted in `fused_loads`/`decode_overlap_us`. A second prepare
+    /// of the same id hits the host tier — free fetch, nothing to
+    /// overlap — and must not run the fused path again.
+    #[test]
+    fn fused_cold_prepare_matches_flat_and_records_overlap() {
+        use crate::coordinator::store::{ExpertStore, StoreConfig};
+
+        let dir = std::env::temp_dir()
+            .join(format!("compeft_pipeline_fused_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut rng = Pcg::seed(77);
+        let mut tv = ParamSet::new();
+        tv.insert(
+            "w",
+            Tensor::new(vec![60_000], prop::task_vector_like(&mut rng, 60_000)),
+        );
+        let npz = dir.join("big.lora.npz");
+        tv.save_npz(&npz).unwrap();
+        let mut reg = Registry::new();
+        let cfg = CompressConfig { density: 0.3, alpha: 1.0, ..Default::default() };
+        reg.register_compeft("big", "t", "s", ExpertMethod::Lora, &npz, &cfg)
+            .unwrap();
+        let reg = Arc::new(reg);
+        let templates = zero_templates(&tv);
+
+        let ctx_flat = fresh_ctx(Arc::clone(&reg), templates.clone(), 1);
+        let want = ctx_flat.prepare("big").unwrap();
+
+        for workers in crate::util::prop::pool_sizes() {
+            let pool = Arc::new(ThreadPool::new(workers));
+            let metrics = Arc::new(Metrics::new());
+            let mut scfg = StoreConfig::new(3, 2);
+            scfg.time_scale = 0.0;
+            scfg.stripe_bytes = 512;
+            let store = Arc::new(ExpertStore::new(
+                scfg,
+                Some(Arc::clone(&pool)),
+                Arc::clone(&metrics),
+            ));
+            let ctx = PrepareContext {
+                loader: ExpertLoader::new(
+                    SimLink::new("net", LinkSpec::internet()).with_time_scale(0.0),
+                    SimLink::new("pcie", LinkSpec::pcie()).with_time_scale(0.0),
+                )
+                .with_pool(pool)
+                .with_store(store),
+                registry: Arc::clone(&reg),
+                templates: templates.clone(),
+                cpu: Arc::new(OrderedMutex::new(
+                    rank::CPU_TIER,
+                    "cache.cpu_tier",
+                    LruTier::new("cpu", 64 << 20),
+                )),
+                archive: None,
+            };
+            let got = ctx.prepare("big").unwrap();
+            assert_eq!(got.params, want.params, "w={workers}");
+            assert_eq!(got.upload_bytes, want.upload_bytes);
+            assert_eq!(got.dense_bytes, want.dense_bytes);
+            assert_eq!(
+                metrics.snapshot().fused_loads,
+                1,
+                "cold prepare ran the fused path (w={workers})"
+            );
+            let again = ctx.prepare("big").unwrap();
+            assert_eq!(again.params, want.params);
+            assert_eq!(
+                metrics.snapshot().fused_loads,
+                1,
+                "host-tier hit must not re-run the fused path"
+            );
         }
         std::fs::remove_dir_all(&dir).ok();
     }

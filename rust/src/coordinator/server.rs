@@ -168,6 +168,11 @@ pub struct EngineReport {
     pub prefetch_wasted: u64,
     /// Simulated fetch+decode time hidden behind batch execution.
     pub overlap_saved: Duration,
+    /// Cold-swap time hidden by the fused fetch→decode path (frames
+    /// decoded as their stripes land): `fetch + decode − fused`.
+    pub decode_overlap: Duration,
+    /// Cold swaps that ran the fused fetch→decode path.
+    pub fused_loads: u64,
     /// Extra stripe fetch attempts beyond the first (sharded store).
     pub stripe_retries: u64,
     /// Stripes served by a replica other than their first choice.
@@ -634,6 +639,8 @@ fn engine_main(
         prefetch_misses: snap.prefetch_misses,
         prefetch_wasted: snap.prefetch_wasted,
         overlap_saved: Duration::from_micros(snap.overlap_saved_us),
+        decode_overlap: Duration::from_micros(snap.decode_overlap_us),
+        fused_loads: snap.fused_loads,
         stripe_retries: snap.stripe_retries,
         failovers: snap.failovers,
         corrupt_payloads: snap.corrupt_payloads,

@@ -234,6 +234,49 @@ struct StripeDone {
     faults: FetchFaults,
 }
 
+/// Real-time notice on the fusion completion channel: one stripe's
+/// bytes have passed their CRC gate and are decodable, sent from the
+/// fetch workers while sibling stripes are still in flight. The fused
+/// loader path uses these to start decoding a payload's leading frames
+/// before the fetch as a whole returns.
+#[derive(Clone, Copy, Debug)]
+pub struct StripeLanded {
+    pub stripe: u32,
+    /// Byte range of the payload this stripe covers.
+    pub start: usize,
+    pub end: usize,
+}
+
+/// An event on the fusion completion channel
+/// ([`ExpertStore::fetch_streamed`]).
+pub enum FetchEvent {
+    /// The fetch's source buffer — one zero-copy view, sent once before
+    /// any stripe dispatches. Streamed consumers parse container
+    /// *metadata* from it but must treat payload bytes past the
+    /// landed-stripe watermark as not yet arrived (the buffer is local;
+    /// the stripes model when its ranges land over the network).
+    Source(Payload),
+    /// One stripe's bytes passed their per-stripe CRC gate.
+    Stripe(StripeLanded),
+}
+
+/// One stripe's place in the analytic fetch timeline. `sim_ready` is
+/// the simulated instant (from fetch start) at which the stripe's
+/// bytes have landed: nodes serialize their own stripes in stripe-index
+/// order and replicas run in parallel, so a stripe is ready at the
+/// cumulative service time of the nodes it touched — the same model
+/// whose per-node maximum is the fetch's reported duration, computed in
+/// job-index order so the schedule is identical at every pool size.
+#[derive(Clone, Copy, Debug)]
+pub struct StripeArrival {
+    pub stripe: u32,
+    /// Byte range of the payload this stripe covers.
+    pub start: usize,
+    pub end: usize,
+    /// Simulated completion offset of this stripe within the fetch.
+    pub sim_ready: Duration,
+}
+
 impl ExpertStore {
     /// Build the store. The pool (shared with the decode engine) runs
     /// stripe fetches concurrently; without one, stripes fetch serially
@@ -269,6 +312,12 @@ impl ExpertStore {
         self.links.len()
     }
 
+    /// The metrics sink this store's fault and fusion counters land in
+    /// (shared with the coordinator that built the store).
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+
     /// Payload bytes moved across all node links.
     pub fn bytes_moved(&self) -> u64 {
         self.links.iter().map(|l| l.bytes_moved()).sum()
@@ -294,6 +343,36 @@ impl ExpertStore {
         Ok((out, sim))
     }
 
+    /// [`ExpertStore::fetch`] with the fusion completion channel: the
+    /// source buffer is posted first ([`FetchEvent::Source`]), then
+    /// each stripe posts a [`StripeLanded`] notice the moment it passes
+    /// its CRC gate (real completion order, while siblings are in
+    /// flight), and the returned [`StripeArrival`] schedule places
+    /// every stripe on the analytic timeline so the caller can replay
+    /// byte availability deterministically. Bytes, faults, counters,
+    /// and the reported duration are identical to `fetch` — the channel
+    /// is an extra observation, not a different fetch.
+    pub fn fetch_streamed(
+        &self,
+        rec: &ExpertRecord,
+        events: &std::sync::mpsc::Sender<FetchEvent>,
+    ) -> Result<(Payload, Duration, Vec<StripeArrival>)> {
+        let bytes = std::fs::read(&rec.path)
+            .with_context(|| format!("read {}", rec.path.display()))?;
+        // The one heap materialization of a store fetch.
+        self.metrics.copy_meter().record(1);
+        let data = Payload::from_vec(bytes);
+        let _ = events.send(FetchEvent::Source(data.clone()));
+        let (out, sim, faults, arrivals) =
+            self.fetch_payload_inner(&rec.id, &data, rec.encoded_bytes, Some(events))?;
+        self.metrics.record_store_faults(
+            faults.stripe_retries,
+            faults.failovers,
+            faults.corrupt_payloads,
+        );
+        Ok((out, sim, arrivals))
+    }
+
     /// The striped fetch over an in-memory payload (`fetch` minus the
     /// file read and metrics sink) — also the unit the store tests
     /// drive directly. `encoded_bytes` is the link-charge total
@@ -306,6 +385,21 @@ impl ExpertStore {
         data: &Payload,
         encoded_bytes: u64,
     ) -> Result<(Payload, Duration, FetchFaults)> {
+        let (out, sim, faults, _) = self.fetch_payload_inner(id, data, encoded_bytes, None)?;
+        Ok((out, sim, faults))
+    }
+
+    /// The full striped fetch: optionally posts real-time
+    /// [`StripeLanded`] notices as stripes clear their CRC gates, and
+    /// always returns the deterministic [`StripeArrival`] schedule
+    /// alongside the reassembled payload.
+    fn fetch_payload_inner(
+        &self,
+        id: &str,
+        data: &Payload,
+        encoded_bytes: u64,
+        events: Option<&std::sync::mpsc::Sender<FetchEvent>>,
+    ) -> Result<(Payload, Duration, FetchFaults, Vec<StripeArrival>)> {
         let replicas = self.placement.nodes_for(id);
         if data.is_empty() {
             bail!("expert {id:?} has an empty payload");
@@ -388,6 +482,16 @@ impl ExpertStore {
                         if attempt > 0 {
                             faults.failovers += 1;
                         }
+                        // Fusion channel: announce the stripe the moment
+                        // its bytes are verified. A hung-up receiver is
+                        // fine — the fetch still completes normally.
+                        if let Some(tx) = events {
+                            let _ = tx.send(FetchEvent::Stripe(StripeLanded {
+                                stripe: job.stripe,
+                                start: job.start,
+                                end: job.end,
+                            }));
+                        }
                         return Ok(StripeDone {
                             start: job.start,
                             view: want,
@@ -419,16 +523,30 @@ impl ExpertStore {
 
         // Reassemble + aggregate the analytic time model: each node's
         // link serializes its own stripes (sum), replicas run in
-        // parallel (max across nodes).
+        // parallel (max across nodes). Walking results in job-index
+        // order (scoped_map preserves it) makes the per-stripe arrival
+        // schedule a pure function of the fault plan — identical at
+        // every pool size — and a stripe is ready once every node it
+        // touched has worked through its queue up to and including this
+        // stripe, so the schedule's maximum is exactly `sim`.
         let mut parts: Vec<(usize, Payload)> = Vec::with_capacity(jobs.len());
+        let mut arrivals: Vec<StripeArrival> = Vec::with_capacity(jobs.len());
         let mut per_node = vec![Duration::ZERO; self.links.len()];
         let mut faults = FetchFaults::default();
-        for done in results {
+        for (job, done) in jobs.iter().zip(results) {
             let done = done?;
-            parts.push((done.start, done.view));
+            let mut ready = Duration::ZERO;
             for (node, d) in done.node_time {
                 per_node[node] += d;
+                ready = ready.max(per_node[node]);
             }
+            arrivals.push(StripeArrival {
+                stripe: job.stripe,
+                start: done.start,
+                end: done.start + done.view.len(),
+                sim_ready: ready,
+            });
+            parts.push((done.start, done.view));
             faults.stripe_retries += done.faults.stripe_retries;
             faults.failovers += done.faults.failovers;
             faults.corrupt_payloads += done.faults.corrupt_payloads;
@@ -460,7 +578,7 @@ impl ExpertStore {
             }
             Payload::from_vec(buf)
         };
-        Ok((out, sim, faults))
+        Ok((out, sim, faults, arrivals))
     }
 }
 
@@ -752,6 +870,74 @@ mod tests {
                         ),
                     }
                 }
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// The fusion observation layer: the per-stripe arrival schedule is
+    /// a pure function of the fault plan (identical at every pool
+    /// size), its maximum equals the reported fetch duration, the
+    /// arrivals tile the payload in stripe order, and the completion
+    /// channel posts every stripe exactly once with its exact range.
+    #[test]
+    fn stripe_arrivals_are_deterministic_and_bounded_by_sim() {
+        let dir = std::env::temp_dir()
+            .join(format!("compeft_store_arrv_{}", std::process::id()));
+        let (rec, want) = temp_record(&dir, 29);
+        let want = Payload::from_vec(want);
+        let plan = FaultPlan::new(
+            5,
+            FaultSpec { drop_p: 0.5, first_attempt_only: true, ..Default::default() },
+        );
+        let mut reference: Option<Vec<(u32, usize, usize, Duration)>> = None;
+        for &workers in &prop::pool_sizes() {
+            let mut cfg = StoreConfig::new(3, 2);
+            cfg.time_scale = 0.0;
+            cfg.stripe_bytes = 256; // several stripes per fetch
+            cfg.faults = plan.clone();
+            let s = store(cfg, workers);
+            let (tx, rx) = std::sync::mpsc::channel();
+            let (got, sim, _faults, arrivals) = s
+                .fetch_payload_inner(&rec.id, &want, rec.encoded_bytes, Some(&tx))
+                .unwrap();
+            drop(tx);
+            assert_eq!(got, want, "w={workers}");
+            let max = arrivals.iter().map(|a| a.sim_ready).max().unwrap();
+            assert_eq!(max, sim, "schedule max must equal fetch sim (w={workers})");
+            let mut covered = 0usize;
+            for a in &arrivals {
+                assert_eq!(a.start, covered, "arrivals tile in stripe order");
+                assert!(a.sim_ready > Duration::ZERO);
+                covered = a.end;
+            }
+            assert_eq!(covered, want.len());
+            let mut landed: Vec<StripeLanded> = rx
+                .iter()
+                .filter_map(|ev| match ev {
+                    FetchEvent::Stripe(l) => Some(l),
+                    FetchEvent::Source(_) => None,
+                })
+                .collect();
+            landed.sort_by_key(|l| l.stripe);
+            assert_eq!(landed.len(), arrivals.len(), "one notice per stripe");
+            for (l, a) in landed.iter().zip(&arrivals) {
+                assert_eq!(
+                    (l.stripe, l.start, l.end),
+                    (a.stripe, a.start, a.end),
+                    "channel notice must match the schedule"
+                );
+            }
+            let sig: Vec<_> = arrivals
+                .iter()
+                .map(|a| (a.stripe, a.start, a.end, a.sim_ready))
+                .collect();
+            match &reference {
+                None => reference = Some(sig),
+                Some(r) => assert_eq!(
+                    &sig, r,
+                    "arrival schedule must not depend on pool size (w={workers})"
+                ),
             }
         }
         std::fs::remove_dir_all(&dir).ok();

@@ -583,6 +583,10 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         report.stripe_retries, report.failovers, report.corrupt_payloads
     );
     println!(
+        "fused decode: {} loads  overlap hidden {:.2?}",
+        report.fused_loads, report.decode_overlap
+    );
+    println!(
         "archive: {} hits  {} viewed in place  {} payload copies",
         report.archive_hits,
         human_bytes(report.archive_bytes_viewed),

@@ -2,6 +2,28 @@
 //!
 //! Bits are written MSB-first within each byte so encoded streams are
 //! byte-order independent and easy to inspect in hex dumps.
+//!
+//! # Word-at-a-time reads
+//!
+//! The bit-at-a-time readers ([`BitReader::get_bit`],
+//! [`BitReader::get_bits`], [`BitReader::get_unary`]) pay a shift, a
+//! mask, and a bounds check per *bit*. Decode hot loops instead use the
+//! peek/consume pair:
+//!
+//! * [`BitReader::peek_word`] returns up to 64 upcoming bits MSB-aligned
+//!   in a `u64` window plus the number of valid top bits. Bits below the
+//!   valid region are guaranteed zero, so a unary scan via
+//!   `leading_zeros` on the inverted window self-terminates at the
+//!   window edge instead of reading stale data.
+//! * [`BitReader::consume`] advances the position once per decoded
+//!   symbol (or group of fields), not once per bit.
+//!
+//! A caller decodes a whole Rice codeword (unary quotient, terminator,
+//! `b`-bit remainder, sign bit) from one peeked window with shifts and
+//! masks — no per-bit branches — and falls back to the bit-at-a-time
+//! loop only when the codeword straddles the window edge or the stream
+//! tail. The bit-at-a-time loop stays authoritative: it is the
+//! differential-test oracle the word path is checked against.
 
 /// Append-only bit writer backed by a `Vec<u8>`.
 #[derive(Default, Debug)]
@@ -169,6 +191,54 @@ impl<'a> BitReader<'a> {
             }
         }
     }
+
+    /// Peek up to 64 upcoming bits without consuming them, MSB-aligned:
+    /// the bit at the current position sits in bit 63 of the returned
+    /// window. Returns `(window, avail)` where the top `avail` bits are
+    /// real stream bits and **every bit below them is zero** — so
+    /// `(!window).leading_zeros()` (a unary scan) can never run past
+    /// the valid region into stale data. At or past the end of the
+    /// buffer the window is empty: `(0, 0)`.
+    ///
+    /// `avail` is at most `64 - (pos % 8)` (the window is assembled
+    /// from at most 8 whole bytes), and at most [`bits_remaining`]
+    /// near the stream tail. Like the bit-at-a-time readers, the
+    /// window includes any zero-padding bits inside the final byte.
+    ///
+    /// [`bits_remaining`]: BitReader::bits_remaining
+    #[inline]
+    pub fn peek_word(&self) -> (u64, u32) {
+        let byte = (self.pos / 8) as usize;
+        let bit = (self.pos % 8) as u32;
+        if byte + 8 <= self.buf.len() {
+            // 8 whole bytes cover the window; shifting out the `bit`
+            // already-consumed MSBs zero-fills the low end.
+            let w = u64::from_be_bytes(
+                self.buf[byte..byte + 8].try_into().unwrap_or([0; 8]),
+            );
+            (w << bit, 64 - bit)
+        } else if byte < self.buf.len() {
+            // Tail: assemble the remaining (< 8) bytes top-aligned;
+            // everything below them is zero by construction.
+            let mut w = 0u64;
+            for (i, &b) in self.buf[byte..].iter().enumerate() {
+                w |= (b as u64) << (56 - 8 * i as u32);
+            }
+            (w << bit, self.bits_remaining() as u32)
+        } else {
+            (0, 0)
+        }
+    }
+
+    /// Advance the read position by `n` bits, pairing with
+    /// [`peek_word`](BitReader::peek_word): one `consume` per decoded
+    /// symbol instead of one bounds check per bit. Clamped to the end
+    /// of the buffer (reads from there return `None`, matching the
+    /// bit-at-a-time readers).
+    #[inline]
+    pub fn consume(&mut self, n: u32) {
+        self.pos = (self.pos + n as u64).min(self.buf.len() as u64 * 8);
+    }
 }
 
 #[cfg(test)]
@@ -294,5 +364,91 @@ mod tests {
         assert_eq!(w.bit_len(), 8);
         w.put_bit(true);
         assert_eq!(w.bit_len(), 9);
+    }
+
+    /// Differential: reading the stream through peek_word/consume in
+    /// random-width slices must agree bit-for-bit with the
+    /// bit-at-a-time oracle, at every alignment — including slices
+    /// that straddle 64-bit window boundaries and the stream tail.
+    #[test]
+    fn peek_word_matches_bitwise_oracle_across_boundaries() {
+        let mut rng = Pcg::seed(0x5eed);
+        for case in 0..50 {
+            let n_bytes = 1 + (rng.next_u32() % 40) as usize;
+            let bytes: Vec<u8> = (0..n_bytes).map(|_| rng.next_u32() as u8).collect();
+            let mut word = BitReader::new(&bytes);
+            let mut oracle = BitReader::new(&bytes);
+            loop {
+                assert_eq!(word.bit_pos(), oracle.bit_pos(), "case {case}");
+                let want = 1 + (rng.next_u32() % 64);
+                let (w, avail) = word.peek_word();
+                // Zero-fill contract: nothing below the valid bits.
+                if avail < 64 {
+                    assert_eq!(w & (u64::MAX >> avail), 0, "case {case}");
+                }
+                let take = want.min(avail);
+                if take == 0 {
+                    assert_eq!(oracle.get_bit(), None, "case {case}: oracle has more");
+                    break;
+                }
+                let got = w >> (64 - take);
+                let expect = oracle.get_bits(take).unwrap();
+                assert_eq!(got, expect, "case {case} take {take}");
+                word.consume(take);
+            }
+        }
+    }
+
+    /// The window's unary view matches get_unary wherever the whole
+    /// run (ones + terminator) fits in the valid bits.
+    #[test]
+    fn peek_word_unary_matches_get_unary() {
+        let mut rng = Pcg::seed(77);
+        let mut w = BitWriter::new();
+        let mut runs = Vec::new();
+        for _ in 0..200 {
+            let n = (rng.next_u32() % 20) as u64;
+            w.put_unary(n);
+            runs.push(n);
+        }
+        let bytes = w.into_bytes();
+        let mut word = BitReader::new(&bytes);
+        let mut oracle = BitReader::new(&bytes);
+        for (i, &n) in runs.iter().enumerate() {
+            let (win, avail) = word.peek_word();
+            let ones = (!win).leading_zeros();
+            assert_eq!(oracle.get_unary(), Some(n), "run {i}");
+            if ones < avail {
+                // Real terminator inside the window: counts agree and
+                // one consume covers ones + terminator.
+                assert_eq!(ones as u64, n, "run {i}");
+                word.consume(ones + 1);
+            } else {
+                // Run straddles the window edge: fall back bitwise.
+                assert_eq!(word.get_unary(), Some(n), "run {i} (fallback)");
+            }
+            assert_eq!(word.bit_pos(), oracle.bit_pos(), "run {i}");
+        }
+    }
+
+    #[test]
+    fn peek_word_tail_and_eof() {
+        let bytes = [0xA5u8, 0xFF, 0x00];
+        let mut r = BitReader::new(&bytes);
+        // Tail path: fewer than 8 bytes left from the start.
+        let (w, avail) = r.peek_word();
+        assert_eq!(avail, 24);
+        assert_eq!(w >> 40, 0xA5FF00);
+        assert_eq!(w & (u64::MAX >> 24), 0);
+        // Mid-byte alignment.
+        r.consume(3);
+        let (w, avail) = r.peek_word();
+        assert_eq!(avail, 21);
+        assert_eq!(w >> (64 - 21), (0xA5FF00u64 << 43 >> 43)); // low 21 bits
+        // Consume clamps at the end; an empty window follows.
+        r.consume(1000);
+        assert_eq!(r.bit_pos(), 24);
+        assert_eq!(r.peek_word(), (0, 0));
+        assert_eq!(r.get_bit(), None);
     }
 }
