@@ -10,17 +10,23 @@
 //!
 //! Run: `cargo bench --bench service_load`
 //!      `cargo bench --bench service_load -- --quick` (shorter traces,
-//!      steady/flash/diurnal + the overload and closed-loop rows)
-//!      `... -- --quick --json BENCH_service_load.json` (machine-readable
-//!      `{bench, row, value, unit, config}` records)
+//!      steady/flash/diurnal + the overload, closed-loop, rebalance, and
+//!      delta rows; writes `BENCH_service.json` even without `--json`)
+//!      `... -- --json <path>` (machine-readable
+//!      `{bench, row, value, unit, config}` records at a chosen path)
 //!
 //! Every number is a pure function of `(--seed, config)`: rerunning a
 //! row — at any `COMPEFT_TEST_WORKERS`, on any machine — reproduces it
 //! bit-for-bit.
 
+use compeft::compeft::compress::{compress_params, CompressConfig, Granularity};
+use compeft::compeft::engine::{apply_delta, compress_delta};
+use compeft::compeft::format::{to_bytes, Encoding};
 use compeft::coordinator::admission::AdmissionConfig;
+use compeft::tensor::{ParamSet, Tensor};
 use compeft::util::bench::{json_flag, Bench, JsonSink};
 use compeft::util::json::Json;
+use compeft::util::rng::Pcg;
 use compeft::workload::sim::{self, Mode, ServiceModel, SimConfig, SimReport};
 use compeft::workload::{Trace, TraceSpec};
 
@@ -84,7 +90,17 @@ fn main() -> anyhow::Result<()> {
     };
 
     let mut bench = Bench::new("service_load");
-    let mut sink = json_flag(&args).map(|path| {
+    // `--quick` (the CI leg) always leaves a machine-readable artifact
+    // behind — CI uploads `BENCH_service.json` from both matrix legs
+    // without having to thread a path through the workflow.
+    let json_path = json_flag(&args).or_else(|| {
+        if quick {
+            Some(std::path::PathBuf::from("BENCH_service.json"))
+        } else {
+            None
+        }
+    });
+    let mut sink = json_path.map(|path| {
         let mut config = Json::obj();
         config
             .set("seed", Json::num(seed as f64))
@@ -194,6 +210,118 @@ fn main() -> anyhow::Result<()> {
         let mut fields = report_fields(&trace, &r);
         fields.push(("throughput_rps", throughput, "rps"));
         emit(&mut bench, &mut sink, "closed_loop_c64", &fields);
+    }
+
+    // Adaptive-replication row: the same Zipf trace served with fixed
+    // base replication vs the popularity-driven rebalancer widening the
+    // hot tail. Widened experts stripe their fetches across more store
+    // nodes, so the tail of the latency distribution must not get worse
+    // — asserted, so a controller regression fails the bench.
+    {
+        let spec = TraceSpec::steady_zipf(
+            if quick { 2_000_000 } else { 4_000_000 },
+            shape.n_experts,
+            2,
+            600.0,
+        );
+        let trace = Trace::generate(&spec, seed);
+        // Tight residency, no prefetch: the Zipf head refetches
+        // constantly, so fetch time dominates the tail and adaptive
+        // replication has something to optimize.
+        let fixed_model = ServiceModel {
+            gpu_slots: 2,
+            prefetch_depth: 0,
+            store_nodes: 4,
+            replication: 1,
+            ..Default::default()
+        };
+        let fixed = sim::run(&trace, &SimConfig { model: fixed_model, ..Default::default() });
+        let adaptive_model = ServiceModel { rebalance: true, ..fixed_model };
+        let adaptive =
+            sim::run(&trace, &SimConfig { model: adaptive_model, ..Default::default() });
+        assert!(
+            adaptive.rebalances > 0 && adaptive.replicas_added > 0,
+            "adaptive run must execute rebalance rounds"
+        );
+        assert!(
+            adaptive.p99_us() <= fixed.p99_us(),
+            "adaptive p99 {:.0}us must not exceed fixed-replication p99 {:.0}us",
+            adaptive.p99_us(),
+            fixed.p99_us()
+        );
+        let mut fields = report_fields(&trace, &adaptive);
+        fields.push(("rebalances", adaptive.rebalances as f64, "count"));
+        fields.push(("replicas_added", adaptive.replicas_added as f64, "count"));
+        fields.push(("replicas_dropped", adaptive.replicas_dropped as f64, "count"));
+        fields.push(("migrated_bytes", adaptive.migrated_bytes as f64, "bytes"));
+        fields.push(("p99_us_fixed", fixed.p99_us(), "us"));
+        fields.push(("p999_us_fixed", fixed.p999_us(), "us"));
+        fields.push((
+            "p99_gain_x",
+            fixed.p99_us() / adaptive.p99_us().max(1e-9),
+            "x",
+        ));
+        emit(&mut bench, &mut sink, "rebalance/zipf_hot_tail", &fields);
+    }
+
+    // Delta-update row: ship version n+1 of an expert as a ternary diff
+    // against resident version n instead of a full re-push. Real
+    // pipeline, not a model: compress both checkpoints at paper-scale
+    // density, diff in the ternary domain, and measure the wire bytes —
+    // asserting the delta stays ≤ 1/4 of the full push and that applying
+    // it reconstructs the full encode bit-for-bit.
+    {
+        let n = 200_000usize;
+        let mut rng = Pcg::seed(seed);
+        let mut old_tv = ParamSet::new();
+        let data: Vec<f32> = (0..n)
+            .map(|_| {
+                let v = rng.normal_ms(0.0, 7e-4) as f32;
+                if rng.next_f32() < 0.01 { v * 20.0 } else { v }
+            })
+            .collect();
+        old_tv.insert("layers.0.attn.lora_a", Tensor::new(vec![n], data));
+        // One more training round: ~0.5% of entries move, a sprinkling
+        // of sign flips and dropouts — the regime delta updates target.
+        let mut new_tv = old_tv.clone();
+        for (_, t) in new_tv.iter_mut() {
+            let len = t.data.len();
+            for k in 0..len / 200 {
+                let i = (k * 97 + 13) % len;
+                t.data[i] = -t.data[i] * 1.5 + 1e-4;
+            }
+            for k in 0..len / 800 {
+                let i = (k * 211 + 5) % len;
+                t.data[i] = 0.0;
+            }
+        }
+        let cfg = CompressConfig { density: 0.05, alpha: 1.0, granularity: Granularity::Global };
+        let old_c = compress_params(&old_tv, &cfg);
+        let new_c = compress_params(&new_tv, &cfg);
+        let delta = compress_delta(&old_c, &new_c).expect("same-shape delta");
+        assert_eq!(
+            apply_delta(&old_c, &delta).expect("apply"),
+            new_c,
+            "delta apply must reconstruct the next version bit-for-bit"
+        );
+        let wire = delta.to_bytes(Encoding::Golomb);
+        let full = to_bytes(&new_c, Encoding::Golomb);
+        assert!(
+            wire.len() * 4 <= full.len(),
+            "delta push {} B must be ≤ 1/4 of the full push {} B",
+            wire.len(),
+            full.len()
+        );
+        let fields: Vec<(&'static str, f64, &'static str)> = vec![
+            ("params", n as f64, "count"),
+            ("density", cfg.density, "frac"),
+            ("touched_entries", delta.nnz() as f64, "count"),
+            ("delta_bytes", wire.len() as f64, "bytes"),
+            ("full_bytes", full.len() as f64, "bytes"),
+            ("bytes_saved", (full.len() - wire.len()) as f64, "bytes"),
+            ("push_shrink_x", full.len() as f64 / (wire.len() as f64).max(1.0), "x"),
+        ];
+        emit(&mut bench, &mut sink, "delta/update_bytes", &fields);
     }
 
     if let Some(s) = &sink {

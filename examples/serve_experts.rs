@@ -13,12 +13,14 @@
 //!
 //! Requires `make artifacts`. Run:
 //!   cargo run --release --example serve_experts [scale] [n_requests] \
-//!       [--store-nodes N] [--replication R]
+//!       [--store-nodes N] [--replication R] [--rebalance]
 //!
 //! With `--store-nodes` the coordinator fetches experts from the
 //! sharded, replicated store (striped multi-replica transfers with
 //! CRC-verified failover) instead of the flat single link — the served
-//! predictions are bit-identical either way.
+//! predictions are bit-identical either way. `--rebalance` adds
+//! popularity-driven adaptive replication on top: hot experts widen,
+//! cold ones narrow back to base, under a per-round migration budget.
 
 use anyhow::{Context, Result};
 use compeft::bench_support as bs;
@@ -42,6 +44,11 @@ fn main() -> Result<()> {
     )
     .flag("store-nodes", "0", "sharded store nodes (0 = flat single link)")
     .flag("replication", "1", "replicas per expert in the sharded store")
+    .boolean(
+        "rebalance",
+        "popularity-driven adaptive replication (needs --store-nodes > 0)",
+    )
+    .flag("rebalance-every", "8", "batches between rebalance rounds")
     .flag(
         "archive",
         "",
@@ -53,6 +60,12 @@ fn main() -> Result<()> {
     // back to the flat store.
     let store_nodes = a.get_usize("store-nodes")?;
     let replication = a.get_usize("replication")?;
+    let rebalance = a.get_bool("rebalance");
+    let rebalance_every = a.get_u64("rebalance-every")?;
+    anyhow::ensure!(
+        !rebalance || store_nodes > 0,
+        "--rebalance needs a sharded store (--store-nodes > 0)"
+    );
     let archive = a.get("archive").to_string();
     let scale = a
         .positional()
@@ -119,6 +132,8 @@ fn main() -> Result<()> {
         cfg.pcie = LinkSpec::pcie();
         cfg.store_nodes = store_nodes;
         cfg.replication = replication;
+        cfg.rebalance = rebalance;
+        cfg.rebalance_every = rebalance_every;
         // The archive holds `.cpeft` members; the original-fp16 leg
         // must not view ComPEFT bytes for its npz-format experts.
         if format == "compeft" && !archive.is_empty() {
@@ -206,6 +221,15 @@ fn main() -> Result<()> {
             );
         } else {
             println!();
+        }
+        if rebalance {
+            println!(
+                "  rebalance: {} rounds, +{} / -{} replicas, {} migrated\n",
+                report.rebalances,
+                report.replicas_added,
+                report.replicas_dropped,
+                human_bytes(report.migrated_bytes)
+            );
         }
         if report.archive_hits > 0 {
             println!(

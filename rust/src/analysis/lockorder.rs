@@ -41,6 +41,8 @@ pub const LOCK_CLASSES: &[(&str, u32)] = &[
     ("pipeline.plan", rank::PREFETCH_PLAN),
     ("pipeline.staging", rank::STAGING),
     ("cache.cpu_tier", rank::CPU_TIER),
+    ("store.epoch", rank::STORE_EPOCH),
+    ("store.stats", rank::STORE_STATS),
     ("transport.link", rank::LINK_STATE),
     ("pool.sender", rank::POOL_SENDER),
     ("pool.receiver", rank::POOL_RECEIVER),
@@ -56,6 +58,8 @@ const RECEIVER_CLASSES: &[(&str, &str, &str)] = &[
     ("coordinator/pipeline.rs", "inner", "pipeline.staging"),
     ("coordinator/pipeline.rs", "cpu", "cache.cpu_tier"),
     ("coordinator/server.rs", "cpu", "cache.cpu_tier"),
+    ("coordinator/store.rs", "epoch", "store.epoch"),
+    ("coordinator/store.rs", "stats", "store.stats"),
     ("coordinator/transport.rs", "state", "transport.link"),
     ("util/pool.rs", "tx", "pool.sender"),
     ("util/pool.rs", "rx", "pool.receiver"),

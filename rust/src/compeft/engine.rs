@@ -342,6 +342,200 @@ pub fn par_merge_cfg(
     Ok(plan.into_paramset(flat))
 }
 
+// -- ternary version deltas -------------------------------------------------
+
+/// A ternary delta between two versions of one compressed expert —
+/// ComPEFT's own compress-the-residual trick applied to its update
+/// stream. `removals` holds the v(n) support entries absent (by sign)
+/// from v(n+1), carried at the **old** scale; `additions` holds the
+/// v(n+1) entries absent from v(n), carried at the **new** scale. The
+/// additions part always ships the new `α·σ` scale even when its index
+/// lists are empty, so scale-only re-calibrations are expressible as a
+/// near-zero-byte delta. [`apply_delta`] on resident v(n) reconstructs
+/// v(n+1) **bit-identically** — supports are exact set algebra and the
+/// scale is copied, never recomputed.
+#[derive(Clone, Debug)]
+pub struct ExpertDelta {
+    pub removals: CompressedParamSet,
+    pub additions: CompressedParamSet,
+}
+
+impl ExpertDelta {
+    /// Total support entries the delta touches (removed + added).
+    pub fn nnz(&self) -> usize {
+        self.removals.nnz() + self.additions.nnz()
+    }
+
+    /// Wire-serialize via the `.cpeft` delta container
+    /// ([`crate::compeft::format::delta_to_bytes`]).
+    pub fn to_bytes(&self, enc: crate::compeft::format::Encoding) -> Vec<u8> {
+        crate::compeft::format::delta_to_bytes(&self.removals, &self.additions, enc)
+    }
+
+    /// Parse a `.cpeft` delta container back
+    /// ([`crate::compeft::format::delta_from_bytes`]).
+    pub fn from_bytes(
+        bytes: &[u8],
+    ) -> Result<(ExpertDelta, crate::compeft::format::Encoding)> {
+        let (removals, additions, enc) =
+            crate::compeft::format::delta_from_bytes(bytes)?;
+        Ok((ExpertDelta { removals, additions }, enc))
+    }
+}
+
+/// `a \ b` over sorted unique index lists (one merge walk).
+fn sorted_difference(a: &[u32], b: &[u32]) -> Vec<u32> {
+    let mut out = Vec::new();
+    let mut j = 0usize;
+    for &x in a {
+        while j < b.len() && b[j] < x {
+            j += 1;
+        }
+        if j >= b.len() || b[j] != x {
+            out.push(x);
+        }
+    }
+    out
+}
+
+/// `a ∪ b` over sorted unique lists; errors on a duplicate — a delta
+/// that re-adds an index already present is malformed, and a silent
+/// dedup would hide the corruption.
+fn sorted_union(a: &[u32], b: &[u32]) -> Result<Vec<u32>> {
+    let mut out = Vec::with_capacity(a.len() + b.len());
+    let (mut i, mut j) = (0usize, 0usize);
+    loop {
+        match (a.get(i), b.get(j)) {
+            (None, None) => break,
+            (Some(&x), Some(&y)) if x == y => bail!("delta re-adds index {x}"),
+            (Some(&x), Some(&y)) if x < y => {
+                out.push(x);
+                i += 1;
+            }
+            (Some(&x), None) => {
+                out.push(x);
+                i += 1;
+            }
+            (_, Some(&y)) => {
+                out.push(y);
+                j += 1;
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Shared shape validation for [`compress_delta`] / [`apply_delta`]:
+/// two paramsets describe versions of the *same* expert only if their
+/// granularity, layout, part names, and per-part lengths all agree.
+fn check_same_shape(
+    old: &CompressedParamSet,
+    new: &CompressedParamSet,
+    what: &str,
+) -> Result<()> {
+    if old.granularity != new.granularity {
+        bail!("{what}: granularity changed between versions");
+    }
+    if old.layout != new.layout {
+        bail!("{what}: tensor layout changed between versions");
+    }
+    let old_names: Vec<&String> = old.parts.keys().collect();
+    let new_names: Vec<&String> = new.parts.keys().collect();
+    if old_names != new_names {
+        bail!("{what}: part set changed between versions");
+    }
+    for (name, o) in &old.parts {
+        let n = &new.parts[name];
+        if o.len != n.len {
+            bail!("{what}: part {name:?} length changed {} -> {}", o.len, n.len);
+        }
+    }
+    Ok(())
+}
+
+/// Diff two versions of one compressed expert into an [`ExpertDelta`]:
+/// per part, the removal lists are `old \ new` by sign at the old
+/// scale, the addition lists `new \ old` by sign at the new scale. A
+/// sign flip appears as one removal plus one addition; α·σ re-scaling
+/// rides on the additions part's scale for free. Pure set algebra — no
+/// float recomputation — so [`apply_delta`] reconstructs v(n+1) bit for
+/// bit.
+pub fn compress_delta(
+    old: &CompressedParamSet,
+    new: &CompressedParamSet,
+) -> Result<ExpertDelta> {
+    check_same_shape(old, new, "compress_delta")?;
+    let mut removals = BTreeMap::new();
+    let mut additions = BTreeMap::new();
+    for (name, o) in &old.parts {
+        let n = &new.parts[name];
+        removals.insert(
+            name.clone(),
+            TernaryVector {
+                len: o.len,
+                scale: o.scale,
+                plus: sorted_difference(&o.plus, &n.plus),
+                minus: sorted_difference(&o.minus, &n.minus),
+            },
+        );
+        additions.insert(
+            name.clone(),
+            TernaryVector {
+                len: n.len,
+                scale: n.scale,
+                plus: sorted_difference(&n.plus, &o.plus),
+                minus: sorted_difference(&n.minus, &o.minus),
+            },
+        );
+    }
+    Ok(ExpertDelta {
+        removals: CompressedParamSet {
+            granularity: old.granularity,
+            layout: old.layout.clone(),
+            parts: removals,
+        },
+        additions: CompressedParamSet {
+            granularity: new.granularity,
+            layout: new.layout.clone(),
+            parts: additions,
+        },
+    })
+}
+
+/// Apply an [`ExpertDelta`] to resident v(n), reconstructing v(n+1) in
+/// the ternary domain: per part,
+/// `new.plus = (old.plus \ removals.plus) ∪ additions.plus` (same for
+/// minus) and the scale becomes the additions part's scale. The result
+/// is validated (sorted, in-range, disjoint signs), so a hostile or
+/// mismatched delta errors instead of producing a silently corrupt
+/// expert.
+pub fn apply_delta(
+    old: &CompressedParamSet,
+    delta: &ExpertDelta,
+) -> Result<CompressedParamSet> {
+    check_same_shape(old, &delta.removals, "apply_delta(removals)")?;
+    check_same_shape(old, &delta.additions, "apply_delta(additions)")?;
+    let mut parts = BTreeMap::new();
+    for (name, o) in &old.parts {
+        let rm = &delta.removals.parts[name];
+        let ad = &delta.additions.parts[name];
+        let out = TernaryVector {
+            len: o.len,
+            scale: ad.scale,
+            plus: sorted_union(&sorted_difference(&o.plus, &rm.plus), &ad.plus)?,
+            minus: sorted_union(&sorted_difference(&o.minus, &rm.minus), &ad.minus)?,
+        };
+        out.validate()
+            .map_err(|e| anyhow::anyhow!("apply_delta: part {name:?}: {e}"))?;
+        parts.insert(name.clone(), out);
+    }
+    Ok(CompressedParamSet {
+        granularity: old.granularity,
+        layout: old.layout.clone(),
+        parts,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -650,6 +844,172 @@ mod tests {
             &pool
         )
         .is_err());
+    }
+
+    /// Perturb ~2% of a paramset's coordinates deterministically: sign
+    /// flips with new mass, plus some zeroed entries — the support
+    /// shrink/growth and sign-flip cases a fine-tuning round produces.
+    fn next_version(tv: &ParamSet) -> ParamSet {
+        let mut out = tv.clone();
+        for (_, t) in out.iter_mut() {
+            let n = t.data.len();
+            for k in 0..n / 50 + 1 {
+                let i = (k * 97) % n;
+                t.data[i] = -t.data[i] * 1.5 + 0.01;
+            }
+            for k in 0..n / 100 + 1 {
+                let i = (k * 131 + 7) % n;
+                t.data[i] = 0.0;
+            }
+        }
+        out
+    }
+
+    /// `apply_delta(v_n, compress_delta(v_n, v_{n+1}))` reconstructs
+    /// the full re-encode of v(n+1) bit for bit — across granularities,
+    /// α·σ re-scaling, support shrink/growth, and the empty diff.
+    #[test]
+    fn delta_reconstructs_next_version_bit_identically() {
+        let mut rng = Pcg::seed(2026);
+        for granularity in [Granularity::Global, Granularity::PerTensor] {
+            let tv = sample_paramset(&mut rng, 3);
+            let tv2 = next_version(&tv);
+            let cases: [(&str, f64, f64, f64, f64); 4] = [
+                ("same-config", 0.1, 1.0, 0.1, 1.0),
+                ("rescale", 0.1, 1.0, 0.1, 2.0),
+                ("shrink", 0.2, 1.0, 0.05, 1.0),
+                ("growth", 0.05, 1.0, 0.2, 1.0),
+            ];
+            for (name, d_old, a_old, d_new, a_new) in cases {
+                let old = compress_params(
+                    &tv,
+                    &CompressConfig { density: d_old, alpha: a_old, granularity },
+                );
+                let new = compress_params(
+                    &tv2,
+                    &CompressConfig { density: d_new, alpha: a_new, granularity },
+                );
+                let delta = compress_delta(&old, &new).unwrap();
+                let got = apply_delta(&old, &delta).unwrap();
+                assert_compressed_bit_identical(
+                    &new,
+                    &got,
+                    &format!("{granularity:?}/{name}"),
+                );
+            }
+
+            // Scale-only update: same τ, new α → both index halves are
+            // empty, yet the new scale still rides the delta.
+            let old = compress_params(
+                &tv,
+                &CompressConfig { density: 0.1, alpha: 1.0, granularity },
+            );
+            let new = compress_params(
+                &tv,
+                &CompressConfig { density: 0.1, alpha: 2.0, granularity },
+            );
+            let delta = compress_delta(&old, &new).unwrap();
+            assert_eq!(delta.nnz(), 0, "scale-only delta ships no indices");
+            let got = apply_delta(&old, &delta).unwrap();
+            assert_compressed_bit_identical(&new, &got, "scale-only");
+
+            // Empty diff: identical versions round-trip through a
+            // zero-support delta.
+            let delta = compress_delta(&old, &old).unwrap();
+            assert_eq!(delta.nnz(), 0);
+            let got = apply_delta(&old, &delta).unwrap();
+            assert_compressed_bit_identical(&old, &got, "empty-diff");
+        }
+    }
+
+    /// Delta wire container: round-trips bit-identically, rejects any
+    /// single bit flip / truncation / bad magic, and at paper-scale
+    /// density a small update ships in ≤ 1/4 of a full re-encode.
+    #[test]
+    fn delta_wire_roundtrips_rejects_corruption_and_stays_small() {
+        use crate::compeft::format::{to_bytes, Encoding};
+        let mut rng = Pcg::seed(404);
+        let mut tv = ParamSet::new();
+        tv.insert(
+            "w",
+            Tensor::new(vec![50_000], prop::task_vector_like(&mut rng, 50_000)),
+        );
+        let cfg = CompressConfig {
+            density: 0.05,
+            alpha: 1.0,
+            granularity: Granularity::Global,
+        };
+        let old = compress_params(&tv, &cfg);
+        // Flip the sign of 8 known-support coordinates: |τ| is
+        // untouched so the support set is stable, but each flip crosses
+        // plus → minus, and the shifted mean nudges σ — a guaranteed
+        // small, nonempty delta.
+        let flips: Vec<u32> = old.parts[""].plus.iter().take(8).copied().collect();
+        assert_eq!(flips.len(), 8);
+        let mut tv2 = tv.clone();
+        let t = tv2.get_mut("w").unwrap();
+        for &i in &flips {
+            t.data[i as usize] = -t.data[i as usize];
+        }
+        let new = compress_params(&tv2, &cfg);
+        let delta = compress_delta(&old, &new).unwrap();
+        assert!(delta.nnz() > 0, "sign flips must produce a nonempty delta");
+        let wire = delta.to_bytes(Encoding::Golomb);
+        let (back, enc) = ExpertDelta::from_bytes(&wire).unwrap();
+        assert_eq!(enc, Encoding::Golomb);
+        assert_compressed_bit_identical(&delta.removals, &back.removals, "wire/rm");
+        assert_compressed_bit_identical(&delta.additions, &back.additions, "wire/ad");
+        assert_compressed_bit_identical(
+            &new,
+            &apply_delta(&old, &back).unwrap(),
+            "wire/apply",
+        );
+
+        let full = to_bytes(&new, Encoding::Golomb);
+        assert!(
+            wire.len() * 4 <= full.len(),
+            "delta wire {} bytes vs full re-encode {} bytes",
+            wire.len(),
+            full.len()
+        );
+
+        for i in [0usize, 5, wire.len() / 2, wire.len() - 1] {
+            let mut bad = wire.clone();
+            bad[i] ^= 1;
+            assert!(ExpertDelta::from_bytes(&bad).is_err(), "bit flip at {i}");
+        }
+        assert!(ExpertDelta::from_bytes(&wire[..wire.len() - 3]).is_err());
+        assert!(ExpertDelta::from_bytes(b"CPFDxxxxxxxxxxxxxx").is_err());
+    }
+
+    /// Version-shape mismatches and hostile deltas error instead of
+    /// silently corrupting the resident expert.
+    #[test]
+    fn delta_shape_mismatches_and_hostile_deltas_error() {
+        let mut rng = Pcg::seed(11);
+        let a = sample_paramset(&mut rng, 2);
+        let b = sample_paramset(&mut rng, 1);
+        let cfg = CompressConfig::default();
+        let ca = compress_params(&a, &cfg);
+        let cb = compress_params(&b, &cfg);
+        assert!(compress_delta(&ca, &cb).is_err(), "layout mismatch");
+        let per = compress_params(
+            &a,
+            &CompressConfig {
+                granularity: Granularity::PerTensor,
+                ..CompressConfig::default()
+            },
+        );
+        assert!(compress_delta(&ca, &per).is_err(), "granularity mismatch");
+        // Applying a delta to the wrong base is a shape error.
+        let d = compress_delta(&ca, &ca).unwrap();
+        assert!(apply_delta(&cb, &d).is_err());
+        // A delta that re-adds already-present support is rejected.
+        let mut bad = compress_delta(&ca, &ca).unwrap();
+        let present = ca.parts.values().next().unwrap().plus.clone();
+        assert!(!present.is_empty());
+        bad.additions.parts.values_mut().next().unwrap().plus = present;
+        assert!(apply_delta(&ca, &bad).is_err(), "duplicate add must fail");
     }
 
     #[test]

@@ -316,6 +316,93 @@ pub fn from_bytes_par(
     from_bytes_impl(bytes, Some(pool))
 }
 
+// -- delta containers -------------------------------------------------------
+
+/// Magic of the `.cpeft` **delta** wire container: two ordinary
+/// `.cpeft` payloads (support removals at the old scale, additions at
+/// the new scale — see [`crate::compeft::engine::compress_delta`])
+/// framed by length under one whole-buffer CRC.
+const DELTA_MAGIC: &[u8; 4] = b"CPFD";
+const DELTA_VERSION: u16 = 1;
+
+/// Serialize a ternary version delta:
+///
+/// ```text
+/// magic "CPFD" | version u16 | removals_len u64 | removals | additions | crc32
+/// ```
+///
+/// Both halves are full `.cpeft` containers (own header + CRC), so a
+/// reader re-runs every structural validation on each.
+pub fn delta_to_bytes(
+    removals: &CompressedParamSet,
+    additions: &CompressedParamSet,
+    enc: Encoding,
+) -> Vec<u8> {
+    let rm = to_bytes(removals, enc);
+    let ad = to_bytes(additions, enc);
+    let mut out = Vec::new();
+    out.extend_from_slice(DELTA_MAGIC);
+    out.extend_from_slice(&DELTA_VERSION.to_le_bytes());
+    out.extend_from_slice(&(rm.len() as u64).to_le_bytes());
+    out.extend_from_slice(&rm);
+    out.extend_from_slice(&ad);
+    let crc = crc32(&out);
+    out.extend_from_slice(&crc.to_le_bytes());
+    out
+}
+
+/// Parse a delta container back into `(removals, additions, encoding)`.
+/// Panic-free like every wire reader here: truncation, bit flips (the
+/// CRC covers the whole buffer), and malformed halves all surface as
+/// `Err`.
+pub fn delta_from_bytes(
+    bytes: &[u8],
+) -> Result<(CompressedParamSet, CompressedParamSet, Encoding)> {
+    // Fixed frame: magic (4) + version (2) + removals length (8) +
+    // trailing CRC (4).
+    if bytes.len() < 18 || bytes.get(..4) != Some(DELTA_MAGIC.as_slice()) {
+        bail!("not a .cpeft delta container");
+    }
+    let byte = |i: usize| bytes.get(i).copied().unwrap_or(0);
+    let version = u16::from_le_bytes([byte(4), byte(5)]);
+    if version != DELTA_VERSION {
+        bail!("unsupported delta version {version}");
+    }
+    let stored_crc = u32::from_le_bytes([
+        byte(bytes.len() - 4),
+        byte(bytes.len() - 3),
+        byte(bytes.len() - 2),
+        byte(bytes.len() - 1),
+    ]);
+    let covered = bytes.get(..bytes.len() - 4).unwrap_or_default();
+    let actual = crc32(covered);
+    if stored_crc != actual {
+        bail!("delta crc mismatch: stored {stored_crc:#x}, computed {actual:#x}");
+    }
+    let rm_len = u64::from_le_bytes([
+        byte(6),
+        byte(7),
+        byte(8),
+        byte(9),
+        byte(10),
+        byte(11),
+        byte(12),
+        byte(13),
+    ]) as usize;
+    let body = covered.get(14..).unwrap_or_default();
+    if rm_len > body.len() {
+        bail!("delta removals length {rm_len} exceeds body {}", body.len());
+    }
+    let rm_bytes = body.get(..rm_len).unwrap_or_default();
+    let ad_bytes = body.get(rm_len..).unwrap_or_default();
+    let (removals, enc_rm) = from_bytes(rm_bytes).context("delta removals half")?;
+    let (additions, enc_ad) = from_bytes(ad_bytes).context("delta additions half")?;
+    if enc_rm != enc_ad {
+        bail!("delta halves disagree on encoding: {enc_rm:?} vs {enc_ad:?}");
+    }
+    Ok((removals, additions, enc_ad))
+}
+
 /// A structurally validated container, payloads not yet decoded: the
 /// output of [`parse_structure`], everything both readers (and the
 /// fused-path planner) agree on before any payload bits are touched.

@@ -417,6 +417,57 @@ impl ExpertLoader {
         Ok((merged, t0.elapsed()))
     }
 
+    /// Materialize an already-parsed compressed paramset densely
+    /// (chunk-parallel when a pool is attached; bit-identical either
+    /// way). The ternary-domain half of [`ExpertLoader::decode`], for
+    /// callers that produced the compressed form some other way — e.g.
+    /// a delta apply.
+    pub fn densify(
+        &self,
+        c: &CompressedParamSet,
+        template: &ParamSet,
+    ) -> Result<(ParamSet, Duration)> {
+        let t0 = Instant::now();
+        let tv = match &self.pool {
+            Some(pool) => engine::par_decompress_params(c, template, pool)?,
+            None => decompress_params(c, template)?,
+        };
+        Ok((tv, t0.elapsed()))
+    }
+
+    /// Apply a `.cpeft` delta container ([`engine::ExpertDelta`] wire
+    /// form) to the resident compressed expert, reconstructing the next
+    /// version **in the ternary domain** — no dense round-trip, no
+    /// float recomputation, so the result is bit-identical to decoding
+    /// a full re-encode of v(n+1).
+    ///
+    /// Timing: `fetch` is the simulated net hop for the delta's wire
+    /// bytes (an update push travels the same link a full checkpoint
+    /// would, just carrying far fewer bytes); `decode` is the real
+    /// parse+apply time; `upload` stays zero (re-uploading the
+    /// refreshed adapter is the caller's existing swap path). When a
+    /// store is attached the apply lands on its shared metrics as
+    /// `delta_applies` / `delta_bytes_saved`, with `full_encoded_bytes`
+    /// as the counterfactual full-push cost.
+    pub fn apply_delta(
+        &self,
+        old: &CompressedParamSet,
+        delta_bytes: &[u8],
+        full_encoded_bytes: u64,
+    ) -> Result<(CompressedParamSet, LoadTiming)> {
+        let fetch = self.net.transfer(delta_bytes.len() as u64);
+        let t0 = Instant::now();
+        let (delta, _) = engine::ExpertDelta::from_bytes(delta_bytes)?;
+        let next = engine::apply_delta(old, &delta)?;
+        let decode = t0.elapsed();
+        if let Some(store) = &self.store {
+            store
+                .metrics()
+                .record_delta_apply(delta_bytes.len() as u64, full_encoded_bytes);
+        }
+        Ok((next, LoadTiming { fetch, decode, upload: Duration::ZERO }))
+    }
+
     /// Materialize the servable adapter: init + task vector.
     pub fn materialize(
         &self,
@@ -816,6 +867,55 @@ mod tests {
         assert_eq!(fused.fused, fused.fetch + fused.decode);
 
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Delta updates through the loader: applying a wire delta on the
+    /// resident v(n) reconstructs the full re-encode of v(n+1) bit for
+    /// bit, ships far fewer bytes over the link than a full push, and
+    /// lands on the attached store's metrics; a corrupted delta is
+    /// rejected instead of applied.
+    #[test]
+    fn loader_applies_delta_updates_bit_identically() {
+        use crate::compeft::engine::compress_delta;
+        use crate::compeft::format::Encoding;
+        use crate::coordinator::metrics::Metrics;
+        use crate::coordinator::store::{ExpertStore, StoreConfig};
+
+        let v0 = sample_tv(61);
+        let mut v1 = v0.clone();
+        for (_, t) in v1.iter_mut() {
+            let n = t.data.len();
+            for k in 0..8usize {
+                let i = (k * 211 + 5) % n;
+                t.data[i] = -t.data[i];
+            }
+        }
+        let cfg = CompressConfig { density: 0.1, ..Default::default() };
+        let old = compress_params(&v0, &cfg);
+        let new = compress_params(&v1, &cfg);
+        let wire = compress_delta(&old, &new).unwrap().to_bytes(Encoding::Golomb);
+        let full_bytes = format::to_bytes(&new, Encoding::Golomb).len() as u64;
+        assert!((wire.len() as u64) < full_bytes);
+
+        let metrics = Arc::new(Metrics::new());
+        let mut scfg = StoreConfig::new(3, 2);
+        scfg.time_scale = 0.0;
+        let loader = fast_links().with_store(Arc::new(ExpertStore::new(
+            scfg,
+            None,
+            Arc::clone(&metrics),
+        )));
+        let (got, _timing) = loader.apply_delta(&old, &wire, full_bytes).unwrap();
+        assert_eq!(got, new, "delta apply must equal the full re-encode");
+
+        let snap = metrics.snapshot();
+        assert_eq!(snap.delta_applies, 1);
+        assert_eq!(snap.delta_bytes_saved, full_bytes - wire.len() as u64);
+
+        let mut bad = wire.clone();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0x40;
+        assert!(loader.apply_delta(&old, &bad, full_bytes).is_err());
     }
 
     #[test]

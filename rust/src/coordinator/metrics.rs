@@ -106,6 +106,20 @@ struct Inner {
     archive_hits: u64,
     /// Total encoded bytes served as archive views.
     archive_bytes_viewed: u64,
+    /// Popularity-driven rebalance rounds executed by the store.
+    rebalances: u64,
+    /// Expert replicas added by rebalance rounds (widening).
+    replicas_added: u64,
+    /// Expert replicas dropped by rebalance rounds (narrowing).
+    replicas_dropped: u64,
+    /// Encoded bytes copied between store nodes by rebalance rounds and
+    /// topology changes (drain / add migrations).
+    migrated_bytes: u64,
+    /// Expert version upgrades applied as ternary deltas in place.
+    delta_applies: u64,
+    /// Bytes saved by shipping deltas instead of full re-encodes
+    /// (`Σ full encoded bytes − delta wire bytes`).
+    delta_bytes_saved: u64,
     queue: LogHistogram,
     swap: LogHistogram,
     exec: LogHistogram,
@@ -228,6 +242,30 @@ impl Metrics {
         g.archive_bytes_viewed += bytes;
     }
 
+    /// One store rebalance round: `added`/`dropped` replicas and the
+    /// bytes its widening migrations copied.
+    pub fn record_rebalance(&self, added: u64, dropped: u64, migrated: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.rebalances += 1;
+        g.replicas_added += added;
+        g.replicas_dropped += dropped;
+        g.migrated_bytes += migrated;
+    }
+
+    /// Encoded bytes copied between store nodes by a topology change
+    /// (node drain or add).
+    pub fn record_migrated(&self, bytes: u64) {
+        self.inner.lock().unwrap().migrated_bytes += bytes;
+    }
+
+    /// One expert version upgrade applied as a ternary delta in place:
+    /// `delta_bytes` went over the wire instead of `full_bytes`.
+    pub fn record_delta_apply(&self, delta_bytes: u64, full_bytes: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.delta_applies += 1;
+        g.delta_bytes_saved += full_bytes.saturating_sub(delta_bytes);
+    }
+
     /// A handle on this engine's copy counter — hand clones to the
     /// loader/store (`with_meter`) so every encoded-byte heap copy they
     /// make lands in this snapshot's `payload_copies`.
@@ -255,6 +293,12 @@ impl Metrics {
             corrupt_payloads: g.corrupt_payloads,
             archive_hits: g.archive_hits,
             archive_bytes_viewed: g.archive_bytes_viewed,
+            rebalances: g.rebalances,
+            replicas_added: g.replicas_added,
+            replicas_dropped: g.replicas_dropped,
+            migrated_bytes: g.migrated_bytes,
+            delta_applies: g.delta_applies,
+            delta_bytes_saved: g.delta_bytes_saved,
             payload_copies: self.copy_meter.count(),
             mean_batch_fill: if g.batches == 0 {
                 0.0
@@ -307,6 +351,18 @@ pub struct MetricsSnapshot {
     pub archive_hits: u64,
     /// Total encoded bytes served as archive views.
     pub archive_bytes_viewed: u64,
+    /// Popularity-driven rebalance rounds executed by the store.
+    pub rebalances: u64,
+    /// Expert replicas added by rebalance rounds (widening).
+    pub replicas_added: u64,
+    /// Expert replicas dropped by rebalance rounds (narrowing).
+    pub replicas_dropped: u64,
+    /// Encoded bytes copied between store nodes (rebalance + drain/add).
+    pub migrated_bytes: u64,
+    /// Expert version upgrades applied as ternary deltas in place.
+    pub delta_applies: u64,
+    /// Bytes saved by shipping deltas instead of full re-encodes.
+    pub delta_bytes_saved: u64,
     /// Heap copies of encoded payload bytes (the zero-copy regression
     /// counter — archive-resident serving must keep this at 0).
     pub payload_copies: u64,
@@ -345,6 +401,12 @@ impl MetricsSnapshot {
             .set("corrupt_payloads", Json::num(self.corrupt_payloads as f64))
             .set("archive_hits", Json::num(self.archive_hits as f64))
             .set("archive_bytes_viewed", Json::num(self.archive_bytes_viewed as f64))
+            .set("rebalances", Json::num(self.rebalances as f64))
+            .set("replicas_added", Json::num(self.replicas_added as f64))
+            .set("replicas_dropped", Json::num(self.replicas_dropped as f64))
+            .set("migrated_bytes", Json::num(self.migrated_bytes as f64))
+            .set("delta_applies", Json::num(self.delta_applies as f64))
+            .set("delta_bytes_saved", Json::num(self.delta_bytes_saved as f64))
             .set("payload_copies", Json::num(self.payload_copies as f64))
             .set("mean_batch_fill", Json::num(self.mean_batch_fill))
             .set("total_p50_us", Json::num(self.total_p50_us))
@@ -408,6 +470,11 @@ mod tests {
         m.record_decode_overlap(Duration::from_micros(300));
         m.record_archive_hit(4096);
         m.record_archive_hit(1024);
+        m.record_rebalance(3, 1, 2048);
+        m.record_rebalance(0, 2, 0);
+        m.record_migrated(512);
+        m.record_delta_apply(100, 1000);
+        m.record_delta_apply(250, 200); // saving saturates at zero
         m.copy_meter().record(3);
         let s = m.snapshot();
         assert_eq!(s.rejected, 5);
@@ -425,6 +492,12 @@ mod tests {
         assert_eq!(s.fused_loads, 2);
         assert_eq!(s.archive_hits, 2);
         assert_eq!(s.archive_bytes_viewed, 5120);
+        assert_eq!(s.rebalances, 2);
+        assert_eq!(s.replicas_added, 3);
+        assert_eq!(s.replicas_dropped, 3);
+        assert_eq!(s.migrated_bytes, 2560);
+        assert_eq!(s.delta_applies, 2);
+        assert_eq!(s.delta_bytes_saved, 900);
         assert_eq!(s.payload_copies, 3);
         let j = s.to_json().to_string();
         assert!(j.contains("\"rejected\":5"));
@@ -437,6 +510,12 @@ mod tests {
         assert!(j.contains("\"corrupt_payloads\":1"));
         assert!(j.contains("\"archive_hits\":2"));
         assert!(j.contains("\"archive_bytes_viewed\":5120"));
+        assert!(j.contains("\"rebalances\":2"));
+        assert!(j.contains("\"replicas_added\":3"));
+        assert!(j.contains("\"replicas_dropped\":3"));
+        assert!(j.contains("\"migrated_bytes\":2560"));
+        assert!(j.contains("\"delta_applies\":2"));
+        assert!(j.contains("\"delta_bytes_saved\":900"));
         assert!(j.contains("\"payload_copies\":3"));
     }
 

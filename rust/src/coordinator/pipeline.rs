@@ -200,6 +200,9 @@ impl PrepareContext {
     }
 
     fn prepare_stored(&self, rec: &ExpertRecord) -> Result<PreparedExpert> {
+        if let Some(prepared) = self.prepare_stored_delta(rec)? {
+            return Ok(prepared);
+        }
         if let Some(prepared) = self.prepare_stored_fused(rec)? {
             return Ok(prepared);
         }
@@ -219,6 +222,90 @@ impl PrepareContext {
             dense_bytes: params.bytes_fp16(),
             params,
         })
+    }
+
+    /// Delta fast path for versioned experts. When `rec` is a version
+    /// alias (`"id@vN"`, see
+    /// [`crate::coordinator::registry::version_key`]) whose *previous*
+    /// version's encoded payload is host-tier resident and a `.cpeftd`
+    /// delta container sits next to the record's `.cpeft`, ship the
+    /// delta instead of the full checkpoint: parse the resident v(N−1)
+    /// bytes to ternary form, apply the delta in the ternary domain
+    /// ([`ExpertLoader::apply_delta`] — counted as `delta_applies` /
+    /// `delta_bytes_saved`), and re-encode for the host tier. The
+    /// reconstruction is bit-identical to the full `.cpeft` on disk
+    /// (`apply_delta` is exact set algebra and the encoder is
+    /// deterministic), so everything staged downstream — host-tier
+    /// bytes, dense params, predictions — is byte-for-byte what the
+    /// full-fetch path produces; only the wire bytes shipped change.
+    /// Returns `Ok(None)` whenever the fast path does not apply (bare
+    /// id, no delta file, previous version not resident, target already
+    /// host-tier resident) and the caller falls through unchanged.
+    fn prepare_stored_delta(&self, rec: &ExpertRecord) -> Result<Option<PreparedExpert>> {
+        use crate::coordinator::registry::{split_version_key, version_key};
+
+        let Some((base, v)) = split_version_key(&rec.id) else {
+            return Ok(None);
+        };
+        let delta_path = rec.path.with_extension("cpeftd");
+        if !delta_path.exists() {
+            return Ok(None);
+        }
+        if self.cpu.lock().unwrap().contains(&rec.id) {
+            return Ok(None); // already resident: the tier hit is free
+        }
+        let prev_key = if v <= 1 { base.to_string() } else { version_key(base, v - 1) };
+        let Some(prev) = self.registry.get(&prev_key) else {
+            return Ok(None);
+        };
+        use crate::coordinator::registry::ExpertFormat;
+        if rec.format != ExpertFormat::Compeft || prev.format != ExpertFormat::Compeft {
+            return Ok(None); // deltas exist only in the ternary domain
+        }
+        // The previous version's bytes must already be local; otherwise
+        // a delta saves nothing over fetching the full new version.
+        let (prev_bytes, pin) = {
+            let mut cpu = self.cpu.lock().unwrap();
+            match cpu.get(&prev_key) {
+                Some(b) => {
+                    let bytes = b.clone();
+                    cpu.pin(&prev_key);
+                    (bytes, PinGuard::new(&self.cpu, &prev_key))
+                }
+                None => return Ok(None),
+            }
+        };
+        let (prev_c, parse_prev) =
+            self.loader.decode_compressed(prev, prev_bytes.as_slice())?;
+        drop(pin);
+        let delta_bytes = std::fs::read(&delta_path)
+            .map_err(|e| anyhow!("read delta {}: {e}", delta_path.display()))?;
+        // One heap materialization off disk, like the flat fetch path.
+        self.loader.meter().record(1);
+        let (next_c, apply) =
+            self.loader.apply_delta(&prev_c, &delta_bytes, rec.encoded_bytes)?;
+        // Re-encode for the host tier: deterministic encoder + exact
+        // reconstruction ⇒ the same bytes a full fetch would have
+        // cached, so upcoming users (and compositions) see one payload.
+        let wire =
+            crate::compeft::format::to_bytes(&next_c, crate::compeft::format::Encoding::Golomb);
+        {
+            let mut cpu = self.cpu.lock().unwrap();
+            if !cpu.contains(&rec.id) {
+                cpu.insert(&rec.id, Payload::from_vec(wire), rec.encoded_bytes.max(1));
+            }
+        }
+        let template = self.templates.for_method(rec.method);
+        let (tv, densify) = self.loader.densify(&next_c, template)?;
+        let params = self.loader.materialize(rec.method, template, &tv)?;
+        Ok(Some(PreparedExpert {
+            id: rec.id.clone(),
+            method: rec.method,
+            staged_sim: apply.fetch + apply.decode + parse_prev + densify,
+            upload_bytes: rec.encoded_bytes,
+            dense_bytes: params.bytes_fp16(),
+            params,
+        }))
     }
 
     /// Fused cold path for store-backed `.cpeft` experts: stream the

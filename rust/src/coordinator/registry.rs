@@ -18,6 +18,7 @@ use crate::tensor::ParamSet;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU32, Ordering};
 
 /// How an expert checkpoint is stored on "disk"/remote.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -86,11 +87,44 @@ pub struct CompositionRecord {
     pub n_params: usize,
 }
 
+/// Version chain for one expert id: newer versions are registered as
+/// `"{id}@v{n}"` alias records ([`version_key`]), and `current` is the
+/// version admission pins new batches to. `current` is atomic so the
+/// serving engine can activate a pushed version through a shared
+/// `Arc<Registry>` without a lock: in-flight batches keep the version
+/// string they resolved at admission, so a flip mid-trace never mixes
+/// versions inside one batch.
+#[derive(Debug)]
+struct VersionChain {
+    /// Highest registered version (`0` = the base record under `id`).
+    latest: u32,
+    /// Currently admitted version; bumped by [`Registry::activate_next`].
+    current: AtomicU32,
+}
+
+/// Catalog key of version `v` of expert `id` (`v ≥ 1`; version 0 is the
+/// base record under the bare id).
+pub fn version_key(id: &str, v: u32) -> String {
+    format!("{id}@v{v}")
+}
+
+/// Split a version alias key back into `(base id, version)`; `None` for
+/// bare (unversioned) ids.
+pub fn split_version_key(id: &str) -> Option<(&str, u32)> {
+    let (base, v) = id.rsplit_once("@v")?;
+    if base.is_empty() {
+        return None;
+    }
+    let n: u32 = v.parse().ok()?;
+    Some((base, n))
+}
+
 /// The expert catalog.
 #[derive(Default, Debug)]
 pub struct Registry {
     experts: BTreeMap<String, ExpertRecord>,
     compositions: BTreeMap<String, CompositionRecord>,
+    versions: BTreeMap<String, VersionChain>,
 }
 
 impl Registry {
@@ -225,6 +259,124 @@ impl Registry {
     /// Ids of all registered compositions.
     pub fn composition_ids(&self) -> Vec<String> {
         self.compositions.keys().cloned().collect()
+    }
+
+    /// Register the next version of an existing expert. The record is
+    /// stored under the alias key [`version_key`]`(id, n)` and does
+    /// **not** start serving: admission keeps resolving the previous
+    /// version until [`Registry::activate_next`] flips the pin. Returns
+    /// the new version number.
+    pub fn register_version(&mut self, id: &str, mut rec: ExpertRecord) -> Result<u32> {
+        if id.contains("@v") {
+            bail!("register versions against the base id, not alias {id:?}");
+        }
+        if !self.experts.contains_key(id) {
+            bail!("cannot register a version of unknown expert {id:?}");
+        }
+        let next = self.versions.get(id).map(|c| c.latest + 1).unwrap_or(1);
+        let key = version_key(id, next);
+        self.ensure_id_free_of_compositions(&key)?;
+        rec.id = key.clone();
+        self.experts.insert(key, rec);
+        match self.versions.get_mut(id) {
+            Some(c) => c.latest = next,
+            None => {
+                self.versions.insert(
+                    id.to_string(),
+                    VersionChain { latest: next, current: AtomicU32::new(0) },
+                );
+            }
+        }
+        Ok(next)
+    }
+
+    /// Currently admitted version of `id` (0 = the base record).
+    pub fn current_version(&self, id: &str) -> u32 {
+        self.versions
+            .get(id)
+            .map(|c| c.current.load(Ordering::Acquire))
+            .unwrap_or(0)
+    }
+
+    /// Highest registered version of `id` (0 = no versions pushed).
+    pub fn latest_version(&self, id: &str) -> u32 {
+        self.versions.get(id).map(|c| c.latest).unwrap_or(0)
+    }
+
+    /// Resolve the catalog key admission should pin a new batch of `id`
+    /// to: the bare id until a pushed version is activated, then the
+    /// [`version_key`] alias of the admitted version. In-flight batches
+    /// hold on to the string this returned when *they* were admitted,
+    /// which is the whole version-pinning story.
+    pub fn pin(&self, id: &str) -> String {
+        match self.current_version(id) {
+            0 => id.to_string(),
+            v => version_key(id, v),
+        }
+    }
+
+    /// Flip admission to the next registered version of `id`, if one is
+    /// staged beyond the current pin. Takes `&self` — the engine calls
+    /// this through its shared `Arc<Registry>`; only the admitting
+    /// thread activates, so a plain load/store pair suffices. Returns
+    /// the newly admitted version, or `None` when already current.
+    pub fn activate_next(&self, id: &str) -> Option<u32> {
+        let c = self.versions.get(id)?;
+        let cur = c.current.load(Ordering::Acquire);
+        if cur >= c.latest {
+            return None;
+        }
+        c.current.store(cur + 1, Ordering::Release);
+        Some(cur + 1)
+    }
+
+    /// Compress a new task-vector npz as the next version of stored
+    /// expert `id`: writes `{npz stem}.v{n}.cpeft` next to it and
+    /// registers the alias record (staged — serving stays on the
+    /// current pin until [`Registry::activate_next`]). Returns the new
+    /// version number.
+    pub fn register_compeft_version(
+        &mut self,
+        id: &str,
+        npz_path: &Path,
+        cfg: &CompressConfig,
+    ) -> Result<u32> {
+        let base = match self.experts.get(id) {
+            Some(r) => r.clone(),
+            None => bail!("cannot register a version of unknown expert {id:?}"),
+        };
+        if base.format != ExpertFormat::Compeft {
+            bail!(
+                "versioned updates need a `.cpeft` base; {id:?} is stored as {:?}",
+                base.format
+            );
+        }
+        let tv = ParamSet::load_npz(npz_path)
+            .with_context(|| format!("load {}", npz_path.display()))?;
+        if tv.total_elements() != base.n_params {
+            bail!(
+                "version of {id:?} has {} params, base has {}",
+                tv.total_elements(),
+                base.n_params
+            );
+        }
+        let next = self.latest_version(id) + 1;
+        let compressed = compress_params(&tv, cfg);
+        let out = npz_path.with_extension(format!("v{next}.cpeft"));
+        let bytes = format::save(&out, &compressed, Encoding::Golomb)?;
+        self.register_version(
+            id,
+            ExpertRecord {
+                id: String::new(), // overwritten with the alias key
+                task: base.task,
+                scale: base.scale,
+                method: base.method,
+                format: ExpertFormat::Compeft,
+                path: out,
+                encoded_bytes: bytes,
+                n_params: base.n_params,
+            },
+        )
     }
 
     /// Register the original (fp16-accounted) form of a task-vector npz.
@@ -503,6 +655,56 @@ mod tests {
             assert_eq!(nodes.len(), 2);
         }
         assert_eq!(got, reg.assignments(&p), "pure function");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Version chains: pushed versions stage under `id@v{n}` aliases,
+    /// admission pins stay on the current version until an explicit
+    /// activate, and activation works through a shared reference.
+    #[test]
+    fn version_chain_pins_and_activates() {
+        let dir = std::env::temp_dir()
+            .join(format!("compeft_reg_versions_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let npz = tv_npz(&dir, "taskA.lora.npz");
+        let mut reg = Registry::new();
+        let cfg = CompressConfig { density: 0.2, ..Default::default() };
+        reg.register_compeft("e", "a", "s", ExpertMethod::Lora, &npz, &cfg).unwrap();
+
+        // No versions pushed: the pin is the bare id.
+        assert_eq!(reg.pin("e"), "e");
+        assert_eq!(reg.current_version("e"), 0);
+        assert!(reg.activate_next("e").is_none());
+
+        // Stage two versions; serving stays pinned to v0 until told.
+        let v1 = reg.register_compeft_version("e", &npz, &cfg).unwrap();
+        let v2 = reg.register_compeft_version("e", &npz, &cfg).unwrap();
+        assert_eq!((v1, v2), (1, 2));
+        assert_eq!(reg.latest_version("e"), 2);
+        assert_eq!(reg.pin("e"), "e", "staging must not move the pin");
+        assert!(reg.get("e@v1").is_some());
+        assert!(reg.get("e@v2").is_some());
+        assert!(reg.get("e@v2").unwrap().path.exists());
+
+        // Activate through a shared reference, one step at a time.
+        let shared = std::sync::Arc::new(reg);
+        assert_eq!(shared.activate_next("e"), Some(1));
+        assert_eq!(shared.pin("e"), version_key("e", 1));
+        assert_eq!(shared.activate_next("e"), Some(2));
+        assert_eq!(shared.pin("e"), "e@v2");
+        assert!(shared.activate_next("e").is_none(), "already current");
+
+        // Guard rails: unknown base, alias base, non-cpeft base.
+        let mut reg = std::sync::Arc::try_unwrap(shared).unwrap();
+        assert!(reg.register_compeft_version("nope", &npz, &cfg).is_err());
+        assert!(reg
+            .register_version(
+                "e@v1",
+                reg.get("e").unwrap().clone(),
+            )
+            .is_err());
+        reg.register_original("dense", "a", "s", ExpertMethod::Lora, &npz).unwrap();
+        assert!(reg.register_compeft_version("dense", &npz, &cfg).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 

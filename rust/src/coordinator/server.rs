@@ -34,7 +34,9 @@ use crate::coordinator::pipeline::{
     PrepareContext, PreparedExpert, Prefetcher, TakeOutcome, Templates,
 };
 use crate::coordinator::registry::{ExpertMethod, Registry};
-use crate::coordinator::store::{ExpertStore, StoreConfig};
+use crate::coordinator::store::{
+    ExpertStore, MigrationReport, RebalanceConfig, Rebalancer, StoreConfig,
+};
 use crate::coordinator::transport::{FaultPlan, FaultSpec, LinkSpec, SimLink};
 use crate::eval::ANSWER_BASE;
 use crate::runtime::{AdapterKind, ModelBundle, Runtime};
@@ -95,6 +97,22 @@ pub struct CoordinatorConfig {
     /// backpressure and deadline-aware shedding. The default admits
     /// everything (the pre-admission behavior).
     pub admission: AdmissionConfig,
+    /// Popularity-aware adaptive replication: when the sharded store is
+    /// on, the engine feeds per-expert fetch counts into a
+    /// [`Rebalancer`] and runs one bounded-churn round every
+    /// [`CoordinatorConfig::rebalance_every`] batches — hot experts
+    /// widen their replica sets, cold ones narrow back toward the base
+    /// replication. Rounds are keyed to the batch counter, so the
+    /// rebalance schedule is deterministic in the workload, not in wall
+    /// time. Served bytes are bit-identical with this on or off; only
+    /// placement (and therefore simulated fetch latency) changes.
+    pub rebalance: bool,
+    /// Batches between adaptive-replication rounds (ignored unless
+    /// [`CoordinatorConfig::rebalance`] is set).
+    pub rebalance_every: u64,
+    /// Tuning of the adaptive-replication controller (EWMA decay,
+    /// per-round migration byte budget, replica cap, churn slack).
+    pub rebalance_cfg: RebalanceConfig,
     /// Optional local `.cpeft` archive
     /// ([`crate::coordinator::archive`]): when set, the engine opens it
     /// as a third cache level between the host tier and the remote
@@ -126,6 +144,9 @@ impl CoordinatorConfig {
             fault_seed: 0,
             store_faults: FaultSpec::default(),
             admission: AdmissionConfig::default(),
+            rebalance: false,
+            rebalance_every: 8,
+            rebalance_cfg: RebalanceConfig::default(),
             archive: None,
         }
     }
@@ -183,17 +204,38 @@ pub struct EngineReport {
     pub archive_hits: u64,
     /// Encoded bytes those archive hits viewed in place.
     pub archive_bytes_viewed: u64,
+    /// Adaptive-replication rounds that changed placement.
+    pub rebalances: u64,
+    /// Replicas widened onto extra nodes by those rounds.
+    pub replicas_added: u64,
+    /// Replicas narrowed back off nodes by those rounds.
+    pub replicas_dropped: u64,
+    /// Bytes migrated by rebalance rounds plus node add/drain ops.
+    pub migrated_bytes: u64,
+    /// Expert updates applied as ternary deltas instead of full pushes.
+    pub delta_applies: u64,
+    /// Wire bytes those delta applies saved vs full re-pushes.
+    pub delta_bytes_saved: u64,
     /// Heap copies of encoded payload bytes made by the fetch path
     /// (file/remote materializations + fallback reassembly concats).
     /// Archive-resident serving keeps this at zero.
     pub payload_copies: u64,
 }
 
-/// Public handle: submit requests, read metrics, shut down.
+/// Public handle: submit requests, read metrics, administer the store
+/// (rebalance/drain/add run live against the serving engine), shut
+/// down.
 pub struct Coordinator {
     batcher: Arc<Batcher<ClientRequest>>,
     metrics: Arc<Metrics>,
     admission: AdmissionConfig,
+    /// Shared with the engine thread: admission resolves each request's
+    /// version pin here ([`Registry::pin`]) before it enters a queue.
+    registry: Arc<Registry>,
+    /// Shared with the engine thread when `store_nodes > 0`: node
+    /// add/drain are live admin operations on this handle, concurrent
+    /// with the engine's fetches (placement-epoch swap inside).
+    store: Option<Arc<ExpertStore>>,
     /// Sequence length every request's token vector must match
     /// (fixed by the loaded model bundle).
     seq_len: usize,
@@ -210,19 +252,49 @@ impl Coordinator {
         let batcher = Arc::new(Batcher::new(cfg.policy));
         let metrics = Arc::new(Metrics::new());
         let admission = cfg.admission;
+        let registry = Arc::new(registry);
         let net = SimLink::new("net", cfg.net).with_time_scale(cfg.time_scale);
         let pcie = SimLink::new("pcie", cfg.pcie).with_time_scale(cfg.time_scale);
+        // Decode pool: parallel .cpeft frame decode + materialization on
+        // GPU-tier misses. Shared between the engine thread (blocking
+        // fallback) and the prefetch threads; results are bit-identical
+        // at any worker count.
+        let pool = Arc::new(crate::util::pool::ThreadPool::new(cfg.decode_workers.max(1)));
+        // Sharded store: striped multi-replica fetch over per-node links
+        // (stripes run on the shared decode pool), replacing the flat
+        // net link. Bytes — and therefore predictions — are identical
+        // either way; only latency, fault tolerance, and the failover
+        // counters change. Built here (not on the engine thread) so the
+        // public handle can run live node add/drain against it.
+        let store = if cfg.store_nodes > 0 {
+            let mut scfg = StoreConfig::new(cfg.store_nodes, cfg.replication);
+            scfg.link = cfg.net;
+            scfg.time_scale = cfg.time_scale;
+            scfg.faults = FaultPlan::new(cfg.fault_seed, cfg.store_faults);
+            Some(Arc::new(ExpertStore::new(
+                scfg,
+                Some(Arc::clone(&pool)),
+                Arc::clone(&metrics),
+            )))
+        } else {
+            None
+        };
 
         let (ready_tx, ready_rx) = mpsc::channel::<Result<usize>>();
         let engine = {
             let batcher = Arc::clone(&batcher);
             let metrics = Arc::clone(&metrics);
+            let registry = Arc::clone(&registry);
+            let store = store.clone();
             let net = net.clone();
             let pcie = pcie.clone();
             std::thread::Builder::new()
                 .name("compeft-engine".into())
                 .spawn(move || {
-                    engine_main(cfg, registry, batcher, metrics, net, pcie, ready_tx)
+                    engine_main(
+                        cfg, registry, batcher, metrics, pool, store, net, pcie,
+                        ready_tx,
+                    )
                 })?
         };
         let seq_len = match ready_rx.recv() {
@@ -241,11 +313,53 @@ impl Coordinator {
             batcher,
             metrics,
             admission,
+            registry,
+            store,
             seq_len,
             net,
             pcie,
             engine: Some(engine),
         })
+    }
+
+    /// The shared expert catalog (version pins, activation state).
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.registry
+    }
+
+    /// Flip admission of `id` to its next staged version
+    /// ([`Registry::activate_next`]). Batches admitted before the flip
+    /// keep the version they were pinned to; batches admitted after it
+    /// resolve to the new one — no batch ever mixes versions.
+    pub fn activate_version(&self, id: &str) -> Option<u32> {
+        self.registry.activate_next(id)
+    }
+
+    /// Live-drain a store node: its replicas migrate onto the surviving
+    /// nodes in the background, in-flight fetches finish against the
+    /// old placement, and a single placement-epoch swap cuts new
+    /// fetches over. Errors without a sharded store or for an unknown /
+    /// last-remaining node.
+    pub fn drain_store_node(&self, node: usize) -> Result<MigrationReport> {
+        match &self.store {
+            Some(s) => s.drain_node(node),
+            None => Err(anyhow::anyhow!("no sharded store to drain from")),
+        }
+    }
+
+    /// Live-add a store node (it starts cold and takes over the
+    /// assignments the widened placement hashes onto it). Errors
+    /// without a sharded store.
+    pub fn add_store_node(&self) -> Result<MigrationReport> {
+        match &self.store {
+            Some(s) => Ok(s.add_node()),
+            None => Err(anyhow::anyhow!("no sharded store to add a node to")),
+        }
+    }
+
+    /// The sharded store, when the engine runs with one.
+    pub fn store(&self) -> Option<&Arc<ExpertStore>> {
+        self.store.as_ref()
     }
 
     /// Sequence length the loaded model expects per request.
@@ -299,8 +413,13 @@ impl Coordinator {
             self.metrics.record_rejected(reason, 1);
             return rx;
         }
+        // Version pin at admission: resolve the expert's current version
+        // *now*, so a concurrent [`Coordinator::activate_version`] can
+        // never retarget a request that has already been admitted — the
+        // whole batch it joins serves the version it was pinned to.
+        let pinned = self.registry.pin(expert);
         self.batcher.push_at(
-            expert,
+            &pinned,
             tenant,
             ClientRequest { tokens, n_classes, resp: tx },
             Instant::now(),
@@ -350,9 +469,11 @@ struct Resident {
 #[allow(clippy::too_many_arguments)]
 fn engine_main(
     cfg: CoordinatorConfig,
-    registry: Registry,
+    registry: Arc<Registry>,
     batcher: Arc<Batcher<ClientRequest>>,
     metrics: Arc<Metrics>,
+    pool: Arc<crate::util::pool::ThreadPool>,
+    store: Option<Arc<ExpertStore>>,
     net: SimLink,
     pcie: SimLink,
     ready_tx: mpsc::Sender<Result<usize>>,
@@ -377,29 +498,6 @@ fn engine_main(
         }
     };
 
-    // Decode pool: parallel .cpeft frame decode + materialization on
-    // GPU-tier misses. Shared between the engine thread (blocking
-    // fallback) and the prefetch threads; results are bit-identical at
-    // any worker count.
-    let pool = Arc::new(crate::util::pool::ThreadPool::new(cfg.decode_workers.max(1)));
-    // Sharded store: striped multi-replica fetch over per-node links
-    // (stripes run on the shared decode pool), replacing the flat net
-    // link. Bytes — and therefore predictions — are identical either
-    // way; only latency, fault tolerance, and the failover counters
-    // change.
-    let store = if cfg.store_nodes > 0 {
-        let mut scfg = StoreConfig::new(cfg.store_nodes, cfg.replication);
-        scfg.link = cfg.net;
-        scfg.time_scale = cfg.time_scale;
-        scfg.faults = FaultPlan::new(cfg.fault_seed, cfg.store_faults);
-        Some(Arc::new(ExpertStore::new(
-            scfg,
-            Some(Arc::clone(&pool)),
-            Arc::clone(&metrics),
-        )))
-    } else {
-        None
-    };
     let mut loader = ExpertLoader::new(net.clone(), pcie.clone())
         .with_pool(pool)
         .with_meter(metrics.copy_meter());
@@ -424,7 +522,6 @@ fn engine_main(
             }
         }
     });
-    let registry = Arc::new(registry);
     // Host tier of encoded bytes, shared with the prefetch threads
     // (entries pinned while a background decode is in flight).
     let cpu = Arc::new(OrderedMutex::new(
@@ -462,6 +559,16 @@ fn engine_main(
     let mut gpu: LruTier<Resident> = LruTier::new("gpu", cfg.gpu_capacity_bytes);
     let mut resident_hint: Option<String> = None;
     let seq = bundle.meta.seq_len;
+    // Adaptive replication: one rebalancer for the engine's lifetime so
+    // the popularity EWMA carries across rounds. Cadence is keyed to the
+    // batch counter, not wall time, so a given trace always rebalances
+    // at the same points regardless of host speed.
+    let mut rebalancer = if cfg.rebalance && store.is_some() {
+        Some(Rebalancer::new(cfg.rebalance_cfg))
+    } else {
+        None
+    };
+    let mut batches_seen: u64 = 0;
 
     // --- request loop ---
     while let Some((expert_id, batch)) = batcher.next_batch(resident_hint.as_deref()) {
@@ -557,6 +664,12 @@ fn engine_main(
 
         // Execute in SERVE_BATCH chunks.
         metrics.record_batch(batch.len(), swapped);
+        batches_seen += 1;
+        if let (Some(rb), Some(store)) = (rebalancer.as_mut(), store.as_ref()) {
+            if batches_seen % cfg.rebalance_every.max(1) == 0 {
+                store.rebalance(rb);
+            }
+        }
         let t_exec = Instant::now();
         let mut chunk_tokens = vec![0i32; SERVE_BATCH * seq];
         let mut responses: Vec<(usize, &Pending<ClientRequest>)> = Vec::new();
@@ -646,6 +759,12 @@ fn engine_main(
         corrupt_payloads: snap.corrupt_payloads,
         archive_hits: snap.archive_hits,
         archive_bytes_viewed: snap.archive_bytes_viewed,
+        rebalances: snap.rebalances,
+        replicas_added: snap.replicas_added,
+        replicas_dropped: snap.replicas_dropped,
+        migrated_bytes: snap.migrated_bytes,
+        delta_applies: snap.delta_applies,
+        delta_bytes_saved: snap.delta_bytes_saved,
         payload_copies: snap.payload_copies,
     })
 }

@@ -53,6 +53,32 @@
 //! `net_bytes` and Table-5-style timing stay comparable whether the
 //! store is on or off: a 1-node, 1-replica store fetch costs exactly
 //! `latency + encoded_bytes/bandwidth`, the flat link's cost.
+//!
+//! ## Adaptive replication & placement epochs
+//!
+//! The store additionally tracks per-expert fetch popularity (the
+//! `stats` lock) and exposes live topology operations. All placement
+//! state lives in an immutable [`PlacementView`] behind the `epoch`
+//! lock:
+//!
+//! ```text
+//!   fetch ──► clone Arc<PlacementView> ──► stripe over its replicas
+//!                                          (old view until done)
+//!   rebalance/drain/add ──► migrate bytes ──► publish epoch N+1
+//!                                             (single Arc swap)
+//! ```
+//!
+//! A fetch clones the current view's `Arc` once at entry, so an
+//! in-flight fetch keeps its assignment even while a rebalance, drain,
+//! or node add migrates data and publishes the next epoch — cutover is
+//! one atomic swap, never a partial view. The [`Rebalancer`] is a pure
+//! state machine (EWMA popularity → per-expert replica overrides)
+//! whose rounds depend only on the fed counts, so the same trace
+//! yields the same rebalance schedule at any worker count.
+//! [`Placement::nodes_for_k`] walks the same ring for any target k,
+//! and the walk's prefix property (the k-replica set is a prefix of
+//! the (k+1)-replica set) makes widening append one node and
+//! narrowing drop the tail — bounded churn by construction.
 
 use crate::compeft::payload::Payload;
 use crate::coordinator::metrics::Metrics;
@@ -60,7 +86,9 @@ use crate::coordinator::registry::ExpertRecord;
 use crate::coordinator::transport::{Fault, FaultPlan, LinkSpec, SimLink};
 use crate::util::pool::{chunk_ranges, ThreadPool};
 use crate::util::rng::{fnv1a_64, splitmix64};
-use anyhow::{bail, Context, Result};
+use crate::util::sync::{rank, OrderedMutex};
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -128,7 +156,17 @@ impl Placement {
     /// ring clockwise from the id's hash point collecting distinct
     /// nodes — the textbook consistent-hashing successor walk.
     pub fn nodes_for(&self, id: &str) -> Vec<NodeId> {
-        let want = self.replication.min(self.nodes.len());
+        self.nodes_for_k(id, self.replication)
+    }
+
+    /// [`Placement::nodes_for`] generalized to an explicit target
+    /// replica count `k` (clamped to the node count). The walk starts
+    /// at the same hash point for every k, so `nodes_for_k(id, k)` is
+    /// always a **prefix** of `nodes_for_k(id, k + 1)`: widening an
+    /// expert appends exactly one node and narrowing drops exactly the
+    /// tail — no other replica moves.
+    pub fn nodes_for_k(&self, id: &str, k: usize) -> Vec<NodeId> {
+        let want = k.max(1).min(self.nodes.len());
         let h = hash_id(self.seed ^ 0xA5A5_A5A5_A5A5_A5A5, id);
         let start = self.ring.partition_point(|&(p, _)| p < h);
         let mut out = Vec::with_capacity(want);
@@ -152,6 +190,245 @@ impl Placement {
     /// The node universe this placement maps onto.
     pub fn nodes(&self) -> &[NodeId] {
         &self.nodes
+    }
+
+    /// The placement seed (ring layout; topology changes reuse it so
+    /// the surviving assignment overlap is maximal).
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+}
+
+/// One immutable placement epoch: the consistent-hash ring plus the
+/// rebalancer's per-expert replica overrides. Fetches clone the store's
+/// current `Arc<PlacementView>` once at entry and stripe against it, so
+/// a concurrently published epoch never gives any fetch a partial view.
+#[derive(Clone, Debug)]
+pub struct PlacementView {
+    /// Monotone epoch counter (0 = the view the store was built with).
+    pub epoch: u64,
+    placement: Placement,
+    /// Per-expert replica-count overrides (absent = base replication).
+    overrides: BTreeMap<String, usize>,
+}
+
+impl PlacementView {
+    /// Replica count in effect for `id`: the override if present,
+    /// clamped to `[base replication, node count]`.
+    pub fn replication_of(&self, id: &str) -> usize {
+        let base = self.placement.replication();
+        self.overrides
+            .get(id)
+            .copied()
+            .unwrap_or(base)
+            .max(base)
+            .min(self.placement.nodes().len().max(1))
+    }
+
+    /// Nodes serving `id` under this epoch (override-aware).
+    pub fn replicas_for(&self, id: &str) -> Vec<NodeId> {
+        self.placement.nodes_for_k(id, self.replication_of(id))
+    }
+
+    /// The underlying consistent-hash placement.
+    pub fn placement(&self) -> &Placement {
+        &self.placement
+    }
+
+    /// The per-expert replica overrides this epoch carries.
+    pub fn overrides(&self) -> &BTreeMap<String, usize> {
+        &self.overrides
+    }
+}
+
+/// Tuning of the popularity-driven [`Rebalancer`].
+#[derive(Clone, Copy, Debug)]
+pub struct RebalanceConfig {
+    /// EWMA weight on history per round (`0` = this round only).
+    pub decay: f64,
+    /// Max bytes of replica migration per round (widening a replica
+    /// copies the expert's encoded bytes to the new node).
+    pub byte_budget: u64,
+    /// Hard cap on replicas per expert (also clamped to node count).
+    pub max_replicas: usize,
+    /// Allowed net replica-mass drift per round: widening beyond the
+    /// replicas freed by narrowing is limited to this many slots.
+    pub slack: usize,
+    /// An expert earns its first extra replica at `hot_factor ×` the
+    /// mean EWMA popularity, its second at `2 × hot_factor ×`, …
+    pub hot_factor: f64,
+}
+
+impl Default for RebalanceConfig {
+    fn default() -> Self {
+        RebalanceConfig {
+            decay: 0.5,
+            byte_budget: 8 << 20,
+            max_replicas: 8,
+            slack: 2,
+            hot_factor: 2.0,
+        }
+    }
+}
+
+/// What one rebalance round decided (already applied to the
+/// rebalancer's override state; the store applies it to an epoch).
+#[derive(Clone, Debug, Default)]
+pub struct RebalanceDecision {
+    /// Widened replicas: `(expert, new replica count, bytes copied)`,
+    /// one entry per added replica, hottest experts first.
+    pub added: Vec<(String, usize, u64)>,
+    /// Narrowed replicas: `(expert, new replica count)`, one entry per
+    /// dropped replica, coldest experts first. Dropping moves no bytes.
+    pub dropped: Vec<(String, usize)>,
+    /// Total migration bytes of this round (`Σ added bytes`), always
+    /// ≤ the configured byte budget.
+    pub migrated_bytes: u64,
+}
+
+/// Popularity-driven replica planner: EWMA per-expert fetch rates are
+/// folded in at explicit [`Rebalancer::round`] boundaries, and each
+/// round widens hot experts / narrows cold ones under three bounds —
+/// the per-round migration byte budget, the replica-mass slack, and
+/// the base-replication floor. Pure state machine: decisions depend
+/// only on the constructor config and the sequence of fed counts, so
+/// a trace's rebalance schedule is identical at any worker count.
+#[derive(Clone, Debug)]
+pub struct Rebalancer {
+    cfg: RebalanceConfig,
+    /// Smoothed popularity per expert (updated once per round).
+    ewma: BTreeMap<String, f64>,
+    /// Current replica-count overrides (only entries above base).
+    overrides: BTreeMap<String, usize>,
+    rounds: u64,
+}
+
+impl Rebalancer {
+    pub fn new(cfg: RebalanceConfig) -> Rebalancer {
+        Rebalancer { cfg, ewma: BTreeMap::new(), overrides: BTreeMap::new(), rounds: 0 }
+    }
+
+    /// Replica overrides currently in force (experts at base have no
+    /// entry).
+    pub fn overrides(&self) -> &BTreeMap<String, usize> {
+        &self.overrides
+    }
+
+    /// Rounds executed so far.
+    pub fn rounds(&self) -> u64 {
+        self.rounds
+    }
+
+    /// Replica count currently planned for `id` under base `base`.
+    pub fn replicas_of(&self, id: &str, base: usize) -> usize {
+        self.overrides.get(id).copied().unwrap_or(base).max(base)
+    }
+
+    /// Run one round over a popularity snapshot: `counts` maps expert →
+    /// `(fetches this round, encoded bytes)`. `base` is the placement's
+    /// base replication, `live_nodes` the current node count.
+    pub fn round(
+        &mut self,
+        counts: &BTreeMap<String, (u64, u64)>,
+        base: usize,
+        live_nodes: usize,
+    ) -> RebalanceDecision {
+        self.rounds += 1;
+        let base = base.max(1);
+        let cap = self.cfg.max_replicas.max(base).min(live_nodes.max(1));
+
+        // EWMA update over the union of known and newly seen experts.
+        // BTreeMap iteration keeps every walk in id order, so the
+        // round is a pure function of (config, fed counts).
+        for id in counts.keys() {
+            self.ewma.entry(id.clone()).or_insert(0.0);
+        }
+        for (id, w) in self.ewma.iter_mut() {
+            let hits = counts.get(id).map(|&(h, _)| h).unwrap_or(0) as f64;
+            *w = self.cfg.decay * *w + (1.0 - self.cfg.decay) * hits;
+        }
+        if self.ewma.is_empty() {
+            return RebalanceDecision::default();
+        }
+        let mean =
+            self.ewma.values().sum::<f64>() / self.ewma.len() as f64;
+
+        // Targets, monotone in EWMA popularity: the j-th extra replica
+        // needs `j × hot_factor × mean` smoothed popularity.
+        let step = (mean * self.cfg.hot_factor).max(f64::MIN_POSITIVE);
+        let target = |w: f64| -> usize {
+            (base + (w / step) as usize).min(cap)
+        };
+
+        // Expansion steps, hottest first (ties broken by id): one step
+        // per replica so a partially funded round still widens the
+        // hottest expert before the merely warm ones.
+        let mut by_heat: Vec<(&String, f64)> =
+            self.ewma.iter().map(|(id, &w)| (id, w)).collect();
+        by_heat.sort_by(|a, b| {
+            b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal).then(a.0.cmp(b.0))
+        });
+        let mut adds: Vec<(String, usize, u64)> = Vec::new();
+        let mut drops: Vec<(String, usize)> = Vec::new();
+        for &(id, w) in &by_heat {
+            let cur = self.replicas_of(id, base);
+            let want = target(w);
+            let bytes = counts.get(id).map(|&(_, b)| b).unwrap_or(0);
+            for k in cur + 1..=want {
+                adds.push((id.clone(), k, bytes));
+            }
+        }
+        // Contraction steps, coldest first.
+        for &(id, w) in by_heat.iter().rev() {
+            let cur = self.replicas_of(id, base);
+            let want = target(w);
+            for k in (want..cur).rev() {
+                drops.push((id.clone(), k));
+            }
+        }
+
+        // Byte budget caps widening (dropping is free). A cut step
+        // also cuts the same expert's later steps: replica sets are
+        // prefix chains, so count k + 1 cannot land before count k.
+        let mut spent = 0u64;
+        let mut cut: std::collections::BTreeSet<String> =
+            std::collections::BTreeSet::new();
+        adds.retain(|(id, _, bytes)| {
+            if !cut.contains(id) && spent + bytes <= self.cfg.byte_budget {
+                spent += bytes;
+                true
+            } else {
+                cut.insert(id.clone());
+                false
+            }
+        });
+        // Replica-mass conservation: net drift per round ≤ slack, so
+        // widening is funded by narrowing (plus the slack allowance)
+        // and narrowing never free-falls far past the widening it pays
+        // for.
+        let n_add = adds.len().min(drops.len() + self.cfg.slack);
+        adds.truncate(n_add);
+        drops.truncate(n_add + self.cfg.slack);
+
+        // Apply to the override state. Adds run hottest-first and
+        // drops coldest-first, so each expert's final count is the
+        // last surviving step in its direction.
+        for (id, k, _) in &adds {
+            self.set_override(id, *k, base);
+        }
+        for (id, k) in &drops {
+            self.set_override(id, *k, base);
+        }
+        let migrated_bytes = adds.iter().map(|&(_, _, b)| b).sum();
+        RebalanceDecision { added: adds, dropped: drops, migrated_bytes }
+    }
+
+    fn set_override(&mut self, id: &str, k: usize, base: usize) {
+        if k > base {
+            self.overrides.insert(id.to_string(), k);
+        } else {
+            self.overrides.remove(id);
+        }
     }
 }
 
@@ -201,13 +478,39 @@ pub struct FetchFaults {
     pub corrupt_payloads: u64,
 }
 
+/// Mutable topology behind the store's `epoch` lock: the current
+/// placement view plus one contended link per node ever added (links
+/// are indexed by [`NodeId`] and never removed — a drained node's link
+/// simply stops appearing in any replica set).
+struct Topology {
+    view: Arc<PlacementView>,
+    links: Vec<SimLink>,
+}
+
+/// Report of one topology migration (node drain or add).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MigrationReport {
+    /// The epoch the operation published.
+    pub epoch: u64,
+    /// Experts whose replica set changed.
+    pub moved_experts: u64,
+    /// Encoded bytes copied onto newly assigned nodes.
+    pub migrated_bytes: u64,
+}
+
 /// The simulated multi-node expert store.
 pub struct ExpertStore {
-    placement: Placement,
-    /// One contended link per node, all sharing the fault plan (each
-    /// keyed with its own node id).
-    links: Vec<SimLink>,
+    /// Current placement epoch + node links. Fetches clone the view
+    /// `Arc` and the links once at entry, so topology changes never
+    /// hand any in-flight fetch a partial assignment.
+    epoch: OrderedMutex<Topology>,
+    /// Per-expert fetch popularity: id → (fetches since the last
+    /// rebalance round, last-seen encoded bytes). Commutative counts,
+    /// so any fetch interleaving yields the same round snapshot.
+    stats: OrderedMutex<BTreeMap<String, (u64, u64)>>,
     spec: LinkSpec,
+    time_scale: f64,
+    faults: FaultPlan,
     stripe_bytes: u64,
     pool: Option<Arc<ThreadPool>>,
     metrics: Arc<Metrics>,
@@ -294,22 +597,51 @@ impl ExpertStore {
                     .with_faults(cfg.faults.clone(), n)
             })
             .collect();
-        ExpertStore {
+        let view = Arc::new(PlacementView {
+            epoch: 0,
             placement: Placement::new(nodes, cfg.replication, cfg.placement_seed),
-            links,
+            overrides: BTreeMap::new(),
+        });
+        ExpertStore {
+            epoch: OrderedMutex::new(rank::STORE_EPOCH, "store.epoch", Topology {
+                view,
+                links,
+            }),
+            stats: OrderedMutex::new(rank::STORE_STATS, "store.stats", BTreeMap::new()),
             spec: cfg.link,
+            time_scale: cfg.time_scale,
+            faults: cfg.faults,
             stripe_bytes: cfg.stripe_bytes,
             pool,
             metrics,
         }
     }
 
-    pub fn placement(&self) -> &Placement {
-        &self.placement
+    /// The current placement epoch (cheap `Arc` clone).
+    pub fn view(&self) -> Arc<PlacementView> {
+        self.epoch.lock().unwrap().view.clone()
     }
 
+    /// One consistent snapshot of (view, links) — what a fetch or a
+    /// migration works against while later epochs publish concurrently.
+    fn topology(&self) -> (Arc<PlacementView>, Vec<SimLink>) {
+        let g = self.epoch.lock().unwrap();
+        (g.view.clone(), g.links.clone())
+    }
+
+    /// Publish the next placement epoch: a single `Arc` swap, so no
+    /// fetch ever observes a partial topology.
+    fn publish(&self, placement: Placement, overrides: BTreeMap<String, usize>) -> u64 {
+        let mut g = self.epoch.lock().unwrap();
+        let epoch = g.view.epoch + 1;
+        g.view = Arc::new(PlacementView { epoch, placement, overrides });
+        epoch
+    }
+
+    /// Total node count ever provisioned (links are never removed;
+    /// drained nodes just leave the placement).
     pub fn nodes(&self) -> usize {
-        self.links.len()
+        self.epoch.lock().unwrap().links.len()
     }
 
     /// The metrics sink this store's fault and fusion counters land in
@@ -320,7 +652,33 @@ impl ExpertStore {
 
     /// Payload bytes moved across all node links.
     pub fn bytes_moved(&self) -> u64 {
-        self.links.iter().map(|l| l.bytes_moved()).sum()
+        let links = self.epoch.lock().unwrap().links.clone();
+        links.iter().map(|l| l.bytes_moved()).sum()
+    }
+
+    /// Count one served fetch of `id` into the popularity stats.
+    fn record_fetch(&self, id: &str, encoded_bytes: u64) {
+        let mut stats = self.stats.lock().unwrap();
+        let e = stats.entry(id.to_string()).or_insert((0, 0));
+        e.0 += 1;
+        e.1 = encoded_bytes;
+    }
+
+    /// Snapshot of the popularity stats: id → (fetches this round,
+    /// encoded bytes).
+    pub fn popularity(&self) -> BTreeMap<String, (u64, u64)> {
+        self.stats.lock().unwrap().clone()
+    }
+
+    /// Snapshot the popularity stats and reset the per-round fetch
+    /// counts (sizes are retained — migrations still need them).
+    fn take_popularity(&self) -> BTreeMap<String, (u64, u64)> {
+        let mut stats = self.stats.lock().unwrap();
+        let snap = stats.clone();
+        for e in stats.values_mut() {
+            e.0 = 0;
+        }
+        snap
     }
 
     /// Fetch an expert's encoded payload: striped across its replicas,
@@ -335,6 +693,7 @@ impl ExpertStore {
         self.metrics.copy_meter().record(1);
         let data = Payload::from_vec(bytes);
         let (out, sim, faults) = self.fetch_payload(&rec.id, &data, rec.encoded_bytes)?;
+        self.record_fetch(&rec.id, rec.encoded_bytes);
         self.metrics.record_store_faults(
             faults.stripe_retries,
             faults.failovers,
@@ -365,6 +724,7 @@ impl ExpertStore {
         let _ = events.send(FetchEvent::Source(data.clone()));
         let (out, sim, faults, arrivals) =
             self.fetch_payload_inner(&rec.id, &data, rec.encoded_bytes, Some(events))?;
+        self.record_fetch(&rec.id, rec.encoded_bytes);
         self.metrics.record_store_faults(
             faults.stripe_retries,
             faults.failovers,
@@ -400,7 +760,11 @@ impl ExpertStore {
         encoded_bytes: u64,
         events: Option<&std::sync::mpsc::Sender<FetchEvent>>,
     ) -> Result<(Payload, Duration, FetchFaults, Vec<StripeArrival>)> {
-        let replicas = self.placement.nodes_for(id);
+        // One epoch snapshot per fetch: the replica assignment and the
+        // link set stay coherent for the whole stripe plan even if a
+        // rebalance/drain/add publishes a later epoch mid-flight.
+        let (view, links) = self.topology();
+        let replicas = view.replicas_for(id);
         if data.is_empty() {
             bail!("expert {id:?} has an empty payload");
         }
@@ -442,7 +806,7 @@ impl ExpertStore {
             let mut node_time = Vec::with_capacity(job.replicas.len());
             let mut faults = FetchFaults::default();
             for (attempt, &node) in job.replicas.iter().enumerate() {
-                let out = self.links[node].transfer_keyed(
+                let out = links[node].transfer_keyed(
                     job.charge,
                     id,
                     job.stripe,
@@ -531,7 +895,7 @@ impl ExpertStore {
         // stripe, so the schedule's maximum is exactly `sim`.
         let mut parts: Vec<(usize, Payload)> = Vec::with_capacity(jobs.len());
         let mut arrivals: Vec<StripeArrival> = Vec::with_capacity(jobs.len());
-        let mut per_node = vec![Duration::ZERO; self.links.len()];
+        let mut per_node = vec![Duration::ZERO; links.len()];
         let mut faults = FetchFaults::default();
         for (job, done) in jobs.iter().zip(results) {
             let done = done?;
@@ -579,6 +943,166 @@ impl ExpertStore {
             Payload::from_vec(buf)
         };
         Ok((out, sim, faults, arrivals))
+    }
+
+    // -- adaptive replication & live topology --------------------------------
+    //
+    // Admin operations (rebalance / add_node / drain_node) are serialized
+    // by their caller (the engine thread, or a test); fetches may run
+    // concurrently with any of them and always see a complete epoch.
+
+    /// Run one popularity-driven rebalance round: drain the fetch
+    /// counters into `rb`, copy each widened expert onto its appended
+    /// replica node, and publish the next epoch carrying the updated
+    /// overrides. Pure in the fed fetch sequence — the same trace yields
+    /// the same decisions at any worker count.
+    pub fn rebalance(&self, rb: &mut Rebalancer) -> RebalanceDecision {
+        let (view, links) = self.topology();
+        let counts = self.take_popularity();
+        let base = view.placement().replication();
+        let live = view.placement().nodes().len();
+        let d = rb.round(&counts, base, live);
+        // Widening copies the expert's encoded bytes onto the k-set's
+        // new tail node (the appended replica, by the prefix property
+        // of `nodes_for_k`); narrowing moves no bytes.
+        let jobs: Vec<(NodeId, u64)> = d
+            .added
+            .iter()
+            .filter_map(|(id, k, bytes)| {
+                view.placement().nodes_for_k(id, *k).last().copied().map(|n| (n, *bytes))
+            })
+            .collect();
+        self.run_migration(&jobs, &links);
+        if !d.added.is_empty() || !d.dropped.is_empty() {
+            self.publish(view.placement().clone(), rb.overrides().clone());
+        }
+        self.metrics.record_rebalance(
+            d.added.len() as u64,
+            d.dropped.len() as u64,
+            d.migrated_bytes,
+        );
+        d
+    }
+
+    /// Add a store node live: provision its link, copy every expert the
+    /// new placement assigns to it, then cut over in one epoch swap.
+    /// Returns the published epoch and migration totals.
+    pub fn add_node(&self) -> MigrationReport {
+        // Provision the new node's link first; the current epoch never
+        // references it, so fetches racing this call are unaffected.
+        let (old_view, links) = {
+            let mut g = self.epoch.lock().unwrap();
+            let new_node = g.links.len();
+            g.links.push(
+                SimLink::new("store", self.spec)
+                    .with_time_scale(self.time_scale)
+                    .with_faults(self.faults.clone(), new_node),
+            );
+            (g.view.clone(), g.links.clone())
+        };
+        let mut nodes = old_view.placement().nodes().to_vec();
+        nodes.push(links.len() - 1);
+        let placement = Placement::with_nodes(
+            &nodes,
+            old_view.placement().replication(),
+            old_view.placement().seed(),
+        );
+        let (moved, migrated) =
+            self.migrate_assignments(&old_view, &placement, old_view.overrides(), &links);
+        self.metrics.record_migrated(migrated);
+        let epoch = self.publish(placement, old_view.overrides().clone());
+        MigrationReport { epoch, moved_experts: moved, migrated_bytes: migrated }
+    }
+
+    /// Drain a node live: rebuild the placement without it, copy every
+    /// reassigned expert onto its gaining replicas, then cut over in one
+    /// epoch swap. The node's link stays provisioned (NodeIds are stable
+    /// forever) — it simply stops appearing in any replica set.
+    pub fn drain_node(&self, node: NodeId) -> Result<MigrationReport> {
+        let (old_view, links) = self.topology();
+        let nodes: Vec<NodeId> = old_view
+            .placement()
+            .nodes()
+            .iter()
+            .copied()
+            .filter(|&n| n != node)
+            .collect();
+        ensure!(
+            nodes.len() < old_view.placement().nodes().len(),
+            "node {node} is not in the placement"
+        );
+        ensure!(!nodes.is_empty(), "cannot drain the last store node");
+        let placement = Placement::with_nodes(
+            &nodes,
+            old_view.placement().replication(),
+            old_view.placement().seed(),
+        );
+        let (moved, migrated) =
+            self.migrate_assignments(&old_view, &placement, old_view.overrides(), &links);
+        self.metrics.record_migrated(migrated);
+        let epoch = self.publish(placement, old_view.overrides().clone());
+        Ok(MigrationReport { epoch, moved_experts: moved, migrated_bytes: migrated })
+    }
+
+    /// Copy every tracked expert onto the replicas it gains under the
+    /// next placement (relative to `old`). Returns
+    /// `(moved experts, migrated bytes)`. Sizes come from the stats map,
+    /// which keeps last-seen encoded bytes across rounds — an expert the
+    /// store never served has nothing resident to move.
+    fn migrate_assignments(
+        &self,
+        old: &PlacementView,
+        next_placement: &Placement,
+        overrides: &BTreeMap<String, usize>,
+        links: &[SimLink],
+    ) -> (u64, u64) {
+        let stats = self.popularity();
+        let next = PlacementView {
+            epoch: 0,
+            placement: next_placement.clone(),
+            overrides: overrides.clone(),
+        };
+        let mut jobs: Vec<(NodeId, u64)> = Vec::new();
+        let mut moved = 0u64;
+        for (id, &(_, bytes)) in &stats {
+            let have: std::collections::BTreeSet<NodeId> =
+                old.replicas_for(id).into_iter().collect();
+            let gained: Vec<NodeId> = next
+                .replicas_for(id)
+                .into_iter()
+                .filter(|n| !have.contains(n))
+                .collect();
+            if !gained.is_empty() {
+                moved += 1;
+            }
+            for n in gained {
+                jobs.push((n, bytes));
+            }
+        }
+        let migrated = self.run_migration(&jobs, links);
+        (moved, migrated)
+    }
+
+    /// Execute migration copies as unkeyed (never faulted) transfers on
+    /// the gaining nodes' links — striped across the shared pool when
+    /// one is attached, serially otherwise. Background traffic only: it
+    /// contends for link wall-time but cannot perturb any fetch's
+    /// reported duration (those come from the analytic model).
+    fn run_migration(&self, jobs: &[(NodeId, u64)], links: &[SimLink]) -> u64 {
+        match &self.pool {
+            Some(pool) => {
+                let refs: Vec<&(NodeId, u64)> = jobs.iter().collect();
+                let _ = pool.scoped_map(refs, |job| {
+                    links[job.0].transfer(job.1);
+                });
+            }
+            None => {
+                for &(node, bytes) in jobs {
+                    links[node].transfer(bytes);
+                }
+            }
+        }
+        jobs.iter().map(|&(_, b)| b).sum()
     }
 }
 
@@ -991,6 +1515,226 @@ mod tests {
             snap.payload_copies, 1,
             "a store fetch is one file materialization, zero reassembly copies"
         );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    // -- adaptive replication ----------------------------------------------
+
+    /// `nodes_for_k(id, k)` is a prefix of `nodes_for_k(id, k + 1)`:
+    /// widening an expert appends exactly one node and narrowing drops
+    /// exactly the tail — the bounded-churn foundation of rebalancing.
+    #[test]
+    fn nodes_for_k_is_a_prefix_chain() {
+        for (n, seed) in [(3usize, 0u64), (6, 7), (9, 42)] {
+            let p = Placement::new(n, 2, seed);
+            for i in 0..100 {
+                let id = format!("expert/{i}");
+                for k in 1..n {
+                    let a = p.nodes_for_k(&id, k);
+                    let b = p.nodes_for_k(&id, k + 1);
+                    assert_eq!(a.len(), k);
+                    assert_eq!(b.len(), k + 1);
+                    assert_eq!(&b[..k], &a[..], "prefix property (n={n} k={k})");
+                }
+                // Clamped: k beyond the node count returns every node.
+                assert_eq!(p.nodes_for_k(&id, n + 5).len(), n);
+            }
+        }
+    }
+
+    /// Rebalancer invariants over random popularity streams: every
+    /// round respects the byte budget, net replica-mass drift per round
+    /// stays within the slack, and no override ever leaves (base, cap].
+    #[test]
+    fn rebalancer_rounds_respect_budget_mass_and_bounds() {
+        prop::check(
+            "rebalancer_rounds",
+            24,
+            |rng: &mut Pcg| {
+                let n_experts = 2 + rng.range(0, 7);
+                let rounds = 1 + rng.range(0, 5);
+                let mut feeds = Vec::new();
+                for _ in 0..rounds {
+                    let mut counts = BTreeMap::new();
+                    for e in 0..n_experts {
+                        let hits = rng.range(0, 50) as u64;
+                        let bytes = 1 + rng.range(0, 32 << 10) as u64;
+                        counts.insert(format!("e{e}"), (hits, bytes));
+                    }
+                    feeds.push(counts);
+                }
+                feeds
+            },
+            |feeds| {
+                let cfg = RebalanceConfig {
+                    decay: 0.5,
+                    byte_budget: 64 << 10,
+                    max_replicas: 4,
+                    slack: 2,
+                    hot_factor: 1.5,
+                };
+                let (base, live) = (1usize, 6usize);
+                let cap = cfg.max_replicas.min(live);
+                let mut rb = Rebalancer::new(cfg);
+                let mut mass_before = 0i64;
+                for (i, counts) in feeds.iter().enumerate() {
+                    let d = rb.round(counts, base, live);
+                    if d.migrated_bytes > cfg.byte_budget {
+                        return Err(format!(
+                            "round {i}: migrated {} > budget {}",
+                            d.migrated_bytes, cfg.byte_budget
+                        ));
+                    }
+                    let mass: i64 =
+                        rb.overrides().values().map(|&k| (k - base) as i64).sum();
+                    if (mass - mass_before).abs() > cfg.slack as i64 {
+                        return Err(format!(
+                            "round {i}: mass drift {} exceeds slack {}",
+                            mass - mass_before,
+                            cfg.slack
+                        ));
+                    }
+                    mass_before = mass;
+                    for (id, &k) in rb.overrides() {
+                        if k <= base || k > cap {
+                            return Err(format!(
+                                "round {i}: {id} at {k} outside ({base}, {cap}]"
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// One fresh round with an unconstrained budget: planned replica
+    /// counts are monotone in measured popularity.
+    #[test]
+    fn rebalancer_targets_are_monotone_in_popularity() {
+        prop::check(
+            "rebalancer_monotone",
+            24,
+            |rng: &mut Pcg| {
+                let n = 3 + rng.range(0, 6);
+                let mut counts = BTreeMap::new();
+                for e in 0..n {
+                    counts.insert(format!("e{e}"), (rng.range(0, 200) as u64, 4096u64));
+                }
+                counts
+            },
+            |counts| {
+                let cfg = RebalanceConfig {
+                    byte_budget: u64::MAX / 2,
+                    slack: 1 << 20,
+                    ..Default::default()
+                };
+                let mut rb = Rebalancer::new(cfg);
+                rb.round(counts, 1, 8);
+                let mut by_hits: Vec<(&String, u64)> =
+                    counts.iter().map(|(id, &(h, _))| (id, h)).collect();
+                by_hits.sort_by_key(|&(_, h)| h);
+                for w in by_hits.windows(2) {
+                    let (lo, hi) = (w[0], w[1]);
+                    let (rl, rh) = (rb.replicas_of(lo.0, 1), rb.replicas_of(hi.0, 1));
+                    if rl > rh {
+                        return Err(format!(
+                            "{}({} hits) planned {rl} replicas > {}({} hits) planned {rh}",
+                            lo.0, lo.1, hi.0, hi.1
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Live churn end to end: popularity-driven widening, a node drain,
+    /// and a node add all keep fetches byte-identical, move bytes, and
+    /// bump epochs — and the whole schedule is identical at every pool
+    /// size (determinism of the adaptive layer).
+    #[test]
+    fn rebalance_drain_and_add_keep_fetches_byte_identical() {
+        let dir = std::env::temp_dir()
+            .join(format!("compeft_store_churn_{}", std::process::id()));
+        let (hot, hot_bytes) = temp_record(&dir, 31);
+        let (cold, cold_bytes) = temp_record(&dir, 37);
+        let hot_want = Payload::from_vec(hot_bytes);
+        let cold_want = Payload::from_vec(cold_bytes);
+        let mut reference: Option<(u64, Vec<(String, usize)>)> = None;
+        for &workers in &prop::pool_sizes() {
+            let mut cfg = StoreConfig::new(4, 1);
+            cfg.time_scale = 0.0;
+            let s = store(cfg, workers);
+            assert_eq!(s.view().epoch, 0);
+            // Skewed traffic: the hot expert dominates the round.
+            for _ in 0..40 {
+                let (got, _) = s.fetch(&hot).unwrap();
+                assert_eq!(got, hot_want);
+            }
+            let (got, _) = s.fetch(&cold).unwrap();
+            assert_eq!(got, cold_want);
+
+            // Popularity-driven widening: hot earns replicas, cold
+            // stays at base, the copy lands on the appended node.
+            let mut rb = Rebalancer::new(RebalanceConfig {
+                hot_factor: 0.5,
+                ..Default::default()
+            });
+            let d = s.rebalance(&mut rb);
+            assert!(
+                rb.replicas_of(&hot.id, 1) > 1,
+                "hot expert must widen (w={workers})"
+            );
+            assert_eq!(rb.replicas_of(&cold.id, 1), 1, "cold stays at base");
+            assert!(d.migrated_bytes > 0, "widening copies bytes");
+            let view = s.view();
+            assert!(view.epoch >= 1, "rebalance publishes an epoch");
+            assert!(view.replicas_for(&hot.id).len() > 1);
+            let (got, _) = s.fetch(&hot).unwrap();
+            assert_eq!(got, hot_want, "post-rebalance fetch identical (w={workers})");
+
+            // Drain the hot expert's primary: its assignments leave the
+            // node, replacement bytes migrate, fetches stay identical.
+            let victim = view.replicas_for(&hot.id)[0];
+            let rep = s.drain_node(victim).unwrap();
+            assert!(rep.epoch > view.epoch);
+            assert!(rep.moved_experts > 0 && rep.migrated_bytes > 0);
+            let after = s.view();
+            for id in [&hot.id, &cold.id] {
+                assert!(
+                    !after.replicas_for(id).contains(&victim),
+                    "drained node must hold nothing (w={workers})"
+                );
+            }
+            let (got, _) = s.fetch(&hot).unwrap();
+            assert_eq!(got, hot_want, "post-drain fetch identical (w={workers})");
+            // Draining a node outside the placement errors loudly.
+            assert!(s.drain_node(victim).is_err());
+
+            // Add a node live: fetches still byte-identical.
+            let rep = s.add_node();
+            assert_eq!(s.nodes(), 5);
+            assert!(rep.epoch > after.epoch);
+            let (got, _) = s.fetch(&cold).unwrap();
+            assert_eq!(got, cold_want, "post-add fetch identical (w={workers})");
+
+            // The schedule is a pure function of the fetch sequence:
+            // identical overrides and epoch at every pool size.
+            let sig = (
+                s.view().epoch,
+                rb.overrides()
+                    .iter()
+                    .map(|(k, &v)| (k.clone(), v))
+                    .collect::<Vec<_>>(),
+            );
+            match &reference {
+                None => reference = Some(sig),
+                Some(r) => {
+                    assert_eq!(&sig, r, "churn schedule must not depend on pool size")
+                }
+            }
+        }
         std::fs::remove_dir_all(&dir).ok();
     }
 }

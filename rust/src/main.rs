@@ -11,6 +11,10 @@
 //!   archive    `archive build` packs a scale's compressed experts into
 //!              one `.cpar` archive; `serve --archive <path>` then
 //!              serves them as zero-copy views of the resident image
+//!   delta      `delta build` diffs two task-vector checkpoints into a
+//!              ternary `.cpeftd` delta; `delta push` stages the next
+//!              version of a served expert (full `.cpeft` + `.cpeftd`
+//!              side file) for the coordinator's delta-apply fast path
 //!   lint       run `compeft-lint` (the in-repo determinism/panic-safety/
 //!              lock-discipline analyzer) over rust/src; non-zero exit on
 //!              any unsuppressed violation
@@ -41,10 +45,12 @@ fn main() {
         Some("serve") => run(cmd_serve(&argv[1..])),
         Some("loadgen") => run(cmd_loadgen(&argv[1..])),
         Some("archive") => run(cmd_archive(&argv[1..])),
+        Some("delta") => run(cmd_delta(&argv[1..])),
         Some("lint") => run(cmd_lint(&argv[1..])),
         _ => {
             eprintln!(
-                "usage: compeft <compress|inspect|eval|serve|loadgen|archive|lint> [flags]\n\
+                "usage: compeft <compress|inspect|eval|serve|loadgen|archive|delta|lint> \
+                 [flags]\n\
                  see README.md for the experiment-to-bench map"
             );
             2
@@ -253,6 +259,10 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
     .flag("est-batch-us", "20000", "admission queue-delay estimate per batch, us")
     .flag("gpu-slots", "4", "simulated accelerator residency, in experts")
     .flag("prefetch-depth", "2", "staged-prefetch lookahead (0 = off)")
+    .flag("store-nodes", "0", "sharded-store model: nodes striping fetches (0 = flat)")
+    .flag("replication", "1", "base replicas per expert in the store model")
+    .boolean("rebalance", "popularity-aware adaptive replication in the store model")
+    .flag("rebalance-every", "8", "batches between adaptive-replication rounds")
     .flag("concurrency", "0", "closed-loop outstanding requests (0 = open loop)")
     .flag("json", "", "write {bench,row,value,unit,config} records to this path");
     let a = spec.parse(argv)?;
@@ -274,6 +284,10 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
         model: ServiceModel {
             gpu_slots: a.get_usize("gpu-slots")?,
             prefetch_depth: a.get_usize("prefetch-depth")?,
+            store_nodes: a.get_usize("store-nodes")?,
+            replication: a.get_usize("replication")?,
+            rebalance: a.get_bool("rebalance"),
+            rebalance_every: a.get_u64("rebalance-every")?,
             ..Default::default()
         },
         mode: if concurrency > 0 { Mode::Closed { concurrency } } else { Mode::Open },
@@ -335,6 +349,15 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
             r.prefetch_hits,
             r.max_queued,
         );
+        if r.rebalances > 0 {
+            println!(
+                "rebalance: {} rounds  +{} / -{} replicas  {} migrated",
+                r.rebalances,
+                r.replicas_added,
+                r.replicas_dropped,
+                compeft::compeft::entropy::human_bytes(r.migrated_bytes)
+            );
+        }
         if let Some(s) = &mut sink {
             s.record(&format!("{name}/goodput_rps"), r.goodput_rps(), "rps");
             s.record(&format!("{name}/shed_rate"), r.shed_rate(), "frac");
@@ -343,6 +366,8 @@ fn cmd_loadgen(argv: &[String]) -> Result<()> {
             s.record(&format!("{name}/p999_us"), r.p999_us(), "us");
             s.record(&format!("{name}/fetches"), r.fetches as f64, "count");
             s.record(&format!("{name}/max_queued"), r.max_queued as f64, "count");
+            s.record(&format!("{name}/rebalances"), r.rebalances as f64, "count");
+            s.record(&format!("{name}/replicas_added"), r.replicas_added as f64, "count");
         }
     }
     if let Some(s) = &sink {
@@ -429,6 +454,149 @@ fn cmd_archive_build(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+fn cmd_delta(argv: &[String]) -> Result<()> {
+    match argv.first().map(|s| s.as_str()) {
+        Some("build") => cmd_delta_build(&argv[1..]),
+        Some("push") => cmd_delta_push(&argv[1..]),
+        _ => bail!("usage: compeft delta <build|push> [flags] (--help lists them)"),
+    }
+}
+
+/// Shared by `delta build` and `delta push`: compress two task-vector
+/// checkpoints under one config and diff them in the ternary domain.
+fn build_delta_pair(
+    old: &std::path::Path,
+    new: &std::path::Path,
+    cfg: &CompressConfig,
+) -> Result<(
+    compeft::compeft::compress::CompressedParamSet,
+    compeft::compeft::compress::CompressedParamSet,
+    compeft::compeft::engine::ExpertDelta,
+)> {
+    let old_tv = ParamSet::load_npz(old)?;
+    let new_tv = ParamSet::load_npz(new)?;
+    let old_c = compress_params(&old_tv, cfg);
+    let new_c = compress_params(&new_tv, cfg);
+    let delta = compeft::compeft::engine::compress_delta(&old_c, &new_c)?;
+    Ok((old_c, new_c, delta))
+}
+
+/// Diff two task-vector `.npz` checkpoints into a ternary `.cpeftd`
+/// delta: ship only the support entries that changed sign, dropped out,
+/// or appeared, instead of re-sending the whole compressed expert.
+fn cmd_delta_build(argv: &[String]) -> Result<()> {
+    let spec = ArgSpec::new(
+        "delta build",
+        "diff two task-vector .npz checkpoints into a ternary .cpeftd delta",
+    )
+    .required("old", "task vector .npz of the currently served version")
+    .required("new", "task vector .npz of the next version")
+    .flag("output", "", "delta path (default: <new> with .cpeftd)")
+    .flag("k", "0.2", "density (fraction of entries kept)")
+    .flag("alpha", "1.0", "scaling value α")
+    .boolean("per-tensor", "compress each tensor independently");
+    let a = spec.parse(argv)?;
+    let old = PathBuf::from(a.get("old"));
+    let new = PathBuf::from(a.get("new"));
+    let cfg = CompressConfig {
+        density: a.get_f64("k")?,
+        alpha: a.get_f64("alpha")?,
+        granularity: if a.get_bool("per-tensor") {
+            Granularity::PerTensor
+        } else {
+            Granularity::Global
+        },
+    };
+    let (_, new_c, delta) = build_delta_pair(&old, &new, &cfg)?;
+    let out = if a.get("output").is_empty() {
+        new.with_extension("cpeftd")
+    } else {
+        PathBuf::from(a.get("output"))
+    };
+    let wire = delta.to_bytes(Encoding::Golomb);
+    let full = format::to_bytes(&new_c, Encoding::Golomb);
+    std::fs::write(&out, &wire)
+        .with_context(|| format!("write delta {}", out.display()))?;
+    println!(
+        "delta {} -> {}: {} touched entries, {} vs {} full push ({:.1}x smaller)",
+        old.display(),
+        new.display(),
+        delta.nnz(),
+        human_bytes(wire.len() as u64),
+        human_bytes(full.len() as u64),
+        full.len() as f64 / (wire.len() as f64).max(1.0),
+    );
+    println!("wrote {}", out.display());
+    Ok(())
+}
+
+/// Stage the next version of a served expert: write the full
+/// `.v<n>.cpeft` (what a cold fetch serves, and the bit-identity
+/// reference) plus the `.v<n>.cpeftd` side file the coordinator's
+/// delta-apply fast path picks up when version n−1 is host-resident.
+fn cmd_delta_push(argv: &[String]) -> Result<()> {
+    let spec = ArgSpec::new(
+        "delta push",
+        "stage the next version of a served expert as full .cpeft + .cpeftd delta",
+    )
+    .required("base", "task vector .npz the expert was registered from")
+    .required("new", "task vector .npz of the next version")
+    .flag("k", "0.2", "density (fraction of entries kept)")
+    .flag("alpha", "1.0", "scaling value α")
+    .boolean("per-tensor", "compress each tensor independently");
+    let a = spec.parse(argv)?;
+    let base = PathBuf::from(a.get("base"));
+    let new = PathBuf::from(a.get("new"));
+    let cfg = CompressConfig {
+        density: a.get_f64("k")?,
+        alpha: a.get_f64("alpha")?,
+        granularity: if a.get_bool("per-tensor") {
+            Granularity::PerTensor
+        } else {
+            Granularity::Global
+        },
+    };
+    // Next version = first free .v<n>.cpeft slot next to the base npz.
+    let mut next = 1u32;
+    while base.with_extension(format!("v{next}.cpeft")).exists() {
+        next += 1;
+    }
+    // The delta's base is the previous version's *compressed* form: the
+    // staged .cpeft for n ≥ 2, the base npz compressed under the same
+    // config for n = 1. Applying it must reconstruct the full encode
+    // bit-for-bit, so verify exactly that before writing anything.
+    let prev_c = if next == 1 {
+        compress_params(&ParamSet::load_npz(&base)?, &cfg)
+    } else {
+        format::load(&base.with_extension(format!("v{}.cpeft", next - 1)))?.0
+    };
+    let new_c = compress_params(&ParamSet::load_npz(&new)?, &cfg);
+    let delta = compeft::compeft::engine::compress_delta(&prev_c, &new_c)?;
+    let check = compeft::compeft::engine::apply_delta(&prev_c, &delta)?;
+    if check != new_c {
+        bail!("delta apply does not reconstruct the next version (internal error)");
+    }
+    let full_path = base.with_extension(format!("v{next}.cpeft"));
+    let delta_path = base.with_extension(format!("v{next}.cpeftd"));
+    let full_bytes = format::save(&full_path, &new_c, Encoding::Golomb)?;
+    let wire = delta.to_bytes(Encoding::Golomb);
+    std::fs::write(&delta_path, &wire)
+        .with_context(|| format!("write delta {}", delta_path.display()))?;
+    println!(
+        "staged v{next}: {} ({}) + {} ({}, {:.1}x smaller than the full push)",
+        full_path.display(),
+        human_bytes(full_bytes),
+        delta_path.display(),
+        human_bytes(wire.len() as u64),
+        full_bytes as f64 / (wire.len() as f64).max(1.0),
+    );
+    println!(
+        "a coordinator with v{} host-resident applies the delta instead of refetching"
+        , next.saturating_sub(1)
+    );
+    Ok(())
+}
+
 fn cmd_serve(argv: &[String]) -> Result<()> {
     let spec = ArgSpec::new("serve", "run the coordinator on a synthetic trace")
         .flag("scale", "s", "model scale")
@@ -443,6 +611,9 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .flag("store-nodes", "0", "sharded store nodes (0 = flat single link)")
         .flag("replication", "1", "replicas per expert in the sharded store")
         .flag("fault-seed", "0", "seed of the store's deterministic fault plan")
+        .boolean("rebalance", "popularity-aware adaptive replication on the store")
+        .flag("rebalance-every", "8", "batches between adaptive-replication rounds")
+        .flag("drain", "", "live-drain this store node after half the trace")
         .flag("archive", "", "local .cpar archive served as zero-copy views")
         .flag("seed", "0", "trace seed");
     let a = spec.parse(argv)?;
@@ -469,6 +640,16 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     ccfg.store_nodes = a.get_usize("store-nodes")?;
     ccfg.replication = a.get_usize("replication")?;
     ccfg.fault_seed = a.get_u64("fault-seed")?;
+    ccfg.rebalance = a.get_bool("rebalance");
+    ccfg.rebalance_every = a.get_u64("rebalance-every")?;
+    let drain_node = if a.get("drain").is_empty() {
+        None
+    } else {
+        Some(a.get_usize("drain")?)
+    };
+    if (ccfg.rebalance || drain_node.is_some()) && ccfg.store_nodes == 0 {
+        bail!("--rebalance/--drain need a sharded store (--store-nodes > 0)");
+    }
     if !a.get("archive").is_empty() {
         ccfg.archive = Some(PathBuf::from(a.get("archive")));
     }
@@ -504,7 +685,21 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let t0 = Instant::now();
     let mut pending = Vec::with_capacity(n_req);
     let mut correct_labels = Vec::with_capacity(n_req);
-    for _ in 0..n_req {
+    for r in 0..n_req {
+        // Live topology churn mid-trace: drain the named node once half
+        // the requests are in flight. The engine keeps serving — old
+        // placement for in-flight fetches, new epoch after the cutover.
+        if r == n_req / 2 {
+            if let Some(node) = drain_node {
+                let m = coord.drain_store_node(node)?;
+                println!(
+                    "drained node {node} mid-trace: {} experts ({}) migrated, epoch {}",
+                    m.moved_experts,
+                    human_bytes(m.migrated_bytes),
+                    m.epoch
+                );
+            }
+        }
         let e = zipf.sample(&mut rng);
         let set = &sets[e];
         let i = rng.range(0, set.n);
@@ -581,6 +776,18 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     println!(
         "store: {} stripe retries  {} failovers  {} corrupt payloads",
         report.stripe_retries, report.failovers, report.corrupt_payloads
+    );
+    println!(
+        "rebalance: {} rounds  +{} / -{} replicas  {} migrated",
+        report.rebalances,
+        report.replicas_added,
+        report.replicas_dropped,
+        human_bytes(report.migrated_bytes)
+    );
+    println!(
+        "delta updates: {} applied  {} saved vs full pushes",
+        report.delta_applies,
+        human_bytes(report.delta_bytes_saved)
     );
     println!(
         "fused decode: {} loads  overlap hidden {:.2?}",

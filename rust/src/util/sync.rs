@@ -36,6 +36,10 @@ pub mod rank {
     pub const STAGING: u32 = 30;
     /// The shared CPU `LruTier` (pipeline/server `cpu`).
     pub const CPU_TIER: u32 = 40;
+    /// `ExpertStore.epoch` — current placement view + node links.
+    pub const STORE_EPOCH: u32 = 44;
+    /// `ExpertStore.stats` — per-expert fetch popularity counters.
+    pub const STORE_STATS: u32 = 46;
     /// `SimLink.state` — transport byte/transfer accounting.
     pub const LINK_STATE: u32 = 50;
     /// `ThreadPool.tx` — job submission channel.

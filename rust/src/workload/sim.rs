@@ -21,10 +21,12 @@
 use crate::coordinator::admission::{self, AdmissionConfig};
 use crate::coordinator::batcher::{BatchPolicy, Batcher};
 use crate::coordinator::metrics::{Metrics, RejectCounts, RejectReason};
+use crate::coordinator::store::{RebalanceConfig, Rebalancer};
 use crate::coordinator::transport::LinkSpec;
 use crate::util::stats::LogHistogram;
 use crate::workload::Trace;
 
+use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
 /// Analytic service-time model: what one batch costs on the sim clock.
@@ -45,6 +47,23 @@ pub struct ServiceModel {
     /// Upcoming non-resident experts staged per batch (0 disables the
     /// prefetch model).
     pub prefetch_depth: usize,
+    /// Sharded-store model: node count bounding replica widening.
+    /// `0` keeps the flat single-link fetch cost (the pre-store model).
+    pub store_nodes: usize,
+    /// Base replicas per expert when `store_nodes > 0`. A fetch stripes
+    /// across an expert's replicas in parallel, so its cost is
+    /// `net.duration_for(expert_bytes / replicas)` — the same shape as
+    /// the engine store's striped multi-replica transfer.
+    pub replication: usize,
+    /// Popularity-aware adaptive replication: feed per-expert fetch
+    /// counts into a real [`Rebalancer`] every
+    /// [`ServiceModel::rebalance_every`] batches, so hot experts widen
+    /// (and fetch faster) while cold ones narrow back to base.
+    pub rebalance: bool,
+    /// Batches between rebalance rounds (ignored unless `rebalance`).
+    pub rebalance_every: u64,
+    /// Controller tuning shared with the engine store's rebalancer.
+    pub rebalance_cfg: RebalanceConfig,
 }
 
 impl Default for ServiceModel {
@@ -57,18 +76,43 @@ impl Default for ServiceModel {
             exec_us: 2_000,
             gpu_slots: 4,
             prefetch_depth: 2,
+            store_nodes: 0,
+            replication: 1,
+            rebalance: false,
+            rebalance_every: 8,
+            rebalance_cfg: RebalanceConfig::default(),
         }
     }
 }
 
 impl ServiceModel {
-    /// Swap cost, µs, given whether the expert was staged by prefetch.
-    fn swap_us(&self, staged: bool) -> u64 {
+    /// Swap cost, µs, given whether the expert was staged by prefetch
+    /// and how many store replicas its fetch stripes across.
+    fn swap_us(&self, staged: bool, replicas: usize) -> u64 {
         let upload = self.pcie.duration_for(self.upload_bytes).as_micros() as u64;
         if staged {
-            upload
+            return upload;
+        }
+        let fetch_bytes = if self.store_nodes > 0 {
+            // Striped fetch: each of `replicas` node links carries an
+            // equal share in parallel (ceil so a lone replica pays the
+            // full transfer).
+            self.expert_bytes.div_ceil(replicas.max(1) as u64)
         } else {
-            self.net.duration_for(self.expert_bytes).as_micros() as u64 + upload
+            self.expert_bytes
+        };
+        self.net.duration_for(fetch_bytes).as_micros() as u64 + upload
+    }
+
+    /// Replicas a fetch of `expert` stripes across right now.
+    fn replicas_for(&self, rb: Option<&Rebalancer>, expert: &str) -> usize {
+        if self.store_nodes == 0 {
+            return 1;
+        }
+        let base = self.replication.max(1).min(self.store_nodes);
+        match rb {
+            Some(rb) => rb.replicas_of(expert, base).min(self.store_nodes),
+            None => base,
         }
     }
 }
@@ -140,6 +184,14 @@ pub struct SimReport {
     pub prefetch_hits: u64,
     /// High-water mark of the batcher queue.
     pub max_queued: usize,
+    /// Adaptive-replication rounds executed (0 with rebalance off).
+    pub rebalances: u64,
+    /// Replicas widened across all rebalance rounds.
+    pub replicas_added: u64,
+    /// Replicas narrowed across all rebalance rounds.
+    pub replicas_dropped: u64,
+    /// Bytes the widening rounds migrated (≤ budget × rounds).
+    pub migrated_bytes: u64,
     pub outcomes: Vec<Outcome>,
 }
 
@@ -202,6 +254,18 @@ pub fn run(trace: &Trace, cfg: &SimConfig) -> SimReport {
     let mut max_queued = 0usize;
     let mut latency = LogHistogram::new();
     let (mut accepted, mut completed, mut deadline_met) = (0u64, 0u64, 0u64);
+    // Adaptive replication: the production Rebalancer, fed per-round
+    // fetch counts at batch-counter boundaries — the same pure state
+    // machine the engine store drives, so sim rebalance schedules are
+    // bit-identical at any worker count.
+    let mut rebalancer = if cfg.model.rebalance && cfg.model.store_nodes > 0 {
+        Some(Rebalancer::new(cfg.model.rebalance_cfg))
+    } else {
+        None
+    };
+    let mut round_counts: BTreeMap<String, (u64, u64)> = BTreeMap::new();
+    let (mut rebalances, mut replicas_added, mut replicas_dropped) = (0u64, 0u64, 0u64);
+    let mut migrated_bytes = 0u64;
 
     loop {
         // Admit every due arrival. Open loop: events whose timestamp has
@@ -250,7 +314,14 @@ pub fn run(trace: &Trace, cfg: &SimConfig) -> SimReport {
                 if was_staged {
                     prefetch_hits += 1;
                 }
-                service_us += cfg.model.swap_us(was_staged);
+                let replicas = cfg.model.replicas_for(rebalancer.as_ref(), &expert);
+                service_us += cfg.model.swap_us(was_staged, replicas);
+                // Popularity feed: every fetch (staged ones included —
+                // their store transfer still happened, just off the
+                // critical path) counts toward the next round.
+                let c = round_counts.entry(expert.clone()).or_insert((0, 0));
+                c.0 += 1;
+                c.1 = cfg.model.expert_bytes;
                 resident.push(expert.clone());
                 if resident.len() > cfg.model.gpu_slots.max(1) {
                     resident.remove(0);
@@ -259,6 +330,17 @@ pub fn run(trace: &Trace, cfg: &SimConfig) -> SimReport {
             };
             batches += 1;
             metrics.record_batch(batch.len(), swapped);
+            if let Some(rb) = rebalancer.as_mut() {
+                if batches % cfg.model.rebalance_every.max(1) == 0 {
+                    let base = cfg.model.replication.max(1).min(cfg.model.store_nodes);
+                    let d = rb.round(&round_counts, base, cfg.model.store_nodes);
+                    round_counts.clear();
+                    rebalances += 1;
+                    replicas_added += d.added.len() as u64;
+                    replicas_dropped += d.dropped.len() as u64;
+                    migrated_bytes += d.migrated_bytes;
+                }
+            }
             now_us += service_us;
             for p in &batch {
                 let e = &events[p.payload];
@@ -317,6 +399,10 @@ pub fn run(trace: &Trace, cfg: &SimConfig) -> SimReport {
         fetches,
         prefetch_hits,
         max_queued,
+        rebalances,
+        replicas_added,
+        replicas_dropped,
+        migrated_bytes,
         outcomes: outcomes
             .into_iter()
             .map(|o| o.expect("every event is shed or completed"))
@@ -408,6 +494,51 @@ mod tests {
             "shedding goodput {:.1} rps must beat no-shedding {:.1} rps",
             on.goodput_rps(),
             off.goodput_rps()
+        );
+    }
+
+    /// Adaptive replication: the rebalancer widens the Zipf head, every
+    /// widened fetch stripes across more nodes, and the tail of the
+    /// latency distribution never gets worse than the fixed-replication
+    /// baseline — while the whole schedule stays bit-identical across
+    /// reruns.
+    #[test]
+    fn adaptive_replication_widens_hot_experts_and_never_hurts_tail() {
+        let trace = Trace::generate(&TraceSpec::steady_zipf(2_000_000, 32, 2, 600.0), 9);
+        // Two residency slots, no prefetch: the Zipf head churns through
+        // the LRU and refetches constantly, so fetch time dominates and
+        // popularity-aware widening has something to optimize.
+        let base = ServiceModel {
+            gpu_slots: 2,
+            prefetch_depth: 0,
+            store_nodes: 4,
+            replication: 1,
+            ..Default::default()
+        };
+        let fixed = run(&trace, &SimConfig { model: base, ..Default::default() });
+        let model = ServiceModel { rebalance: true, ..base };
+        let a = run(&trace, &SimConfig { model, ..Default::default() });
+        let b = run(&trace, &SimConfig { model, ..Default::default() });
+        assert_eq!(a.outcomes, b.outcomes, "adaptive schedule must be deterministic");
+        assert_eq!(
+            (a.rebalances, a.replicas_added, a.replicas_dropped, a.migrated_bytes),
+            (b.rebalances, b.replicas_added, b.replicas_dropped, b.migrated_bytes)
+        );
+        assert!(a.rebalances > 0, "rounds must have run");
+        assert!(a.replicas_added > 0, "the Zipf head must widen");
+        assert!(
+            a.p99_us() <= fixed.p99_us(),
+            "adaptive p99 {:.0}us must not exceed fixed-replication p99 {:.0}us",
+            a.p99_us(),
+            fixed.p99_us()
+        );
+        // Per-round migration is bounded by the configured budget.
+        assert!(a.migrated_bytes <= a.rebalances * model.rebalance_cfg.byte_budget);
+        // With rebalance off the new counters stay zero and the fixed
+        // baseline itself replays bit-identically.
+        assert_eq!(
+            (fixed.rebalances, fixed.replicas_added, fixed.migrated_bytes),
+            (0, 0, 0)
         );
     }
 

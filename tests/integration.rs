@@ -1657,3 +1657,253 @@ fn loadgen_flash_crowd_early_sheds_consume_no_fetch_or_service() {
         );
     }
 }
+
+/// The chaos/soak layer for adaptive replication + live topology churn
+/// + ternary delta updates (ROADMAP item 4's acceptance bar,
+/// artifact-free): a flash-crowd trace is served through a store-backed
+/// `PrepareContext` while the topology churns mid-trace — one node
+/// drained at the one-third mark, a fresh node added at two-thirds —
+/// a seeded fault plan drops every stripe's first attempt, a
+/// popularity-driven rebalance round runs every 8 events, and the viral
+/// expert takes two staged version pushes applied as ternary `.cpeftd`
+/// deltas against its host-resident predecessor.
+///
+/// Every served expert must be **bit-identical** to a churn-free flat
+/// single-store reference of the same pinned version, at every pool
+/// size and on every rerun; the fault/rebalance/delta counters must
+/// replay exactly; and the churn leg must actually have exercised the
+/// machinery (`failovers`, `rebalances`, `replicas_added`,
+/// `delta_applies` all > 0).
+#[test]
+fn synthetic_churn_soak_bit_identical() -> anyhow::Result<()> {
+    use compeft::compeft::engine::compress_delta;
+    use compeft::coordinator::cache::LruTier;
+    use compeft::coordinator::loader::ExpertLoader;
+    use compeft::coordinator::metrics::Metrics;
+    use compeft::coordinator::store::{
+        ExpertStore, RebalanceConfig, Rebalancer, StoreConfig,
+    };
+    use compeft::coordinator::transport::{FaultPlan, FaultSpec};
+    use compeft::coordinator::{PrepareContext, PreparedExpert, SimLink};
+    use compeft::util::sync::{rank, OrderedMutex};
+    use std::collections::BTreeMap;
+    use std::sync::Arc;
+
+    let dir = fresh_dir("churn_soak");
+    let cfg = CompressConfig { density: 0.15, alpha: 1.0, granularity: Granularity::Global };
+    let n_experts = 8u32;
+
+    // Fixture: 8 experts on disk; e0 is the viral one and gets two more
+    // training rounds (v1, v2) — saved as npz next to the base.
+    let mut npz_paths = Vec::new();
+    let mut template_like = None;
+    for i in 0..n_experts as u64 {
+        let tv = synthetic_tv(200 + i, 6_000);
+        let npz = dir.join(format!("e{i}.lora.npz"));
+        tv.save_npz(&npz)?;
+        template_like.get_or_insert(tv);
+        npz_paths.push(npz);
+    }
+    let perturb = |tv: &ParamSet, salt: usize| -> ParamSet {
+        let mut out = tv.clone();
+        for (_, t) in out.iter_mut() {
+            let len = t.data.len();
+            for k in 0..len / 50 + 1 {
+                let i = (k * 97 + salt) % len;
+                t.data[i] = -t.data[i] * 1.5 + 1e-4;
+            }
+            for k in 0..len / 100 + 1 {
+                let i = (k * 131 + 7 + salt) % len;
+                t.data[i] = 0.0;
+            }
+        }
+        out
+    };
+    let tv0 = ParamSet::load_npz(&npz_paths[0])?;
+    let tv1 = perturb(&tv0, 3);
+    let tv2 = perturb(&tv1, 11);
+    let npz_v1 = dir.join("e0.lora.next1.npz");
+    let npz_v2 = dir.join("e0.lora.next2.npz");
+    tv1.save_npz(&npz_v1)?;
+    tv2.save_npz(&npz_v2)?;
+
+    // Fresh registry per leg: version-pin state (`current`) lives in the
+    // registry, and each leg must start from "base version admitted".
+    // Registration rewrites the same deterministic .cpeft bytes.
+    let mk_reg = || -> anyhow::Result<Arc<Registry>> {
+        let mut reg = Registry::new();
+        for (i, npz) in npz_paths.iter().enumerate() {
+            reg.register_compeft(&format!("e{i}"), "t", "s", ExpertMethod::Lora, npz, &cfg)?;
+        }
+        assert_eq!(reg.register_compeft_version("e0", &npz_v1, &cfg)?, 1);
+        assert_eq!(reg.register_compeft_version("e0", &npz_v2, &cfg)?, 2);
+        Ok(Arc::new(reg))
+    };
+    let reg0 = mk_reg()?;
+
+    // Stage the `.cpeftd` side files the delta-apply fast path picks up:
+    // v(n+1) as a ternary diff against v(n)'s compressed form.
+    let (c0, c1, c2) = (
+        compress_params(&tv0, &cfg),
+        compress_params(&tv1, &cfg),
+        compress_params(&tv2, &cfg),
+    );
+    for (old_c, new_c, npz, v) in [(&c0, &c1, &npz_v1, 1u32), (&c1, &c2, &npz_v2, 2)] {
+        let delta = compress_delta(old_c, new_c)?;
+        // Next to the versioned `.cpeft` the registration wrote — the
+        // pipeline looks the delta up at `rec.path.with_extension(..)`.
+        let path = npz.with_extension(format!("v{v}.cpeftd"));
+        std::fs::write(&path, delta.to_bytes(Encoding::Golomb))?;
+    }
+
+    let templates = bs::zero_templates(&template_like.unwrap());
+
+    // Churn-free flat reference, one fresh context per key so every
+    // reference expert travels the plain full-fetch path (in particular
+    // the versioned keys must NOT take the delta shortcut here — the
+    // soak then proves delta-apply reconstructs these exact bytes).
+    let keys: Vec<String> = (0..n_experts)
+        .map(|i| format!("e{i}"))
+        .chain(["e0@v1".to_string(), "e0@v2".to_string()])
+        .collect();
+    let mut reference: BTreeMap<String, PreparedExpert> = BTreeMap::new();
+    for key in &keys {
+        let flat = PrepareContext {
+            loader: ExpertLoader::new(
+                SimLink::new("net", LinkSpec::internet()).with_time_scale(0.0),
+                SimLink::new("pcie", LinkSpec::pcie()).with_time_scale(0.0),
+            )
+            .with_pool(Arc::new(ThreadPool::new(2))),
+            registry: Arc::clone(&reg0),
+            templates: templates.clone(),
+            cpu: Arc::new(OrderedMutex::new(
+                rank::CPU_TIER,
+                "cache.cpu_tier",
+                LruTier::new("cpu", 64 << 20),
+            )),
+            archive: None,
+        };
+        reference.insert(key.clone(), flat.prepare(key)?);
+    }
+
+    // The soak trace: steady Zipf with a flash crowd on e0 in the middle
+    // third — the viral expert the delta pushes target.
+    let trace = Trace::generate(&TraceSpec::flash_crowd(1_000_000, n_experts, 2, 150.0, 6.0), 77);
+    let n = trace.events.len();
+    assert!(n > 100, "soak trace too short ({n} events)");
+    let (at_drain, at_add) = (n / 3, 2 * n / 3);
+    let (at_v1, at_v2) = (n * 45 / 100, n * 70 / 100);
+
+    let mut counter_ref: Option<(u64, u64, u64, u64, u64, u64, u64, u64)> = None;
+    for workers in prop::pool_sizes() {
+        for round in 0..2 {
+            let leg = format!("w={workers} round={round}");
+            let reg = mk_reg()?;
+            let pool = Arc::new(ThreadPool::new(workers));
+            let metrics = Arc::new(Metrics::new());
+            let mut scfg = StoreConfig::new(3, 2);
+            scfg.time_scale = 0.0;
+            scfg.stripe_bytes = 200; // several stripes per expert
+            // Every stripe's first attempt is dropped: all traffic
+            // failovers once, nothing is lost.
+            scfg.faults = FaultPlan::new(
+                42,
+                FaultSpec { drop_p: 1.0, first_attempt_only: true, ..Default::default() },
+            );
+            let store = Arc::new(ExpertStore::new(
+                scfg,
+                Some(Arc::clone(&pool)),
+                Arc::clone(&metrics),
+            ));
+            let ctx = PrepareContext {
+                loader: ExpertLoader::new(
+                    SimLink::new("net", LinkSpec::internet()).with_time_scale(0.0),
+                    SimLink::new("pcie", LinkSpec::pcie()).with_time_scale(0.0),
+                )
+                .with_pool(Arc::clone(&pool))
+                .with_store(Arc::clone(&store)),
+                registry: Arc::clone(&reg),
+                templates: templates.clone(),
+                cpu: Arc::new(OrderedMutex::new(
+                    rank::CPU_TIER,
+                    "cache.cpu_tier",
+                    LruTier::new("cpu", 64 << 20),
+                )),
+                archive: None,
+            };
+            // Aggressive widening so the 1-fetch-per-expert popularity
+            // profile (everything stays host-resident) still exercises
+            // real replica adds under the byte budget.
+            let mut rb = Rebalancer::new(RebalanceConfig {
+                hot_factor: 0.1,
+                slack: 4,
+                ..RebalanceConfig::default()
+            });
+            let check = |got: &PreparedExpert, key: &str, what: &str| {
+                let want = reference.get(key).expect("reference key");
+                prop::assert_paramset_bit_identical(
+                    &got.params,
+                    &want.params,
+                    &format!("{leg} {what} key={key}"),
+                );
+                assert_eq!(got.upload_bytes, want.upload_bytes, "{leg} {what} {key}");
+                assert_eq!(got.dense_bytes, want.dense_bytes, "{leg} {what} {key}");
+            };
+
+            for (k, ev) in trace.events.iter().enumerate() {
+                if k == at_drain {
+                    let m = store.drain_node(1)?;
+                    assert!(m.moved_experts > 0, "{leg}: drain must migrate replicas");
+                }
+                if k == at_add {
+                    let m = store.add_node();
+                    assert!(m.epoch > 0, "{leg}: add must publish an epoch");
+                }
+                if k == at_v1 || k == at_v2 {
+                    // Version push: make sure the predecessor is
+                    // host-resident, flip admission, and serve the new
+                    // pin — the first serve goes through the ternary
+                    // delta-apply path, bit-identical to a full fetch.
+                    let before = ctx.prepare(&reg.pin("e0"))?;
+                    check(&before, &reg.pin("e0"), "pre-activate");
+                    let v = reg.activate_next("e0").expect("staged version");
+                    assert_eq!(v, if k == at_v1 { 1 } else { 2 }, "{leg}");
+                    let after = ctx.prepare(&reg.pin("e0"))?;
+                    check(&after, &reg.pin("e0"), "post-activate");
+                }
+                if k % 8 == 7 {
+                    store.rebalance(&mut rb);
+                }
+                let key = reg.pin(&format!("e{}", ev.expert));
+                let got = ctx.prepare(&key)?;
+                check(&got, &key, "serve");
+            }
+
+            let s = metrics.snapshot();
+            assert!(s.failovers > 0, "{leg}: the fault plan must have fired");
+            assert!(s.rebalances > 0, "{leg}: rebalance rounds must have run");
+            assert!(s.replicas_added > 0, "{leg}: the hot tail must widen");
+            assert_eq!(s.delta_applies, 2, "{leg}: both version pushes apply as deltas");
+            assert!(s.delta_bytes_saved > 0, "{leg}: deltas must beat full pushes");
+            assert!(s.migrated_bytes > 0, "{leg}: drain/add/widen must move bytes");
+            let counters = (
+                s.failovers,
+                s.stripe_retries,
+                s.rebalances,
+                s.replicas_added,
+                s.replicas_dropped,
+                s.migrated_bytes,
+                s.delta_applies,
+                s.delta_bytes_saved,
+            );
+            match &counter_ref {
+                None => counter_ref = Some(counters),
+                Some(r) => {
+                    assert_eq!(counters, *r, "{leg}: churn counters drifted");
+                }
+            }
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+    Ok(())
+}
